@@ -1,0 +1,167 @@
+//! END-TO-END driver: proves all three layers compose on the paper's real
+//! workloads.
+//!
+//!   L1/L2  JAX + Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
+//!          (`make artifacts`; python never runs here)
+//!   Runtime PJRT CPU client loads + compiles the HLO text
+//!   L3     rust master–worker runtime schedules DLS chunks over OS-thread
+//!          workers that execute *real* chunks through PJRT, with fail-stop
+//!          failures and latency perturbations injected as in §4.1
+//!
+//! Runs both applications (Mandelbrot N=262,144 and PSIA N=20,000 — the
+//! paper's task counts) through baseline / failures / perturbation
+//! scenarios, checks result integrity across scenarios, and prints the
+//! table recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdlb::apps::PsiaApp;
+use rdlb::dls::Technique;
+use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+use rdlb::runtime::{ComputeService, PjrtEngine};
+use rdlb::util::cli::Args;
+
+struct Row {
+    app: &'static str,
+    scenario: String,
+    t_par: f64,
+    throughput: f64,
+    rescheduled: u64,
+    duplicates: u64,
+    digest: f64,
+}
+
+fn run_scenarios(
+    app: &'static str,
+    n: usize,
+    workers: usize,
+    backend: ComputeBackend,
+    rows: &mut Vec<Row>,
+) -> anyhow::Result<()> {
+    let scenarios: Vec<(String, Box<dyn Fn(&mut NativeParams)>)> = vec![
+        ("baseline".into(), Box::new(|_p: &mut NativeParams| {})),
+        (
+            format!("{} failures", workers / 2),
+            Box::new(move |p: &mut NativeParams| {
+                *p = p.clone().with_failures(workers / 2, 1.0);
+            }),
+        ),
+        (
+            format!("{} failures (P-1)", workers - 1),
+            Box::new(move |p: &mut NativeParams| {
+                *p = p.clone().with_failures(workers - 1, 1.5);
+            }),
+        ),
+        (
+            "latency perturbation".into(),
+            Box::new(move |p: &mut NativeParams| {
+                // Straggler workers: +150 ms per message on the last quarter.
+                for w in (workers * 3 / 4)..workers {
+                    p.latency[w] = 0.15;
+                }
+            }),
+        ),
+    ];
+
+    for (label, tweak) in scenarios {
+        let mut params = NativeParams::new(n, workers, Technique::Fac, true, backend.clone());
+        params.timeout = Duration::from_secs(600);
+        tweak(&mut params);
+        let outcome = NativeRuntime::new(params)?.run()?;
+        anyhow::ensure!(outcome.completed(), "{app}/{label} did not complete: {outcome:?}");
+        rows.push(Row {
+            app,
+            scenario: label,
+            t_par: outcome.parallel_time,
+            throughput: n as f64 / outcome.parallel_time,
+            rescheduled: outcome.stats.rescheduled_chunks,
+            duplicates: outcome.stats.duplicate_iterations,
+            digest: outcome.result_digest,
+        });
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let workers = args.usize_or("workers", 8)?;
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // Show what we loaded (and that the L1/L2 params round-trip).
+    let engine = PjrtEngine::load(&artifacts)?;
+    let mandel = engine.mandelbrot_app();
+    let n_mandel = mandel.n_tasks();
+    println!(
+        "loaded artifacts: platform={}, mandelbrot {}x{} (max_iter {}), psia cloud {} pts {}x{} bins",
+        engine.platform(),
+        mandel.width,
+        mandel.height,
+        mandel.max_iter,
+        engine.manifest().psia.params.n_points,
+        engine.manifest().psia.params.img_size,
+        engine.manifest().psia.params.img_size,
+    );
+    drop(engine);
+
+    // One compute service hosts the (!Send) PJRT executables; the L3
+    // workers are OS threads talking to it.
+    let service = ComputeService::spawn(artifacts)?;
+    let mut rows = Vec::new();
+
+    println!("\n[1/2] Mandelbrot, N={n_mandel} (the paper's 262,144), P={workers}, FAC + rDLB, PJRT backend");
+    run_scenarios(
+        "Mandelbrot",
+        n_mandel,
+        workers,
+        ComputeBackend::PjrtMandelbrot(service.handle()),
+        &mut rows,
+    )?;
+
+    let n_psia = args.usize_or("psia-tasks", 20_000)?;
+    println!("[2/2] PSIA, N={n_psia} (the paper's 20,000), P={workers}, FAC + rDLB, PJRT backend");
+    run_scenarios(
+        "PSIA",
+        n_psia,
+        workers,
+        ComputeBackend::PjrtPsia(service.handle()),
+        &mut rows,
+    )?;
+
+    println!("\n=== end-to-end results (native runtime over PJRT artifacts) ===");
+    println!(
+        "{:<11} {:<22} {:>9} {:>14} {:>8} {:>8} {:>16}",
+        "app", "scenario", "T_par", "tasks/s", "resched", "dups", "result digest"
+    );
+    for r in &rows {
+        println!(
+            "{:<11} {:<22} {:>8.2}s {:>14.0} {:>8} {:>8} {:>16.1}",
+            r.app, r.scenario, r.t_par, r.throughput, r.rescheduled, r.duplicates, r.digest
+        );
+    }
+
+    // Integrity: the digest over first completions must be identical across
+    // scenarios of the same app — failures/perturbations may reorder and
+    // duplicate work but can never change the results.
+    for app in ["Mandelbrot", "PSIA"] {
+        let digests: Vec<f64> =
+            rows.iter().filter(|r| r.app == app).map(|r| r.digest).collect();
+        for d in &digests[1..] {
+            anyhow::ensure!(
+                (d - digests[0]).abs() <= 1e-6 * digests[0].abs().max(1.0),
+                "{app}: result digest diverged across scenarios: {digests:?}"
+            );
+        }
+        println!("{app}: result digest identical across all scenarios ✓");
+    }
+    println!("\nall layers compose: JAX/Pallas AOT → PJRT → rust rDLB coordinator ✓");
+    Ok(())
+}

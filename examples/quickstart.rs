@@ -1,0 +1,55 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds one experiment configuration, runs it on the simulated cluster in
+//! three variants (healthy, failing without rDLB, failing with rDLB), and
+//! prints what the paper's Figure 1 shows: the failure hangs a plain DLS
+//! execution and rDLB absorbs it.
+
+use rdlb::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's Mandelbrot setup: N = 262,144 pixels over 256 PEs
+    // (16 nodes × 16 ranks), scheduled with practical factoring (FAC).
+    let baseline = ExperimentConfig::builder()
+        .app(AppKind::Mandelbrot)
+        .pes(256)
+        .technique(Technique::Fac)
+        .rdlb(false)
+        .build()?;
+
+    let healthy = SimCluster::from_config(&baseline)?.run()?;
+    println!("healthy, no rDLB     : T_par = {:.3}s", healthy.parallel_time);
+
+    // Kill half the PEs mid-run. Plain self-scheduling waits forever for
+    // the lost chunks (Fig. 1b)...
+    let mut failing = baseline.clone();
+    failing.scenario = Scenario::failures(128);
+    let hung = SimCluster::from_config(&failing)?.run()?;
+    assert!(hung.hung);
+    println!(
+        "128 failures, no rDLB: HUNG after {}/{} iterations (paper: 'waits indefinitely')",
+        hung.finished, hung.n
+    );
+
+    // ...while rDLB re-dispatches Scheduled-but-unfinished iterations to
+    // surviving PEs and completes (Fig. 1c).
+    failing.rdlb = true;
+    let survived = SimCluster::from_config(&failing)?.run()?;
+    assert!(survived.completed());
+    println!(
+        "128 failures, rDLB   : T_par = {:.3}s ({} chunks re-dispatched, {:.1}% duplicate work)",
+        survived.parallel_time,
+        survived.stats.rescheduled_chunks,
+        survived.waste_fraction() * 100.0
+    );
+
+    println!(
+        "\nslowdown vs healthy: {:.2}x — the cost of tolerating P/2 fail-stop failures",
+        survived.parallel_time / healthy.parallel_time
+    );
+    Ok(())
+}

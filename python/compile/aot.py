@@ -1,0 +1,110 @@
+"""AOT: lower the L2 chunk graphs to HLO *text* + a JSON manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  mandelbrot.hlo.txt   int32[CHUNK] -> (int32[CHUNK],)
+  psia.hlo.txt         f32[NPTS,3], f32[NPTS,3], int32[K] -> (f32[K,I,J],)
+  manifest.json        every baked parameter the rust side needs
+
+Run once via ``make artifacts``; never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.mandelbrot import MandelbrotParams
+from .kernels.spin_image import SpinImageParams
+from .model import MANDELBROT_CHUNK, mandelbrot_chunk, psia_chunk
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_mandelbrot(params: MandelbrotParams, chunk: int) -> str:
+    spec = jax.ShapeDtypeStruct((chunk,), jnp.int32)
+    fn = functools.partial(mandelbrot_chunk, params=params)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_psia(params: SpinImageParams) -> str:
+    pts = jax.ShapeDtypeStruct((params.n_points, 3), jnp.float32)
+    ids = jax.ShapeDtypeStruct((params.chunk,), jnp.int32)
+    fn = functools.partial(psia_chunk, params=params)
+    return to_hlo_text(jax.jit(fn).lower(pts, pts, ids))
+
+
+def build(out_dir: pathlib.Path,
+          mandelbrot: MandelbrotParams = MandelbrotParams(),
+          psia: SpinImageParams = SpinImageParams(),
+          chunk: int = MANDELBROT_CHUNK) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    mandel_hlo = lower_mandelbrot(mandelbrot, chunk)
+    (out_dir / "mandelbrot.hlo.txt").write_text(mandel_hlo)
+
+    psia_hlo = lower_psia(psia)
+    (out_dir / "psia.hlo.txt").write_text(psia_hlo)
+
+    manifest = {
+        "schema": 1,
+        "mandelbrot": {
+            "hlo": "mandelbrot.hlo.txt",
+            "chunk": chunk,
+            "inputs": [{"name": "indices", "dtype": "s32", "shape": [chunk]}],
+            "outputs": [{"name": "counts", "dtype": "s32", "shape": [chunk]}],
+            "params": dataclasses.asdict(mandelbrot),
+        },
+        "psia": {
+            "hlo": "psia.hlo.txt",
+            "chunk": psia.chunk,
+            "inputs": [
+                {"name": "points", "dtype": "f32", "shape": [psia.n_points, 3]},
+                {"name": "normals", "dtype": "f32", "shape": [psia.n_points, 3]},
+                {"name": "task_ids", "dtype": "s32", "shape": [psia.chunk]},
+            ],
+            "outputs": [
+                {"name": "images", "dtype": "f32",
+                 "shape": [psia.chunk, psia.img_size, psia.img_size]},
+            ],
+            "params": dataclasses.asdict(psia),
+        },
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", type=pathlib.Path, default=pathlib.Path("../artifacts"))
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="compat: path to mandelbrot HLO; artifacts land in its directory")
+    args = ap.parse_args()
+    out_dir = args.out.parent if args.out else args.out_dir
+    manifest = build(out_dir)
+    for app in ("mandelbrot", "psia"):
+        path = out_dir / manifest[app]["hlo"]
+        print(f"wrote {path} ({path.stat().st_size} bytes)")
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: Mandelbrot escape-time over a tile of flat pixel indices.
+
+The paper (rDLB, Mohammed/Cavelan/Ciorba 2019) uses the Mandelbrot set as its
+high-variability workload: one loop iteration == one pixel, N = 262,144
+(512x512).  This kernel computes escape counts for a TILE of pixels at a time.
+
+TPU adaptation notes (DESIGN.md S4):
+  * Fixed-trip ``fori_loop`` with a per-lane ``alive`` mask instead of an
+    early-exit loop -- divergence-free, fully VPU-vectorizable (the TPU
+    analogue of avoiding warp divergence on GPUs).
+  * BlockSpec tiles the flat index vector HBM->VMEM; all iteration state
+    (z_re, z_im, count, alive) lives in VMEM registers.
+  * Negative indices are padding (rust pads partial chunks with -1) and yield
+    count 0 so the rust side can slice them off cheaply.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO that XLA-CPU compiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default lane tile.  8x128 = one float32 VPU register tile on TPU.
+TILE = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class MandelbrotParams:
+    """Static region/iteration parameters baked into the AOT artifact.
+
+    The rust coordinator reads these back from ``artifacts/manifest.json`` so
+    its native compute path evaluates the *same* region.
+    """
+
+    width: int = 512
+    height: int = 512
+    x_min: float = -2.0
+    x_max: float = 0.6
+    y_min: float = -1.3
+    y_max: float = 1.3
+    max_iter: int = 500
+
+    @property
+    def n_tasks(self) -> int:
+        return self.width * self.height
+
+    @property
+    def dx(self) -> float:
+        return (self.x_max - self.x_min) / self.width
+
+    @property
+    def dy(self) -> float:
+        return (self.y_max - self.y_min) / self.height
+
+
+def _mandelbrot_kernel(idx_ref, out_ref, *, params: MandelbrotParams):
+    """Escape-time iteration for one VMEM tile of flat pixel indices."""
+    idx = idx_ref[...]
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+
+    # Pixel centre in the complex plane (f32 throughout; the rust native
+    # path mirrors this op order exactly).
+    px = (safe % params.width).astype(jnp.float32)
+    py = (safe // params.width).astype(jnp.float32)
+    c_re = jnp.float32(params.x_min) + (px + jnp.float32(0.5)) * jnp.float32(params.dx)
+    c_im = jnp.float32(params.y_min) + (py + jnp.float32(0.5)) * jnp.float32(params.dy)
+
+    def body(_, state):
+        z_re, z_im, count, alive = state
+        # z <- z^2 + c, applied only to still-alive lanes.
+        nz_re = z_re * z_re - z_im * z_im + c_re
+        nz_im = jnp.float32(2.0) * z_re * z_im + c_im
+        z_re = jnp.where(alive, nz_re, z_re)
+        z_im = jnp.where(alive, nz_im, z_im)
+        mag2 = z_re * z_re + z_im * z_im
+        alive = jnp.logical_and(alive, mag2 <= jnp.float32(4.0))
+        count = count + alive.astype(jnp.int32)
+        return z_re, z_im, count, alive
+
+    zeros = jnp.zeros(idx.shape, jnp.float32)
+    init = (zeros, zeros, jnp.zeros(idx.shape, jnp.int32), valid)
+    _, _, count, _ = jax.lax.fori_loop(0, params.max_iter, body, init)
+    out_ref[...] = jnp.where(valid, count, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "tile"))
+def mandelbrot_counts(indices: jax.Array, *, params: MandelbrotParams,
+                      tile: int | None = None) -> jax.Array:
+    """Escape counts for a chunk of flat pixel indices.
+
+    ``indices`` is int32 ``[chunk]`` with ``chunk % tile == 0`` (rust pads the
+    tail of a DLS chunk with -1).  Returns int32 ``[chunk]``; a pixel that
+    never escapes within ``max_iter`` reports ``max_iter``.
+    """
+    (chunk,) = indices.shape
+    if tile is None:
+        tile = min(TILE, chunk)
+    if chunk % tile != 0:
+        raise ValueError(f"chunk {chunk} not a multiple of tile {tile}")
+    grid = chunk // tile
+    return pl.pallas_call(
+        functools.partial(_mandelbrot_kernel, params=params),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((chunk,), jnp.int32),
+        interpret=True,
+    )(indices)

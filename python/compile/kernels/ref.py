@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Deliberately written with *different* formulations from the kernels:
+  * Mandelbrot: per-step scan accumulating the alive mask (vs the kernel's
+    fori_loop over packed state).
+  * Spin image: sequential scatter with ``.at[i, j].add`` over a lax.scan
+    (vs the kernel's one-hot matmul factorization).
+
+pytest asserts allclose between kernel and oracle -- this is the CORE
+correctness signal for L1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .mandelbrot import MandelbrotParams
+from .spin_image import SpinImageParams
+
+
+def mandelbrot_ref(indices: jax.Array, params: MandelbrotParams) -> jax.Array:
+    """Escape counts via a scan that sums the alive mask per step."""
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    px = (safe % params.width).astype(jnp.float32)
+    py = (safe // params.width).astype(jnp.float32)
+    c_re = jnp.float32(params.x_min) + (px + jnp.float32(0.5)) * jnp.float32(params.dx)
+    c_im = jnp.float32(params.y_min) + (py + jnp.float32(0.5)) * jnp.float32(params.dy)
+
+    def step(carry, _):
+        z_re, z_im, alive = carry
+        n_re = jnp.where(alive, z_re * z_re - z_im * z_im + c_re, z_re)
+        n_im = jnp.where(alive, 2.0 * z_re * z_im + c_im, z_im)
+        alive_next = alive & (n_re * n_re + n_im * n_im <= 4.0)
+        return (n_re, n_im, alive_next), alive_next
+
+    init = (jnp.zeros_like(c_re), jnp.zeros_like(c_im), valid)
+    _, alive_steps = jax.lax.scan(step, init, None, length=params.max_iter)
+    counts = jnp.sum(alive_steps.astype(jnp.int32), axis=0)
+    return jnp.where(valid, counts, 0)
+
+
+def spin_image_ref_single(points: jax.Array, normals: jax.Array, oid: jax.Array,
+                          params: SpinImageParams) -> jax.Array:
+    """One descriptor via a sequential bilinear scatter (lax.scan)."""
+    size = params.img_size
+    valid = oid >= 0
+    safe = jnp.where(valid, oid, 0)
+    p = points[safe]
+    n = normals[safe]
+
+    def body(img, x):
+        d = x - p
+        beta = jnp.dot(d, n)
+        alpha = jnp.sqrt(jnp.maximum(jnp.dot(d, d) - beta * beta, 0.0))
+        i_f = (params.half_extent - beta) / params.bin_size
+        j_f = alpha / params.bin_size
+        i0 = jnp.floor(i_f).astype(jnp.int32)
+        j0 = jnp.floor(j_f).astype(jnp.int32)
+        u = i_f - jnp.floor(i_f)
+        v = j_f - jnp.floor(j_f)
+        for di, wu in ((0, 1.0 - u), (1, u)):
+            for dj, wv in ((0, 1.0 - v), (1, v)):
+                ii = i0 + di
+                jj = j0 + dj
+                ok = (ii >= 0) & (ii < size) & (jj >= 0) & (jj < size)
+                w = jnp.where(ok, wu * wv, 0.0)
+                img = img.at[jnp.clip(ii, 0, size - 1), jnp.clip(jj, 0, size - 1)].add(w)
+        return img, None
+
+    img0 = jnp.zeros((size, size), jnp.float32)
+    img, _ = jax.lax.scan(body, img0, points)
+    return img * valid.astype(jnp.float32)
+
+
+def spin_images_ref(points: jax.Array, normals: jax.Array, task_ids: jax.Array,
+                    params: SpinImageParams) -> jax.Array:
+    """Chunk of descriptors (vmap over the sequential-scatter oracle)."""
+    fn = lambda oid: spin_image_ref_single(points, normals, oid, params)
+    return jax.vmap(fn)(task_ids)

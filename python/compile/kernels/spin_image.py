@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: PSIA spin-image descriptor generation.
+
+The paper's low-variability workload is PSIA (parallel spin-image algorithm,
+Eleliemy et al. 2016/2017): one loop iteration == one *oriented point* whose
+2-D spin-image descriptor is accumulated over the whole 3-D point cloud.
+
+A spin image for oriented point (p, n) maps every cloud point x to cylinder
+coordinates
+
+    beta  = n . (x - p)              (signed height along the normal)
+    alpha = sqrt(|x - p|^2 - beta^2) (radial distance from the normal axis)
+
+and bilinearly accumulates unit mass into an I x J histogram with rows
+``i = (half_extent - beta) / bin_size`` (top-down, standard Johnson layout)
+and columns ``j = alpha / bin_size``.
+
+TPU adaptation (DESIGN.md S4): the natural GPU formulation is an atomic
+scatter-add; the MXU re-think used here factorizes the bilinear scatter into
+two dense one-hot matmuls.  Since the bilinear weight separates as
+``w(i0+di, j0+dj) = u_di * v_dj``, the whole accumulation is
+
+    A = (1-u) . onehot(i0, I) + u . onehot(i0+1, I)        # [NPTS, I]
+    B = (1-v) . onehot(j0, J) + v . onehot(j0+1, J)        # [NPTS, J]
+    image = A^T @ B                                        # [I, J]  (MXU)
+
+``jax.nn.one_hot`` yields an all-zero row for out-of-range bins, which
+implements support clipping for free.  One grid program per oriented point;
+the cloud tile sits in VMEM, the [I, J] accumulator in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class SpinImageParams:
+    """Static PSIA parameters baked into the AOT artifact."""
+
+    n_points: int = 2048   # cloud size fed at runtime
+    img_size: int = 32     # I == J == img_size
+    bin_size: float = 0.1  # histogram bin width (world units)
+    chunk: int = 64        # oriented points per executable call (K)
+
+    @property
+    def half_extent(self) -> float:
+        # beta in [-half_extent, +half_extent] maps onto rows [0, I).
+        return 0.5 * self.img_size * self.bin_size
+
+
+def _spin_image_kernel(pts_ref, nrm_ref, oid_ref, out_ref, *, params: SpinImageParams):
+    """Descriptor for ONE oriented point (grid dimension 0 == task slot)."""
+    pts = pts_ref[...]          # [NPTS, 3] f32, whole cloud in VMEM
+    nrms = nrm_ref[...]         # [NPTS, 3] f32
+    oid = oid_ref[0]            # int32 scalar: oriented-point id (or -1 pad)
+
+    valid = oid >= 0
+    safe = jnp.where(valid, oid, 0)
+    p = jnp.take(pts, safe, axis=0)     # [3]
+    n = jnp.take(nrms, safe, axis=0)    # [3]
+
+    d = pts - p[None, :]                              # [NPTS, 3]
+    beta = d @ n                                      # [NPTS]
+    r2 = jnp.sum(d * d, axis=1)
+    alpha = jnp.sqrt(jnp.maximum(r2 - beta * beta, jnp.float32(0.0)))
+
+    inv_bin = jnp.float32(1.0 / params.bin_size)
+    i_f = (jnp.float32(params.half_extent) - beta) * inv_bin
+    j_f = alpha * inv_bin
+
+    i0 = jnp.floor(i_f)
+    j0 = jnp.floor(j_f)
+    u = i_f - i0   # fractional row weight
+    v = j_f - j0   # fractional col weight
+    i0 = i0.astype(jnp.int32)
+    j0 = j0.astype(jnp.int32)
+
+    size = params.img_size
+    # one_hot returns a zero row for out-of-range indices -> support clipping.
+    a = (jnp.float32(1.0) - u)[:, None] * jax.nn.one_hot(i0, size, dtype=jnp.float32)
+    a = a + u[:, None] * jax.nn.one_hot(i0 + 1, size, dtype=jnp.float32)
+    b = (jnp.float32(1.0) - v)[:, None] * jax.nn.one_hot(j0, size, dtype=jnp.float32)
+    b = b + v[:, None] * jax.nn.one_hot(j0 + 1, size, dtype=jnp.float32)
+
+    image = a.T @ b                                   # [I, J] on the MXU
+    out_ref[0, :, :] = image * valid.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def spin_images(points: jax.Array, normals: jax.Array, task_ids: jax.Array, *,
+                params: SpinImageParams) -> jax.Array:
+    """Spin images for a chunk of oriented-point tasks.
+
+    ``points``/``normals``: f32 ``[n_points, 3]``; ``task_ids``: int32
+    ``[chunk]`` (pad with -1).  Returns f32 ``[chunk, img_size, img_size]``;
+    padded slots are all-zero.
+    """
+    npts, _ = points.shape
+    if npts != params.n_points:
+        raise ValueError(f"cloud size {npts} != artifact n_points {params.n_points}")
+    (k,) = task_ids.shape
+    size = params.img_size
+    return pl.pallas_call(
+        functools.partial(_spin_image_kernel, params=params),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((npts, 3), lambda i: (0, 0)),
+            pl.BlockSpec((npts, 3), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, size, size), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, size, size), jnp.float32),
+        interpret=True,
+    )(points, normals, task_ids)

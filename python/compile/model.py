@@ -1,0 +1,37 @@
+"""L2: chunk-compute graphs for the two rDLB applications.
+
+These are the functions AOT-lowered to HLO text and executed by the rust
+coordinator's PJRT runtime on the request path.  Each call computes one DLS
+*chunk* of loop iterations:
+
+  * ``mandelbrot_chunk``: int32[CHUNK] flat pixel ids -> int32[CHUNK] escape
+    counts (pad with -1; padded lanes return 0).
+  * ``psia_chunk``: cloud (f32[NPTS,3] x2) + int32[K] oriented-point ids ->
+    f32[K, I, J] spin images (pad with -1; padded slots are zero).
+
+Both call straight into the L1 Pallas kernels so kernel + surrounding graph
+lower into a single fused HLO module per application.  Python never appears
+on the request path -- rust re-executes the compiled artifact per chunk.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernels.mandelbrot import TILE, MandelbrotParams, mandelbrot_counts
+from .kernels.spin_image import SpinImageParams, spin_images
+
+# Chunk geometry baked into the artifacts (also recorded in manifest.json).
+MANDELBROT_CHUNK = 2048  # pixels per executable call (multiple of TILE)
+assert MANDELBROT_CHUNK % TILE == 0
+
+
+def mandelbrot_chunk(indices: jax.Array, *, params: MandelbrotParams) -> tuple[jax.Array]:
+    """One DLS chunk of Mandelbrot iterations (returns a 1-tuple for AOT)."""
+    return (mandelbrot_counts(indices, params=params),)
+
+
+def psia_chunk(points: jax.Array, normals: jax.Array, task_ids: jax.Array, *,
+               params: SpinImageParams) -> tuple[jax.Array]:
+    """One DLS chunk of PSIA spin-image tasks (returns a 1-tuple for AOT)."""
+    return (spin_images(points, normals, task_ids, params=params),)

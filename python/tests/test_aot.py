@@ -1,0 +1,95 @@
+"""AOT pipeline: artifacts build, HLO text parses, reloaded module re-executes
+to the same numerics through the jax CPU client (the same PJRT backend the
+rust runtime uses)."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile.kernels.mandelbrot import MandelbrotParams
+from compile.kernels.spin_image import SpinImageParams
+from compile.kernels.ref import mandelbrot_ref, spin_images_ref
+
+MANDEL = MandelbrotParams(width=32, height=32, max_iter=32)
+PSIA = SpinImageParams(n_points=64, img_size=8, bin_size=0.3, chunk=4)
+CHUNK = 128
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(out, mandelbrot=MANDEL, psia=PSIA, chunk=CHUNK)
+    return out, manifest
+
+
+def execute_hlo_text(text, args):
+    """Compile HLO text with the jax CPU client and run it -- mirrors what
+    rust/src/runtime does via the xla crate (text -> module -> compile)."""
+    import jaxlib._jax as jx
+
+    backend = jax.devices("cpu")[0].client
+    module = xc._xla.hlo_module_from_text(text)
+    comp = xc.XlaComputation(module.as_serialized_hlo_module_proto())
+    mlir = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    devices = jx.DeviceList(tuple(backend.devices()))
+    exe = backend.compile_and_load(mlir, devices)
+    bufs = [backend.buffer_from_pyval(a) for a in args]
+    out = exe.execute(bufs)
+    return [np.asarray(o) for o in out]
+
+
+class TestManifest:
+    def test_files_exist(self, artifacts):
+        out, manifest = artifacts
+        assert (out / "mandelbrot.hlo.txt").exists()
+        assert (out / "psia.hlo.txt").exists()
+        assert (out / "manifest.json").exists()
+
+    def test_manifest_roundtrips(self, artifacts):
+        out, manifest = artifacts
+        loaded = json.loads((out / "manifest.json").read_text())
+        assert loaded == manifest
+        assert loaded["mandelbrot"]["chunk"] == CHUNK
+        assert loaded["psia"]["params"]["img_size"] == PSIA.img_size
+
+    def test_hlo_text_has_entry(self, artifacts):
+        out, _ = artifacts
+        for name in ("mandelbrot.hlo.txt", "psia.hlo.txt"):
+            text = (out / name).read_text()
+            assert "ENTRY" in text and "ROOT" in text
+
+    def test_mandelbrot_shapes_recorded(self, artifacts):
+        _, manifest = artifacts
+        m = manifest["mandelbrot"]
+        assert m["inputs"][0]["shape"] == [CHUNK]
+        assert m["outputs"][0]["dtype"] == "s32"
+
+
+class TestReexecution:
+    def test_mandelbrot_artifact_numerics(self, artifacts):
+        out, _ = artifacts
+        text = (out / "mandelbrot.hlo.txt").read_text()
+        idx = np.arange(CHUNK, dtype=np.int32)
+        idx[-5:] = -1
+        (got,) = execute_hlo_text(text, [idx])
+        want = np.asarray(mandelbrot_ref(jnp.asarray(idx), MANDEL))
+        np.testing.assert_array_equal(got, want)
+
+    def test_psia_artifact_numerics(self, artifacts):
+        out, _ = artifacts
+        text = (out / "psia.hlo.txt").read_text()
+        rng = np.random.default_rng(11)
+        pts = rng.uniform(-1, 1, (PSIA.n_points, 3)).astype(np.float32)
+        nrm = rng.normal(size=(PSIA.n_points, 3)).astype(np.float32)
+        nrm /= np.linalg.norm(nrm, axis=1, keepdims=True)
+        ids = np.array([0, 13, -1, 63], np.int32)
+        (got,) = execute_hlo_text(text, [pts, nrm, ids])
+        want = np.asarray(spin_images_ref(jnp.asarray(pts), jnp.asarray(nrm),
+                                          jnp.asarray(ids), params=PSIA))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

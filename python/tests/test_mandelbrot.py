@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas Mandelbrot kernel vs pure-jnp oracle vs numpy."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mandelbrot import TILE, MandelbrotParams, mandelbrot_counts
+from compile.kernels.ref import mandelbrot_ref
+
+SMALL = MandelbrotParams(width=32, height=32, max_iter=64)
+
+
+def numpy_mandelbrot(indices: np.ndarray, p: MandelbrotParams) -> np.ndarray:
+    """Third, independent oracle: plain numpy with a per-pixel while loop."""
+    out = np.zeros(indices.shape, np.int32)
+    dx = np.float32(p.dx)
+    dy = np.float32(p.dy)
+    for k, idx in enumerate(indices):
+        if idx < 0:
+            continue
+        x = np.float32(idx % p.width)
+        y = np.float32(idx // p.width)
+        c = complex(np.float32(p.x_min) + (x + np.float32(0.5)) * dx,
+                    np.float32(p.y_min) + (y + np.float32(0.5)) * dy)
+        z = complex(np.float32(0), np.float32(0))
+        count = 0
+        for _ in range(p.max_iter):
+            zre = np.float32(z.real * z.real - z.imag * z.imag) + np.float32(c.real)
+            zim = np.float32(2.0) * np.float32(z.real * z.imag) + np.float32(c.imag)
+            z = complex(zre, zim)
+            if zre * zre + zim * zim > 4.0:
+                break
+            count += 1
+        out[k] = count
+    return out
+
+
+def run_kernel(indices, params, tile=None):
+    tile = tile or min(TILE, len(indices))
+    return np.asarray(mandelbrot_counts(jnp.asarray(indices, jnp.int32),
+                                        params=params, tile=tile))
+
+
+class TestKernelVsRef:
+    def test_full_small_grid(self):
+        idx = np.arange(SMALL.n_tasks, dtype=np.int32)
+        got = run_kernel(idx, SMALL, tile=256)
+        want = np.asarray(mandelbrot_ref(jnp.asarray(idx), SMALL))
+        np.testing.assert_array_equal(got, want)
+
+    def test_vs_numpy_oracle(self):
+        idx = np.arange(SMALL.n_tasks, dtype=np.int32)[::7][:128]
+        got = run_kernel(idx, SMALL, tile=128)
+        want = numpy_mandelbrot(idx, SMALL)
+        np.testing.assert_array_equal(got, want)
+
+    def test_padding_lanes_zero(self):
+        idx = np.full(64, -1, np.int32)
+        idx[:10] = np.arange(10)
+        got = run_kernel(idx, SMALL, tile=64)
+        assert (got[10:] == 0).all()
+        want = numpy_mandelbrot(idx, SMALL)
+        np.testing.assert_array_equal(got, want)
+
+    def test_interior_pixel_saturates(self):
+        # Pixel at the centre of the cardioid never escapes.
+        p = MandelbrotParams(width=8, height=8, x_min=-0.6, x_max=-0.4,
+                             y_min=-0.1, y_max=0.1, max_iter=50)
+        got = run_kernel(np.arange(64, dtype=np.int32), p, tile=64)
+        assert got.max() == p.max_iter
+
+    def test_exterior_pixel_escapes_immediately(self):
+        p = MandelbrotParams(width=4, height=4, x_min=10.0, x_max=11.0,
+                             y_min=10.0, y_max=11.0, max_iter=50)
+        got = run_kernel(np.arange(16, dtype=np.int32), p, tile=16)
+        assert (got == 0).all()
+
+    def test_multi_tile_grid_matches_single(self):
+        idx = np.arange(512, dtype=np.int32)
+        a = run_kernel(idx, SMALL, tile=512)
+        b = run_kernel(idx, SMALL, tile=128)  # 4 grid programs
+        np.testing.assert_array_equal(a, b)
+
+    def test_rejects_misaligned_chunk(self):
+        with pytest.raises(ValueError):
+            mandelbrot_counts(jnp.zeros(100, jnp.int32), params=SMALL, tile=64)
+
+    def test_dtype(self):
+        out = mandelbrot_counts(jnp.zeros(64, jnp.int32), params=SMALL, tile=64)
+        assert out.dtype == jnp.int32
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    width=st.integers(4, 64),
+    height=st.integers(4, 64),
+    max_iter=st.integers(1, 128),
+    seed=st.integers(0, 2**31 - 1),
+    x0=st.floats(-2.5, 1.0, allow_nan=False),
+    span=st.floats(0.05, 3.0, allow_nan=False),
+)
+def test_hypothesis_kernel_matches_ref(width, height, max_iter, seed, x0, span):
+    p = MandelbrotParams(width=width, height=height, max_iter=max_iter,
+                         x_min=x0, x_max=x0 + span, y_min=-span / 2, y_max=span / 2)
+    rng = np.random.default_rng(seed)
+    n = 64
+    idx = rng.integers(-1, p.n_tasks, n, dtype=np.int32)
+    got = run_kernel(idx, p, tile=n)
+    want = np.asarray(mandelbrot_ref(jnp.asarray(idx), p))
+    # Kernel and oracle are *different* XLA graphs; on pixels whose orbit
+    # grazes |z| == 2 the fusion-dependent f32 rounding can flip the escape
+    # test and the counts then diverge arbitrarily.  Randomized regions hit
+    # such pixels occasionally, so require near-total (not bitwise) agreement;
+    # the deterministic tests above assert exact equality on the paper region.
+    mismatch = np.mean(got != want)
+    assert mismatch <= 0.05, f"mismatch fraction {mismatch:.3f} > 5%"

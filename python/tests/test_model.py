@@ -1,0 +1,58 @@
+"""L2: chunk-graph functions — shapes, dtypes, padding, determinism."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile.kernels.mandelbrot import MandelbrotParams
+from compile.kernels.spin_image import SpinImageParams
+from compile.model import MANDELBROT_CHUNK, mandelbrot_chunk, psia_chunk
+
+MANDEL = MandelbrotParams(width=16, height=16, max_iter=16)
+PSIA = SpinImageParams(n_points=32, img_size=8, bin_size=0.3, chunk=4)
+
+
+def cloud():
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.uniform(-1, 1, (PSIA.n_points, 3)), jnp.float32)
+    nrm = rng.normal(size=(PSIA.n_points, 3))
+    nrm /= np.linalg.norm(nrm, axis=1, keepdims=True)
+    return pts, jnp.asarray(nrm, jnp.float32)
+
+
+def test_mandelbrot_chunk_is_one_tuple():
+    out = mandelbrot_chunk(jnp.zeros(64, jnp.int32), params=MANDEL)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (64,)
+    assert out[0].dtype == jnp.int32
+
+
+def test_mandelbrot_chunk_constant_default():
+    assert MANDELBROT_CHUNK % 256 == 0  # multiple of any sane tile
+
+
+def test_psia_chunk_is_one_tuple():
+    pts, nrm = cloud()
+    ids = jnp.asarray([0, 1, -1, 31], jnp.int32)
+    out = psia_chunk(pts, nrm, ids, params=PSIA)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (4, 8, 8)
+    assert out[0].dtype == jnp.float32
+    # Padded slot zero.
+    assert np.asarray(out[0][2]).sum() == 0.0
+
+
+def test_chunks_are_deterministic():
+    idx = jnp.arange(64, dtype=jnp.int32)
+    a = np.asarray(mandelbrot_chunk(idx, params=MANDEL)[0])
+    b = np.asarray(mandelbrot_chunk(idx, params=MANDEL)[0])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_task_order_irrelevant_per_lane():
+    # Each lane is independent: permuting inputs permutes outputs.
+    idx = jnp.arange(64, dtype=jnp.int32)
+    perm = np.random.default_rng(1).permutation(64)
+    a = np.asarray(mandelbrot_chunk(idx, params=MANDEL)[0])
+    b = np.asarray(mandelbrot_chunk(idx[perm], params=MANDEL)[0])
+    np.testing.assert_array_equal(a[perm], b)

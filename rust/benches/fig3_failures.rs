@@ -1,0 +1,48 @@
+//! Bench: regenerate Fig. 3a/3b (and Fig. 6) — execution time with rDLB
+//! under {baseline, 1, P/2, P−1} failures for every dynamic technique.
+//!
+//! Scale via env: RDLB_BENCH_SCALE=smoke|quick|paper (default quick).
+//! Prints the same rows the paper plots (technique × scenario → T_par).
+
+use rdlb::apps::AppKind;
+use rdlb::experiments::{fig3_failures, Scale};
+use rdlb::util::bench::table;
+
+fn scale() -> Scale {
+    std::env::var("RDLB_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or_else(Scale::quick)
+}
+
+fn main() {
+    let scale = scale();
+    println!(
+        "fig3 failures bench: P={} reps={} (set RDLB_BENCH_SCALE=paper for full scale)",
+        scale.pes, scale.reps
+    );
+    for (app, fig) in [(AppKind::Psia, "Fig 3a (PSIA)"), (AppKind::Mandelbrot, "Fig 3b (Mandelbrot)")] {
+        let t0 = std::time::Instant::now();
+        let data = fig3_failures(app, &scale).expect("fig3");
+        let rows: Vec<Vec<String>> = data
+            .cells
+            .iter()
+            .map(|c| {
+                vec![
+                    c.technique.clone(),
+                    c.scenario.clone(),
+                    format!("{:.4}", c.mean_time),
+                    format!("{:.4}", c.std_time),
+                    format!("{:.1}%", c.mean_waste * 100.0),
+                ]
+            })
+            .collect();
+        table(
+            &format!("{fig} — T_par with rDLB under failures ({:?})", t0.elapsed()),
+            &["technique", "scenario", "mean T_par (s)", "std", "waste"],
+            &rows,
+        );
+        // Shape check: everything completed.
+        assert!(data.cells.iter().all(|c| c.hung_fraction == 0.0), "a cell hung with rDLB");
+    }
+}

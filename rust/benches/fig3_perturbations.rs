@@ -1,0 +1,46 @@
+//! Bench: regenerate Fig. 3c/3d (and Figs. 7–8) — execution time without
+//! and with rDLB under PE / latency / combined perturbations, reporting the
+//! rDLB speedup column (the paper's "up to 7×" claim).
+//!
+//! Scale via env: RDLB_BENCH_SCALE=smoke|quick|paper (default quick).
+
+use rdlb::apps::AppKind;
+use rdlb::experiments::{fig3_perturbations, Scale};
+use rdlb::util::bench::table;
+
+fn main() {
+    let scale = std::env::var("RDLB_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or_else(Scale::quick);
+    println!("fig3 perturbations bench: P={} reps={}", scale.pes, scale.reps);
+    for (app, fig) in [(AppKind::Psia, "Fig 3c (PSIA)"), (AppKind::Mandelbrot, "Fig 3d (Mandelbrot)")] {
+        let t0 = std::time::Instant::now();
+        let cells = fig3_perturbations(app, &scale).expect("fig3 perturb");
+        let mut max_speedup: f64 = 0.0;
+        let rows: Vec<Vec<String>> = cells
+            .iter()
+            .map(|c| {
+                let tw = c.without_rdlb.time_or_inf();
+                let tr = c.with_rdlb.time_or_inf();
+                let speedup = if tr > 0.0 && tw.is_finite() { tw / tr } else { f64::INFINITY };
+                if c.scenario != "baseline" && speedup.is_finite() {
+                    max_speedup = max_speedup.max(speedup);
+                }
+                vec![
+                    c.technique.clone(),
+                    c.scenario.clone(),
+                    format!("{tw:.4}"),
+                    format!("{tr:.4}"),
+                    format!("{speedup:.2}x"),
+                ]
+            })
+            .collect();
+        table(
+            &format!("{fig} — T_par ± rDLB under perturbations ({:?})", t0.elapsed()),
+            &["technique", "scenario", "without rDLB (s)", "with rDLB (s)", "speedup"],
+            &rows,
+        );
+        println!("max rDLB speedup under perturbation: {max_speedup:.2}x (paper reports up to 7x at 256 PEs/10s delays)");
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate Fig. 4 — resilience ρ_res of every dynamic technique
+//! under {1, P/2, P−1} failures (FePIA metric; 1 = most robust).
+
+use rdlb::apps::AppKind;
+use rdlb::experiments::{fig3_failures, fig4_resilience, Scale};
+use rdlb::util::bench::table;
+
+fn main() {
+    let scale = std::env::var("RDLB_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or_else(Scale::quick);
+    println!("fig4 resilience bench: P={} reps={}", scale.pes, scale.reps);
+    for (app, fig) in [(AppKind::Psia, "Fig 4 (PSIA)"), (AppKind::Mandelbrot, "Fig 4 (Mandelbrot)")] {
+        let data = fig3_failures(app, &scale).expect("fig3");
+        let tables = fig4_resilience(&data);
+        for t in &tables {
+            let rows: Vec<Vec<String>> = t
+                .rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.technique.clone(),
+                        format!("{:.4}", r.radius),
+                        if r.rho.is_finite() { format!("{:.2}", r.rho) } else { "inf".into() },
+                    ]
+                })
+                .collect();
+            table(
+                &format!("{fig} — ρ_res under {} (lower is better, 1 = most robust)", t.scenario),
+                &["technique", "radius (s)", "ρ_res"],
+                &rows,
+            );
+            if let Some(best) = rdlb::robustness::most_robust(&t.rows) {
+                println!("most robust under {}: {}", t.scenario, best.technique);
+            }
+        }
+    }
+}

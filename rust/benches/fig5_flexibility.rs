@@ -1,0 +1,41 @@
+//! Bench: regenerate Fig. 5 — flexibility ρ_flex of every dynamic technique
+//! under the three perturbation scenarios, without and with rDLB.  The
+//! paper's headline: rDLB boosts the AWF-* family's flexibility up to ~30×
+//! under combined perturbations.
+
+use rdlb::apps::AppKind;
+use rdlb::experiments::{fig3_perturbations, fig5_flexibility, Scale};
+use rdlb::util::bench::table;
+
+fn main() {
+    let scale = std::env::var("RDLB_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or_else(Scale::quick);
+    println!("fig5 flexibility bench: P={} reps={}", scale.pes, scale.reps);
+    for (app, fig) in [(AppKind::Psia, "Fig 5 (PSIA)"), (AppKind::Mandelbrot, "Fig 5 (Mandelbrot)")] {
+        let cells = fig3_perturbations(app, &scale).expect("fig3 perturb");
+        for (without, with) in fig5_flexibility(&cells) {
+            let fmt_rho = |rho: f64| if rho.is_finite() { format!("{rho:.2}") } else { "inf".into() };
+            let rows: Vec<Vec<String>> = without
+                .rows
+                .iter()
+                .zip(&with.rows)
+                .map(|(a, b)| {
+                    let boost = if b.rho > 0.0 && a.rho.is_finite() { a.rho / b.rho } else { f64::INFINITY };
+                    vec![
+                        a.technique.clone(),
+                        fmt_rho(a.rho),
+                        fmt_rho(b.rho),
+                        if boost.is_finite() { format!("{boost:.1}x") } else { "inf".into() },
+                    ]
+                })
+                .collect();
+            table(
+                &format!("{fig} — ρ_flex under {} (lower is better)", without.scenario),
+                &["technique", "ρ without rDLB", "ρ with rDLB", "flexibility boost"],
+                &rows,
+            );
+        }
+    }
+}

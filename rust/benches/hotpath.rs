@@ -1,0 +1,150 @@
+//! Bench: hot paths of the L3 coordinator (perf deliverable, DESIGN.md §10).
+//!
+//!  * master scheduling decision (on_request + on_result round)
+//!  * rDLB re-dispatch decision
+//!  * simulator event throughput (events/s, paper-scale run)
+//!  * PJRT chunk execution latency (when artifacts are present)
+//!
+//! Targets: < 1 µs per scheduling decision; ≥ 1 M sim events/s.
+
+use rdlb::apps::{AppKind, Workload};
+use rdlb::coordinator::{Master, MasterConfig, Reply};
+use rdlb::dls::{Technique, TechniqueParams};
+use rdlb::sim::{SimCluster, SimParams, Topology};
+use rdlb::util::bench::{bench, fmt_duration, report};
+
+fn master_roundtrip_bench(technique: Technique, n: usize, p: usize) {
+    let r = bench(&format!("master round ({technique}, N={n}, P={p})"), 1, 8, || {
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique,
+            params: TechniqueParams::default(),
+            rdlb: true,
+        });
+        let mut w = 0usize;
+        let mut t = 0.0f64;
+        while !master.is_complete() {
+            match master.on_request(w % p, t) {
+                Reply::Assign(a) => {
+                    master.on_result(w % p, a.id, 1e-4, t + 1e-4);
+                }
+                Reply::Terminate => break,
+                Reply::Wait => {}
+            }
+            w += 1;
+            t += 1e-4;
+        }
+    });
+    // Decisions per run ≈ chunks × 2 (request + result).
+    report(&r);
+    let chunks = {
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique,
+            params: TechniqueParams::default(),
+            rdlb: true,
+        });
+        let mut count = 0u64;
+        let mut w = 0;
+        while !master.is_complete() {
+            if let Reply::Assign(a) = master.on_request(w % p, 0.0) {
+                master.on_result(w % p, a.id, 1e-4, 0.0);
+                count += 1;
+            }
+            w += 1;
+        }
+        count
+    };
+    let per_decision = r.mean_s / (chunks as f64 * 2.0);
+    println!(
+        "    → {chunks} chunks, {} per scheduling decision ({:.2} M ops/s)",
+        fmt_duration(per_decision),
+        1e-6 / per_decision
+    );
+}
+
+fn sim_event_throughput() {
+    let workload = Workload::build(AppKind::Mandelbrot, 262_144, 2e-3, 1);
+    let params = SimParams::new(workload, Topology::new(16, 16), Technique::Ss, true);
+    let cluster = SimCluster::new(params).unwrap();
+    // SS ⇒ one chunk per task ⇒ ~3 events per task ⇒ ~786k events per run.
+    let events_per_run = 262_144.0 * 3.0;
+    let r = bench("sim run (Mandelbrot, SS, 256 PEs, N=262144)", 1, 5, || {
+        let o = cluster.run().unwrap();
+        assert!(o.completed());
+    });
+    report(&r);
+    println!("    → ≈{:.2} M events/s", events_per_run / r.mean_s / 1e6);
+}
+
+fn rdlb_redispatch_bench() {
+    // All tasks scheduled to worker 1 (which never reports); measure the
+    // re-dispatch decision cost for other workers.
+    let n = 50_000;
+    let p = 64;
+    let r = bench("rDLB re-dispatch decision (50k pending)", 1, 8, || {
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique: Technique::Gss,
+            params: TechniqueParams::default(),
+            rdlb: true,
+        });
+        loop {
+            match master.on_request(1, 0.0) {
+                Reply::Assign(_) => {}
+                _ => break,
+            }
+        }
+        // 1000 re-dispatch decisions across the other workers.
+        for k in 0..1000usize {
+            let w = 2 + (k % (p - 2));
+            match master.on_request(w, 1.0) {
+                Reply::Assign(a) => {
+                    master.on_result(w, a.id, 1e-3, 1.0);
+                }
+                Reply::Wait => {}
+                Reply::Terminate => break,
+            }
+        }
+    });
+    report(&r);
+}
+
+fn pjrt_chunk_latency() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(skipping PJRT latency: run `make artifacts`)");
+        return;
+    }
+    let engine = rdlb::runtime::PjrtEngine::load(&dir).unwrap();
+    let chunk = engine.manifest().mandelbrot.chunk;
+    let ids: Vec<u32> = (0..chunk as u32).collect();
+    let r = bench(&format!("PJRT mandelbrot chunk ({chunk} pixels)"), 2, 10, || {
+        let counts = engine.mandelbrot_chunk(&ids).unwrap();
+        assert_eq!(counts.len(), chunk);
+    });
+    report(&r);
+    println!("    → {:.1} Mpixel/s", chunk as f64 / r.mean_s / 1e6);
+
+    let tasks: Vec<u32> = (0..engine.manifest().psia.chunk as u32).collect();
+    let r = bench(&format!("PJRT psia chunk ({} tasks)", tasks.len()), 2, 10, || {
+        let imgs = engine.psia_chunk(&tasks).unwrap();
+        assert_eq!(imgs.len(), tasks.len());
+    });
+    report(&r);
+}
+
+fn main() {
+    println!("=== L3 hot-path benches ===");
+    master_roundtrip_bench(Technique::Fac, 262_144, 256);
+    master_roundtrip_bench(Technique::Ss, 50_000, 256);
+    master_roundtrip_bench(Technique::Af, 100_000, 256);
+    rdlb_redispatch_bench();
+    println!("\n=== simulator throughput ===");
+    sim_event_throughput();
+    println!("\n=== PJRT chunk latency ===");
+    pjrt_chunk_latency();
+}

@@ -1,0 +1,58 @@
+//! Bench: §3.1 theory — the E[T] closed form vs simulation, the rDLB
+//! overhead's decrease with system size (the paper's scalability claim),
+//! and the checkpointing comparison (H_C = √(2λC), crossover C*).
+
+use rdlb::analysis::{scalability_sweep, TheoryParams};
+use rdlb::experiments::theory_validation;
+use rdlb::util::bench::table;
+
+fn main() {
+    // 1. Model vs simulation under one certain failure.
+    let t0 = std::time::Instant::now();
+    let rows: Vec<Vec<String>> = theory_validation(24)
+        .expect("validation")
+        .into_iter()
+        .map(|(q, model, sim, err)| {
+            vec![q.to_string(), format!("{model:.5}"), format!("{sim:.5}"), format!("{:.2}%", err * 100.0)]
+        })
+        .collect();
+    table(
+        &format!("§3.1 — E[T] with one failure: closed form vs simulation ({:?})", t0.elapsed()),
+        &["q (PEs)", "T_model (s)", "T_sim (s)", "rel err"],
+        &rows,
+    );
+
+    // 2. Scalability: overhead decreases with q; crossover quadratically.
+    let qs = [2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0];
+    let sweep = scalability_sweep(262_144.0, 2e-3, 1e-5, &qs);
+    let rows: Vec<Vec<String>> = sweep
+        .iter()
+        .map(|(q, et, h, c)| {
+            vec![format!("{q}"), format!("{et:.4}"), format!("{h:.3e}"), format!("{c:.3e}")]
+        })
+        .collect();
+    table(
+        "§3.1 — scalability sweep (N=262144, t=2ms, λ=1e-5)",
+        &["q", "E[T] (s)", "rDLB overhead H", "checkpoint crossover C* (s)"],
+        &rows,
+    );
+    // The paper's claim: cost decreases quadratically with q.
+    let ratio = sweep[sweep.len() - 1].3 / sweep[sweep.len() - 2].3;
+    println!("C*(256)/C*(128) = {ratio:.4} (≈ 1/16 ⇒ quadratic decrease ✓)");
+
+    // 3. rDLB vs checkpointing across checkpoint costs.
+    let p = TheoryParams { n_per_pe: 1024.0, q: 256.0, t_task: 2e-3, lambda: 1e-5 };
+    let c_star = p.checkpoint_crossover();
+    let rows: Vec<Vec<String>> = [c_star / 100.0, c_star, c_star * 100.0, 1.0, 60.0]
+        .iter()
+        .map(|&c| {
+            let winner = if p.overhead_rdlb() <= p.overhead_checkpoint(c) { "rDLB" } else { "checkpoint" };
+            vec![format!("{c:.3e}"), format!("{:.3e}", p.overhead_checkpoint(c)), format!("{:.3e}", p.overhead_rdlb()), winner.into()]
+        })
+        .collect();
+    table(
+        &format!("§3.1 — rDLB vs checkpoint/restart (C* = {c_star:.3e}s)"),
+        &["checkpoint cost C (s)", "H_C = √(2λC)", "H_rDLB", "winner"],
+        &rows,
+    );
+}

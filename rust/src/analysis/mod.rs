@@ -1,0 +1,168 @@
+//! §3.1 theoretical analysis — closed forms for the expected execution time
+//! with rDLB under failures, the rDLB overhead, and the comparison against
+//! checkpoint/restart.
+//!
+//! Notation (paper §3.1): `q` PEs execute `n` equal tasks of duration `t`
+//! each per PE (N = n·q total), failure-free makespan `T = n·t`, failure
+//! rate `λ` (exponential inter-arrival), checkpoint cost `C`.
+
+
+/// Parameters of the §3.1 model.
+#[derive(Debug, Clone, Copy)]
+pub struct TheoryParams {
+    /// Tasks per PE (n).
+    pub n_per_pe: f64,
+    /// Number of PEs (q).
+    pub q: f64,
+    /// Per-task duration (t), seconds.
+    pub t_task: f64,
+    /// Failure rate λ per PE, 1/seconds.
+    pub lambda: f64,
+}
+
+impl TheoryParams {
+    /// Failure-free makespan `T = n · t` (equal tasks, equal distribution).
+    pub fn makespan(&self) -> f64 {
+        self.n_per_pe * self.t_task
+    }
+
+    /// Probability of at least one failure during `T` under exponential
+    /// failures: `p_F = 1 − e^{−λT}`.
+    pub fn p_failure(&self) -> f64 {
+        1.0 - (-self.lambda * self.makespan()).exp()
+    }
+
+    /// Expected makespan with rDLB under (at most) one failure:
+    /// `E[T] = T + p_F · (t/2) · (n+1)/(q−1)`.
+    ///
+    /// The failed PE's surviving work — uniformly distributed over how much
+    /// it had finished — is spread over the remaining q−1 PEs by the
+    /// re-dispatch loop.
+    pub fn expected_time_one_failure(&self) -> f64 {
+        let recovery = 0.5 * self.t_task * (self.n_per_pe + 1.0) / (self.q - 1.0);
+        self.makespan() + self.p_failure() * recovery
+    }
+
+    /// First-order approximation (λT ≪ 1):
+    /// `E[T] ≈ T + λT · (t/2) · (n+1)/(q−1)`.
+    pub fn expected_time_first_order(&self) -> f64 {
+        let t_ms = self.makespan();
+        t_ms + self.lambda * t_ms * 0.5 * self.t_task * (self.n_per_pe + 1.0) / (self.q - 1.0)
+    }
+
+    /// rDLB overhead ratio (first order): `H = (λt/2) · (n+1)/(q−1)`.
+    pub fn overhead_rdlb(&self) -> f64 {
+        0.5 * self.lambda * self.t_task * (self.n_per_pe + 1.0) / (self.q - 1.0)
+    }
+
+    /// Young/Daly checkpointing overhead ratio: `H_C = √(2λC)`.
+    pub fn overhead_checkpoint(&self, c: f64) -> f64 {
+        (2.0 * self.lambda * c).sqrt()
+    }
+
+    /// Break-even checkpoint cost `C* = (λ t² / 8) · (n+1)²/(q−1)²`:
+    /// rDLB beats checkpoint/restart whenever the checkpoint cost exceeds
+    /// this bound (first-order regime, C ≪ 1/λ).
+    pub fn checkpoint_crossover(&self) -> f64 {
+        let ratio = (self.n_per_pe + 1.0) / (self.q - 1.0);
+        self.lambda * self.t_task * self.t_task * ratio * ratio / 8.0
+    }
+}
+
+/// General makespan: `T = max_i Σ t_i` over per-PE task lists (paper's
+/// "without failure, general case").
+pub fn makespan_general(per_pe_times: &[Vec<f64>]) -> f64 {
+    per_pe_times
+        .iter()
+        .map(|ts| ts.iter().sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+/// Scalability table: the paper argues the rDLB cost decreases
+/// *quadratically* in q (via the crossover bound) and E[T] scales linearly.
+/// Produces (q, E_T, overhead, crossover) rows for a sweep over q.
+pub fn scalability_sweep(n_total: f64, t_task: f64, lambda: f64, qs: &[f64]) -> Vec<(f64, f64, f64, f64)> {
+    qs.iter()
+        .map(|&q| {
+            let p = TheoryParams { n_per_pe: n_total / q, q, t_task, lambda };
+            (q, p.expected_time_one_failure(), p.overhead_rdlb(), p.checkpoint_crossover())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> TheoryParams {
+        TheoryParams { n_per_pe: 1000.0, q: 256.0, t_task: 1e-2, lambda: 1e-4 }
+    }
+
+    #[test]
+    fn makespan_is_nt() {
+        assert!((params().makespan() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_time_exceeds_makespan() {
+        let p = params();
+        assert!(p.expected_time_one_failure() > p.makespan());
+        assert!(p.expected_time_first_order() > p.makespan());
+    }
+
+    #[test]
+    fn first_order_close_for_small_lambda() {
+        let p = params();
+        let exact = p.expected_time_one_failure();
+        let approx = p.expected_time_first_order();
+        assert!((exact - approx).abs() / exact < 1e-3, "exact {exact} approx {approx}");
+    }
+
+    #[test]
+    fn overhead_decreases_with_q() {
+        let mut prev = f64::INFINITY;
+        for q in [2.0, 8.0, 64.0, 256.0] {
+            let p = TheoryParams { q, n_per_pe: 262_144.0 / q, ..params() };
+            let h = p.overhead_rdlb();
+            assert!(h < prev, "overhead not decreasing at q={q}");
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn crossover_quadratic_in_q() {
+        // Fixed total work: crossover ∝ ((n+1)/(q−1))² ≈ (N/q²)² ... the
+        // paper's claim is that the *cost decreases quadratically* with q;
+        // check C*(2q) / C*(q) ≈ 1/16 for n_total fixed (n ∝ 1/q).
+        let n_total = 262_144.0;
+        let c = |q: f64| TheoryParams { n_per_pe: n_total / q, q, t_task: 1e-2, lambda: 1e-5 }
+            .checkpoint_crossover();
+        let ratio = c(128.0) / c(64.0);
+        assert!((ratio - 1.0 / 16.0).abs() < 0.02, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rdlb_beats_checkpoint_above_crossover() {
+        let p = params();
+        let c_star = p.checkpoint_crossover();
+        assert!(p.overhead_rdlb() <= p.overhead_checkpoint(c_star) * 1.0001);
+        assert!(p.overhead_rdlb() < p.overhead_checkpoint(c_star * 4.0));
+        assert!(p.overhead_rdlb() > p.overhead_checkpoint(c_star / 4.0));
+    }
+
+    #[test]
+    fn general_makespan_is_max() {
+        let times = vec![vec![1.0, 2.0], vec![4.0], vec![0.5, 0.5, 0.5]];
+        assert_eq!(makespan_general(&times), 4.0);
+    }
+
+    #[test]
+    fn sweep_monotone() {
+        let rows = scalability_sweep(262_144.0, 1e-2, 1e-5, &[2.0, 4.0, 8.0, 16.0]);
+        assert_eq!(rows.len(), 4);
+        for w in rows.windows(2) {
+            assert!(w[1].1 < w[0].1, "E[T] must fall with q");
+            assert!(w[1].3 < w[0].3, "crossover must fall with q");
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Native Mandelbrot kernel — bit-compatible (f32, same op order) with the
+//! Pallas kernel in `python/compile/kernels/mandelbrot.py`.
+//!
+//! One loop iteration (task) == one pixel of the escape-time fractal; the
+//! count distribution is extremely skewed, which is exactly why the paper
+//! uses it as the high-variability workload.
+
+
+/// Region/iteration parameters; defaults equal the AOT artifact's and the
+/// paper's N = 512×512 = 262,144.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MandelbrotApp {
+    pub width: usize,
+    pub height: usize,
+    pub x_min: f32,
+    pub x_max: f32,
+    pub y_min: f32,
+    pub y_max: f32,
+    pub max_iter: u32,
+}
+
+impl Default for MandelbrotApp {
+    fn default() -> Self {
+        MandelbrotApp {
+            width: 512,
+            height: 512,
+            x_min: -2.0,
+            x_max: 0.6,
+            y_min: -1.3,
+            y_max: 1.3,
+            max_iter: 500,
+        }
+    }
+}
+
+impl MandelbrotApp {
+    /// A roughly-square grid with ~`n` pixels (exact when `n` is a square).
+    pub fn paper_scaled(n: usize) -> Self {
+        let side = (n as f64).sqrt().round().max(1.0) as usize;
+        MandelbrotApp { width: side, height: n.div_ceil(side), ..Default::default() }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.width * self.height
+    }
+
+    #[inline]
+    fn dx(&self) -> f32 {
+        (self.x_max - self.x_min) / self.width as f32
+    }
+
+    #[inline]
+    fn dy(&self) -> f32 {
+        (self.y_max - self.y_min) / self.height as f32
+    }
+
+    /// Escape count for one flat pixel index. Negative ids (padding) give 0.
+    /// Mirrors the Pallas kernel exactly: f32, z ← z²+c, count while |z|² ≤ 4.
+    #[inline]
+    pub fn escape_count(&self, idx: i64) -> u32 {
+        if idx < 0 {
+            return 0;
+        }
+        let x = (idx as usize % self.width) as f32;
+        let y = (idx as usize / self.width) as f32;
+        let c_re = self.x_min + (x + 0.5) * self.dx();
+        let c_im = self.y_min + (y + 0.5) * self.dy();
+        let mut z_re = 0f32;
+        let mut z_im = 0f32;
+        let mut count = 0u32;
+        for _ in 0..self.max_iter {
+            let n_re = z_re * z_re - z_im * z_im + c_re;
+            let n_im = 2.0 * z_re * z_im + c_im;
+            z_re = n_re;
+            z_im = n_im;
+            if z_re * z_re + z_im * z_im > 4.0 {
+                break;
+            }
+            count += 1;
+        }
+        count
+    }
+
+    /// Compute a chunk of tasks (the native-compute path of the runtime).
+    pub fn compute_chunk(&self, tasks: &[u32]) -> Vec<u32> {
+        tasks.iter().map(|&t| self.escape_count(t as i64)).collect()
+    }
+
+    /// All per-pixel counts (multi-threaded; used to derive the simulator's
+    /// cost model from the *real* workload shape).
+    pub fn compute_all(&self) -> Vec<u32> {
+        let n = self.n_tasks();
+        let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4).min(16);
+        let chunk = n.div_ceil(threads);
+        let mut out = vec![0u32; n];
+        std::thread::scope(|s| {
+            for (i, slot) in out.chunks_mut(chunk).enumerate() {
+                let start = i * chunk;
+                let app = *self;
+                s.spawn(move || {
+                    for (j, o) in slot.iter_mut().enumerate() {
+                        *o = app.escape_count((start + j) as i64);
+                    }
+                });
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_saturates_exterior_escapes() {
+        let app = MandelbrotApp { width: 4, height: 4, x_min: -0.1, x_max: 0.1, y_min: -0.1, y_max: 0.1, max_iter: 64 };
+        // Near origin: inside the set → max_iter.
+        assert!(app.compute_chunk(&[5]).iter().all(|&c| c == 64));
+        let far = MandelbrotApp { x_min: 10.0, x_max: 11.0, y_min: 10.0, y_max: 11.0, ..app };
+        assert!(far.compute_chunk(&[0, 3, 15]).iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn padding_gives_zero() {
+        let app = MandelbrotApp::default();
+        assert_eq!(app.escape_count(-1), 0);
+    }
+
+    #[test]
+    fn compute_all_matches_chunk() {
+        let app = MandelbrotApp { width: 32, height: 32, max_iter: 64, ..Default::default() };
+        let all = app.compute_all();
+        let ids: Vec<u32> = (0..all.len() as u32).collect();
+        assert_eq!(all, app.compute_chunk(&ids));
+    }
+
+    #[test]
+    fn paper_scaled_covers_n() {
+        let app = MandelbrotApp::paper_scaled(262_144);
+        assert_eq!(app.n_tasks(), 262_144);
+        let odd = MandelbrotApp::paper_scaled(1000);
+        assert!(odd.n_tasks() >= 1000);
+    }
+
+    #[test]
+    fn distribution_is_heavy_tailed() {
+        let app = MandelbrotApp { width: 64, height: 64, max_iter: 256, ..Default::default() };
+        let counts = app.compute_all();
+        let mut sorted = counts.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        let max = *sorted.last().unwrap() as f64;
+        // Interior pixels saturate at max_iter while the typical (median)
+        // pixel escapes quickly — the heavy tail the paper relies on.
+        assert!(max > 10.0 * median.max(1.0), "max {max} median {median}");
+    }
+}

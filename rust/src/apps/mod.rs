@@ -1,0 +1,86 @@
+//! The paper's two evaluated applications (Table 1) plus generic synthetic
+//! workloads for ablations.
+//!
+//! Each application provides:
+//!  * **native compute** — a pure-rust implementation of the actual kernel
+//!    (used by the native runtime and for PJRT cross-checks);
+//!  * **a cost model** — per-task virtual execution times for the
+//!    discrete-event simulator, preserving the paper's variability classes
+//!    (PSIA: low variability; Mandelbrot: high variability, derived from the
+//!    *real* per-pixel escape counts).
+
+pub mod mandelbrot;
+pub mod psia;
+pub mod workload;
+
+pub use mandelbrot::MandelbrotApp;
+pub use psia::PsiaApp;
+pub use workload::{CostModel, Workload};
+
+
+/// Application selector (Table 1 row "Applications").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AppKind {
+    /// PSIA — low variability among iterations, N = 20,000.
+    Psia,
+    /// Mandelbrot — high variability among iterations, N = 262,144.
+    Mandelbrot,
+    /// Synthetic uniform-cost workload (ablations).
+    Uniform,
+    /// Synthetic exponential-cost workload (ablations).
+    Exponential,
+}
+
+impl AppKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AppKind::Psia => "PSIA",
+            AppKind::Mandelbrot => "Mandelbrot",
+            AppKind::Uniform => "Uniform",
+            AppKind::Exponential => "Exponential",
+        }
+    }
+
+    /// The paper's N for this application.
+    pub fn default_tasks(self) -> usize {
+        match self {
+            AppKind::Psia => 20_000,
+            AppKind::Mandelbrot => 262_144,
+            AppKind::Uniform | AppKind::Exponential => 65_536,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AppKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "psia" => Some(AppKind::Psia),
+            "mandelbrot" | "mandel" => Some(AppKind::Mandelbrot),
+            "uniform" => Some(AppKind::Uniform),
+            "exponential" | "exp" => Some(AppKind::Exponential),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for AppKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(AppKind::parse("PSIA"), Some(AppKind::Psia));
+        assert_eq!(AppKind::parse("mandelbrot"), Some(AppKind::Mandelbrot));
+        assert_eq!(AppKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn paper_task_counts() {
+        assert_eq!(AppKind::Psia.default_tasks(), 20_000);
+        assert_eq!(AppKind::Mandelbrot.default_tasks(), 262_144);
+    }
+}

@@ -1,0 +1,198 @@
+//! Native PSIA (parallel spin-image algorithm) — semantics identical to the
+//! Pallas kernel in `python/compile/kernels/spin_image.py`.
+//!
+//! One task == one *oriented point*: its 2-D spin-image descriptor is the
+//! bilinear histogram of the whole cloud in (α, β) cylinder coordinates
+//! around the point's normal.  The cloud is synthetic (deterministic PRNG) —
+//! the paper's PSIA inputs are meshes we don't have; what matters for rDLB
+//! is the per-task compute shape (low variability), which is preserved
+//! because every task touches the identical number of points.
+
+
+use crate::util::Rng;
+
+/// PSIA parameters; defaults equal the AOT artifact's.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PsiaParams {
+    pub n_points: usize,
+    pub img_size: usize,
+    pub bin_size: f32,
+}
+
+impl Default for PsiaParams {
+    fn default() -> Self {
+        PsiaParams { n_points: 2048, img_size: 32, bin_size: 0.1 }
+    }
+}
+
+impl PsiaParams {
+    pub fn half_extent(&self) -> f32 {
+        0.5 * self.img_size as f32 * self.bin_size
+    }
+}
+
+/// The PSIA application: a point cloud + normals and the descriptor kernel.
+#[derive(Debug, Clone)]
+pub struct PsiaApp {
+    pub params: PsiaParams,
+    /// Flattened [n_points × 3] positions.
+    pub points: Vec<f32>,
+    /// Flattened [n_points × 3] unit normals.
+    pub normals: Vec<f32>,
+    n_tasks: usize,
+}
+
+impl PsiaApp {
+    /// Deterministic synthetic cloud; `n_tasks` oriented points are the loop
+    /// iterations (task ids index into the cloud modulo `n_points`).
+    pub fn synthetic(n_tasks: usize) -> Self {
+        Self::synthetic_with(PsiaParams::default(), n_tasks, 0x5917)
+    }
+
+    pub fn synthetic_with(params: PsiaParams, n_tasks: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let n = params.n_points;
+        let mut points = Vec::with_capacity(3 * n);
+        let mut normals = Vec::with_capacity(3 * n);
+        for _ in 0..n {
+            for _ in 0..3 {
+                points.push(rng.uniform(-1.0, 1.0) as f32);
+            }
+            let (a, b, c) = (rng.normal_std(), rng.normal_std(), rng.normal_std());
+            let norm = (a * a + b * b + c * c).sqrt().max(1e-9);
+            normals.push((a / norm) as f32);
+            normals.push((b / norm) as f32);
+            normals.push((c / norm) as f32);
+        }
+        PsiaApp { params, points, normals, n_tasks }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    /// Map a loop-iteration id onto an oriented-point id in the cloud.
+    #[inline]
+    pub fn oriented_point(&self, task: u32) -> i32 {
+        (task as usize % self.params.n_points) as i32
+    }
+
+    /// Spin image for one oriented point (f32, same formulation as the
+    /// Pallas kernel's bilinear factorization). Negative oid ⇒ zeros.
+    pub fn spin_image(&self, oid: i32) -> Vec<f32> {
+        let size = self.params.img_size;
+        let mut img = vec![0f32; size * size];
+        if oid < 0 {
+            return img;
+        }
+        let o = oid as usize;
+        let p = [self.points[3 * o], self.points[3 * o + 1], self.points[3 * o + 2]];
+        let n = [self.normals[3 * o], self.normals[3 * o + 1], self.normals[3 * o + 2]];
+        let inv_bin = 1.0 / self.params.bin_size;
+        let half = self.params.half_extent();
+        for q in 0..self.params.n_points {
+            let d = [
+                self.points[3 * q] - p[0],
+                self.points[3 * q + 1] - p[1],
+                self.points[3 * q + 2] - p[2],
+            ];
+            let beta = d[0] * n[0] + d[1] * n[1] + d[2] * n[2];
+            let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+            let alpha = (r2 - beta * beta).max(0.0).sqrt();
+            let i_f = (half - beta) * inv_bin;
+            let j_f = alpha * inv_bin;
+            let i0 = i_f.floor();
+            let j0 = j_f.floor();
+            let u = i_f - i0;
+            let v = j_f - j0;
+            let (i0, j0) = (i0 as i64, j0 as i64);
+            for (di, wu) in [(0i64, 1.0 - u), (1, u)] {
+                for (dj, wv) in [(0i64, 1.0 - v), (1, v)] {
+                    let (ii, jj) = (i0 + di, j0 + dj);
+                    if ii >= 0 && (ii as usize) < size && jj >= 0 && (jj as usize) < size {
+                        img[ii as usize * size + jj as usize] += wu * wv;
+                    }
+                }
+            }
+        }
+        img
+    }
+
+    /// Compute a chunk of tasks; returns one flattened image per task.
+    pub fn compute_chunk(&self, tasks: &[u32]) -> Vec<Vec<f32>> {
+        tasks.iter().map(|&t| self.spin_image(self.oriented_point(t))).collect()
+    }
+
+    /// Scalar digest of one image (used as the "result" for integrity checks).
+    pub fn image_mass(img: &[f32]) -> f64 {
+        img.iter().map(|&x| x as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> PsiaApp {
+        PsiaApp::synthetic_with(PsiaParams { n_points: 128, img_size: 16, bin_size: 0.25 }, 256, 7)
+    }
+
+    #[test]
+    fn deterministic_cloud() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.normals, b.normals);
+    }
+
+    #[test]
+    fn normals_are_unit() {
+        let app = small();
+        for q in 0..app.params.n_points {
+            let n = &app.normals[3 * q..3 * q + 3];
+            let len2 = n[0] * n[0] + n[1] * n[1] + n[2] * n[2];
+            assert!((len2 - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mass_bounded_by_cloud() {
+        let app = small();
+        for oid in [0, 7, 127] {
+            let img = app.spin_image(oid);
+            let mass = PsiaApp::image_mass(&img);
+            assert!(mass > 0.0 && mass <= app.params.n_points as f64 + 1e-3, "mass {mass}");
+        }
+    }
+
+    #[test]
+    fn self_point_lands_center_left() {
+        let app = small();
+        let img = app.spin_image(3);
+        let size = app.params.img_size;
+        assert!(img[(size / 2) * size] > 0.0, "self-point bin empty");
+    }
+
+    #[test]
+    fn negative_oid_zero_image() {
+        let app = small();
+        assert!(app.spin_image(-1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn task_ids_wrap_modulo_cloud() {
+        let app = small();
+        assert_eq!(app.oriented_point(0), app.oriented_point(128));
+        let a = app.compute_chunk(&[5]);
+        let b = app.compute_chunk(&[133]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn images_nonnegative() {
+        let app = small();
+        for img in app.compute_chunk(&[1, 2, 3]) {
+            assert!(img.iter().all(|&x| x >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Cost models: per-task virtual execution times for the simulator.
+
+use super::{mandelbrot::MandelbrotApp, psia::PsiaApp, AppKind};
+use crate::util::{Rng, Summary};
+
+/// Per-task costs (seconds on an unperturbed PE at speed 1.0).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    costs: Vec<f64>,
+}
+
+impl CostModel {
+    pub fn from_costs(costs: Vec<f64>) -> Self {
+        assert!(!costs.is_empty(), "empty cost model");
+        assert!(costs.iter().all(|c| *c >= 0.0 && c.is_finite()), "invalid cost");
+        CostModel { costs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.costs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.costs.is_empty()
+    }
+
+    #[inline]
+    pub fn cost(&self, task: usize) -> f64 {
+        self.costs[task]
+    }
+
+    /// Total serial time Σ tᵢ.
+    pub fn total(&self) -> f64 {
+        self.costs.iter().sum()
+    }
+
+    /// Sum of costs for a set of task ids.
+    pub fn chunk_cost(&self, tasks: &[u32]) -> f64 {
+        tasks.iter().map(|&t| self.costs[t as usize]).sum()
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.costs)
+    }
+}
+
+/// A fully-specified simulator workload: identity + costs.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub app: AppKind,
+    pub model: CostModel,
+}
+
+impl Workload {
+    /// Build the workload for `app` with `n` tasks.
+    ///
+    /// * PSIA: tᵢ ~ N(μ, (0.03 μ)²) — the paper's "low variability" class.
+    /// * Mandelbrot: tᵢ ∝ (escape countᵢ + c₀) from the *actual* kernel on
+    ///   the artifact region — authentic heavy-tail variability.
+    /// * Uniform / Exponential: synthetic ablation classes.
+    ///
+    /// `mean_cost` sets the target mean per-task time in seconds.
+    pub fn build(app: AppKind, n: usize, mean_cost: f64, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed ^ 0xAB1E);
+        let costs = match app {
+            AppKind::Psia => {
+                let sigma = 0.03 * mean_cost;
+                (0..n).map(|_| rng.normal(mean_cost, sigma).max(mean_cost * 0.1)).collect()
+            }
+            AppKind::Mandelbrot => {
+                let counts = mandelbrot_counts_cached(n);
+                // Baseline cost c0 covers per-pixel setup; iterations dominate.
+                let c0 = 1.0;
+                let raw: Vec<f64> = counts.iter().map(|&c| c as f64 + c0).collect();
+                let mean_raw = raw.iter().sum::<f64>() / raw.len() as f64;
+                let k = mean_cost / mean_raw;
+                raw.into_iter().map(|r| r * k).collect()
+            }
+            AppKind::Uniform => (0..n).map(|_| rng.uniform(0.5 * mean_cost, 1.5 * mean_cost)).collect(),
+            AppKind::Exponential => (0..n).map(|_| rng.exponential(1.0 / mean_cost)).collect(),
+        };
+        Workload { app, model: CostModel::from_costs(costs) }
+    }
+
+    /// PSIA-shaped helper with the paper's defaults.
+    pub fn psia(seed: u64) -> Workload {
+        Workload::build(AppKind::Psia, AppKind::Psia.default_tasks(), 25e-3, seed)
+    }
+
+    /// Mandelbrot-shaped helper with the paper's defaults.
+    pub fn mandelbrot(seed: u64) -> Workload {
+        Workload::build(AppKind::Mandelbrot, AppKind::Mandelbrot.default_tasks(), 2e-3, seed)
+    }
+
+    pub fn n(&self) -> usize {
+        self.model.len()
+    }
+}
+
+/// Convenience: per-app mean/σ profile used to parameterize FSC.
+pub fn profile(app: AppKind, n: usize, mean_cost: f64, seed: u64) -> (f64, f64) {
+    // Small-sample probe is enough for h/σ parameters.
+    let probe_n = n.min(4096);
+    let w = Workload::build(app, probe_n, mean_cost, seed);
+    let s = w.model.summary();
+    (s.mean, s.std)
+}
+
+/// PSIA application object (native compute) for a given task count.
+pub fn psia_app(n_tasks: usize) -> PsiaApp {
+    PsiaApp::synthetic(n_tasks)
+}
+
+/// Per-pixel escape counts for the paper region, memoized by task count.
+/// The counts are deterministic (no seed dependence), and a 20-replication
+/// factorial experiment would otherwise recompute the full 512×512×500
+/// kernel thousands of times.
+fn mandelbrot_counts_cached(n: usize) -> std::sync::Arc<Vec<u32>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Vec<u32>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(hit) = cache.lock().unwrap().get(&n) {
+        return hit.clone();
+    }
+    let counts = Arc::new(MandelbrotApp::paper_scaled(n).compute_all());
+    cache.lock().unwrap().insert(n, counts.clone());
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn psia_low_variability() {
+        let w = Workload::build(AppKind::Psia, 5000, 25e-3, 1);
+        let s = w.model.summary();
+        assert!((s.mean - 25e-3).abs() / 25e-3 < 0.02, "mean {}", s.mean);
+        assert!(s.cov() < 0.05, "cov {}", s.cov());
+    }
+
+    #[test]
+    fn mandelbrot_high_variability() {
+        let w = Workload::build(AppKind::Mandelbrot, 16_384, 2e-3, 1);
+        let s = w.model.summary();
+        assert!(s.cov() > 0.5, "Mandelbrot must be heavy-tailed, cov {}", s.cov());
+        assert!((s.mean - 2e-3).abs() / 2e-3 < 0.05);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Workload::build(AppKind::Exponential, 100, 1e-3, 7);
+        let b = Workload::build(AppKind::Exponential, 100, 1e-3, 7);
+        for i in 0..100 {
+            assert_eq!(a.model.cost(i), b.model.cost(i));
+        }
+    }
+
+    #[test]
+    fn chunk_cost_adds_up() {
+        let w = Workload::build(AppKind::Uniform, 10, 1.0, 3);
+        let all: Vec<u32> = (0..10).collect();
+        assert!((w.model.chunk_cost(&all) - w.model.total()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn rejects_empty() {
+        CostModel::from_costs(vec![]);
+    }
+}

@@ -1,0 +1,458 @@
+//! Experiment configuration — every factor of the paper's Table 1, loadable
+//! from JSON (in-tree substrate) and buildable in code, convertible into
+//! simulator or native runtime parameterizations.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::apps::{AppKind, Workload};
+use crate::dls::{Technique, TechniqueParams};
+use crate::sim::{FailurePlan, PerturbationModel, SimCluster, Topology};
+use crate::util::json::Json;
+
+/// Execution scenario (Table 1 rows "Failures" / "Perturbations").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scenario {
+    /// No failures or perturbations.
+    Baseline,
+    /// `count` fail-stop failures at seeded-arbitrary times (1, P/2, P−1 in
+    /// the paper).
+    Failures { count: usize },
+    /// CPU burner on one node (all its PEs run at `factor` speed).
+    PePerturb { node: usize, factor: f64 },
+    /// +`delay` seconds on all comms of one node (paper: 10 s).
+    LatencyPerturb { node: usize, delay: f64 },
+    /// PE + latency on the same node.
+    Combined { node: usize, factor: f64, delay: f64 },
+}
+
+impl Scenario {
+    pub fn failures(count: usize) -> Self {
+        Scenario::Failures { count }
+    }
+
+    /// Paper defaults: perturb the last node (never the master's node 0),
+    /// half-speed burner, 10 s latency.
+    pub fn pe_perturb_default(topo: &Topology) -> Self {
+        Scenario::PePerturb { node: topo.nodes - 1, factor: 0.5 }
+    }
+
+    pub fn latency_default(topo: &Topology) -> Self {
+        Scenario::LatencyPerturb { node: topo.nodes - 1, delay: 10.0 }
+    }
+
+    pub fn combined_default(topo: &Topology) -> Self {
+        Scenario::Combined { node: topo.nodes - 1, factor: 0.5, delay: 10.0 }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Scenario::Baseline => "baseline".into(),
+            Scenario::Failures { count } => format!("{count}-failures"),
+            Scenario::PePerturb { .. } => "pe-perturb".into(),
+            Scenario::LatencyPerturb { .. } => "latency-perturb".into(),
+            Scenario::Combined { .. } => "combined-perturb".into(),
+        }
+    }
+
+    pub fn is_failure(&self) -> bool {
+        matches!(self, Scenario::Failures { .. })
+    }
+}
+
+/// One fully-specified experiment cell.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub app: AppKind,
+    /// Loop iterations N; `None` ⇒ the paper's default for `app`.
+    pub tasks: Option<usize>,
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    pub technique: Technique,
+    pub rdlb: bool,
+    pub scenario: Scenario,
+    /// Mean per-task cost fed to the cost model (seconds).
+    pub mean_cost: f64,
+    /// Master scheduling overhead h (seconds per assignment).
+    pub sched_overhead: f64,
+    /// Base one-way message latency (seconds).
+    pub base_latency: f64,
+    pub seed: u64,
+    /// Replications for aggregated experiments (paper uses 20).
+    pub replications: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            app: AppKind::Mandelbrot,
+            tasks: None,
+            nodes: 16,
+            ranks_per_node: 16,
+            technique: Technique::Fac,
+            rdlb: true,
+            scenario: Scenario::Baseline,
+            mean_cost: 2e-3,
+            sched_overhead: 5e-6,
+            base_latency: 2e-5,
+            seed: 1,
+            replications: 1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn builder() -> ExperimentConfigBuilder {
+        ExperimentConfigBuilder::default()
+    }
+
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.nodes, self.ranks_per_node)
+    }
+
+    pub fn pes(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    pub fn n(&self) -> usize {
+        self.tasks.unwrap_or_else(|| self.app.default_tasks())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.nodes > 0 && self.ranks_per_node > 0, "empty topology");
+        ensure!(self.n() > 0, "no tasks");
+        ensure!(self.mean_cost > 0.0, "mean_cost must be positive");
+        if let Scenario::Failures { count } = self.scenario {
+            ensure!(count <= self.pes() - 1, "at most P-1 failures (got {count} for P={})", self.pes());
+        }
+        if let Scenario::PePerturb { node, factor } = self.scenario {
+            ensure!(node < self.nodes, "perturbed node out of range");
+            ensure!(factor > 0.0 && factor <= 1.0, "slowdown factor must be in (0,1]");
+        }
+        Ok(())
+    }
+
+    /// Build the workload (deterministic in `seed`).
+    pub fn workload(&self) -> Workload {
+        Workload::build(self.app, self.n(), self.mean_cost, self.seed)
+    }
+
+    /// Expected failure-free makespan (for failure-time horizons).
+    pub fn estimated_makespan(&self, workload: &Workload) -> f64 {
+        workload.model.total() / self.pes() as f64
+    }
+
+    /// Materialize simulator parameters for replication `rep`.
+    pub fn sim_params(&self, rep: usize) -> Result<crate::sim::SimParams> {
+        self.validate()?;
+        let seed = self.seed.wrapping_add(rep as u64 * 0x9E37);
+        let workload = Workload::build(self.app, self.n(), self.mean_cost, seed);
+        let topo = self.topology();
+        let p = topo.total_pes();
+        let horizon = self.estimated_makespan(&workload).max(1e-6);
+
+        let failures = match self.scenario {
+            Scenario::Failures { count } => FailurePlan::random(p, count, horizon, seed ^ 0xF417),
+            _ => FailurePlan::none(p),
+        };
+        let perturbations = match self.scenario {
+            Scenario::PePerturb { node, factor } => PerturbationModel::pe_slowdown(node, factor),
+            Scenario::LatencyPerturb { node, delay } => PerturbationModel::latency(node, delay),
+            Scenario::Combined { node, factor, delay } => PerturbationModel::combined(node, factor, delay),
+            _ => PerturbationModel::none(),
+        };
+
+        let mut params = crate::sim::SimParams::new(workload, topo, self.technique, self.rdlb);
+        params.failures = failures;
+        params.perturbations = perturbations;
+        params.sched_overhead = self.sched_overhead;
+        params.base_latency = self.base_latency;
+        params.tech_params = TechniqueParams {
+            overhead_h: self.sched_overhead,
+            seed: seed ^ 0x4A4D,
+            ..TechniqueParams::default()
+        };
+        Ok(params)
+    }
+
+    /// Parse from a JSON config file (in-tree JSON substrate; missing keys
+    /// fall back to defaults, so partial configs are valid).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("invalid experiment config JSON")?;
+        let d = ExperimentConfig::default();
+        let get_usize = |key: &str, dft: usize| v.get(key).and_then(Json::as_usize).unwrap_or(dft);
+        let get_f64 = |key: &str, dft: f64| v.get(key).and_then(Json::as_f64).unwrap_or(dft);
+        let cfg = ExperimentConfig {
+            app: match v.get("app").and_then(Json::as_str) {
+                Some(s) => AppKind::parse(s).with_context(|| format!("unknown app {s:?}"))?,
+                None => d.app,
+            },
+            tasks: v.get("tasks").and_then(Json::as_usize),
+            nodes: get_usize("nodes", d.nodes),
+            ranks_per_node: get_usize("ranks_per_node", d.ranks_per_node),
+            technique: match v.get("technique").and_then(Json::as_str) {
+                Some(s) => Technique::parse(s).with_context(|| format!("unknown technique {s:?}"))?,
+                None => d.technique,
+            },
+            rdlb: v.get("rdlb").and_then(Json::as_bool).unwrap_or(d.rdlb),
+            scenario: match v.get("scenario") {
+                Some(s) => Scenario::from_json(s)?,
+                None => d.scenario,
+            },
+            mean_cost: get_f64("mean_cost", d.mean_cost),
+            sched_overhead: get_f64("sched_overhead", d.sched_overhead),
+            base_latency: get_f64("base_latency", d.base_latency),
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
+            replications: get_usize("replications", d.replications),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut obj = vec![
+            ("app", Json::str(self.app.name().to_ascii_lowercase())),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("ranks_per_node", Json::num(self.ranks_per_node as f64)),
+            ("technique", Json::str(self.technique.name())),
+            ("rdlb", Json::Bool(self.rdlb)),
+            ("scenario", self.scenario.to_json()),
+            ("mean_cost", Json::num(self.mean_cost)),
+            ("sched_overhead", Json::num(self.sched_overhead)),
+            ("base_latency", Json::num(self.base_latency)),
+            ("seed", Json::num(self.seed as f64)),
+            ("replications", Json::num(self.replications as f64)),
+        ];
+        if let Some(n) = self.tasks {
+            obj.push(("tasks", Json::num(n as f64)));
+        }
+        Json::obj(obj).to_string_pretty()
+    }
+}
+
+impl Scenario {
+    /// JSON form: `{"kind": "...", ...fields}`.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            Scenario::Baseline => Json::obj(vec![("kind", Json::str("baseline"))]),
+            Scenario::Failures { count } => Json::obj(vec![
+                ("kind", Json::str("failures")),
+                ("count", Json::num(count as f64)),
+            ]),
+            Scenario::PePerturb { node, factor } => Json::obj(vec![
+                ("kind", Json::str("pe_perturb")),
+                ("node", Json::num(node as f64)),
+                ("factor", Json::num(factor)),
+            ]),
+            Scenario::LatencyPerturb { node, delay } => Json::obj(vec![
+                ("kind", Json::str("latency_perturb")),
+                ("node", Json::num(node as f64)),
+                ("delay", Json::num(delay)),
+            ]),
+            Scenario::Combined { node, factor, delay } => Json::obj(vec![
+                ("kind", Json::str("combined")),
+                ("node", Json::num(node as f64)),
+                ("factor", Json::num(factor)),
+                ("delay", Json::num(delay)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        let kind = v.req("kind")?.as_str().context("scenario kind")?;
+        Ok(match kind {
+            "baseline" => Scenario::Baseline,
+            "failures" => Scenario::Failures {
+                count: v.req("count")?.as_usize().context("count")?,
+            },
+            "pe_perturb" => Scenario::PePerturb {
+                node: v.req("node")?.as_usize().context("node")?,
+                factor: v.req("factor")?.as_f64().context("factor")?,
+            },
+            "latency_perturb" => Scenario::LatencyPerturb {
+                node: v.req("node")?.as_usize().context("node")?,
+                delay: v.req("delay")?.as_f64().context("delay")?,
+            },
+            "combined" => Scenario::Combined {
+                node: v.req("node")?.as_usize().context("node")?,
+                factor: v.req("factor")?.as_f64().context("factor")?,
+                delay: v.req("delay")?.as_f64().context("delay")?,
+            },
+            other => anyhow::bail!("unknown scenario kind {other:?}"),
+        })
+    }
+}
+
+impl SimCluster {
+    /// Build a simulated cluster from an experiment configuration
+    /// (replication 0; use [`ExperimentConfig::sim_params`] for others).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<SimCluster> {
+        SimCluster::new(cfg.sim_params(0)?)
+    }
+}
+
+/// Builder (the `prelude` workflow).
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentConfigBuilder {
+    cfg: Option<ExperimentConfig>,
+}
+
+impl ExperimentConfigBuilder {
+    fn get(&mut self) -> &mut ExperimentConfig {
+        self.cfg.get_or_insert_with(ExperimentConfig::default)
+    }
+
+    pub fn app(mut self, app: AppKind) -> Self {
+        self.get().app = app;
+        self
+    }
+
+    pub fn tasks(mut self, n: usize) -> Self {
+        self.get().tasks = Some(n);
+        self
+    }
+
+    /// Shorthand: single-row topology with `p` PEs (`p` ranks on 1 node)
+    /// unless `p` is a multiple of 16, in which case the paper's 16-rank
+    /// nodes are used.
+    pub fn pes(mut self, p: usize) -> Self {
+        let c = self.get();
+        if p % 16 == 0 && p >= 32 {
+            c.nodes = p / 16;
+            c.ranks_per_node = 16;
+        } else {
+            c.nodes = 1;
+            c.ranks_per_node = p;
+        }
+        self
+    }
+
+    pub fn topology(mut self, nodes: usize, ranks_per_node: usize) -> Self {
+        let c = self.get();
+        c.nodes = nodes;
+        c.ranks_per_node = ranks_per_node;
+        self
+    }
+
+    pub fn technique(mut self, t: Technique) -> Self {
+        self.get().technique = t;
+        self
+    }
+
+    pub fn rdlb(mut self, on: bool) -> Self {
+        self.get().rdlb = on;
+        self
+    }
+
+    pub fn scenario(mut self, s: Scenario) -> Self {
+        self.get().scenario = s;
+        self
+    }
+
+    pub fn mean_cost(mut self, c: f64) -> Self {
+        self.get().mean_cost = c;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.get().seed = s;
+        self
+    }
+
+    pub fn replications(mut self, r: usize) -> Self {
+        self.get().replications = r.max(1);
+        self
+    }
+
+    pub fn overheads(mut self, sched: f64, latency: f64) -> Self {
+        let c = self.get();
+        c.sched_overhead = sched;
+        c.base_latency = latency;
+        self
+    }
+
+    pub fn build(mut self) -> Result<ExperimentConfig> {
+        let cfg = self.get().clone();
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let cfg = ExperimentConfig::builder().build().unwrap();
+        assert_eq!(cfg.pes(), 256);
+        assert_eq!(cfg.n(), 262_144);
+    }
+
+    #[test]
+    fn pes_shorthand() {
+        let cfg = ExperimentConfig::builder().pes(256).build().unwrap();
+        assert_eq!(cfg.nodes, 16);
+        assert_eq!(cfg.ranks_per_node, 16);
+        let small = ExperimentConfig::builder().pes(7).build().unwrap();
+        assert_eq!(small.nodes, 1);
+        assert_eq!(small.ranks_per_node, 7);
+    }
+
+    #[test]
+    fn validation_rejects_p_failures() {
+        let cfg = ExperimentConfig::builder()
+            .pes(4)
+            .scenario(Scenario::failures(4))
+            .build();
+        assert!(cfg.is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ExperimentConfig::builder()
+            .app(AppKind::Psia)
+            .technique(Technique::AwfB)
+            .tasks(5000)
+            .scenario(Scenario::LatencyPerturb { node: 15, delay: 10.0 })
+            .build()
+            .unwrap();
+        let text = cfg.to_json();
+        let back = ExperimentConfig::from_json(&text).unwrap();
+        assert_eq!(back.app, AppKind::Psia);
+        assert_eq!(back.technique, Technique::AwfB);
+        assert_eq!(back.scenario, cfg.scenario);
+        assert_eq!(back.tasks, Some(5000));
+    }
+
+    #[test]
+    fn json_partial_config_uses_defaults() {
+        let cfg = ExperimentConfig::from_json(r#"{"technique": "SS"}"#).unwrap();
+        assert_eq!(cfg.technique, Technique::Ss);
+        assert_eq!(cfg.pes(), 256);
+    }
+
+    #[test]
+    fn sim_params_materialize() {
+        let cfg = ExperimentConfig::builder()
+            .app(AppKind::Uniform)
+            .tasks(1000)
+            .pes(8)
+            .scenario(Scenario::failures(4))
+            .build()
+            .unwrap();
+        let p = cfg.sim_params(0).unwrap();
+        assert_eq!(p.failures.count(), 4);
+        assert_eq!(p.workload.n(), 1000);
+        // Different replications draw different failure times.
+        let p1 = cfg.sim_params(1).unwrap();
+        let t0: Vec<_> = (0..8).filter_map(|r| p.failures.time_of(r)).collect();
+        let t1: Vec<_> = (0..8).filter_map(|r| p1.failures.time_of(r)).collect();
+        assert_ne!(t0, t1);
+    }
+
+    #[test]
+    fn scenario_labels() {
+        assert_eq!(Scenario::Baseline.label(), "baseline");
+        assert_eq!(Scenario::failures(128).label(), "128-failures");
+    }
+}

@@ -1,0 +1,51 @@
+//! Chunk assignments exchanged between master and workers.
+
+/// Monotonically increasing id per assignment (for tracing and for matching
+/// results to in-flight chunks in the runtimes).
+pub type AssignmentId = u64;
+
+/// One chunk of work handed to a worker.
+///
+/// Primary-phase chunks are contiguous index ranges; rDLB re-dispatch chunks
+/// may be arbitrary id sets (holes where other PEs already finished), so the
+/// general representation is an explicit id list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    pub id: AssignmentId,
+    pub worker: usize,
+    /// Loop-iteration ids, ascending.
+    pub tasks: Vec<u32>,
+    /// True when this chunk was issued by the rDLB re-dispatch loop (i.e.
+    /// after all iterations were already Scheduled at least once).
+    pub rescheduled: bool,
+}
+
+impl Assignment {
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Contiguous? (primary chunks always are; used by the PJRT runtime to
+    /// choose the cheap fill path for input literals)
+    pub fn is_contiguous(&self) -> bool {
+        self.tasks.windows(2).all(|w| w[1] == w[0] + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguity() {
+        let a = Assignment { id: 0, worker: 1, tasks: vec![4, 5, 6], rescheduled: false };
+        assert!(a.is_contiguous());
+        let b = Assignment { id: 1, worker: 1, tasks: vec![4, 6, 7], rescheduled: true };
+        assert!(!b.is_contiguous());
+        assert_eq!(b.len(), 3);
+    }
+}

@@ -1,0 +1,527 @@
+//! The master state machine: DLS4LB's self-scheduling loop extended with the
+//! rDLB re-dispatch phase (§3, Algorithm 1).
+//!
+//! Protocol (mirrors the MPI library):
+//!  * worker → master: *request* (first request, or piggy-backed on a result)
+//!  * master → worker: [`Reply::Assign`] with a chunk, [`Reply::Wait`] when
+//!    nothing can be given right now, or [`Reply::Terminate`] once every
+//!    iteration is Finished (the paper then calls `MPI_Abort`).
+//!
+//! The rDLB phase: once all iterations are *Scheduled*, requests are served
+//! from a rotating pool of Scheduled-but-unfinished iterations, oldest first,
+//! never handing a worker an iteration it already holds.  Rescheduling rides
+//! on tail idle time, so it adds no overhead to a healthy execution; a
+//! duplicated completion is simply ignored ([`TaskTable::finish`] is
+//! idempotent) and the run terminates as soon as either copy reports.
+
+use std::collections::{HashSet, VecDeque};
+
+use super::assignment::{Assignment, AssignmentId};
+use super::stats::MasterStats;
+use super::task_table::{TaskFlag, TaskTable};
+use crate::dls::{ChunkCalculator, ChunkFeedback, SchedCtx, Technique, TechniqueParams};
+
+/// Master construction parameters.
+#[derive(Debug, Clone)]
+pub struct MasterConfig {
+    /// Total loop iterations N.
+    pub n: usize,
+    /// Number of PEs P (the master computes too, as PE 0).
+    pub p: usize,
+    pub technique: Technique,
+    pub params: TechniqueParams,
+    /// Enable the rDLB re-dispatch phase.
+    pub rdlb: bool,
+}
+
+/// Master's answer to a work request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reply {
+    Assign(Assignment),
+    /// No work assignable to this worker right now; wait for termination or
+    /// for the pool to change. (Without rDLB this is the state in which a
+    /// failure hangs the application forever.)
+    Wait,
+    /// Every iteration is Finished — abort/exit immediately.
+    Terminate,
+}
+
+/// Book-keeping for one in-flight assignment.
+#[derive(Debug, Clone)]
+struct InFlight {
+    tasks: Vec<u32>,
+    assigned_at: f64,
+    rescheduled: bool,
+}
+
+/// The rDLB master. Pure state machine: drive it with `on_request` /
+/// `on_result`; it never blocks, sleeps, or reads clocks.
+///
+/// Hot-path data structures (see EXPERIMENTS.md §Perf):
+///  * `in_flight` is a slab indexed by the sequential assignment id — no
+///    hashing on the request path;
+///  * holder tracking is a per-task `first_holder` tag plus a small overflow
+///    set that only rDLB duplicates touch — the primary phase does a single
+///    array store per task instead of a `HashSet` insert.
+pub struct Master {
+    cfg: MasterConfig,
+    table: TaskTable,
+    calc: Box<dyn ChunkCalculator>,
+    chunk_index: usize,
+    next_id: AssignmentId,
+    /// Slab: `in_flight[id]` for sequential ids (None once completed).
+    in_flight: Vec<Option<InFlight>>,
+    /// First worker currently holding each task (`NO_HOLDER` = none).
+    first_holder: Vec<u32>,
+    /// Additional (task, worker) holds beyond the first — rDLB duplicates
+    /// only, so this stays tiny.
+    extra_holds: HashSet<(u32, u32)>,
+    /// Rotating rDLB pool of Scheduled-unfinished ids (lazy deletion).
+    redispatch: VecDeque<u32>,
+    stats: MasterStats,
+}
+
+const NO_HOLDER: u32 = u32::MAX;
+
+impl Master {
+    pub fn new(cfg: MasterConfig) -> Self {
+        assert!(cfg.p > 0, "need at least one PE");
+        let calc = cfg.technique.calculator(cfg.n, cfg.p, &cfg.params);
+        Master {
+            table: TaskTable::new(cfg.n),
+            calc,
+            chunk_index: 0,
+            next_id: 0,
+            in_flight: Vec::new(),
+            first_holder: vec![NO_HOLDER; cfg.n],
+            extra_holds: HashSet::new(),
+            redispatch: VecDeque::new(),
+            stats: MasterStats::default(),
+            cfg,
+        }
+    }
+
+    /// Does `worker` currently hold `task`?
+    #[inline]
+    fn holds(&self, worker: usize, task: u32) -> bool {
+        self.first_holder[task as usize] == worker as u32
+            || (!self.extra_holds.is_empty() && self.extra_holds.contains(&(task, worker as u32)))
+    }
+
+    /// Record that `worker` now holds `task`.
+    #[inline]
+    fn hold(&mut self, worker: usize, task: u32) {
+        let slot = &mut self.first_holder[task as usize];
+        if *slot == NO_HOLDER {
+            *slot = worker as u32;
+        } else if *slot != worker as u32 {
+            self.extra_holds.insert((task, worker as u32));
+        }
+    }
+
+    /// Record that `worker` released `task`.
+    #[inline]
+    fn release(&mut self, worker: usize, task: u32) {
+        let slot = &mut self.first_holder[task as usize];
+        if *slot == worker as u32 {
+            *slot = NO_HOLDER;
+        } else if !self.extra_holds.is_empty() {
+            self.extra_holds.remove(&(task, worker as u32));
+        }
+    }
+
+    pub fn config(&self) -> &MasterConfig {
+        &self.cfg
+    }
+
+    pub fn table(&self) -> &TaskTable {
+        &self.table
+    }
+
+    pub fn stats(&self) -> &MasterStats {
+        &self.stats
+    }
+
+    /// True once every iteration is Finished.
+    pub fn is_complete(&self) -> bool {
+        self.table.all_finished()
+    }
+
+    /// Serve a work request from `worker` at master-clock `now`.
+    pub fn on_request(&mut self, worker: usize, now: f64) -> Reply {
+        assert!(worker < self.cfg.p, "worker {worker} out of range");
+        self.stats.requests += 1;
+        if self.table.all_finished() {
+            return Reply::Terminate;
+        }
+
+        // Primary phase: carve Unscheduled iterations with the DLS rule.
+        let remaining = self.table.unscheduled_count();
+        if remaining > 0 {
+            let ctx = SchedCtx {
+                n: self.cfg.n,
+                p: self.cfg.p,
+                remaining,
+                worker,
+                chunk_index: self.chunk_index,
+                now,
+            };
+            let size = self.calc.next_chunk(&ctx).clamp(1, remaining);
+            let tasks = self.table.schedule_next(size);
+            debug_assert_eq!(tasks.len(), size);
+            return Reply::Assign(self.issue(worker, tasks, false, now));
+        }
+
+        // rDLB phase: everything Scheduled; re-dispatch unfinished work.
+        if !self.cfg.rdlb {
+            return Reply::Wait;
+        }
+        let tasks = self.pick_redispatch(worker, now);
+        if tasks.is_empty() {
+            return Reply::Wait;
+        }
+        Reply::Assign(self.issue(worker, tasks, true, now))
+    }
+
+    /// A worker reports the completion of `assignment_id`.
+    ///
+    /// `compute_time` is the worker-side chunk execution time. Unknown ids
+    /// are tolerated (a duplicate of a chunk whose original owner's result
+    /// already arrived after a re-dispatch race) and counted in the stats.
+    ///
+    /// Returns the positions *within the assignment's task list* whose
+    /// completion was the first one (runtimes use this to attribute exactly
+    /// one result value per iteration — duplicates must never contribute).
+    pub fn on_result(
+        &mut self,
+        worker: usize,
+        assignment_id: AssignmentId,
+        compute_time: f64,
+        now: f64,
+    ) -> Vec<usize> {
+        let inflight = match self.in_flight.get_mut(assignment_id as usize).and_then(Option::take) {
+            Some(x) => x,
+            None => {
+                self.stats.unknown_results += 1;
+                return Vec::new();
+            }
+        };
+        let mut newly_positions = Vec::with_capacity(inflight.tasks.len());
+        for (pos, &t) in inflight.tasks.iter().enumerate() {
+            self.release(worker, t);
+            if self.table.flag(t as usize) != TaskFlag::Finished {
+                self.table.finish(t as usize);
+                newly_positions.push(pos);
+            } else {
+                self.stats.duplicate_iterations += 1;
+            }
+        }
+        let newly = newly_positions.len();
+        self.stats.completed_chunks += 1;
+        self.stats.finished_iterations += newly as u64;
+        if inflight.rescheduled {
+            self.stats.rescheduled_completions += 1;
+        }
+
+        // Adaptive-technique feedback: overhead is everything between
+        // assignment and result arrival that was not compute.
+        let elapsed = (now - inflight.assigned_at).max(0.0);
+        let overhead = (elapsed - compute_time).max(0.0);
+        self.calc.feedback(&ChunkFeedback {
+            worker,
+            chunk_size: inflight.tasks.len(),
+            compute_time: compute_time.max(0.0),
+            sched_overhead: overhead,
+            now,
+            batch_done: false,
+        });
+        newly_positions
+    }
+
+    /// Register a chunk and hand it out.
+    fn issue(&mut self, worker: usize, tasks: Vec<u32>, rescheduled: bool, now: f64) -> Assignment {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.chunk_index += 1;
+        self.stats.assigned_chunks += 1;
+        self.stats.assigned_iterations += tasks.len() as u64;
+        if rescheduled {
+            self.stats.rescheduled_chunks += 1;
+            self.stats.rescheduled_iterations += tasks.len() as u64;
+        }
+        for &t in &tasks {
+            self.hold(worker, t);
+        }
+        debug_assert_eq!(self.in_flight.len(), id as usize);
+        self.in_flight.push(Some(InFlight { tasks: tasks.clone(), assigned_at: now, rescheduled }));
+        Assignment { id, worker, tasks, rescheduled }
+    }
+
+    /// Pick the next rDLB chunk for `worker`: oldest Scheduled-unfinished
+    /// iterations it does not already hold, sized by the technique's rule
+    /// evaluated over the pending pool.
+    fn pick_redispatch(&mut self, worker: usize, now: f64) -> Vec<u32> {
+        let pending = self.table.scheduled_count();
+        if pending == 0 {
+            return Vec::new();
+        }
+        // Rebuild the rotating pool if it has gone empty (lazy deletion may
+        // exhaust it while unfinished work still exists).
+        if self.redispatch.is_empty() {
+            self.redispatch = VecDeque::from(self.table.scheduled_unfinished());
+        }
+        let ctx = SchedCtx {
+            n: self.cfg.n,
+            p: self.cfg.p,
+            remaining: pending,
+            worker,
+            chunk_index: self.chunk_index,
+            now,
+        };
+        let size = self.calc.next_chunk(&ctx).clamp(1, pending);
+
+        let mut picked = Vec::with_capacity(size);
+        let mut rotated = 0usize;
+        let budget = self.redispatch.len();
+        while picked.len() < size && rotated < budget {
+            let Some(t) = self.redispatch.pop_front() else { break };
+            rotated += 1;
+            match self.table.flag(t as usize) {
+                TaskFlag::Finished => continue, // lazy deletion
+                _ if self.holds(worker, t) => {
+                    // Still pending but this worker already holds it; keep it
+                    // available for others.
+                    self.redispatch.push_back(t);
+                }
+                _ => {
+                    picked.push(t);
+                    // Remains unfinished: rotate to the back so the *next*
+                    // idle PE duplicates a different iteration first.
+                    self.redispatch.push_back(t);
+                }
+            }
+        }
+        picked.sort_unstable();
+        picked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn master(n: usize, p: usize, technique: Technique, rdlb: bool) -> Master {
+        Master::new(MasterConfig { n, p, technique, params: TechniqueParams::default(), rdlb })
+    }
+
+    fn assign(m: &mut Master, w: usize, now: f64) -> Assignment {
+        match m.on_request(w, now) {
+            Reply::Assign(a) => a,
+            other => panic!("expected Assign, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn happy_path_ss_completes() {
+        let mut m = master(6, 2, Technique::Ss, false);
+        let mut t = 0.0;
+        while !m.is_complete() {
+            for w in 0..2 {
+                match m.on_request(w, t) {
+                    Reply::Assign(a) => {
+                        m.on_result(w, a.id, 0.1, t + 0.1);
+                    }
+                    Reply::Wait => {}
+                    Reply::Terminate => break,
+                }
+            }
+            t += 1.0;
+        }
+        assert!(m.is_complete());
+        assert_eq!(m.stats().finished_iterations, 6);
+        assert_eq!(m.stats().duplicate_iterations, 0);
+    }
+
+    #[test]
+    fn terminate_after_completion() {
+        let mut m = master(2, 1, Technique::Ss, false);
+        let a = assign(&mut m, 0, 0.0);
+        m.on_result(0, a.id, 0.1, 0.1);
+        let b = assign(&mut m, 0, 0.2);
+        m.on_result(0, b.id, 0.1, 0.3);
+        assert_eq!(m.on_request(0, 0.4), Reply::Terminate);
+    }
+
+    #[test]
+    fn wait_without_rdlb_when_all_scheduled() {
+        // One worker grabs everything, fails silently; the other worker gets
+        // Wait forever — the paper's hang case (Fig. 1b).
+        let mut m = master(8, 2, Technique::Gss, false);
+        let _lost = assign(&mut m, 0, 0.0); // GSS: ⌈8/2⌉ = 4
+        let _lost2 = assign(&mut m, 0, 0.0); // 2
+        let _lost3 = assign(&mut m, 0, 0.0); // 1
+        let _lost4 = assign(&mut m, 0, 0.0); // 1 → all scheduled
+        assert_eq!(m.on_request(1, 1.0), Reply::Wait);
+        assert!(!m.is_complete());
+    }
+
+    #[test]
+    fn rdlb_reschedules_lost_chunk() {
+        // Fig. 1c: worker 0 takes tasks and fails; with rDLB worker 1 gets
+        // the scheduled-unfinished iterations and the run completes.
+        let mut m = master(4, 2, Technique::Gss, true);
+        let lost = assign(&mut m, 0, 0.0); // tasks 0,1
+        assert_eq!(lost.tasks, vec![0, 1]);
+        let a = assign(&mut m, 1, 0.0); // tasks 2
+        m.on_result(1, a.id, 0.1, 0.1);
+        let b = assign(&mut m, 1, 0.2); // task 3 → all scheduled
+        m.on_result(1, b.id, 0.1, 0.3);
+        // Worker 0 never reports. Worker 1 now receives re-dispatched work.
+        let mut guard = 0;
+        while !m.is_complete() {
+            match m.on_request(1, 1.0) {
+                Reply::Assign(a) => {
+                    assert!(a.rescheduled);
+                    for &t in &a.tasks {
+                        assert!(lost.tasks.contains(&t));
+                    }
+                    m.on_result(1, a.id, 0.1, 1.1);
+                }
+                Reply::Terminate => break,
+                Reply::Wait => panic!("rDLB must not Wait while work is pending"),
+            }
+            guard += 1;
+            assert!(guard < 10);
+        }
+        assert!(m.is_complete());
+        assert!(m.stats().rescheduled_chunks > 0);
+    }
+
+    #[test]
+    fn duplicate_completion_is_ignored() {
+        let mut m = master(2, 2, Technique::Gss, true);
+        let a0 = assign(&mut m, 0, 0.0); // task 0
+        let a1 = assign(&mut m, 1, 0.0); // task 1
+        m.on_result(1, a1.id, 0.1, 0.1);
+        // Worker 1 idle → rDLB duplicates task 0.
+        let dup = assign(&mut m, 1, 0.2);
+        assert_eq!(dup.tasks, a0.tasks);
+        assert!(dup.rescheduled);
+        // Original completes first, duplicate second.
+        m.on_result(0, a0.id, 0.5, 0.5);
+        assert!(m.is_complete());
+        m.on_result(1, dup.id, 0.4, 0.6);
+        assert_eq!(m.stats().duplicate_iterations, 1);
+        assert_eq!(m.stats().finished_iterations, 2);
+    }
+
+    #[test]
+    fn never_reassign_to_current_holder() {
+        let mut m = master(2, 2, Technique::Gss, true);
+        let a0 = assign(&mut m, 0, 0.0); // task 0
+        let _a1 = assign(&mut m, 1, 0.0); // task 1 → all scheduled
+        // Worker 0 still holds task 0; its next request may only duplicate 1.
+        match m.on_request(0, 0.1) {
+            Reply::Assign(a) => assert_eq!(a.tasks, vec![1]),
+            other => panic!("{other:?}"),
+        }
+        // Worker 0 now holds both pending tasks: nothing left for it.
+        assert_eq!(m.on_request(0, 0.2), Reply::Wait);
+        m.on_result(0, a0.id, 0.1, 0.3);
+        assert!(!m.is_complete());
+    }
+
+    #[test]
+    fn redispatch_rotates_across_workers() {
+        // 3 lost tasks, 2 idle workers with SS: they should duplicate
+        // *different* tasks first.
+        let mut m = master(3, 3, Technique::Ss, true);
+        let _l0 = assign(&mut m, 0, 0.0);
+        let _l1 = assign(&mut m, 0, 0.0);
+        let _l2 = assign(&mut m, 0, 0.0);
+        let r1 = assign(&mut m, 1, 1.0);
+        let r2 = assign(&mut m, 2, 1.0);
+        assert_ne!(r1.tasks, r2.tasks, "idle PEs must duplicate distinct tasks");
+    }
+
+    #[test]
+    fn unknown_result_tolerated() {
+        let mut m = master(2, 1, Technique::Ss, true);
+        m.on_result(0, 999, 0.1, 0.1);
+        assert_eq!(m.stats().unknown_results, 1);
+    }
+
+    #[test]
+    fn p_minus_1_failures_work_serialized_on_master() {
+        // All workers but PE 0 fail before their first request: PE 0 alone
+        // must finish all N iterations (the paper's P−1 scenario).
+        let n = 40;
+        let mut m = master(n, 4, Technique::Fac, true);
+        let mut t = 0.0;
+        let mut guard = 0;
+        loop {
+            match m.on_request(0, t) {
+                Reply::Assign(a) => {
+                    m.on_result(0, a.id, 0.01 * a.len() as f64, t + 0.01 * a.len() as f64);
+                }
+                Reply::Terminate => break,
+                Reply::Wait => panic!("single live PE must never Wait under rDLB"),
+            }
+            t += 1.0;
+            guard += 1;
+            assert!(guard < 10 * n, "did not terminate");
+        }
+        assert!(m.is_complete());
+        assert_eq!(m.stats().finished_iterations as usize, n);
+    }
+
+    #[test]
+    fn conservation_under_random_failures() {
+        // Random subset of workers fail mid-run; with rDLB everything still
+        // finishes and no task is double-counted.
+        let n = 200;
+        let p = 8;
+        for seed in 0..5u64 {
+            let mut rng = crate::util::Rng::new(seed);
+            let mut m = master(n, p, Technique::Fac, true);
+            let dead: Vec<bool> = (0..p).map(|_| rng.next_f64() < 0.4).collect();
+            let live_exists = dead.iter().any(|d| !d);
+            let mut t = 0.0;
+            let mut guard = 0;
+            'outer: loop {
+                let mut all_term = true;
+                for w in 0..p {
+                    if dead[w] && t > 2.0 {
+                        continue; // failed after t=2
+                    }
+                    match m.on_request(w, t) {
+                        Reply::Assign(a) => {
+                            all_term = false;
+                            if !(dead[w] && t > 1.0) {
+                                m.on_result(w, a.id, 0.05, t + 0.05);
+                            } // else: chunk lost
+                        }
+                        Reply::Wait => all_term = false,
+                        Reply::Terminate => {}
+                    }
+                    if m.is_complete() {
+                        break 'outer;
+                    }
+                }
+                if all_term {
+                    break;
+                }
+                t += 1.0;
+                guard += 1;
+                if !live_exists {
+                    break;
+                }
+                assert!(guard < 100_000, "seed {seed}: stuck");
+            }
+            if live_exists {
+                assert!(m.is_complete(), "seed {seed}");
+                assert_eq!(m.table().finished_count(), n);
+            }
+        }
+    }
+}

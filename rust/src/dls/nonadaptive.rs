@@ -1,0 +1,457 @@
+//! Nonadaptive DLS techniques: STATIC, SS, FSC, mFSC, GSS, TSS, FAC, WF, RAND.
+//!
+//! Formulas follow the primary sources cited in the paper §2.1:
+//! Kruskal & Weiss 1985 (FSC), Polychronopoulos & Kuck 1987 (GSS), Tzen & Ni
+//! 1993 (TSS), Flynn Hummel et al. 1992 (FAC) / 1996 (WF), Ciorba et al.
+//! 2018 (RAND), Banicescu et al. 2013 (mFSC).  FAC and WF are the
+//! *practical* variants the paper uses: no a-priori (μ, σ), each batch is
+//! half the remaining iterations split over P requests.
+
+use super::ctx::SchedCtx;
+use super::{clamp_chunk, ChunkCalculator, Technique, TechniqueParams};
+use crate::util::Rng;
+
+/// STATIC block scheduling: every PE receives one block of ⌈N/P⌉ iterations
+/// (served on request under the master–worker model).
+#[derive(Debug, Clone)]
+pub struct StaticSched {
+    block: usize,
+}
+
+impl StaticSched {
+    pub fn new(n: usize, p: usize) -> Self {
+        StaticSched { block: n.div_ceil(p.max(1)) }
+    }
+}
+
+impl ChunkCalculator for StaticSched {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        clamp_chunk(self.block, ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Static
+    }
+}
+
+/// SS — pure self-scheduling: one iteration per request (max balance, max
+/// overhead; one extreme of the spectrum).
+#[derive(Debug, Clone, Copy)]
+pub struct SelfSched;
+
+impl ChunkCalculator for SelfSched {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        clamp_chunk(1, ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Ss
+    }
+}
+
+/// FSC — fixed-size chunking with the Kruskal–Weiss optimum:
+/// `k_opt = (√2 · N · h / (σ · P · √(ln P)))^(2/3)`.
+#[derive(Debug, Clone)]
+pub struct Fsc {
+    chunk: usize,
+}
+
+impl Fsc {
+    pub fn new(n: usize, p: usize, params: &TechniqueParams) -> Self {
+        let p = p.max(2) as f64;
+        let sigma = params.mu * 1e-6 + params.sigma; // guard σ == 0
+        let k = (std::f64::consts::SQRT_2 * n as f64 * params.overhead_h
+            / (sigma * p * p.ln().sqrt()))
+        .powf(2.0 / 3.0);
+        Fsc { chunk: (k.round() as usize).max(1) }
+    }
+
+    /// The fixed chunk size this instance uses.
+    pub fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+}
+
+impl ChunkCalculator for Fsc {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        clamp_chunk(self.chunk, ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Fsc
+    }
+}
+
+/// Number of chunks practical FAC (FAC2) produces for (n, p) — used by mFSC.
+pub(crate) fn fac_chunk_count(n: usize, p: usize) -> usize {
+    let mut r = n;
+    let mut count = 0;
+    while r > 0 {
+        let chunk = r.div_ceil(2 * p).max(1);
+        // One batch: p chunks of `chunk` (the final batch may be short).
+        for _ in 0..p {
+            if r == 0 {
+                break;
+            }
+            r -= chunk.min(r);
+            count += 1;
+        }
+    }
+    count
+}
+
+/// mFSC — fixed chunk sized so the total number of chunks matches FAC's,
+/// relieving the user from supplying h and σ (Banicescu et al. 2013).
+#[derive(Debug, Clone)]
+pub struct MFsc {
+    chunk: usize,
+}
+
+impl MFsc {
+    pub fn new(n: usize, p: usize) -> Self {
+        let chunks = fac_chunk_count(n, p).max(1);
+        MFsc { chunk: n.div_ceil(chunks).max(1) }
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+}
+
+impl ChunkCalculator for MFsc {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        clamp_chunk(self.chunk, ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::MFsc
+    }
+}
+
+/// GSS — guided self-scheduling: chunk = ⌈R/P⌉.
+#[derive(Debug, Clone, Copy)]
+pub struct Gss;
+
+impl ChunkCalculator for Gss {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        clamp_chunk(ctx.remaining.div_ceil(ctx.p.max(1)), ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Gss
+    }
+}
+
+/// TSS — trapezoid self-scheduling: chunks decrease *linearly* from
+/// f = ⌈N/2P⌉ to l = 1 over C = ⌈2N/(f+l)⌉ chunks (δ = (f−l)/(C−1)).
+#[derive(Debug, Clone)]
+pub struct Tss {
+    next: f64,
+    delta: f64,
+    last: f64,
+}
+
+impl Tss {
+    pub fn new(n: usize, p: usize) -> Self {
+        let f = (n as f64 / (2.0 * p.max(1) as f64)).ceil().max(1.0);
+        let l = 1.0;
+        let c = ((2.0 * n as f64) / (f + l)).ceil().max(2.0);
+        let delta = (f - l) / (c - 1.0);
+        Tss { next: f, delta, last: l }
+    }
+}
+
+impl ChunkCalculator for Tss {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        let size = self.next.round().max(self.last) as usize;
+        self.next = (self.next - self.delta).max(self.last);
+        clamp_chunk(size, ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Tss
+    }
+}
+
+/// FAC — practical factoring (FAC2): each batch is half the remaining work,
+/// split into P equal chunks; chunk size is held constant within a batch.
+#[derive(Debug, Clone)]
+pub struct Fac {
+    batch_left: usize,
+    chunk: usize,
+}
+
+impl Fac {
+    pub fn new() -> Self {
+        Fac { batch_left: 0, chunk: 0 }
+    }
+
+    /// True when the *next* request will open a new batch (used by the master
+    /// to tag batch boundaries for AWF-B/D-style accounting).
+    pub fn at_batch_boundary(&self) -> bool {
+        self.batch_left == 0
+    }
+}
+
+impl Default for Fac {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChunkCalculator for Fac {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        if self.batch_left == 0 {
+            self.chunk = ctx.remaining.div_ceil(2 * ctx.p.max(1)).max(1);
+            self.batch_left = ctx.p.max(1);
+        }
+        self.batch_left -= 1;
+        clamp_chunk(self.chunk, ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Fac
+    }
+}
+
+/// WF — weighted factoring: FAC batches, chunks proportional to fixed
+/// per-PE weights (Flynn Hummel et al. 1996).
+#[derive(Debug, Clone)]
+pub struct Wf {
+    /// Normalized so that Σw == P (uniform == all-1).
+    weights: Vec<f64>,
+    batch_left: usize,
+    batch_chunk: f64,
+}
+
+impl Wf {
+    pub fn new(p: usize, raw_weights: &[f64]) -> Self {
+        Wf { weights: normalize_weights(p, raw_weights), batch_left: 0, batch_chunk: 0.0 }
+    }
+}
+
+pub(crate) fn normalize_weights(p: usize, raw: &[f64]) -> Vec<f64> {
+    if raw.is_empty() {
+        return vec![1.0; p];
+    }
+    assert_eq!(raw.len(), p, "weights length must equal P");
+    let sum: f64 = raw.iter().sum();
+    assert!(sum > 0.0, "weights must sum positive");
+    raw.iter().map(|w| w * p as f64 / sum).collect()
+}
+
+impl ChunkCalculator for Wf {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        if self.batch_left == 0 {
+            // Per-PE share of the batch at weight 1.0.
+            self.batch_chunk = (ctx.remaining as f64 / (2.0 * ctx.p.max(1) as f64)).max(1.0);
+            self.batch_left = ctx.p.max(1);
+        }
+        self.batch_left -= 1;
+        let w = self.weights.get(ctx.worker).copied().unwrap_or(1.0);
+        clamp_chunk((self.batch_chunk * w).ceil() as usize, ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Wf
+    }
+}
+
+/// RAND — uniformly random chunk in `[N/(100P), N/(2P)]` (Ciorba et al. 2018).
+#[derive(Debug)]
+pub struct Rand {
+    lo: u64,
+    hi: u64,
+    rng: Rng,
+}
+
+impl Rand {
+    pub fn new(n: usize, p: usize, seed: u64) -> Self {
+        let lo = ((n / (100 * p.max(1))) as u64).max(1);
+        let hi = ((n / (2 * p.max(1))) as u64).max(lo);
+        Rand { lo, hi, rng: Rng::new(seed) }
+    }
+}
+
+impl ChunkCalculator for Rand {
+    fn next_chunk(&mut self, ctx: &SchedCtx) -> usize {
+        clamp_chunk(self.rng.gen_range(self.lo, self.hi) as usize, ctx.remaining)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Rand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(n: usize, p: usize, remaining: usize, worker: usize) -> SchedCtx {
+        SchedCtx { n, p, remaining, worker, chunk_index: 0, now: 0.0 }
+    }
+
+    /// Drain a calculator to exhaustion, returning the chunk sequence.
+    fn drain(calc: &mut dyn ChunkCalculator, n: usize, p: usize) -> Vec<usize> {
+        let mut remaining = n;
+        let mut out = Vec::new();
+        let mut w = 0;
+        while remaining > 0 {
+            let c = calc.next_chunk(&ctx(n, p, remaining, w));
+            assert!((1..=remaining).contains(&c), "chunk {c} remaining {remaining}");
+            out.push(c);
+            remaining -= c;
+            w = (w + 1) % p;
+            assert!(out.len() <= n, "non-terminating schedule");
+        }
+        out
+    }
+
+    #[test]
+    fn ss_all_ones() {
+        let seq = drain(&mut SelfSched, 100, 4);
+        assert_eq!(seq, vec![1; 100]);
+    }
+
+    #[test]
+    fn static_blocks() {
+        let mut s = StaticSched::new(1000, 8);
+        let seq = drain(&mut s, 1000, 8);
+        assert_eq!(seq, vec![125; 8]);
+    }
+
+    #[test]
+    fn static_uneven() {
+        let mut s = StaticSched::new(10, 4);
+        let seq = drain(&mut s, 10, 4);
+        // ⌈10/4⌉ = 3,3,3 then 1 remaining.
+        assert_eq!(seq, vec![3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn gss_halving_pattern() {
+        let seq = drain(&mut Gss, 1000, 4);
+        // First chunk is ⌈1000/4⌉ = 250, strictly non-increasing, ends at 1.
+        assert_eq!(seq[0], 250);
+        assert!(seq.windows(2).all(|w| w[1] <= w[0]));
+        assert_eq!(*seq.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn tss_linear_decrease() {
+        let mut t = Tss::new(1000, 4);
+        let seq = drain(&mut t, 1000, 4);
+        // f = 125; decrements are ~constant (linear), unlike GSS's geometric.
+        assert_eq!(seq[0], 125);
+        assert!(seq.windows(2).all(|w| w[1] <= w[0]));
+        let diffs: Vec<i64> = seq.windows(2).map(|w| w[0] as i64 - w[1] as i64).collect();
+        let interior = &diffs[..diffs.len().saturating_sub(2)];
+        assert!(
+            interior.iter().all(|&d| (d - interior[0]).abs() <= 1),
+            "not linear: {diffs:?}"
+        );
+    }
+
+    #[test]
+    fn fac_batched_halving() {
+        let mut f = Fac::new();
+        let seq = drain(&mut f, 1024, 4);
+        // Batch 1: 4 chunks of ⌈1024/8⌉ = 128; batch 2: 4 × 64; ...
+        assert_eq!(&seq[..4], &[128; 4]);
+        assert_eq!(&seq[4..8], &[64; 4]);
+        assert_eq!(&seq[8..12], &[32; 4]);
+        assert_eq!(seq.iter().sum::<usize>(), 1024);
+    }
+
+    #[test]
+    fn fac_chunk_count_matches_drain() {
+        for (n, p) in [(1000usize, 4usize), (262_144, 256), (17, 3), (1, 1)] {
+            let mut f = Fac::new();
+            let seq = drain(&mut f, n, p);
+            assert_eq!(seq.len(), fac_chunk_count(n, p), "n={n} p={p}");
+        }
+    }
+
+    #[test]
+    fn mfsc_chunk_count_close_to_fac() {
+        let n = 20_000;
+        let p = 16;
+        let mut m = MFsc::new(n, p);
+        let seq = drain(&mut m, n, p);
+        let fac_chunks = fac_chunk_count(n, p);
+        let ratio = seq.len() as f64 / fac_chunks as f64;
+        assert!((0.5..=1.5).contains(&ratio), "mFSC {} vs FAC {fac_chunks}", seq.len());
+    }
+
+    #[test]
+    fn wf_respects_weights() {
+        // Worker 1 twice the weight of worker 0 ⇒ first-batch chunks 2:1.
+        let mut wf = Wf::new(2, &[1.0, 2.0]);
+        let c0 = wf.next_chunk(&ctx(1200, 2, 1200, 0));
+        let c1 = wf.next_chunk(&ctx(1200, 2, 1200 - c0, 1));
+        assert!((c1 as f64 / c0 as f64 - 2.0).abs() < 0.1, "c0={c0} c1={c1}");
+    }
+
+    #[test]
+    fn wf_uniform_equals_fac() {
+        let mut wf = Wf::new(4, &[]);
+        let mut fac = Fac::new();
+        let a = drain(&mut wf, 1024, 4);
+        let b = drain(&mut fac, 1024, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights length")]
+    fn wf_rejects_bad_weight_len() {
+        Wf::new(4, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn fsc_fixed_and_positive() {
+        let params = TechniqueParams { overhead_h: 1e-4, mu: 1e-3, sigma: 2e-4, ..Default::default() };
+        let mut f = Fsc::new(262_144, 256, &params);
+        let k = f.chunk_size();
+        assert!(k >= 1);
+        let a = f.next_chunk(&ctx(262_144, 256, 262_144, 0));
+        let b = f.next_chunk(&ctx(262_144, 256, 200_000, 5));
+        assert_eq!(a, k);
+        assert_eq!(b, k);
+    }
+
+    #[test]
+    fn rand_within_paper_bounds() {
+        let n = 262_144;
+        let p = 256;
+        let mut r = Rand::new(n, p, 99);
+        let (lo, hi) = (n / (100 * p), n / (2 * p));
+        for _ in 0..1000 {
+            let c = r.next_chunk(&ctx(n, p, n, 0));
+            assert!(c >= lo.max(1) && c <= hi, "{c} outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn rand_deterministic_by_seed() {
+        let mut a = Rand::new(10_000, 8, 42);
+        let mut b = Rand::new(10_000, 8, 42);
+        for _ in 0..50 {
+            assert_eq!(
+                a.next_chunk(&ctx(10_000, 8, 10_000, 0)),
+                b.next_chunk(&ctx(10_000, 8, 10_000, 0))
+            );
+        }
+    }
+
+    #[test]
+    fn all_schedules_conserve_iterations() {
+        let n = 5000;
+        let p = 7;
+        let params = TechniqueParams::default();
+        for t in Technique::ALL {
+            let mut c = t.calculator(n, p, &params);
+            let seq = drain(c.as_mut(), n, p);
+            assert_eq!(seq.iter().sum::<usize>(), n, "{t} lost iterations");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment drivers: every table and figure of the paper's evaluation
+//! (§4) regenerated from the simulator + robustness metrics.
+
+mod figures;
+mod report;
+mod runner;
+
+pub use figures::{
+    conceptual_trace, fig3_failures, fig3_perturbations, fig4_resilience, fig5_flexibility,
+    table1_summary, theory_validation, ConceptualScenario, FigureData, PerturbCell, RobustnessTable,
+};
+pub use report::{cells_to_csv, cells_to_markdown, perturb_to_csv, robustness_to_csv};
+pub use runner::{run_cell, CellResult, Scale};

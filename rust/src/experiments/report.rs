@@ -1,0 +1,136 @@
+//! CSV / markdown rendering of experiment results.
+
+use super::figures::{PerturbCell, RobustnessTable};
+use super::runner::CellResult;
+
+fn fmt_time(t: f64) -> String {
+    if t.is_infinite() { "inf".into() } else { format!("{t:.6}") }
+}
+
+/// Cells → CSV (one row per cell).
+pub fn cells_to_csv(cells: &[CellResult]) -> String {
+    let mut s = String::from(
+        "app,technique,rdlb,scenario,mean_time,std_time,hung_fraction,mean_waste,mean_rescheduled,reps\n",
+    );
+    for c in cells {
+        use std::fmt::Write;
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{:.6},{:.3},{:.4},{:.1},{}",
+            c.app,
+            c.technique,
+            c.rdlb,
+            c.scenario,
+            fmt_time(c.mean_time),
+            c.std_time,
+            c.hung_fraction,
+            c.mean_waste,
+            c.mean_rescheduled,
+            c.reps
+        );
+    }
+    s
+}
+
+/// Cells → markdown table grouped the way the paper plots them.
+pub fn cells_to_markdown(title: &str, cells: &[CellResult]) -> String {
+    let mut s = format!("### {title}\n\n");
+    s.push_str("| technique | scenario | rDLB | T_par mean (s) | std | hung | waste |\n");
+    s.push_str("|---|---|---|---:|---:|---:|---:|\n");
+    for c in cells {
+        use std::fmt::Write;
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {:.4} | {:.0}% | {:.2}% |",
+            c.technique,
+            c.scenario,
+            if c.rdlb { "on" } else { "off" },
+            fmt_time(c.mean_time),
+            c.std_time,
+            c.hung_fraction * 100.0,
+            c.mean_waste * 100.0,
+        );
+    }
+    s
+}
+
+/// Perturbation pairs → CSV with the rDLB speedup column (the paper's
+/// "up to 7×" claim is `without/with`).
+pub fn perturb_to_csv(cells: &[PerturbCell]) -> String {
+    let mut s = String::from("technique,scenario,t_without_rdlb,t_with_rdlb,speedup\n");
+    for c in cells {
+        use std::fmt::Write;
+        let tw = c.without_rdlb.time_or_inf();
+        let tr = c.with_rdlb.time_or_inf();
+        let speedup = if tr > 0.0 && tw.is_finite() { tw / tr } else { f64::INFINITY };
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{:.3}",
+            c.technique,
+            c.scenario,
+            fmt_time(tw),
+            fmt_time(tr),
+            speedup
+        );
+    }
+    s
+}
+
+/// Robustness tables → CSV.
+pub fn robustness_to_csv(tables: &[RobustnessTable]) -> String {
+    let mut s = String::from("scenario,technique,radius,rho\n");
+    for t in tables {
+        for r in &t.rows {
+            use std::fmt::Write;
+            let _ = writeln!(
+                s,
+                "{},{},{},{}",
+                t.scenario,
+                r.technique,
+                fmt_time(r.radius),
+                if r.rho.is_infinite() { "inf".into() } else { format!("{:.3}", r.rho) }
+            );
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(t: &str, s: &str, time: f64) -> CellResult {
+        CellResult {
+            app: "Uniform".into(),
+            technique: t.into(),
+            rdlb: true,
+            scenario: s.into(),
+            mean_time: time,
+            std_time: 0.1,
+            hung_fraction: 0.0,
+            mean_waste: 0.01,
+            mean_rescheduled: 2.0,
+            reps: 3,
+        }
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = cells_to_csv(&[cell("SS", "baseline", 1.0), cell("FAC", "baseline", 0.8)]);
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("SS,true,baseline"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = cells_to_markdown("Fig 3a", &[cell("SS", "baseline", 1.0)]);
+        assert!(md.contains("### Fig 3a"));
+        assert!(md.contains("| SS |"));
+    }
+
+    #[test]
+    fn infinite_times_render() {
+        let csv = cells_to_csv(&[cell("STATIC", "1-failures", f64::INFINITY)]);
+        assert!(csv.contains("inf"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Replicated-cell execution: one Table 1 cell = (app, technique, rDLB,
+//! scenario) × `reps` replications, aggregated.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::sim::SimCluster;
+use crate::util::{par_map, Summary};
+
+/// Experiment scale preset.  The *paper* scale (256 PEs, full N, 20 reps)
+/// reproduces the published figures; `quick` keeps CI runtimes sane while
+/// preserving every qualitative shape (who wins, crossovers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scale {
+    pub pes: usize,
+    /// Override N (None = the paper's per-app default).
+    pub tasks: Option<usize>,
+    pub reps: usize,
+    /// Mean per-task cost in virtual seconds.
+    pub mean_cost: f64,
+    /// Worker threads for fanning out replications.
+    pub threads: usize,
+    /// Latency-perturbation delay (paper: 10 s on a minutes-long run; the
+    /// reduced scales shrink it with the makespan so the perturbed node
+    /// still participates — delay >= makespan just excludes the node).
+    pub latency_delay: f64,
+    /// PE-perturbation slowdown factor (CPU-burner equivalent).
+    pub pe_factor: f64,
+}
+
+impl Scale {
+    /// The paper's configuration: 256 PEs, full N, 20 replications, 10 s
+    /// latency delays.  `mean_cost` is chosen so the failure-free makespan
+    /// sits in the paper's tens-of-seconds regime — the 10 s delay must be
+    /// *severe but survivable* relative to the run, as on miniHPC (a delay
+    /// longer than the whole run would simply exclude the perturbed node).
+    pub fn paper() -> Scale {
+        Scale {
+            pes: 256,
+            tasks: None,
+            reps: 20,
+            mean_cost: 0.3,
+            threads: crate::util::default_threads(),
+            latency_delay: 10.0,
+            pe_factor: 0.5,
+        }
+    }
+
+    /// Reduced but shape-preserving (CI/bench default).
+    pub fn quick() -> Scale {
+        Scale {
+            pes: 64,
+            tasks: Some(16_384),
+            reps: 3,
+            mean_cost: 2e-3,
+            threads: crate::util::default_threads(),
+            latency_delay: 0.2,
+            pe_factor: 0.5,
+        }
+    }
+
+    /// Minimal smoke scale for unit tests.
+    pub fn smoke() -> Scale {
+        Scale {
+            pes: 16,
+            tasks: Some(2_000),
+            reps: 2,
+            mean_cost: 1e-3,
+            threads: 4,
+            latency_delay: 0.03,
+            pe_factor: 0.5,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "paper" => Some(Scale::paper()),
+            "quick" => Some(Scale::quick()),
+            "smoke" => Some(Scale::smoke()),
+            _ => None,
+        }
+    }
+
+    /// The cluster topology for this scale.  Always multi-node (≥ 4 nodes
+    /// when P allows) so that "perturb one node" scenarios perturb a strict
+    /// subset of the PEs, as on miniHPC.
+    pub fn topology(&self) -> crate::sim::Topology {
+        let p = self.pes;
+        if p % 16 == 0 && p >= 32 {
+            crate::sim::Topology::new(p / 16, 16)
+        } else if p % 4 == 0 && p >= 8 {
+            crate::sim::Topology::new(4, p / 4)
+        } else {
+            crate::sim::Topology::flat(p)
+        }
+    }
+
+    /// Apply this scale to a config.
+    pub fn apply(&self, mut cfg: ExperimentConfig) -> ExperimentConfig {
+        let topo = self.topology();
+        cfg.nodes = topo.nodes;
+        cfg.ranks_per_node = topo.ranks_per_node;
+        cfg.tasks = self.tasks.or(cfg.tasks);
+        cfg.replications = self.reps;
+        cfg.mean_cost = self.mean_cost;
+        cfg
+    }
+}
+
+/// Aggregated result of one experiment cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub app: String,
+    pub technique: String,
+    pub rdlb: bool,
+    pub scenario: String,
+    /// Mean T_par over completed replications (∞ if all hung).
+    pub mean_time: f64,
+    pub std_time: f64,
+    /// Fraction of replications that hung.
+    pub hung_fraction: f64,
+    /// Mean wasted-work fraction (duplicate compute / total compute).
+    pub mean_waste: f64,
+    /// Mean rescheduled chunks per run.
+    pub mean_rescheduled: f64,
+    pub reps: usize,
+}
+
+impl CellResult {
+    /// `mean_time` treating an all-hung cell as infinite.
+    pub fn time_or_inf(&self) -> f64 {
+        if self.hung_fraction >= 1.0 { f64::INFINITY } else { self.mean_time }
+    }
+}
+
+/// Run one cell: `cfg.replications` seeded replications in parallel.
+pub fn run_cell(cfg: &ExperimentConfig, threads: usize) -> Result<CellResult> {
+    cfg.validate()?;
+    let reps: Vec<usize> = (0..cfg.replications.max(1)).collect();
+    let outcomes = par_map(reps, threads, |rep| {
+        let params = cfg.sim_params(rep).expect("validated config");
+        SimCluster::new(params).expect("validated params").run().expect("sim run")
+    });
+
+    let times: Vec<f64> = outcomes.iter().filter(|o| !o.hung).map(|o| o.parallel_time).collect();
+    let hung = outcomes.iter().filter(|o| o.hung).count();
+    let s = Summary::of(&times);
+    Ok(CellResult {
+        app: cfg.app.name().to_string(),
+        technique: cfg.technique.name().to_string(),
+        rdlb: cfg.rdlb,
+        scenario: cfg.scenario.label(),
+        mean_time: if times.is_empty() { f64::INFINITY } else { s.mean },
+        std_time: s.std,
+        hung_fraction: hung as f64 / outcomes.len() as f64,
+        mean_waste: outcomes.iter().map(|o| o.waste_fraction()).sum::<f64>() / outcomes.len() as f64,
+        mean_rescheduled: outcomes.iter().map(|o| o.stats.rescheduled_chunks as f64).sum::<f64>()
+            / outcomes.len() as f64,
+        reps: outcomes.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppKind;
+    use crate::config::Scenario;
+    use crate::dls::Technique;
+
+    #[test]
+    fn cell_aggregates_replications() {
+        let cfg = Scale::smoke().apply(
+            ExperimentConfig::builder()
+                .app(AppKind::Uniform)
+                .technique(Technique::Fac)
+                .scenario(Scenario::Baseline)
+                .build()
+                .unwrap(),
+        );
+        let cell = run_cell(&cfg, 2).unwrap();
+        assert_eq!(cell.reps, 2);
+        assert_eq!(cell.hung_fraction, 0.0);
+        assert!(cell.mean_time.is_finite() && cell.mean_time > 0.0);
+    }
+
+    #[test]
+    fn hung_cell_reports_infinity() {
+        let mut cfg = Scale::smoke().apply(
+            ExperimentConfig::builder()
+                .app(AppKind::Uniform)
+                .technique(Technique::Fac)
+                .scenario(Scenario::failures(4))
+                .build()
+                .unwrap(),
+        );
+        cfg.rdlb = false;
+        let cell = run_cell(&cfg, 2).unwrap();
+        assert!(cell.hung_fraction > 0.0);
+        assert!(cell.time_or_inf().is_infinite() || cell.hung_fraction < 1.0);
+    }
+
+    #[test]
+    fn scale_presets_parse() {
+        assert_eq!(Scale::parse("paper").unwrap().pes, 256);
+        assert_eq!(Scale::parse("quick").unwrap().reps, 3);
+        assert!(Scale::parse("bogus").is_none());
+    }
+}

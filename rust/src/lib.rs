@@ -1,0 +1,70 @@
+//! # rDLB — robust dynamic load balancing for parallel independent tasks
+//!
+//! Reproduction of *"rDLB: A Novel Approach for Robust Dynamic Load Balancing
+//! of Scientific Applications with Parallel Independent Tasks"* (A. Mohammed,
+//! A. Cavelan, F. M. Ciorba — University of Basel, 2019).
+//!
+//! The paper extends dynamic loop self-scheduling (DLS) with a *proactive*
+//! robustness layer: task flags (`Unscheduled → Scheduled → Finished`),
+//! continued (re-)scheduling of Scheduled-but-unfinished tasks after the
+//! work queue drains, and immediate termination once every task is Finished.
+//! This tolerates up to `P−1` fail-stop PE failures and absorbs severe
+//! PE-availability / network-latency perturbations — with **no** failure or
+//! perturbation detection of any kind.
+//!
+//! ## Crate layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`dls`] | the 13 DLS chunk-size techniques of DLS4LB (+ RAND) |
+//! | [`coordinator`] | the paper's contribution: task-state table, master state machine, rDLB re-dispatch, termination |
+//! | [`apps`] | the two evaluated applications (Mandelbrot, PSIA): native compute + simulator cost models |
+//! | [`sim`] | discrete-event cluster simulator (the miniHPC substitute): topology, latency, failures, perturbations |
+//! | [`native`] | tokio master–worker runtime executing real chunks (PJRT or native rust) |
+//! | [`runtime`] | PJRT CPU client: loads `artifacts/*.hlo.txt` produced by the JAX/Pallas AOT path |
+//! | [`robustness`] | FePIA robustness metrics (resilience ρ_res, flexibility ρ_flex) |
+//! | [`analysis`] | §3.1 closed forms: E\[T\] under failures, overhead, checkpointing comparison |
+//! | [`experiments`] | drivers regenerating every table/figure of the paper |
+//! | [`config`] | TOML/CLI experiment configuration (Table 1 factors) |
+//! | [`trace`] | per-chunk execution traces (Gantt-style, Figures 1–2) |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rdlb::prelude::*;
+//!
+//! let cfg = ExperimentConfig::builder()
+//!     .app(AppKind::Mandelbrot)
+//!     .pes(256)
+//!     .technique(Technique::Fac)
+//!     .rdlb(true)
+//!     .scenario(Scenario::failures(128))
+//!     .build()
+//!     .unwrap();
+//! let outcome = SimCluster::from_config(&cfg).unwrap().run().unwrap();
+//! println!("T_par = {:.3}s", outcome.parallel_time);
+//! ```
+
+pub mod analysis;
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod dls;
+pub mod experiments;
+pub mod native;
+pub mod robustness;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Convenient re-exports for the common workflow.
+pub mod prelude {
+    pub use crate::apps::AppKind;
+    pub use crate::config::{ExperimentConfig, Scenario};
+    pub use crate::coordinator::{Master, Reply, TaskFlag};
+    pub use crate::dls::Technique;
+    pub use crate::native::NativeRuntime;
+    pub use crate::robustness::{flexibility, resilience};
+    pub use crate::sim::{Outcome, SimCluster};
+}

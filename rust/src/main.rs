@@ -1,0 +1,268 @@
+//! `rdlb` — CLI for the rDLB reproduction.
+//!
+//! ```text
+//! rdlb run        [--app A --technique T --pes P --tasks N --rdlb B --scenario S --seed K]
+//! rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1 [--scale smoke|quick|paper] [--out DIR]
+//! rdlb trace      [--scenario fig1|fig2] [--rdlb B]
+//! rdlb theory     [--reps R]
+//! rdlb native     [--app A --workers W --technique T --rdlb B --backend native|pjrt
+//!                  --artifacts DIR --failures F --tasks N]
+//! ```
+//!
+//! Scenario syntax for `run`: `baseline`, `failures:<count>`, `pe`,
+//! `latency`, `combined`.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use rdlb::apps::AppKind;
+use rdlb::config::{ExperimentConfig, Scenario};
+use rdlb::dls::Technique;
+use rdlb::experiments::{
+    cells_to_csv, conceptual_trace, fig3_failures, fig3_perturbations, fig4_resilience,
+    fig5_flexibility, perturb_to_csv, robustness_to_csv, table1_summary, theory_validation,
+    ConceptualScenario, Scale,
+};
+use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+use rdlb::runtime::ComputeService;
+use rdlb::sim::SimCluster;
+use rdlb::util::cli::Args;
+
+const USAGE: &str = "\
+rdlb — robust dynamic load balancing (Mohammed, Cavelan, Ciorba 2019) reproduction
+
+USAGE:
+  rdlb run        [--app mandelbrot|psia|uniform|exponential] [--technique SS|FAC|...]
+                  [--pes P] [--tasks N] [--rdlb true|false]
+                  [--scenario baseline|failures:<k>|pe|latency|combined] [--seed K]
+  rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1
+                  [--scale smoke|quick|paper] [--out DIR]
+  rdlb trace      [--scenario fig1|fig2] [--rdlb true|false]
+  rdlb theory     [--reps R]
+  rdlb native     [--app mandelbrot|psia] [--workers W] [--technique T]
+                  [--rdlb true|false] [--backend native|pjrt]
+                  [--artifacts DIR] [--failures F] [--tasks N]
+";
+
+fn parse_scenario(s: &str, pes: usize) -> Result<Scenario> {
+    let topo = if pes % 16 == 0 && pes >= 32 {
+        rdlb::sim::Topology::new(pes / 16, 16)
+    } else {
+        rdlb::sim::Topology::flat(pes)
+    };
+    Ok(match s.trim().to_ascii_lowercase().as_str() {
+        "baseline" => Scenario::Baseline,
+        "pe" => Scenario::pe_perturb_default(&topo),
+        "latency" => Scenario::latency_default(&topo),
+        "combined" => Scenario::combined_default(&topo),
+        other => {
+            if let Some(count) = other.strip_prefix("failures:") {
+                Scenario::failures(count.parse()?)
+            } else {
+                bail!("unknown scenario {other}")
+            }
+        }
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let app = AppKind::parse(&args.str_or("app", "mandelbrot"))
+        .ok_or_else(|| anyhow!("unknown app"))?;
+    let technique = Technique::parse(&args.str_or("technique", "FAC"))
+        .ok_or_else(|| anyhow!("unknown technique"))?;
+    let pes = args.usize_or("pes", 256)?;
+    let rdlb = args.bool_or("rdlb", true)?;
+    let scenario = parse_scenario(&args.str_or("scenario", "baseline"), pes)?;
+    let mut b = ExperimentConfig::builder()
+        .app(app)
+        .pes(pes)
+        .technique(technique)
+        .rdlb(rdlb)
+        .scenario(scenario)
+        .seed(args.u64_or("seed", 1)?);
+    if let Some(n) = args.usize_opt("tasks")? {
+        b = b.tasks(n);
+    }
+    let cfg = b.build()?;
+    let t0 = std::time::Instant::now();
+    let outcome = SimCluster::from_config(&cfg)?.run()?;
+    println!(
+        "app={} technique={} P={} N={} rdlb={} scenario={}",
+        app, technique, cfg.pes(), cfg.n(), rdlb, cfg.scenario.label()
+    );
+    if outcome.hung {
+        println!(
+            "RESULT: HUNG (finished {}/{} — the paper's 'waits indefinitely' case)",
+            outcome.finished, outcome.n
+        );
+    } else {
+        println!("RESULT: T_par = {:.4}s", outcome.parallel_time);
+    }
+    println!(
+        "chunks={} rescheduled={} duplicates={} waste={:.2}%  (wall {:?})",
+        outcome.stats.assigned_chunks,
+        outcome.stats.rescheduled_chunks,
+        outcome.stats.duplicate_iterations,
+        outcome.waste_fraction() * 100.0,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args.get("id").ok_or_else(|| anyhow!("--id required"))?.to_string();
+    let scale = Scale::parse(&args.str_or("scale", "quick"))
+        .ok_or_else(|| anyhow!("unknown scale (smoke|quick|paper)"))?;
+    let out = PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&out)?;
+    let write = |name: &str, data: &str| -> Result<()> {
+        let path = out.join(name);
+        std::fs::write(&path, data)?;
+        println!("wrote {}", path.display());
+        Ok(())
+    };
+    match id.as_str() {
+        "fig3a" | "fig3b" => {
+            let app = if id == "fig3a" { AppKind::Psia } else { AppKind::Mandelbrot };
+            let data = fig3_failures(app, &scale)?;
+            write(&format!("{id}.csv"), &cells_to_csv(&data.cells))?;
+        }
+        "fig3c" | "fig3d" => {
+            let app = if id == "fig3c" { AppKind::Psia } else { AppKind::Mandelbrot };
+            let cells = fig3_perturbations(app, &scale)?;
+            write(&format!("{id}.csv"), &perturb_to_csv(&cells))?;
+        }
+        "fig4" => {
+            for (app, tag) in [(AppKind::Psia, "psia"), (AppKind::Mandelbrot, "mandelbrot")] {
+                let fig3 = fig3_failures(app, &scale)?;
+                let tables = fig4_resilience(&fig3);
+                write(&format!("fig4_{tag}.csv"), &robustness_to_csv(&tables))?;
+            }
+        }
+        "fig5" => {
+            for (app, tag) in [(AppKind::Psia, "psia"), (AppKind::Mandelbrot, "mandelbrot")] {
+                let cells = fig3_perturbations(app, &scale)?;
+                let tables: Vec<_> =
+                    fig5_flexibility(&cells).into_iter().flat_map(|(a, b)| [a, b]).collect();
+                write(&format!("fig5_{tag}.csv"), &robustness_to_csv(&tables))?;
+            }
+        }
+        "table1" => {
+            let data = table1_summary(&scale)?;
+            write("table1.csv", &cells_to_csv(&data.cells))?;
+        }
+        other => bail!("unknown experiment id {other} (fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1)"),
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let rdlb = args.bool_or("rdlb", true)?;
+    let sc = match args.str_or("scenario", "fig1").as_str() {
+        "fig1" => ConceptualScenario::Failure { rdlb },
+        "fig2" => ConceptualScenario::Perturbation { rdlb },
+        other => bail!("unknown trace scenario {other}"),
+    };
+    let (outcome, trace) = conceptual_trace(sc)?;
+    println!("{}", trace.ascii_gantt(72));
+    if outcome.hung {
+        println!("outcome: HUNG after {}/{} tasks", outcome.finished, outcome.n);
+    } else {
+        println!("outcome: completed in {:.3}s", outcome.parallel_time);
+    }
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> Result<()> {
+    let reps = args.usize_or("reps", 16)?;
+    println!("§3.1 theory vs simulation (one certain failure, equal tasks):");
+    println!("{:>6} {:>12} {:>12} {:>8}", "q", "T_model", "T_sim", "rel_err");
+    for (q, model, sim, err) in theory_validation(reps)? {
+        println!("{q:>6} {model:>12.5} {sim:>12.5} {err:>8.4}");
+    }
+    let p = rdlb::analysis::TheoryParams { n_per_pe: 1024.0, q: 256.0, t_task: 2e-3, lambda: 1e-5 };
+    println!(
+        "\noverhead (λ=1e-5, q=256): rDLB {:.3e}, checkpoint crossover C* = {:.3e}s",
+        p.overhead_rdlb(),
+        p.checkpoint_crossover()
+    );
+    Ok(())
+}
+
+fn cmd_native(args: &Args) -> Result<()> {
+    let app = AppKind::parse(&args.str_or("app", "mandelbrot")).ok_or_else(|| anyhow!("unknown app"))?;
+    let technique = Technique::parse(&args.str_or("technique", "FAC"))
+        .ok_or_else(|| anyhow!("unknown technique"))?;
+    let workers = args.usize_or("workers", 8)?;
+    let rdlb = args.bool_or("rdlb", true)?;
+    let backend_kind = args.str_or("backend", "native");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let failures = args.usize_or("failures", 0)?;
+
+    // The service must outlive the run when the PJRT backend is used.
+    let mut _service_keepalive: Option<ComputeService> = None;
+    let (n_default, backend): (usize, ComputeBackend) = match (app, backend_kind.as_str()) {
+        (AppKind::Mandelbrot, "native") => {
+            let a = rdlb::apps::MandelbrotApp { width: 256, height: 256, max_iter: 300, ..Default::default() };
+            (a.n_tasks(), ComputeBackend::Mandelbrot(std::sync::Arc::new(a)))
+        }
+        (AppKind::Psia, "native") => {
+            let a = rdlb::apps::PsiaApp::synthetic(4096);
+            (a.n_tasks(), ComputeBackend::Psia(std::sync::Arc::new(a)))
+        }
+        (AppKind::Mandelbrot, "pjrt") => {
+            let svc = ComputeService::spawn(artifacts.clone())?;
+            let handle = svc.handle();
+            _service_keepalive = Some(svc);
+            (65_536, ComputeBackend::PjrtMandelbrot(handle))
+        }
+        (AppKind::Psia, "pjrt") => {
+            let svc = ComputeService::spawn(artifacts.clone())?;
+            let handle = svc.handle();
+            _service_keepalive = Some(svc);
+            (4096, ComputeBackend::PjrtPsia(handle))
+        }
+        (a, b) => bail!("unsupported app/backend combo {a}/{b}"),
+    };
+    let n = args.usize_opt("tasks")?.unwrap_or(n_default);
+    let mut params = NativeParams::new(n, workers, technique, rdlb, backend);
+    if failures > 0 {
+        params = params.with_failures(failures, 2.0);
+    }
+    params.timeout = std::time::Duration::from_secs(args.u64_or("timeout", 120)?);
+    let t0 = std::time::Instant::now();
+    let outcome = NativeRuntime::new(params)?.run()?;
+    if outcome.hung {
+        println!("RESULT: HUNG (finished {}/{})", outcome.finished, outcome.n);
+    } else {
+        println!(
+            "RESULT: T_par = {:.3}s  chunks={} rescheduled={} duplicates={}  (wall {:?})",
+            outcome.parallel_time,
+            outcome.stats.assigned_chunks,
+            outcome.stats.rescheduled_chunks,
+            outcome.stats.duplicate_iterations,
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("theory") => cmd_theory(&args),
+        Some("native") => cmd_native(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Native master–worker runtime: real chunk execution (PJRT artifacts or
+//! native rust kernels) on OS threads, behind the *identical* [`Master`]
+//! state machine the simulator uses.
+//!
+//! Failure/perturbation injection mirrors the paper's §4.1 mechanics:
+//!  * fail-stop: a worker whose deadline passed simply stops participating
+//!    (no detection, in-flight chunk lost);
+//!  * PE perturbation: a worker's compute is dilated by a slowdown factor
+//!    (the controlled equivalent of the paper's CPU burner);
+//!  * latency perturbation: an extra delay on every message a worker sends
+//!    or receives (the paper's PMPI interposer added 10 s).
+
+mod backend;
+
+pub use backend::ComputeBackend;
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{Assignment, Master, MasterConfig, Reply};
+use crate::dls::{Technique, TechniqueParams};
+use crate::sim::Outcome;
+
+/// Parameters of one native execution.
+#[derive(Clone)]
+pub struct NativeParams {
+    /// Loop iterations N.
+    pub n: usize,
+    /// Worker count P (worker 0 is the master's compute half; it never
+    /// fails, matching the paper's surviving-master assumption).
+    pub workers: usize,
+    pub technique: Technique,
+    pub tech_params: TechniqueParams,
+    pub rdlb: bool,
+    pub backend: ComputeBackend,
+    /// Per-worker fail-stop time (seconds from start); `None` = healthy.
+    pub failures: Vec<Option<f64>>,
+    /// Per-worker compute dilation factor (1.0 = nominal).
+    pub slowdown: Vec<f64>,
+    /// Per-worker extra one-way message latency, seconds.
+    pub latency: Vec<f64>,
+    /// Wall-clock bound; exceeding it reports a hung run (the paper's
+    /// "waits indefinitely" case, bounded for practicality).
+    pub timeout: Duration,
+}
+
+impl NativeParams {
+    pub fn new(n: usize, workers: usize, technique: Technique, rdlb: bool, backend: ComputeBackend) -> Self {
+        NativeParams {
+            n,
+            workers,
+            technique,
+            tech_params: TechniqueParams::default(),
+            rdlb,
+            backend,
+            failures: vec![None; workers],
+            slowdown: vec![1.0; workers],
+            latency: vec![0.0; workers],
+            timeout: Duration::from_secs(60),
+        }
+    }
+
+    /// Fail `count` workers (never worker 0) at evenly spread times within
+    /// `(0, horizon)` seconds.
+    pub fn with_failures(mut self, count: usize, horizon: f64) -> Self {
+        assert!(count < self.workers, "at most P-1 failures");
+        for k in 0..count {
+            let w = 1 + k % (self.workers - 1);
+            let t = horizon * (k + 1) as f64 / (count + 1) as f64;
+            self.failures[w] = Some(t);
+        }
+        self
+    }
+}
+
+/// The native runtime.
+pub struct NativeRuntime {
+    params: NativeParams,
+}
+
+enum ToWorker {
+    Assign(Assignment),
+    Terminate,
+}
+
+struct FromWorker {
+    worker: usize,
+    /// (assignment id, compute seconds, per-task digests) of a completed
+    /// chunk.
+    result: Option<(u64, f64, Vec<f64>)>,
+}
+
+impl NativeRuntime {
+    pub fn new(params: NativeParams) -> Result<Self> {
+        anyhow::ensure!(params.workers >= 1, "need at least one worker");
+        anyhow::ensure!(params.failures.len() == params.workers, "failures sized to workers");
+        anyhow::ensure!(params.failures[0].is_none(), "worker 0 (master) cannot fail");
+        anyhow::ensure!(params.slowdown.len() == params.workers, "slowdown sized to workers");
+        anyhow::ensure!(params.latency.len() == params.workers, "latency sized to workers");
+        Ok(NativeRuntime { params })
+    }
+
+    /// Execute the run: P worker threads + the master loop on this thread.
+    pub fn run(&self) -> Result<Outcome> {
+        let prm = &self.params;
+        let p = prm.workers;
+        let n = prm.n;
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique: prm.technique,
+            params: prm.tech_params.clone(),
+            rdlb: prm.rdlb,
+        });
+
+        let (to_master, master_rx) = mpsc::channel::<FromWorker>();
+        let start = Instant::now();
+        let mut worker_tx: Vec<mpsc::Sender<ToWorker>> = Vec::with_capacity(p);
+        let mut joins = Vec::with_capacity(p);
+
+        for w in 0..p {
+            let (tx, rx) = mpsc::channel::<ToWorker>();
+            worker_tx.push(tx);
+            let to_master = to_master.clone();
+            let backend = prm.backend.clone();
+            let deadline = prm.failures[w].map(|t| start + Duration::from_secs_f64(t));
+            let slow = prm.slowdown[w].max(1.0);
+            let lat = Duration::from_secs_f64(prm.latency[w].max(0.0));
+            joins.push(std::thread::spawn(move || {
+                let dead = |t: Instant| deadline.is_some_and(|d| t >= d);
+                if !lat.is_zero() {
+                    std::thread::sleep(lat); // delayed initial request
+                }
+                if to_master.send(FromWorker { worker: w, result: None }).is_err() {
+                    return;
+                }
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        ToWorker::Terminate => break,
+                        ToWorker::Assign(a) => {
+                            if !lat.is_zero() {
+                                std::thread::sleep(lat); // delayed delivery
+                            }
+                            if dead(Instant::now()) {
+                                return; // fail-stop: chunk evaporates
+                            }
+                            let t0 = Instant::now();
+                            let digests = match backend.compute(&a.tasks) {
+                                Ok(d) => d,
+                                Err(_) => return,
+                            };
+                            let mut compute = t0.elapsed();
+                            if slow > 1.0 {
+                                // PE perturbation: dilate compute.
+                                std::thread::sleep(compute.mul_f64(slow - 1.0));
+                                compute = compute.mul_f64(slow);
+                            }
+                            if dead(Instant::now()) {
+                                return; // died mid-compute
+                            }
+                            if !lat.is_zero() {
+                                std::thread::sleep(lat); // delayed result
+                            }
+                            let msg = FromWorker {
+                                worker: w,
+                                result: Some((a.id, compute.as_secs_f64(), digests)),
+                            };
+                            if to_master.send(msg).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        drop(to_master);
+
+        // Master loop, bounded by the hang timeout.
+        let mut parked: Vec<usize> = Vec::new();
+        let mut useful = 0.0f64;
+        let mut wasted = 0.0f64;
+        let mut result_digest = 0.0f64;
+        let hard_deadline = start + prm.timeout;
+        let mut hung = false;
+
+        loop {
+            let left = hard_deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                hung = !master.is_complete();
+                break;
+            }
+            let msg = match master_rx.recv_timeout(left) {
+                Ok(m) => m,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    hung = !master.is_complete();
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    hung = !master.is_complete();
+                    break;
+                }
+            };
+            let now = start.elapsed().as_secs_f64();
+            if let Some((id, compute, digests)) = msg.result {
+                let newly = master.on_result(msg.worker, id, compute, now);
+                let fins = newly.len() as f64;
+                let dups = digests.len() as f64 - fins;
+                if dups + fins > 0.0 {
+                    wasted += compute * dups / (dups + fins);
+                    useful += compute * fins / (dups + fins);
+                }
+                // Exactly one digest contribution per iteration: only the
+                // positions whose completion was the FIRST one count.
+                for &pos in &newly {
+                    result_digest += digests[pos];
+                }
+                if master.is_complete() {
+                    break;
+                }
+                for pw in std::mem::take(&mut parked) {
+                    dispatch(&mut master, pw, now, &worker_tx, &mut parked);
+                }
+            }
+            dispatch(&mut master, msg.worker, now, &worker_tx, &mut parked);
+        }
+
+        // MPI_Abort: stop everyone immediately.
+        for tx in &worker_tx {
+            let _ = tx.send(ToWorker::Terminate);
+        }
+        drop(worker_tx);
+        for j in joins {
+            let _ = j.join();
+        }
+
+        let elapsed = start.elapsed().as_secs_f64();
+        Ok(Outcome {
+            parallel_time: if hung { f64::INFINITY } else { elapsed },
+            hung,
+            finished: master.table().finished_count(),
+            n,
+            stats: master.stats().clone(),
+            wasted_work: wasted,
+            useful_work: useful,
+            failures: self.params.failures.iter().filter(|f| f.is_some()).count(),
+            result_digest,
+        })
+    }
+
+    /// Alias kept for API parity with earlier revisions.
+    pub fn run_blocking(&self) -> Result<Outcome> {
+        self.run()
+    }
+}
+
+fn dispatch(
+    master: &mut Master,
+    worker: usize,
+    now: f64,
+    worker_tx: &[mpsc::Sender<ToWorker>],
+    parked: &mut Vec<usize>,
+) {
+    match master.on_request(worker, now) {
+        Reply::Assign(a) => {
+            let _ = worker_tx[worker].send(ToWorker::Assign(a));
+        }
+        Reply::Wait => {
+            if !parked.contains(&worker) {
+                parked.push(worker);
+            }
+        }
+        Reply::Terminate => {
+            let _ = worker_tx[worker].send(ToWorker::Terminate);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{CostModel, MandelbrotApp};
+    use std::sync::Arc;
+
+    fn synthetic(n: usize, cost: f64) -> ComputeBackend {
+        ComputeBackend::Synthetic {
+            model: Arc::new(CostModel::from_costs(vec![cost; n])),
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn baseline_completes() {
+        let p = NativeParams::new(64, 4, Technique::Fac, true, synthetic(64, 1e-4));
+        let o = NativeRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.finished, 64);
+    }
+
+    #[test]
+    fn mandelbrot_native_backend() {
+        let app = MandelbrotApp { width: 32, height: 32, max_iter: 64, ..Default::default() };
+        let p = NativeParams::new(
+            app.n_tasks(),
+            4,
+            Technique::Gss,
+            true,
+            ComputeBackend::Mandelbrot(Arc::new(app)),
+        );
+        let o = NativeRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed());
+    }
+
+    #[test]
+    fn failure_without_rdlb_hangs_until_timeout() {
+        let mut p = NativeParams::new(200, 4, Technique::Fac, false, synthetic(200, 2e-3));
+        p.timeout = Duration::from_millis(800);
+        p = p.with_failures(2, 0.05);
+        let o = NativeRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.hung, "must hang without rDLB: {o:?}");
+    }
+
+    #[test]
+    fn failure_with_rdlb_completes() {
+        let mut p = NativeParams::new(200, 4, Technique::Fac, true, synthetic(200, 2e-3));
+        p.timeout = Duration::from_secs(30);
+        p = p.with_failures(3, 0.05);
+        let o = NativeRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.finished, 200);
+    }
+
+    #[test]
+    fn latency_perturbation_with_rdlb_not_slower() {
+        let mk = |rdlb| {
+            let mut p = NativeParams::new(120, 4, Technique::Fac, rdlb, synthetic(120, 1e-3));
+            p.latency[3] = 0.15; // straggler
+            p.timeout = Duration::from_secs(30);
+            p
+        };
+        let without = NativeRuntime::new(mk(false)).unwrap().run().unwrap();
+        let with = NativeRuntime::new(mk(true)).unwrap().run().unwrap();
+        assert!(without.completed() && with.completed());
+        assert!(
+            with.parallel_time < without.parallel_time * 1.15,
+            "rDLB {} vs {}",
+            with.parallel_time,
+            without.parallel_time
+        );
+    }
+
+    #[test]
+    fn rejects_master_failure() {
+        let mut p = NativeParams::new(10, 2, Technique::Ss, true, synthetic(10, 1e-4));
+        p.failures[0] = Some(0.1);
+        assert!(NativeRuntime::new(p).is_err());
+    }
+}

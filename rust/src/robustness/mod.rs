@@ -1,0 +1,135 @@
+//! FePIA robustness metrics (Ali, Maciejewski, Siegel & Kim 2004), applied
+//! as in the paper §4.1:
+//!
+//! * robustness radius  `r_DLS = T_par^π − T_par^orig`
+//! * metric             `ρ(φ, π) = r_DLS / r_minDLS`
+//!
+//! ρ == 1 identifies the most robust technique for a perturbation parameter
+//! π; larger values mean "that many times less robust" (lower is better).
+//! **Resilience** is ρ against failure scenarios; **flexibility** is ρ
+//! against perturbation scenarios.
+
+
+/// One technique's (baseline, perturbed) execution-time pair.
+#[derive(Debug, Clone)]
+pub struct RobustnessInput {
+    pub technique: String,
+    /// T_par in the unperturbed baseline.
+    pub baseline: f64,
+    /// T_par under the perturbation parameter π.
+    pub perturbed: f64,
+}
+
+/// A technique's computed metric.
+#[derive(Debug, Clone)]
+pub struct RobustnessRow {
+    pub technique: String,
+    /// Robustness radius r = T^π − T^orig (seconds; ∞ for hung runs).
+    pub radius: f64,
+    /// ρ = r / r_min (1 == most robust; lower is better).
+    pub rho: f64,
+}
+
+/// Compute ρ for a set of techniques under one perturbation parameter.
+///
+/// Radii are floored at a small ε so that a technique that happens to run
+/// *faster* under perturbation (radius ≤ 0, possible with noise) does not
+/// produce negative or zero divisors; hung runs get ρ = ∞.
+pub fn robustness_metrics(inputs: &[RobustnessInput]) -> Vec<RobustnessRow> {
+    const EPS: f64 = 1e-9;
+    let radii: Vec<f64> = inputs
+        .iter()
+        .map(|i| {
+            if i.perturbed.is_infinite() {
+                f64::INFINITY
+            } else {
+                (i.perturbed - i.baseline).max(EPS)
+            }
+        })
+        .collect();
+    let r_min = radii
+        .iter()
+        .copied()
+        .filter(|r| r.is_finite())
+        .fold(f64::INFINITY, f64::min);
+    inputs
+        .iter()
+        .zip(radii)
+        .map(|(i, r)| RobustnessRow {
+            technique: i.technique.clone(),
+            radius: r,
+            rho: if r.is_finite() && r_min.is_finite() { r / r_min } else { f64::INFINITY },
+        })
+        .collect()
+}
+
+/// Resilience ρ_res: robustness against fail-stop failures (paper Fig. 4).
+pub fn resilience(inputs: &[RobustnessInput]) -> Vec<RobustnessRow> {
+    robustness_metrics(inputs)
+}
+
+/// Flexibility ρ_flex: robustness against perturbations (paper Fig. 5).
+pub fn flexibility(inputs: &[RobustnessInput]) -> Vec<RobustnessRow> {
+    robustness_metrics(inputs)
+}
+
+/// The most robust technique (ρ == 1) of a metric set, if any finite row
+/// exists.
+pub fn most_robust(rows: &[RobustnessRow]) -> Option<&RobustnessRow> {
+    rows.iter()
+        .filter(|r| r.rho.is_finite())
+        .min_by(|a, b| a.rho.total_cmp(&b.rho))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(t: &str, base: f64, pert: f64) -> RobustnessInput {
+        RobustnessInput { technique: t.into(), baseline: base, perturbed: pert }
+    }
+
+    #[test]
+    fn most_robust_gets_rho_one() {
+        let rows = robustness_metrics(&[
+            input("SS", 10.0, 11.0),  // radius 1
+            input("GSS", 10.0, 14.0), // radius 4
+            input("FAC", 10.0, 12.0), // radius 2
+        ]);
+        assert!((rows[0].rho - 1.0).abs() < 1e-12);
+        assert!((rows[1].rho - 4.0).abs() < 1e-12);
+        assert!((rows[2].rho - 2.0).abs() < 1e-12);
+        assert_eq!(most_robust(&rows).unwrap().technique, "SS");
+    }
+
+    #[test]
+    fn hung_runs_are_infinitely_unrobust() {
+        let rows = robustness_metrics(&[
+            input("SS", 10.0, 11.0),
+            input("STATIC", 10.0, f64::INFINITY),
+        ]);
+        assert!(rows[1].rho.is_infinite());
+        assert!(rows[0].rho.is_finite());
+    }
+
+    #[test]
+    fn negative_radius_floored() {
+        let rows = robustness_metrics(&[
+            input("A", 10.0, 9.5), // faster under perturbation
+            input("B", 10.0, 12.0),
+        ]);
+        assert!(rows[0].radius > 0.0);
+        assert!((rows[0].rho - 1.0).abs() < 1e-12, "floored radius is min");
+        assert!(rows[1].rho > 1e6, "relative to eps radius");
+    }
+
+    #[test]
+    fn all_hung_all_infinite() {
+        let rows = robustness_metrics(&[
+            input("A", 1.0, f64::INFINITY),
+            input("B", 1.0, f64::INFINITY),
+        ]);
+        assert!(rows.iter().all(|r| r.rho.is_infinite()));
+        assert!(most_robust(&rows).is_none());
+    }
+}

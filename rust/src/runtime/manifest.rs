@@ -1,0 +1,211 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: file names, shapes, and every baked parameter.
+//! Parsed with the in-tree JSON substrate ([`crate::util::json`]).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor spec (name, dtype, shape) as recorded by the AOT step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    fn from_json(v: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: v.req("name")?.as_str().context("name")?.to_string(),
+            dtype: v.req("dtype")?.as_str().context("dtype")?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().context("shape dim"))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Mandelbrot parameters baked into the artifact (mirror of the python
+/// `MandelbrotParams` dataclass).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MandelbrotParamsJson {
+    pub width: usize,
+    pub height: usize,
+    pub x_min: f64,
+    pub x_max: f64,
+    pub y_min: f64,
+    pub y_max: f64,
+    pub max_iter: u32,
+}
+
+/// PSIA parameters baked into the artifact (mirror of `SpinImageParams`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PsiaParamsJson {
+    pub n_points: usize,
+    pub img_size: usize,
+    pub bin_size: f64,
+    pub chunk: usize,
+}
+
+/// One application artifact entry.
+#[derive(Debug, Clone)]
+pub struct AppArtifact<P> {
+    pub hlo: String,
+    pub chunk: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub params: P,
+}
+
+impl<P> AppArtifact<P> {
+    fn from_json(v: &Json, params: P) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<IoSpec>> {
+            v.req(key)?
+                .as_arr()
+                .with_context(|| key.to_string())?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        Ok(AppArtifact {
+            hlo: v.req("hlo")?.as_str().context("hlo")?.to_string(),
+            chunk: v.req("chunk")?.as_usize().context("chunk")?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            params,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub schema: u32,
+    pub mandelbrot: AppArtifact<MandelbrotParamsJson>,
+    pub psia: AppArtifact<PsiaParamsJson>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} (run `make artifacts`)"))?;
+        let m = Self::parse(&text)?;
+        m.validate(dir)?;
+        Ok(m)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("parse manifest.json")?;
+        let schema = v.req("schema")?.as_usize().context("schema")? as u32;
+
+        let mj = v.req("mandelbrot").context("mandelbrot entry")?;
+        let mp = mj.req("params")?;
+        let mandel_params = MandelbrotParamsJson {
+            width: mp.req("width")?.as_usize().context("width")?,
+            height: mp.req("height")?.as_usize().context("height")?,
+            x_min: mp.req("x_min")?.as_f64().context("x_min")?,
+            x_max: mp.req("x_max")?.as_f64().context("x_max")?,
+            y_min: mp.req("y_min")?.as_f64().context("y_min")?,
+            y_max: mp.req("y_max")?.as_f64().context("y_max")?,
+            max_iter: mp.req("max_iter")?.as_u64().context("max_iter")? as u32,
+        };
+
+        let pj = v.req("psia").context("psia entry")?;
+        let pp = pj.req("params")?;
+        let psia_params = PsiaParamsJson {
+            n_points: pp.req("n_points")?.as_usize().context("n_points")?,
+            img_size: pp.req("img_size")?.as_usize().context("img_size")?,
+            bin_size: pp.req("bin_size")?.as_f64().context("bin_size")?,
+            chunk: pp.req("chunk")?.as_usize().context("chunk")?,
+        };
+
+        Ok(Manifest {
+            schema,
+            mandelbrot: AppArtifact::from_json(mj, mandel_params)?,
+            psia: AppArtifact::from_json(pj, psia_params)?,
+        })
+    }
+
+    pub fn validate(&self, dir: &Path) -> Result<()> {
+        ensure!(self.schema == 1, "unsupported manifest schema {}", self.schema);
+        for (app, hlo, chunk) in [
+            ("mandelbrot", &self.mandelbrot.hlo, self.mandelbrot.chunk),
+            ("psia", &self.psia.hlo, self.psia.chunk),
+        ] {
+            ensure!(chunk > 0, "{app}: zero chunk");
+            ensure!(dir.join(hlo).exists(), "{app}: missing HLO file {hlo}");
+        }
+        ensure!(
+            self.mandelbrot.inputs[0].shape == vec![self.mandelbrot.chunk],
+            "mandelbrot input shape mismatch"
+        );
+        ensure!(
+            self.psia.outputs[0].shape
+                == vec![self.psia.chunk, self.psia.params.img_size, self.psia.params.img_size],
+            "psia output shape mismatch"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "schema": 1,
+        "mandelbrot": {"hlo": "mandelbrot.hlo.txt", "chunk": 4,
+            "inputs": [{"name":"indices","dtype":"s32","shape":[4]}],
+            "outputs": [{"name":"counts","dtype":"s32","shape":[4]}],
+            "params": {"width":2,"height":2,"x_min":-2.0,"x_max":0.6,"y_min":-1.3,"y_max":1.3,"max_iter":3}},
+        "psia": {"hlo": "psia.hlo.txt", "chunk": 2,
+            "inputs": [], "outputs": [{"name":"images","dtype":"f32","shape":[2,4,4]}],
+            "params": {"n_points":8,"img_size":4,"bin_size":0.1,"chunk":2}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.mandelbrot.params.width, 2);
+        assert_eq!(m.mandelbrot.params.x_min, -2.0);
+        assert_eq!(m.psia.params.img_size, 4);
+        assert_eq!(m.mandelbrot.inputs[0].dtype, "s32");
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.mandelbrot.params.width > 0);
+        assert!(m.psia.params.img_size > 0);
+    }
+
+    #[test]
+    fn rejects_bad_schema() {
+        let dir = std::env::temp_dir().join("rdlb_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mandelbrot.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("psia.hlo.txt"), "x").unwrap();
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        m.schema = 99;
+        assert!(m.validate(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_key_is_contextual_error() {
+        let err = Manifest::parse(r#"{"schema": 1}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("mandelbrot"));
+    }
+}

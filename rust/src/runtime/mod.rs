@@ -1,0 +1,196 @@
+//! PJRT runtime: load the JAX/Pallas AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) and execute chunks from the rust request path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py`): jax ≥ 0.5 emits
+//! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! `PjRtLoadedExecutable` wraps raw pointers (`!Send`), so [`service`] hosts
+//! the client + executables on a dedicated OS thread and hands out a
+//! cloneable, `await`-able [`service::ComputeHandle`] to the tokio workers.
+
+mod manifest;
+pub mod service;
+
+pub use manifest::{AppArtifact, IoSpec, Manifest};
+pub use service::{ComputeHandle, ComputeRequest, ComputeResponse, ComputeService};
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::apps::psia::{PsiaApp, PsiaParams};
+use crate::apps::MandelbrotApp;
+
+/// The PJRT engine: compiled executables for both applications.
+///
+/// NOT `Send` — construct and use on one thread (see [`service`] for the
+/// multi-worker wrapper).
+pub struct PjrtEngine {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    mandelbrot_exe: xla::PjRtLoadedExecutable,
+    psia_exe: xla::PjRtLoadedExecutable,
+    /// Cloud literals fed to every PSIA call (cached once).
+    psia_points: xla::Literal,
+    psia_normals: xla::Literal,
+    psia_app: PsiaApp,
+}
+
+impl PjrtEngine {
+    /// Load and compile both artifacts from `dir` (default: `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compile {file}"))
+        };
+        let mandelbrot_exe = compile(&manifest.mandelbrot.hlo)?;
+        let psia_exe = compile(&manifest.psia.hlo)?;
+
+        // Deterministic synthetic cloud, sized to the artifact.
+        let pp = &manifest.psia.params;
+        let psia_app = PsiaApp::synthetic_with(
+            PsiaParams {
+                n_points: pp.n_points,
+                img_size: pp.img_size,
+                bin_size: pp.bin_size as f32,
+            },
+            pp.n_points,
+            0x5917,
+        );
+        let n = pp.n_points as i64;
+        let psia_points = xla::Literal::vec1(&psia_app.points).reshape(&[n, 3])?;
+        let psia_normals = xla::Literal::vec1(&psia_app.normals).reshape(&[n, 3])?;
+
+        Ok(PjrtEngine {
+            manifest,
+            client,
+            mandelbrot_exe,
+            psia_exe,
+            psia_points,
+            psia_normals,
+            psia_app,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The Mandelbrot parameters baked into the artifact (for the native
+    /// cross-check path).
+    pub fn mandelbrot_app(&self) -> MandelbrotApp {
+        let p = &self.manifest.mandelbrot.params;
+        MandelbrotApp {
+            width: p.width,
+            height: p.height,
+            x_min: p.x_min as f32,
+            x_max: p.x_max as f32,
+            y_min: p.y_min as f32,
+            y_max: p.y_max as f32,
+            max_iter: p.max_iter,
+        }
+    }
+
+    /// The PSIA application (cloud identical to the literals fed to PJRT).
+    pub fn psia_app(&self) -> &PsiaApp {
+        &self.psia_app
+    }
+
+    /// Escape counts for an arbitrary chunk of pixel ids.  The executable
+    /// has a fixed input width; the chunk is split/padded transparently
+    /// (padding id = -1 → count 0, sliced off).
+    pub fn mandelbrot_chunk(&self, tasks: &[u32]) -> Result<Vec<u32>> {
+        let width = self.manifest.mandelbrot.chunk;
+        ensure!(width > 0, "bad artifact chunk");
+        let mut out = Vec::with_capacity(tasks.len());
+        for part in tasks.chunks(width) {
+            let mut ids = vec![-1i32; width];
+            for (slot, &t) in ids.iter_mut().zip(part) {
+                *slot = t as i32;
+            }
+            let lit = xla::Literal::vec1(&ids);
+            let result = self.mandelbrot_exe.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()?;
+            let counts = result.to_tuple1()?.to_vec::<i32>()?;
+            out.extend(counts[..part.len()].iter().map(|&c| c as u32));
+        }
+        Ok(out)
+    }
+
+    /// Spin images for a chunk of task ids; returns flattened `[img²]` per
+    /// task. Task ids are mapped onto oriented points modulo the cloud.
+    pub fn psia_chunk(&self, tasks: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let width = self.manifest.psia.chunk;
+        let img = self.manifest.psia.params.img_size;
+        let mut out = Vec::with_capacity(tasks.len());
+        for part in tasks.chunks(width) {
+            let mut ids = vec![-1i32; width];
+            for (slot, &t) in ids.iter_mut().zip(part) {
+                *slot = self.psia_app.oriented_point(t);
+            }
+            let lit = xla::Literal::vec1(&ids);
+            let args = [self.psia_points.clone(), self.psia_normals.clone(), lit];
+            let result = self.psia_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let flat = result.to_tuple1()?.to_vec::<f32>()?;
+            let stride = img * img;
+            for k in 0..part.len() {
+                out.push(flat[k * stride..(k + 1) * stride].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_loads_and_matches_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = PjrtEngine::load(&dir).unwrap();
+        assert_eq!(engine.platform(), "cpu");
+
+        // Mandelbrot: PJRT vs native rust on a prefix + a padded tail.
+        let app = engine.mandelbrot_app();
+        let ids: Vec<u32> = (0..300).map(|i| i * 37 % app.n_tasks() as u32).collect();
+        let got = engine.mandelbrot_chunk(&ids).unwrap();
+        let want = app.compute_chunk(&ids);
+        let mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+        assert!(
+            mismatches * 1000 <= ids.len(),
+            "mandelbrot mismatch {mismatches}/{}",
+            ids.len()
+        );
+
+        // PSIA: PJRT vs native rust images.
+        let tasks = [0u32, 7, 130, 2047];
+        let got = engine.psia_chunk(&tasks).unwrap();
+        let want = engine.psia_app().compute_chunk(&tasks);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.len(), w.len());
+            for (a, b) in g.iter().zip(w) {
+                assert!((a - b).abs() < 1e-3, "psia image mismatch {a} vs {b}");
+            }
+        }
+    }
+}

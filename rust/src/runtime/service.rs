@@ -1,0 +1,132 @@
+//! Compute service: hosts the (!Send) [`super::PjrtEngine`] on a dedicated
+//! OS thread and serves chunk executions to any number of worker threads
+//! through a cloneable [`ComputeHandle`].
+//!
+//! XLA's CPU executable uses its own intra-op thread pool, so a single
+//! service thread still saturates the machine for the chunk sizes the DLS
+//! techniques produce; workers block on their own reply channel, never on
+//! each other's compute.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use super::PjrtEngine;
+
+/// A chunk-execution request.
+#[derive(Debug, Clone)]
+pub enum ComputeRequest {
+    /// Escape counts for pixel ids.
+    Mandelbrot(Vec<u32>),
+    /// Spin images (as per-task image-mass digests) for task ids.
+    Psia(Vec<u32>),
+}
+
+/// A chunk-execution result.
+#[derive(Debug, Clone)]
+pub enum ComputeResponse {
+    /// Per-pixel escape counts.
+    Counts(Vec<u32>),
+    /// Per-task image masses (Σ of the descriptor bins).
+    Masses(Vec<f64>),
+}
+
+impl ComputeResponse {
+    /// Scalar digest for integrity checks.
+    pub fn digest(&self) -> f64 {
+        match self {
+            ComputeResponse::Counts(c) => c.iter().map(|&x| x as f64).sum(),
+            ComputeResponse::Masses(m) => m.iter().sum(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ComputeResponse::Counts(c) => c.len(),
+            ComputeResponse::Masses(m) => m.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+type Job = (ComputeRequest, mpsc::Sender<Result<ComputeResponse>>);
+
+/// Cloneable handle to the compute-service thread.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl ComputeHandle {
+    /// Execute a chunk, blocking until the service thread replies.
+    pub fn compute(&self, req: ComputeRequest) -> Result<ComputeResponse> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send((req, reply_tx)).map_err(|_| anyhow!("compute service stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("compute service dropped reply"))?
+    }
+}
+
+/// The running service (join handle; shuts down when dropped).
+pub struct ComputeService {
+    handle: ComputeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Spawn the service; loads + compiles the artifacts in `dir` on the
+    /// service thread before returning (startup errors surface here).
+    pub fn spawn(dir: PathBuf) -> Result<ComputeService> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-compute".into())
+            .spawn(move || {
+                let engine = match PjrtEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok((req, reply)) = rx.recv() {
+                    let out = match req {
+                        ComputeRequest::Mandelbrot(tasks) => {
+                            engine.mandelbrot_chunk(&tasks).map(ComputeResponse::Counts)
+                        }
+                        ComputeRequest::Psia(tasks) => engine.psia_chunk(&tasks).map(|imgs| {
+                            ComputeResponse::Masses(
+                                imgs.iter()
+                                    .map(|img| img.iter().map(|&x| x as f64).sum())
+                                    .collect(),
+                            )
+                        }),
+                    };
+                    let _ = reply.send(out);
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow!("compute service died during startup"))??;
+        Ok(ComputeService { handle: ComputeHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        // Replace our sender so the channel closes; the thread then exits.
+        let (tx, _) = mpsc::channel();
+        self.handle = ComputeHandle { tx };
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,421 @@
+//! The discrete-event engine driving [`crate::coordinator::Master`] over a
+//! virtual cluster.
+//!
+//! Message protocol per chunk (matching DLS4LB's master–worker rounds):
+//!
+//! ```text
+//!  worker w                     master (rank 0, also computes)
+//!    |-- request --------------->|   RequestAtMaster(+ piggy-backed result)
+//!    |                           |   on_request → chunk  (+h overhead)
+//!    |<-- assignment ------------|   ReplyAtWorker
+//!    |   compute (speed-integrated)  ComputeDone
+//!    |-- result + request ------>|   ...
+//! ```
+//!
+//! A fail-stop failure makes a rank silent: replies to it are never
+//! processed, chunks in flight evaporate, and *nothing informs the master* —
+//! exactly the observable behaviour of a crashed MPI rank under
+//! `MPI_ERRORS_RETURN` in the paper's implementation.
+
+use anyhow::{ensure, Result};
+
+use super::event::{CompletedChunk, Event, EventQueue};
+use super::failure::FailurePlan;
+use super::outcome::Outcome;
+use super::perturbation::PerturbationModel;
+use super::topology::Topology;
+use crate::apps::Workload;
+use crate::coordinator::{Master, MasterConfig, Reply};
+use crate::dls::{Technique, TechniqueParams};
+use crate::trace::{Trace, TraceRecord};
+
+/// Full parameterization of one simulated execution.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    pub workload: Workload,
+    pub topology: Topology,
+    pub technique: Technique,
+    pub tech_params: TechniqueParams,
+    pub rdlb: bool,
+    pub failures: FailurePlan,
+    pub perturbations: PerturbationModel,
+    /// Master scheduling overhead per assignment, seconds (h).
+    pub sched_overhead: f64,
+    /// Base one-way message latency, seconds (0 for rank 0 = the master).
+    pub base_latency: f64,
+}
+
+impl SimParams {
+    /// Reasonable defaults for a paper-scale run; callers override fields.
+    pub fn new(workload: Workload, topology: Topology, technique: Technique, rdlb: bool) -> Self {
+        SimParams {
+            workload,
+            topology,
+            technique,
+            tech_params: TechniqueParams::default(),
+            rdlb,
+            failures: FailurePlan::none(1),
+            perturbations: PerturbationModel::none(),
+            sched_overhead: 5e-6,
+            base_latency: 2e-5,
+        }
+    }
+}
+
+/// A simulated cluster execution (one run == one `run()` call; the struct is
+/// reusable and cheap to clone).
+#[derive(Debug, Clone)]
+pub struct SimCluster {
+    params: SimParams,
+}
+
+impl SimCluster {
+    pub fn new(mut params: SimParams) -> Result<Self> {
+        let p = params.topology.total_pes();
+        ensure!(p >= 1, "empty topology");
+        ensure!(params.workload.n() >= 1, "empty workload");
+        ensure!(params.sched_overhead >= 0.0 && params.base_latency >= 0.0, "negative overheads");
+        if params.failures.p() != p {
+            ensure!(params.failures.count() == 0, "failure plan sized for wrong P");
+            params.failures = FailurePlan::none(p);
+        }
+        Ok(SimCluster { params })
+    }
+
+    pub fn params(&self) -> &SimParams {
+        &self.params
+    }
+
+    /// Run and return the outcome.
+    pub fn run(&self) -> Result<Outcome> {
+        Ok(self.run_inner(None))
+    }
+
+    /// Run, additionally collecting a per-chunk trace.
+    pub fn run_traced(&self) -> Result<(Outcome, Trace)> {
+        let mut trace = Trace::default();
+        let outcome = self.run_inner(Some(&mut trace));
+        Ok((outcome, trace))
+    }
+
+    fn run_inner(&self, mut trace: Option<&mut Trace>) -> Outcome {
+        let prm = &self.params;
+        let topo = &prm.topology;
+        let p = topo.total_pes();
+        let n = prm.workload.n();
+
+        let mut tech_params = prm.tech_params.clone();
+        if tech_params.mu == TechniqueParams::default().mu {
+            // Derive FSC's (μ, σ) from the actual cost model, as DLS4LB
+            // derives them from profiling runs.
+            let s = prm.workload.model.summary();
+            tech_params.mu = s.mean;
+            tech_params.sigma = s.std;
+        }
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique: prm.technique,
+            params: tech_params,
+            rdlb: prm.rdlb,
+        });
+
+        let mut queue = EventQueue::new();
+        let mut parked: Vec<usize> = Vec::new();
+        let mut useful_work = 0.0f64;
+        let mut wasted_work = 0.0f64;
+        let mut end_time: Option<f64> = None;
+
+        // One-way latency for messages between `worker` and the master.
+        let latency = |worker: usize, t: f64| -> f64 {
+            if worker == 0 {
+                0.0
+            } else {
+                prm.base_latency
+                    + prm.perturbations.extra_latency(topo, worker, t)
+                    + prm.perturbations.extra_latency(topo, 0, t)
+            }
+        };
+
+        // All ranks are alive at t=0 and send their first request.
+        for w in 0..p {
+            queue.push(latency(w, 0.0), Event::RequestAtMaster { worker: w, result: None });
+        }
+
+        while let Some((now, event)) = queue.pop() {
+            match event {
+                Event::RequestAtMaster { worker, result } => {
+                    if let Some(res) = result {
+                        let dup_before = master.stats().duplicate_iterations;
+                        let newly =
+                            master.on_result(worker, res.assignment_id, res.compute_time, now);
+                        let fins = newly.len() as f64;
+                        let dups = (master.stats().duplicate_iterations - dup_before) as f64;
+                        let total = dups + fins;
+                        if total > 0.0 {
+                            wasted_work += res.compute_time * dups / total;
+                            useful_work += res.compute_time * fins / total;
+                        }
+                        if master.is_complete() {
+                            end_time = Some(now);
+                            break;
+                        }
+                        // Pool shrank: retry parked workers (their requests
+                        // sit at the master; no extra message latency).
+                        for pw in parked.drain(..) {
+                            queue.push(now, Event::RequestAtMaster { worker: pw, result: None });
+                        }
+                    }
+                    // The request itself (the sender may since have failed;
+                    // the master cannot know and replies anyway).
+                    match master.on_request(worker, now) {
+                        Reply::Assign(assignment) => {
+                            let t_reply = now + prm.sched_overhead + latency(worker, now);
+                            if let Some(tr) = trace.as_deref_mut() {
+                                tr.push(TraceRecord {
+                                    assignment_id: assignment.id,
+                                    worker,
+                                    first_task: assignment.tasks.first().copied().unwrap_or(0),
+                                    task_count: assignment.len(),
+                                    assigned_at: now,
+                                    started_at: None,
+                                    finished_at: None,
+                                    rescheduled: assignment.rescheduled,
+                                    lost: false,
+                                });
+                            }
+                            if prm.failures.is_failed(worker, t_reply) {
+                                // Chunk evaporates (Fig. 1b's T4-on-P3 case).
+                                if let Some(tr) = trace.as_deref_mut() {
+                                    mark_lost(tr, assignment.id);
+                                }
+                                continue;
+                            }
+                            queue.push(t_reply, Event::ReplyAtWorker { worker, assignment });
+                        }
+                        Reply::Wait => {
+                            if !parked.contains(&worker) {
+                                parked.push(worker);
+                            }
+                        }
+                        Reply::Terminate => { /* worker exits */ }
+                    }
+                }
+
+                Event::ReplyAtWorker { worker, assignment } => {
+                    if prm.failures.is_failed(worker, now) {
+                        if let Some(tr) = trace.as_deref_mut() {
+                            mark_lost(tr, assignment.id);
+                        }
+                        continue;
+                    }
+                    let work = prm.workload.model.chunk_cost(&assignment.tasks);
+                    let finish = prm.perturbations.finish_time(topo, worker, now, work);
+                    if let Some(tr) = trace.as_deref_mut() {
+                        if let Some(r) = tr.records.iter_mut().find(|r| r.assignment_id == assignment.id) {
+                            r.started_at = Some(now);
+                        }
+                    }
+                    if let Some(ft) = prm.failures.time_of(worker) {
+                        if ft <= finish {
+                            // Dies mid-compute: partial work burned, chunk lost.
+                            wasted_work += (ft - now).max(0.0);
+                            if let Some(tr) = trace.as_deref_mut() {
+                                mark_lost(tr, assignment.id);
+                            }
+                            continue;
+                        }
+                    }
+                    queue.push(
+                        finish,
+                        Event::ComputeDone { worker, assignment, compute_time: finish - now },
+                    );
+                }
+
+                Event::ComputeDone { worker, assignment, compute_time } => {
+                    if let Some(tr) = trace.as_deref_mut() {
+                        if let Some(r) = tr.records.iter_mut().find(|r| r.assignment_id == assignment.id) {
+                            r.finished_at = Some(now);
+                        }
+                    }
+                    let arr = now + latency(worker, now);
+                    queue.push(
+                        arr,
+                        Event::RequestAtMaster {
+                            worker,
+                            result: Some(CompletedChunk {
+                                assignment_id: assignment.id,
+                                compute_time,
+                            }),
+                        },
+                    );
+                }
+            }
+        }
+
+        let hung = end_time.is_none() && !master.is_complete();
+        Outcome {
+            parallel_time: end_time.unwrap_or(f64::INFINITY),
+            hung,
+            finished: master.table().finished_count(),
+            n,
+            stats: master.stats().clone(),
+            wasted_work,
+            useful_work,
+            failures: prm.failures.count(),
+            result_digest: 0.0,
+        }
+    }
+}
+
+fn mark_lost(tr: &mut Trace, id: u64) {
+    if let Some(r) = tr.records.iter_mut().find(|r| r.assignment_id == id) {
+        r.lost = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppKind;
+
+    fn workload(n: usize) -> Workload {
+        Workload::build(AppKind::Uniform, n, 1e-3, 42)
+    }
+
+    fn base(n: usize, p: usize, technique: Technique, rdlb: bool) -> SimParams {
+        SimParams::new(workload(n), Topology::flat(p), technique, rdlb)
+    }
+
+    #[test]
+    fn baseline_completes_and_speeds_up() {
+        let serial = {
+            let sim = SimCluster::new(base(2000, 1, Technique::Ss, false)).unwrap();
+            sim.run().unwrap()
+        };
+        let par = {
+            let sim = SimCluster::new(base(2000, 8, Technique::Fac, false)).unwrap();
+            sim.run().unwrap()
+        };
+        assert!(serial.completed() && par.completed());
+        assert!(
+            par.parallel_time < serial.parallel_time / 4.0,
+            "no speedup: serial {} parallel {}",
+            serial.parallel_time,
+            par.parallel_time
+        );
+    }
+
+    #[test]
+    fn all_techniques_complete_baseline() {
+        for t in Technique::ALL {
+            let sim = SimCluster::new(base(1000, 4, t, false)).unwrap();
+            let o = sim.run().unwrap();
+            assert!(o.completed(), "{t} failed to complete");
+            assert_eq!(o.finished, 1000, "{t}");
+            assert_eq!(o.stats.duplicate_iterations, 0, "{t} duplicated in baseline");
+        }
+    }
+
+    #[test]
+    fn failure_without_rdlb_hangs() {
+        let mut p = base(1000, 4, Technique::Fac, false);
+        p.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+        let o = SimCluster::new(p).unwrap().run().unwrap();
+        assert!(o.hung, "must hang (paper Fig. 1b)");
+        assert!(o.parallel_time.is_infinite());
+        assert!(o.finished < 1000);
+    }
+
+    #[test]
+    fn failure_with_rdlb_completes() {
+        let mut p = base(1000, 4, Technique::Fac, true);
+        p.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+        let o = SimCluster::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "rDLB must survive the failure");
+        assert_eq!(o.finished, 1000);
+        assert!(o.stats.rescheduled_chunks > 0);
+    }
+
+    #[test]
+    fn p_minus_1_failures_with_rdlb_completes() {
+        let mut p = base(500, 8, Technique::Gss, true);
+        p.failures = FailurePlan::random(8, 7, 0.05, 3);
+        let o = SimCluster::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "P-1 failures must be tolerated");
+        assert_eq!(o.finished, 500);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let mk = || {
+            let mut p = base(800, 4, Technique::Fac, true);
+            p.failures = FailurePlan::random(4, 2, 0.1, 9);
+            SimCluster::new(p).unwrap().run().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.parallel_time, b.parallel_time);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn pe_perturbation_slows_execution() {
+        let topo = Topology::new(2, 2);
+        let mk = |perturb: PerturbationModel| {
+            let mut p = SimParams::new(workload(2000), topo, Technique::Ss, false);
+            p.perturbations = perturb;
+            SimCluster::new(p).unwrap().run().unwrap()
+        };
+        let clean = mk(PerturbationModel::none());
+        let slow = mk(PerturbationModel::pe_slowdown(1, 0.25));
+        assert!(slow.parallel_time > clean.parallel_time, "slowdown had no effect");
+    }
+
+    #[test]
+    fn latency_perturbation_hurts_more_without_rdlb() {
+        // Chunks assigned to the delayed node straggle; rDLB lets other PEs
+        // duplicate them (Fig. 2c) so the completed run is faster.
+        let topo = Topology::new(2, 4);
+        let mk = |rdlb: bool| {
+            let mut p = SimParams::new(workload(4000), topo, Technique::Fac, rdlb);
+            p.perturbations = PerturbationModel::latency(1, 0.5);
+            SimCluster::new(p).unwrap().run().unwrap()
+        };
+        let without = mk(false);
+        let with = mk(true);
+        assert!(without.completed() && with.completed());
+        assert!(
+            with.parallel_time <= without.parallel_time,
+            "rDLB regressed: {} > {}",
+            with.parallel_time,
+            without.parallel_time
+        );
+    }
+
+    #[test]
+    fn rdlb_baseline_costs_nothing_material() {
+        // §3.2: rescheduling rides on tail idle time — in a healthy run the
+        // completed time must be ~unchanged.
+        let a = SimCluster::new(base(2000, 8, Technique::Fac, false)).unwrap().run().unwrap();
+        let b = SimCluster::new(base(2000, 8, Technique::Fac, true)).unwrap().run().unwrap();
+        let ratio = b.parallel_time / a.parallel_time;
+        assert!(ratio < 1.05, "rDLB overhead ratio {ratio}");
+    }
+
+    #[test]
+    fn trace_records_lost_and_rescheduled() {
+        let mut p = base(200, 4, Technique::Fac, true);
+        p.failures = FailurePlan::explicit(4, &[(1, 0.005)]);
+        let (o, tr) = SimCluster::new(p).unwrap().run_traced().unwrap();
+        assert!(o.completed());
+        assert!(tr.lost().count() > 0, "failure must lose at least one chunk");
+        assert!(tr.rescheduled().count() > 0);
+    }
+
+    #[test]
+    fn master_alone_finishes_everything() {
+        let o = SimCluster::new(base(300, 1, Technique::Gss, true)).unwrap().run().unwrap();
+        assert!(o.completed());
+    }
+}

@@ -1,0 +1,128 @@
+//! Event queue for the discrete-event engine: a binary heap ordered by
+//! virtual time with a sequence tiebreaker for determinism.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::Assignment;
+
+/// Simulator events.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A worker's (request ± piggy-backed result) reaches the master.
+    RequestAtMaster { worker: usize, result: Option<CompletedChunk> },
+    /// The master's chunk assignment reaches the worker.
+    ReplyAtWorker { worker: usize, assignment: Assignment },
+    /// The worker finishes computing a chunk locally.
+    ComputeDone { worker: usize, assignment: Assignment, compute_time: f64 },
+}
+
+/// Worker-side record of a finished chunk travelling back to the master.
+#[derive(Debug, Clone)]
+pub struct CompletedChunk {
+    pub assignment_id: u64,
+    pub compute_time: f64,
+}
+
+struct Entry {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: smaller time first; FIFO within equal times.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-time event queue.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, event: Event) {
+        assert!(time.is_finite() && time >= 0.0, "bad event time {time}");
+        self.heap.push(Entry { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(w: usize) -> Event {
+        Event::RequestAtMaster { worker: w, result: None }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, req(3));
+        q.push(1.0, req(1));
+        q.push(2.0, req(2));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn fifo_within_equal_times() {
+        let mut q = EventQueue::new();
+        q.push(1.0, req(10));
+        q.push(1.0, req(11));
+        q.push(1.0, req(12));
+        let workers: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|(_, e)| match e {
+                Event::RequestAtMaster { worker, .. } => worker,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(workers, vec![10, 11, 12]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad event time")]
+    fn rejects_nan_time() {
+        EventQueue::new().push(f64::NAN, req(0));
+    }
+}

@@ -1,0 +1,124 @@
+//! Fail-stop failure plans (§4.1): ranks "make exit calls at arbitrary times
+//! during execution"; failed cores do not recover; the master (rank 0) is
+//! not failed (it is the paper's acknowledged single point of failure).
+
+use crate::util::Rng;
+
+/// Per-rank failure times; `None` = never fails.
+#[derive(Debug, Clone)]
+pub struct FailurePlan {
+    times: Vec<Option<f64>>,
+}
+
+impl FailurePlan {
+    /// Nobody fails.
+    pub fn none(p: usize) -> Self {
+        FailurePlan { times: vec![None; p] }
+    }
+
+    /// Fail `count` distinct ranks (never rank 0) at seeded-uniform times in
+    /// `(0, horizon)` — the paper's 1, P/2 and P−1 scenarios use
+    /// `count ∈ {1, P/2, P−1}`.
+    pub fn random(p: usize, count: usize, horizon: f64, seed: u64) -> Self {
+        assert!(count <= p.saturating_sub(1), "can fail at most P-1 ranks (master survives)");
+        assert!(horizon > 0.0);
+        let mut rng = Rng::new(seed ^ 0xFA11);
+        let mut times = vec![None; p];
+        // Choose among ranks 1..P.
+        let chosen = rng.sample_indices(p - 1, count);
+        for idx in chosen {
+            let rank = idx + 1;
+            times[rank] = Some(rng.uniform(horizon * 0.05, horizon));
+        }
+        FailurePlan { times }
+    }
+
+    /// Explicit failure times (tests / conceptual figures).
+    pub fn explicit(p: usize, pairs: &[(usize, f64)]) -> Self {
+        let mut times = vec![None; p];
+        for &(rank, t) in pairs {
+            assert!(rank != 0, "master cannot fail in this model");
+            assert!(rank < p);
+            times[rank] = Some(t);
+        }
+        FailurePlan { times }
+    }
+
+    pub fn p(&self) -> usize {
+        self.times.len()
+    }
+
+    /// Failure time of `rank`, if any.
+    pub fn time_of(&self, rank: usize) -> Option<f64> {
+        self.times[rank]
+    }
+
+    /// Is `rank` dead at time `t`?
+    pub fn is_failed(&self, rank: usize, t: f64) -> bool {
+        matches!(self.times[rank], Some(ft) if t >= ft)
+    }
+
+    /// Number of ranks that ever fail.
+    pub fn count(&self) -> usize {
+        self.times.iter().filter(|t| t.is_some()).count()
+    }
+
+    /// Ranks that survive the whole run.
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.p()).filter(|&r| self.times[r].is_none()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan() {
+        let f = FailurePlan::none(8);
+        assert_eq!(f.count(), 0);
+        assert!(!f.is_failed(3, 1e9));
+    }
+
+    #[test]
+    fn random_never_kills_master() {
+        for seed in 0..20 {
+            let f = FailurePlan::random(16, 15, 100.0, seed);
+            assert_eq!(f.count(), 15);
+            assert!(f.time_of(0).is_none(), "seed {seed} killed the master");
+        }
+    }
+
+    #[test]
+    fn random_times_within_horizon() {
+        let f = FailurePlan::random(256, 128, 50.0, 7);
+        for r in 0..256 {
+            if let Some(t) = f.time_of(r) {
+                assert!(t > 0.0 && t < 50.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = FailurePlan::random(32, 10, 10.0, 3);
+        let b = FailurePlan::random(32, 10, 10.0, 3);
+        for r in 0..32 {
+            assert_eq!(a.time_of(r), b.time_of(r));
+        }
+    }
+
+    #[test]
+    fn is_failed_threshold() {
+        let f = FailurePlan::explicit(4, &[(2, 5.0)]);
+        assert!(!f.is_failed(2, 4.999));
+        assert!(f.is_failed(2, 5.0));
+        assert_eq!(f.survivors(), vec![0, 1, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "P-1")]
+    fn cannot_fail_everyone() {
+        FailurePlan::random(4, 4, 10.0, 0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Discrete-event cluster simulator — the miniHPC substitute (DESIGN.md §3).
+//!
+//! The simulator replaces *physical* time with virtual time and nothing
+//! else: the identical [`crate::coordinator::Master`] object drives the
+//! scheduling, the identical [`crate::dls`] calculators size the chunks.
+//! What the simulator models:
+//!
+//!  * topology: nodes × ranks (16 × 16 = 256 PEs in the paper), master =
+//!    rank 0 which also computes;
+//!  * per-message latency (base + perturbation delay for a node's comms);
+//!  * per-chunk master scheduling overhead `h`;
+//!  * per-task execution times from the application cost model, dilated by
+//!    PE-availability perturbations (piecewise-constant speed integration);
+//!  * fail-stop failures: a failed rank goes silent — in-flight chunks are
+//!    lost, nothing is detected (exactly what the master of the MPI library
+//!    observes);
+//!  * hang detection: event queue exhausted with unfinished iterations ==
+//!    the paper's "wait indefinitely" case (reported, not simulated forever).
+
+mod engine;
+mod event;
+mod failure;
+mod outcome;
+mod perturbation;
+mod topology;
+
+pub use engine::{SimCluster, SimParams};
+pub use failure::FailurePlan;
+pub use outcome::Outcome;
+pub use perturbation::{Perturbation, PerturbationModel, PerturbKind};
+pub use topology::Topology;

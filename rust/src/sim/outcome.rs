@@ -1,0 +1,71 @@
+//! Simulation results.
+
+
+use crate::coordinator::MasterStats;
+
+/// Outcome of one simulated (or native) execution.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Parallel loop execution time T_par (seconds). `f64::INFINITY` when
+    /// the run hung (failures without rDLB).
+    pub parallel_time: f64,
+    /// True when the execution could never complete (the paper's
+    /// "wait indefinitely" case).
+    pub hung: bool,
+    /// Iterations finished when the run ended.
+    pub finished: usize,
+    /// Total iterations N.
+    pub n: usize,
+    /// Master counters (chunks, duplicates, waste).
+    pub stats: MasterStats,
+    /// Virtual seconds of compute spent on duplicated (wasted) iterations.
+    pub wasted_work: f64,
+    /// Virtual seconds of useful compute (first completions).
+    pub useful_work: f64,
+    /// Number of PEs that failed during the run.
+    pub failures: usize,
+    /// Digest of the computed results (sum over first completions); 0 in
+    /// the virtual-time simulator, populated by the native runtime for
+    /// integrity checks across failure scenarios.
+    pub result_digest: f64,
+}
+
+impl Outcome {
+    pub fn completed(&self) -> bool {
+        !self.hung && self.finished == self.n
+    }
+
+    /// Cost of robustness: executed-but-wasted fraction of total compute.
+    pub fn waste_fraction(&self) -> f64 {
+        let total = self.useful_work + self.wasted_work;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.wasted_work / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_logic() {
+        let mut o = Outcome {
+            parallel_time: 10.0,
+            hung: false,
+            finished: 100,
+            n: 100,
+            stats: MasterStats::default(),
+            wasted_work: 1.0,
+            useful_work: 9.0,
+            failures: 0,
+            result_digest: 0.0,
+        };
+        assert!(o.completed());
+        assert!((o.waste_fraction() - 0.1).abs() < 1e-12);
+        o.hung = true;
+        assert!(!o.completed());
+    }
+}

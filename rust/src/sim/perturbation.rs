@@ -1,0 +1,211 @@
+//! Perturbation models (§4.1 "Injecting failures and perturbations"):
+//!
+//!  * **PE availability**: a CPU burner co-scheduled on one node — modelled
+//!    as a speed factor < 1 applied to every rank of that node over a time
+//!    window;
+//!  * **network latency**: PMPI-style interposition adding a fixed delay to
+//!    *all* communications to/from one node (the paper adds 10 s);
+//!  * **combined**: both at once.
+
+
+use super::topology::Topology;
+
+/// One perturbation in effect over `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Perturbation {
+    pub kind: PerturbKind,
+    pub start: f64,
+    /// Exclusive end; `f64::INFINITY` = rest of the execution (the paper's
+    /// burner/interposer run for the whole experiment).
+    pub end: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PerturbKind {
+    /// All ranks of `node` run at `factor` (< 1) of nominal speed.
+    PeSlowdown { node: usize, factor: f64 },
+    /// Every message to/from `node` is delayed by `delay` seconds.
+    Latency { node: usize, delay: f64 },
+}
+
+/// The set of perturbations for one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct PerturbationModel {
+    pub perturbations: Vec<Perturbation>,
+}
+
+impl PerturbationModel {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Paper scenario "PE perturbations": all PEs of one node slowed for the
+    /// whole run.
+    pub fn pe_slowdown(node: usize, factor: f64) -> Self {
+        PerturbationModel {
+            perturbations: vec![Perturbation {
+                kind: PerturbKind::PeSlowdown { node, factor },
+                start: 0.0,
+                end: f64::INFINITY,
+            }],
+        }
+    }
+
+    /// Paper scenario "latency perturbations": +`delay` on all comms of one
+    /// node for the whole run (paper uses 10 s).
+    pub fn latency(node: usize, delay: f64) -> Self {
+        PerturbationModel {
+            perturbations: vec![Perturbation {
+                kind: PerturbKind::Latency { node, delay },
+                start: 0.0,
+                end: f64::INFINITY,
+            }],
+        }
+    }
+
+    /// Paper scenario "combined": PE + latency on the same node.
+    pub fn combined(node: usize, factor: f64, delay: f64) -> Self {
+        let mut m = Self::pe_slowdown(node, factor);
+        m.perturbations.extend(Self::latency(node, delay).perturbations);
+        m
+    }
+
+    /// Instantaneous speed factor of `rank` at time `t` (product of active
+    /// slowdowns on its node; 1.0 unperturbed).
+    pub fn speed(&self, topo: &Topology, rank: usize, t: f64) -> f64 {
+        let node = topo.node_of(rank);
+        let mut s = 1.0;
+        for p in &self.perturbations {
+            if let PerturbKind::PeSlowdown { node: n, factor } = p.kind {
+                if n == node && t >= p.start && t < p.end {
+                    s *= factor;
+                }
+            }
+        }
+        s.max(1e-6)
+    }
+
+    /// Extra one-way message latency for comms to/from `rank` at time `t`.
+    pub fn extra_latency(&self, topo: &Topology, rank: usize, t: f64) -> f64 {
+        let node = topo.node_of(rank);
+        let mut d = 0.0;
+        for p in &self.perturbations {
+            if let PerturbKind::Latency { node: n, delay } = p.kind {
+                if n == node && t >= p.start && t < p.end {
+                    d += delay;
+                }
+            }
+        }
+        d
+    }
+
+    /// Finish time of `work` seconds-at-speed-1 of compute started at `t0`
+    /// on `rank`, integrating the piecewise-constant speed profile.
+    pub fn finish_time(&self, topo: &Topology, rank: usize, t0: f64, work: f64) -> f64 {
+        if work <= 0.0 {
+            return t0;
+        }
+        let node = topo.node_of(rank);
+        // Boundaries where this node's speed may change.
+        let mut bounds: Vec<f64> = self
+            .perturbations
+            .iter()
+            .filter(|p| matches!(p.kind, PerturbKind::PeSlowdown { node: n, .. } if n == node))
+            .flat_map(|p| [p.start, p.end])
+            .filter(|b| b.is_finite() && *b > t0)
+            .collect();
+        bounds.sort_by(|a, b| a.total_cmp(b));
+        bounds.dedup();
+
+        let mut cur = t0;
+        let mut left = work;
+        for b in bounds {
+            let s = self.speed(topo, rank, cur);
+            let span = b - cur;
+            if left <= span * s {
+                return cur + left / s;
+            }
+            left -= span * s;
+            cur = b;
+        }
+        cur + left / self.speed(topo, rank, cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unperturbed_speed_one() {
+        let m = PerturbationModel::none();
+        let topo = Topology::default();
+        assert_eq!(m.speed(&topo, 42, 5.0), 1.0);
+        assert_eq!(m.extra_latency(&topo, 42, 5.0), 0.0);
+        assert_eq!(m.finish_time(&topo, 42, 3.0, 2.0), 5.0);
+    }
+
+    #[test]
+    fn pe_slowdown_hits_whole_node_only() {
+        let topo = Topology::new(2, 4);
+        let m = PerturbationModel::pe_slowdown(1, 0.5);
+        for r in 0..4 {
+            assert_eq!(m.speed(&topo, r, 1.0), 1.0, "node 0 unaffected");
+        }
+        for r in 4..8 {
+            assert_eq!(m.speed(&topo, r, 1.0), 0.5, "node 1 slowed");
+        }
+    }
+
+    #[test]
+    fn latency_delay_added() {
+        let topo = Topology::new(2, 2);
+        let m = PerturbationModel::latency(1, 10.0);
+        assert_eq!(m.extra_latency(&topo, 3, 0.0), 10.0);
+        assert_eq!(m.extra_latency(&topo, 0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn finish_time_across_window() {
+        let topo = Topology::flat(1);
+        // Slow to 0.5 during [2, 4): 1s work started at t=1.5 runs 0.5s at
+        // speed 1 (0.5 done), then needs 1.0s more at 0.5 speed... 0.5 work
+        // at speed .5 = 1s → finish at 3.0.
+        let m = PerturbationModel {
+            perturbations: vec![Perturbation {
+                kind: PerturbKind::PeSlowdown { node: 0, factor: 0.5 },
+                start: 2.0,
+                end: 4.0,
+            }],
+        };
+        let f = m.finish_time(&topo, 0, 1.5, 1.0);
+        assert!((f - 3.0).abs() < 1e-12, "finish {f}");
+        // Work that outlives the window resumes at full speed.
+        let f2 = m.finish_time(&topo, 0, 1.5, 2.0);
+        // 0.5 @1 (→t2), 1.0 @0.5 over [2,4) (consumes 1.0 work), 0.5 @1 → 4.5
+        assert!((f2 - 4.5).abs() < 1e-12, "finish {f2}");
+    }
+
+    #[test]
+    fn combined_has_both_effects() {
+        let topo = Topology::new(2, 2);
+        let m = PerturbationModel::combined(0, 0.25, 10.0);
+        assert_eq!(m.speed(&topo, 1, 0.0), 0.25);
+        assert_eq!(m.extra_latency(&topo, 0, 0.0), 10.0);
+    }
+
+    #[test]
+    fn windows_respected() {
+        let topo = Topology::flat(2);
+        let m = PerturbationModel {
+            perturbations: vec![Perturbation {
+                kind: PerturbKind::Latency { node: 0, delay: 3.0 },
+                start: 1.0,
+                end: 2.0,
+            }],
+        };
+        assert_eq!(m.extra_latency(&topo, 0, 0.5), 0.0);
+        assert_eq!(m.extra_latency(&topo, 0, 1.5), 3.0);
+        assert_eq!(m.extra_latency(&topo, 0, 2.0), 0.0);
+    }
+}

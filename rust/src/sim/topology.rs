@@ -1,0 +1,80 @@
+//! Cluster topology: nodes × ranks-per-node, mirroring miniHPC's 16 dual-
+//! socket nodes with 16 ranks each (256 PEs, §4.1).
+
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+}
+
+impl Default for Topology {
+    /// The paper's miniHPC configuration.
+    fn default() -> Self {
+        Topology { nodes: 16, ranks_per_node: 16 }
+    }
+}
+
+impl Topology {
+    pub fn new(nodes: usize, ranks_per_node: usize) -> Self {
+        assert!(nodes > 0 && ranks_per_node > 0);
+        Topology { nodes, ranks_per_node }
+    }
+
+    /// Single-node topology with `p` ranks.
+    pub fn flat(p: usize) -> Self {
+        Topology { nodes: 1, ranks_per_node: p.max(1) }
+    }
+
+    pub fn total_pes(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    /// Node hosting a rank (block placement, like `mpirun --map-by node`
+    /// with fill ordering).
+    #[inline]
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    /// Ranks hosted on `node`.
+    pub fn ranks_on(&self, node: usize) -> std::ops::Range<usize> {
+        let lo = node * self.ranks_per_node;
+        lo..lo + self.ranks_per_node
+    }
+
+    /// The master's node (rank 0).
+    pub fn master_node(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let t = Topology::default();
+        assert_eq!(t.total_pes(), 256);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(255), 15);
+    }
+
+    #[test]
+    fn rank_node_roundtrip() {
+        let t = Topology::new(4, 8);
+        for node in 0..4 {
+            for rank in t.ranks_on(node) {
+                assert_eq!(t.node_of(rank), node);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_topology() {
+        let t = Topology::flat(7);
+        assert_eq!(t.total_pes(), 7);
+        assert_eq!(t.node_of(6), 0);
+    }
+}

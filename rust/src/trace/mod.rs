@@ -1,0 +1,166 @@
+//! Execution traces: per-chunk Gantt-style records, enough to regenerate the
+//! paper's conceptual Figures 1 and 2 and to debug scheduling behaviour.
+
+
+/// Lifecycle of one chunk assignment as observed by the simulator/runtime.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub assignment_id: u64,
+    pub worker: usize,
+    /// First task id and count (tasks of a chunk are ascending).
+    pub first_task: u32,
+    pub task_count: usize,
+    /// Master clock when the chunk was assigned.
+    pub assigned_at: f64,
+    /// Worker clock when compute started (reply arrival); None if the reply
+    /// never reached a live worker.
+    pub started_at: Option<f64>,
+    /// Worker clock when compute finished; None if lost to a failure.
+    pub finished_at: Option<f64>,
+    /// Issued by the rDLB re-dispatch phase?
+    pub rescheduled: bool,
+    /// Chunk evaporated due to a fail-stop failure.
+    pub lost: bool,
+}
+
+/// A full execution trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    pub fn push(&mut self, r: TraceRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records of lost (failure-evaporated) chunks.
+    pub fn lost(&self) -> impl Iterator<Item = &TraceRecord> {
+        self.records.iter().filter(|r| r.lost)
+    }
+
+    /// Records issued by the rDLB phase.
+    pub fn rescheduled(&self) -> impl Iterator<Item = &TraceRecord> {
+        self.records.iter().filter(|r| r.rescheduled)
+    }
+
+    /// CSV dump (one row per record) — feed to any plotting tool for a
+    /// Gantt chart like the paper's Figures 1–2.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "assignment_id,worker,first_task,task_count,assigned_at,started_at,finished_at,rescheduled,lost\n",
+        );
+        for r in &self.records {
+            use std::fmt::Write;
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{:.9},{},{},{},{}",
+                r.assignment_id,
+                r.worker,
+                r.first_task,
+                r.task_count,
+                r.assigned_at,
+                r.started_at.map(|t| format!("{t:.9}")).unwrap_or_default(),
+                r.finished_at.map(|t| format!("{t:.9}")).unwrap_or_default(),
+                r.rescheduled,
+                r.lost,
+            );
+        }
+        s
+    }
+
+    /// Plain-text Gantt sketch (workers as rows, time buckets as columns) —
+    /// handy in terminals; `width` is the number of time buckets.
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let Some(end) = self
+            .records
+            .iter()
+            .filter_map(|r| r.finished_at.or(r.started_at))
+            .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |a| a.max(t))))
+        else {
+            return String::from("(empty trace)\n");
+        };
+        let p = self.records.iter().map(|r| r.worker).max().unwrap_or(0) + 1;
+        let scale = end.max(1e-12) / width as f64;
+        let mut rows = vec![vec![b'.'; width]; p];
+        for r in &self.records {
+            let (Some(s), Some(f)) = (r.started_at, r.finished_at) else { continue };
+            let lo = ((s / scale) as usize).min(width - 1);
+            let hi = ((f / scale) as usize).clamp(lo, width - 1);
+            let ch = if r.rescheduled { b'R' } else { b'#' };
+            for c in &mut rows[r.worker][lo..=hi] {
+                *c = ch;
+            }
+        }
+        let mut out = String::new();
+        for (w, row) in rows.iter().enumerate() {
+            out.push_str(&format!("P{w:<3} |"));
+            out.push_str(std::str::from_utf8(row).unwrap());
+            out.push('\n');
+        }
+        out.push_str(&format!("     0 .. {end:.3}s  (#=primary R=rescheduled)\n"));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, worker: usize, s: f64, f: f64, resched: bool) -> TraceRecord {
+        TraceRecord {
+            assignment_id: id,
+            worker,
+            first_task: 0,
+            task_count: 1,
+            assigned_at: s,
+            started_at: Some(s),
+            finished_at: Some(f),
+            rescheduled: resched,
+            lost: false,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = Trace::default();
+        t.push(rec(0, 0, 0.0, 1.0, false));
+        t.push(rec(1, 1, 0.5, 2.0, true));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("assignment_id,"));
+    }
+
+    #[test]
+    fn filters() {
+        let mut t = Trace::default();
+        t.push(rec(0, 0, 0.0, 1.0, false));
+        t.push(rec(1, 1, 0.5, 2.0, true));
+        assert_eq!(t.rescheduled().count(), 1);
+        assert_eq!(t.lost().count(), 0);
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let mut t = Trace::default();
+        t.push(rec(0, 0, 0.0, 1.0, false));
+        t.push(rec(1, 1, 1.0, 2.0, true));
+        let g = t.ascii_gantt(20);
+        assert!(g.contains("P0"));
+        assert!(g.contains('R'));
+        assert!(g.contains('#'));
+    }
+
+    #[test]
+    fn empty_gantt() {
+        assert!(Trace::default().ascii_gantt(10).contains("empty"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny benchmarking substrate (criterion is unavailable offline): warmup +
+//! timed iterations with mean/σ/min reporting, plus a table printer for the
+//! figure-regeneration benches.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+    let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    BenchResult { name: name.to_string(), iters: samples.len(), mean_s: mean, std_s: var.sqrt(), min_s: min }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Print one result in a criterion-like line.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<44} time: [{} ± {}]  (min {}, {} iters)",
+        r.name,
+        fmt_duration(r.mean_s),
+        fmt_duration(r.std_s),
+        fmt_duration(r.min_s),
+        r.iters
+    );
+}
+
+/// Print a markdown-ish table header + rows (figure benches).
+pub fn table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    println!("{}", header.join(" | "));
+    println!("{}", header.iter().map(|_| "---").collect::<Vec<_>>().join(" | "));
+    for row in rows {
+        println!("{}", row.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+}

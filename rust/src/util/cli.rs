@@ -1,0 +1,147 @@
+//! Tiny CLI argument substrate (no external crates offline): subcommand +
+//! `--flag value` / `--flag` pairs with typed accessors and unknown-flag
+//! detection.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: `prog <subcommand> [--key value | --switch]...`.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags present without a value (`--rdlb`).
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                }
+                _ => out.switches.push(key.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")))
+            .transpose()
+    }
+
+    /// Boolean flag: `--key` switch, or `--key true|false`; default otherwise.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        if self.switches.iter().any(|s| s == key) {
+            return Ok(true);
+        }
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes" | "on") => Ok(true),
+            Some("false" | "0" | "no" | "off") => Ok(false),
+            Some(v) => bail!("--{key} expects true/false, got {v:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["run", "--app", "psia", "--pes", "64", "--rdlb"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("app"), Some("psia"));
+        assert_eq!(a.usize_or("pes", 1).unwrap(), 64);
+        assert!(a.bool_or("rdlb", false).unwrap());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["run", "--seed=42", "--rdlb=false"]);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+        assert!(!a.bool_or("rdlb", true).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]);
+        assert_eq!(a.str_or("app", "mandelbrot"), "mandelbrot");
+        assert_eq!(a.usize_opt("tasks").unwrap(), None);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["run", "--offset", "-3.5"]);
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["run".to_string(), "bogus".to_string()]).is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse(&["run", "--pes", "many"]);
+        assert!(a.usize_or("pes", 1).is_err());
+    }
+}

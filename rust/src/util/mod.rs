@@ -1,0 +1,12 @@
+//! Small shared substrates: deterministic PRNG and statistics helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod stats;
+
+pub use par::{default_threads, par_map};
+pub use rng::Rng;
+pub use stats::Summary;

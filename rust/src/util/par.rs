@@ -1,0 +1,61 @@
+//! Tiny scoped-thread parallel map (no rayon dependency) for fanning
+//! replications/cells of an experiment over cores.
+
+/// Apply `f` to every item on up to `threads` worker threads, preserving
+/// input order in the output.
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(work);
+    let slots_ref = std::sync::Mutex::new(&mut slots);
+
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let item = { queue.lock().unwrap().pop() };
+                let Some((idx, item)) = item else { break };
+                let r = f(item);
+                slots_ref.lock().unwrap()[idx] = Some(r);
+            });
+        }
+    });
+    slots.into_iter().map(|o| o.expect("worker panicked")).collect()
+}
+
+/// Default worker-thread count for experiment fan-out.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map((0..100).collect(), 8, |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let out = par_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = par_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+}

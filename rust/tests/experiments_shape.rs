@@ -1,0 +1,158 @@
+//! Shape tests over the experiment drivers: run the figure pipelines at
+//! smoke scale and assert the qualitative results the paper reports
+//! (DESIGN.md §6 "expected shape").
+
+use rdlb::apps::AppKind;
+use rdlb::experiments::{
+    cells_to_csv, fig3_failures, fig3_perturbations, fig4_resilience, fig5_flexibility,
+    perturb_to_csv, robustness_to_csv, Scale,
+};
+
+fn smoke() -> Scale {
+    let mut s = Scale::smoke();
+    s.reps = 2;
+    s
+}
+
+#[test]
+fn fig3_failures_all_cells_complete() {
+    let data = fig3_failures(AppKind::Uniform, &smoke()).unwrap();
+    // 13 techniques × 4 scenarios.
+    assert_eq!(data.cells.len(), 13 * 4);
+    for c in &data.cells {
+        assert_eq!(c.hung_fraction, 0.0, "{} {} hung with rDLB", c.technique, c.scenario);
+        assert!(c.mean_time.is_finite(), "{} {}", c.technique, c.scenario);
+        assert!(c.rdlb);
+    }
+    // CSV renders every cell.
+    let csv = cells_to_csv(&data.cells);
+    assert_eq!(csv.lines().count(), 1 + data.cells.len());
+}
+
+#[test]
+fn fig3_failure_cost_increases_with_failure_count() {
+    let data = fig3_failures(AppKind::Uniform, &smoke()).unwrap();
+    // For each technique: T(P-1 failures) >= T(baseline).
+    for technique in ["FAC", "SS", "GSS"] {
+        let t = |scenario: &str| {
+            data.cells
+                .iter()
+                .find(|c| c.technique == technique && c.scenario == scenario)
+                .unwrap()
+                .mean_time
+        };
+        let baseline = t("baseline");
+        let worst = t("15-failures"); // smoke scale = 16 PEs ⇒ P−1 = 15
+        assert!(
+            worst > baseline,
+            "{technique}: P-1 failures ({worst}) not worse than baseline ({baseline})"
+        );
+    }
+}
+
+#[test]
+fn fig4_resilience_most_robust_is_one() {
+    let data = fig3_failures(AppKind::Uniform, &smoke()).unwrap();
+    let tables = fig4_resilience(&data);
+    assert_eq!(tables.len(), 3, "three failure scenarios");
+    for t in &tables {
+        let min_rho = t
+            .rows
+            .iter()
+            .map(|r| r.rho)
+            .filter(|r| r.is_finite())
+            .fold(f64::INFINITY, f64::min);
+        assert!((min_rho - 1.0).abs() < 1e-9, "{}: min ρ {min_rho}", t.scenario);
+        assert_eq!(t.rows.len(), 13);
+        for r in &t.rows {
+            assert!(r.rho >= 1.0 - 1e-9, "{} ρ {}", r.technique, r.rho);
+        }
+    }
+    let csv = robustness_to_csv(&tables);
+    assert!(csv.lines().count() > 13 * 3);
+}
+
+#[test]
+fn fig5_flexibility_rdlb_improves_latency_scenarios() {
+    let cells = fig3_perturbations(AppKind::Uniform, &smoke()).unwrap();
+    // Shape (v): under latency/combined perturbation, rDLB times are no
+    // worse on aggregate (and typically much better).
+    let mut speedups = Vec::new();
+    for c in &cells {
+        if c.scenario.contains("latency") || c.scenario.contains("combined") {
+            let tw = c.without_rdlb.time_or_inf();
+            let tr = c.with_rdlb.time_or_inf();
+            if tw.is_finite() && tr.is_finite() && tr > 0.0 {
+                speedups.push(tw / tr);
+            }
+        }
+    }
+    assert!(!speedups.is_empty());
+    let mean_speedup = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    assert!(
+        mean_speedup > 1.0,
+        "rDLB should speed up perturbed runs on average, got {mean_speedup}"
+    );
+
+    let tables = fig5_flexibility(&cells);
+    assert_eq!(tables.len(), 3, "three perturbation scenarios");
+    for (without, with) in &tables {
+        assert_eq!(without.rows.len(), 13);
+        assert_eq!(with.rows.len(), 13);
+    }
+    let csv = perturb_to_csv(&cells);
+    assert!(csv.starts_with("technique,scenario"));
+}
+
+#[test]
+fn fig5_rdlb_boosts_adaptive_flexibility_under_combined() {
+    // The paper's headline: AWF-* flexibility improves dramatically with
+    // rDLB under combined perturbations. At smoke scale we assert the
+    // direction: ρ_flex(with) ≤ ρ_flex(without) for the AWF family mean.
+    let cells = fig3_perturbations(AppKind::Uniform, &smoke()).unwrap();
+    let tables = fig5_flexibility(&cells);
+    let combined = tables
+        .iter()
+        .find(|(w, _)| w.scenario.starts_with("combined"))
+        .expect("combined scenario present");
+    let awf_mean = |rows: &[rdlb::robustness::RobustnessRow]| {
+        let v: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.technique.starts_with("AWF"))
+            .map(|r| if r.rho.is_finite() { r.rho } else { 1e6 })
+            .collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    let without = awf_mean(&combined.0.rows);
+    let with = awf_mean(&combined.1.rows);
+    assert!(
+        with <= without * 1.5,
+        "AWF flexibility should not degrade with rDLB: {with} vs {without}"
+    );
+}
+
+#[test]
+fn conceptual_traces_reproduce_figures_1_and_2() {
+    use rdlb::experiments::{conceptual_trace, ConceptualScenario};
+    // Fig. 1b: hang; Fig. 1c: completes with rescheduling.
+    let (hang, _) = conceptual_trace(ConceptualScenario::Failure { rdlb: false }).unwrap();
+    assert!(hang.hung);
+    let (ok, trace) = conceptual_trace(ConceptualScenario::Failure { rdlb: true }).unwrap();
+    assert!(ok.completed());
+    assert!(trace.rescheduled().count() >= 1);
+    assert!(trace.lost().count() >= 1);
+    // Fig. 2: completes both ways, rDLB faster.
+    let (slow, _) = conceptual_trace(ConceptualScenario::Perturbation { rdlb: false }).unwrap();
+    let (fast, _) = conceptual_trace(ConceptualScenario::Perturbation { rdlb: true }).unwrap();
+    assert!(slow.completed() && fast.completed());
+    assert!(fast.parallel_time < slow.parallel_time);
+}
+
+#[test]
+fn theory_validation_within_tolerance() {
+    let rows = rdlb::experiments::theory_validation(12).unwrap();
+    assert_eq!(rows.len(), 4);
+    for (q, model, sim, err) in rows {
+        assert!(err < 0.1, "q={q}: model {model} vs sim {sim} (err {err})");
+    }
+}

@@ -1,0 +1,159 @@
+//! Failure-injection edge cases (DESIGN.md §9): failures before the first
+//! request, during the last chunk, simultaneous mass failures, failures of
+//! PEs that only ever received rescheduled work, and perturbation windows
+//! that open/close mid-run.
+
+use rdlb::apps::{AppKind, Workload};
+use rdlb::dls::Technique;
+use rdlb::sim::{FailurePlan, Perturbation, PerturbationModel, PerturbKind, SimCluster, SimParams, Topology};
+
+fn base(n: usize, p: usize, technique: Technique, rdlb: bool) -> SimParams {
+    SimParams::new(
+        Workload::build(AppKind::Uniform, n, 1e-3, 7),
+        Topology::flat(p),
+        technique,
+        rdlb,
+    )
+}
+
+#[test]
+fn failure_immediately_after_startup() {
+    // A PE that dies at t=0+ε has already sent its initial request (MPI
+    // ranks request at startup); the master unknowingly assigns it a chunk
+    // which evaporates. Without rDLB that chunk hangs the run; with rDLB the
+    // survivors re-execute it.
+    let mk = |rdlb: bool| {
+        let mut prm = base(500, 4, Technique::Fac, rdlb);
+        prm.failures = FailurePlan::explicit(4, &[(3, 1e-9)]);
+        SimCluster::new(prm).unwrap().run().unwrap()
+    };
+    assert!(mk(false).hung, "lost startup chunk must hang without rDLB");
+    let o = mk(true);
+    assert!(o.completed(), "{o:?}");
+}
+
+#[test]
+fn failure_during_final_chunk() {
+    // The last unfinished chunk's owner dies mid-compute: only rDLB saves it.
+    let mk = |rdlb: bool| {
+        let mut prm = base(100, 2, Technique::Gss, rdlb);
+        // Worker 1 gets ~half the work; it dies early into its compute.
+        prm.failures = FailurePlan::explicit(2, &[(1, 0.02)]);
+        SimCluster::new(prm).unwrap().run().unwrap()
+    };
+    assert!(mk(false).hung);
+    let o = mk(true);
+    assert!(o.completed());
+    assert_eq!(o.finished, 100);
+}
+
+#[test]
+fn simultaneous_mass_failure() {
+    // All non-master PEs die at the same instant.
+    let p = 16;
+    let pairs: Vec<(usize, f64)> = (1..p).map(|w| (w, 0.05)).collect();
+    let mut prm = base(2000, p, Technique::Fac, true);
+    prm.failures = FailurePlan::explicit(p, &pairs);
+    let o = SimCluster::new(prm).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+    assert_eq!(o.failures, p - 1);
+}
+
+#[test]
+fn staggered_cascading_failures() {
+    // PEs die one after another through the run; rDLB keeps absorbing.
+    let p = 8;
+    let pairs: Vec<(usize, f64)> = (1..p).map(|w| (w, 0.02 * w as f64)).collect();
+    let mut prm = base(1500, p, Technique::AwfC, true);
+    prm.failures = FailurePlan::explicit(p, &pairs);
+    let o = SimCluster::new(prm).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+}
+
+#[test]
+fn ss_under_p_minus_1_failures_is_lossless_per_chunk() {
+    // SS loses at most one iteration per failed PE (chunk size 1) — the
+    // paper's minimal-lost-work argument.
+    let p = 8;
+    let mut prm = base(800, p, Technique::Ss, true);
+    prm.failures = FailurePlan::random(p, p - 1, 0.05, 3);
+    let o = SimCluster::new(prm).unwrap().run().unwrap();
+    assert!(o.completed());
+    // Duplicated work bounded by ~1 iteration per failure + tail overlap.
+    assert!(
+        o.stats.duplicate_iterations <= 4 * (p as u64 - 1) + 8,
+        "SS duplicated too much: {}",
+        o.stats.duplicate_iterations
+    );
+}
+
+#[test]
+fn windowed_perturbation_opens_and_closes() {
+    // A slowdown window that ends mid-run: finish time must account for the
+    // speed change (piecewise integration), and the run completes.
+    let mut prm = base(3000, 4, Technique::Fac, true);
+    prm.perturbations = PerturbationModel {
+        perturbations: vec![Perturbation {
+            kind: PerturbKind::PeSlowdown { node: 0, factor: 0.2 },
+            start: 0.1,
+            end: 0.3,
+        }],
+    };
+    let o = SimCluster::new(prm.clone()).unwrap().run().unwrap();
+    assert!(o.completed());
+    // Must be slower than unperturbed but not 5x slower (window closes).
+    let clean = {
+        let mut c = prm.clone();
+        c.perturbations = PerturbationModel::none();
+        SimCluster::new(c).unwrap().run().unwrap()
+    };
+    assert!(o.parallel_time > clean.parallel_time);
+    assert!(o.parallel_time < clean.parallel_time * 5.0);
+}
+
+#[test]
+fn failures_and_perturbations_combined() {
+    // Both at once: a slowed node AND failures elsewhere.
+    let topo = Topology::new(4, 2);
+    let mut prm = SimParams::new(
+        Workload::build(AppKind::Exponential, 2000, 1e-3, 11),
+        topo,
+        Technique::Fac,
+        true,
+    );
+    prm.failures = FailurePlan::explicit(8, &[(1, 0.05), (2, 0.08)]);
+    prm.perturbations = PerturbationModel::combined(3, 0.25, 0.05);
+    let o = SimCluster::new(prm).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+    assert_eq!(o.finished, 2000);
+}
+
+#[test]
+fn hang_detection_reports_partial_progress() {
+    let mut prm = base(1000, 4, Technique::Tss, false);
+    prm.failures = FailurePlan::explicit(4, &[(1, 0.01), (2, 0.012), (3, 0.014)]);
+    let o = SimCluster::new(prm).unwrap().run().unwrap();
+    assert!(o.hung);
+    assert!(o.finished > 0, "some work must have completed before the hang");
+    assert!(o.finished < 1000);
+    assert!(o.parallel_time.is_infinite());
+}
+
+#[test]
+fn zero_latency_zero_overhead_still_works() {
+    let mut prm = base(500, 4, Technique::Gss, true);
+    prm.base_latency = 0.0;
+    prm.sched_overhead = 0.0;
+    prm.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+    let o = SimCluster::new(prm).unwrap().run().unwrap();
+    assert!(o.completed());
+}
+
+#[test]
+fn tiny_workload_more_pes_than_tasks() {
+    let mut prm = base(3, 16, Technique::Fac, true);
+    prm.failures = FailurePlan::random(16, 8, 0.001, 5);
+    let o = SimCluster::new(prm).unwrap().run().unwrap();
+    assert!(o.completed());
+    assert_eq!(o.finished, 3);
+}

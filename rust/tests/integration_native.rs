@@ -1,0 +1,102 @@
+//! Integration tests: the native (OS-thread, wall-clock) runtime with real
+//! rust kernels and injected failures/perturbations.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdlb::apps::{CostModel, MandelbrotApp, PsiaApp};
+use rdlb::dls::Technique;
+use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+
+fn synthetic(n: usize, cost: f64) -> ComputeBackend {
+    ComputeBackend::Synthetic { model: Arc::new(CostModel::from_costs(vec![cost; n])), scale: 1.0 }
+}
+
+#[test]
+fn all_dynamic_techniques_complete_natively() {
+    for technique in Technique::DYNAMIC {
+        let p = NativeParams::new(128, 4, technique, true, synthetic(128, 5e-5));
+        let o = NativeRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "{technique}: {o:?}");
+        assert_eq!(o.finished, 128, "{technique}");
+    }
+}
+
+#[test]
+fn real_mandelbrot_under_failures() {
+    let app = MandelbrotApp { width: 64, height: 64, max_iter: 128, ..Default::default() };
+    let mut p = NativeParams::new(
+        app.n_tasks(),
+        6,
+        Technique::Fac,
+        true,
+        ComputeBackend::Mandelbrot(Arc::new(app)),
+    );
+    p = p.with_failures(5, 0.2); // P-1 of the compute threads die
+    p.timeout = Duration::from_secs(60);
+    let o = NativeRuntime::new(p).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+    assert_eq!(o.finished, 64 * 64);
+}
+
+#[test]
+fn real_psia_baseline() {
+    let app = PsiaApp::synthetic_with(
+        rdlb::apps::psia::PsiaParams { n_points: 256, img_size: 16, bin_size: 0.2 },
+        512,
+        3,
+    );
+    let p = NativeParams::new(512, 4, Technique::AwfC, true, ComputeBackend::Psia(Arc::new(app)));
+    let o = NativeRuntime::new(p).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+}
+
+#[test]
+fn pe_perturbation_dilates_compute() {
+    let mk = |slow: f64| {
+        let mut p = NativeParams::new(64, 2, Technique::Ss, true, synthetic(64, 2e-3));
+        p.slowdown[1] = slow;
+        p.timeout = Duration::from_secs(60);
+        NativeRuntime::new(p).unwrap().run().unwrap()
+    };
+    let clean = mk(1.0);
+    let slowed = mk(4.0);
+    assert!(clean.completed() && slowed.completed());
+    assert!(
+        slowed.parallel_time > clean.parallel_time,
+        "slowdown had no effect: {} vs {}",
+        slowed.parallel_time,
+        clean.parallel_time
+    );
+}
+
+#[test]
+fn combined_perturbation_with_rdlb_completes_and_duplicates() {
+    let mut p = NativeParams::new(96, 4, Technique::Fac, true, synthetic(96, 1e-3));
+    p.slowdown[2] = 8.0;
+    p.latency[2] = 0.1;
+    p.timeout = Duration::from_secs(60);
+    let o = NativeRuntime::new(p).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+    // The straggler's chunks should have been duplicated by idle PEs.
+    assert!(o.stats.rescheduled_chunks > 0, "no rescheduling happened: {o:?}");
+}
+
+#[test]
+fn hang_reported_not_deadlocked() {
+    let mut p = NativeParams::new(64, 3, Technique::Gss, false, synthetic(64, 1e-3));
+    p = p.with_failures(2, 0.01);
+    p.timeout = Duration::from_millis(500);
+    let t0 = std::time::Instant::now();
+    let o = NativeRuntime::new(p).unwrap().run().unwrap();
+    assert!(o.hung);
+    assert!(t0.elapsed() < Duration::from_secs(5), "hang detection too slow");
+}
+
+#[test]
+fn single_worker_executes_everything() {
+    let p = NativeParams::new(50, 1, Technique::Gss, true, synthetic(50, 1e-4));
+    let o = NativeRuntime::new(p).unwrap().run().unwrap();
+    assert!(o.completed());
+    assert_eq!(o.stats.finished_iterations, 50);
+}

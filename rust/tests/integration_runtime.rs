@@ -1,0 +1,130 @@
+//! Integration tests: PJRT runtime (AOT artifacts → rust execution) and the
+//! full native-runtime-over-PJRT path. Skipped (with a notice) when
+//! `artifacts/` has not been built yet (`make artifacts`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+use rdlb::runtime::{ComputeRequest, ComputeService, PjrtEngine};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_mandelbrot_matches_native_exactly_on_grid() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).unwrap();
+    let app = engine.mandelbrot_app();
+    // A sizeable deterministic sample across the plane.
+    let ids: Vec<u32> = (0..4096u32).map(|i| (i * 64) % app.n_tasks() as u32).collect();
+    let got = engine.mandelbrot_chunk(&ids).unwrap();
+    let want = app.compute_chunk(&ids);
+    let mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+    // Same f32 semantics, but XLA fuses/reorders float ops differently from
+    // rustc: pixels whose orbit grazes |z| == 2 can flip the escape test and
+    // then diverge. Allow <1% such pixels (see python/tests/test_mandelbrot.py
+    // for the same tolerance between two XLA graphs).
+    assert!(mismatches * 100 <= ids.len(), "{mismatches}/{} mismatched", ids.len());
+}
+
+#[test]
+fn pjrt_handles_ragged_and_padded_chunks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).unwrap();
+    let chunk = engine.manifest().mandelbrot.chunk;
+    // Exactly one executable width, one more than a width, and a tiny tail.
+    for len in [1usize, 7, chunk, chunk + 1, 2 * chunk + 3] {
+        let ids: Vec<u32> = (0..len as u32).collect();
+        let counts = engine.mandelbrot_chunk(&ids).unwrap();
+        assert_eq!(counts.len(), len, "len {len}");
+    }
+}
+
+#[test]
+fn pjrt_psia_images_match_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).unwrap();
+    let tasks: Vec<u32> = vec![0, 1, 999, 2047, 4000];
+    let got = engine.psia_chunk(&tasks).unwrap();
+    let want = engine.psia_app().compute_chunk(&tasks);
+    for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+        let max_err = g
+            .iter()
+            .zip(w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-3, "task {k}: max err {max_err}");
+    }
+}
+
+#[test]
+fn compute_service_serves_concurrent_workers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = ComputeService::spawn(dir).unwrap();
+    let mut joins = Vec::new();
+    for w in 0..4u32 {
+        let handle = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            let ids: Vec<u32> = (w * 100..w * 100 + 50).collect();
+            let resp = handle.compute(ComputeRequest::Mandelbrot(ids)).unwrap();
+            assert_eq!(resp.len(), 50);
+            resp.digest()
+        }));
+    }
+    let digests: Vec<f64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert!(digests.iter().all(|d| *d >= 0.0));
+}
+
+#[test]
+fn native_runtime_over_pjrt_with_failures_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = ComputeService::spawn(dir).unwrap();
+    let mut params = NativeParams::new(
+        4096,
+        4,
+        rdlb::dls::Technique::Fac,
+        true,
+        ComputeBackend::PjrtMandelbrot(svc.handle()),
+    );
+    params = params.with_failures(2, 0.3);
+    params.timeout = std::time::Duration::from_secs(120);
+    let o = NativeRuntime::new(params).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+    assert_eq!(o.finished, 4096);
+}
+
+#[test]
+fn digest_is_failure_invariant() {
+    // The summed result digest over first completions must not depend on
+    // which workers failed — correctness of results under rDLB recovery.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).unwrap();
+    let app = Arc::new(engine.mandelbrot_app());
+    drop(engine);
+
+    let run = |failures: usize| {
+        let mut p = NativeParams::new(
+            1024,
+            4,
+            rdlb::dls::Technique::Gss,
+            true,
+            ComputeBackend::Mandelbrot(app.clone()),
+        );
+        if failures > 0 {
+            p = p.with_failures(failures, 0.05);
+        }
+        NativeRuntime::new(p).unwrap().run().unwrap()
+    };
+    let clean = run(0);
+    let failed = run(3);
+    assert!(clean.completed() && failed.completed());
+    assert_eq!(clean.finished, failed.finished);
+}

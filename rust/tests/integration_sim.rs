@@ -1,0 +1,204 @@
+//! Integration tests: simulated cluster end-to-end across the paper's
+//! scenario classes, checking the qualitative *shapes* §4.2 reports.
+
+use rdlb::apps::AppKind;
+use rdlb::config::{ExperimentConfig, Scenario};
+use rdlb::dls::Technique;
+use rdlb::sim::{SimCluster, Topology};
+
+fn cfg(app: AppKind, technique: Technique, pes: usize, n: usize) -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .app(app)
+        .tasks(n)
+        .pes(pes)
+        .technique(technique)
+        .mean_cost(1e-3)
+        .build()
+        .unwrap()
+}
+
+fn run(cfg: &ExperimentConfig) -> rdlb::sim::Outcome {
+    SimCluster::from_config(cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn every_dynamic_technique_survives_every_failure_class() {
+    // Fig. 3a/3b shape (i): with rDLB, 1, P/2 and P−1 failures all complete.
+    let pes = 16;
+    for technique in Technique::DYNAMIC {
+        for failures in [1, pes / 2, pes - 1] {
+            let mut c = cfg(AppKind::Uniform, technique, pes, 4000);
+            c.scenario = Scenario::failures(failures);
+            c.rdlb = true;
+            let o = run(&c);
+            assert!(
+                o.completed(),
+                "{technique} with {failures} failures did not complete: {o:?}"
+            );
+            assert_eq!(o.finished, 4000, "{technique}");
+        }
+    }
+}
+
+#[test]
+fn without_rdlb_failures_hang_with_rdlb_not() {
+    let pes = 16;
+    for technique in [Technique::Fac, Technique::Gss, Technique::AwfB] {
+        let mut c = cfg(AppKind::Uniform, technique, pes, 4000);
+        c.scenario = Scenario::failures(pes / 2);
+        c.rdlb = false;
+        assert!(run(&c).hung, "{technique} must hang without rDLB");
+        c.rdlb = true;
+        assert!(run(&c).completed(), "{technique} must complete with rDLB");
+    }
+}
+
+#[test]
+fn single_failure_costs_little() {
+    // Fig. 3 shape (ii): one failure ≈ baseline cost.
+    let pes = 32;
+    for technique in [Technique::Fac, Technique::AwfB, Technique::AwfC] {
+        let base = {
+            let c = cfg(AppKind::Psia, technique, pes, 8000);
+            run(&c).parallel_time
+        };
+        let failed = {
+            let mut c = cfg(AppKind::Psia, technique, pes, 8000);
+            c.scenario = Scenario::failures(1);
+            run(&c).parallel_time
+        };
+        assert!(
+            failed < base * 1.6,
+            "{technique}: 1 failure cost {failed} vs baseline {base}"
+        );
+    }
+}
+
+#[test]
+fn small_chunks_more_robust_under_half_failures() {
+    // Fig. 3/4 shape (iii): under P/2 failures, SS (smallest chunks) loses
+    // less work than GSS (largest early chunks).
+    let pes = 16;
+    let time_of = |technique: Technique| {
+        let mut total = 0.0;
+        for seed in 0..5 {
+            let mut c = cfg(AppKind::Uniform, technique, pes, 4000);
+            c.scenario = Scenario::failures(pes / 2);
+            c.seed = seed;
+            let o = run(&c);
+            assert!(o.completed());
+            total += o.parallel_time;
+        }
+        total / 5.0
+    };
+    let ss = time_of(Technique::Ss);
+    let gss = time_of(Technique::Gss);
+    assert!(
+        ss < gss * 1.5,
+        "SS ({ss}) should not be much worse than GSS ({gss}) under P/2 failures"
+    );
+}
+
+#[test]
+fn p_minus_1_failures_serialize_on_master() {
+    // Fig. 3 shape (iv): with P−1 failures the work is almost serialized.
+    let pes = 8;
+    let n = 2000;
+    let mut c = cfg(AppKind::Uniform, Technique::Fac, pes, n);
+    c.scenario = Scenario::failures(pes - 1);
+    let o = run(&c);
+    assert!(o.completed());
+    let serial_estimate = n as f64 * 1e-3;
+    assert!(
+        o.parallel_time > serial_estimate * 0.5,
+        "P-1 failures should approach serial time: {} vs {serial_estimate}",
+        o.parallel_time
+    );
+}
+
+#[test]
+fn latency_perturbation_rdlb_speedup() {
+    // Fig. 3c/d shape (v): under latency perturbation rDLB is faster.
+    // The delay must be large relative to a chunk but smaller than the
+    // makespan, so the perturbed node still receives work and its chunks
+    // straggle (delay >= makespan would just exclude the node entirely
+    // and the two modes would tie).
+    let topo = Topology::new(4, 4);
+    for technique in [Technique::AwfB, Technique::Fac] {
+        let mk = |rdlb: bool| {
+            let mut c = cfg(AppKind::Psia, technique, 16, 4000);
+            c.nodes = topo.nodes;
+            c.ranks_per_node = topo.ranks_per_node;
+            c.scenario = Scenario::LatencyPerturb { node: 3, delay: 0.05 };
+            c.rdlb = rdlb;
+            run(&c)
+        };
+        let without = mk(false);
+        let with = mk(true);
+        assert!(without.completed() && with.completed());
+        assert!(
+            with.parallel_time < without.parallel_time,
+            "{technique}: rDLB {} !< {}",
+            with.parallel_time,
+            without.parallel_time
+        );
+    }
+}
+
+#[test]
+fn pe_perturbation_small_effect() {
+    // Fig. 3 shape (vi): PE-availability perturbation alone has modest
+    // impact on dynamically balanced runs.
+    let mut c = cfg(AppKind::Mandelbrot, Technique::Fac, 16, 8192);
+    c.nodes = 4;
+    c.ranks_per_node = 4;
+    let base = run(&c).parallel_time;
+    c.scenario = Scenario::PePerturb { node: 3, factor: 0.5 };
+    let pert = run(&c).parallel_time;
+    assert!(pert < base * 2.0, "PE perturbation alone should be modest: {pert} vs {base}");
+}
+
+#[test]
+fn static_is_not_rescheduled_but_dynamic_is() {
+    // STATIC + failure = hang even with rDLB off; the paper excludes STATIC
+    // from rDLB results. We verify STATIC still *works* in baseline.
+    let c = cfg(AppKind::Uniform, Technique::Static, 8, 1000);
+    assert!(run(&c).completed());
+}
+
+#[test]
+fn mandelbrot_heavy_tail_hurts_static_more_than_fac() {
+    // The motivation for DLS: high-variability workloads imbalance STATIC.
+    let stat = run(&cfg(AppKind::Mandelbrot, Technique::Static, 16, 16_384)).parallel_time;
+    let fac = run(&cfg(AppKind::Mandelbrot, Technique::Fac, 16, 16_384)).parallel_time;
+    assert!(
+        fac < stat,
+        "FAC ({fac}) must beat STATIC ({stat}) on the heavy-tailed workload"
+    );
+}
+
+#[test]
+fn replications_differ_but_seeds_reproduce() {
+    let mut c = cfg(AppKind::Exponential, Technique::Fac, 8, 2000);
+    c.scenario = Scenario::failures(4);
+    let a = SimCluster::new(c.sim_params(0).unwrap()).unwrap().run().unwrap();
+    let b = SimCluster::new(c.sim_params(1).unwrap()).unwrap().run().unwrap();
+    let a2 = SimCluster::new(c.sim_params(0).unwrap()).unwrap().run().unwrap();
+    assert_eq!(a.parallel_time, a2.parallel_time, "same replication must reproduce");
+    assert_ne!(a.parallel_time, b.parallel_time, "replications must differ");
+}
+
+#[test]
+fn waste_bounded_in_healthy_runs() {
+    // §3.2: rDLB adds no overhead to healthy executions — duplicate work
+    // only appears in the tail and stays small.
+    for technique in [Technique::Fac, Technique::Gss, Technique::AwfC] {
+        let c = cfg(AppKind::Psia, technique, 16, 8000);
+        let o = run(&c);
+        assert!(
+            o.waste_fraction() < 0.05,
+            "{technique}: baseline waste {:.3}",
+            o.waste_fraction()
+        );
+    }
+}

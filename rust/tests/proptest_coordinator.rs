@@ -1,0 +1,261 @@
+//! Property-based tests of the coordinator invariants (seeded randomized
+//! cases over the in-tree PRNG — proptest is unavailable offline, so each
+//! property is checked across a few hundred generated cases and failures
+//! print the offending seed).
+//!
+//! Invariants (DESIGN.md §9):
+//!  * conservation — every task is eventually Finished exactly once in the
+//!    table, regardless of failures, as long as ≥1 live PE exists (rDLB on);
+//!  * no phantom tasks — assignments only contain ids < N, ascending;
+//!  * idempotence — duplicate completions never double-count;
+//!  * holder exclusion — rDLB never re-assigns a task to a worker that
+//!    currently holds it;
+//!  * hang — with rDLB off, a lost chunk implies the run cannot complete.
+
+use rdlb::coordinator::{Master, MasterConfig, Reply};
+use rdlb::dls::{Technique, TechniqueParams};
+use rdlb::util::Rng;
+
+/// Drive a master with a randomized schedule of worker requests, losing
+/// chunks assigned to "dead" workers. Returns whether the run completed.
+fn drive(
+    master: &mut Master,
+    p: usize,
+    fail_after: &[Option<usize>], // worker dies after k-th interaction
+    rng: &mut Rng,
+    max_steps: usize,
+) -> bool {
+    let mut interactions = vec![0usize; p];
+    let mut pending: Vec<(usize, rdlb::coordinator::Assignment)> = Vec::new();
+    for step in 0..max_steps {
+        if master.is_complete() {
+            return true;
+        }
+        let t = step as f64;
+        let do_complete = !pending.is_empty() && rng.next_f64() < 0.5;
+        if do_complete {
+            let idx = rng.gen_range(0, (pending.len() - 1) as u64) as usize;
+            let (w, a) = pending.swap_remove(idx);
+            master.on_result(w, a.id, 0.01 * a.len() as f64, t);
+            continue;
+        }
+        let w = rng.gen_range(0, (p - 1) as u64) as usize;
+        let dead = fail_after[w].is_some_and(|k| interactions[w] >= k);
+        if dead {
+            continue;
+        }
+        interactions[w] += 1;
+        match master.on_request(w, t) {
+            Reply::Assign(a) => {
+                assert!(a.tasks.windows(2).all(|x| x[0] < x[1]), "assignment not ascending");
+                assert!(
+                    a.tasks.iter().all(|&id| (id as usize) < master.config().n),
+                    "phantom task id"
+                );
+                let dies_now = fail_after[w].is_some_and(|k| interactions[w] >= k);
+                if !dies_now {
+                    pending.push((w, a));
+                } // else: chunk lost
+            }
+            Reply::Wait | Reply::Terminate => {}
+        }
+    }
+    // Flush everything still pending (live workers finish their chunks).
+    while let Some((w, a)) = pending.pop() {
+        master.on_result(w, a.id, 0.01, max_steps as f64);
+    }
+    // Final rounds of requests from live workers drain the pool.
+    let mut guard = 0;
+    loop {
+        if master.is_complete() {
+            return true;
+        }
+        let mut progressed = false;
+        for w in 0..p {
+            if fail_after[w].is_some() {
+                continue;
+            }
+            if let Reply::Assign(a) = master.on_request(w, guard as f64 + 1e6) {
+                master.on_result(w, a.id, 0.01, guard as f64 + 1e6);
+                progressed = true;
+            }
+        }
+        guard += 1;
+        if !progressed || guard > 100_000 {
+            return master.is_complete();
+        }
+    }
+}
+
+fn technique_menu() -> [Technique; 6] {
+    [Technique::Ss, Technique::Gss, Technique::Fac, Technique::Tss, Technique::AwfC, Technique::Af]
+}
+
+#[test]
+fn prop_conservation_under_random_failures_with_rdlb() {
+    for seed in 0..120u64 {
+        let mut rng = Rng::new(seed);
+        let n = 20 + (rng.next_u64() % 400) as usize;
+        let p = 2 + (rng.next_u64() % 12) as usize;
+        let technique = technique_menu()[(rng.next_u64() % 6) as usize];
+        // Random subset of workers (never 0) dies after a random number of
+        // interactions.
+        let fail_after: Vec<Option<usize>> = (0..p)
+            .map(|w| (w != 0 && rng.next_f64() < 0.4).then(|| (rng.next_u64() % 5) as usize))
+            .collect();
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique,
+            params: TechniqueParams::default(),
+            rdlb: true,
+        });
+        let completed = drive(&mut master, p, &fail_after, &mut rng, 20 * n);
+        assert!(completed, "seed {seed}: did not complete ({technique}, n={n}, p={p})");
+        assert_eq!(master.table().finished_count(), n, "seed {seed}: task lost");
+        let s = master.stats();
+        assert_eq!(s.finished_iterations as usize, n, "seed {seed}");
+        assert!(s.finished_iterations + s.duplicate_iterations >= n as u64);
+    }
+}
+
+#[test]
+fn prop_no_completion_without_rdlb_after_loss() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let n = 20 + (rng.next_u64() % 200) as usize;
+        let p = 3 + (rng.next_u64() % 6) as usize;
+        let technique = technique_menu()[(rng.next_u64() % 6) as usize];
+        // Exactly one worker dies right after its first assignment. Issue
+        // that first assignment explicitly so a chunk is guaranteed lost
+        // (a late-requesting victim could otherwise receive Wait and lose
+        // nothing).
+        let victim = 1 + (rng.next_u64() % (p as u64 - 1)) as usize;
+        let fail_after: Vec<Option<usize>> = (0..p).map(|w| (w == victim).then_some(0)).collect();
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique,
+            params: TechniqueParams::default(),
+            rdlb: false,
+        });
+        match master.on_request(victim, 0.0) {
+            Reply::Assign(_lost) => {} // evaporates with the victim
+            other => panic!("first request must assign, got {other:?}"),
+        }
+        let completed = drive(&mut master, p, &fail_after, &mut rng, 20 * n);
+        assert!(
+            !completed,
+            "seed {seed}: completed without rDLB despite a lost chunk ({technique})"
+        );
+        assert!(master.table().finished_count() < n);
+    }
+}
+
+#[test]
+fn prop_duplicate_results_never_double_count() {
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed ^ 0xD0D0);
+        let n = 10 + (rng.next_u64() % 100) as usize;
+        let p = 2 + (rng.next_u64() % 6) as usize;
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique: Technique::Fac,
+            params: TechniqueParams::default(),
+            rdlb: true,
+        });
+        let mut assignments = Vec::new();
+        let mut t = 0.0;
+        while !master.is_complete() {
+            let w = rng.gen_range(0, (p - 1) as u64) as usize;
+            if let Reply::Assign(a) = master.on_request(w, t) {
+                master.on_result(w, a.id, 0.01, t + 0.01);
+                assignments.push((w, a));
+            }
+            t += 1.0;
+            assert!(t < 1e6, "seed {seed}: stuck");
+        }
+        let finished_before = master.stats().finished_iterations;
+        // Replay a random subset of results a second time.
+        for (w, a) in &assignments {
+            if rng.next_f64() < 0.3 {
+                master.on_result(*w, a.id, 0.01, t);
+            }
+        }
+        assert_eq!(master.stats().finished_iterations, finished_before, "seed {seed}");
+        assert_eq!(master.table().finished_count(), n, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_holder_exclusion() {
+    // A worker that holds the only pending tasks gets Wait, never a
+    // duplicate of its own chunk.
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0xACE);
+        let n = 2 + (rng.next_u64() % 30) as usize;
+        let p = 2;
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique: Technique::Gss,
+            params: TechniqueParams::default(),
+            rdlb: true,
+        });
+        // Worker 1 grabs everything.
+        let mut held: Vec<rdlb::coordinator::Assignment> = Vec::new();
+        loop {
+            match master.on_request(1, 0.0) {
+                Reply::Assign(a) => held.push(a),
+                Reply::Wait | Reply::Terminate => break,
+            }
+            assert!(held.len() <= 10 * n, "seed {seed}: runaway");
+        }
+        let held_ids: std::collections::HashSet<u32> =
+            held.iter().flat_map(|a| a.tasks.iter().copied()).collect();
+        assert_eq!(held_ids.len(), n, "worker 1 should hold all tasks");
+        assert_eq!(master.on_request(1, 1.0), Reply::Wait, "seed {seed}");
+        // Worker 0 may duplicate them.
+        match master.on_request(0, 1.0) {
+            Reply::Assign(a) => assert!(a.rescheduled),
+            other => panic!("seed {seed}: worker 0 got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn prop_counts_partition_n() {
+    // At every point of a random run: unscheduled + scheduled + finished == N.
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x7A57);
+        let n = 50 + (rng.next_u64() % 200) as usize;
+        let p = 4;
+        let mut master = Master::new(MasterConfig {
+            n,
+            p,
+            technique: Technique::Tss,
+            params: TechniqueParams::default(),
+            rdlb: true,
+        });
+        let mut pending: Vec<(usize, rdlb::coordinator::Assignment)> = Vec::new();
+        for step in 0..10 * n {
+            let t = master.table();
+            assert_eq!(
+                t.unscheduled_count() + t.scheduled_count() + t.finished_count(),
+                n,
+                "seed {seed} step {step}"
+            );
+            if master.is_complete() {
+                break;
+            }
+            let w = rng.gen_range(0, (p - 1) as u64) as usize;
+            if !pending.is_empty() && rng.next_f64() < 0.6 {
+                let (w2, a) = pending.pop().unwrap();
+                master.on_result(w2, a.id, 0.01, step as f64);
+            } else if let Reply::Assign(a) = master.on_request(w, step as f64) {
+                pending.push((w, a));
+            }
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Property-based tests over the 14 DLS techniques: randomized (N, P)
+//! sweeps checking the scheduling invariants every technique must satisfy.
+
+use rdlb::dls::{ChunkFeedback, SchedCtx, Technique, TechniqueParams};
+use rdlb::util::Rng;
+
+fn ctx(n: usize, p: usize, remaining: usize, worker: usize, idx: usize) -> SchedCtx {
+    SchedCtx { n, p, remaining, worker, chunk_index: idx, now: idx as f64 }
+}
+
+/// Drain a technique to exhaustion with round-robin workers + feedback.
+fn drain(technique: Technique, n: usize, p: usize, seed: u64) -> Vec<usize> {
+    let params = TechniqueParams { seed, ..Default::default() };
+    let mut calc = technique.calculator(n, p, &params);
+    let mut rng = Rng::new(seed ^ 0x51ED);
+    let mut remaining = n;
+    let mut out = Vec::new();
+    let mut idx = 0;
+    while remaining > 0 {
+        let w = idx % p;
+        let c = calc.next_chunk(&ctx(n, p, remaining, w, idx));
+        assert!(
+            (1..=remaining).contains(&c),
+            "{technique}: chunk {c} outside 1..={remaining} (n={n} p={p})"
+        );
+        out.push(c);
+        remaining -= c;
+        // Plausible noisy feedback so adaptive techniques exercise their
+        // update paths.
+        calc.feedback(&ChunkFeedback {
+            worker: w,
+            chunk_size: c,
+            compute_time: c as f64 * (1e-3 + 1e-4 * rng.next_f64()),
+            sched_overhead: 1e-5,
+            now: idx as f64,
+            batch_done: false,
+        });
+        idx += 1;
+        assert!(idx <= 10 * n + 100, "{technique}: non-terminating (n={n} p={p})");
+    }
+    out
+}
+
+#[test]
+fn prop_all_techniques_conserve_and_terminate() {
+    let mut rng = Rng::new(99);
+    for _ in 0..25 {
+        let n = 1 + (rng.next_u64() % 30_000) as usize;
+        let p = 1 + (rng.next_u64() % 64) as usize;
+        for t in Technique::ALL {
+            let seq = drain(t, n, p, rng.next_u64());
+            assert_eq!(seq.iter().sum::<usize>(), n, "{t}: lost iterations (n={n} p={p})");
+        }
+    }
+}
+
+#[test]
+fn prop_decreasing_techniques_never_increase_before_tail() {
+    // GSS and TSS produce non-increasing chunk sizes (monotone schedules).
+    let mut rng = Rng::new(7);
+    for _ in 0..20 {
+        let n = 100 + (rng.next_u64() % 50_000) as usize;
+        let p = 2 + (rng.next_u64() % 32) as usize;
+        for t in [Technique::Gss, Technique::Tss] {
+            let seq = drain(t, n, p, 1);
+            assert!(
+                seq.windows(2).all(|w| w[1] <= w[0]),
+                "{t}: increasing chunk in {seq:?} (n={n} p={p})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fixed_size_techniques_are_constant_until_tail() {
+    let mut rng = Rng::new(13);
+    for _ in 0..20 {
+        let n = 100 + (rng.next_u64() % 50_000) as usize;
+        let p = 2 + (rng.next_u64() % 32) as usize;
+        for t in [Technique::Fsc, Technique::MFsc, Technique::Static] {
+            let seq = drain(t, n, p, 1);
+            if seq.len() >= 2 {
+                let head = &seq[..seq.len() - 1];
+                assert!(
+                    head.iter().all(|&c| c == head[0]),
+                    "{t}: non-constant body {seq:?} (n={n} p={p})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ss_always_one() {
+    let seq = drain(Technique::Ss, 5000, 13, 1);
+    assert!(seq.iter().all(|&c| c == 1));
+    assert_eq!(seq.len(), 5000);
+}
+
+#[test]
+fn prop_rand_within_bounds_any_np() {
+    let mut rng = Rng::new(23);
+    for _ in 0..20 {
+        let n = 1000 + (rng.next_u64() % 200_000) as usize;
+        let p = 2 + (rng.next_u64() % 128) as usize;
+        let lo = (n / (100 * p)).max(1);
+        let hi = (n / (2 * p)).max(lo);
+        let seq = drain(Technique::Rand, n, p, rng.next_u64());
+        // All but the remaining-clamped tail must respect the paper bounds.
+        for (i, &c) in seq.iter().enumerate() {
+            let is_tail = i + 1 == seq.len();
+            assert!(
+                (c >= lo && c <= hi) || is_tail,
+                "RAND chunk {c} outside [{lo},{hi}] at {i} (n={n} p={p})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_determinism_same_seed_same_schedule() {
+    let mut rng = Rng::new(31);
+    for _ in 0..10 {
+        let n = 100 + (rng.next_u64() % 10_000) as usize;
+        let p = 2 + (rng.next_u64() % 16) as usize;
+        let seed = rng.next_u64();
+        for t in Technique::ALL {
+            let a = drain(t, n, p, seed);
+            let b = drain(t, n, p, seed);
+            assert_eq!(a, b, "{t} not deterministic");
+        }
+    }
+}
+
+#[test]
+fn prop_chunk_counts_ordering() {
+    // SS produces the most chunks (max overhead); STATIC the fewest
+    // (≈ P); every dynamic technique sits in between.
+    let n = 20_000;
+    let p = 16;
+    let ss = drain(Technique::Ss, n, p, 1).len();
+    let stat = drain(Technique::Static, n, p, 1).len();
+    assert_eq!(ss, n);
+    assert_eq!(stat, p);
+    for t in Technique::DYNAMIC {
+        let c = drain(t, n, p, 1).len();
+        assert!(c >= stat && c <= ss, "{t}: {c} chunks outside [{stat}, {ss}]");
+    }
+}
+
+#[test]
+fn prop_awf_weights_track_speed_ratio() {
+    // Feed a 2-PE system with a constant 3x speed difference through many
+    // noise-free chunks; learned weights must converge to ratio 3.
+    use rdlb::dls::{AdaptiveWeightedFactoring, AwfVariant, ChunkCalculator};
+    for variant in [AwfVariant::B, AwfVariant::C, AwfVariant::D, AwfVariant::E] {
+        let mut awf = AdaptiveWeightedFactoring::new(2, variant);
+        let mut remaining = 100_000usize;
+        let mut idx = 0;
+        while remaining > 0 && idx < 10_000 {
+            let w = idx % 2;
+            let c = awf.next_chunk(&ctx(100_000, 2, remaining, w, idx));
+            let per_iter = if w == 0 { 1e-3 } else { 3e-3 };
+            awf.feedback(&ChunkFeedback {
+                worker: w,
+                chunk_size: c,
+                compute_time: c as f64 * per_iter,
+                sched_overhead: 0.0,
+                now: idx as f64,
+                batch_done: false,
+            });
+            remaining -= c;
+            idx += 1;
+        }
+        let w = awf.weights();
+        let ratio = w[0] / w[1];
+        assert!((ratio - 3.0).abs() < 0.2, "AWF-{variant:?}: ratio {ratio}");
+    }
+}
