@@ -9,6 +9,106 @@ use crate::dls::{Technique, TechniqueParams};
 use crate::sim::{FailurePlan, PerturbationModel, SimCluster, Topology};
 use crate::util::json::Json;
 
+/// Which runtime executes a configured experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RuntimeKind {
+    /// Discrete-event simulator (virtual time; the miniHPC substitute).
+    #[default]
+    Sim,
+    /// In-process master–worker runtime on OS threads (wall-clock).
+    Native,
+    /// Distributed master–worker runtime over the wire protocol
+    /// (loopback in-process, or TCP across OS processes).
+    Net,
+}
+
+impl RuntimeKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RuntimeKind::Sim => "sim",
+            RuntimeKind::Native => "native",
+            RuntimeKind::Net => "net",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuntimeKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sim" | "simulator" => Some(RuntimeKind::Sim),
+            "native" | "threads" => Some(RuntimeKind::Native),
+            "net" | "tcp" | "distributed" => Some(RuntimeKind::Net),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RuntimeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Connection settings for the [`RuntimeKind::Net`] runtime. Consumed by
+/// the CLI: `rdlb serve --config FILE` reads `listen` / `spawn_local` /
+/// `timeout_secs`, `rdlb worker --config FILE` reads `connect`, and the
+/// experiments runner's loopback net runtime reads `timeout_secs` (flags
+/// always override).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetSettings {
+    /// Address the master listens on (`0` port = ephemeral).
+    pub listen: String,
+    /// Address workers connect to.
+    pub connect: String,
+    /// `Some(p)`: the master forks `p` local worker processes itself
+    /// (single-binary end-to-end runs).
+    pub spawn_local: Option<usize>,
+    /// Wall-clock hang bound for the run, seconds.
+    pub timeout_secs: u64,
+}
+
+impl Default for NetSettings {
+    fn default() -> Self {
+        NetSettings {
+            listen: "127.0.0.1:7077".to_string(),
+            connect: "127.0.0.1:7077".to_string(),
+            spawn_local: None,
+            timeout_secs: 60,
+        }
+    }
+}
+
+impl NetSettings {
+    /// JSON form: `{"listen": .., "connect": .., "spawn_local": .., "timeout_secs": ..}`.
+    pub fn to_json(&self) -> Json {
+        let mut obj = vec![
+            ("listen", Json::str(self.listen.as_str())),
+            ("connect", Json::str(self.connect.as_str())),
+            ("timeout_secs", Json::num(self.timeout_secs as f64)),
+        ];
+        if let Some(p) = self.spawn_local {
+            obj.push(("spawn_local", Json::num(p as f64)));
+        }
+        Json::obj(obj)
+    }
+
+    pub fn from_json(v: &Json) -> Result<NetSettings> {
+        let d = NetSettings::default();
+        Ok(NetSettings {
+            listen: v
+                .get("listen")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or(d.listen),
+            connect: v
+                .get("connect")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or(d.connect),
+            spawn_local: v.get("spawn_local").and_then(Json::as_usize),
+            timeout_secs: v.get("timeout_secs").and_then(Json::as_u64).unwrap_or(d.timeout_secs),
+        })
+    }
+}
+
 /// Execution scenario (Table 1 rows "Failures" / "Perturbations").
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Scenario {
@@ -79,6 +179,10 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Replications for aggregated experiments (paper uses 20).
     pub replications: usize,
+    /// Which runtime executes this experiment (simulator by default).
+    pub runtime: RuntimeKind,
+    /// Connection settings when `runtime == RuntimeKind::Net`.
+    pub net: NetSettings,
 }
 
 impl Default for ExperimentConfig {
@@ -96,6 +200,8 @@ impl Default for ExperimentConfig {
             base_latency: 2e-5,
             seed: 1,
             replications: 1,
+            runtime: RuntimeKind::default(),
+            net: NetSettings::default(),
         }
     }
 }
@@ -121,12 +227,22 @@ impl ExperimentConfig {
         ensure!(self.nodes > 0 && self.ranks_per_node > 0, "empty topology");
         ensure!(self.n() > 0, "no tasks");
         ensure!(self.mean_cost > 0.0, "mean_cost must be positive");
-        if let Scenario::Failures { count } = self.scenario {
-            ensure!(count <= self.pes() - 1, "at most P-1 failures (got {count} for P={})", self.pes());
-        }
-        if let Scenario::PePerturb { node, factor } = self.scenario {
-            ensure!(node < self.nodes, "perturbed node out of range");
-            ensure!(factor > 0.0 && factor <= 1.0, "slowdown factor must be in (0,1]");
+        match self.scenario {
+            Scenario::Baseline => {}
+            Scenario::Failures { count } => {
+                ensure!(
+                    count <= self.pes() - 1,
+                    "at most P-1 failures (got {count} for P={})",
+                    self.pes()
+                );
+            }
+            Scenario::PePerturb { node, factor } | Scenario::Combined { node, factor, .. } => {
+                ensure!(node < self.nodes, "perturbed node {node} out of range (nodes={})", self.nodes);
+                ensure!(factor > 0.0 && factor <= 1.0, "slowdown factor must be in (0,1]");
+            }
+            Scenario::LatencyPerturb { node, .. } => {
+                ensure!(node < self.nodes, "perturbed node {node} out of range (nodes={})", self.nodes);
+            }
         }
         Ok(())
     }
@@ -141,10 +257,17 @@ impl ExperimentConfig {
         workload.model.total() / self.pes() as f64
     }
 
+    /// The derived RNG seed for replication `rep` — the single definition
+    /// shared by the simulator, native, and net runtimes so the same
+    /// `(config, rep)` always builds the same workload everywhere.
+    pub fn rep_seed(&self, rep: usize) -> u64 {
+        self.seed.wrapping_add(rep as u64 * 0x9E37)
+    }
+
     /// Materialize simulator parameters for replication `rep`.
     pub fn sim_params(&self, rep: usize) -> Result<crate::sim::SimParams> {
         self.validate()?;
-        let seed = self.seed.wrapping_add(rep as u64 * 0x9E37);
+        let seed = self.rep_seed(rep);
         let workload = Workload::build(self.app, self.n(), self.mean_cost, seed);
         let topo = self.topology();
         let p = topo.total_pes();
@@ -203,6 +326,16 @@ impl ExperimentConfig {
             base_latency: get_f64("base_latency", d.base_latency),
             seed: v.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
             replications: get_usize("replications", d.replications),
+            runtime: match v.get("runtime").and_then(Json::as_str) {
+                Some(s) => {
+                    RuntimeKind::parse(s).with_context(|| format!("unknown runtime {s:?}"))?
+                }
+                None => d.runtime,
+            },
+            net: match v.get("net") {
+                Some(n) => NetSettings::from_json(n)?,
+                None => d.net,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -221,6 +354,8 @@ impl ExperimentConfig {
             ("base_latency", Json::num(self.base_latency)),
             ("seed", Json::num(self.seed as f64)),
             ("replications", Json::num(self.replications as f64)),
+            ("runtime", Json::str(self.runtime.name())),
+            ("net", self.net.to_json()),
         ];
         if let Some(n) = self.tasks {
             obj.push(("tasks", Json::num(n as f64)));
@@ -363,6 +498,16 @@ impl ExperimentConfigBuilder {
         self
     }
 
+    pub fn runtime(mut self, kind: RuntimeKind) -> Self {
+        self.get().runtime = kind;
+        self
+    }
+
+    pub fn net(mut self, settings: NetSettings) -> Self {
+        self.get().net = settings;
+        self
+    }
+
     pub fn overheads(mut self, sched: f64, latency: f64) -> Self {
         let c = self.get();
         c.sched_overhead = sched;
@@ -448,6 +593,38 @@ mod tests {
         let t0: Vec<_> = (0..8).filter_map(|r| p.failures.time_of(r)).collect();
         let t1: Vec<_> = (0..8).filter_map(|r| p1.failures.time_of(r)).collect();
         assert_ne!(t0, t1);
+    }
+
+    #[test]
+    fn runtime_kind_parses() {
+        assert_eq!(RuntimeKind::parse("sim"), Some(RuntimeKind::Sim));
+        assert_eq!(RuntimeKind::parse("NET"), Some(RuntimeKind::Net));
+        assert_eq!(RuntimeKind::parse("distributed"), Some(RuntimeKind::Net));
+        assert_eq!(RuntimeKind::parse("threads"), Some(RuntimeKind::Native));
+        assert_eq!(RuntimeKind::parse("mpi"), None);
+        assert_eq!(RuntimeKind::default(), RuntimeKind::Sim);
+    }
+
+    #[test]
+    fn net_runtime_json_roundtrip() {
+        let cfg = ExperimentConfig::builder()
+            .pes(4)
+            .runtime(RuntimeKind::Net)
+            .net(NetSettings {
+                listen: "0.0.0.0:9000".into(),
+                connect: "10.0.0.1:9000".into(),
+                spawn_local: Some(4),
+                timeout_secs: 120,
+            })
+            .build()
+            .unwrap();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.runtime, RuntimeKind::Net);
+        assert_eq!(back.net, cfg.net);
+        // Configs that omit the runtime default to the simulator.
+        let plain = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(plain.runtime, RuntimeKind::Sim);
+        assert_eq!(plain.net, NetSettings::default());
     }
 
     #[test]

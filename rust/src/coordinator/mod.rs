@@ -4,9 +4,10 @@
 //! iteration; [`Master`] is the DLS4LB-style master state machine extended
 //! with the rDLB re-dispatch loop.  The master is *pure*: it is driven
 //! exclusively through [`Master::on_request`] / [`Master::on_result`] and
-//! never touches clocks, sockets or threads — the discrete-event simulator
-//! and the native tokio runtime both embed the identical object, which is
-//! what makes the simulator a faithful substitute for the MPI library.
+//! never touches clocks, sockets or threads — the discrete-event simulator,
+//! the native thread runtime and the distributed net runtime all embed the
+//! identical object, which is what makes the simulator a faithful
+//! substitute for the MPI library.
 
 mod assignment;
 mod master;

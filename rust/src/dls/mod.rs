@@ -5,8 +5,8 @@
 //! tasks N, workers P, remaining R, requesting worker) it returns the next
 //! chunk size; adaptive techniques additionally consume per-chunk timing
 //! feedback.  The calculators are *pure scheduling logic* — no I/O, no time
-//! source — so the exact same objects drive both the discrete-event
-//! simulator and the native tokio runtime.
+//! source — so the exact same objects drive the discrete-event simulator,
+//! the native thread runtime and the distributed net runtime.
 
 mod adaptive;
 mod ctx;

@@ -10,4 +10,6 @@ pub use figures::{
     table1_summary, theory_validation, ConceptualScenario, FigureData, PerturbCell, RobustnessTable,
 };
 pub use report::{cells_to_csv, cells_to_markdown, perturb_to_csv, robustness_to_csv};
-pub use runner::{run_cell, CellResult, Scale};
+pub use runner::{
+    native_outcome, net_outcome, run_cell, run_outcome, CellResult, Scale,
+};

@@ -1,10 +1,20 @@
 //! Replicated-cell execution: one Table 1 cell = (app, technique, rDLB,
-//! scenario) × `reps` replications, aggregated.
+//! scenario) × `reps` replications, aggregated — plus single-run execution
+//! of any configured scenario on any [`RuntimeKind`] (simulator, native
+//! threads, or the distributed net runtime), all producing the same
+//! [`Outcome`] shape.
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::ExperimentConfig;
-use crate::sim::SimCluster;
+use crate::apps::Workload;
+use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
+use crate::dls::TechniqueParams;
+use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
+use crate::net::{run_loopback, FaultSpec, NetMasterParams};
+use crate::sim::{Outcome, SimCluster};
 use crate::util::{par_map, Summary};
 
 /// Experiment scale preset.  The *paper* scale (256 PEs, full N, 20 reps)
@@ -160,6 +170,121 @@ pub fn run_cell(cfg: &ExperimentConfig, threads: usize) -> Result<CellResult> {
     })
 }
 
+/// Map `cfg.scenario` onto per-worker fault envelopes for the wall-clock
+/// runtimes. `horizon` is the expected failure-free makespan in wall
+/// seconds (failure times spread within it); `time_scale` compresses the
+/// scenario's virtual latencies the same way the cost model is compressed.
+fn scenario_faults(
+    cfg: &ExperimentConfig,
+    horizon: f64,
+    time_scale: f64,
+) -> Result<Vec<FaultSpec>> {
+    let topo = cfg.topology();
+    let mut faults = vec![FaultSpec::default(); cfg.pes()];
+    match cfg.scenario {
+        Scenario::Baseline => {}
+        Scenario::Failures { count } => {
+            faults = FaultSpec::plan_failures(cfg.pes(), count, horizon)?;
+        }
+        Scenario::PePerturb { node, factor } => {
+            for w in topo.ranks_on(node) {
+                faults[w].slowdown = 1.0 / factor.max(1e-9);
+            }
+        }
+        Scenario::LatencyPerturb { node, delay } => {
+            for w in topo.ranks_on(node) {
+                faults[w].latency = delay * time_scale;
+            }
+        }
+        Scenario::Combined { node, factor, delay } => {
+            for w in topo.ranks_on(node) {
+                faults[w].slowdown = 1.0 / factor.max(1e-9);
+                faults[w].latency = delay * time_scale;
+            }
+        }
+    }
+    Ok(faults)
+}
+
+/// Shared parameterization of the two wall-clock runtimes (native threads
+/// and the net runtime): per-worker faults, a synthetic backend over the
+/// config's cost model, technique params, and the hang bound. Kept in one
+/// place so the sim/native/net scenario mapping cannot drift apart.
+struct RealRuntimeSetup {
+    faults: Vec<FaultSpec>,
+    backend: ComputeBackend,
+    tech_params: TechniqueParams,
+    timeout: Duration,
+}
+
+fn real_runtime_setup(
+    cfg: &ExperimentConfig,
+    rep: usize,
+    time_scale: f64,
+) -> Result<RealRuntimeSetup> {
+    cfg.validate()?;
+    let seed = cfg.rep_seed(rep);
+    let workload = Workload::build(cfg.app, cfg.n(), cfg.mean_cost, seed);
+    let horizon = cfg.estimated_makespan(&workload).max(1e-6) * time_scale;
+    Ok(RealRuntimeSetup {
+        faults: scenario_faults(cfg, horizon, time_scale)?,
+        backend: ComputeBackend::Synthetic {
+            model: Arc::new(workload.model),
+            scale: time_scale,
+        },
+        tech_params: TechniqueParams {
+            overhead_h: cfg.sched_overhead,
+            seed: seed ^ 0x4A4D,
+            ..TechniqueParams::default()
+        },
+        timeout: Duration::from_secs(cfg.net.timeout_secs.max(1)),
+    })
+}
+
+/// Run replication `rep` of `cfg` on the **distributed net runtime**
+/// (in-process loopback transports, every message through the full wire
+/// codec), producing the same [`Outcome`] the simulator yields for the same
+/// cell. Costs come from the config's cost model as a synthetic backend;
+/// `time_scale` compresses virtual seconds into wall-clock sleeps (use
+/// small workloads — every PE is a live thread).
+pub fn net_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
+    let setup = real_runtime_setup(cfg, rep, time_scale)?;
+    let mut params = NetMasterParams::new(cfg.n(), cfg.pes(), cfg.technique, cfg.rdlb);
+    params.tech_params = setup.tech_params;
+    params.faults = setup.faults;
+    params.timeout = setup.timeout;
+    let (outcome, _reports) = run_loopback(params, &setup.backend)?;
+    Ok(outcome)
+}
+
+/// Run replication `rep` of `cfg` on the **in-process native runtime**
+/// (OS threads, no wire protocol) with the same scenario mapping as
+/// [`net_outcome`].
+pub fn native_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
+    let setup = real_runtime_setup(cfg, rep, time_scale)?;
+    let mut params =
+        NativeParams::new(cfg.n(), cfg.pes(), cfg.technique, cfg.rdlb, setup.backend);
+    params.tech_params = setup.tech_params;
+    for (w, fault) in setup.faults.iter().enumerate() {
+        params.failures[w] = fault.fail_after;
+        params.slowdown[w] = fault.slowdown;
+        params.latency[w] = fault.latency;
+    }
+    params.timeout = setup.timeout;
+    NativeRuntime::new(params)?.run()
+}
+
+/// Execute one replication of `cfg` on whichever runtime `cfg.runtime`
+/// selects. `time_scale` compresses the cost model's virtual seconds into
+/// wall-clock sleeps on the two real runtimes (the simulator ignores it).
+pub fn run_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
+    match cfg.runtime {
+        RuntimeKind::Sim => SimCluster::new(cfg.sim_params(rep)?)?.run(),
+        RuntimeKind::Native => native_outcome(cfg, rep, time_scale),
+        RuntimeKind::Net => net_outcome(cfg, rep, time_scale),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +322,47 @@ mod tests {
         let cell = run_cell(&cfg, 2).unwrap();
         assert!(cell.hung_fraction > 0.0);
         assert!(cell.time_or_inf().is_infinite() || cell.hung_fraction < 1.0);
+    }
+
+    fn small_cfg(scenario: Scenario, rdlb: bool) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::builder()
+            .app(AppKind::Uniform)
+            .tasks(200)
+            .pes(4)
+            .technique(Technique::Fac)
+            .rdlb(rdlb)
+            .scenario(scenario)
+            .build()
+            .unwrap();
+        cfg.net.timeout_secs = 1;
+        cfg
+    }
+
+    #[test]
+    fn net_runtime_runs_any_scenario() {
+        let o = net_outcome(&small_cfg(Scenario::Baseline, true), 0, 1.0).unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.finished, 200);
+
+        let mut cfg = small_cfg(Scenario::failures(3), true);
+        cfg.net.timeout_secs = 30;
+        let o = net_outcome(&cfg, 0, 1.0).unwrap();
+        assert!(o.completed(), "rDLB absorbs P-1 failures on the net runtime: {o:?}");
+        assert_eq!(o.failures, 3);
+
+        let o = net_outcome(&small_cfg(Scenario::failures(2), false), 0, 1.0).unwrap();
+        assert!(o.hung, "failures without rDLB hang the net runtime: {o:?}");
+    }
+
+    #[test]
+    fn dispatcher_honors_runtime_kind() {
+        for kind in [RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net] {
+            let mut cfg = small_cfg(Scenario::Baseline, true);
+            cfg.runtime = kind;
+            let o = run_outcome(&cfg, 0, 1.0).unwrap();
+            assert!(o.completed(), "{kind}: {o:?}");
+            assert_eq!(o.finished, 200, "{kind}");
+        }
     }
 
     #[test]

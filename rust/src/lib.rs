@@ -20,7 +20,8 @@
 //! | [`coordinator`] | the paper's contribution: task-state table, master state machine, rDLB re-dispatch, termination |
 //! | [`apps`] | the two evaluated applications (Mandelbrot, PSIA): native compute + simulator cost models |
 //! | [`sim`] | discrete-event cluster simulator (the miniHPC substitute): topology, latency, failures, perturbations |
-//! | [`native`] | tokio master–worker runtime executing real chunks (PJRT or native rust) |
+//! | [`native`] | in-process master–worker runtime executing real chunks (PJRT or native rust) on OS threads |
+//! | [`net`] | distributed master–worker runtime: length-prefixed wire protocol on TCP (or in-process loopback), fault-injection envelopes, `rdlb serve`/`worker` |
 //! | [`runtime`] | PJRT CPU client: loads `artifacts/*.hlo.txt` produced by the JAX/Pallas AOT path |
 //! | [`robustness`] | FePIA robustness metrics (resilience ρ_res, flexibility ρ_flex) |
 //! | [`analysis`] | §3.1 closed forms: E\[T\] under failures, overhead, checkpointing comparison |
@@ -52,6 +53,7 @@ pub mod coordinator;
 pub mod dls;
 pub mod experiments;
 pub mod native;
+pub mod net;
 pub mod robustness;
 pub mod runtime;
 pub mod sim;
@@ -61,10 +63,11 @@ pub mod util;
 /// Convenient re-exports for the common workflow.
 pub mod prelude {
     pub use crate::apps::AppKind;
-    pub use crate::config::{ExperimentConfig, Scenario};
+    pub use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
     pub use crate::coordinator::{Master, Reply, TaskFlag};
     pub use crate::dls::Technique;
     pub use crate::native::NativeRuntime;
+    pub use crate::net::{run_loopback, serve_tcp, FaultSpec, NetMasterParams};
     pub use crate::robustness::{flexibility, resilience};
     pub use crate::sim::{Outcome, SimCluster};
 }

@@ -7,26 +7,32 @@
 //! rdlb theory     [--reps R]
 //! rdlb native     [--app A --workers W --technique T --rdlb B --backend native|pjrt
 //!                  --artifacts DIR --failures F --tasks N]
+//! rdlb serve      [--listen ADDR] [--workers P | --spawn-local P] [--app A --technique T]
+//!                 [--rdlb | --no-rdlb] [--failures K --horizon S] [--tasks N --timeout S]
+//! rdlb worker     --connect ADDR [--app A --backend native|pjrt --artifacts DIR]
 //! ```
 //!
 //! Scenario syntax for `run`: `baseline`, `failures:<count>`, `pe`,
 //! `latency`, `combined`.
 
-use std::path::PathBuf;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use rdlb::apps::AppKind;
-use rdlb::config::{ExperimentConfig, Scenario};
+use rdlb::config::{ExperimentConfig, RuntimeKind, Scenario};
 use rdlb::dls::Technique;
 use rdlb::experiments::{
     cells_to_csv, conceptual_trace, fig3_failures, fig3_perturbations, fig4_resilience,
-    fig5_flexibility, perturb_to_csv, robustness_to_csv, table1_summary, theory_validation,
-    ConceptualScenario, Scale,
+    fig5_flexibility, perturb_to_csv, robustness_to_csv, run_outcome, table1_summary,
+    theory_validation, ConceptualScenario, Scale,
 };
+use rdlb::config::NetSettings;
 use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+use rdlb::net::{run_worker, serve_tcp, NetMasterParams, TcpTransport};
 use rdlb::runtime::ComputeService;
-use rdlb::sim::SimCluster;
 use rdlb::util::cli::Args;
 
 const USAGE: &str = "\
@@ -36,6 +42,7 @@ USAGE:
   rdlb run        [--app mandelbrot|psia|uniform|exponential] [--technique SS|FAC|...]
                   [--pes P] [--tasks N] [--rdlb true|false]
                   [--scenario baseline|failures:<k>|pe|latency|combined] [--seed K]
+                  [--runtime sim|native|net] [--time-scale X] [--timeout S]
   rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1
                   [--scale smoke|quick|paper] [--out DIR]
   rdlb trace      [--scenario fig1|fig2] [--rdlb true|false]
@@ -43,6 +50,20 @@ USAGE:
   rdlb native     [--app mandelbrot|psia] [--workers W] [--technique T]
                   [--rdlb true|false] [--backend native|pjrt]
                   [--artifacts DIR] [--failures F] [--tasks N]
+  rdlb serve      [--config FILE] [--listen ADDR] [--workers P | --spawn-local P]
+                  [--app mandelbrot|psia] [--technique T] [--rdlb | --no-rdlb]
+                  [--failures K] [--horizon S] [--tasks N] [--timeout S]
+                  [--max-iter I]
+  rdlb worker     [--config FILE] --connect ADDR [--app mandelbrot|psia]
+                  [--backend native|pjrt] [--artifacts DIR] [--max-iter I]
+                  [--retry-connect S]
+
+`serve` drives the distributed net runtime: it listens for P workers over
+the length-prefixed TCP wire protocol and schedules with the identical rDLB
+master the simulator uses. `--spawn-local P` forks P `rdlb worker`
+processes against an ephemeral port for a one-command end-to-end run;
+`--failures K` assigns fail-stop envelopes to K of the P workers (the
+paper's §4 scenarios across real OS processes).
 ";
 
 fn parse_scenario(s: &str, pes: usize) -> Result<Scenario> {
@@ -71,7 +92,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown app"))?;
     let technique = Technique::parse(&args.str_or("technique", "FAC"))
         .ok_or_else(|| anyhow!("unknown technique"))?;
-    let pes = args.usize_or("pes", 256)?;
+    let runtime = RuntimeKind::parse(&args.str_or("runtime", "sim"))
+        .ok_or_else(|| anyhow!("unknown runtime (sim|native|net)"))?;
+    // Real runtimes execute every virtual task as a wall-clock sleep with a
+    // live thread per PE — default to a scale that stays tractable.
+    let default_pes = if runtime == RuntimeKind::Sim { 256 } else { 8 };
+    let pes = args.usize_or("pes", default_pes)?;
     let rdlb = args.bool_or("rdlb", true)?;
     let scenario = parse_scenario(&args.str_or("scenario", "baseline"), pes)?;
     let mut b = ExperimentConfig::builder()
@@ -79,17 +105,22 @@ fn cmd_run(args: &Args) -> Result<()> {
         .pes(pes)
         .technique(technique)
         .rdlb(rdlb)
+        .runtime(runtime)
         .scenario(scenario)
         .seed(args.u64_or("seed", 1)?);
     if let Some(n) = args.usize_opt("tasks")? {
         b = b.tasks(n);
+    } else if runtime != RuntimeKind::Sim {
+        b = b.tasks(2048);
     }
-    let cfg = b.build()?;
+    let mut cfg = b.build()?;
+    cfg.net.timeout_secs = args.u64_or("timeout", cfg.net.timeout_secs)?;
+    let time_scale = args.f64_or("time-scale", 1.0)?;
     let t0 = std::time::Instant::now();
-    let outcome = SimCluster::from_config(&cfg)?.run()?;
+    let outcome = run_outcome(&cfg, 0, time_scale)?;
     println!(
-        "app={} technique={} P={} N={} rdlb={} scenario={}",
-        app, technique, cfg.pes(), cfg.n(), rdlb, cfg.scenario.label()
+        "app={} technique={} P={} N={} rdlb={} scenario={} runtime={}",
+        app, technique, cfg.pes(), cfg.n(), rdlb, cfg.scenario.label(), runtime
     );
     if outcome.hung {
         println!(
@@ -190,6 +221,63 @@ fn cmd_theory(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// CLI kernel shapes — the single source of truth for per-app task
+/// capacity, shared by `build_backend` (worker side) and `cmd_serve`'s
+/// `--tasks` bound (master side).
+const MANDELBROT_GRID: (usize, usize) = (256, 256);
+const PSIA_CLI_TASKS: usize = 4096;
+
+/// Per-app task capacity of the CLI kernels.
+fn kernel_capacity(app: AppKind) -> Result<usize> {
+    Ok(match app {
+        AppKind::Mandelbrot => MANDELBROT_GRID.0 * MANDELBROT_GRID.1,
+        AppKind::Psia => PSIA_CLI_TASKS,
+        other => bail!("the native/net CLI kernels support mandelbrot|psia (got {other})"),
+    })
+}
+
+/// Build the compute backend for `app`/`backend_kind`, returning the
+/// kernel's task capacity alongside it. A spawned PJRT service (if any) is
+/// parked in `keepalive` so it outlives the run.
+fn build_backend(
+    app: AppKind,
+    backend_kind: &str,
+    artifacts: &Path,
+    max_iter: u32,
+    keepalive: &mut Option<ComputeService>,
+) -> Result<(usize, ComputeBackend)> {
+    let capacity = kernel_capacity(app)?;
+    Ok(match (app, backend_kind) {
+        (AppKind::Mandelbrot, "native") => {
+            let a = rdlb::apps::MandelbrotApp {
+                width: MANDELBROT_GRID.0,
+                height: MANDELBROT_GRID.1,
+                max_iter,
+                ..Default::default()
+            };
+            debug_assert_eq!(a.n_tasks(), capacity);
+            (capacity, ComputeBackend::Mandelbrot(std::sync::Arc::new(a)))
+        }
+        (AppKind::Psia, "native") => {
+            let a = rdlb::apps::PsiaApp::synthetic(PSIA_CLI_TASKS);
+            debug_assert_eq!(a.n_tasks(), capacity);
+            (capacity, ComputeBackend::Psia(std::sync::Arc::new(a)))
+        }
+        (AppKind::Mandelbrot | AppKind::Psia, "pjrt") => {
+            let svc = ComputeService::spawn(artifacts.to_path_buf())?;
+            let handle = svc.handle();
+            *keepalive = Some(svc);
+            let backend = if app == AppKind::Mandelbrot {
+                ComputeBackend::PjrtMandelbrot(handle)
+            } else {
+                ComputeBackend::PjrtPsia(handle)
+            };
+            (capacity, backend)
+        }
+        (a, b) => bail!("unsupported app/backend combo {a}/{b}"),
+    })
+}
+
 fn cmd_native(args: &Args) -> Result<()> {
     let app = AppKind::parse(&args.str_or("app", "mandelbrot")).ok_or_else(|| anyhow!("unknown app"))?;
     let technique = Technique::parse(&args.str_or("technique", "FAC"))
@@ -199,35 +287,21 @@ fn cmd_native(args: &Args) -> Result<()> {
     let backend_kind = args.str_or("backend", "native");
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let failures = args.usize_or("failures", 0)?;
+    let max_iter = args.u64_or("max-iter", 300)? as u32;
 
     // The service must outlive the run when the PJRT backend is used.
     let mut _service_keepalive: Option<ComputeService> = None;
-    let (n_default, backend): (usize, ComputeBackend) = match (app, backend_kind.as_str()) {
-        (AppKind::Mandelbrot, "native") => {
-            let a = rdlb::apps::MandelbrotApp { width: 256, height: 256, max_iter: 300, ..Default::default() };
-            (a.n_tasks(), ComputeBackend::Mandelbrot(std::sync::Arc::new(a)))
-        }
-        (AppKind::Psia, "native") => {
-            let a = rdlb::apps::PsiaApp::synthetic(4096);
-            (a.n_tasks(), ComputeBackend::Psia(std::sync::Arc::new(a)))
-        }
-        (AppKind::Mandelbrot, "pjrt") => {
-            let svc = ComputeService::spawn(artifacts.clone())?;
-            let handle = svc.handle();
-            _service_keepalive = Some(svc);
-            (65_536, ComputeBackend::PjrtMandelbrot(handle))
-        }
-        (AppKind::Psia, "pjrt") => {
-            let svc = ComputeService::spawn(artifacts.clone())?;
-            let handle = svc.handle();
-            _service_keepalive = Some(svc);
-            (4096, ComputeBackend::PjrtPsia(handle))
-        }
-        (a, b) => bail!("unsupported app/backend combo {a}/{b}"),
-    };
+    let (n_default, backend) =
+        build_backend(app, &backend_kind, &artifacts, max_iter, &mut _service_keepalive)?;
     let n = args.usize_opt("tasks")?.unwrap_or(n_default);
     let mut params = NativeParams::new(n, workers, technique, rdlb, backend);
     if failures > 0 {
+        // Same bound the net runtime enforces; the library-level
+        // `with_failures` would otherwise silently saturate at P-1.
+        anyhow::ensure!(
+            failures < workers,
+            "at most P-1 failures are tolerable (got {failures} for P={workers})"
+        );
         params = params.with_failures(failures, 2.0);
     }
     params.timeout = std::time::Duration::from_secs(args.u64_or("timeout", 120)?);
@@ -248,6 +322,214 @@ fn cmd_native(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load `--config FILE` (an [`ExperimentConfig`] JSON, including its `net`
+/// settings) when given; CLI flags override its values.
+fn load_config(args: &Args) -> Result<Option<ExperimentConfig>> {
+    match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read config {path}"))?;
+            Ok(Some(ExperimentConfig::from_json(&text)?))
+        }
+        None => Ok(None),
+    }
+}
+
+/// `rdlb serve`: the distributed master. Binds the listener, optionally
+/// forks `--spawn-local P` worker processes against it, accepts P
+/// registrations and drives the run over the wire protocol. Defaults come
+/// from `--config FILE` (its `net` block supplies listen / spawn_local /
+/// timeout) with flags taking precedence.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let file = load_config(args)?;
+    let net = file.as_ref().map(|c| c.net.clone()).unwrap_or_default();
+    let app = match args.get("app") {
+        Some(s) => AppKind::parse(s).ok_or_else(|| anyhow!("unknown app"))?,
+        None => file.as_ref().map(|c| c.app).unwrap_or(AppKind::Mandelbrot),
+    };
+    let technique = match args.get("technique") {
+        Some(s) => Technique::parse(s).ok_or_else(|| anyhow!("unknown technique"))?,
+        None => file.as_ref().map(|c| c.technique).unwrap_or(Technique::Fac),
+    };
+    // Flags override the config: an explicit --spawn-local wins outright,
+    // and an explicit --workers suppresses the config's spawn_local.
+    let spawn_flag = args.usize_opt("spawn-local")?;
+    let workers_flag = args.usize_opt("workers")?;
+    let spawn_local = match (spawn_flag, workers_flag) {
+        (Some(p), _) => Some(p),
+        (None, Some(_)) => None,
+        (None, None) => net.spawn_local,
+    };
+    // Worker count falls back to the config's topology (P = nodes × ranks).
+    let workers = spawn_local
+        .or(workers_flag)
+        .or_else(|| file.as_ref().map(|c| c.pes()))
+        .unwrap_or(4);
+    anyhow::ensure!(workers >= 1, "need at least one worker");
+    let rdlb_default = file.as_ref().map(|c| c.rdlb).unwrap_or(true);
+    let rdlb =
+        if args.bool_or("no-rdlb", false)? { false } else { args.bool_or("rdlb", rdlb_default)? };
+    // Failure count falls back to the config's scenario; serve has no
+    // perturbation surface (use `run --runtime net` for those), so a
+    // perturbation scenario in the config is refused rather than silently
+    // run as baseline.
+    let cfg_failures = match file.as_ref().map(|c| c.scenario) {
+        None | Some(Scenario::Baseline) => 0,
+        Some(Scenario::Failures { count }) => count,
+        Some(other) => bail!(
+            "serve does not support the {} scenario from --config; \
+             use `rdlb run --runtime net` for perturbations",
+            other.label()
+        ),
+    };
+    let failures = args.usize_or("failures", cfg_failures)?;
+    let horizon = args.f64_or("horizon", 1.0)?;
+    let timeout = Duration::from_secs(args.u64_or("timeout", net.timeout_secs)?);
+    // Forwarded to --spawn-local workers. The default is deliberately heavy
+    // (vs `native`'s 300) so the run outlasts the failure horizon and the
+    // injected fail-stops actually fire mid-run on any machine.
+    let max_iter = args.u64_or("max-iter", 50_000)?;
+    // Listen precedence: flag, then a loaded config's address, then an
+    // ephemeral port for flag-driven --spawn-local runs.
+    let listen = match (args.get("listen"), file.is_some()) {
+        (Some(l), _) => l.to_string(),
+        (None, true) => net.listen.clone(),
+        (None, false) if spawn_local.is_some() => "127.0.0.1:0".to_string(),
+        (None, false) => net.listen.clone(),
+    };
+
+    // N defaults to the worker-side kernel's capacity; workers rebuild the
+    // same kernel from `--app`, so N may not exceed it.
+    let n_default = kernel_capacity(app)?;
+    let n = args
+        .usize_opt("tasks")?
+        .or(file.as_ref().and_then(|c| c.tasks))
+        .unwrap_or(n_default);
+    anyhow::ensure!(
+        (1..=n_default).contains(&n),
+        "--tasks must be in 1..={n_default} for {app} (workers size their kernel to it)"
+    );
+
+    let listener =
+        TcpListener::bind(&listen).with_context(|| format!("bind listener on {listen}"))?;
+    let addr = listener.local_addr()?;
+    println!(
+        "serve: listening on {addr} for {workers} workers \
+         (app={app}, technique={technique}, N={n}, rdlb={rdlb}, failures={failures})"
+    );
+
+    let mut params = NetMasterParams::new(n, workers, technique, rdlb);
+    params.timeout = timeout;
+    if failures > 0 {
+        params = params.with_failures(failures, horizon)?;
+        for (w, fault) in params.faults.iter().enumerate() {
+            if let Some(t) = fault.fail_after {
+                println!("serve: worker {w} will fail-stop {t:.2}s after registration");
+            }
+        }
+    }
+
+    let mut children = Vec::new();
+    if spawn_local.is_some() {
+        let exe = std::env::current_exe().context("resolve current executable")?;
+        for i in 0..workers {
+            let child = std::process::Command::new(&exe)
+                .arg("worker")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--app")
+                .arg(app.name().to_ascii_lowercase())
+                .arg("--max-iter")
+                .arg(max_iter.to_string())
+                .arg("--retry-connect")
+                .arg("10")
+                .spawn()
+                .with_context(|| format!("spawn local worker {i}"))?;
+            children.push(child);
+        }
+        println!("serve: spawned {workers} local worker processes");
+    }
+
+    let t0 = Instant::now();
+    let result = serve_tcp(listener, params, timeout.max(Duration::from_secs(30)));
+    // Reap the forked workers regardless of how the run ended; Terminate
+    // has already been sent, the kill only catches wedged stragglers.
+    for child in &mut children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    let outcome = result?;
+
+    if outcome.hung {
+        println!(
+            "RESULT: HUNG at the {}s hang bound (finished {}/{} — the paper's \
+             'waits indefinitely' case)",
+            timeout.as_secs(),
+            outcome.finished,
+            outcome.n
+        );
+    } else {
+        println!(
+            "RESULT: T_par = {:.3}s  chunks={} rescheduled={} duplicates={} digest={:.1}  (wall {:?})",
+            outcome.parallel_time,
+            outcome.stats.assigned_chunks,
+            outcome.stats.rescheduled_chunks,
+            outcome.stats.duplicate_iterations,
+            outcome.result_digest,
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+/// `rdlb worker`: connect to a serving master and compute until terminated.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let file = load_config(args)?;
+    let app = match args.get("app") {
+        Some(s) => AppKind::parse(s).ok_or_else(|| anyhow!("unknown app"))?,
+        None => file.as_ref().map(|c| c.app).unwrap_or(AppKind::Mandelbrot),
+    };
+    let backend_kind = args.str_or("backend", "native");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let connect = match args.get("connect") {
+        Some(c) => c.to_string(),
+        None => file.map(|c| c.net.connect).unwrap_or_else(|| NetSettings::default().connect),
+    };
+    let max_iter = args.u64_or("max-iter", 300)? as u32;
+    // Retry window for connection errors. 0 (the default) surfaces a wrong
+    // address immediately; `serve --spawn-local` passes 10 s to its forked
+    // workers to cover the master's accept loop coming up a beat late.
+    let retry = Duration::from_secs_f64(args.f64_or("retry-connect", 0.0)?.max(0.0));
+
+    let mut _service_keepalive: Option<ComputeService> = None;
+    let (_capacity, backend) =
+        build_backend(app, &backend_kind, &artifacts, max_iter, &mut _service_keepalive)?;
+
+    let deadline = Instant::now() + retry;
+    let transport = loop {
+        match TcpTransport::connect(&connect) {
+            Ok(t) => break t,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+
+    let label = format!("{}/{}", app.name().to_ascii_lowercase(), backend_kind);
+    let report = run_worker(Box::new(transport), backend, &label)?;
+    println!(
+        "worker {}: {} chunks, {} iterations{}",
+        report.worker,
+        report.chunks,
+        report.iterations,
+        if report.failed { " (fail-stop injected)" } else { "" }
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
@@ -256,6 +538,8 @@ fn main() -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("theory") => cmd_theory(&args),
         Some("native") => cmd_native(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
             std::process::exit(2);

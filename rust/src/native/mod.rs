@@ -62,14 +62,30 @@ impl NativeParams {
         }
     }
 
-    /// Fail `count` workers (never worker 0) at evenly spread times within
-    /// `(0, horizon)` seconds.
+    /// Fail `count` workers (never worker 0) using the *same* plan as the
+    /// net runtime ([`crate::net::FaultSpec::plan_failures`]): the last
+    /// `count` workers fail at distinct, evenly spread times within
+    /// `(0, horizon)` seconds, so cross-runtime comparisons kill identical
+    /// victims.
+    ///
+    /// `count` saturates at `P−1`, the paper's tolerable maximum: asking for
+    /// more failures than there are killable workers fails every worker but
+    /// the master once, rather than silently cycling over the same workers
+    /// and overwriting earlier fail times (which dropped failures). The
+    /// CLIs reject `count >= P` up front.
     pub fn with_failures(mut self, count: usize, horizon: f64) -> Self {
-        assert!(count < self.workers, "at most P-1 failures");
-        for k in 0..count {
-            let w = 1 + k % (self.workers - 1);
-            let t = horizon * (k + 1) as f64 / (count + 1) as f64;
-            self.failures[w] = Some(t);
+        let count = count.min(self.workers.saturating_sub(1));
+        // A degenerate (zero/negative/NaN) horizon means "fail immediately",
+        // not a panic: clamp to the smallest positive spread.
+        let horizon = horizon.max(f64::MIN_POSITIVE);
+        if count > 0 {
+            let plan = crate::net::FaultSpec::plan_failures(self.workers, count, horizon)
+                .expect("count saturated below P and horizon clamped positive");
+            for (slot, fault) in self.failures.iter_mut().zip(&plan) {
+                if let Some(t) = fault.fail_after {
+                    *slot = Some(t);
+                }
+            }
         }
         self
     }
@@ -348,6 +364,24 @@ mod tests {
             with.parallel_time,
             without.parallel_time
         );
+    }
+
+    #[test]
+    fn with_failures_saturates_at_p_minus_1_with_distinct_times() {
+        // Regression: `1 + k % (workers-1)` used to cycle when count
+        // exceeded P-1, overwriting earlier fail times and silently
+        // dropping failures.
+        let p = NativeParams::new(10, 4, Technique::Fac, true, synthetic(10, 1e-4))
+            .with_failures(10, 2.0);
+        assert!(p.failures[0].is_none(), "worker 0 (master) must never fail");
+        let times: Vec<f64> = p.failures[1..].iter().map(|f| f.unwrap()).collect();
+        assert_eq!(times.len(), 3, "saturates at P-1 distinct failures");
+        for w in times.windows(2) {
+            assert!(w[0] < w[1], "fail times must be distinct: {times:?}");
+        }
+        assert!(times.iter().all(|&t| t > 0.0 && t < 2.0));
+        // The saturated plan still constructs a valid runtime.
+        assert!(NativeRuntime::new(p).is_ok());
     }
 
     #[test]

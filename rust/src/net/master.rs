@@ -1,0 +1,307 @@
+//! The distributed master: drives the *identical* [`Master`] state machine
+//! the simulator and the in-process native runtime use, but over
+//! [`Transport`] connections — one reader thread per worker feeding a
+//! single dispatch loop, all send halves owned by that loop.
+//!
+//! Faithful to the paper, the master performs **no failure detection**: a
+//! closed connection is noted and ignored, an undeliverable assignment
+//! simply evaporates (fail-stop), and lost work is only ever recovered by
+//! the rDLB re-dispatch phase.  The only concession to practicality is a
+//! wall-clock hang bound (`timeout`) that converts the paper's "waits
+//! indefinitely" outcome into a reported hung run.
+
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::{Master, MasterConfig, Reply};
+use crate::dls::{Technique, TechniqueParams};
+use crate::sim::Outcome;
+
+use super::protocol::{FaultSpec, Frame, Welcome, WireAssignment, PROTOCOL_VERSION};
+use super::transport::{FrameRx as _, FrameTx, TcpTransport, Transport};
+
+/// Parameters of one distributed run.
+#[derive(Debug, Clone)]
+pub struct NetMasterParams {
+    /// Loop iterations N.
+    pub n: usize,
+    pub technique: Technique,
+    pub tech_params: TechniqueParams,
+    /// Enable the rDLB re-dispatch phase.
+    pub rdlb: bool,
+    /// One fault-injection envelope per expected worker, in registration
+    /// order; the vector's length is the worker count P.
+    pub faults: Vec<FaultSpec>,
+    /// Wall-clock hang bound (the paper's "waits indefinitely" case,
+    /// bounded for practicality).
+    pub timeout: Duration,
+}
+
+impl NetMasterParams {
+    pub fn new(n: usize, workers: usize, technique: Technique, rdlb: bool) -> Self {
+        NetMasterParams {
+            n,
+            technique,
+            tech_params: TechniqueParams::default(),
+            rdlb,
+            faults: vec![FaultSpec::default(); workers],
+            timeout: Duration::from_secs(60),
+        }
+    }
+
+    /// Expected worker count P.
+    pub fn workers(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Inject `count` fail-stop failures spread over `(0, horizon)` seconds
+    /// (see [`FaultSpec::plan_failures`]); errors when `count >= P`.
+    /// Slowdown/latency envelopes already configured are preserved.
+    pub fn with_failures(mut self, count: usize, horizon: f64) -> Result<Self> {
+        let plan = FaultSpec::plan_failures(self.faults.len(), count, horizon)?;
+        for (fault, planned) in self.faults.iter_mut().zip(plan) {
+            fault.fail_after = planned.fail_after;
+        }
+        Ok(self)
+    }
+}
+
+/// What a reader thread observed on one connection.
+enum Event {
+    Frame(usize, Frame),
+    /// Connection closed or stream corrupted. The master notes it for logs
+    /// and — faithful to the paper — does nothing else.
+    Closed(usize),
+}
+
+/// The distributed master runtime.
+pub struct NetMaster {
+    params: NetMasterParams,
+}
+
+impl NetMaster {
+    pub fn new(params: NetMasterParams) -> Result<NetMaster> {
+        ensure!(params.n > 0, "no tasks");
+        ensure!(!params.faults.is_empty(), "need at least one worker");
+        Ok(NetMaster { params })
+    }
+
+    /// Drive a full run over pre-established connections (one per worker;
+    /// registration handshake included). Returns the same [`Outcome`] the
+    /// simulator and native runtime produce.
+    pub fn run(&self, transports: Vec<Box<dyn Transport>>) -> Result<Outcome> {
+        let prm = &self.params;
+        let p = prm.faults.len();
+        ensure!(transports.len() == p, "expected {p} connections, got {}", transports.len());
+
+        let mut master = Master::new(MasterConfig {
+            n: prm.n,
+            p,
+            technique: prm.technique,
+            params: prm.tech_params.clone(),
+            rdlb: prm.rdlb,
+        });
+
+        // One reader thread per connection; all send halves stay here.
+        let (event_tx, event_rx) = mpsc::channel::<Event>();
+        let mut txs: Vec<Option<Box<dyn FrameTx>>> = Vec::with_capacity(p);
+        for (w, transport) in transports.into_iter().enumerate() {
+            let (tx, mut rx) = transport.split()?;
+            txs.push(Some(tx));
+            let events = event_tx.clone();
+            std::thread::spawn(move || loop {
+                match rx.recv() {
+                    Ok(frame) => {
+                        if events.send(Event::Frame(w, frame)).is_err() {
+                            return; // master gone
+                        }
+                    }
+                    Err(_) => {
+                        let _ = events.send(Event::Closed(w));
+                        return;
+                    }
+                }
+            });
+        }
+        drop(event_tx);
+
+        let start = Instant::now();
+        let hard_deadline = start + prm.timeout;
+        let mut registered = vec![false; p];
+        let mut parked: Vec<usize> = Vec::new();
+        let mut useful = 0.0f64;
+        let mut wasted = 0.0f64;
+        let mut result_digest = 0.0f64;
+        let mut hung = false;
+
+        loop {
+            let left = hard_deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                hung = !master.is_complete();
+                break;
+            }
+            let event = match event_rx.recv_timeout(left) {
+                Ok(e) => e,
+                Err(mpsc::RecvTimeoutError::Timeout)
+                | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    hung = !master.is_complete();
+                    break;
+                }
+            };
+            let now = start.elapsed().as_secs_f64();
+            match event {
+                Event::Closed(_) => {
+                    // No detection: rDLB recovers the work, or the run hangs.
+                }
+                Event::Frame(w, Frame::Hello(hello)) => {
+                    if hello.version != PROTOCOL_VERSION {
+                        // Incompatible peer: tell it to exit (dropping our
+                        // send half alone would not close the socket — the
+                        // reader thread's clone keeps it open) and refuse
+                        // further traffic.
+                        eprintln!(
+                            "net: refusing worker {w}: protocol version {} != {}",
+                            hello.version, PROTOCOL_VERSION
+                        );
+                        send_or_drop(&mut txs, w, &Frame::Terminate);
+                        txs[w] = None;
+                        continue;
+                    }
+                    registered[w] = true;
+                    let welcome = Frame::Welcome(Welcome {
+                        worker: w as u32,
+                        n: prm.n as u64,
+                        fault: prm.faults[w].clone(),
+                    });
+                    send_or_drop(&mut txs, w, &welcome);
+                }
+                Event::Frame(w, Frame::Request { worker }) => {
+                    if !registered[w] || worker as usize != w {
+                        continue; // protocol violation: ignore
+                    }
+                    dispatch(&mut master, w, now, &mut txs, &mut parked);
+                }
+                Event::Frame(w, Frame::Result(r)) => {
+                    if !registered[w] || r.worker as usize != w {
+                        continue;
+                    }
+                    let newly = master.on_result(w, r.assignment, r.compute_secs, now);
+                    let fins = newly.len() as f64;
+                    let dups = (r.digests.len() as f64 - fins).max(0.0);
+                    if dups + fins > 0.0 {
+                        wasted += r.compute_secs * dups / (dups + fins);
+                        useful += r.compute_secs * fins / (dups + fins);
+                    }
+                    // Exactly one digest contribution per iteration: only
+                    // positions whose completion was the FIRST one count.
+                    for &pos in &newly {
+                        if let Some(d) = r.digests.get(pos) {
+                            result_digest += d;
+                        }
+                    }
+                    if master.is_complete() {
+                        break;
+                    }
+                    for pw in std::mem::take(&mut parked) {
+                        dispatch(&mut master, pw, now, &mut txs, &mut parked);
+                    }
+                    // Result piggy-backs the next request (MPI semantics).
+                    dispatch(&mut master, w, now, &mut txs, &mut parked);
+                }
+                Event::Frame(_, _) => {
+                    // Master-bound connections must not carry master frames.
+                }
+            }
+        }
+
+        // MPI_Abort: stop every surviving worker immediately.
+        for tx in txs.iter_mut().flatten() {
+            let _ = tx.send(&Frame::Terminate);
+        }
+        drop(txs);
+
+        let elapsed = start.elapsed().as_secs_f64();
+        Ok(Outcome {
+            parallel_time: if hung { f64::INFINITY } else { elapsed },
+            hung,
+            finished: master.table().finished_count(),
+            n: prm.n,
+            stats: master.stats().clone(),
+            wasted_work: wasted,
+            useful_work: useful,
+            failures: prm.faults.iter().filter(|f| f.fail_after.is_some()).count(),
+            result_digest,
+        })
+    }
+}
+
+/// Answer one work request: send the chunk, park the worker, or terminate
+/// it. A failed send is a fail-stop in progress — the chunk evaporates and
+/// the master, faithfully, does not react.
+fn dispatch(
+    master: &mut Master,
+    worker: usize,
+    now: f64,
+    txs: &mut [Option<Box<dyn FrameTx>>],
+    parked: &mut Vec<usize>,
+) {
+    match master.on_request(worker, now) {
+        Reply::Assign(a) => {
+            let frame = Frame::Assign(WireAssignment::from_assignment(&a));
+            send_or_drop(txs, worker, &frame);
+        }
+        Reply::Wait => {
+            let frame = Frame::Wait;
+            send_or_drop(txs, worker, &frame);
+            if !parked.contains(&worker) {
+                parked.push(worker);
+            }
+        }
+        Reply::Terminate => {
+            send_or_drop(txs, worker, &Frame::Terminate);
+        }
+    }
+}
+
+fn send_or_drop(txs: &mut [Option<Box<dyn FrameTx>>], worker: usize, frame: &Frame) {
+    if let Some(tx) = txs[worker].as_mut() {
+        if tx.send(frame).is_err() {
+            txs[worker] = None;
+        }
+    }
+}
+
+/// Accept exactly P = `params.workers()` TCP connections on `listener`,
+/// then drive the run. `accept_timeout` bounds the registration window so a
+/// worker that never connects cannot hang the server forever.
+pub fn serve_tcp(
+    listener: TcpListener,
+    params: NetMasterParams,
+    accept_timeout: Duration,
+) -> Result<Outcome> {
+    let p = params.workers();
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let deadline = Instant::now() + accept_timeout;
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(p);
+    while transports.len() < p {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                stream.set_nonblocking(false).context("blocking worker stream")?;
+                transports.push(Box::new(TcpTransport::new(stream)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                ensure!(
+                    Instant::now() < deadline,
+                    "timed out waiting for workers to connect ({}/{p} arrived)",
+                    transports.len()
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accept worker connection"),
+        }
+    }
+    NetMaster::new(params)?.run(transports)
+}

@@ -1,0 +1,144 @@
+//! Distributed master–worker runtime over a real wire protocol.
+//!
+//! This subsystem takes the *identical* [`crate::coordinator::Master`]
+//! state machine that powers the discrete-event simulator and the
+//! in-process native runtime, and drives it across OS processes:
+//!
+//! * [`protocol`] — versioned, length-prefixed binary frames
+//!   (`Hello / Welcome / Request / Assign / Wait / Result / Terminate`)
+//!   plus in-band [`FaultSpec`] fault-injection envelopes reproducing the
+//!   paper's §4 failure and perturbation scenarios across processes;
+//! * [`transport`] — the [`Transport`] abstraction with [`TcpTransport`]
+//!   (real sockets) and [`LoopbackTransport`] (in-process, codec-exercising
+//!   channels, so the whole stack is unit-testable without ports);
+//! * [`master`] — listener, worker registry and the dispatch loop, with the
+//!   paper's no-detection semantics and a wall-clock hang bound;
+//! * [`worker`] — connect, register, request–compute–report over any
+//!   [`crate::native::ComputeBackend`].
+//!
+//! The CLI exposes it as `rdlb serve` / `rdlb worker --connect`, including
+//! a single-binary `--spawn-local P` mode that forks P worker processes for
+//! one-command end-to-end runs (see `PROTOCOL.md`).
+
+pub mod master;
+pub mod protocol;
+pub mod transport;
+pub mod worker;
+
+pub use master::{serve_tcp, NetMaster, NetMasterParams};
+pub use protocol::{
+    FaultSpec, Frame, Welcome, WireAssignment, WorkResult, WorkerHello, MAX_FRAME_LEN,
+    PROTOCOL_VERSION,
+};
+pub use transport::{FrameRx, FrameTx, LoopbackTransport, TcpTransport, Transport};
+pub use worker::{run_worker, WorkerReport};
+
+use anyhow::{Context as _, Result};
+
+use crate::native::ComputeBackend;
+use crate::sim::Outcome;
+
+/// Run a full distributed protocol exchange in-process: one loopback
+/// connection per worker, each worker on its own thread with a clone of
+/// `backend`. Exercises the entire wire protocol (codec included) without
+/// opening a port, and returns the same [`Outcome`] every other runtime
+/// produces, plus the per-worker reports in worker order.
+///
+/// A worker that errors (protocol violation, backend failure) or panics
+/// fails the whole call — unlike an injected fail-stop, which is a normal
+/// `WorkerReport { failed: true, .. }`.
+pub fn run_loopback(
+    params: NetMasterParams,
+    backend: &ComputeBackend,
+) -> Result<(Outcome, Vec<WorkerReport>)> {
+    let p = params.workers();
+    let mut connections: Vec<Box<dyn Transport>> = Vec::with_capacity(p);
+    let mut joins = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (master_end, worker_end) = LoopbackTransport::pair();
+        connections.push(Box::new(master_end));
+        let b = backend.clone();
+        joins.push(std::thread::spawn(move || {
+            run_worker(Box::new(worker_end), b, "loopback")
+        }));
+    }
+    let outcome = NetMaster::new(params)?.run(connections)?;
+    let mut reports = Vec::with_capacity(p);
+    for (w, join) in joins.into_iter().enumerate() {
+        match join.join() {
+            Ok(Ok(report)) => reports.push(report),
+            Ok(Err(e)) => return Err(e).with_context(|| format!("loopback worker {w}")),
+            Err(_) => anyhow::bail!("loopback worker {w} panicked"),
+        }
+    }
+    Ok((outcome, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::CostModel;
+    use crate::dls::Technique;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn synthetic(n: usize, cost: f64) -> ComputeBackend {
+        ComputeBackend::Synthetic {
+            model: Arc::new(CostModel::from_costs(vec![cost; n])),
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn loopback_baseline_completes() {
+        let params = NetMasterParams::new(64, 4, Technique::Fac, true);
+        let (o, reports) = run_loopback(params, &synthetic(64, 1e-4)).unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.finished, 64);
+        assert_eq!(reports.len(), 4);
+        let computed: u64 = reports.iter().map(|r| r.iterations).sum();
+        assert!(computed >= 64, "all iterations computed at least once: {reports:?}");
+    }
+
+    #[test]
+    fn loopback_failures_with_rdlb_complete() {
+        let mut params = NetMasterParams::new(200, 4, Technique::Fac, true)
+            .with_failures(3, 0.05)
+            .unwrap();
+        params.timeout = Duration::from_secs(30);
+        let (o, reports) = run_loopback(params, &synthetic(200, 2e-3)).unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.finished, 200);
+        assert_eq!(o.failures, 3);
+        assert!(reports.iter().any(|r| r.failed), "some worker must have fail-stopped");
+    }
+
+    #[test]
+    fn loopback_failures_without_rdlb_hang() {
+        let mut params = NetMasterParams::new(200, 4, Technique::Fac, false)
+            .with_failures(2, 0.05)
+            .unwrap();
+        params.timeout = Duration::from_millis(800);
+        let (o, _) = run_loopback(params, &synthetic(200, 2e-3)).unwrap();
+        assert!(o.hung, "must hang without rDLB: {o:?}");
+        assert!(o.parallel_time.is_infinite());
+    }
+
+    #[test]
+    fn slowdown_and_latency_envelopes_still_complete() {
+        let mut params = NetMasterParams::new(120, 4, Technique::Fac, true);
+        params.faults[3].slowdown = 3.0;
+        params.faults[2].latency = 0.02;
+        params.timeout = Duration::from_secs(30);
+        let (o, _) = run_loopback(params, &synthetic(120, 1e-3)).unwrap();
+        assert!(o.completed(), "{o:?}");
+    }
+
+    #[test]
+    fn rejects_mismatched_connection_count() {
+        let params = NetMasterParams::new(10, 2, Technique::Ss, true);
+        let (a, _b) = LoopbackTransport::pair();
+        let err = NetMaster::new(params).unwrap().run(vec![Box::new(a)]);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,507 @@
+//! The rDLB wire protocol: versioned, length-prefixed binary frames.
+//!
+//! Every message between a worker and the master is one *frame*:
+//!
+//! ```text
+//!   ┌────────────────┬──────────────────────────────┐
+//!   │ u32 LE length  │ payload (length bytes)       │
+//!   └────────────────┴──────────────────────────────┘
+//!   payload = [ u8 tag ][ tag-specific fields, little-endian ]
+//! ```
+//!
+//! The codec is hand-rolled (serde/bincode are unavailable offline) and
+//! deliberately boring: fixed-width little-endian integers, IEEE-754 bit
+//! patterns for floats, `u32`-counted vectors and UTF-8 strings.  See
+//! `PROTOCOL.md` at the repository root for the field-by-field layout and
+//! the message sequence diagrams.
+//!
+//! Fault injection travels *in-band*: the master assigns each registering
+//! worker a [`FaultSpec`] envelope inside [`Welcome`], and the worker
+//! self-enforces it (fail-stop deadline, compute dilation, per-message
+//! latency).  This reproduces the paper's §4.1 mechanics across real OS
+//! processes while keeping the master detection-free.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+use crate::coordinator::Assignment;
+
+/// Protocol version carried in [`WorkerHello`]; the master refuses workers
+/// that do not match exactly.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Upper bound on one frame payload, guarding against corrupt length
+/// prefixes (a full paper-scale Mandelbrot assignment is ~1 MiB).
+pub const MAX_FRAME_LEN: usize = 32 << 20;
+
+/// Frame tags (first payload byte).
+const TAG_HELLO: u8 = 0x01;
+const TAG_WELCOME: u8 = 0x02;
+const TAG_REQUEST: u8 = 0x03;
+const TAG_ASSIGN: u8 = 0x04;
+const TAG_WAIT: u8 = 0x05;
+const TAG_RESULT: u8 = 0x06;
+const TAG_TERMINATE: u8 = 0x07;
+
+/// Per-worker fault-injection envelope (the paper's §4 scenarios).
+///
+/// Assigned by the master at registration; enforced by the worker itself so
+/// that the master stays detection-free.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Fail-stop: stop participating this many seconds after registration
+    /// (in-flight chunk evaporates, nothing informs the master).
+    pub fail_after: Option<f64>,
+    /// Compute dilation factor ≥ 1.0 (the paper's CPU-burner equivalent).
+    pub slowdown: f64,
+    /// Extra one-way latency, seconds, on every message the worker sends or
+    /// receives (the paper's PMPI interposer added 10 s).
+    pub latency: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { fail_after: None, slowdown: 1.0, latency: 0.0 }
+    }
+}
+
+impl FaultSpec {
+    /// Plan `count` fail-stop failures over `workers` registration slots:
+    /// the *last* `count` workers fail (worker 0 always survives) at
+    /// distinct times evenly spread within `(0, horizon)`.
+    ///
+    /// Errors when `count >= workers` — the paper tolerates at most P−1
+    /// failures; at least one worker must survive to finish the loop.
+    pub fn plan_failures(workers: usize, count: usize, horizon: f64) -> Result<Vec<FaultSpec>> {
+        ensure!(workers >= 1, "need at least one worker");
+        ensure!(
+            count < workers,
+            "at most P-1 fail-stop failures are tolerable (got {count} for P={workers})"
+        );
+        ensure!(horizon > 0.0, "failure horizon must be positive");
+        let mut out = vec![FaultSpec::default(); workers];
+        for k in 0..count {
+            let w = workers - count + k;
+            out[w].fail_after = Some(horizon * (k + 1) as f64 / (count + 1) as f64);
+        }
+        Ok(out)
+    }
+}
+
+/// Worker → master: registration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerHello {
+    pub version: u16,
+    /// Human-readable backend label (`"mandelbrot/native"`), for logs only.
+    pub backend: String,
+}
+
+/// Master → worker: registration accepted; carries the worker's id, the
+/// total iteration count and the fault-injection envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Welcome {
+    pub worker: u32,
+    pub n: u64,
+    pub fault: FaultSpec,
+}
+
+/// Master → worker: one chunk of loop iterations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireAssignment {
+    pub id: u64,
+    pub worker: u32,
+    /// Issued by the rDLB re-dispatch phase (duplicate of Scheduled work).
+    pub rescheduled: bool,
+    /// Loop-iteration ids, ascending.
+    pub tasks: Vec<u32>,
+}
+
+impl WireAssignment {
+    pub fn from_assignment(a: &Assignment) -> WireAssignment {
+        WireAssignment {
+            id: a.id,
+            worker: a.worker as u32,
+            rescheduled: a.rescheduled,
+            tasks: a.tasks.clone(),
+        }
+    }
+}
+
+/// Worker → master: a completed chunk (implicitly also the next request,
+/// matching the MPI library's piggy-backed request-on-result).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkResult {
+    pub worker: u32,
+    pub assignment: u64,
+    /// Worker-side chunk execution time, seconds (feeds the adaptive
+    /// techniques' per-chunk timing).
+    pub compute_secs: f64,
+    /// One result digest per task in the assignment, in task order.
+    pub digests: Vec<f64>,
+}
+
+/// Every message of the protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Worker → master: register.
+    Hello(WorkerHello),
+    /// Master → worker: registration accepted.
+    Welcome(Welcome),
+    /// Worker → master: explicit work request (sent once after `Welcome`;
+    /// afterwards `Result` piggy-backs the request).
+    Request { worker: u32 },
+    /// Master → worker: a chunk.
+    Assign(WireAssignment),
+    /// Master → worker: nothing assignable right now; block for the next
+    /// frame. (Without rDLB this is where a failure hangs the run.)
+    Wait,
+    /// Worker → master: completed chunk.
+    Result(WorkResult),
+    /// Master → worker: every iteration Finished (or the hang bound hit) —
+    /// exit immediately (the paper's `MPI_Abort`).
+    Terminate,
+}
+
+// ---------------------------------------------------------------- encoding
+
+fn push_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(u8::from(v));
+}
+
+fn push_opt_f64(buf: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        None => buf.push(0),
+        Some(x) => {
+            buf.push(1);
+            push_f64(buf, x);
+        }
+    }
+}
+
+fn push_str(buf: &mut Vec<u8>, s: &str) {
+    push_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn push_vec_u32(buf: &mut Vec<u8>, v: &[u32]) {
+    push_u32(buf, v.len() as u32);
+    for &x in v {
+        push_u32(buf, x);
+    }
+}
+
+fn push_vec_f64(buf: &mut Vec<u8>, v: &[f64]) {
+    push_u32(buf, v.len() as u32);
+    for &x in v {
+        push_f64(buf, x);
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame payload.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.buf.len() - self.pos >= n,
+            "truncated frame: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn boolean(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("invalid bool byte {other:#04x}"),
+        }
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.boolean()? { Some(self.f64()?) } else { None })
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len).context("string body")?;
+        String::from_utf8(bytes.to_vec()).context("invalid UTF-8 in string field")
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let len = self.u32()? as usize;
+        ensure!(len * 4 <= self.buf.len() - self.pos, "u32 vector length {len} exceeds frame");
+        (0..len).map(|_| self.u32()).collect()
+    }
+
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let len = self.u32()? as usize;
+        ensure!(len * 8 <= self.buf.len() - self.pos, "f64 vector length {len} exceeds frame");
+        (0..len).map(|_| self.f64()).collect()
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "trailing garbage: {} bytes after frame body",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn push_fault(buf: &mut Vec<u8>, f: &FaultSpec) {
+    push_opt_f64(buf, f.fail_after);
+    push_f64(buf, f.slowdown);
+    push_f64(buf, f.latency);
+}
+
+fn read_fault(r: &mut ByteReader<'_>) -> Result<FaultSpec> {
+    Ok(FaultSpec { fail_after: r.opt_f64()?, slowdown: r.f64()?, latency: r.f64()? })
+}
+
+impl Frame {
+    /// Encode the payload (tag + fields), without the length prefix.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(16);
+        match self {
+            Frame::Hello(h) => {
+                buf.push(TAG_HELLO);
+                push_u16(&mut buf, h.version);
+                push_str(&mut buf, &h.backend);
+            }
+            Frame::Welcome(w) => {
+                buf.push(TAG_WELCOME);
+                push_u32(&mut buf, w.worker);
+                push_u64(&mut buf, w.n);
+                push_fault(&mut buf, &w.fault);
+            }
+            Frame::Request { worker } => {
+                buf.push(TAG_REQUEST);
+                push_u32(&mut buf, *worker);
+            }
+            Frame::Assign(a) => {
+                buf.push(TAG_ASSIGN);
+                push_u64(&mut buf, a.id);
+                push_u32(&mut buf, a.worker);
+                push_bool(&mut buf, a.rescheduled);
+                push_vec_u32(&mut buf, &a.tasks);
+            }
+            Frame::Wait => buf.push(TAG_WAIT),
+            Frame::Result(r) => {
+                buf.push(TAG_RESULT);
+                push_u32(&mut buf, r.worker);
+                push_u64(&mut buf, r.assignment);
+                push_f64(&mut buf, r.compute_secs);
+                push_vec_f64(&mut buf, &r.digests);
+            }
+            Frame::Terminate => buf.push(TAG_TERMINATE),
+        }
+        buf
+    }
+
+    /// Decode one payload; the whole buffer must be consumed.
+    pub fn decode(payload: &[u8]) -> Result<Frame> {
+        let mut r = ByteReader::new(payload);
+        let frame = match r.u8().context("frame tag")? {
+            TAG_HELLO => {
+                Frame::Hello(WorkerHello { version: r.u16()?, backend: r.string()? })
+            }
+            TAG_WELCOME => Frame::Welcome(Welcome {
+                worker: r.u32()?,
+                n: r.u64()?,
+                fault: read_fault(&mut r)?,
+            }),
+            TAG_REQUEST => Frame::Request { worker: r.u32()? },
+            TAG_ASSIGN => Frame::Assign(WireAssignment {
+                id: r.u64()?,
+                worker: r.u32()?,
+                rescheduled: r.boolean()?,
+                tasks: r.vec_u32()?,
+            }),
+            TAG_WAIT => Frame::Wait,
+            TAG_RESULT => Frame::Result(WorkResult {
+                worker: r.u32()?,
+                assignment: r.u64()?,
+                compute_secs: r.f64()?,
+                digests: r.vec_f64()?,
+            }),
+            TAG_TERMINATE => Frame::Terminate,
+            other => bail!("unknown frame tag {other:#04x}"),
+        };
+        r.finish()?;
+        Ok(frame)
+    }
+
+    /// Short label for logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Frame::Hello(_) => "Hello",
+            Frame::Welcome(_) => "Welcome",
+            Frame::Request { .. } => "Request",
+            Frame::Assign(_) => "Assign",
+            Frame::Wait => "Wait",
+            Frame::Result(_) => "Result",
+            Frame::Terminate => "Terminate",
+        }
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let payload = frame.encode();
+    ensure!(payload.len() <= MAX_FRAME_LEN, "frame too large: {} bytes", payload.len());
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame (blocking).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes).context("frame length prefix")?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    ensure!(len > 0 && len <= MAX_FRAME_LEN, "implausible frame length {len}");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("frame payload")?;
+    Frame::decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn samples() -> Vec<Frame> {
+        vec![
+            Frame::Hello(WorkerHello { version: PROTOCOL_VERSION, backend: "psia/native".into() }),
+            Frame::Welcome(Welcome {
+                worker: 3,
+                n: 262_144,
+                fault: FaultSpec { fail_after: Some(1.25), slowdown: 2.0, latency: 0.1 },
+            }),
+            Frame::Request { worker: 7 },
+            Frame::Assign(WireAssignment {
+                id: 42,
+                worker: 1,
+                rescheduled: true,
+                tasks: vec![0, 5, 6, 7, 1023],
+            }),
+            Frame::Wait,
+            Frame::Result(WorkResult {
+                worker: 1,
+                assignment: 42,
+                compute_secs: 0.125,
+                digests: vec![1.0, 2.5, -3.0],
+            }),
+            Frame::Terminate,
+        ]
+    }
+
+    #[test]
+    fn roundtrip_every_variant() {
+        for f in samples() {
+            let back = Frame::decode(&f.encode()).unwrap();
+            assert_eq!(back, f, "roundtrip mismatch for {}", f.label());
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut buf = Vec::new();
+        for f in &samples() {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for f in &samples() {
+            assert_eq!(&read_frame(&mut cur).unwrap(), f);
+        }
+        assert!(read_frame(&mut cur).is_err(), "EOF must error");
+    }
+
+    #[test]
+    fn truncation_and_garbage_rejected() {
+        for f in samples() {
+            let bytes = f.encode();
+            if bytes.len() > 1 {
+                assert!(Frame::decode(&bytes[..bytes.len() - 1]).is_err(), "{}", f.label());
+            }
+            let mut extended = bytes.clone();
+            extended.push(0xEE);
+            assert!(Frame::decode(&extended).is_err(), "{}", f.label());
+        }
+        assert!(Frame::decode(&[0xFF]).is_err(), "unknown tag");
+        assert!(Frame::decode(&[]).is_err(), "empty payload");
+    }
+
+    #[test]
+    fn implausible_length_prefix_rejected() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        let mut cur = Cursor::new(bytes);
+        assert!(read_frame(&mut cur).is_err());
+        let mut zero = Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(read_frame(&mut zero).is_err());
+    }
+
+    #[test]
+    fn plan_failures_distinct_and_bounded() {
+        let plan = FaultSpec::plan_failures(4, 3, 2.0).unwrap();
+        assert!(plan[0].fail_after.is_none(), "worker 0 must survive");
+        let times: Vec<f64> = plan[1..].iter().map(|f| f.fail_after.unwrap()).collect();
+        assert_eq!(times.len(), 3);
+        for w in times.windows(2) {
+            assert!(w[0] < w[1], "fail times must be distinct and increasing: {times:?}");
+        }
+        assert!(times.iter().all(|&t| t > 0.0 && t < 2.0));
+        assert!(FaultSpec::plan_failures(4, 4, 2.0).is_err(), "P failures must be rejected");
+        assert!(FaultSpec::plan_failures(0, 0, 2.0).is_err());
+    }
+}

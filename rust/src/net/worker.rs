@@ -1,0 +1,119 @@
+//! The distributed worker: connect, register, then request–compute–report
+//! over any [`ComputeBackend`] until the master terminates the run.
+//!
+//! The worker self-enforces the fault envelope the master assigned in
+//! [`Welcome`](super::protocol::Welcome): past its fail-stop deadline it
+//! silently stops participating (the in-flight chunk evaporates and nothing
+//! informs the master — the paper's §4.1 fail-stop model); slowdown dilates
+//! every chunk's compute; latency delays every message in both directions.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::native::ComputeBackend;
+
+use super::protocol::{Frame, WorkResult, WorkerHello, PROTOCOL_VERSION};
+use super::transport::{FrameRx as _, FrameTx as _, Transport};
+
+/// Summary of one worker's participation (for logs and tests).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WorkerReport {
+    pub worker: u32,
+    /// Chunks completed and reported.
+    pub chunks: u64,
+    /// Iterations computed (including rDLB duplicates).
+    pub iterations: u64,
+    /// True when the injected fail-stop deadline ended participation.
+    pub failed: bool,
+}
+
+/// Run the worker loop to completion over an established connection.
+///
+/// `label` describes the backend in the registration frame (logs only).
+/// Returns when the master terminates the run, the connection drops (the
+/// distributed equivalent of `MPI_Abort`), or the injected fail-stop hits.
+pub fn run_worker(
+    transport: Box<dyn Transport>,
+    backend: ComputeBackend,
+    label: &str,
+) -> Result<WorkerReport> {
+    let (mut tx, mut rx) = transport.split()?;
+    tx.send(&Frame::Hello(WorkerHello {
+        version: PROTOCOL_VERSION,
+        backend: label.to_string(),
+    }))?;
+    let (me, fault) = match rx.recv().context("awaiting Welcome")? {
+        Frame::Welcome(w) => (w.worker, w.fault),
+        other => bail!("expected Welcome, got {}", other.label()),
+    };
+
+    let start = Instant::now();
+    let deadline = fault.fail_after.map(|s| start + Duration::from_secs_f64(s.max(0.0)));
+    let slow = fault.slowdown.max(1.0);
+    let lat = Duration::from_secs_f64(fault.latency.max(0.0));
+    let dead = |at: Instant| deadline.is_some_and(|d| at >= d);
+    let mut report = WorkerReport { worker: me, ..WorkerReport::default() };
+
+    if !lat.is_zero() {
+        std::thread::sleep(lat); // delayed initial request
+    }
+    if dead(Instant::now()) {
+        report.failed = true; // died before ever requesting work
+        return Ok(report);
+    }
+    tx.send(&Frame::Request { worker: me })?;
+
+    loop {
+        let frame = match rx.recv() {
+            Ok(f) => f,
+            Err(_) => break, // master gone: the MPI_Abort path
+        };
+        match frame {
+            Frame::Terminate => break,
+            Frame::Wait => continue, // block for re-dispatch or termination
+            Frame::Assign(a) => {
+                ensure!(
+                    a.worker == me,
+                    "assignment addressed to worker {}, but this is worker {me}",
+                    a.worker
+                );
+                if !lat.is_zero() {
+                    std::thread::sleep(lat); // delayed delivery
+                }
+                if dead(Instant::now()) {
+                    report.failed = true;
+                    return Ok(report); // fail-stop: chunk evaporates
+                }
+                let t0 = Instant::now();
+                let digests = backend.compute(&a.tasks)?;
+                let mut compute = t0.elapsed();
+                if slow > 1.0 {
+                    // PE perturbation: dilate compute.
+                    std::thread::sleep(compute.mul_f64(slow - 1.0));
+                    compute = compute.mul_f64(slow);
+                }
+                if dead(Instant::now()) {
+                    report.failed = true;
+                    return Ok(report); // died mid-compute
+                }
+                if !lat.is_zero() {
+                    std::thread::sleep(lat); // delayed result
+                }
+                report.chunks += 1;
+                report.iterations += a.tasks.len() as u64;
+                let result = Frame::Result(WorkResult {
+                    worker: me,
+                    assignment: a.id,
+                    compute_secs: compute.as_secs_f64(),
+                    digests,
+                });
+                if tx.send(&result).is_err() {
+                    break; // master closed mid-run
+                }
+            }
+            other => bail!("unexpected frame from master: {}", other.label()),
+        }
+    }
+    Ok(report)
+}

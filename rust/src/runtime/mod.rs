@@ -17,15 +17,26 @@ pub use service::{ComputeHandle, ComputeRequest, ComputeResponse, ComputeService
 
 use std::path::Path;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{ensure, Context};
 
-use crate::apps::psia::{PsiaApp, PsiaParams};
+use crate::apps::psia::PsiaApp;
+#[cfg(feature = "pjrt")]
+use crate::apps::psia::PsiaParams;
 use crate::apps::MandelbrotApp;
 
 /// The PJRT engine: compiled executables for both applications.
 ///
 /// NOT `Send` — construct and use on one thread (see [`service`] for the
 /// multi-worker wrapper).
+///
+/// Real PJRT execution needs the `xla` crate (and its `xla_extension` C++
+/// toolchain), which is unavailable in offline builds — it is gated behind
+/// the off-by-default `pjrt` cargo feature (see `rust/Cargo.toml`). Without
+/// the feature an API-compatible stub is compiled whose `load` fails with a
+/// clear message, so every `--backend native` path works untouched.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     manifest: Manifest,
     client: xla::PjRtClient,
@@ -37,6 +48,7 @@ pub struct PjrtEngine {
     psia_app: PsiaApp,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Load and compile both artifacts from `dir` (default: `artifacts/`).
     pub fn load(dir: &Path) -> Result<Self> {
@@ -152,7 +164,51 @@ impl PjrtEngine {
     }
 }
 
-#[cfg(test)]
+/// API-compatible stand-in compiled when the `pjrt` feature is off: the
+/// type is uninhabited, `load` fails with instructions, and every other
+/// method is statically unreachable.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    /// Always fails: this build has PJRT compiled out.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        anyhow::bail!(
+            "PJRT support is compiled out of this build: enable the `pjrt` cargo \
+             feature (requires the `xla` crate and its xla_extension toolchain; \
+             see rust/Cargo.toml) or use `--backend native`"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn mandelbrot_app(&self) -> MandelbrotApp {
+        match self.never {}
+    }
+
+    pub fn psia_app(&self) -> &PsiaApp {
+        match self.never {}
+    }
+
+    pub fn mandelbrot_chunk(&self, _tasks: &[u32]) -> Result<Vec<u32>> {
+        match self.never {}
+    }
+
+    pub fn psia_chunk(&self, _tasks: &[u32]) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -1,0 +1,94 @@
+//! End-to-end tests of the distributed net runtime: full-protocol loopback
+//! parity with the native runtime, real-socket runs, and the paper's
+//! P−1-failure scenario across the wire.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rdlb::apps::{CostModel, MandelbrotApp};
+use rdlb::dls::Technique;
+use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+use rdlb::net::{run_loopback, run_worker, serve_tcp, NetMasterParams, TcpTransport};
+
+fn synthetic(n: usize, cost: f64) -> ComputeBackend {
+    ComputeBackend::Synthetic {
+        model: Arc::new(CostModel::from_costs(vec![cost; n])),
+        scale: 1.0,
+    }
+}
+
+/// The whole protocol stack (codec included) over loopback produces the
+/// same completion and the same result digest as the in-process native
+/// runtime running the identical kernel.
+#[test]
+fn loopback_full_run_parity_with_native_runtime() {
+    let app = MandelbrotApp { width: 32, height: 32, max_iter: 64, ..Default::default() };
+    let n = app.n_tasks();
+    let backend = ComputeBackend::Mandelbrot(Arc::new(app));
+
+    let native = NativeRuntime::new(NativeParams::new(n, 4, Technique::Fac, true, backend.clone()))
+        .unwrap()
+        .run()
+        .unwrap();
+    let (net, reports) =
+        run_loopback(NetMasterParams::new(n, 4, Technique::Fac, true), &backend).unwrap();
+
+    assert!(native.completed(), "{native:?}");
+    assert!(net.completed(), "{net:?}");
+    assert_eq!(net.finished, native.finished);
+    assert_eq!(net.n, native.n);
+    // Escape-count digests are integer-valued, so the sums are exact and
+    // must agree bit-for-bit across runtimes.
+    assert_eq!(net.result_digest, native.result_digest, "digest parity across runtimes");
+    assert_eq!(reports.len(), 4);
+}
+
+/// The paper's headline scenario across the wire protocol: P−1 of the
+/// workers fail-stop mid-run and rDLB still finishes every iteration.
+#[test]
+fn tcp_p_minus_1_failures_complete_with_rdlb() {
+    let n = 600;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut params =
+        NetMasterParams::new(n, 4, Technique::Fac, true).with_failures(3, 0.12).unwrap();
+    params.timeout = Duration::from_secs(60);
+
+    let server = std::thread::spawn(move || serve_tcp(listener, params, Duration::from_secs(10)));
+    let workers: Vec<_> = (0..4)
+        .map(|_| {
+            let backend = synthetic(n, 1e-3);
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let transport = TcpTransport::connect(&addr).unwrap();
+                run_worker(Box::new(transport), backend, "itest")
+            })
+        })
+        .collect();
+
+    let outcome = server.join().unwrap().unwrap();
+    assert!(outcome.completed(), "rDLB must absorb P-1 failures: {outcome:?}");
+    assert_eq!(outcome.finished, n);
+    assert_eq!(outcome.failures, 3);
+    assert!(outcome.stats.rescheduled_chunks > 0, "recovery must go through re-dispatch");
+
+    let reports: Vec<_> = workers.into_iter().map(|j| j.join().unwrap().unwrap()).collect();
+    assert_eq!(reports.iter().filter(|r| r.failed).count(), 3, "{reports:?}");
+}
+
+/// Without rDLB the same failures hang the run forever; the runtime bounds
+/// the hang with the configured wall-clock timeout and reports it.
+#[test]
+fn failures_without_rdlb_hang_at_the_timeout_bound() {
+    let bound = Duration::from_millis(700);
+    let mut params =
+        NetMasterParams::new(600, 4, Technique::Fac, false).with_failures(3, 0.05).unwrap();
+    params.timeout = bound;
+    let t0 = Instant::now();
+    let (outcome, _) = run_loopback(params, &synthetic(600, 1e-3)).unwrap();
+    assert!(outcome.hung, "{outcome:?}");
+    assert!(outcome.parallel_time.is_infinite());
+    assert!(outcome.finished < 600);
+    assert!(t0.elapsed() >= bound, "must wait out the full hang bound");
+}

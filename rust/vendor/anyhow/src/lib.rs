@@ -1,0 +1,219 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build environment for this repository is fully offline, so instead of
+//! pulling `anyhow` from crates.io this vendored crate re-implements exactly
+//! the API subset the `rdlb` crate uses:
+//!
+//! * [`Error`] — an opaque, context-carrying error value (`Send + Sync`);
+//! * [`Result<T>`] — `std::result::Result<T, Error>` with a defaulted error
+//!   type parameter;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` *and*
+//!   `Option`;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros;
+//! * a blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts standard errors.
+//!
+//! Mirroring the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`; that is what makes the blanket `From` impl and the
+//! twin `Context` impls coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with a defaulted, boxed-context error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a stack of human-readable context strings (outermost
+/// first) over an optional underlying `std::error::Error` source.
+pub struct Error {
+    context: Vec<String>,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { context: vec![message.to_string()], source: None }
+    }
+
+    /// Attach an outer context layer.
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message followed by every deeper layer, ending with the
+    /// source error (if any).
+    pub fn chain(&self) -> Vec<String> {
+        let mut out = self.context.clone();
+        if let Some(src) = &self.source {
+            out.push(src.to_string());
+        }
+        if out.is_empty() {
+            out.push("unknown error".to_string());
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.first() {
+            Some(outer) => f.write_str(outer),
+            None => match &self.source {
+                Some(src) => write!(f, "{src}"),
+                None => f.write_str("unknown error"),
+            },
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)?;
+        let chain = self.chain();
+        let causes = &chain[1..];
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Coherent because `Error` itself does not implement `std::error::Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error { context: Vec::new(), source: Some(Box::new(err)) }
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T>: Sized {
+    /// Wrap the error (or the absent value) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let v: u32 = "not a number".parse()?;
+            Ok(v)
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("invalid digit"), "{err:?}");
+    }
+
+    #[test]
+    fn context_layers_display_and_debug() {
+        let err: Result<()> = Err(io_err());
+        let err = err.context("reading config").unwrap_err();
+        assert_eq!(err.to_string(), "reading config");
+        let debug = format!("{err:?}");
+        assert!(debug.contains("reading config") && debug.contains("missing thing"), "{debug}");
+    }
+
+    #[test]
+    fn option_context() {
+        let missing: Option<u32> = None;
+        let err = missing.with_context(|| format!("no value {}", 7)).unwrap_err();
+        assert_eq!(err.to_string(), "no value 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {x}"))
+        }
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with 1");
+    }
+
+    #[test]
+    fn bare_ensure() {
+        fn f(x: u32) -> Result<()> {
+            ensure!(x > 0);
+            Ok(())
+        }
+        assert!(f(0).unwrap_err().to_string().contains("x > 0"));
+        assert!(f(1).is_ok());
+    }
+}
