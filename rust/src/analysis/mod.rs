@@ -32,26 +32,60 @@ impl TheoryParams {
         1.0 - (-self.lambda * self.makespan()).exp()
     }
 
+    /// Does the model have surviving PEs to spread lost work over?  The
+    /// recovery terms divide by `q − 1`, so they are only meaningful for
+    /// `q > 1`; with `q ≤ 1` a failure leaves nobody to absorb the failed
+    /// PE's iterations and the expectation **saturates to `+∞`** (this is a
+    /// documented saturation, not an error — the naive formula would return
+    /// `-∞`/`NaN` for `q ≤ 1`).
+    fn has_survivors(&self) -> bool {
+        self.q > 1.0
+    }
+
     /// Expected makespan with rDLB under (at most) one failure:
     /// `E[T] = T + p_F · (t/2) · (n+1)/(q−1)`.
     ///
     /// The failed PE's surviving work — uniformly distributed over how much
     /// it had finished — is spread over the remaining q−1 PEs by the
-    /// re-dispatch loop.
+    /// re-dispatch loop.  Saturates to `+∞` for `q ≤ 1` with a nonzero
+    /// failure probability; with `λ = 0` the
+    /// failure term vanishes and the failure-free makespan is returned.
     pub fn expected_time_one_failure(&self) -> f64 {
+        if self.p_failure() == 0.0 {
+            return self.makespan();
+        }
+        if !self.has_survivors() {
+            return f64::INFINITY;
+        }
         let recovery = 0.5 * self.t_task * (self.n_per_pe + 1.0) / (self.q - 1.0);
         self.makespan() + self.p_failure() * recovery
     }
 
     /// First-order approximation (λT ≪ 1):
     /// `E[T] ≈ T + λT · (t/2) · (n+1)/(q−1)`.
+    ///
+    /// Same `q ≤ 1` saturation as `expected_time_one_failure`.
     pub fn expected_time_first_order(&self) -> f64 {
         let t_ms = self.makespan();
+        if self.lambda == 0.0 {
+            return t_ms;
+        }
+        if !self.has_survivors() {
+            return f64::INFINITY;
+        }
         t_ms + self.lambda * t_ms * 0.5 * self.t_task * (self.n_per_pe + 1.0) / (self.q - 1.0)
     }
 
     /// rDLB overhead ratio (first order): `H = (λt/2) · (n+1)/(q−1)`.
+    /// `0` when failures are impossible (`λ = 0`); saturates to `+∞` for
+    /// `q ≤ 1` otherwise.
     pub fn overhead_rdlb(&self) -> f64 {
+        if self.lambda == 0.0 {
+            return 0.0;
+        }
+        if !self.has_survivors() {
+            return f64::INFINITY;
+        }
         0.5 * self.lambda * self.t_task * (self.n_per_pe + 1.0) / (self.q - 1.0)
     }
 
@@ -62,8 +96,17 @@ impl TheoryParams {
 
     /// Break-even checkpoint cost `C* = (λ t² / 8) · (n+1)²/(q−1)²`:
     /// rDLB beats checkpoint/restart whenever the checkpoint cost exceeds
-    /// this bound (first-order regime, C ≪ 1/λ).
+    /// this bound (first-order regime, C ≪ 1/λ).  `0` when failures are
+    /// impossible (`λ = 0`: rDLB is free, so it wins for any checkpoint
+    /// cost); saturates to `+∞` for `q ≤ 1` (no survivors — rDLB cannot
+    /// recover, so checkpointing wins at any cost).
     pub fn checkpoint_crossover(&self) -> f64 {
+        if self.lambda == 0.0 {
+            return 0.0;
+        }
+        if !self.has_survivors() {
+            return f64::INFINITY;
+        }
         let ratio = (self.n_per_pe + 1.0) / (self.q - 1.0);
         self.lambda * self.t_task * self.t_task * ratio * ratio / 8.0
     }
@@ -148,6 +191,33 @@ mod tests {
         assert!(p.overhead_rdlb() <= p.overhead_checkpoint(c_star) * 1.0001);
         assert!(p.overhead_rdlb() < p.overhead_checkpoint(c_star * 4.0));
         assert!(p.overhead_rdlb() > p.overhead_checkpoint(c_star / 4.0));
+    }
+
+    #[test]
+    fn q_at_most_one_saturates_instead_of_nan() {
+        // Regression: the recovery terms divide by q−1 and used to return
+        // -∞/NaN/negative times for q ≤ 1.
+        for q in [1.0, 0.5, 0.0] {
+            let p = TheoryParams { q, n_per_pe: 100.0, t_task: 1e-2, lambda: 1e-3 };
+            assert_eq!(p.expected_time_one_failure(), f64::INFINITY, "q={q}");
+            assert_eq!(p.expected_time_first_order(), f64::INFINITY, "q={q}");
+            assert_eq!(p.overhead_rdlb(), f64::INFINITY, "q={q}");
+            assert_eq!(p.checkpoint_crossover(), f64::INFINITY, "q={q}");
+            assert!(!p.expected_time_one_failure().is_nan());
+        }
+    }
+
+    #[test]
+    fn lambda_zero_is_failure_free_even_for_small_q() {
+        let p = TheoryParams { q: 1.0, n_per_pe: 100.0, t_task: 1e-2, lambda: 0.0 };
+        assert_eq!(p.expected_time_one_failure(), p.makespan());
+        assert_eq!(p.expected_time_first_order(), p.makespan());
+        assert_eq!(p.overhead_rdlb(), 0.0);
+        assert_eq!(p.checkpoint_crossover(), 0.0);
+        // Healthy q is untouched by the guard.
+        let healthy = TheoryParams { q: 2.0, n_per_pe: 100.0, t_task: 1e-2, lambda: 1e-3 };
+        assert!(healthy.expected_time_one_failure().is_finite());
+        assert!(healthy.expected_time_one_failure() > healthy.makespan());
     }
 
     #[test]

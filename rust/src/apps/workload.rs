@@ -1,19 +1,33 @@
 //! Cost models: per-task virtual execution times for the simulator.
 
 use super::{mandelbrot::MandelbrotApp, psia::PsiaApp, AppKind};
+use crate::coordinator::TaskSet;
 use crate::util::{Rng, Summary};
 
 /// Per-task costs (seconds on an unperturbed PE at speed 1.0).
+///
+/// Prefix sums are precomputed so the cost of a *contiguous* chunk — every
+/// primary chunk the master issues — is an O(1) difference instead of an
+/// O(chunk) sum on the simulator's hot path.
 #[derive(Debug, Clone)]
 pub struct CostModel {
     costs: Vec<f64>,
+    /// `prefix[i] = Σ costs[..i]`; `prefix.len() == costs.len() + 1`.
+    prefix: Vec<f64>,
 }
 
 impl CostModel {
     pub fn from_costs(costs: Vec<f64>) -> Self {
         assert!(!costs.is_empty(), "empty cost model");
         assert!(costs.iter().all(|c| *c >= 0.0 && c.is_finite()), "invalid cost");
-        CostModel { costs }
+        let mut prefix = Vec::with_capacity(costs.len() + 1);
+        let mut acc = 0.0f64;
+        prefix.push(0.0);
+        for &c in &costs {
+            acc += c;
+            prefix.push(acc);
+        }
+        CostModel { costs, prefix }
     }
 
     pub fn len(&self) -> usize {
@@ -31,12 +45,27 @@ impl CostModel {
 
     /// Total serial time Σ tᵢ.
     pub fn total(&self) -> f64 {
-        self.costs.iter().sum()
+        self.prefix[self.costs.len()]
     }
 
     /// Sum of costs for a set of task ids.
     pub fn chunk_cost(&self, tasks: &[u32]) -> f64 {
         tasks.iter().map(|&t| self.costs[t as usize]).sum()
+    }
+
+    /// Sum of costs for the contiguous ids `[start, end)` — O(1).
+    #[inline]
+    pub fn range_cost(&self, start: u32, end: u32) -> f64 {
+        self.prefix[end as usize] - self.prefix[start as usize]
+    }
+
+    /// Sum of costs for an assignment's task set: O(1) for the contiguous
+    /// primary chunks, O(chunk) for rDLB re-dispatch lists.
+    pub fn cost_of(&self, tasks: &TaskSet) -> f64 {
+        match tasks {
+            TaskSet::Range { start, end } => self.range_cost(*start, *end),
+            TaskSet::List(ids) => self.chunk_cost(ids),
+        }
     }
 
     pub fn summary(&self) -> Summary {
@@ -162,6 +191,25 @@ mod tests {
         let w = Workload::build(AppKind::Uniform, 10, 1.0, 3);
         let all: Vec<u32> = (0..10).collect();
         assert!((w.model.chunk_cost(&all) - w.model.total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn range_cost_matches_chunk_cost() {
+        let w = Workload::build(AppKind::Exponential, 64, 1e-3, 11);
+        for (start, end) in [(0u32, 64u32), (0, 1), (10, 30), (63, 64), (7, 7)] {
+            let ids: Vec<u32> = (start..end).collect();
+            let by_list = w.model.chunk_cost(&ids);
+            let by_range = w.model.range_cost(start, end);
+            assert!(
+                (by_list - by_range).abs() < 1e-12,
+                "[{start},{end}): list {by_list} range {by_range}"
+            );
+            let by_set = w.model.cost_of(&TaskSet::Range { start, end });
+            assert_eq!(by_range, by_set);
+        }
+        // List path through cost_of is the plain sum.
+        let set = TaskSet::List(vec![1, 5, 9]);
+        assert_eq!(w.model.cost_of(&set), w.model.chunk_cost(&[1, 5, 9]));
     }
 
     #[test]

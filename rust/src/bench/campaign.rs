@@ -1,0 +1,454 @@
+//! Campaign construction and execution: a seeded grid of (runtime ×
+//! technique × scenario) cells, each run for `reps` replications with
+//! per-replication wall timing.
+//!
+//! Replication `r` of a case re-derives its workload and failure plan from
+//! `ExperimentConfig::rep_seed(r)`, so the **outcome** metrics of a campaign
+//! are a pure function of `(scale, seed)` — identical across repeated runs,
+//! thread counts and machines — while the **wall** metrics measure this
+//! machine, normalized at compare time by [`calibrate`].
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::report::{CampaignReport, CaseReport, OutcomeMetrics, WallMetrics, SCHEMA_VERSION};
+use crate::apps::AppKind;
+use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
+use crate::dls::Technique;
+use crate::experiments::run_outcome;
+use crate::util::Summary;
+
+/// Campaign size preset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BenchScale {
+    pub name: &'static str,
+    /// PEs / tasks for the simulator grid cases.
+    pub sim_pes: usize,
+    pub sim_tasks: usize,
+    /// Tasks for the 256-PE simulator throughput flagship (0 = skip it).
+    pub flagship_tasks: usize,
+    /// PEs / tasks for the wall-clock (native, net-loopback) cases.
+    pub real_pes: usize,
+    pub real_tasks: usize,
+    /// Replications per case.
+    pub reps: usize,
+    /// Mean virtual per-task cost for simulator cases, seconds.
+    pub sim_mean_cost: f64,
+    /// Mean per-task cost for wall-clock cases — these are *slept*, so the
+    /// total is kept well under a second per replication.
+    pub real_mean_cost: f64,
+    /// Latency-perturbation delay / PE slowdown factor (scaled to makespan).
+    pub latency_delay: f64,
+    pub pe_factor: f64,
+    /// Hang bound for the wall-clock runtimes, seconds.
+    pub timeout_secs: u64,
+}
+
+impl BenchScale {
+    /// CI default: the full grid in well under a minute.
+    pub fn quick() -> BenchScale {
+        BenchScale {
+            name: "quick",
+            sim_pes: 64,
+            sim_tasks: 16_384,
+            flagship_tasks: 262_144,
+            real_pes: 8,
+            real_tasks: 2_048,
+            reps: 3,
+            sim_mean_cost: 2e-3,
+            real_mean_cost: 1e-4,
+            latency_delay: 0.2,
+            pe_factor: 0.5,
+            timeout_secs: 30,
+        }
+    }
+
+    /// Minimal scale for unit tests (a few seconds end to end).
+    pub fn smoke() -> BenchScale {
+        BenchScale {
+            name: "smoke",
+            sim_pes: 16,
+            sim_tasks: 2_000,
+            flagship_tasks: 0,
+            real_pes: 4,
+            real_tasks: 256,
+            reps: 2,
+            sim_mean_cost: 1e-3,
+            real_mean_cost: 1e-4,
+            latency_delay: 0.03,
+            pe_factor: 0.5,
+            timeout_secs: 10,
+        }
+    }
+
+    /// Paper-sized campaign (minutes; not run in CI).
+    pub fn full() -> BenchScale {
+        BenchScale {
+            name: "full",
+            sim_pes: 256,
+            sim_tasks: 262_144,
+            flagship_tasks: 262_144,
+            real_pes: 16,
+            real_tasks: 8_192,
+            reps: 5,
+            sim_mean_cost: 2e-3,
+            real_mean_cost: 1e-4,
+            latency_delay: 0.2,
+            pe_factor: 0.5,
+            timeout_secs: 60,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BenchScale> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "quick" => Some(Self::quick()),
+            "smoke" => Some(Self::smoke()),
+            "full" => Some(Self::full()),
+            _ => None,
+        }
+    }
+}
+
+/// What to run.
+#[derive(Debug, Clone)]
+pub struct BenchSettings {
+    pub scale: BenchScale,
+    /// Campaign seed: every case's config carries it, and replication `r`
+    /// derives `rep_seed(r)` from it.
+    pub seed: u64,
+    /// Runtimes to include, in order.
+    pub runtimes: Vec<RuntimeKind>,
+    /// Print one progress line per case while running.
+    pub verbose: bool,
+}
+
+impl BenchSettings {
+    pub fn new(scale: BenchScale, seed: u64) -> BenchSettings {
+        BenchSettings {
+            scale,
+            seed,
+            runtimes: vec![RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net],
+            verbose: false,
+        }
+    }
+}
+
+/// One fully-specified campaign case.
+#[derive(Debug, Clone)]
+pub struct CaseSpec {
+    pub id: String,
+    pub cfg: ExperimentConfig,
+    /// Virtual→wall compression for the wall-clock runtimes.
+    pub time_scale: f64,
+    pub reps: usize,
+}
+
+fn sim_case(
+    settings: &BenchSettings,
+    app: AppKind,
+    pes: usize,
+    tasks: usize,
+    technique: Technique,
+    scenario: Scenario,
+    rdlb: bool,
+) -> Result<CaseSpec> {
+    let sc = &settings.scale;
+    let cfg = ExperimentConfig::builder()
+        .app(app)
+        .pes(pes)
+        .tasks(tasks)
+        .technique(technique)
+        .rdlb(rdlb)
+        .scenario(scenario)
+        .mean_cost(sc.sim_mean_cost)
+        .seed(settings.seed)
+        .runtime(RuntimeKind::Sim)
+        .build()?;
+    Ok(CaseSpec { id: cfg.case_label(), cfg, time_scale: 1.0, reps: sc.reps })
+}
+
+fn real_case(
+    settings: &BenchSettings,
+    runtime: RuntimeKind,
+    technique: Technique,
+    scenario: Scenario,
+) -> Result<CaseSpec> {
+    let sc = &settings.scale;
+    let mut cfg = ExperimentConfig::builder()
+        .app(AppKind::Uniform)
+        .pes(sc.real_pes)
+        .tasks(sc.real_tasks)
+        .technique(technique)
+        .rdlb(true)
+        .scenario(scenario)
+        .mean_cost(sc.real_mean_cost)
+        .seed(settings.seed)
+        .runtime(runtime)
+        .build()?;
+    cfg.net.timeout_secs = sc.timeout_secs;
+    Ok(CaseSpec { id: cfg.case_label(), cfg, time_scale: 1.0, reps: sc.reps })
+}
+
+/// Build the full case grid for `settings`.
+pub fn campaign_cases(settings: &BenchSettings) -> Result<Vec<CaseSpec>> {
+    let sc = &settings.scale;
+    let mut cases: Vec<CaseSpec> = Vec::new();
+    for &runtime in &settings.runtimes {
+        match runtime {
+            RuntimeKind::Sim => {
+                // P/2 failures; every preset has P ≥ 2, so P/2 ≤ P−1 holds.
+                let half = (sc.sim_pes / 2).max(1);
+                for technique in [Technique::Ss, Technique::Fac, Technique::Gss] {
+                    for scenario in [Scenario::Baseline, Scenario::failures(half)] {
+                        cases.push(sim_case(
+                            settings,
+                            AppKind::Uniform,
+                            sc.sim_pes,
+                            sc.sim_tasks,
+                            technique,
+                            scenario,
+                            true,
+                        )?);
+                    }
+                }
+                // rDLB-off baseline: tracks the (expected ~zero) overhead of
+                // the robustness layer in a healthy run.
+                cases.push(sim_case(
+                    settings,
+                    AppKind::Uniform,
+                    sc.sim_pes,
+                    sc.sim_tasks,
+                    Technique::Fac,
+                    Scenario::Baseline,
+                    false,
+                )?);
+                // Perturbation scenarios (paper Figs. 3c/3d shapes).
+                let probe = sim_case(
+                    settings,
+                    AppKind::Uniform,
+                    sc.sim_pes,
+                    sc.sim_tasks,
+                    Technique::Fac,
+                    Scenario::Baseline,
+                    true,
+                )?;
+                let last_node = probe.cfg.nodes - 1;
+                for scenario in [
+                    Scenario::PePerturb { node: last_node, factor: sc.pe_factor },
+                    Scenario::LatencyPerturb { node: last_node, delay: sc.latency_delay },
+                ] {
+                    cases.push(sim_case(
+                        settings,
+                        AppKind::Uniform,
+                        sc.sim_pes,
+                        sc.sim_tasks,
+                        Technique::Fac,
+                        scenario,
+                        true,
+                    )?);
+                }
+                // Flagship events-throughput case: heavy-tailed Mandelbrot
+                // costs, one chunk per task (SS), 256 PEs — the number that
+                // the hot-path optimization work is measured by.
+                if sc.flagship_tasks > 0 {
+                    cases.push(sim_case(
+                        settings,
+                        AppKind::Mandelbrot,
+                        256,
+                        sc.flagship_tasks,
+                        Technique::Ss,
+                        Scenario::Baseline,
+                        true,
+                    )?);
+                }
+            }
+            RuntimeKind::Native | RuntimeKind::Net => {
+                let half = (sc.real_pes / 2).max(1);
+                for (technique, scenario) in [
+                    (Technique::Fac, Scenario::Baseline),
+                    (Technique::Fac, Scenario::failures(half)),
+                    (Technique::Gss, Scenario::Baseline),
+                ] {
+                    cases.push(real_case(settings, runtime, technique, scenario)?);
+                }
+            }
+        }
+    }
+    // Case ids key the cross-PR comparison; a collision would silently
+    // overwrite a cell.
+    let mut seen = std::collections::HashSet::new();
+    for c in &cases {
+        if !seen.insert(c.id.clone()) {
+            bail!("duplicate bench case id {:?}", c.id);
+        }
+    }
+    Ok(cases)
+}
+
+/// Fixed CPU-bound spin (~tens of ms) measured once per campaign; reports
+/// store its duration so comparisons can normalize wall times between a
+/// baseline machine and the current one.
+pub fn calibrate() -> f64 {
+    let t0 = Instant::now();
+    let mut x = 0x9E37_79B9_7F4A_7C15u64;
+    let mut acc = 0u64;
+    for _ in 0..20_000_000u64 {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        acc = acc.wrapping_add(x);
+    }
+    std::hint::black_box(acc);
+    t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// Run one case: `reps` timed replications.
+pub fn run_case(spec: &CaseSpec) -> Result<CaseReport> {
+    // Pre-warm caches the first replication would otherwise pay for (the
+    // Mandelbrot escape-count kernel is memoized per task count).
+    let _ = spec.cfg.workload();
+
+    let mut walls = Vec::with_capacity(spec.reps);
+    let mut outcomes = Vec::with_capacity(spec.reps);
+    for rep in 0..spec.reps.max(1) {
+        let t0 = Instant::now();
+        let outcome = run_outcome(&spec.cfg, rep, spec.time_scale)
+            .with_context(|| format!("bench case {}", spec.id))?;
+        walls.push(t0.elapsed().as_secs_f64());
+        outcomes.push(outcome);
+    }
+    let w = Summary::of(&walls);
+    let total_wall: f64 = walls.iter().sum::<f64>().max(1e-12);
+    let total_tasks: u64 = outcomes.iter().map(|o| o.finished as u64).sum();
+    let total_events: u64 = outcomes.iter().map(|o| o.events).sum();
+    let is_sim = spec.cfg.runtime == RuntimeKind::Sim;
+    let first = &outcomes[0];
+
+    Ok(CaseReport {
+        id: spec.id.clone(),
+        runtime: spec.cfg.runtime.name().to_string(),
+        outcome: OutcomeMetrics {
+            hung: first.hung,
+            finished: first.finished as u64,
+            n: first.n as u64,
+            digest: first.result_digest,
+            virtual_time: is_sim.then_some(first.parallel_time),
+            chunks: is_sim.then_some(first.stats.assigned_chunks),
+            rescheduled: is_sim.then_some(first.stats.rescheduled_chunks),
+            duplicates: is_sim.then_some(first.stats.duplicate_iterations),
+            events: is_sim.then_some(first.events),
+        },
+        wall: WallMetrics {
+            reps: outcomes.len() as u64,
+            median_s: w.p50,
+            p95_s: w.p95,
+            mean_s: w.mean,
+            min_s: w.min,
+            tasks_per_s: total_tasks as f64 / total_wall,
+            events_per_s: is_sim.then_some(total_events as f64 / total_wall),
+        },
+    })
+}
+
+/// Run the whole campaign and assemble the report.
+pub fn run_campaign(settings: &BenchSettings) -> Result<CampaignReport> {
+    let calibration_s = calibrate();
+    if settings.verbose {
+        println!(
+            "bench: scale={} seed={} calibration {:.1} ms",
+            settings.scale.name,
+            settings.seed,
+            calibration_s * 1e3
+        );
+    }
+    let cases = campaign_cases(settings)?;
+    let mut reports = Vec::with_capacity(cases.len());
+    for spec in &cases {
+        let report = run_case(spec)?;
+        if settings.verbose {
+            let eps = report
+                .wall
+                .events_per_s
+                .map(|e| format!(", {:.2} M events/s", e / 1e6))
+                .unwrap_or_default();
+            println!(
+                "bench: {:<52} median {:>9.4} s over {} reps{}",
+                report.id, report.wall.median_s, report.wall.reps, eps
+            );
+        }
+        reports.push(report);
+    }
+    let created_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .ok();
+    Ok(CampaignReport {
+        schema: SCHEMA_VERSION,
+        scale: settings.scale.name.to_string(),
+        seed: settings.seed,
+        created_unix,
+        calibration_s,
+        cases: reports,
+        history: Vec::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_only(scale: BenchScale, seed: u64) -> BenchSettings {
+        BenchSettings { runtimes: vec![RuntimeKind::Sim], ..BenchSettings::new(scale, seed) }
+    }
+
+    #[test]
+    fn scales_parse() {
+        assert_eq!(BenchScale::parse("quick").unwrap().name, "quick");
+        assert_eq!(BenchScale::parse("SMOKE").unwrap().flagship_tasks, 0);
+        assert_eq!(BenchScale::parse("full").unwrap().sim_pes, 256);
+        assert!(BenchScale::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn quick_grid_has_unique_ids_across_all_runtimes() {
+        let cases = campaign_cases(&BenchSettings::new(BenchScale::quick(), 1)).unwrap();
+        // 10 sim (6 grid + no-rdlb + 2 perturb + flagship) + 3 native + 3 net.
+        assert_eq!(cases.len(), 16, "{:?}", cases.iter().map(|c| &c.id).collect::<Vec<_>>());
+        assert!(cases.iter().any(|c| c.cfg.runtime == RuntimeKind::Net));
+    }
+
+    #[test]
+    fn smoke_sim_campaign_runs_and_is_deterministic() {
+        let settings = sim_only(BenchScale::smoke(), 7);
+        let a = run_campaign(&settings).unwrap();
+        let b = run_campaign(&settings).unwrap();
+        assert!(!a.cases.is_empty());
+        for c in &a.cases {
+            assert!(!c.outcome.hung, "{} hung", c.id);
+            assert_eq!(c.outcome.finished, c.outcome.n, "{} incomplete", c.id);
+            assert!(c.wall.median_s >= 0.0);
+            assert!(c.wall.events_per_s.unwrap_or(0.0) > 0.0, "{} lost events", c.id);
+        }
+        assert_eq!(
+            a.deterministic_digest(),
+            b.deterministic_digest(),
+            "same seed must reproduce identical outcome metrics"
+        );
+    }
+
+    #[test]
+    fn different_seeds_change_outcomes() {
+        let a = run_campaign(&sim_only(BenchScale::smoke(), 1)).unwrap();
+        let b = run_campaign(&sim_only(BenchScale::smoke(), 2)).unwrap();
+        assert_ne!(a.deterministic_digest(), b.deterministic_digest());
+    }
+
+    #[test]
+    fn calibration_is_positive_and_repeatable_order_of_magnitude() {
+        let a = calibrate();
+        let b = calibrate();
+        assert!(a > 0.0 && b > 0.0);
+        assert!(a / b < 50.0 && b / a < 50.0, "calibration wildly unstable: {a} vs {b}");
+    }
+}

@@ -1,0 +1,367 @@
+//! Regression gating: compare a fresh campaign against a committed
+//! baseline (`rdlb bench --compare BENCH_baseline.json`).
+//!
+//! Raw wall times are not comparable across machines, so every comparison
+//! is normalized by the **machine factor** — the ratio of the two reports'
+//! CPU calibration spins ([`crate::bench::calibrate`]).  A runner that is
+//! uniformly 2× slower than the baseline machine doubles both the expected
+//! wall times and the calibration, and reads as *no change*; only the
+//! workload getting slower **relative to the same CPU** trips the gate.
+
+use super::report::CampaignReport;
+
+/// Relative regression thresholds (fractions, not percent).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Thresholds {
+    /// Wall-time regression bound: fail when a case's normalized median
+    /// exceeds the baseline's by more than this fraction (default 0.25).
+    pub wall_frac: f64,
+    /// Simulator-throughput regression bound: fail when a case's normalized
+    /// events/s falls below the baseline's by more than this fraction.
+    pub events_frac: f64,
+    /// Cases whose baseline *and* current medians are both below this wall
+    /// time are informational only: sub-millisecond timings sit inside
+    /// scheduler jitter, and gating them would make CI flaky (default 5 ms).
+    pub min_wall_s: f64,
+}
+
+impl Default for Thresholds {
+    fn default() -> Self {
+        Thresholds { wall_frac: 0.25, events_frac: 0.25, min_wall_s: 5e-3 }
+    }
+}
+
+impl Thresholds {
+    /// Both bounds at the same fraction (the CLI's `--threshold`).
+    pub fn uniform(frac: f64) -> Self {
+        Thresholds { wall_frac: frac, events_frac: frac, ..Thresholds::default() }
+    }
+}
+
+/// One metric that moved past a threshold (regression or improvement).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    pub case_id: String,
+    /// `wall_median_s` or `events_per_s`.
+    pub metric: String,
+    /// Baseline value, normalized onto the current machine.
+    pub expected: f64,
+    pub current: f64,
+    /// `current / expected` (for times lower is better; for throughput
+    /// higher is better — the direction is per metric).
+    pub ratio: f64,
+}
+
+/// Full comparison result.
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    /// `current.calibration_s / baseline.calibration_s` (how much slower
+    /// this machine is than the baseline machine; 1.0 when unknown).
+    pub machine_factor: f64,
+    pub regressions: Vec<Delta>,
+    pub improvements: Vec<Delta>,
+    /// Baseline cases the current campaign did not run — a silently
+    /// shrunken campaign must not pass the gate.
+    pub missing_cases: Vec<String>,
+    /// Current cases absent from the baseline (informational).
+    pub new_cases: Vec<String>,
+}
+
+impl Comparison {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.missing_cases.is_empty()
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "compare: machine factor {:.3} ({} regressions, {} improvements, {} missing, {} new)",
+            self.machine_factor,
+            self.regressions.len(),
+            self.improvements.len(),
+            self.missing_cases.len(),
+            self.new_cases.len(),
+        );
+        for d in &self.regressions {
+            let _ = writeln!(
+                s,
+                "  REGRESSION {}: {} = {:.4} vs expected {:.4} (x{:.2})",
+                d.case_id, d.metric, d.current, d.expected, d.ratio
+            );
+        }
+        for d in &self.improvements {
+            let _ = writeln!(
+                s,
+                "  improvement {}: {} = {:.4} vs expected {:.4} (x{:.2})",
+                d.case_id, d.metric, d.current, d.expected, d.ratio
+            );
+        }
+        for id in &self.missing_cases {
+            let _ = writeln!(s, "  MISSING case {id} (in baseline, not re-run)");
+        }
+        for id in &self.new_cases {
+            let _ = writeln!(s, "  new case {id} (not in baseline)");
+        }
+        s
+    }
+}
+
+/// Compare `current` against `baseline` under `thresholds`.
+pub fn compare_reports(
+    current: &CampaignReport,
+    baseline: &CampaignReport,
+    thresholds: &Thresholds,
+) -> Comparison {
+    let machine_factor = if current.calibration_s > 0.0 && baseline.calibration_s > 0.0 {
+        current.calibration_s / baseline.calibration_s
+    } else {
+        1.0
+    };
+    let mut cmp = Comparison { machine_factor, ..Comparison::default() };
+
+    // A campaign restricted with `--runtimes` only gates the runtimes it
+    // actually ran: baseline cases of other runtimes are skipped, not
+    // "missing". Shrinking the grid *within* a runtime still fails. An
+    // empty current campaign can never vacuously pass.
+    let current_runtimes: std::collections::HashSet<&str> =
+        current.cases.iter().map(|c| c.runtime.as_str()).collect();
+
+    for base in &baseline.cases {
+        if !current_runtimes.contains(base.runtime.as_str()) && !current.cases.is_empty() {
+            continue;
+        }
+        let Some(cur) = current.case(&base.id) else {
+            cmp.missing_cases.push(base.id.clone());
+            continue;
+        };
+
+        // Correctness gate first: a case the baseline completed clean must
+        // still complete. A hung or incomplete run can look *fast* on wall
+        // metrics (it stopped early), so this is checked before them and is
+        // never jitter-exempt.
+        let base_clean = !base.outcome.hung && base.outcome.finished == base.outcome.n;
+        let cur_clean = !cur.outcome.hung && cur.outcome.finished == cur.outcome.n;
+        if base_clean && !cur_clean {
+            cmp.regressions.push(Delta {
+                case_id: base.id.clone(),
+                metric: "outcome_finished".to_string(),
+                expected: base.outcome.n as f64,
+                current: cur.outcome.finished as f64,
+                ratio: cur.outcome.finished as f64 / (base.outcome.n as f64).max(1.0),
+            });
+            continue;
+        }
+
+        // Cases too fast to time reliably are exempt from both gates.
+        let expected_wall = base.wall.median_s * machine_factor;
+        if expected_wall.max(cur.wall.median_s) < thresholds.min_wall_s {
+            continue;
+        }
+
+        // Wall-time gate (lower is better).
+        if expected_wall > 0.0 && cur.wall.median_s.is_finite() {
+            let ratio = cur.wall.median_s / expected_wall;
+            let delta = Delta {
+                case_id: base.id.clone(),
+                metric: "wall_median_s".to_string(),
+                expected: expected_wall,
+                current: cur.wall.median_s,
+                ratio,
+            };
+            if ratio > 1.0 + thresholds.wall_frac {
+                cmp.regressions.push(delta);
+            } else if ratio < 1.0 / (1.0 + thresholds.wall_frac) {
+                cmp.improvements.push(delta);
+            }
+        }
+
+        // Simulator-throughput gate (higher is better).
+        if let (Some(base_eps), Some(cur_eps)) =
+            (base.wall.events_per_s, cur.wall.events_per_s)
+        {
+            let expected_eps = base_eps / machine_factor;
+            if expected_eps > 0.0 && cur_eps.is_finite() {
+                let ratio = cur_eps / expected_eps;
+                let delta = Delta {
+                    case_id: base.id.clone(),
+                    metric: "events_per_s".to_string(),
+                    expected: expected_eps,
+                    current: cur_eps,
+                    ratio,
+                };
+                if ratio < 1.0 - thresholds.events_frac {
+                    cmp.regressions.push(delta);
+                } else if ratio > 1.0 / (1.0 - thresholds.events_frac) {
+                    cmp.improvements.push(delta);
+                }
+            }
+        }
+    }
+
+    for cur in &current.cases {
+        if baseline.case(&cur.id).is_none() {
+            cmp.new_cases.push(cur.id.clone());
+        }
+    }
+    cmp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::report::{CaseReport, OutcomeMetrics, WallMetrics, SCHEMA_VERSION};
+
+    fn case(id: &str, median: f64, eps: Option<f64>) -> CaseReport {
+        CaseReport {
+            id: id.to_string(),
+            runtime: if eps.is_some() { "sim" } else { "native" }.to_string(),
+            outcome: OutcomeMetrics {
+                hung: false,
+                finished: 100,
+                n: 100,
+                digest: 100.0,
+                virtual_time: None,
+                chunks: None,
+                rescheduled: None,
+                duplicates: None,
+                events: None,
+            },
+            wall: WallMetrics {
+                reps: 3,
+                median_s: median,
+                p95_s: median,
+                mean_s: median,
+                min_s: median,
+                tasks_per_s: 100.0 / median,
+                events_per_s: eps,
+            },
+        }
+    }
+
+    fn report(calibration: f64, cases: Vec<CaseReport>) -> CampaignReport {
+        CampaignReport {
+            schema: SCHEMA_VERSION,
+            scale: "smoke".into(),
+            seed: 1,
+            created_unix: None,
+            calibration_s: calibration,
+            cases,
+            history: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let r = report(0.05, vec![case("a", 1.0, Some(1e6)), case("b", 0.5, None)]);
+        let cmp = compare_reports(&r, &r, &Thresholds::default());
+        assert!(cmp.passed(), "{}", cmp.summary());
+        assert_eq!(cmp.machine_factor, 1.0);
+    }
+
+    #[test]
+    fn slow_wall_fails_gate() {
+        let base = report(0.05, vec![case("a", 1.0, None)]);
+        let cur = report(0.05, vec![case("a", 1.5, None)]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert!(!cmp.passed());
+        assert_eq!(cmp.regressions.len(), 1);
+        assert_eq!(cmp.regressions[0].metric, "wall_median_s");
+    }
+
+    #[test]
+    fn throughput_drop_fails_gate() {
+        let base = report(0.05, vec![case("a", 1.0, Some(2e6))]);
+        let cur = report(0.05, vec![case("a", 1.0, Some(1e6))]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert!(cmp.regressions.iter().any(|d| d.metric == "events_per_s"), "{}", cmp.summary());
+    }
+
+    #[test]
+    fn uniformly_slower_machine_is_not_a_regression() {
+        // The whole machine is 2× slower: wall doubles, calibration doubles,
+        // events/s halves — gate must pass.
+        let base = report(0.05, vec![case("a", 1.0, Some(2e6))]);
+        let cur = report(0.10, vec![case("a", 2.0, Some(1e6))]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert!(cmp.passed(), "{}", cmp.summary());
+        assert!((cmp.machine_factor - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_case_fails_new_case_is_informational() {
+        let base = report(0.05, vec![case("a", 1.0, None), case("gone", 1.0, None)]);
+        let cur = report(0.05, vec![case("a", 1.0, None), case("fresh", 1.0, None)]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert!(!cmp.passed());
+        assert_eq!(cmp.missing_cases, vec!["gone".to_string()]);
+        assert_eq!(cmp.new_cases, vec!["fresh".to_string()]);
+    }
+
+    #[test]
+    fn runtime_subset_runs_gate_only_their_runtimes() {
+        // `--runtimes sim --compare full-baseline`: native/net baseline
+        // cases are skipped, sim cases still gate.
+        let sim_base = case("s", 1.0, Some(1e6));
+        let base = report(0.05, vec![sim_base.clone(), case("n", 1.0, None)]);
+        let cur = report(0.05, vec![sim_base]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert!(cmp.passed(), "{}", cmp.summary());
+        // ...but dropping a *sim* case from the sim-only run still fails.
+        let cur = report(0.05, vec![case("other-sim", 1.0, Some(1e6))]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert_eq!(cmp.missing_cases, vec!["s".to_string()]);
+        // ...and an empty campaign cannot vacuously pass.
+        let empty = report(0.05, Vec::new());
+        assert!(!compare_reports(&empty, &base, &Thresholds::default()).passed());
+    }
+
+    #[test]
+    fn improvements_are_reported_not_failed() {
+        let base = report(0.05, vec![case("a", 2.0, Some(1e6))]);
+        let cur = report(0.05, vec![case("a", 1.0, Some(2e6))]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert!(cmp.passed(), "{}", cmp.summary());
+        assert_eq!(cmp.improvements.len(), 2, "{}", cmp.summary());
+    }
+
+    #[test]
+    fn threshold_is_configurable() {
+        let base = report(0.05, vec![case("a", 1.0, None)]);
+        let cur = report(0.05, vec![case("a", 1.2, None)]);
+        assert!(compare_reports(&cur, &base, &Thresholds::default()).passed());
+        assert!(!compare_reports(&cur, &base, &Thresholds::uniform(0.1)).passed());
+    }
+
+    #[test]
+    fn hung_or_incomplete_current_case_is_a_regression() {
+        let base = report(0.05, vec![case("a", 1e-4, Some(1e6))]);
+        // The broken run stops early: faster wall, fine throughput — but it
+        // no longer completes. Must fail even under the jitter floor.
+        let mut broken = case("a", 5e-5, Some(1e6));
+        broken.outcome.hung = true;
+        broken.outcome.finished = 40;
+        let cur = report(0.05, vec![broken]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert!(!cmp.passed(), "{}", cmp.summary());
+        assert_eq!(cmp.regressions[0].metric, "outcome_finished");
+        // A baseline that itself hung does not demand completion.
+        let mut hung_base = case("a", 1e-4, Some(1e6));
+        hung_base.outcome.hung = true;
+        let base = report(0.05, vec![hung_base]);
+        assert!(compare_reports(&cur, &base, &Thresholds::default()).passed());
+    }
+
+    #[test]
+    fn sub_millisecond_cases_are_informational() {
+        // A 10× slowdown on a 0.1 ms case sits inside jitter: not gated.
+        let base = report(0.05, vec![case("a", 1e-4, Some(1e6))]);
+        let cur = report(0.05, vec![case("a", 1e-3, Some(1e5))]);
+        assert!(compare_reports(&cur, &base, &Thresholds::default()).passed());
+        // Lowering the floor re-arms the gate.
+        let strict = Thresholds { min_wall_s: 0.0, ..Thresholds::default() };
+        assert!(!compare_reports(&cur, &base, &strict).passed());
+    }
+}

@@ -1,0 +1,32 @@
+//! Seeded cross-runtime benchmark campaigns with regression gating —
+//! `rdlb bench` (see README §Benchmarking).
+//!
+//! A campaign runs a deterministic grid of cells — (runtime: sim / native
+//! threads / net-loopback) × DLS technique × fault scenario — measuring
+//! per-replication wall time ([`crate::util::Summary`] median/p95), task
+//! throughput, and simulator events/s, and emits a machine-readable
+//! `BENCH_<n>.json`.  `--compare baseline.json` re-reads a committed
+//! baseline and exits non-zero on configurable regression thresholds, which
+//! is what the CI `bench-smoke` job gates on.
+//!
+//! The design follows the paper's own replicated-campaign methodology
+//! (Table 1, Figs. 3–5) and the SimAS observation (arXiv:1912.02050) that a
+//! simulator is only useful for algorithm selection if executing *many*
+//! runs is cheap — hence the flagship events/s case that watches the
+//! simulator hot path itself.
+//!
+//! | piece | role |
+//! |---|---|
+//! | [`campaign`] | scale presets, the case grid, calibration, execution |
+//! | [`report`] | `BENCH_*.json` schema: deterministic `outcome` vs measured `wall` metrics |
+//! | [`compare`] | calibration-normalized regression gating against a baseline |
+
+pub mod campaign;
+pub mod compare;
+pub mod report;
+
+pub use campaign::{
+    calibrate, campaign_cases, run_campaign, run_case, BenchScale, BenchSettings, CaseSpec,
+};
+pub use compare::{compare_reports, Comparison, Delta, Thresholds};
+pub use report::{CampaignReport, CaseReport, OutcomeMetrics, WallMetrics, SCHEMA_VERSION};

@@ -1,0 +1,387 @@
+//! Machine-readable campaign reports (`BENCH_<n>.json`): schema, JSON
+//! encode/decode over the in-tree [`crate::util::json`] substrate, and the
+//! deterministic digest used to prove seed-reproducibility.
+//!
+//! Every case separates two kinds of metrics:
+//!
+//!  * **`outcome`** — deterministic in the campaign seed: virtual times,
+//!    chunk/event counters (simulator cases) and the result digest.  Two
+//!    campaigns with the same seed must produce byte-identical values here,
+//!    on any machine; [`CampaignReport::deterministic_digest`] canonicalizes
+//!    exactly this subset.
+//!  * **`wall`** — measured wall-clock timings and throughput.  These vary
+//!    run to run and machine to machine; regression gating normalizes them
+//!    by the stored CPU `calibration_s` (see [`crate::bench::compare`]).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Bump when the JSON layout changes incompatibly.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Map non-finite values (a hung run's `∞`) to JSON `null`.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Seed-deterministic result metrics of one case (replication 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutcomeMetrics {
+    pub hung: bool,
+    /// Iterations finished / total.
+    pub finished: u64,
+    pub n: u64,
+    /// Sum of per-iteration result digests (exactly one contribution per
+    /// iteration, so it is scheduling-independent on every runtime).
+    pub digest: f64,
+    /// Virtual parallel time T_par — simulator cases only.
+    pub virtual_time: Option<f64>,
+    /// Chunks assigned — simulator cases only (wall-clock runtimes race).
+    pub chunks: Option<u64>,
+    /// rDLB re-dispatched chunks — simulator cases only.
+    pub rescheduled: Option<u64>,
+    /// Duplicate iteration completions — simulator cases only.
+    pub duplicates: Option<u64>,
+    /// Discrete events processed — simulator cases only.
+    pub events: Option<u64>,
+}
+
+impl OutcomeMetrics {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("hung", Json::Bool(self.hung)),
+            ("finished", Json::num(self.finished as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("digest", num_or_null(self.digest)),
+        ];
+        if let Some(v) = self.virtual_time {
+            fields.push(("virtual_time", num_or_null(v)));
+        }
+        if let Some(c) = self.chunks {
+            fields.push(("chunks", Json::num(c as f64)));
+        }
+        if let Some(c) = self.rescheduled {
+            fields.push(("rescheduled", Json::num(c as f64)));
+        }
+        if let Some(c) = self.duplicates {
+            fields.push(("duplicates", Json::num(c as f64)));
+        }
+        if let Some(c) = self.events {
+            fields.push(("events", Json::num(c as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<OutcomeMetrics> {
+        Ok(OutcomeMetrics {
+            hung: v.req("hung")?.as_bool().context("hung")?,
+            finished: v.req("finished")?.as_u64().context("finished")?,
+            n: v.req("n")?.as_u64().context("n")?,
+            digest: v.get("digest").and_then(Json::as_f64).unwrap_or(0.0),
+            virtual_time: v.get("virtual_time").and_then(Json::as_f64),
+            chunks: v.get("chunks").and_then(Json::as_u64),
+            rescheduled: v.get("rescheduled").and_then(Json::as_u64),
+            duplicates: v.get("duplicates").and_then(Json::as_u64),
+            events: v.get("events").and_then(Json::as_u64),
+        })
+    }
+}
+
+/// Measured wall-clock metrics of one case, aggregated over its
+/// replications with [`crate::util::Summary`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WallMetrics {
+    pub reps: u64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    /// First-completion iterations per wall second, over all replications.
+    pub tasks_per_s: f64,
+    /// Simulator events per wall second — simulator cases only; the
+    /// headline hot-path throughput number.
+    pub events_per_s: Option<f64>,
+}
+
+impl WallMetrics {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("reps", Json::num(self.reps as f64)),
+            ("median_s", num_or_null(self.median_s)),
+            ("p95_s", num_or_null(self.p95_s)),
+            ("mean_s", num_or_null(self.mean_s)),
+            ("min_s", num_or_null(self.min_s)),
+            ("tasks_per_s", num_or_null(self.tasks_per_s)),
+        ];
+        if let Some(e) = self.events_per_s {
+            fields.push(("events_per_s", num_or_null(e)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<WallMetrics> {
+        Ok(WallMetrics {
+            reps: v.req("reps")?.as_u64().context("reps")?,
+            median_s: v.req("median_s")?.as_f64().context("median_s")?,
+            p95_s: v.req("p95_s")?.as_f64().context("p95_s")?,
+            mean_s: v.req("mean_s")?.as_f64().context("mean_s")?,
+            min_s: v.req("min_s")?.as_f64().context("min_s")?,
+            tasks_per_s: v.get("tasks_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+            events_per_s: v.get("events_per_s").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// One campaign case: a configured cell on one runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseReport {
+    /// Stable identity (`ExperimentConfig::case_label`).
+    pub id: String,
+    /// `sim` / `native` / `net`.
+    pub runtime: String,
+    pub outcome: OutcomeMetrics,
+    pub wall: WallMetrics,
+}
+
+impl CaseReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.as_str())),
+            ("runtime", Json::str(self.runtime.as_str())),
+            ("outcome", self.outcome.to_json()),
+            ("wall", self.wall.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CaseReport> {
+        Ok(CaseReport {
+            id: v.req("id")?.as_str().context("id")?.to_string(),
+            runtime: v.req("runtime")?.as_str().context("runtime")?.to_string(),
+            outcome: OutcomeMetrics::from_json(v.req("outcome")?)?,
+            wall: WallMetrics::from_json(v.req("wall")?)?,
+        })
+    }
+}
+
+/// A full campaign: the content of one `BENCH_<n>.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignReport {
+    pub schema: u64,
+    /// Scale preset name (`smoke` / `quick` / `full`).
+    pub scale: String,
+    /// Campaign seed; replication r of a case derives its seed from it.
+    pub seed: u64,
+    /// Unix timestamp of the run; excluded from every comparison and from
+    /// the deterministic digest.
+    pub created_unix: Option<u64>,
+    /// Duration of the fixed CPU calibration spin on this machine, seconds.
+    /// Comparisons use the baseline/current ratio to normalize wall times.
+    pub calibration_s: f64,
+    pub cases: Vec<CaseReport>,
+    /// Free-form provenance entries (e.g. recorded before/after numbers of
+    /// a landed optimization); preserved verbatim across decode/encode.
+    pub history: Vec<Json>,
+}
+
+impl CampaignReport {
+    pub fn case(&self, id: &str) -> Option<&CaseReport> {
+        self.cases.iter().find(|c| c.id == id)
+    }
+
+    /// Total wall seconds across all cases (sum of per-rep means × reps).
+    pub fn total_wall_s(&self) -> f64 {
+        self.cases.iter().map(|c| c.wall.mean_s * c.wall.reps as f64).sum()
+    }
+
+    /// Aggregate simulator throughput: Σ events / Σ wall over the simulator
+    /// cases; `None` when the campaign ran none.
+    pub fn sim_events_per_s(&self) -> Option<f64> {
+        let mut events = 0.0f64;
+        let mut wall = 0.0f64;
+        for c in &self.cases {
+            if let Some(eps) = c.wall.events_per_s {
+                let case_wall = c.wall.mean_s * c.wall.reps as f64;
+                events += eps * case_wall;
+                wall += case_wall;
+            }
+        }
+        if wall > 0.0 {
+            Some(events / wall)
+        } else {
+            None
+        }
+    }
+
+    /// Canonical string over the seed-deterministic subset (ids + outcome
+    /// sections + scale + seed). Two same-seed campaigns must agree on this
+    /// byte for byte; timestamps and wall metrics are excluded.
+    pub fn deterministic_digest(&self) -> String {
+        let cases: Vec<Json> = self
+            .cases
+            .iter()
+            .map(|c| {
+                Json::obj(vec![("id", Json::str(c.id.as_str())), ("outcome", c.outcome.to_json())])
+            })
+            .collect();
+        Json::obj(vec![
+            ("scale", Json::str(self.scale.as_str())),
+            ("seed", Json::num(self.seed as f64)),
+            ("cases", Json::Arr(cases)),
+        ])
+        .to_string()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("schema", Json::num(self.schema as f64)),
+            ("scale", Json::str(self.scale.as_str())),
+            ("seed", Json::num(self.seed as f64)),
+            ("calibration_s", num_or_null(self.calibration_s)),
+            ("cases", Json::Arr(self.cases.iter().map(CaseReport::to_json).collect())),
+        ];
+        if let Some(ts) = self.created_unix {
+            fields.push(("created_unix", Json::num(ts as f64)));
+        }
+        if !self.history.is_empty() {
+            fields.push(("history", Json::Arr(self.history.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<CampaignReport> {
+        let v = Json::parse(text).context("invalid bench report JSON")?;
+        let schema = v.req("schema")?.as_u64().context("schema")?;
+        ensure!(
+            schema == SCHEMA_VERSION,
+            "unsupported bench schema {schema} (this build reads {SCHEMA_VERSION})"
+        );
+        let cases = v
+            .req("cases")?
+            .as_arr()
+            .context("cases must be an array")?
+            .iter()
+            .map(CaseReport::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let history = match v.get("history").and_then(Json::as_arr) {
+            Some(entries) => entries.to_vec(),
+            None => Vec::new(),
+        };
+        Ok(CampaignReport {
+            schema,
+            scale: v.req("scale")?.as_str().context("scale")?.to_string(),
+            seed: v.req("seed")?.as_u64().context("seed")?,
+            created_unix: v.get("created_unix").and_then(Json::as_u64),
+            calibration_s: v.get("calibration_s").and_then(Json::as_f64).unwrap_or(0.0),
+            cases,
+            history,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_case(id: &str, sim: bool, median: f64) -> CaseReport {
+        CaseReport {
+            id: id.to_string(),
+            runtime: if sim { "sim" } else { "native" }.to_string(),
+            outcome: OutcomeMetrics {
+                hung: false,
+                finished: 1000,
+                n: 1000,
+                digest: 1000.0,
+                virtual_time: sim.then_some(1.25),
+                chunks: sim.then_some(42),
+                rescheduled: sim.then_some(3),
+                duplicates: sim.then_some(1),
+                events: sim.then_some(3000),
+            },
+            wall: WallMetrics {
+                reps: 3,
+                median_s: median,
+                p95_s: median * 1.2,
+                mean_s: median * 1.05,
+                min_s: median * 0.9,
+                tasks_per_s: 1000.0 / median,
+                events_per_s: sim.then_some(3000.0 / median),
+            },
+        }
+    }
+
+    fn sample_report() -> CampaignReport {
+        CampaignReport {
+            schema: SCHEMA_VERSION,
+            scale: "smoke".into(),
+            seed: 1,
+            created_unix: Some(1_700_000_000),
+            calibration_s: 0.05,
+            cases: vec![sample_case("sim/a", true, 0.5), sample_case("native/b", false, 0.2)],
+            history: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sample_report();
+        let text = r.to_json_string();
+        let back = CampaignReport::from_json_str(&text).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn digest_excludes_wall_and_timestamp() {
+        let a = sample_report();
+        let mut b = sample_report();
+        b.created_unix = Some(1);
+        b.calibration_s = 99.0;
+        b.cases[0].wall.median_s = 123.0;
+        assert_eq!(a.deterministic_digest(), b.deterministic_digest());
+        // ...but outcome changes show.
+        b.cases[0].outcome.finished = 999;
+        assert_ne!(a.deterministic_digest(), b.deterministic_digest());
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let mut r = sample_report();
+        r.schema = SCHEMA_VERSION + 1;
+        assert!(CampaignReport::from_json_str(&r.to_json_string()).is_err());
+    }
+
+    #[test]
+    fn hung_times_encode_as_null() {
+        let mut r = sample_report();
+        r.cases[0].outcome.hung = true;
+        r.cases[0].outcome.virtual_time = Some(f64::INFINITY);
+        let back = CampaignReport::from_json_str(&r.to_json_string()).unwrap();
+        assert!(back.cases[0].outcome.hung);
+        assert_eq!(back.cases[0].outcome.virtual_time, None, "∞ maps to null maps to None");
+    }
+
+    #[test]
+    fn history_round_trips() {
+        let mut r = sample_report();
+        r.history = vec![Json::obj(vec![("note", Json::str("before/after"))])];
+        let back = CampaignReport::from_json_str(&r.to_json_string()).unwrap();
+        assert_eq!(back.history, r.history);
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = sample_report();
+        assert!(r.total_wall_s() > 0.0);
+        let eps = r.sim_events_per_s().unwrap();
+        assert!(eps > 0.0, "sim case must contribute events/s, got {eps}");
+        assert!(r.case("sim/a").is_some() && r.case("nope").is_none());
+    }
+}

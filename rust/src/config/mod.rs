@@ -223,6 +223,22 @@ impl ExperimentConfig {
         self.tasks.unwrap_or_else(|| self.app.default_tasks())
     }
 
+    /// Canonical one-line identity of this cell, used as the stable case id
+    /// in bench campaign reports (`BENCH_*.json`): runs of the same config
+    /// across PRs compare under the same key.
+    pub fn case_label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/p{}/n{}/{}",
+            self.runtime.name(),
+            self.app.name().to_ascii_lowercase(),
+            self.technique.name(),
+            self.scenario.label(),
+            self.pes(),
+            self.n(),
+            if self.rdlb { "rdlb" } else { "no-rdlb" },
+        )
+    }
+
     pub fn validate(&self) -> Result<()> {
         ensure!(self.nodes > 0 && self.ranks_per_node > 0, "empty topology");
         ensure!(self.n() > 0, "no tasks");
@@ -631,5 +647,18 @@ mod tests {
     fn scenario_labels() {
         assert_eq!(Scenario::Baseline.label(), "baseline");
         assert_eq!(Scenario::failures(128).label(), "128-failures");
+    }
+
+    #[test]
+    fn case_label_is_stable() {
+        let cfg = ExperimentConfig::builder()
+            .app(AppKind::Uniform)
+            .tasks(100)
+            .pes(4)
+            .technique(Technique::Fac)
+            .scenario(Scenario::failures(2))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.case_label(), "sim/uniform/FAC/2-failures/p4/n100/rdlb");
     }
 }

@@ -4,17 +4,105 @@
 /// results to in-flight chunks in the runtimes).
 pub type AssignmentId = u64;
 
-/// One chunk of work handed to a worker.
+/// The task ids of one chunk.
 ///
-/// Primary-phase chunks are contiguous index ranges; rDLB re-dispatch chunks
-/// may be arbitrary id sets (holes where other PEs already finished), so the
-/// general representation is an explicit id list.
+/// Primary-phase chunks are carved off the front of the task table in index
+/// order, so they are always contiguous and stored as O(1) bounds — no
+/// per-task allocation or copying on the scheduling hot path.  rDLB
+/// re-dispatch chunks may have holes (other PEs already finished parts of
+/// the pool), so they keep an explicit ascending id list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskSet {
+    /// Contiguous `[start, end)` — every primary chunk.
+    Range { start: u32, end: u32 },
+    /// Arbitrary ascending ids — rDLB re-dispatch chunks.
+    List(Vec<u32>),
+}
+
+impl TaskSet {
+    pub fn len(&self) -> usize {
+        match self {
+            TaskSet::Range { start, end } => (end - start) as usize,
+            TaskSet::List(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Smallest task id; `None` for an empty set.
+    pub fn first(&self) -> Option<u32> {
+        match self {
+            TaskSet::Range { start, end } => (start < end).then_some(*start),
+            TaskSet::List(v) => v.first().copied(),
+        }
+    }
+
+    /// Iterate the ids in ascending order (no allocation).
+    pub fn iter(&self) -> TaskSetIter<'_> {
+        match self {
+            TaskSet::Range { start, end } => TaskSetIter::Range(*start..*end),
+            TaskSet::List(v) => TaskSetIter::List(v.iter()),
+        }
+    }
+
+    /// Materialize as an ascending `Vec` (wire protocol, compute backends).
+    pub fn to_vec(&self) -> Vec<u32> {
+        match self {
+            TaskSet::Range { start, end } => (*start..*end).collect(),
+            TaskSet::List(v) => v.clone(),
+        }
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        match self {
+            TaskSet::Range { start, end } => (*start..*end).contains(&id),
+            TaskSet::List(v) => v.binary_search(&id).is_ok(),
+        }
+    }
+
+    /// Contiguous? (primary chunks always are; used by the PJRT runtime to
+    /// choose the cheap fill path for input literals)
+    pub fn is_contiguous(&self) -> bool {
+        match self {
+            TaskSet::Range { .. } => true,
+            TaskSet::List(v) => v.windows(2).all(|w| w[1] == w[0] + 1),
+        }
+    }
+}
+
+/// Iterator over a [`TaskSet`]'s ids.
+pub enum TaskSetIter<'a> {
+    Range(std::ops::Range<u32>),
+    List(std::slice::Iter<'a, u32>),
+}
+
+impl Iterator for TaskSetIter<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        match self {
+            TaskSetIter::Range(r) => r.next(),
+            TaskSetIter::List(it) => it.next().copied(),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match self {
+            TaskSetIter::Range(r) => r.size_hint(),
+            TaskSetIter::List(it) => it.size_hint(),
+        }
+    }
+}
+
+/// One chunk of work handed to a worker.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Assignment {
     pub id: AssignmentId,
     pub worker: usize,
     /// Loop-iteration ids, ascending.
-    pub tasks: Vec<u32>,
+    pub tasks: TaskSet,
     /// True when this chunk was issued by the rDLB re-dispatch loop (i.e.
     /// after all iterations were already Scheduled at least once).
     pub rescheduled: bool,
@@ -29,10 +117,9 @@ impl Assignment {
         self.tasks.is_empty()
     }
 
-    /// Contiguous? (primary chunks always are; used by the PJRT runtime to
-    /// choose the cheap fill path for input literals)
+    /// Contiguous? (primary chunks always are)
     pub fn is_contiguous(&self) -> bool {
-        self.tasks.windows(2).all(|w| w[1] == w[0] + 1)
+        self.tasks.is_contiguous()
     }
 }
 
@@ -42,10 +129,43 @@ mod tests {
 
     #[test]
     fn contiguity() {
-        let a = Assignment { id: 0, worker: 1, tasks: vec![4, 5, 6], rescheduled: false };
+        let a = Assignment {
+            id: 0,
+            worker: 1,
+            tasks: TaskSet::Range { start: 4, end: 7 },
+            rescheduled: false,
+        };
         assert!(a.is_contiguous());
-        let b = Assignment { id: 1, worker: 1, tasks: vec![4, 6, 7], rescheduled: true };
+        assert_eq!(a.tasks.to_vec(), vec![4, 5, 6]);
+        let b = Assignment {
+            id: 1,
+            worker: 1,
+            tasks: TaskSet::List(vec![4, 6, 7]),
+            rescheduled: true,
+        };
         assert!(!b.is_contiguous());
         assert_eq!(b.len(), 3);
+        assert!(TaskSet::List(vec![4, 5, 6]).is_contiguous());
+    }
+
+    #[test]
+    fn iter_and_first_agree_across_representations() {
+        let r = TaskSet::Range { start: 2, end: 5 };
+        let l = TaskSet::List(vec![2, 3, 4]);
+        assert_eq!(r.iter().collect::<Vec<_>>(), l.iter().collect::<Vec<_>>());
+        assert_eq!(r.first(), Some(2));
+        assert_eq!(l.first(), Some(2));
+        assert_eq!(r.len(), 3);
+        assert!(r.contains(4) && !r.contains(5));
+        assert!(l.contains(3) && !l.contains(9));
+    }
+
+    #[test]
+    fn empty_sets() {
+        let r = TaskSet::Range { start: 3, end: 3 };
+        assert!(r.is_empty());
+        assert_eq!(r.first(), None);
+        assert_eq!(r.iter().count(), 0);
+        assert!(TaskSet::List(Vec::new()).is_empty());
     }
 }

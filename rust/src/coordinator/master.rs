@@ -16,7 +16,7 @@
 
 use std::collections::{HashSet, VecDeque};
 
-use super::assignment::{Assignment, AssignmentId};
+use super::assignment::{Assignment, AssignmentId, TaskSet};
 use super::stats::MasterStats;
 use super::task_table::{TaskFlag, TaskTable};
 use crate::dls::{ChunkCalculator, ChunkFeedback, SchedCtx, Technique, TechniqueParams};
@@ -49,7 +49,8 @@ pub enum Reply {
 /// Book-keeping for one in-flight assignment.
 #[derive(Debug, Clone)]
 struct InFlight {
-    tasks: Vec<u32>,
+    worker: u32,
+    tasks: TaskSet,
     assigned_at: f64,
     rescheduled: bool,
 }
@@ -58,11 +59,14 @@ struct InFlight {
 /// `on_result`; it never blocks, sleeps, or reads clocks.
 ///
 /// Hot-path data structures (see EXPERIMENTS.md §Perf):
+///  * primary chunks are [`TaskSet::Range`]s — issuing one is O(1), with no
+///    per-task stores and no id-list allocation;
 ///  * `in_flight` is a slab indexed by the sequential assignment id — no
 ///    hashing on the request path;
-///  * holder tracking is a per-task `first_holder` tag plus a small overflow
-///    set that only rDLB duplicates touch — the primary phase does a single
-///    array store per task instead of a `HashSet` insert.
+///  * holder tracking (who currently computes which iteration) is only
+///    consulted by the rDLB re-dispatch phase, so it is built lazily from
+///    the in-flight slab when that phase first activates; the healthy
+///    primary phase never pays for it.
 pub struct Master {
     cfg: MasterConfig,
     table: TaskTable,
@@ -71,7 +75,10 @@ pub struct Master {
     next_id: AssignmentId,
     /// Slab: `in_flight[id]` for sequential ids (None once completed).
     in_flight: Vec<Option<InFlight>>,
+    /// Holder tracking active? Flips on the first re-dispatch decision.
+    holders_active: bool,
     /// First worker currently holding each task (`NO_HOLDER` = none).
+    /// Empty until `holders_active`.
     first_holder: Vec<u32>,
     /// Additional (task, worker) holds beyond the first — rDLB duplicates
     /// only, so this stays tiny.
@@ -83,6 +90,29 @@ pub struct Master {
 
 const NO_HOLDER: u32 = u32::MAX;
 
+/// Record that `worker` now holds `task` (free function over the holder
+/// fields so activation can walk `in_flight` without aliasing `self`).
+#[inline]
+fn record_hold(first: &mut [u32], extra: &mut HashSet<(u32, u32)>, task: u32, worker: u32) {
+    let slot = &mut first[task as usize];
+    if *slot == NO_HOLDER {
+        *slot = worker;
+    } else if *slot != worker {
+        extra.insert((task, worker));
+    }
+}
+
+/// Record that `worker` released `task`.
+#[inline]
+fn release_hold(first: &mut [u32], extra: &mut HashSet<(u32, u32)>, task: u32, worker: u32) {
+    let slot = &mut first[task as usize];
+    if *slot == worker {
+        *slot = NO_HOLDER;
+    } else if !extra.is_empty() {
+        extra.remove(&(task, worker));
+    }
+}
+
 impl Master {
     pub fn new(cfg: MasterConfig) -> Self {
         assert!(cfg.p > 0, "need at least one PE");
@@ -93,7 +123,8 @@ impl Master {
             chunk_index: 0,
             next_id: 0,
             in_flight: Vec::new(),
-            first_holder: vec![NO_HOLDER; cfg.n],
+            holders_active: false,
+            first_holder: Vec::new(),
             extra_holds: HashSet::new(),
             redispatch: VecDeque::new(),
             stats: MasterStats::default(),
@@ -101,32 +132,26 @@ impl Master {
         }
     }
 
-    /// Does `worker` currently hold `task`?
+    /// Does `worker` currently hold `task`? (Only meaningful once holder
+    /// tracking is active; the primary phase never asks.)
     #[inline]
     fn holds(&self, worker: usize, task: u32) -> bool {
         self.first_holder[task as usize] == worker as u32
             || (!self.extra_holds.is_empty() && self.extra_holds.contains(&(task, worker as u32)))
     }
 
-    /// Record that `worker` now holds `task`.
-    #[inline]
-    fn hold(&mut self, worker: usize, task: u32) {
-        let slot = &mut self.first_holder[task as usize];
-        if *slot == NO_HOLDER {
-            *slot = worker as u32;
-        } else if *slot != worker as u32 {
-            self.extra_holds.insert((task, worker as u32));
+    /// Build the holder index from the in-flight slab. Called once, when the
+    /// re-dispatch phase first needs it; O(pending iterations).
+    fn activate_holders(&mut self) {
+        if self.holders_active {
+            return;
         }
-    }
-
-    /// Record that `worker` released `task`.
-    #[inline]
-    fn release(&mut self, worker: usize, task: u32) {
-        let slot = &mut self.first_holder[task as usize];
-        if *slot == worker as u32 {
-            *slot = NO_HOLDER;
-        } else if !self.extra_holds.is_empty() {
-            self.extra_holds.remove(&(task, worker as u32));
+        self.holders_active = true;
+        self.first_holder = vec![NO_HOLDER; self.cfg.n];
+        for inflight in self.in_flight.iter().flatten() {
+            for t in inflight.tasks.iter() {
+                record_hold(&mut self.first_holder, &mut self.extra_holds, t, inflight.worker);
+            }
         }
     }
 
@@ -167,9 +192,9 @@ impl Master {
                 now,
             };
             let size = self.calc.next_chunk(&ctx).clamp(1, remaining);
-            let tasks = self.table.schedule_next(size);
-            debug_assert_eq!(tasks.len(), size);
-            return Reply::Assign(self.issue(worker, tasks, false, now));
+            let (start, end) = self.table.schedule_next_range(size);
+            debug_assert_eq!((end - start) as usize, size);
+            return Reply::Assign(self.issue(worker, TaskSet::Range { start, end }, false, now));
         }
 
         // rDLB phase: everything Scheduled; re-dispatch unfinished work.
@@ -180,7 +205,7 @@ impl Master {
         if tasks.is_empty() {
             return Reply::Wait;
         }
-        Reply::Assign(self.issue(worker, tasks, true, now))
+        Reply::Assign(self.issue(worker, TaskSet::List(tasks), true, now))
     }
 
     /// A worker reports the completion of `assignment_id`.
@@ -207,8 +232,10 @@ impl Master {
             }
         };
         let mut newly_positions = Vec::with_capacity(inflight.tasks.len());
-        for (pos, &t) in inflight.tasks.iter().enumerate() {
-            self.release(worker, t);
+        for (pos, t) in inflight.tasks.iter().enumerate() {
+            if self.holders_active {
+                release_hold(&mut self.first_holder, &mut self.extra_holds, t, worker as u32);
+            }
             if self.table.flag(t as usize) != TaskFlag::Finished {
                 self.table.finish(t as usize);
                 newly_positions.push(pos);
@@ -239,7 +266,7 @@ impl Master {
     }
 
     /// Register a chunk and hand it out.
-    fn issue(&mut self, worker: usize, tasks: Vec<u32>, rescheduled: bool, now: f64) -> Assignment {
+    fn issue(&mut self, worker: usize, tasks: TaskSet, rescheduled: bool, now: f64) -> Assignment {
         let id = self.next_id;
         self.next_id += 1;
         self.chunk_index += 1;
@@ -249,11 +276,18 @@ impl Master {
             self.stats.rescheduled_chunks += 1;
             self.stats.rescheduled_iterations += tasks.len() as u64;
         }
-        for &t in &tasks {
-            self.hold(worker, t);
+        if self.holders_active {
+            for t in tasks.iter() {
+                record_hold(&mut self.first_holder, &mut self.extra_holds, t, worker as u32);
+            }
         }
         debug_assert_eq!(self.in_flight.len(), id as usize);
-        self.in_flight.push(Some(InFlight { tasks: tasks.clone(), assigned_at: now, rescheduled }));
+        self.in_flight.push(Some(InFlight {
+            worker: worker as u32,
+            tasks: tasks.clone(),
+            assigned_at: now,
+            rescheduled,
+        }));
         Assignment { id, worker, tasks, rescheduled }
     }
 
@@ -265,6 +299,7 @@ impl Master {
         if pending == 0 {
             return Vec::new();
         }
+        self.activate_holders();
         // Rebuild the rotating pool if it has gone empty (lazy deletion may
         // exhaust it while unfinished work still exists).
         if self.redispatch.is_empty() {
@@ -343,6 +378,14 @@ mod tests {
     }
 
     #[test]
+    fn primary_chunks_are_ranges() {
+        let mut m = master(8, 2, Technique::Gss, false);
+        let a = assign(&mut m, 0, 0.0);
+        assert!(matches!(a.tasks, TaskSet::Range { .. }), "primary chunk must be a range");
+        assert!(a.is_contiguous());
+    }
+
+    #[test]
     fn terminate_after_completion() {
         let mut m = master(2, 1, Technique::Ss, false);
         let a = assign(&mut m, 0, 0.0);
@@ -371,7 +414,7 @@ mod tests {
         // the scheduled-unfinished iterations and the run completes.
         let mut m = master(4, 2, Technique::Gss, true);
         let lost = assign(&mut m, 0, 0.0); // tasks 0,1
-        assert_eq!(lost.tasks, vec![0, 1]);
+        assert_eq!(lost.tasks.to_vec(), vec![0, 1]);
         let a = assign(&mut m, 1, 0.0); // tasks 2
         m.on_result(1, a.id, 0.1, 0.1);
         let b = assign(&mut m, 1, 0.2); // task 3 → all scheduled
@@ -382,8 +425,8 @@ mod tests {
             match m.on_request(1, 1.0) {
                 Reply::Assign(a) => {
                     assert!(a.rescheduled);
-                    for &t in &a.tasks {
-                        assert!(lost.tasks.contains(&t));
+                    for t in a.tasks.iter() {
+                        assert!(lost.tasks.contains(t));
                     }
                     m.on_result(1, a.id, 0.1, 1.1);
                 }
@@ -405,7 +448,7 @@ mod tests {
         m.on_result(1, a1.id, 0.1, 0.1);
         // Worker 1 idle → rDLB duplicates task 0.
         let dup = assign(&mut m, 1, 0.2);
-        assert_eq!(dup.tasks, a0.tasks);
+        assert_eq!(dup.tasks.to_vec(), a0.tasks.to_vec());
         assert!(dup.rescheduled);
         // Original completes first, duplicate second.
         m.on_result(0, a0.id, 0.5, 0.5);
@@ -422,7 +465,7 @@ mod tests {
         let _a1 = assign(&mut m, 1, 0.0); // task 1 → all scheduled
         // Worker 0 still holds task 0; its next request may only duplicate 1.
         match m.on_request(0, 0.1) {
-            Reply::Assign(a) => assert_eq!(a.tasks, vec![1]),
+            Reply::Assign(a) => assert_eq!(a.tasks.to_vec(), vec![1]),
             other => panic!("{other:?}"),
         }
         // Worker 0 now holds both pending tasks: nothing left for it.

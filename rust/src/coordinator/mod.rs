@@ -14,7 +14,7 @@ mod master;
 mod stats;
 mod task_table;
 
-pub use assignment::{Assignment, AssignmentId};
+pub use assignment::{Assignment, AssignmentId, TaskSet, TaskSetIter};
 pub use master::{Master, MasterConfig, Reply};
 pub use stats::MasterStats;
 pub use task_table::{TaskFlag, TaskTable};

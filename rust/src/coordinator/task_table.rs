@@ -1,5 +1,13 @@
 //! Per-iteration state flags — the heart of rDLB (§3): *"each loop iteration
 //! is flagged as Unscheduled, or Scheduled, or Finished"*.
+//!
+//! Representation (see EXPERIMENTS.md §Perf): primary chunks are carved off
+//! the front in index order, exactly like DLS4LB's global loop index, so the
+//! three flag classes partition the index space around a single cursor:
+//! everything at or past `cursor` is Unscheduled, everything below it is
+//! Scheduled or Finished, and Finished is one bit per iteration.  Carving a
+//! primary chunk is therefore an O(1) cursor bump instead of a per-task
+//! scan, and the table costs one bit (not one byte) per iteration.
 
 /// Lifecycle flag of one loop iteration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -17,44 +25,49 @@ pub enum TaskFlag {
 /// primary chunks and an explicit count of every class.
 #[derive(Debug, Clone)]
 pub struct TaskTable {
-    flags: Vec<TaskFlag>,
-    /// First index that may still be Unscheduled (primary chunks are carved
-    /// off the front in order, exactly like DLS4LB's global loop index).
+    n: usize,
+    /// First index never handed out; primary chunks are `[cursor, cursor+k)`.
     cursor: usize,
-    unscheduled: usize,
-    scheduled: usize,
+    /// One bit per iteration: set ⇔ Finished.
+    finished_bits: Vec<u64>,
     finished: usize,
 }
 
 impl TaskTable {
     pub fn new(n: usize) -> Self {
-        TaskTable {
-            flags: vec![TaskFlag::Unscheduled; n],
-            cursor: 0,
-            unscheduled: n,
-            scheduled: 0,
-            finished: 0,
-        }
+        TaskTable { n, cursor: 0, finished_bits: vec![0u64; n.div_ceil(64)], finished: 0 }
     }
 
     pub fn len(&self) -> usize {
-        self.flags.len()
+        self.n
     }
 
     pub fn is_empty(&self) -> bool {
-        self.flags.is_empty()
+        self.n == 0
+    }
+
+    #[inline]
+    fn finished_bit(&self, task: usize) -> bool {
+        (self.finished_bits[task / 64] >> (task % 64)) & 1 == 1
     }
 
     pub fn flag(&self, task: usize) -> TaskFlag {
-        self.flags[task]
+        assert!(task < self.n, "task {task} out of range (n={})", self.n);
+        if self.finished_bit(task) {
+            TaskFlag::Finished
+        } else if task < self.cursor {
+            TaskFlag::Scheduled
+        } else {
+            TaskFlag::Unscheduled
+        }
     }
 
     pub fn unscheduled_count(&self) -> usize {
-        self.unscheduled
+        self.n - self.cursor
     }
 
     pub fn scheduled_count(&self) -> usize {
-        self.scheduled
+        self.cursor - self.finished
     }
 
     pub fn finished_count(&self) -> usize {
@@ -64,33 +77,26 @@ impl TaskTable {
     /// All iterations Finished ⇒ the execution can terminate (MPI_Abort in
     /// the paper's implementation).
     pub fn all_finished(&self) -> bool {
-        self.finished == self.flags.len()
+        self.finished == self.n
     }
 
     /// Carve the next primary chunk of (up to) `size` Unscheduled iterations
-    /// off the front, flipping them to Scheduled. Returns the task ids.
-    pub fn schedule_next(&mut self, size: usize) -> Vec<u32> {
-        let mut out = Vec::with_capacity(size.min(self.unscheduled));
-        while out.len() < size && self.cursor < self.flags.len() {
-            if self.flags[self.cursor] == TaskFlag::Unscheduled {
-                self.flags[self.cursor] = TaskFlag::Scheduled;
-                self.unscheduled -= 1;
-                self.scheduled += 1;
-                out.push(self.cursor as u32);
-            }
-            self.cursor += 1;
-        }
-        out
+    /// off the front, flipping them to Scheduled. O(1): returns the
+    /// contiguous id range `[start, end)`.
+    pub fn schedule_next_range(&mut self, size: usize) -> (u32, u32) {
+        let take = size.min(self.n - self.cursor);
+        let start = self.cursor;
+        self.cursor += take;
+        (start as u32, self.cursor as u32)
     }
 
     /// Mark one iteration Finished. Idempotent: re-completions (rDLB
     /// duplicates) return `false` and change nothing.
     pub fn finish(&mut self, task: usize) -> bool {
-        match self.flags[task] {
+        match self.flag(task) {
             TaskFlag::Finished => false,
             TaskFlag::Scheduled => {
-                self.flags[task] = TaskFlag::Finished;
-                self.scheduled -= 1;
+                self.finished_bits[task / 64] |= 1u64 << (task % 64);
                 self.finished += 1;
                 true
             }
@@ -104,20 +110,38 @@ impl TaskTable {
 
     /// Scheduled-but-unfinished iterations in index order — the rDLB
     /// re-dispatch pool (§3: "reschedule scheduled and unfinished loop
-    /// iterations").
+    /// iterations").  Fully-finished 64-iteration words are skipped whole.
     pub fn scheduled_unfinished(&self) -> Vec<u32> {
-        self.flags
-            .iter()
-            .enumerate()
-            .filter(|(_, f)| **f == TaskFlag::Scheduled)
-            .map(|(i, _)| i as u32)
-            .collect()
+        let mut out = Vec::with_capacity(self.scheduled_count());
+        let mut task = 0usize;
+        while task < self.cursor {
+            let word = self.finished_bits[task / 64];
+            if word == u64::MAX {
+                // Whole word finished: skip to the next 64-bit boundary.
+                task = (task / 64 + 1) * 64;
+                continue;
+            }
+            let word_end = ((task / 64 + 1) * 64).min(self.cursor);
+            while task < word_end {
+                if (word >> (task % 64)) & 1 == 0 {
+                    out.push(task as u32);
+                }
+                task += 1;
+            }
+        }
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Range-carve helper mirroring the old Vec-returning API.
+    fn schedule_ids(t: &mut TaskTable, size: usize) -> Vec<u32> {
+        let (start, end) = t.schedule_next_range(size);
+        (start..end).collect()
+    }
 
     #[test]
     fn initial_state() {
@@ -126,32 +150,36 @@ mod tests {
         assert_eq!(t.scheduled_count(), 0);
         assert_eq!(t.finished_count(), 0);
         assert!(!t.all_finished());
+        assert_eq!(t.flag(9), TaskFlag::Unscheduled);
     }
 
     #[test]
     fn schedule_in_order() {
         let mut t = TaskTable::new(10);
-        assert_eq!(t.schedule_next(4), vec![0, 1, 2, 3]);
-        assert_eq!(t.schedule_next(3), vec![4, 5, 6]);
+        assert_eq!(schedule_ids(&mut t, 4), vec![0, 1, 2, 3]);
+        assert_eq!(schedule_ids(&mut t, 3), vec![4, 5, 6]);
         assert_eq!(t.unscheduled_count(), 3);
         assert_eq!(t.scheduled_count(), 7);
+        assert_eq!(t.flag(6), TaskFlag::Scheduled);
+        assert_eq!(t.flag(7), TaskFlag::Unscheduled);
     }
 
     #[test]
     fn schedule_clamps_at_end() {
         let mut t = TaskTable::new(5);
-        assert_eq!(t.schedule_next(100), vec![0, 1, 2, 3, 4]);
-        assert!(t.schedule_next(1).is_empty());
+        assert_eq!(schedule_ids(&mut t, 100), vec![0, 1, 2, 3, 4]);
+        assert!(schedule_ids(&mut t, 1).is_empty());
     }
 
     #[test]
     fn finish_is_idempotent() {
         let mut t = TaskTable::new(3);
-        t.schedule_next(3);
+        t.schedule_next_range(3);
         assert!(t.finish(1));
         assert!(!t.finish(1), "duplicate completion must be ignored");
         assert_eq!(t.finished_count(), 1);
         assert_eq!(t.scheduled_count(), 2);
+        assert_eq!(t.flag(1), TaskFlag::Finished);
     }
 
     #[test]
@@ -162,9 +190,15 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "out of range")]
+    fn flag_out_of_range_panics() {
+        TaskTable::new(3).flag(3);
+    }
+
+    #[test]
     fn all_finished_lifecycle() {
         let mut t = TaskTable::new(4);
-        t.schedule_next(4);
+        t.schedule_next_range(4);
         for i in 0..4 {
             assert!(!t.all_finished());
             t.finish(i);
@@ -175,20 +209,34 @@ mod tests {
     #[test]
     fn scheduled_unfinished_pool() {
         let mut t = TaskTable::new(6);
-        t.schedule_next(4); // 0..4 scheduled
+        t.schedule_next_range(4); // 0..4 scheduled
         t.finish(1);
         t.finish(3);
         assert_eq!(t.scheduled_unfinished(), vec![0, 2]);
     }
 
     #[test]
+    fn scheduled_unfinished_skips_full_words() {
+        // Spans several 64-bit words with whole finished words in between.
+        let n = 200;
+        let mut t = TaskTable::new(n);
+        t.schedule_next_range(n);
+        for i in 0..n {
+            if i != 3 && i != 130 {
+                t.finish(i);
+            }
+        }
+        assert_eq!(t.scheduled_unfinished(), vec![3, 130]);
+    }
+
+    #[test]
     fn counts_always_sum_to_n() {
         let mut t = TaskTable::new(100);
-        t.schedule_next(37);
+        t.schedule_next_range(37);
         for i in 0..20 {
             t.finish(i);
         }
-        t.schedule_next(50);
+        t.schedule_next_range(50);
         assert_eq!(
             t.unscheduled_count() + t.scheduled_count() + t.finished_count(),
             100

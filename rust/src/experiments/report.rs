@@ -110,6 +110,7 @@ mod tests {
             hung_fraction: 0.0,
             mean_waste: 0.01,
             mean_rescheduled: 2.0,
+            mean_events: 100.0,
             reps: 3,
         }
     }

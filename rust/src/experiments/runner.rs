@@ -133,6 +133,9 @@ pub struct CellResult {
     pub mean_waste: f64,
     /// Mean rescheduled chunks per run.
     pub mean_rescheduled: f64,
+    /// Mean simulator events per replication (the SimAS-style cost of
+    /// evaluating this cell in the simulator; see the bench harness).
+    pub mean_events: f64,
     pub reps: usize,
 }
 
@@ -166,6 +169,7 @@ pub fn run_cell(cfg: &ExperimentConfig, threads: usize) -> Result<CellResult> {
         mean_waste: outcomes.iter().map(|o| o.waste_fraction()).sum::<f64>() / outcomes.len() as f64,
         mean_rescheduled: outcomes.iter().map(|o| o.stats.rescheduled_chunks as f64).sum::<f64>()
             / outcomes.len() as f64,
+        mean_events: outcomes.iter().map(|o| o.events as f64).sum::<f64>() / outcomes.len() as f64,
         reps: outcomes.len(),
     })
 }

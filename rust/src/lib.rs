@@ -26,6 +26,7 @@
 //! | [`robustness`] | FePIA robustness metrics (resilience ρ_res, flexibility ρ_flex) |
 //! | [`analysis`] | §3.1 closed forms: E\[T\] under failures, overhead, checkpointing comparison |
 //! | [`experiments`] | drivers regenerating every table/figure of the paper |
+//! | [`bench`] | seeded cross-runtime benchmark campaigns, `BENCH_*.json` reports, regression gating (`rdlb bench`) |
 //! | [`config`] | TOML/CLI experiment configuration (Table 1 factors) |
 //! | [`trace`] | per-chunk execution traces (Gantt-style, Figures 1–2) |
 //!
@@ -48,6 +49,7 @@
 
 pub mod analysis;
 pub mod apps;
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod dls;

@@ -22,6 +22,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use rdlb::apps::AppKind;
+use rdlb::bench::{
+    compare_reports, run_campaign, BenchScale, BenchSettings, CampaignReport, Thresholds,
+};
 use rdlb::config::{ExperimentConfig, RuntimeKind, Scenario};
 use rdlb::dls::Technique;
 use rdlb::experiments::{
@@ -57,6 +60,16 @@ USAGE:
   rdlb worker     [--config FILE] --connect ADDR [--app mandelbrot|psia]
                   [--backend native|pjrt] [--artifacts DIR] [--max-iter I]
                   [--retry-connect S]
+  rdlb bench      [--scale smoke|quick|full] [--seed K] [--runtimes sim,native,net]
+                  [--out FILE] [--compare BASELINE.json] [--threshold FRAC]
+                  [--wall-threshold FRAC] [--events-threshold FRAC] [--quiet]
+
+`bench` runs a seeded, deterministic benchmark campaign across the three
+runtimes × DLS techniques × fault scenarios and writes a machine-readable
+BENCH_<n>.json (wall-time median/p95, task throughput, simulator events/s).
+With --compare it gates against a committed baseline and exits non-zero on
+regressions beyond the thresholds (default 0.25 = 25%), normalizing wall
+times by each report's stored CPU calibration. See README §Benchmarking.
 
 `serve` drives the distributed net runtime: it listens for P workers over
 the length-prefixed TCP wire protocol and schedules with the identical rDLB
@@ -530,10 +543,80 @@ fn cmd_worker(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Find the first unused `BENCH_<n>.json` name in the current directory.
+fn next_bench_path() -> PathBuf {
+    for k in 1..10_000u32 {
+        let candidate = PathBuf::from(format!("BENCH_{k}.json"));
+        if !candidate.exists() {
+            return candidate;
+        }
+    }
+    PathBuf::from("BENCH_overflow.json")
+}
+
+/// `rdlb bench`: run the campaign, write the report, optionally gate
+/// against a baseline (non-zero exit on regression).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let scale = BenchScale::parse(&args.str_or("scale", "quick"))
+        .ok_or_else(|| anyhow!("unknown scale (smoke|quick|full)"))?;
+    let mut settings = BenchSettings::new(scale, args.u64_or("seed", 1)?);
+    settings.verbose = !args.bool_or("quiet", false)?;
+    if let Some(list) = args.get("runtimes") {
+        let mut runtimes = Vec::new();
+        for word in list.split(',') {
+            let kind = RuntimeKind::parse(word)
+                .ok_or_else(|| anyhow!("unknown runtime {word:?} in --runtimes"))?;
+            if !runtimes.contains(&kind) {
+                runtimes.push(kind);
+            }
+        }
+        anyhow::ensure!(!runtimes.is_empty(), "--runtimes must name at least one runtime");
+        settings.runtimes = runtimes;
+    }
+
+    let report = run_campaign(&settings)?;
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(next_bench_path);
+    std::fs::write(&out, report.to_json_string())
+        .with_context(|| format!("write {}", out.display()))?;
+    println!(
+        "bench: wrote {} ({} cases, {:.1} s wall{})",
+        out.display(),
+        report.cases.len(),
+        report.total_wall_s(),
+        report
+            .sim_events_per_s()
+            .map(|e| format!(", sim {:.2} M events/s", e / 1e6))
+            .unwrap_or_default()
+    );
+
+    if let Some(baseline_path) = args.get("compare") {
+        let text = std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("read baseline {baseline_path}"))?;
+        let baseline = CampaignReport::from_json_str(&text)?;
+        let uniform = args.f64_or("threshold", 0.25)?;
+        let thresholds = Thresholds {
+            wall_frac: args.f64_or("wall-threshold", uniform)?,
+            events_frac: args.f64_or("events-threshold", uniform)?,
+            ..Thresholds::default()
+        };
+        let cmp = compare_reports(&report, &baseline, &thresholds);
+        print!("{}", cmp.summary());
+        anyhow::ensure!(
+            cmp.passed(),
+            "bench regression vs {baseline_path}: {} regressions, {} missing cases",
+            cmp.regressions.len(),
+            cmp.missing_cases.len()
+        );
+        println!("bench: no regression vs {baseline_path}");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("bench") => cmd_bench(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("trace") => cmd_trace(&args),
         Some("theory") => cmd_theory(&args),

@@ -163,7 +163,7 @@ impl NativeRuntime {
                                 return; // fail-stop: chunk evaporates
                             }
                             let t0 = Instant::now();
-                            let digests = match backend.compute(&a.tasks) {
+                            let digests = match backend.compute(&a.tasks.to_vec()) {
                                 Ok(d) => d,
                                 Err(_) => return,
                             };
@@ -252,12 +252,14 @@ impl NativeRuntime {
         }
 
         let elapsed = start.elapsed().as_secs_f64();
+        let stats = master.stats().clone();
         Ok(Outcome {
             parallel_time: if hung { f64::INFINITY } else { elapsed },
             hung,
             finished: master.table().finished_count(),
             n,
-            stats: master.stats().clone(),
+            events: stats.requests + stats.completed_chunks,
+            stats,
             wasted_work: wasted,
             useful_work: useful,
             failures: self.params.failures.iter().filter(|f| f.is_some()).count(),

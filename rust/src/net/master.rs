@@ -224,12 +224,14 @@ impl NetMaster {
         drop(txs);
 
         let elapsed = start.elapsed().as_secs_f64();
+        let stats = master.stats().clone();
         Ok(Outcome {
             parallel_time: if hung { f64::INFINITY } else { elapsed },
             hung,
             finished: master.table().finished_count(),
             n: prm.n,
-            stats: master.stats().clone(),
+            events: stats.requests + stats.completed_chunks,
+            stats,
             wasted_work: wasted,
             useful_work: useful,
             failures: prm.faults.iter().filter(|f| f.fail_after.is_some()).count(),

@@ -122,7 +122,7 @@ impl WireAssignment {
             id: a.id,
             worker: a.worker as u32,
             rescheduled: a.rescheduled,
-            tasks: a.tasks.clone(),
+            tasks: a.tasks.to_vec(),
         }
     }
 }

@@ -125,6 +125,7 @@ impl SimCluster {
         let mut useful_work = 0.0f64;
         let mut wasted_work = 0.0f64;
         let mut end_time: Option<f64> = None;
+        let mut events: u64 = 0;
 
         // One-way latency for messages between `worker` and the master.
         let latency = |worker: usize, t: f64| -> f64 {
@@ -143,6 +144,7 @@ impl SimCluster {
         }
 
         while let Some((now, event)) = queue.pop() {
+            events += 1;
             match event {
                 Event::RequestAtMaster { worker, result } => {
                     if let Some(res) = result {
@@ -175,7 +177,7 @@ impl SimCluster {
                                 tr.push(TraceRecord {
                                     assignment_id: assignment.id,
                                     worker,
-                                    first_task: assignment.tasks.first().copied().unwrap_or(0),
+                                    first_task: assignment.tasks.first().unwrap_or(0),
                                     task_count: assignment.len(),
                                     assigned_at: now,
                                     started_at: None,
@@ -209,7 +211,7 @@ impl SimCluster {
                         }
                         continue;
                     }
-                    let work = prm.workload.model.chunk_cost(&assignment.tasks);
+                    let work = prm.workload.model.cost_of(&assignment.tasks);
                     let finish = prm.perturbations.finish_time(topo, worker, now, work);
                     if let Some(tr) = trace.as_deref_mut() {
                         if let Some(r) = tr.records.iter_mut().find(|r| r.assignment_id == assignment.id) {
@@ -264,6 +266,7 @@ impl SimCluster {
             useful_work,
             failures: prm.failures.count(),
             result_digest: 0.0,
+            events,
         }
     }
 }
@@ -357,6 +360,8 @@ mod tests {
         let b = mk();
         assert_eq!(a.parallel_time, b.parallel_time);
         assert_eq!(a.stats, b.stats);
+        assert!(a.events > 0, "simulator must count its events");
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -28,6 +28,11 @@ pub struct Outcome {
     /// the virtual-time simulator, populated by the native runtime for
     /// integrity checks across failure scenarios.
     pub result_digest: f64,
+    /// Work units processed by the driving loop: discrete events popped by
+    /// the simulator, or master-side messages (requests + results) on the
+    /// wall-clock runtimes.  The numerator of the bench harness's
+    /// events-per-second throughput metric.
+    pub events: u64,
 }
 
 impl Outcome {
@@ -62,6 +67,7 @@ mod tests {
             useful_work: 9.0,
             failures: 0,
             result_digest: 0.0,
+            events: 0,
         };
         assert!(o.completed());
         assert!((o.waste_fraction() - 0.1).abs() < 1e-12);

@@ -1,0 +1,105 @@
+//! End-to-end tests of the bench subsystem: campaign execution on every
+//! runtime, report round-tripping, seed determinism of the outcome metrics,
+//! and regression gating against doctored baselines.
+
+use rdlb::bench::{
+    compare_reports, run_campaign, BenchScale, BenchSettings, CampaignReport, Thresholds,
+};
+use rdlb::config::RuntimeKind;
+
+fn settings(runtimes: Vec<RuntimeKind>, seed: u64) -> BenchSettings {
+    BenchSettings { runtimes, ..BenchSettings::new(BenchScale::smoke(), seed) }
+}
+
+#[test]
+fn smoke_campaign_covers_all_three_runtimes() {
+    let report = run_campaign(&settings(
+        vec![RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net],
+        1,
+    ))
+    .unwrap();
+    for runtime in ["sim", "native", "net"] {
+        assert!(
+            report.cases.iter().any(|c| c.runtime == runtime),
+            "no {runtime} case in {:?}",
+            report.cases.iter().map(|c| &c.id).collect::<Vec<_>>()
+        );
+    }
+    for case in &report.cases {
+        assert!(!case.outcome.hung, "{} hung", case.id);
+        assert_eq!(case.outcome.finished, case.outcome.n, "{} incomplete", case.id);
+        assert!(case.wall.median_s >= 0.0 && case.wall.median_s.is_finite(), "{}", case.id);
+        assert!(case.wall.tasks_per_s > 0.0, "{}", case.id);
+        if case.runtime == "sim" {
+            assert!(case.wall.events_per_s.unwrap_or(0.0) > 0.0, "{} has no events/s", case.id);
+        } else {
+            // Wall-clock digests count every iteration exactly once
+            // (Synthetic backend: 1.0 per task).
+            assert_eq!(case.outcome.digest, case.outcome.n as f64, "{}", case.id);
+        }
+    }
+    assert!(report.calibration_s > 0.0);
+    assert!(report.sim_events_per_s().unwrap() > 0.0);
+}
+
+#[test]
+fn report_json_round_trips_through_disk_format() {
+    let report = run_campaign(&settings(vec![RuntimeKind::Sim], 3)).unwrap();
+    let text = report.to_json_string();
+    let back = CampaignReport::from_json_str(&text).unwrap();
+    assert_eq!(back, report);
+    // Comparing a campaign to itself always passes.
+    let cmp = compare_reports(&back, &report, &Thresholds::default());
+    assert!(cmp.passed(), "{}", cmp.summary());
+}
+
+#[test]
+fn same_seed_identical_outcomes_different_seed_not() {
+    let a = run_campaign(&settings(vec![RuntimeKind::Sim], 11)).unwrap();
+    let b = run_campaign(&settings(vec![RuntimeKind::Sim], 11)).unwrap();
+    assert_eq!(
+        a.deterministic_digest(),
+        b.deterministic_digest(),
+        "same seed ⇒ identical outcome metrics (timestamps and wall excluded)"
+    );
+    let c = run_campaign(&settings(vec![RuntimeKind::Sim], 12)).unwrap();
+    assert_ne!(a.deterministic_digest(), c.deterministic_digest());
+}
+
+#[test]
+fn doctored_baseline_trips_the_gate() {
+    let report = run_campaign(&settings(vec![RuntimeKind::Sim], 5)).unwrap();
+    // Smoke cases can run under the default jitter floor; disable it so the
+    // gate decision is purely about the doctored numbers.
+    let thresholds = Thresholds { min_wall_s: 0.0, ..Thresholds::default() };
+
+    // Baseline claims a sim case used to be 100× faster: wall regression.
+    // (Pin the current median too, so timer granularity cannot zero it.)
+    let mut current = report.clone();
+    current.cases[0].wall.median_s = 1.0;
+    let mut doctored = report.clone();
+    doctored.cases[0].wall.median_s = 0.01;
+    let cmp = compare_reports(&current, &doctored, &thresholds);
+    assert!(!cmp.passed(), "wall doctoring must fail the gate:\n{}", cmp.summary());
+    assert!(cmp.regressions.iter().any(|d| d.metric == "wall_median_s"));
+
+    // Baseline claims 100× the simulator throughput: events/s regression.
+    let mut doctored = report.clone();
+    for case in &mut doctored.cases {
+        if let Some(eps) = case.wall.events_per_s.as_mut() {
+            *eps *= 100.0;
+        }
+    }
+    let cmp = compare_reports(&report, &doctored, &thresholds);
+    assert!(!cmp.passed(), "throughput doctoring must fail the gate:\n{}", cmp.summary());
+    assert!(cmp.regressions.iter().any(|d| d.metric == "events_per_s"));
+
+    // Baseline contains a case this campaign no longer runs: also a failure.
+    let mut doctored = report.clone();
+    let mut ghost = doctored.cases[0].clone();
+    ghost.id = "sim/ghost/SS/baseline/p1/n1/rdlb".to_string();
+    doctored.cases.push(ghost);
+    let cmp = compare_reports(&report, &doctored, &thresholds);
+    assert!(!cmp.passed());
+    assert_eq!(cmp.missing_cases.len(), 1);
+}

@@ -1,0 +1,115 @@
+//! Cross-runtime determinism guarantees — what makes bench numbers and CI
+//! regression gating trustworthy:
+//!
+//!  * simulator: the complete outcome (virtual time, counters, events) is a
+//!    pure function of the seeded config, across repeated runs and across
+//!    the replication fan-out thread count;
+//!  * wall-clock runtimes: wall times race, but the **result digest**
+//!    attributes exactly one value per iteration, so it is identical across
+//!    repeated runs and across worker counts, even under failures and rDLB
+//!    duplicate completions.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdlb::apps::{AppKind, MandelbrotApp};
+use rdlb::config::{ExperimentConfig, Scenario};
+use rdlb::dls::Technique;
+use rdlb::experiments::{run_cell, run_outcome};
+use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+use rdlb::net::{run_loopback, NetMasterParams};
+
+fn sim_cfg(seed: u64) -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .app(AppKind::Uniform)
+        .tasks(2_000)
+        .pes(8)
+        .technique(Technique::Fac)
+        .rdlb(true)
+        .scenario(Scenario::failures(4))
+        .seed(seed)
+        .replications(4)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn sim_outcome_identical_across_repeated_runs() {
+    let cfg = sim_cfg(42);
+    let a = run_outcome(&cfg, 0, 1.0).unwrap();
+    let b = run_outcome(&cfg, 0, 1.0).unwrap();
+    assert!(a.completed());
+    assert_eq!(a.parallel_time, b.parallel_time);
+    assert_eq!(a.stats, b.stats);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.finished, b.finished);
+    assert!(a.events > 0);
+    // A different replication draws a different failure plan.
+    let c = run_outcome(&cfg, 1, 1.0).unwrap();
+    assert_ne!(
+        (a.parallel_time, a.events),
+        (c.parallel_time, c.events),
+        "replications must differ"
+    );
+}
+
+#[test]
+fn sim_cell_identical_across_thread_counts() {
+    let cfg = sim_cfg(7);
+    let one = run_cell(&cfg, 1).unwrap();
+    let many = run_cell(&cfg, 8).unwrap();
+    assert_eq!(one.reps, many.reps);
+    assert_eq!(one.mean_time, many.mean_time, "thread fan-out changed the mean");
+    assert_eq!(one.std_time, many.std_time);
+    assert_eq!(one.hung_fraction, many.hung_fraction);
+    assert_eq!(one.mean_waste, many.mean_waste);
+    assert_eq!(one.mean_rescheduled, many.mean_rescheduled);
+    assert_eq!(one.mean_events, many.mean_events);
+    assert!(one.mean_events > 0.0);
+}
+
+/// Mandelbrot escape counts give every iteration a distinct value, so the
+/// digest detects both lost and double-counted iterations.
+fn mandelbrot_digest(workers: usize) -> f64 {
+    let app = MandelbrotApp { width: 32, height: 32, max_iter: 64, ..Default::default() };
+    let n = app.n_tasks();
+    let backend = ComputeBackend::Mandelbrot(Arc::new(app));
+    let mut params = NativeParams::new(n, workers, Technique::Fac, true, backend);
+    params.timeout = Duration::from_secs(60);
+    params = params.with_failures(1, 0.02);
+    let outcome = NativeRuntime::new(params).unwrap().run().unwrap();
+    assert!(outcome.completed(), "P={workers}: {outcome:?}");
+    outcome.result_digest
+}
+
+#[test]
+fn native_digest_invariant_across_runs_and_worker_counts() {
+    let a = mandelbrot_digest(2);
+    let b = mandelbrot_digest(2);
+    let c = mandelbrot_digest(4);
+    assert!(a > 0.0);
+    assert_eq!(a, b, "same run twice must agree exactly");
+    assert_eq!(a, c, "digest must not depend on the worker count");
+}
+
+#[test]
+fn net_loopback_digest_counts_each_iteration_once() {
+    // Synthetic digests are 1.0 per iteration: the total must be exactly N
+    // on every run, even when failures force rDLB duplicates.
+    let n = 200;
+    let mk = || {
+        let mut params = NetMasterParams::new(n, 4, Technique::Fac, true)
+            .with_failures(3, 0.05)
+            .unwrap();
+        params.timeout = Duration::from_secs(30);
+        let backend = ComputeBackend::Synthetic {
+            model: Arc::new(rdlb::apps::CostModel::from_costs(vec![2e-3; n])),
+            scale: 1.0,
+        };
+        let (outcome, _) = run_loopback(params, &backend).unwrap();
+        assert!(outcome.completed(), "{outcome:?}");
+        outcome.result_digest
+    };
+    assert_eq!(mk(), n as f64);
+    assert_eq!(mk(), n as f64);
+}

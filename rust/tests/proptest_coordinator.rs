@@ -47,9 +47,10 @@ fn drive(
         interactions[w] += 1;
         match master.on_request(w, t) {
             Reply::Assign(a) => {
-                assert!(a.tasks.windows(2).all(|x| x[0] < x[1]), "assignment not ascending");
+                let ids = a.tasks.to_vec();
+                assert!(ids.windows(2).all(|x| x[0] < x[1]), "assignment not ascending");
                 assert!(
-                    a.tasks.iter().all(|&id| (id as usize) < master.config().n),
+                    ids.iter().all(|&id| (id as usize) < master.config().n),
                     "phantom task id"
                 );
                 let dies_now = fail_after[w].is_some_and(|k| interactions[w] >= k);
@@ -213,7 +214,7 @@ fn prop_holder_exclusion() {
             assert!(held.len() <= 10 * n, "seed {seed}: runaway");
         }
         let held_ids: std::collections::HashSet<u32> =
-            held.iter().flat_map(|a| a.tasks.iter().copied()).collect();
+            held.iter().flat_map(|a| a.tasks.iter()).collect();
         assert_eq!(held_ids.len(), n, "worker 1 should hold all tasks");
         assert_eq!(master.on_request(1, 1.0), Reply::Wait, "seed {seed}");
         // Worker 0 may duplicate them.
