@@ -86,6 +86,13 @@ impl MandelbrotApp {
         tasks.iter().map(|&t| self.escape_count(t as i64)).collect()
     }
 
+    /// Compute the contiguous chunk `[start, end)` — the range-native entry
+    /// point matching the master's primary chunks: no id list is ever
+    /// materialized.
+    pub fn compute_range(&self, start: u32, end: u32) -> Vec<u32> {
+        (start..end).map(|t| self.escape_count(t as i64)).collect()
+    }
+
     /// All per-pixel counts (multi-threaded; used to derive the simulator's
     /// cost model from the *real* workload shape).
     pub fn compute_all(&self) -> Vec<u32> {
@@ -133,6 +140,15 @@ mod tests {
         let all = app.compute_all();
         let ids: Vec<u32> = (0..all.len() as u32).collect();
         assert_eq!(all, app.compute_chunk(&ids));
+    }
+
+    #[test]
+    fn compute_range_matches_explicit_list() {
+        let app = MandelbrotApp { width: 16, height: 16, max_iter: 48, ..Default::default() };
+        for (start, end) in [(0u32, 16u32), (5, 5), (7, 200), (255, 256)] {
+            let ids: Vec<u32> = (start..end).collect();
+            assert_eq!(app.compute_range(start, end), app.compute_chunk(&ids), "[{start},{end})");
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod psia;
 pub mod workload;
 
 pub use mandelbrot::MandelbrotApp;
-pub use psia::PsiaApp;
+pub use psia::{PsiaApp, PsiaParams};
 pub use workload::{CostModel, Workload};
 
 

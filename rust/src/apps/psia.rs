@@ -80,10 +80,20 @@ impl PsiaApp {
     /// Spin image for one oriented point (f32, same formulation as the
     /// Pallas kernel's bilinear factorization). Negative oid ⇒ zeros.
     pub fn spin_image(&self, oid: i32) -> Vec<f32> {
+        let mut img = Vec::new();
+        self.spin_image_into(oid, &mut img);
+        img
+    }
+
+    /// [`PsiaApp::spin_image`] into a caller-owned buffer, so a chunk of
+    /// tasks reuses one image allocation instead of paying one per task.
+    /// The buffer is cleared and resized to `img_size²`.
+    pub fn spin_image_into(&self, oid: i32, img: &mut Vec<f32>) {
         let size = self.params.img_size;
-        let mut img = vec![0f32; size * size];
+        img.clear();
+        img.resize(size * size, 0f32);
         if oid < 0 {
-            return img;
+            return;
         }
         let o = oid as usize;
         let p = [self.points[3 * o], self.points[3 * o + 1], self.points[3 * o + 2]];
@@ -115,12 +125,32 @@ impl PsiaApp {
                 }
             }
         }
-        img
     }
 
     /// Compute a chunk of tasks; returns one flattened image per task.
     pub fn compute_chunk(&self, tasks: &[u32]) -> Vec<Vec<f32>> {
         tasks.iter().map(|&t| self.spin_image(self.oriented_point(t))).collect()
+    }
+
+    /// Append one image-mass digest per task id to `out`, reusing a single
+    /// image buffer for the whole chunk — the iterator-based core shared by
+    /// [`PsiaApp::mass_range`] and the runtimes' `ComputeBackend` hot path,
+    /// so the kernel loop exists exactly once.
+    pub fn mass_into(&self, tasks: impl Iterator<Item = u32>, out: &mut Vec<f64>) {
+        let mut img = Vec::new();
+        for t in tasks {
+            self.spin_image_into(self.oriented_point(t), &mut img);
+            out.push(PsiaApp::image_mass(&img));
+        }
+    }
+
+    /// Per-task image-mass digests for the contiguous chunk `[start, end)`
+    /// — the range-native entry point: no id list and no per-task image
+    /// allocation.
+    pub fn mass_range(&self, start: u32, end: u32) -> Vec<f64> {
+        let mut out = Vec::with_capacity(end.saturating_sub(start) as usize);
+        self.mass_into(start..end, &mut out);
+        out
     }
 
     /// Scalar digest of one image (used as the "result" for integrity checks).
@@ -186,6 +216,27 @@ mod tests {
         let a = app.compute_chunk(&[5]);
         let b = app.compute_chunk(&[133]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spin_image_into_reuses_buffer_and_matches() {
+        let app = small();
+        let mut img = Vec::new();
+        for oid in [3, -1, 50, 3] {
+            app.spin_image_into(oid, &mut img);
+            assert_eq!(img, app.spin_image(oid), "oid {oid}");
+        }
+    }
+
+    #[test]
+    fn mass_range_matches_per_task_masses() {
+        let app = small();
+        let masses = app.mass_range(4, 9);
+        for (i, t) in (4u32..9).enumerate() {
+            let direct = PsiaApp::image_mass(&app.spin_image(app.oriented_point(t)));
+            assert_eq!(masses[i], direct, "task {t}");
+        }
+        assert!(app.mass_range(7, 7).is_empty());
     }
 
     #[test]

@@ -379,6 +379,21 @@ pub fn run_campaign(settings: &BenchSettings) -> Result<CampaignReport> {
         }
         reports.push(report);
     }
+    // Wire-codec microbench cases ride along in every campaign (they cost
+    // milliseconds) so encode/decode regressions are gated like runtime
+    // regressions.
+    for report in super::codec::codec_cases(&settings.scale) {
+        if settings.verbose {
+            let eps = report.wall.events_per_s.unwrap_or(0.0);
+            println!(
+                "bench: {:<52} {:>9.2} M roundtrips/s ({} B payload)",
+                report.id,
+                eps / 1e6,
+                report.outcome.digest,
+            );
+        }
+        reports.push(report);
+    }
     let created_unix = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())

@@ -1,0 +1,164 @@
+//! Wire-codec microbenchmarks, surfaced as first-class bench campaign
+//! cases so wire-level regressions are gated exactly like runtime
+//! regressions (`rdlb bench --compare`).
+//!
+//! Each case measures encode+decode round-trips of one representative
+//! frame through the same scratch-buffer path the transports use
+//! ([`Frame::encode_into`] + [`Frame::decode`]):
+//!
+//!  * `codec/assign-range/nN` — a contiguous primary chunk of N tasks.
+//!    Protocol v2 encodes this in **constant** bytes (the case's `digest`
+//!    records the payload size, so a size regression is seed-visible).
+//!  * `codec/assign-list/nN` — the equivalent rDLB re-dispatch chunk as an
+//!    explicit id list (linear size; the v1 encoding for *every* chunk).
+//!  * `codec/result/nN` — a large `Result` frame (N f64 digests), the
+//!    worker→master payload that dominates return traffic.
+//!
+//! Wall metrics are duration-targeted (each replication spins for a fixed
+//! interval and counts round-trips), so `median_s` sits above the compare
+//! gate's jitter floor on any machine and the gated signal is the
+//! throughput (`events_per_s` = round-trips/s).
+
+use std::time::{Duration, Instant};
+
+use super::campaign::BenchScale;
+use super::report::{CaseReport, OutcomeMetrics, WallMetrics};
+use crate::coordinator::TaskSet;
+use crate::net::protocol::Frame;
+use crate::net::{WireAssignment, WorkResult};
+use crate::util::Summary;
+
+/// Spin target per replication; well above the compare gate's 5 ms jitter
+/// floor, small enough that the whole codec suite stays under a second.
+const REP_TARGET: Duration = Duration::from_millis(20);
+
+/// Round-trips measured between clock reads.
+const BATCH: u64 = 64;
+
+/// One measured codec case.
+fn bench_frame(id: String, frame: &Frame, tasks: u64, reps: usize) -> CaseReport {
+    let payload_bytes = frame.encode().len() as u64;
+    let mut scratch: Vec<u8> = Vec::with_capacity(payload_bytes as usize);
+    let mut rep_walls = Vec::with_capacity(reps);
+    let mut total_iters = 0u64;
+    let mut total_wall = 0.0f64;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        loop {
+            for _ in 0..BATCH {
+                scratch.clear();
+                frame.encode_into(&mut scratch);
+                let back = Frame::decode(&scratch).expect("codec roundtrip");
+                std::hint::black_box(&back);
+            }
+            iters += BATCH;
+            if t0.elapsed() >= REP_TARGET {
+                break;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        rep_walls.push(wall);
+        total_iters += iters;
+        total_wall += wall;
+    }
+    let w = Summary::of(&rep_walls);
+    let roundtrips_per_s = total_iters as f64 / total_wall;
+    CaseReport {
+        id,
+        runtime: "codec".to_string(),
+        outcome: OutcomeMetrics {
+            hung: false,
+            finished: tasks,
+            n: tasks,
+            // Deterministic O(1)-size witness: the encoded payload length.
+            // A contiguous-range Assign must keep this constant regardless
+            // of chunk size; any encoding change shows up in the seed-
+            // deterministic digest, not just in jittery wall numbers.
+            digest: payload_bytes as f64,
+            virtual_time: None,
+            chunks: None,
+            rescheduled: None,
+            duplicates: None,
+            events: None,
+        },
+        wall: WallMetrics {
+            reps: rep_walls.len() as u64,
+            median_s: w.p50,
+            p95_s: w.p95,
+            mean_s: w.mean,
+            min_s: w.min,
+            tasks_per_s: total_iters as f64 * tasks as f64 / total_wall,
+            events_per_s: Some(roundtrips_per_s),
+        },
+    }
+}
+
+/// Build and measure the codec suite for `scale` (task count =
+/// `scale.real_tasks`, matching the wall-clock runtime cases).
+pub fn codec_cases(scale: &BenchScale) -> Vec<CaseReport> {
+    let n = scale.real_tasks as u32;
+    let range = Frame::Assign(WireAssignment {
+        id: 7,
+        worker: 3,
+        rescheduled: false,
+        tasks: TaskSet::Range { start: 1024, end: 1024 + n },
+    });
+    // Strided ids: a realistic re-dispatch chunk with holes.
+    let list = Frame::Assign(WireAssignment {
+        id: 8,
+        worker: 3,
+        rescheduled: true,
+        tasks: TaskSet::List((0..n).map(|i| 2 * i).collect()),
+    });
+    let result = Frame::Result(WorkResult {
+        worker: 3,
+        assignment: 7,
+        compute_secs: 0.5,
+        digests: vec![1.5; n as usize],
+    });
+    vec![
+        bench_frame(format!("codec/assign-range/n{n}"), &range, n as u64, scale.reps),
+        bench_frame(format!("codec/assign-list/n{n}"), &list, n as u64, scale.reps),
+        bench_frame(format!("codec/result/n{n}"), &result, n as u64, scale.reps),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_suite_measures_and_is_constant_size_for_ranges() {
+        let cases = codec_cases(&BenchScale::smoke());
+        assert_eq!(cases.len(), 3);
+        for c in &cases {
+            assert_eq!(c.runtime, "codec");
+            assert!(!c.outcome.hung);
+            assert_eq!(c.outcome.finished, c.outcome.n);
+            assert!(c.wall.median_s > 0.0);
+            assert!(c.wall.events_per_s.unwrap() > 0.0, "{}", c.id);
+            assert!(c.wall.tasks_per_s > 0.0, "{}", c.id);
+        }
+        let range = &cases[0];
+        let list = &cases[1];
+        assert_eq!(range.outcome.digest, 23.0, "range Assign payload must stay 23 bytes");
+        assert!(
+            list.outcome.digest > range.outcome.digest * 10.0,
+            "list encoding must grow with the chunk ({} vs {})",
+            list.outcome.digest,
+            range.outcome.digest
+        );
+    }
+
+    #[test]
+    fn digest_is_independent_of_chunk_size_for_ranges_only() {
+        let small = codec_cases(&BenchScale::smoke());
+        let big = codec_cases(&BenchScale::quick());
+        // Range frames: identical payload size at any scale.
+        assert_eq!(small[0].outcome.digest, big[0].outcome.digest);
+        // List and result frames scale with the task count.
+        assert!(big[1].outcome.digest > small[1].outcome.digest);
+        assert!(big[2].outcome.digest > small[2].outcome.digest);
+    }
+}

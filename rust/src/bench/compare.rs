@@ -155,6 +155,26 @@ pub fn compare_reports(
             continue;
         }
 
+        // Codec microbench cases are duration-targeted: each replication
+        // spins for a fixed interval, so their median is ~the target on
+        // *any* machine and the calibration-normalized wall gate would read
+        // a faster-than-baseline machine as a spurious regression.  Their
+        // gated signals are instead the throughput (below) and the
+        // deterministic encoded-payload size: a contiguous-range Assign
+        // growing past its constant 23 bytes must fail the gate even
+        // though it cannot move the wall numbers measurably.
+        let duration_targeted = base.runtime == "codec";
+        if duration_targeted && cur.outcome.digest != base.outcome.digest {
+            cmp.regressions.push(Delta {
+                case_id: base.id.clone(),
+                metric: "encoded_payload_bytes".to_string(),
+                expected: base.outcome.digest,
+                current: cur.outcome.digest,
+                ratio: cur.outcome.digest / base.outcome.digest.max(1.0),
+            });
+            continue;
+        }
+
         // Cases too fast to time reliably are exempt from both gates.
         let expected_wall = base.wall.median_s * machine_factor;
         if expected_wall.max(cur.wall.median_s) < thresholds.min_wall_s {
@@ -162,7 +182,7 @@ pub fn compare_reports(
         }
 
         // Wall-time gate (lower is better).
-        if expected_wall > 0.0 && cur.wall.median_s.is_finite() {
+        if !duration_targeted && expected_wall > 0.0 && cur.wall.median_s.is_finite() {
             let ratio = cur.wall.median_s / expected_wall;
             let delta = Delta {
                 case_id: base.id.clone(),
@@ -352,6 +372,33 @@ mod tests {
         hung_base.outcome.hung = true;
         let base = report(0.05, vec![hung_base]);
         assert!(compare_reports(&cur, &base, &Thresholds::default()).passed());
+    }
+
+    #[test]
+    fn codec_cases_gate_size_and_throughput_but_not_wall() {
+        let mk = |digest: f64, eps: f64| {
+            let mut c = case("codec/assign-range/n64", 0.02, Some(eps));
+            c.runtime = "codec".to_string();
+            c.outcome.digest = digest;
+            c
+        };
+        let base = report(0.04, vec![mk(23.0, 1e6)]);
+        // A 2× faster machine: codec wall stays at the spin target (the
+        // cases are duration-targeted), which must NOT read as a wall
+        // regression; throughput above baseline is an improvement at most.
+        let cur = report(0.02, vec![mk(23.0, 2.2e6)]);
+        let cmp = compare_reports(&cur, &base, &Thresholds::default());
+        assert!(cmp.passed(), "{}", cmp.summary());
+        // Encoding-size growth fails the gate even with healthy wall and
+        // throughput numbers.
+        let bloated = report(0.02, vec![mk(4119.0, 2.2e6)]);
+        let cmp = compare_reports(&bloated, &base, &Thresholds::default());
+        assert!(!cmp.passed(), "{}", cmp.summary());
+        assert_eq!(cmp.regressions[0].metric, "encoded_payload_bytes");
+        // Throughput collapse still fails the gate.
+        let slow = report(0.04, vec![mk(23.0, 1e5)]);
+        let cmp = compare_reports(&slow, &base, &Thresholds::default());
+        assert!(cmp.regressions.iter().any(|d| d.metric == "events_per_s"), "{}", cmp.summary());
     }
 
     #[test]

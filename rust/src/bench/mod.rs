@@ -18,15 +18,18 @@
 //! | piece | role |
 //! |---|---|
 //! | [`campaign`] | scale presets, the case grid, calibration, execution |
+//! | [`codec`] | wire-codec microbench cases (range vs list `Assign`, large `Result`) gated like runtime cases |
 //! | [`report`] | `BENCH_*.json` schema: deterministic `outcome` vs measured `wall` metrics |
 //! | [`compare`] | calibration-normalized regression gating against a baseline |
 
 pub mod campaign;
+pub mod codec;
 pub mod compare;
 pub mod report;
 
 pub use campaign::{
     calibrate, campaign_cases, run_campaign, run_case, BenchScale, BenchSettings, CaseSpec,
 };
+pub use codec::codec_cases;
 pub use compare::{compare_reports, Comparison, Delta, Thresholds};
 pub use report::{CampaignReport, CaseReport, OutcomeMetrics, WallMetrics, SCHEMA_VERSION};

@@ -199,11 +199,16 @@ impl CampaignReport {
     }
 
     /// Aggregate simulator throughput: Σ events / Σ wall over the simulator
-    /// cases; `None` when the campaign ran none.
+    /// cases; `None` when the campaign ran none.  Codec microbench cases
+    /// also carry `events_per_s` (round-trips/s) but are not simulator
+    /// cases, so the filter is on the runtime, not on field presence.
     pub fn sim_events_per_s(&self) -> Option<f64> {
         let mut events = 0.0f64;
         let mut wall = 0.0f64;
         for c in &self.cases {
+            if c.runtime != "sim" {
+                continue;
+            }
             if let Some(eps) = c.wall.events_per_s {
                 let case_wall = c.wall.mean_s * c.wall.reps as f64;
                 events += eps * case_wall;

@@ -25,6 +25,11 @@ pub struct MasterStats {
     pub duplicate_iterations: u64,
     /// Results whose assignment id was unknown (late duplicates).
     pub unknown_results: u64,
+    /// Workers refused at registration (wire-protocol version mismatch).
+    /// Only the distributed runtime can populate this; it distinguishes a
+    /// refused peer from a fail-stop at t=0, which used to be
+    /// indistinguishable in `Outcome`-level stats.
+    pub refused_workers: u64,
 }
 
 impl MasterStats {

@@ -65,11 +65,13 @@ USAGE:
                   [--wall-threshold FRAC] [--events-threshold FRAC] [--quiet]
 
 `bench` runs a seeded, deterministic benchmark campaign across the three
-runtimes × DLS techniques × fault scenarios and writes a machine-readable
-BENCH_<n>.json (wall-time median/p95, task throughput, simulator events/s).
-With --compare it gates against a committed baseline and exits non-zero on
-regressions beyond the thresholds (default 0.25 = 25%), normalizing wall
-times by each report's stored CPU calibration. See README §Benchmarking.
+runtimes × DLS techniques × fault scenarios — plus wire-codec microbench
+cases (range vs list Assign frames, large Result frames) — and writes a
+machine-readable BENCH_<n>.json (wall-time median/p95, task throughput,
+simulator events/s, codec round-trips/s). With --compare it gates against a
+committed baseline and exits non-zero on regressions beyond the thresholds
+(default 0.25 = 25%), normalizing wall times by each report's stored CPU
+calibration. See README §Benchmarking and §Performance.
 
 `serve` drives the distributed net runtime: it listens for P workers over
 the length-prefixed TCP wire protocol and schedules with the identical rDLB

@@ -6,6 +6,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::apps::{CostModel, MandelbrotApp, PsiaApp};
+use crate::coordinator::TaskSet;
 use crate::runtime::{ComputeHandle, ComputeRequest};
 
 /// How a worker executes a chunk of loop iterations.
@@ -25,41 +26,62 @@ pub enum ComputeBackend {
 }
 
 impl ComputeBackend {
-    /// Execute `tasks`; returns one result digest *per task* (escape count /
-    /// image mass) so the coordinator can attribute exactly one value per
-    /// iteration even when rDLB duplicates chunks.
-    pub fn compute(&self, tasks: &[u32]) -> Result<Vec<f64>> {
+    /// Execute a chunk in its native [`TaskSet`] representation, writing
+    /// one result digest *per task* (escape count / image mass) into `out`
+    /// in task order (`out` is cleared first, its capacity reused).
+    ///
+    /// This is the runtimes' hot path: a contiguous `TaskSet::Range` —
+    /// every primary chunk — is iterated directly, so no task-id list is
+    /// ever materialized, and a worker that reuses `out` across chunks pays
+    /// zero steady-state allocations for the rust kernels.  The digest
+    /// contract (exactly one value per task) is what lets the coordinator
+    /// attribute each iteration once even when rDLB duplicates chunks.
+    pub fn compute_into(&self, tasks: &TaskSet, out: &mut Vec<f64>) -> Result<()> {
+        out.clear();
+        out.reserve(tasks.len());
         match self {
             ComputeBackend::Mandelbrot(app) => {
-                Ok(app.compute_chunk(tasks).iter().map(|&c| c as f64).collect())
+                out.extend(tasks.iter().map(|t| app.escape_count(t as i64) as f64));
             }
-            ComputeBackend::Psia(app) => Ok(app
-                .compute_chunk(tasks)
-                .iter()
-                .map(|img| PsiaApp::image_mass(img))
-                .collect()),
+            ComputeBackend::Psia(app) => {
+                // One image buffer for the whole chunk, not one per task;
+                // the loop lives in the app (shared with mass_range).
+                app.mass_into(tasks.iter(), out);
+            }
             ComputeBackend::PjrtMandelbrot(handle) => {
+                // The PJRT request shape needs explicit ids (gated path).
                 match handle.compute(ComputeRequest::Mandelbrot(tasks.to_vec()))? {
                     crate::runtime::ComputeResponse::Counts(c) => {
-                        Ok(c.into_iter().map(|x| x as f64).collect())
+                        out.extend(c.into_iter().map(|x| x as f64));
                     }
                     other => anyhow::bail!("unexpected response {other:?}"),
                 }
             }
             ComputeBackend::PjrtPsia(handle) => {
                 match handle.compute(ComputeRequest::Psia(tasks.to_vec()))? {
-                    crate::runtime::ComputeResponse::Masses(m) => Ok(m),
+                    crate::runtime::ComputeResponse::Masses(m) => out.extend(m),
                     other => anyhow::bail!("unexpected response {other:?}"),
                 }
             }
             ComputeBackend::Synthetic { model, scale } => {
-                let secs = model.chunk_cost(tasks) * scale;
+                // cost_of is an O(1) prefix-sum difference for ranges.
+                let secs = model.cost_of(tasks) * scale;
                 if secs > 0.0 {
                     std::thread::sleep(std::time::Duration::from_secs_f64(secs));
                 }
-                Ok(vec![1.0; tasks.len()])
+                out.resize(tasks.len(), 1.0);
             }
         }
+        Ok(())
+    }
+
+    /// Execute an explicit id list; returns a fresh digest vector.
+    /// Convenience wrapper over [`ComputeBackend::compute_into`] — the
+    /// runtimes use `compute_into` with the assignment's native `TaskSet`.
+    pub fn compute(&self, tasks: &[u32]) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        self.compute_into(&TaskSet::List(tasks.to_vec()), &mut out)?;
+        Ok(out)
     }
 }
 
@@ -85,5 +107,49 @@ mod tests {
         let direct: Vec<f64> = app.compute_chunk(&[0, 1, 2, 3]).iter().map(|&c| c as f64).collect();
         let b = ComputeBackend::Mandelbrot(Arc::new(app));
         assert_eq!(b.compute(&[0, 1, 2, 3]).unwrap(), direct);
+    }
+
+    #[test]
+    fn range_and_list_paths_agree_with_buffer_reuse() {
+        let app = MandelbrotApp { width: 16, height: 16, max_iter: 32, ..Default::default() };
+        let b = ComputeBackend::Mandelbrot(Arc::new(app));
+        let mut out = Vec::new();
+        b.compute_into(&TaskSet::Range { start: 3, end: 11 }, &mut out).unwrap();
+        let range = out.clone();
+        // Reuse the same buffer for the equivalent explicit list.
+        let ids: Vec<u32> = (3..11).collect();
+        b.compute_into(&TaskSet::List(ids), &mut out).unwrap();
+        assert_eq!(out, range, "range and list digests must agree");
+        // And for an empty range.
+        b.compute_into(&TaskSet::Range { start: 5, end: 5 }, &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn psia_range_digest_matches_mass_range() {
+        let app = PsiaApp::synthetic_with(
+            crate::apps::PsiaParams { n_points: 64, img_size: 8, bin_size: 0.25 },
+            128,
+            3,
+        );
+        let expect = app.mass_range(2, 7);
+        let b = ComputeBackend::Psia(Arc::new(app));
+        let mut out = Vec::new();
+        b.compute_into(&TaskSet::Range { start: 2, end: 7 }, &mut out).unwrap();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn synthetic_range_cost_is_prefix_sum_fast_path() {
+        // The range and list paths must sleep the same total time and give
+        // identical digests.
+        let model = Arc::new(CostModel::from_costs(vec![1e-4; 64]));
+        let b = ComputeBackend::Synthetic { model, scale: 1.0 };
+        let mut a = Vec::new();
+        let mut l = Vec::new();
+        b.compute_into(&TaskSet::Range { start: 8, end: 24 }, &mut a).unwrap();
+        b.compute_into(&TaskSet::List((8..24).collect()), &mut l).unwrap();
+        assert_eq!(a, l);
+        assert_eq!(a.len(), 16);
     }
 }

@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::coordinator::{Assignment, Master, MasterConfig, Reply};
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
+use crate::util::ParkedSet;
 
 /// Parameters of one native execution.
 #[derive(Clone)]
@@ -162,11 +163,19 @@ impl NativeRuntime {
                             if dead(Instant::now()) {
                                 return; // fail-stop: chunk evaporates
                             }
+                            // Range-native: primary chunks are iterated as
+                            // [start, end) — no task-id list materialized.
+                            // The digest vector's ownership passes to the
+                            // master through the channel, so (unlike the
+                            // net worker's reclaimed buffer) one allocation
+                            // per chunk remains — but it is pre-sized here,
+                            // OUTSIDE the timed window, so compute_secs
+                            // bills pure kernel time.
+                            let mut digests = Vec::with_capacity(a.len());
                             let t0 = Instant::now();
-                            let digests = match backend.compute(&a.tasks.to_vec()) {
-                                Ok(d) => d,
-                                Err(_) => return,
-                            };
+                            if backend.compute_into(&a.tasks, &mut digests).is_err() {
+                                return;
+                            }
                             let mut compute = t0.elapsed();
                             if slow > 1.0 {
                                 // PE perturbation: dilate compute.
@@ -194,7 +203,8 @@ impl NativeRuntime {
         drop(to_master);
 
         // Master loop, bounded by the hang timeout.
-        let mut parked: Vec<usize> = Vec::new();
+        let mut parked = ParkedSet::new(p);
+        let mut woken: Vec<u32> = Vec::with_capacity(p);
         let mut useful = 0.0f64;
         let mut wasted = 0.0f64;
         let mut result_digest = 0.0f64;
@@ -235,8 +245,13 @@ impl NativeRuntime {
                 if master.is_complete() {
                     break;
                 }
-                for pw in std::mem::take(&mut parked) {
-                    dispatch(&mut master, pw, now, &worker_tx, &mut parked);
+                // Wakeup pass: touch only the actually-parked workers (the
+                // pool may have shrunk); skipped entirely when none are.
+                if !parked.is_empty() {
+                    parked.drain_into(&mut woken);
+                    for &pw in &woken {
+                        dispatch(&mut master, pw as usize, now, &worker_tx, &mut parked);
+                    }
                 }
             }
             dispatch(&mut master, msg.worker, now, &worker_tx, &mut parked);
@@ -278,16 +293,14 @@ fn dispatch(
     worker: usize,
     now: f64,
     worker_tx: &[mpsc::Sender<ToWorker>],
-    parked: &mut Vec<usize>,
+    parked: &mut ParkedSet,
 ) {
     match master.on_request(worker, now) {
         Reply::Assign(a) => {
             let _ = worker_tx[worker].send(ToWorker::Assign(a));
         }
         Reply::Wait => {
-            if !parked.contains(&worker) {
-                parked.push(worker);
-            }
+            parked.insert(worker);
         }
         Reply::Terminate => {
             let _ = worker_tx[worker].send(ToWorker::Terminate);

@@ -19,6 +19,7 @@ use anyhow::{ensure, Context, Result};
 use crate::coordinator::{Master, MasterConfig, Reply};
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
+use crate::util::ParkedSet;
 
 use super::protocol::{FaultSpec, Frame, Welcome, WireAssignment, PROTOCOL_VERSION};
 use super::transport::{FrameRx as _, FrameTx, TcpTransport, Transport};
@@ -131,7 +132,9 @@ impl NetMaster {
         let start = Instant::now();
         let hard_deadline = start + prm.timeout;
         let mut registered = vec![false; p];
-        let mut parked: Vec<usize> = Vec::new();
+        let mut refused_slot = vec![false; p];
+        let mut parked = ParkedSet::new(p);
+        let mut woken: Vec<u32> = Vec::with_capacity(p);
         let mut useful = 0.0f64;
         let mut wasted = 0.0f64;
         let mut result_digest = 0.0f64;
@@ -157,15 +160,25 @@ impl NetMaster {
                     // No detection: rDLB recovers the work, or the run hangs.
                 }
                 Event::Frame(w, Frame::Hello(hello)) => {
+                    if registered[w] || refused_slot[w] {
+                        // Duplicate Hello on a settled slot: protocol
+                        // violation — ignore it rather than deregistering
+                        // a live worker or double-counting a refusal.
+                        continue;
+                    }
                     if hello.version != PROTOCOL_VERSION {
                         // Incompatible peer: tell it to exit (dropping our
                         // send half alone would not close the socket — the
-                        // reader thread's clone keeps it open) and refuse
-                        // further traffic.
+                        // reader thread's clone keeps it open), refuse
+                        // further traffic, and count the refusal so the
+                        // Outcome's stats distinguish it from a fail-stop
+                        // at t=0.
                         eprintln!(
-                            "net: refusing worker {w}: protocol version {} != {}",
+                            "net: refusing worker {w}: protocol version {} != {} \
+                             (slot stays unregistered)",
                             hello.version, PROTOCOL_VERSION
                         );
+                        refused_slot[w] = true;
                         send_or_drop(&mut txs, w, &Frame::Terminate);
                         txs[w] = None;
                         continue;
@@ -205,8 +218,13 @@ impl NetMaster {
                     if master.is_complete() {
                         break;
                     }
-                    for pw in std::mem::take(&mut parked) {
-                        dispatch(&mut master, pw, now, &mut txs, &mut parked);
+                    // Wakeup pass: only the actually-parked workers are
+                    // touched, and the pass is skipped when none are.
+                    if !parked.is_empty() {
+                        parked.drain_into(&mut woken);
+                        for &pw in &woken {
+                            dispatch(&mut master, pw as usize, now, &mut txs, &mut parked);
+                        }
                     }
                     // Result piggy-backs the next request (MPI semantics).
                     dispatch(&mut master, w, now, &mut txs, &mut parked);
@@ -224,7 +242,8 @@ impl NetMaster {
         drop(txs);
 
         let elapsed = start.elapsed().as_secs_f64();
-        let stats = master.stats().clone();
+        let mut stats = master.stats().clone();
+        stats.refused_workers = refused_slot.iter().filter(|&&r| r).count() as u64;
         Ok(Outcome {
             parallel_time: if hung { f64::INFINITY } else { elapsed },
             hung,
@@ -248,19 +267,18 @@ fn dispatch(
     worker: usize,
     now: f64,
     txs: &mut [Option<Box<dyn FrameTx>>],
-    parked: &mut Vec<usize>,
+    parked: &mut ParkedSet,
 ) {
     match master.on_request(worker, now) {
         Reply::Assign(a) => {
-            let frame = Frame::Assign(WireAssignment::from_assignment(&a));
+            // Moves the TaskSet onto the wire frame: a contiguous primary
+            // chunk never materializes its ids, in memory or on the wire.
+            let frame = Frame::Assign(WireAssignment::from_assignment(a));
             send_or_drop(txs, worker, &frame);
         }
         Reply::Wait => {
-            let frame = Frame::Wait;
-            send_or_drop(txs, worker, &frame);
-            if !parked.contains(&worker) {
-                parked.push(worker);
-            }
+            send_or_drop(txs, worker, &Frame::Wait);
+            parked.insert(worker);
         }
         Reply::Terminate => {
             send_or_drop(txs, worker, &Frame::Terminate);

@@ -7,10 +7,15 @@
 //! * [`protocol`] — versioned, length-prefixed binary frames
 //!   (`Hello / Welcome / Request / Assign / Wait / Result / Terminate`)
 //!   plus in-band [`FaultSpec`] fault-injection envelopes reproducing the
-//!   paper's §4 failure and perturbation scenarios across processes;
+//!   paper's §4 failure and perturbation scenarios across processes.
+//!   Protocol **v2** ships contiguous chunks as constant-size
+//!   `{start, end}` ranges (23-byte `Assign` payload regardless of chunk
+//!   length) and encodes through reusable scratch buffers — see
+//!   `PROTOCOL.md`;
 //! * [`transport`] — the [`Transport`] abstraction with [`TcpTransport`]
-//!   (real sockets) and [`LoopbackTransport`] (in-process, codec-exercising
-//!   channels, so the whole stack is unit-testable without ports);
+//!   (real sockets, one `write` per frame) and [`LoopbackTransport`]
+//!   (in-process, codec-exercising channels, so the whole stack is
+//!   unit-testable without ports);
 //! * [`master`] — listener, worker registry and the dispatch loop, with the
 //!   paper's no-detection semantics and a wall-clock hang bound;
 //! * [`worker`] — connect, register, request–compute–report over any
@@ -140,5 +145,45 @@ mod tests {
         let (a, _b) = LoopbackTransport::pair();
         let err = NetMaster::new(params).unwrap().run(vec![Box::new(a)]);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn version_mismatch_is_refused_and_visible_in_stats() {
+        let n = 16;
+        let mut params = NetMasterParams::new(n, 2, Technique::Fac, true);
+        params.timeout = Duration::from_secs(30);
+
+        // Worker 0: a well-behaved peer that will end up computing all N
+        // iterations.  Worker 1: an old-protocol peer the master must turn
+        // away with Terminate instead of Welcome.
+        let (good_master, good_worker) = LoopbackTransport::pair();
+        let (bad_master, bad_worker) = LoopbackTransport::pair();
+        let backend = synthetic(n, 1e-4);
+        let good = std::thread::spawn(move || run_worker(Box::new(good_worker), backend, "good"));
+        let bad = std::thread::spawn(move || {
+            let (mut tx, mut rx) = Box::new(bad_worker).split().unwrap();
+            tx.send(&Frame::Hello(WorkerHello {
+                version: PROTOCOL_VERSION - 1,
+                backend: "stale".into(),
+            }))
+            .unwrap();
+            matches!(rx.recv(), Ok(Frame::Terminate))
+        });
+
+        let outcome = NetMaster::new(params)
+            .unwrap()
+            .run(vec![Box::new(good_master), Box::new(bad_master)])
+            .unwrap();
+        assert!(outcome.completed(), "{outcome:?}");
+        assert_eq!(outcome.finished, n);
+        assert_eq!(
+            outcome.stats.refused_workers, 1,
+            "a refused peer must be distinguishable from a fail-stop at t=0: {:?}",
+            outcome.stats
+        );
+        // ...and it is not counted as an injected failure.
+        assert_eq!(outcome.failures, 0);
+        assert!(good.join().unwrap().is_ok());
+        assert!(bad.join().unwrap(), "refused peer must receive Terminate, not Welcome");
     }
 }

@@ -15,6 +15,15 @@
 //! `PROTOCOL.md` at the repository root for the field-by-field layout and
 //! the message sequence diagrams.
 //!
+//! **Version 2** makes `Assign` frames *range-native*: the common
+//! contiguous primary chunk travels as `{start, end}` bounds — a
+//! constant-size frame (23 payload bytes) regardless of chunk length —
+//! while rDLB re-dispatch chunks (which may have holes) keep the explicit
+//! id-list encoding.  Encoding is zero-allocation on the hot path: frames
+//! are appended into a reusable per-connection scratch buffer via
+//! [`Frame::encode_into`] / [`encode_frame_into`], and read back through a
+//! reusable payload buffer via [`read_frame_into`].
+//!
 //! Fault injection travels *in-band*: the master assigns each registering
 //! worker a [`FaultSpec`] envelope inside [`Welcome`], and the worker
 //! self-enforces it (fail-stop deadline, compute dilation, per-message
@@ -24,14 +33,18 @@
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
-use crate::coordinator::Assignment;
+use crate::coordinator::{Assignment, TaskSet};
 
 /// Protocol version carried in [`WorkerHello`]; the master refuses workers
-/// that do not match exactly.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// that do not match exactly (counted in
+/// [`MasterStats::refused_workers`](crate::coordinator::MasterStats)).
+///
+/// v2: range-native `Assign` task sets (kind-tagged `Range`/`List`
+/// encoding) replacing v1's unconditional explicit id lists.
+pub const PROTOCOL_VERSION: u16 = 2;
 
 /// Upper bound on one frame payload, guarding against corrupt length
-/// prefixes (a full paper-scale Mandelbrot assignment is ~1 MiB).
+/// prefixes (a full paper-scale explicit-list assignment is ~1 MiB).
 pub const MAX_FRAME_LEN: usize = 32 << 20;
 
 /// Frame tags (first payload byte).
@@ -42,6 +55,10 @@ const TAG_ASSIGN: u8 = 0x04;
 const TAG_WAIT: u8 = 0x05;
 const TAG_RESULT: u8 = 0x06;
 const TAG_TERMINATE: u8 = 0x07;
+
+/// Task-set kind bytes inside an `Assign` payload (protocol v2).
+const TASKSET_RANGE: u8 = 0x00;
+const TASKSET_LIST: u8 = 0x01;
 
 /// Per-worker fault-injection envelope (the paper's §4 scenarios).
 ///
@@ -106,6 +123,10 @@ pub struct Welcome {
 }
 
 /// Master → worker: one chunk of loop iterations.
+///
+/// The task set travels in its native representation: contiguous primary
+/// chunks as `[start, end)` bounds (constant-size on the wire), rDLB
+/// re-dispatch chunks as an explicit ascending id list.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireAssignment {
     pub id: u64,
@@ -113,16 +134,18 @@ pub struct WireAssignment {
     /// Issued by the rDLB re-dispatch phase (duplicate of Scheduled work).
     pub rescheduled: bool,
     /// Loop-iteration ids, ascending.
-    pub tasks: Vec<u32>,
+    pub tasks: TaskSet,
 }
 
 impl WireAssignment {
-    pub fn from_assignment(a: &Assignment) -> WireAssignment {
+    /// Consume a coordinator [`Assignment`]; moves the task set straight
+    /// onto the wire representation (no id materialization, no copy).
+    pub fn from_assignment(a: Assignment) -> WireAssignment {
         WireAssignment {
             id: a.id,
             worker: a.worker as u32,
             rescheduled: a.rescheduled,
-            tasks: a.tasks.to_vec(),
+            tasks: a.tasks,
         }
     }
 }
@@ -213,6 +236,22 @@ fn push_vec_f64(buf: &mut Vec<u8>, v: &[f64]) {
     }
 }
 
+/// Protocol v2 task-set encoding: a kind byte, then either the two range
+/// bounds (constant size) or the explicit counted id list.
+fn push_task_set(buf: &mut Vec<u8>, tasks: &TaskSet) {
+    match tasks {
+        TaskSet::Range { start, end } => {
+            buf.push(TASKSET_RANGE);
+            push_u32(buf, *start);
+            push_u32(buf, *end);
+        }
+        TaskSet::List(ids) => {
+            buf.push(TASKSET_LIST);
+            push_vec_u32(buf, ids);
+        }
+    }
+}
+
 /// Bounds-checked little-endian reader over a frame payload.
 struct ByteReader<'a> {
     buf: &'a [u8],
@@ -286,6 +325,19 @@ impl<'a> ByteReader<'a> {
         (0..len).map(|_| self.f64()).collect()
     }
 
+    fn task_set(&mut self) -> Result<TaskSet> {
+        match self.u8().context("task-set kind")? {
+            TASKSET_RANGE => {
+                let start = self.u32()?;
+                let end = self.u32()?;
+                ensure!(start <= end, "inverted task range [{start}, {end})");
+                Ok(TaskSet::Range { start, end })
+            }
+            TASKSET_LIST => Ok(TaskSet::List(self.vec_u32()?)),
+            other => bail!("unknown task-set kind {other:#04x}"),
+        }
+    }
+
     fn finish(self) -> Result<()> {
         ensure!(
             self.pos == self.buf.len(),
@@ -307,42 +359,50 @@ fn read_fault(r: &mut ByteReader<'_>) -> Result<FaultSpec> {
 }
 
 impl Frame {
-    /// Encode the payload (tag + fields), without the length prefix.
-    pub fn encode(&self) -> Vec<u8> {
-        let mut buf = Vec::with_capacity(16);
+    /// Append the payload (tag + fields) to `buf`, without the length
+    /// prefix.  This is the zero-allocation encoder the transports drive
+    /// with a reusable per-connection scratch buffer.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
         match self {
             Frame::Hello(h) => {
                 buf.push(TAG_HELLO);
-                push_u16(&mut buf, h.version);
-                push_str(&mut buf, &h.backend);
+                push_u16(buf, h.version);
+                push_str(buf, &h.backend);
             }
             Frame::Welcome(w) => {
                 buf.push(TAG_WELCOME);
-                push_u32(&mut buf, w.worker);
-                push_u64(&mut buf, w.n);
-                push_fault(&mut buf, &w.fault);
+                push_u32(buf, w.worker);
+                push_u64(buf, w.n);
+                push_fault(buf, &w.fault);
             }
             Frame::Request { worker } => {
                 buf.push(TAG_REQUEST);
-                push_u32(&mut buf, *worker);
+                push_u32(buf, *worker);
             }
             Frame::Assign(a) => {
                 buf.push(TAG_ASSIGN);
-                push_u64(&mut buf, a.id);
-                push_u32(&mut buf, a.worker);
-                push_bool(&mut buf, a.rescheduled);
-                push_vec_u32(&mut buf, &a.tasks);
+                push_u64(buf, a.id);
+                push_u32(buf, a.worker);
+                push_bool(buf, a.rescheduled);
+                push_task_set(buf, &a.tasks);
             }
             Frame::Wait => buf.push(TAG_WAIT),
             Frame::Result(r) => {
                 buf.push(TAG_RESULT);
-                push_u32(&mut buf, r.worker);
-                push_u64(&mut buf, r.assignment);
-                push_f64(&mut buf, r.compute_secs);
-                push_vec_f64(&mut buf, &r.digests);
+                push_u32(buf, r.worker);
+                push_u64(buf, r.assignment);
+                push_f64(buf, r.compute_secs);
+                push_vec_f64(buf, &r.digests);
             }
             Frame::Terminate => buf.push(TAG_TERMINATE),
         }
+    }
+
+    /// Encode the payload into a fresh `Vec` (convenience; the hot paths
+    /// use [`Frame::encode_into`] with a reused buffer).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(16);
+        self.encode_into(&mut buf);
         buf
     }
 
@@ -363,7 +423,7 @@ impl Frame {
                 id: r.u64()?,
                 worker: r.u32()?,
                 rescheduled: r.boolean()?,
-                tasks: r.vec_u32()?,
+                tasks: r.task_set()?,
             }),
             TAG_WAIT => Frame::Wait,
             TAG_RESULT => Frame::Result(WorkResult {
@@ -393,24 +453,49 @@ impl Frame {
     }
 }
 
-/// Write one length-prefixed frame.
-pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
-    let payload = frame.encode();
-    ensure!(payload.len() <= MAX_FRAME_LEN, "frame too large: {} bytes", payload.len());
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(&payload)?;
+/// Encode one complete length-prefixed frame (prefix + payload) into
+/// `buf`, replacing its contents.  The buffer is reusable across frames, so
+/// a connection that keeps one scratch `Vec` pays zero allocations per
+/// frame once warmed up, and can hand the result to the OS in a single
+/// write.
+pub fn encode_frame_into(frame: &Frame, buf: &mut Vec<u8>) -> Result<()> {
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 4]);
+    frame.encode_into(buf);
+    let len = buf.len() - 4;
+    ensure!(len > 0 && len <= MAX_FRAME_LEN, "frame too large: {len} bytes");
+    buf[..4].copy_from_slice(&(len as u32).to_le_bytes());
     Ok(())
 }
 
-/// Read one length-prefixed frame (blocking).
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let mut scratch = Vec::with_capacity(64);
+    encode_frame_into(frame, &mut scratch)?;
+    w.write_all(&scratch)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame through a reusable payload buffer
+/// (blocking).  `scratch` is resized to the incoming payload and keeps its
+/// capacity across calls.
+pub fn read_frame_into<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Frame> {
     let mut len_bytes = [0u8; 4];
     r.read_exact(&mut len_bytes).context("frame length prefix")?;
     let len = u32::from_le_bytes(len_bytes) as usize;
     ensure!(len > 0 && len <= MAX_FRAME_LEN, "implausible frame length {len}");
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("frame payload")?;
-    Frame::decode(&payload)
+    // resize alone: shrinking is O(1) and growth only zero-fills the new
+    // tail; read_exact overwrites all `len` bytes either way.
+    scratch.resize(len, 0);
+    r.read_exact(scratch).context("frame payload")?;
+    Frame::decode(scratch)
+}
+
+/// Read one length-prefixed frame (blocking; allocates a fresh payload
+/// buffer — the transports use [`read_frame_into`] with a reused one).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut scratch = Vec::new();
+    read_frame_into(r, &mut scratch)
 }
 
 #[cfg(test)]
@@ -428,10 +513,16 @@ mod tests {
             }),
             Frame::Request { worker: 7 },
             Frame::Assign(WireAssignment {
+                id: 41,
+                worker: 2,
+                rescheduled: false,
+                tasks: TaskSet::Range { start: 128, end: 4_096 },
+            }),
+            Frame::Assign(WireAssignment {
                 id: 42,
                 worker: 1,
                 rescheduled: true,
-                tasks: vec![0, 5, 6, 7, 1023],
+                tasks: TaskSet::List(vec![0, 5, 6, 7, 1023]),
             }),
             Frame::Wait,
             Frame::Result(WorkResult {
@@ -459,10 +550,64 @@ mod tests {
             write_frame(&mut buf, f).unwrap();
         }
         let mut cur = Cursor::new(buf);
+        let mut scratch = Vec::new();
         for f in &samples() {
-            assert_eq!(&read_frame(&mut cur).unwrap(), f);
+            assert_eq!(&read_frame_into(&mut cur, &mut scratch).unwrap(), f);
         }
         assert!(read_frame(&mut cur).is_err(), "EOF must error");
+    }
+
+    #[test]
+    fn range_assign_is_constant_size() {
+        let frame = |len: u32| {
+            Frame::Assign(WireAssignment {
+                id: 1,
+                worker: 0,
+                rescheduled: false,
+                tasks: TaskSet::Range { start: 0, end: len },
+            })
+        };
+        let small = frame(1).encode().len();
+        let huge = frame(1_000_000).encode().len();
+        assert_eq!(small, huge, "range Assign must encode in O(1) bytes");
+        assert_eq!(small, 23, "tag + id + worker + rescheduled + kind + 2 bounds");
+        // The equivalent explicit list grows linearly.
+        let list = Frame::Assign(WireAssignment {
+            id: 1,
+            worker: 0,
+            rescheduled: true,
+            tasks: TaskSet::List((0..1000).collect()),
+        });
+        assert!(list.encode().len() > 4000);
+    }
+
+    #[test]
+    fn inverted_range_rejected() {
+        let mut bytes = Frame::Assign(WireAssignment {
+            id: 1,
+            worker: 0,
+            rescheduled: false,
+            tasks: TaskSet::Range { start: 7, end: 9 },
+        })
+        .encode();
+        // Swap the two bounds in place: [.. tag+8+4+1+1][start][end].
+        let at = 1 + 8 + 4 + 1 + 1;
+        let (start, end) = (at, at + 4);
+        let mut tmp = [0u8; 4];
+        tmp.copy_from_slice(&bytes[start..start + 4]);
+        bytes.copy_within(end..end + 4, start);
+        bytes[end..end + 4].copy_from_slice(&tmp);
+        assert!(Frame::decode(&bytes).is_err(), "start > end must be a decode error");
+    }
+
+    #[test]
+    fn encode_into_reuses_scratch() {
+        let mut scratch = Vec::new();
+        for f in samples() {
+            encode_frame_into(&f, &mut scratch).unwrap();
+            let mut cur = Cursor::new(&scratch);
+            assert_eq!(read_frame(&mut cur).unwrap(), f, "{}", f.label());
+        }
     }
 
     #[test]

@@ -6,17 +6,24 @@
 //! send halves in its dispatch loop, exactly mirroring the structure of the
 //! in-process [`crate::native::NativeRuntime`].
 //!
+//! Both halves of [`TcpTransport`] reuse per-connection scratch buffers:
+//! a send encodes the length-prefixed frame into the connection's scratch
+//! `Vec` ([`encode_frame_into`]) and hands it to the socket in **one**
+//! `write_all` call — no per-frame payload allocation, no double-buffering
+//! through a `BufWriter`, no separate prefix write; a receive reads the
+//! payload into a reused buffer ([`read_frame_into`]).
+//!
 //! [`LoopbackTransport`] carries *encoded* frame bytes over in-memory
 //! channels, so every unit test exercises the full codec without opening a
 //! port; [`TcpTransport`] carries the same bytes over a socket.
 
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::protocol::{read_frame, write_frame, Frame};
+use super::protocol::{encode_frame_into, read_frame_into, Frame};
 
 /// Owned send half of a connection.
 pub trait FrameTx: Send {
@@ -59,24 +66,28 @@ impl TcpTransport {
 }
 
 struct TcpTx {
-    w: BufWriter<TcpStream>,
+    stream: TcpStream,
+    /// Reusable length-prefix + payload buffer; one `write_all` per frame.
+    scratch: Vec<u8>,
 }
 
 impl FrameTx for TcpTx {
     fn send(&mut self, frame: &Frame) -> Result<()> {
-        write_frame(&mut self.w, frame)?;
-        self.w.flush().context("flush tcp frame")?;
+        encode_frame_into(frame, &mut self.scratch)?;
+        self.stream.write_all(&self.scratch).context("write tcp frame")?;
         Ok(())
     }
 }
 
 struct TcpRx {
     r: BufReader<TcpStream>,
+    /// Reusable payload buffer.
+    scratch: Vec<u8>,
 }
 
 impl FrameRx for TcpRx {
     fn recv(&mut self) -> Result<Frame> {
-        read_frame(&mut self.r)
+        read_frame_into(&mut self.r, &mut self.scratch)
     }
 }
 
@@ -91,8 +102,8 @@ impl Transport for TcpTransport {
     fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
         let read_half = self.stream.try_clone().context("clone tcp stream")?;
         Ok((
-            Box::new(TcpTx { w: BufWriter::new(self.stream) }),
-            Box::new(TcpRx { r: BufReader::new(read_half) }),
+            Box::new(TcpTx { stream: self.stream, scratch: Vec::with_capacity(256) }),
+            Box::new(TcpRx { r: BufReader::new(read_half), scratch: Vec::with_capacity(256) }),
         ))
     }
 }
@@ -153,6 +164,7 @@ impl Transport for LoopbackTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::TaskSet;
     use crate::net::protocol::{WireAssignment, WorkerHello, PROTOCOL_VERSION};
     use std::net::TcpListener;
 
@@ -171,10 +183,18 @@ mod tests {
             id: 1,
             worker: 0,
             rescheduled: false,
-            tasks: vec![1, 2, 3],
+            tasks: TaskSet::Range { start: 1, end: 4 },
         });
         b_tx.send(&assign).unwrap();
         assert_eq!(a_rx.recv().unwrap(), assign);
+        let redispatch = Frame::Assign(WireAssignment {
+            id: 2,
+            worker: 0,
+            rescheduled: true,
+            tasks: TaskSet::List(vec![1, 3, 9]),
+        });
+        b_tx.send(&redispatch).unwrap();
+        assert_eq!(a_rx.recv().unwrap(), redispatch);
     }
 
     #[test]
@@ -200,6 +220,41 @@ mod tests {
         let (mut tx, mut rx) = Box::new(client).split().unwrap();
         tx.send(&hello()).unwrap();
         assert_eq!(rx.recv().unwrap(), hello());
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_scratch_survives_growing_and_shrinking_frames() {
+        // Alternate big and small frames through the same reused buffers.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let frames: Vec<Frame> = (0..6)
+            .map(|i| {
+                if i % 2 == 0 {
+                    Frame::Assign(WireAssignment {
+                        id: i,
+                        worker: 0,
+                        rescheduled: true,
+                        tasks: TaskSet::List((0..2_000).collect()),
+                    })
+                } else {
+                    Frame::Wait
+                }
+            })
+            .collect();
+        let expect = frames.clone();
+        let join = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let (mut tx, _rx) = Box::new(TcpTransport::new(stream)).split().unwrap();
+            for f in &frames {
+                tx.send(f).unwrap();
+            }
+        });
+        let client = TcpTransport::connect(&addr.to_string()).unwrap();
+        let (_tx, mut rx) = Box::new(client).split().unwrap();
+        for f in &expect {
+            assert_eq!(&rx.recv().unwrap(), f);
+        }
         join.join().unwrap();
     }
 }

@@ -64,6 +64,10 @@ pub fn run_worker(
     }
     tx.send(&Frame::Request { worker: me })?;
 
+    // Worker-owned digest buffer, reused across chunks: compute_into fills
+    // it, the Result frame briefly owns it for the send, and it is
+    // reclaimed afterwards — zero steady-state allocations per chunk.
+    let mut digest_buf: Vec<f64> = Vec::new();
     loop {
         let frame = match rx.recv() {
             Ok(f) => f,
@@ -86,7 +90,7 @@ pub fn run_worker(
                     return Ok(report); // fail-stop: chunk evaporates
                 }
                 let t0 = Instant::now();
-                let digests = backend.compute(&a.tasks)?;
+                backend.compute_into(&a.tasks, &mut digest_buf)?;
                 let mut compute = t0.elapsed();
                 if slow > 1.0 {
                     // PE perturbation: dilate compute.
@@ -106,9 +110,13 @@ pub fn run_worker(
                     worker: me,
                     assignment: a.id,
                     compute_secs: compute.as_secs_f64(),
-                    digests,
+                    digests: std::mem::take(&mut digest_buf),
                 });
-                if tx.send(&result).is_err() {
+                let sent = tx.send(&result).is_ok();
+                if let Frame::Result(r) = result {
+                    digest_buf = r.digests; // reclaim the buffer
+                }
+                if !sent {
                     break; // master closed mid-run
                 }
             }

@@ -28,6 +28,7 @@ use crate::apps::Workload;
 use crate::coordinator::{Master, MasterConfig, Reply};
 use crate::dls::{Technique, TechniqueParams};
 use crate::trace::{Trace, TraceRecord};
+use crate::util::ParkedSet;
 
 /// Full parameterization of one simulated execution.
 #[derive(Debug, Clone)]
@@ -121,7 +122,8 @@ impl SimCluster {
         });
 
         let mut queue = EventQueue::new();
-        let mut parked: Vec<usize> = Vec::new();
+        let mut parked = ParkedSet::new(p);
+        let mut woken: Vec<u32> = Vec::with_capacity(p);
         let mut useful_work = 0.0f64;
         let mut wasted_work = 0.0f64;
         let mut end_time: Option<f64> = None;
@@ -164,8 +166,14 @@ impl SimCluster {
                         }
                         // Pool shrank: retry parked workers (their requests
                         // sit at the master; no extra message latency).
-                        for pw in parked.drain(..) {
-                            queue.push(now, Event::RequestAtMaster { worker: pw, result: None });
+                        if !parked.is_empty() {
+                            parked.drain_into(&mut woken);
+                            for &pw in &woken {
+                                queue.push(
+                                    now,
+                                    Event::RequestAtMaster { worker: pw as usize, result: None },
+                                );
+                            }
                         }
                     }
                     // The request itself (the sender may since have failed;
@@ -196,9 +204,7 @@ impl SimCluster {
                             queue.push(t_reply, Event::ReplyAtWorker { worker, assignment });
                         }
                         Reply::Wait => {
-                            if !parked.contains(&worker) {
-                                parked.push(worker);
-                            }
+                            parked.insert(worker);
                         }
                         Reply::Terminate => { /* worker exits */ }
                     }

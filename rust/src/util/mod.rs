@@ -4,9 +4,11 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod par;
+pub mod park;
 pub mod rng;
 pub mod stats;
 
 pub use par::{default_threads, par_map};
+pub use park::ParkedSet;
 pub use rng::Rng;
 pub use stats::Summary;

@@ -1,0 +1,103 @@
+//! [`ParkedSet`]: an O(1) membership set over worker ids for the master
+//! loops' Wait book-keeping.
+//!
+//! All three runtimes park a worker when the master answers `Wait` and wake
+//! every parked worker after each completed chunk.  A plain
+//! `Vec<usize>` + `contains` made parking O(P) per `Wait` — measurable once
+//! P reaches the paper's 256 PEs and failures park most of the fleet every
+//! round.  `ParkedSet` keeps a bitset for membership and a separate
+//! insertion-order list so the wakeup pass still visits workers in the
+//! deterministic order they parked (the simulator's event order — and thus
+//! its seeded outcomes — must not change).
+
+/// Set of parked worker ids: O(1) insert/contains, order-preserving drain.
+#[derive(Debug, Clone)]
+pub struct ParkedSet {
+    /// One bit per worker id.
+    bits: Vec<u64>,
+    /// Parked ids in insertion order (each id appears at most once).
+    order: Vec<u32>,
+}
+
+impl ParkedSet {
+    /// An empty set over worker ids `0..capacity`.
+    pub fn new(capacity: usize) -> ParkedSet {
+        ParkedSet { bits: vec![0u64; capacity.div_ceil(64).max(1)], order: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn contains(&self, worker: usize) -> bool {
+        self.bits[worker / 64] & (1u64 << (worker % 64)) != 0
+    }
+
+    /// Park `worker`; returns `false` (and does nothing) if already parked.
+    pub fn insert(&mut self, worker: usize) -> bool {
+        let word = &mut self.bits[worker / 64];
+        let bit = 1u64 << (worker % 64);
+        if *word & bit != 0 {
+            return false;
+        }
+        *word |= bit;
+        self.order.push(worker as u32);
+        true
+    }
+
+    /// Unpark everyone: move the parked ids (in insertion order) into
+    /// `out`, clearing it first.  Both buffers keep their capacity, so the
+    /// per-result wakeup pass is allocation-free at steady state, and
+    /// re-parking during the pass lands in the now-empty set.
+    pub fn drain_into(&mut self, out: &mut Vec<u32>) {
+        out.clear();
+        std::mem::swap(&mut self.order, out);
+        for &w in out.iter() {
+            self.bits[w as usize / 64] &= !(1u64 << (w % 64));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_is_idempotent_and_ordered() {
+        let mut s = ParkedSet::new(130);
+        assert!(s.is_empty());
+        assert!(s.insert(5));
+        assert!(s.insert(129));
+        assert!(s.insert(0));
+        assert!(!s.insert(5), "double park must be a no-op");
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(129) && s.contains(0) && !s.contains(1));
+        let mut out = Vec::new();
+        s.drain_into(&mut out);
+        assert_eq!(out, vec![5, 129, 0], "drain must preserve park order");
+        assert!(s.is_empty() && !s.contains(5));
+    }
+
+    #[test]
+    fn repark_during_drain_cycle() {
+        let mut s = ParkedSet::new(8);
+        s.insert(3);
+        let mut out = Vec::new();
+        s.drain_into(&mut out);
+        assert_eq!(out, vec![3]);
+        // Re-park while the drained list is still alive (the wakeup pass).
+        assert!(s.insert(3));
+        s.drain_into(&mut out);
+        assert_eq!(out, vec![3]);
+    }
+
+    #[test]
+    fn zero_capacity_is_inert() {
+        let s = ParkedSet::new(0);
+        assert!(s.is_empty());
+    }
+}

@@ -18,7 +18,7 @@ fn smoke_campaign_covers_all_three_runtimes() {
         1,
     ))
     .unwrap();
-    for runtime in ["sim", "native", "net"] {
+    for runtime in ["sim", "native", "net", "codec"] {
         assert!(
             report.cases.iter().any(|c| c.runtime == runtime),
             "no {runtime} case in {:?}",
@@ -30,14 +30,31 @@ fn smoke_campaign_covers_all_three_runtimes() {
         assert_eq!(case.outcome.finished, case.outcome.n, "{} incomplete", case.id);
         assert!(case.wall.median_s >= 0.0 && case.wall.median_s.is_finite(), "{}", case.id);
         assert!(case.wall.tasks_per_s > 0.0, "{}", case.id);
-        if case.runtime == "sim" {
-            assert!(case.wall.events_per_s.unwrap_or(0.0) > 0.0, "{} has no events/s", case.id);
-        } else {
-            // Wall-clock digests count every iteration exactly once
-            // (Synthetic backend: 1.0 per task).
-            assert_eq!(case.outcome.digest, case.outcome.n as f64, "{}", case.id);
+        match case.runtime.as_str() {
+            "sim" => {
+                assert!(case.wall.events_per_s.unwrap_or(0.0) > 0.0, "{} has no events/s", case.id)
+            }
+            "codec" => {
+                // The digest records the encoded payload size; round-trip
+                // throughput is the gated signal.
+                assert!(case.outcome.digest > 0.0, "{}", case.id);
+                assert!(case.wall.events_per_s.unwrap_or(0.0) > 0.0, "{}", case.id);
+            }
+            _ => {
+                // Wall-clock digests count every iteration exactly once
+                // (Synthetic backend: 1.0 per task).
+                assert_eq!(case.outcome.digest, case.outcome.n as f64, "{}", case.id);
+            }
         }
     }
+    // The contiguous-range Assign case is the O(1)-bytes witness: constant
+    // 23-byte payload regardless of the chunk size baked into the id.
+    let range_case = report
+        .cases
+        .iter()
+        .find(|c| c.id.starts_with("codec/assign-range/"))
+        .expect("codec range case present");
+    assert_eq!(range_case.outcome.digest, 23.0);
     assert!(report.calibration_s > 0.0);
     assert!(report.sim_events_per_s().unwrap() > 0.0);
 }

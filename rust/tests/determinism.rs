@@ -92,6 +92,42 @@ fn native_digest_invariant_across_runs_and_worker_counts() {
     assert_eq!(a, c, "digest must not depend on the worker count");
 }
 
+/// The v2 range-native fast path must not change what is computed: the
+/// native and net-loopback runtimes (range-native `Assign` frames,
+/// `compute_into` chunk execution) must both reproduce the serial kernel's
+/// digest bit-for-bit, with failures forcing rDLB re-dispatch (and its
+/// explicit-list chunks) into the mix.
+#[test]
+fn v2_fast_path_digest_parity_native_net_serial() {
+    let app = MandelbrotApp { width: 48, height: 48, max_iter: 128, ..Default::default() };
+    let n = app.n_tasks();
+    // Ground truth through the range-native kernel entry point.
+    let serial: f64 = app.compute_range(0, n as u32).iter().map(|&c| c as f64).sum();
+    // ...which must itself agree with the explicit-list kernel path.
+    let ids: Vec<u32> = (0..n as u32).collect();
+    let by_list: f64 = app.compute_chunk(&ids).iter().map(|&c| c as f64).sum();
+    assert_eq!(serial, by_list);
+
+    let backend = ComputeBackend::Mandelbrot(Arc::new(app));
+    let mut np = NativeParams::new(n, 4, Technique::Fac, true, backend.clone());
+    np.timeout = Duration::from_secs(60);
+    np = np.with_failures(2, 0.05);
+    let native = NativeRuntime::new(np).unwrap().run().unwrap();
+    assert!(native.completed(), "{native:?}");
+
+    let mut params =
+        NetMasterParams::new(n, 4, Technique::Fac, true).with_failures(2, 0.05).unwrap();
+    params.timeout = Duration::from_secs(60);
+    let (net, _) = run_loopback(params, &backend).unwrap();
+    assert!(net.completed(), "{net:?}");
+
+    // Escape counts are integer-valued: the sums are exact, so any lost or
+    // double-counted iteration (e.g. an rDLB duplicate contributing twice)
+    // breaks equality outright.
+    assert_eq!(native.result_digest, serial, "native ↔ serial digest parity");
+    assert_eq!(net.result_digest, serial, "net-loopback ↔ serial digest parity");
+}
+
 #[test]
 fn net_loopback_digest_counts_each_iteration_once() {
     // Synthetic digests are 1.0 per iteration: the total must be exactly N

@@ -5,6 +5,7 @@
 
 use std::io::Cursor;
 
+use rdlb::coordinator::TaskSet;
 use rdlb::net::protocol::{read_frame, write_frame};
 use rdlb::net::{FaultSpec, Frame, Welcome, WireAssignment, WorkResult, WorkerHello};
 use rdlb::util::Rng;
@@ -12,6 +13,28 @@ use rdlb::util::Rng;
 fn rand_string(rng: &mut Rng, max: usize) -> String {
     let len = (rng.next_u64() as usize) % (max + 1);
     (0..len).map(|_| char::from(b'a' + (rng.next_u64() % 26) as u8)).collect()
+}
+
+/// Random v2 task set: contiguous ranges (possibly empty, possibly pressed
+/// against the u32 boundary) and arbitrary explicit lists.
+fn rand_task_set(rng: &mut Rng) -> TaskSet {
+    match rng.next_u64() % 4 {
+        0 => {
+            // Range anywhere, length 0..1000.
+            let start = (rng.next_u64() % (u32::MAX as u64 - 1000)) as u32;
+            let len = (rng.next_u64() % 1000) as u32;
+            TaskSet::Range { start, end: start + len }
+        }
+        1 => {
+            // Range ending exactly at the u32 boundary.
+            let len = (rng.next_u64() % 64) as u32;
+            TaskSet::Range { start: u32::MAX - len, end: u32::MAX }
+        }
+        _ => {
+            let len = (rng.next_u64() % 200) as usize;
+            TaskSet::List((0..len).map(|_| rng.next_u64() as u32).collect())
+        }
+    }
 }
 
 fn rand_frame(rng: &mut Rng) -> Frame {
@@ -30,15 +53,12 @@ fn rand_frame(rng: &mut Rng) -> Frame {
             },
         }),
         2 => Frame::Request { worker: rng.next_u64() as u32 },
-        3 => {
-            let len = (rng.next_u64() % 200) as usize;
-            Frame::Assign(WireAssignment {
-                id: rng.next_u64(),
-                worker: rng.next_u64() as u32,
-                rescheduled: rng.next_f64() < 0.5,
-                tasks: (0..len).map(|_| rng.next_u64() as u32).collect(),
-            })
-        }
+        3 => Frame::Assign(WireAssignment {
+            id: rng.next_u64(),
+            worker: rng.next_u64() as u32,
+            rescheduled: rng.next_f64() < 0.5,
+            tasks: rand_task_set(rng),
+        }),
         4 => Frame::Wait,
         5 => {
             let len = (rng.next_u64() % 200) as usize;
@@ -51,6 +71,49 @@ fn rand_frame(rng: &mut Rng) -> Frame {
         }
         _ => Frame::Terminate,
     }
+}
+
+#[test]
+fn task_set_boundary_cases_roundtrip() {
+    let assign = |tasks: TaskSet| {
+        Frame::Assign(WireAssignment { id: u64::MAX, worker: u32::MAX, rescheduled: true, tasks })
+    };
+    let cases = [
+        TaskSet::Range { start: 0, end: 0 },
+        TaskSet::Range { start: u32::MAX, end: u32::MAX },
+        TaskSet::Range { start: 0, end: u32::MAX },
+        TaskSet::Range { start: u32::MAX - 1, end: u32::MAX },
+        TaskSet::List(Vec::new()),
+        TaskSet::List(vec![0]),
+        TaskSet::List(vec![0, u32::MAX]),
+        TaskSet::List(vec![u32::MAX - 2, u32::MAX - 1, u32::MAX]),
+    ];
+    for tasks in cases {
+        let frame = assign(tasks);
+        let back = Frame::decode(&frame.encode()).unwrap();
+        assert_eq!(back, frame);
+    }
+}
+
+#[test]
+fn range_assign_payload_size_is_independent_of_length() {
+    let encode_len = |start: u32, end: u32| {
+        Frame::Assign(WireAssignment {
+            id: 9,
+            worker: 1,
+            rescheduled: false,
+            tasks: TaskSet::Range { start, end },
+        })
+        .encode()
+        .len()
+    };
+    let sizes = [
+        encode_len(0, 0),
+        encode_len(0, 1),
+        encode_len(0, 262_144),
+        encode_len(u32::MAX - 1, u32::MAX),
+    ];
+    assert!(sizes.iter().all(|&s| s == sizes[0]), "{sizes:?}");
 }
 
 #[test]
