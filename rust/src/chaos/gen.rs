@@ -1,0 +1,208 @@
+//! [`ScheduleGen`]: the seeded scenario-space generator.
+//!
+//! Draws random workloads × DLS techniques × fault schedules from the
+//! in-tree PRNG only — no wall clock, no global state — so a campaign is a
+//! pure function of its seed: `rdlb chaos --seed 1 --budget quick` twice
+//! produces byte-identical reports.
+
+use crate::dls::Technique;
+use crate::util::Rng;
+
+use super::{BugHook, ChaosApp, ChaosScenario, WireChaos};
+
+/// How many scenarios a campaign draws.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosBudget {
+    pub scenarios: usize,
+}
+
+impl ChaosBudget {
+    /// `quick` (PR gate: ≥200 scenarios in well under a minute of compute),
+    /// `deep` (nightly), or an explicit scenario count.
+    pub fn parse(s: &str) -> Option<ChaosBudget> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "quick" => Some(ChaosBudget { scenarios: 224 }),
+            "deep" => Some(ChaosBudget { scenarios: 1200 }),
+            other => other.parse::<usize>().ok().filter(|&n| n > 0).map(|scenarios| {
+                ChaosBudget { scenarios }
+            }),
+        }
+    }
+}
+
+/// Techniques the generator draws from: the non-adaptive family plus two
+/// adaptive ones and the seeded RAND (all deterministic given the
+/// scenario seed; adaptive timing feedback only affects chunk *shapes*,
+/// which the invariants are independent of).
+const TECHNIQUES: [Technique; 8] = [
+    Technique::Ss,
+    Technique::Gss,
+    Technique::Tss,
+    Technique::Fac,
+    Technique::Wf,
+    Technique::Rand,
+    Technique::AwfB,
+    Technique::AwfC,
+];
+
+/// Seeded scenario generator.  Construct once per campaign; every call to
+/// [`ScheduleGen::next_scenario`] draws one schedule.
+pub struct ScheduleGen {
+    rng: Rng,
+    next_id: u64,
+    /// Armed deliberate bug applied to every drawn scenario (oracle
+    /// self-tests only; forces net-only execution).
+    pub bug: Option<BugHook>,
+}
+
+impl ScheduleGen {
+    pub fn new(campaign_seed: u64) -> ScheduleGen {
+        ScheduleGen { rng: Rng::new(campaign_seed ^ 0xC4A0_55ED), next_id: 0, bug: None }
+    }
+
+    /// Draw the next schedule in the campaign's deterministic sequence.
+    pub fn next_scenario(&mut self) -> ChaosScenario {
+        let id = self.next_id;
+        self.next_id += 1;
+        let rng = &mut self.rng;
+
+        let p = rng.gen_range(2, 6) as usize;
+        let (app, n, mean_cost) = if rng.next_f64() < 0.15 {
+            // Real kernel: distinct per-task digests catch misattribution.
+            let side = [8usize, 12, 16][rng.gen_range(0, 2) as usize];
+            (ChaosApp::Mandelbrot { side, max_iter: 32 }, side * side, 1e-4)
+        } else {
+            let n = rng.gen_range(24, 320) as usize;
+            // Log-uniform cost in [2e-5, 2.5e-4] s/task keeps a whole quick
+            // campaign's sleeping in the tens of seconds.
+            let cost = 2e-5 * 12.5f64.powf(rng.next_f64());
+            (ChaosApp::Synthetic, n, cost)
+        };
+        let technique = TECHNIQUES[rng.gen_range(0, TECHNIQUES.len() as u64 - 1) as usize];
+        let rdlb = rng.next_f64() < 0.85;
+
+        // 48-bit scenario seeds: exactly representable as a JSON f64, so a
+        // serialized reproducer replays with the identical seed.
+        let scenario_seed = rng.next_u64() & 0xFFFF_FFFF_FFFF;
+        let mut sc = ChaosScenario::baseline(id, scenario_seed, n, p, technique, rdlb, mean_cost);
+        sc.app = app;
+        sc.bug = self.bug;
+        let horizon = sc.est_makespan();
+
+        // Worker 0 stays pristine; everyone else draws independent faults.
+        for w in 1..p {
+            if rng.next_f64() < 0.06 {
+                // A churning peer: registers with a stale protocol version,
+                // is refused, leaves. Costs a slot, never gets work.
+                sc.faults[w].stale_version = true;
+                continue;
+            }
+            if rng.next_f64() < 0.35 {
+                // Anywhere in the run, so deadlines routinely land
+                // mid-chunk (the in-flight chunk evaporates).
+                sc.faults[w].fail_after = Some(horizon * rng.uniform(0.05, 0.95));
+            }
+            if rng.next_f64() < 0.18 {
+                sc.faults[w].slowdown = rng.uniform(1.2, 3.0);
+            }
+            if rng.next_f64() < 0.18 {
+                sc.faults[w].latency = rng.uniform(2e-4, 2.5e-3);
+            }
+            if rdlb && rng.next_f64() < 0.15 {
+                sc.faults[w].join_after = horizon * rng.uniform(0.1, 0.6);
+            }
+        }
+
+        // Wire chaos only under rDLB: a dropped Result without re-dispatch
+        // is unrecoverable by design, which would just duplicate the
+        // documented-hang case at wall-clock cost.
+        if rdlb && rng.next_f64() < 0.30 {
+            sc.wire = WireChaos {
+                drop_prob: rng.uniform(0.02, 0.12),
+                dup_prob: rng.uniform(0.0, 0.10),
+                delay_prob: rng.uniform(0.0, 0.15),
+                delay_ms: rng.uniform(0.1, 2.0),
+            };
+        }
+
+        // Hang bound: generous where completion is expected (never hit on a
+        // healthy run, and small enough that shrinking a hang-class failure
+        // stays within CI budgets), tight where a hang is the *documented*
+        // outcome so the campaign doesn't crawl.
+        sc.timeout_ms = if rdlb || sc.failures() == 0 {
+            10_000
+        } else {
+            ((horizon * 20_000.0) as u64).clamp(400, 1500)
+        };
+
+        debug_assert!(sc.validate().is_ok(), "generator drew an invalid scenario");
+        sc
+    }
+
+    /// Draw `count` schedules.
+    pub fn take(&mut self, count: usize) -> Vec<ChaosScenario> {
+        (0..count).map(|_| self.next_scenario()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RuntimeKind;
+
+    #[test]
+    fn budgets_parse() {
+        assert_eq!(ChaosBudget::parse("quick").unwrap().scenarios, 224);
+        assert!(ChaosBudget::parse("quick").unwrap().scenarios >= 200);
+        assert_eq!(ChaosBudget::parse("deep").unwrap().scenarios, 1200);
+        assert_eq!(ChaosBudget::parse("37").unwrap().scenarios, 37);
+        assert!(ChaosBudget::parse("0").is_none());
+        assert!(ChaosBudget::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let a = ScheduleGen::new(42).take(64);
+        let b = ScheduleGen::new(42).take(64);
+        assert_eq!(a, b);
+        let c = ScheduleGen::new(43).take(64);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn drawn_scenarios_are_valid_and_diverse() {
+        let scenarios = ScheduleGen::new(1).take(256);
+        let mut saw_failures = false;
+        let mut saw_no_rdlb = false;
+        let mut saw_wire = false;
+        let mut saw_stale = false;
+        let mut saw_join = false;
+        let mut saw_mandel = false;
+        let mut saw_sim = false;
+        for sc in &scenarios {
+            sc.validate().unwrap();
+            assert!(sc.failures() < sc.p);
+            saw_failures |= sc.failures() > 0;
+            saw_no_rdlb |= !sc.rdlb;
+            saw_wire |= !sc.wire.is_quiet();
+            saw_stale |= sc.stale_workers() > 0;
+            saw_join |= sc.faults.iter().any(|f| f.join_after > 0.0);
+            saw_mandel |= matches!(sc.app, ChaosApp::Mandelbrot { .. });
+            saw_sim |= sc.runtimes().contains(&RuntimeKind::Sim);
+        }
+        assert!(
+            saw_failures && saw_no_rdlb && saw_wire && saw_stale && saw_join && saw_mandel,
+            "256 draws must cover the whole fault surface"
+        );
+        assert!(saw_sim, "some scenarios must be simulator-expressible");
+    }
+
+    #[test]
+    fn armed_bug_propagates_and_forces_net_only() {
+        let mut g = ScheduleGen::new(5);
+        g.bug = Some(BugHook::DropOneRedispatch);
+        let sc = g.next_scenario();
+        assert_eq!(sc.bug, Some(BugHook::DropOneRedispatch));
+        assert_eq!(sc.runtimes(), vec![RuntimeKind::Net]);
+    }
+}

@@ -1,0 +1,249 @@
+//! The invariant oracle: what must hold after *every* chaos run.
+//!
+//! | invariant | statement |
+//! |---|---|
+//! | `completion` | with rDLB on, every run completes despite ≤ P−1 failures, perturbations, churn and frame chaos; with rDLB off a run either completes or hangs at the timeout with work demonstrably missing (the paper's documented "waits indefinitely" case) |
+//! | `exactly-once` | a completed wall-clock run's result digest equals the serial kernel's bit-for-bit, and exactly N first completions were recorded — no lost and no double-counted iteration, even with rDLB duplicates and duplicated frames |
+//! | `stats-identities` | the [`MasterStats`](crate::coordinator::MasterStats) conservation identities hold (assigned = completed + lost, executed ≤ assigned, …) |
+//! | `refused-accounting` | stale-version churners are counted in `refused_workers`, are never scheduled, and a worker reports `failed` only if a fail-stop was injected (net runtime) |
+//! | `cross-runtime` | all applicable runtimes agree: same completion verdict under rDLB, identical digests across the wall-clock runtimes |
+
+use crate::config::RuntimeKind;
+
+use super::run::{expected_digest, RuntimeRun};
+use super::ChaosScenario;
+
+/// One violated invariant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    /// Stable invariant name (see the module table).
+    pub invariant: &'static str,
+    /// Runtime the violation was observed on (`None` = cross-runtime).
+    pub runtime: Option<RuntimeKind>,
+    pub detail: String,
+}
+
+impl Violation {
+    fn new(invariant: &'static str, runtime: Option<RuntimeKind>, detail: String) -> Violation {
+        Violation { invariant, runtime, detail }
+    }
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.runtime {
+            Some(rt) => write!(f, "[{}@{rt}] {}", self.invariant, self.detail),
+            None => write!(f, "[{}] {}", self.invariant, self.detail),
+        }
+    }
+}
+
+/// Check every invariant over a scenario's runs.  Returns the number of
+/// invariant checks evaluated (a pure function of the scenario — the
+/// deterministic `checks` counter in campaign reports) and the violations.
+pub fn check_scenario(sc: &ChaosScenario, runs: &[RuntimeRun]) -> (usize, Vec<Violation>) {
+    let mut checks = 0usize;
+    let mut violations = Vec::new();
+    let expect = expected_digest(sc);
+
+    for run in runs {
+        let rt = run.runtime;
+        let o = &run.outcome;
+
+        // -- completion ---------------------------------------------------
+        checks += 1;
+        if sc.rdlb {
+            if !o.completed() {
+                violations.push(Violation::new(
+                    "completion",
+                    Some(rt),
+                    format!(
+                        "rDLB must absorb ≤P-1 failures, got hung={} finished={}/{}",
+                        o.hung, o.finished, o.n
+                    ),
+                ));
+            }
+        } else {
+            let can_lose_work = sc.failures() > 0 || sc.wire.drop_prob > 0.0;
+            if !o.completed() && !o.hung {
+                violations.push(Violation::new(
+                    "completion",
+                    Some(rt),
+                    "run neither completed nor hung".to_string(),
+                ));
+            } else if o.hung && !can_lose_work {
+                violations.push(Violation::new(
+                    "completion",
+                    Some(rt),
+                    "hung with nothing able to lose work".to_string(),
+                ));
+            } else if o.hung && o.finished >= o.n {
+                violations.push(Violation::new(
+                    "completion",
+                    Some(rt),
+                    format!("hung yet all {} iterations finished", o.n),
+                ));
+            }
+        }
+
+        // -- exactly-once -------------------------------------------------
+        checks += 1;
+        if o.completed() {
+            if o.finished != sc.n || o.stats.finished_iterations != sc.n as u64 {
+                violations.push(Violation::new(
+                    "exactly-once",
+                    Some(rt),
+                    format!(
+                        "completed with finished={} first-completions={} (N={})",
+                        o.finished, o.stats.finished_iterations, sc.n
+                    ),
+                ));
+            } else if rt != RuntimeKind::Sim && o.result_digest != expect {
+                violations.push(Violation::new(
+                    "exactly-once",
+                    Some(rt),
+                    format!(
+                        "digest {} != serial kernel digest {expect} \
+                         (lost or double-counted iterations)",
+                        o.result_digest
+                    ),
+                ));
+            }
+        } else if o.stats.finished_iterations > sc.n as u64 {
+            violations.push(Violation::new(
+                "exactly-once",
+                Some(rt),
+                format!("{} first completions for N={}", o.stats.finished_iterations, sc.n),
+            ));
+        }
+
+        // -- stats-identities ---------------------------------------------
+        checks += 1;
+        for msg in o.stats.identity_violations() {
+            violations.push(Violation::new("stats-identities", Some(rt), msg));
+        }
+
+        // -- refused-accounting (net only: reports exist) -----------------
+        if rt == RuntimeKind::Net {
+            checks += 1;
+            let stale = sc.stale_workers() as u64;
+            // One-sided on purpose: a run over a tiny workload can complete
+            // before a churner's Hello is even processed (the master exits
+            // the moment the table is full), so fewer refusals than
+            // injected churners is legitimate; *more* refusals than
+            // churners means the master miscounted.
+            if o.stats.refused_workers > stale {
+                violations.push(Violation::new(
+                    "refused-accounting",
+                    Some(rt),
+                    format!("refused_workers {} > stale churners {stale}", o.stats.refused_workers),
+                ));
+            }
+            for (w, report) in run.reports.iter().enumerate() {
+                if sc.faults[w].stale_version && (report.chunks > 0 || report.iterations > 0) {
+                    violations.push(Violation::new(
+                        "refused-accounting",
+                        Some(rt),
+                        format!("refused worker {w} was scheduled: {report:?}"),
+                    ));
+                }
+                if report.failed && sc.faults[w].fail_after.is_none() {
+                    violations.push(Violation::new(
+                        "refused-accounting",
+                        Some(rt),
+                        format!("worker {w} reports an uninjected fail-stop"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // -- cross-runtime agreement ------------------------------------------
+    if runs.len() >= 2 {
+        checks += 1;
+        let digests: Vec<(RuntimeKind, f64)> = runs
+            .iter()
+            .filter(|r| r.runtime != RuntimeKind::Sim && r.outcome.completed())
+            .map(|r| (r.runtime, r.outcome.result_digest))
+            .collect();
+        if let Some(&(first_rt, first)) = digests.first() {
+            for &(rt, d) in &digests[1..] {
+                if d != first {
+                    violations.push(Violation::new(
+                        "cross-runtime",
+                        None,
+                        format!("digest disagreement: {first_rt}={first} vs {rt}={d}"),
+                    ));
+                }
+            }
+        }
+        if sc.rdlb {
+            let verdicts: Vec<bool> = runs.iter().map(|r| r.outcome.completed()).collect();
+            if verdicts.iter().any(|&c| c != verdicts[0]) {
+                violations.push(Violation::new(
+                    "cross-runtime",
+                    None,
+                    format!("completion disagreement across runtimes: {verdicts:?}"),
+                ));
+            }
+        }
+    }
+
+    (checks, violations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::execute_scenario;
+    use crate::dls::Technique;
+
+    #[test]
+    fn clean_scenario_passes_every_invariant() {
+        let sc = ChaosScenario::baseline(0, 3, 100, 3, Technique::Fac, true, 5e-5);
+        let runs = execute_scenario(&sc).unwrap();
+        let (checks, violations) = check_scenario(&sc, &runs);
+        assert!(violations.is_empty(), "{violations:?}");
+        // 3 runtimes × 3 + net accounting + cross-runtime.
+        assert_eq!(checks, 3 * 3 + 1 + 1);
+    }
+
+    #[test]
+    fn check_count_is_a_pure_function_of_the_scenario() {
+        let sc = ChaosScenario::baseline(1, 9, 60, 2, Technique::Ss, true, 5e-5);
+        let a = check_scenario(&sc, &execute_scenario(&sc).unwrap()).0;
+        let b = check_scenario(&sc, &execute_scenario(&sc).unwrap()).0;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn doctored_digest_is_flagged() {
+        let sc = ChaosScenario::baseline(2, 5, 40, 2, Technique::Fac, true, 5e-5);
+        let mut runs = execute_scenario(&sc).unwrap();
+        let (_c, ok) = check_scenario(&sc, &runs);
+        assert!(ok.is_empty(), "{ok:?}");
+        // Corrupt the net run's digest: the exactly-once and cross-runtime
+        // invariants must both fire.
+        let last = runs.len() - 1;
+        runs[last].outcome.result_digest += 1.0;
+        let (_c, violations) = check_scenario(&sc, &runs);
+        assert!(violations.iter().any(|v| v.invariant == "exactly-once"), "{violations:?}");
+        assert!(violations.iter().any(|v| v.invariant == "cross-runtime"), "{violations:?}");
+    }
+
+    #[test]
+    fn documented_hang_without_rdlb_is_accepted() {
+        let mut sc = ChaosScenario::baseline(3, 7, 150, 3, Technique::Fac, false, 2e-4);
+        sc.faults[1].fail_after = Some(sc.est_makespan() * 0.2);
+        sc.faults[2].fail_after = Some(sc.est_makespan() * 0.3);
+        sc.timeout_ms = 600;
+        let runs = execute_scenario(&sc).unwrap();
+        let (_checks, violations) = check_scenario(&sc, &runs);
+        assert!(violations.is_empty(), "{violations:?}");
+        // The hang itself is the documented outcome, not a violation.
+        assert!(
+            runs.iter().any(|r| r.outcome.hung),
+            "early double failure without rDLB should hang at the bound"
+        );
+    }
+}

@@ -1,0 +1,387 @@
+//! Seeded chaos harness: scenario-space fuzzing of the three runtimes
+//! against an invariant oracle, with automatic shrinking of failing
+//! schedules to minimal JSON reproducers.
+//!
+//! The paper's headline claim — rDLB tolerates up to P−1 fail-stop
+//! failures with **no** failure detection — is only trustworthy when it
+//! holds across a *space* of perturbation schedules, not a handful of
+//! hand-written scenarios (cf. SimAS, Mohammed & Ciorba 2021).  This
+//! module turns the repo's three runtimes (discrete-event simulator,
+//! in-process native threads, distributed net loopback) into mutual
+//! differential oracles:
+//!
+//! * [`gen`] — [`ScheduleGen`]: a seeded generator (no wall-clock, no
+//!   global state) drawing random workloads × DLS techniques × fault
+//!   schedules: fail-stop up to P−1 workers (including mid-chunk),
+//!   slowdown/latency perturbations, late-joining and stale-version
+//!   churning workers, and — net only — frame drop/duplicate/delay via
+//!   [`crate::net::FaultInjectingTransport`];
+//! * [`run`] — executes a drawn [`ChaosScenario`] on every applicable
+//!   runtime, producing ordinary [`crate::sim::Outcome`]s;
+//! * [`invariants`] — the oracle: exactly-once task completion (digest
+//!   parity with the serial kernel), cross-runtime digest agreement,
+//!   completion despite ≤P−1 failures with rDLB on, documented
+//!   hang-at-timeout with rDLB off, and the
+//!   [`crate::coordinator::MasterStats`] accounting identities;
+//! * [`shrink`] — greedy minimization of a failing schedule (drop faults,
+//!   quiet the wire, shrink N and P, tighten fail times) to a minimal
+//!   reproducer;
+//! * [`replay`] — JSON (de)serialization of schedules; `rdlb chaos
+//!   --replay FILE` re-executes a shrunk reproducer deterministically;
+//! * [`report`] — the campaign driver behind `rdlb chaos`, with
+//!   seed-deterministic stdout so two runs of the same seed/budget are
+//!   byte-identical.
+//!
+//! The oracle is itself tested: [`BugHook::DropOneRedispatch`] arms a
+//! deliberate coordinator bug (a re-dispatched chunk prematurely marked
+//! Finished) and the harness must detect it and shrink it to a replayable
+//! minimal schedule — see `tests/chaos_harness.rs`.
+
+pub mod gen;
+pub mod invariants;
+pub mod replay;
+pub mod report;
+pub mod run;
+pub mod shrink;
+
+pub use gen::{ChaosBudget, ScheduleGen};
+pub use invariants::{check_scenario, Violation};
+pub use replay::{scenario_from_json_str, scenario_to_json_string};
+pub use report::{run_chaos, ChaosOutcome, ChaosSettings, FailureCase};
+pub use run::{execute_scenario, expected_digest, RuntimeRun};
+pub use shrink::{shrink, ShrinkResult};
+
+use crate::config::RuntimeKind;
+use crate::dls::Technique;
+
+/// Per-worker fault envelope of a chaos schedule.  Worker 0 is always
+/// pristine (the paper's surviving-master assumption; it also guarantees
+/// every chaotic run makes progress).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerFault {
+    /// Fail-stop this many seconds after start (in-flight chunk
+    /// evaporates; mid-chunk deaths arise naturally when the deadline
+    /// falls inside a chunk's compute).
+    pub fail_after: Option<f64>,
+    /// Compute dilation factor ≥ 1.0 (1.0 = nominal).
+    pub slowdown: f64,
+    /// Extra one-way latency on every message, seconds.
+    pub latency: f64,
+    /// Net only: the worker registers this many seconds late (a
+    /// late-joining PE; the master must absorb mid-run registration).
+    pub join_after: f64,
+    /// Net only: a churning peer that registers with a stale protocol
+    /// version, is refused, and leaves — it must never be scheduled.
+    pub stale_version: bool,
+}
+
+impl WorkerFault {
+    pub fn healthy() -> WorkerFault {
+        WorkerFault {
+            fail_after: None,
+            slowdown: 1.0,
+            latency: 0.0,
+            join_after: 0.0,
+            stale_version: false,
+        }
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.fail_after.is_none()
+            && self.slowdown <= 1.0
+            && self.latency <= 0.0
+            && self.join_after <= 0.0
+            && !self.stale_version
+    }
+
+    /// Any net-only behaviour (late join / stale churner)?
+    pub fn net_only(&self) -> bool {
+        self.join_after > 0.0 || self.stale_version
+    }
+}
+
+/// Wire-level chaos for the net runtime (applied through
+/// [`crate::net::FaultInjectingTransport`] on every worker but worker 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireChaos {
+    pub drop_prob: f64,
+    pub dup_prob: f64,
+    pub delay_prob: f64,
+    pub delay_ms: f64,
+}
+
+impl WireChaos {
+    pub fn quiet() -> WireChaos {
+        WireChaos { drop_prob: 0.0, dup_prob: 0.0, delay_prob: 0.0, delay_ms: 0.0 }
+    }
+
+    pub fn is_quiet(&self) -> bool {
+        self.drop_prob <= 0.0 && self.dup_prob <= 0.0 && self.delay_prob <= 0.0
+    }
+
+    /// The transport-level plan for one connection — the single place the
+    /// schedule-level spec (serializable, ms units) maps onto
+    /// [`crate::net::WireFaultPlan`] (Duration units + per-connection
+    /// seed), so a new wire-fault kind cannot silently drop out of net
+    /// runs while the JSON reproducer still records it.
+    pub fn plan(&self, seed: u64) -> crate::net::WireFaultPlan {
+        crate::net::WireFaultPlan {
+            drop_prob: self.drop_prob,
+            dup_prob: self.dup_prob,
+            delay_prob: self.delay_prob,
+            delay: std::time::Duration::from_secs_f64(self.delay_ms / 1e3),
+            seed,
+        }
+    }
+}
+
+/// Which compute kernel a scenario runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosApp {
+    /// Synthetic seeded cost model (digest = 1.0 per task, so the serial
+    /// digest is exactly N).
+    Synthetic,
+    /// Real Mandelbrot kernel on a `side × side` grid (N = side², every
+    /// task a distinct integer digest — catches swapped/misattributed
+    /// results the synthetic digest cannot).
+    Mandelbrot { side: usize, max_iter: u32 },
+}
+
+/// Deliberate coordinator bugs the harness can arm to prove its oracle
+/// detects real regressions (net runtime only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BugHook {
+    /// One rDLB re-dispatch is marked Finished at issue time; its results
+    /// are silently discarded as duplicates.
+    DropOneRedispatch,
+}
+
+/// One fully-specified chaos schedule: workload × technique × fault plan.
+/// Everything needed to re-execute it deterministically is in here (and in
+/// its JSON form — see [`replay`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosScenario {
+    /// Campaign-unique id (ordinal within the generating run).
+    pub id: u64,
+    /// Seed for the workload's cost draw and the technique PRNG streams.
+    pub seed: u64,
+    /// Loop iterations N.
+    pub n: usize,
+    /// Worker count P.
+    pub p: usize,
+    pub technique: Technique,
+    pub rdlb: bool,
+    /// Mean per-task cost, wall seconds (synthetic kernel).
+    pub mean_cost: f64,
+    pub app: ChaosApp,
+    /// Per-worker envelopes; `faults.len() == p`, worker 0 pristine.
+    pub faults: Vec<WorkerFault>,
+    /// Net-only frame chaos.
+    pub wire: WireChaos,
+    /// Wall-clock hang bound for the wall-clock runtimes, milliseconds.
+    pub timeout_ms: u64,
+    /// Armed deliberate bug (oracle self-test only).
+    pub bug: Option<BugHook>,
+}
+
+impl ChaosScenario {
+    /// A clean baseline schedule; generators and tests then perturb it.
+    pub fn baseline(
+        id: u64,
+        seed: u64,
+        n: usize,
+        p: usize,
+        technique: Technique,
+        rdlb: bool,
+        mean_cost: f64,
+    ) -> ChaosScenario {
+        assert!(n > 0 && p > 0, "empty scenario");
+        ChaosScenario {
+            id,
+            seed,
+            n,
+            p,
+            technique,
+            rdlb,
+            mean_cost,
+            app: ChaosApp::Synthetic,
+            faults: vec![WorkerFault::healthy(); p],
+            wire: WireChaos::quiet(),
+            timeout_ms: 20_000,
+            bug: None,
+        }
+    }
+
+    /// Number of injected fail-stop failures (< P by construction: worker 0
+    /// never fails).
+    pub fn failures(&self) -> usize {
+        self.faults.iter().filter(|f| f.fail_after.is_some()).count()
+    }
+
+    /// Number of stale-version churners.
+    pub fn stale_workers(&self) -> usize {
+        self.faults.iter().filter(|f| f.stale_version).count()
+    }
+
+    /// Any slowdown/latency perturbation?
+    pub fn has_perturbations(&self) -> bool {
+        self.faults.iter().any(|f| f.slowdown > 1.0 || f.latency > 0.0)
+    }
+
+    /// Any behaviour only the net runtime can express (late joins, stale
+    /// churners, wire chaos, the net-plumbed bug hook)?
+    pub fn net_only(&self) -> bool {
+        self.bug.is_some() || !self.wire.is_quiet() || self.faults.iter().any(WorkerFault::net_only)
+    }
+
+    /// Expected failure-free makespan (seconds) — fault horizons and hang
+    /// bounds are sized off this.
+    pub fn est_makespan(&self) -> f64 {
+        match self.app {
+            ChaosApp::Synthetic => (self.n as f64 * self.mean_cost / self.p as f64).max(1e-4),
+            // The real kernel is microseconds of compute per task at chaos
+            // scales; a loopback run is dominated by messaging, a couple of
+            // milliseconds end to end.  Keep the estimate in that range so
+            // drawn fail-stop deadlines actually land mid-run.
+            ChaosApp::Mandelbrot { .. } => 2e-3,
+        }
+    }
+
+    /// The runtimes this schedule runs on.  The net runtime carries the
+    /// full fault surface and is always applicable; the native runtime
+    /// runs everything it can express *except* expected-hang schedules
+    /// (no-rDLB with failures), which would burn a second wall-clock
+    /// timeout for no extra signal; the simulator (virtual time, free
+    /// hangs) covers pure fail-stop/baseline schedules — per-worker
+    /// slowdown/latency draws have no sim-side encoding.
+    pub fn runtimes(&self) -> Vec<RuntimeKind> {
+        let mut kinds = Vec::with_capacity(3);
+        if !self.net_only() && !self.has_perturbations() {
+            kinds.push(RuntimeKind::Sim);
+        }
+        if !self.net_only() && (self.rdlb || self.failures() == 0) {
+            kinds.push(RuntimeKind::Native);
+        }
+        kinds.push(RuntimeKind::Net);
+        kinds
+    }
+
+    /// Deterministic one-line identity for logs and reports.
+    pub fn label(&self) -> String {
+        let app = match self.app {
+            ChaosApp::Synthetic => "synth".to_string(),
+            ChaosApp::Mandelbrot { side, .. } => format!("mandel{side}"),
+        };
+        let mut tags = String::new();
+        if self.has_perturbations() {
+            tags.push_str("+perturb");
+        }
+        if self.faults.iter().any(|f| f.join_after > 0.0) {
+            tags.push_str("+latejoin");
+        }
+        if self.stale_workers() > 0 {
+            tags.push_str("+stale");
+        }
+        if !self.wire.is_quiet() {
+            tags.push_str("+wire");
+        }
+        if self.bug.is_some() {
+            tags.push_str("+bug");
+        }
+        format!(
+            "s{}/{}/n{}/p{}/{}/{}/f{}{}",
+            self.id,
+            app,
+            self.n,
+            self.p,
+            self.technique.name(),
+            if self.rdlb { "rdlb" } else { "no-rdlb" },
+            self.failures(),
+            tags,
+        )
+    }
+
+    /// Sanity bounds the generator, shrinker, and JSON loader all enforce.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n > 0, "no tasks");
+        anyhow::ensure!(self.p > 0, "no workers");
+        anyhow::ensure!(self.faults.len() == self.p, "faults sized to P");
+        anyhow::ensure!(self.faults[0].is_healthy(), "worker 0 must be pristine");
+        anyhow::ensure!(self.failures() < self.p, "at most P-1 failures");
+        anyhow::ensure!(self.mean_cost > 0.0, "mean_cost must be positive");
+        anyhow::ensure!(self.timeout_ms > 0, "timeout must be positive");
+        anyhow::ensure!(
+            self.seed < (1u64 << 53),
+            "seed must be f64-exact so the JSON reproducer replays identically"
+        );
+        if let ChaosApp::Mandelbrot { side, max_iter } = self.app {
+            anyhow::ensure!(side * side == self.n, "mandelbrot N must equal side²");
+            anyhow::ensure!(max_iter > 0, "max_iter must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_is_valid_and_runs_everywhere() {
+        let sc = ChaosScenario::baseline(0, 1, 100, 4, Technique::Fac, true, 1e-4);
+        sc.validate().unwrap();
+        assert_eq!(
+            sc.runtimes(),
+            vec![RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net]
+        );
+        assert_eq!(sc.failures(), 0);
+        assert!(!sc.net_only());
+    }
+
+    #[test]
+    fn net_only_faults_restrict_runtimes() {
+        let mut sc = ChaosScenario::baseline(1, 1, 100, 4, Technique::Fac, true, 1e-4);
+        sc.faults[2].join_after = 0.01;
+        assert_eq!(sc.runtimes(), vec![RuntimeKind::Net]);
+        let mut sc = ChaosScenario::baseline(2, 1, 100, 4, Technique::Fac, true, 1e-4);
+        sc.wire.drop_prob = 0.1;
+        assert_eq!(sc.runtimes(), vec![RuntimeKind::Net]);
+    }
+
+    #[test]
+    fn expected_hang_schedules_skip_native() {
+        let mut sc = ChaosScenario::baseline(3, 1, 100, 4, Technique::Fac, false, 1e-4);
+        sc.faults[3].fail_after = Some(0.001);
+        assert_eq!(sc.runtimes(), vec![RuntimeKind::Sim, RuntimeKind::Net]);
+    }
+
+    #[test]
+    fn perturbations_skip_sim() {
+        let mut sc = ChaosScenario::baseline(4, 1, 100, 4, Technique::Fac, true, 1e-4);
+        sc.faults[1].slowdown = 2.0;
+        assert_eq!(sc.runtimes(), vec![RuntimeKind::Native, RuntimeKind::Net]);
+    }
+
+    #[test]
+    fn validation_rejects_broken_schedules() {
+        let mut sc = ChaosScenario::baseline(5, 1, 100, 3, Technique::Fac, true, 1e-4);
+        sc.faults[0].fail_after = Some(0.1);
+        assert!(sc.validate().is_err(), "worker 0 must stay pristine");
+        let mut sc = ChaosScenario::baseline(6, 1, 100, 3, Technique::Fac, true, 1e-4);
+        sc.faults.pop();
+        assert!(sc.validate().is_err(), "faults must be sized to P");
+        let mut sc = ChaosScenario::baseline(7, 1, 100, 3, Technique::Fac, true, 1e-4);
+        sc.app = ChaosApp::Mandelbrot { side: 7, max_iter: 8 };
+        assert!(sc.validate().is_err(), "mandelbrot N must be side²");
+    }
+
+    #[test]
+    fn labels_are_deterministic_and_tagged() {
+        let mut sc = ChaosScenario::baseline(9, 1, 64, 3, Technique::Gss, true, 1e-4);
+        sc.faults[1].fail_after = Some(0.01);
+        sc.wire.dup_prob = 0.1;
+        let l = sc.label();
+        assert_eq!(l, sc.label());
+        assert!(l.contains("f1") && l.contains("+wire") && l.contains("GSS"), "{l}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Chaos-schedule serialization: a failing (shrunk) schedule is written as
+//! a small JSON file that `rdlb chaos --replay FILE` re-executes
+//! deterministically — same workload costs, same fault envelopes, same
+//! seeded wire-fault pattern, same invariant checks.
+//!
+//! The format (`"format": "rdlb-chaos-schedule-v1"`) is the complete
+//! [`ChaosScenario`]; floats round-trip exactly (the in-tree JSON writer
+//! emits shortest-round-trip representations).
+
+use anyhow::{bail, Context, Result};
+
+use crate::dls::Technique;
+use crate::util::json::Json;
+
+use super::invariants::{check_scenario, Violation};
+use super::run::{execute_scenario, RuntimeRun};
+use super::{BugHook, ChaosApp, ChaosScenario, WireChaos, WorkerFault};
+
+const FORMAT: &str = "rdlb-chaos-schedule-v1";
+
+/// Serialize a schedule to its JSON document.
+pub fn scenario_to_json(sc: &ChaosScenario) -> Json {
+    let faults: Vec<Json> = sc
+        .faults
+        .iter()
+        .map(|f| {
+            let mut obj = vec![
+                ("slowdown", Json::num(f.slowdown)),
+                ("latency", Json::num(f.latency)),
+                ("join_after", Json::num(f.join_after)),
+                ("stale_version", Json::Bool(f.stale_version)),
+            ];
+            if let Some(t) = f.fail_after {
+                obj.push(("fail_after", Json::num(t)));
+            }
+            Json::obj(obj)
+        })
+        .collect();
+    let app = match sc.app {
+        ChaosApp::Synthetic => Json::obj(vec![("kind", Json::str("synthetic"))]),
+        ChaosApp::Mandelbrot { side, max_iter } => Json::obj(vec![
+            ("kind", Json::str("mandelbrot")),
+            ("side", Json::num(side as f64)),
+            ("max_iter", Json::num(max_iter as f64)),
+        ]),
+    };
+    let mut obj = vec![
+        ("format", Json::str(FORMAT)),
+        ("id", Json::num(sc.id as f64)),
+        ("seed", Json::num(sc.seed as f64)),
+        ("n", Json::num(sc.n as f64)),
+        ("p", Json::num(sc.p as f64)),
+        ("technique", Json::str(sc.technique.name())),
+        ("rdlb", Json::Bool(sc.rdlb)),
+        ("mean_cost", Json::num(sc.mean_cost)),
+        ("app", app),
+        ("faults", Json::Arr(faults)),
+        (
+            "wire",
+            Json::obj(vec![
+                ("drop_prob", Json::num(sc.wire.drop_prob)),
+                ("dup_prob", Json::num(sc.wire.dup_prob)),
+                ("delay_prob", Json::num(sc.wire.delay_prob)),
+                ("delay_ms", Json::num(sc.wire.delay_ms)),
+            ]),
+        ),
+        ("timeout_ms", Json::num(sc.timeout_ms as f64)),
+    ];
+    if let Some(BugHook::DropOneRedispatch) = sc.bug {
+        // Test-only deliberate bug; serialized so an oracle self-test's
+        // shrunk reproducer replays faithfully.
+        obj.push(("bug", Json::str("drop-one-redispatch")));
+    }
+    Json::obj(obj)
+}
+
+/// Serialize to pretty-printed JSON text.
+pub fn scenario_to_json_string(sc: &ChaosScenario) -> String {
+    scenario_to_json(sc).to_string_pretty()
+}
+
+/// Parse a schedule from its JSON document.
+pub fn scenario_from_json(v: &Json) -> Result<ChaosScenario> {
+    let format = v.req("format")?.as_str().context("format")?;
+    if format != FORMAT {
+        bail!("unsupported chaos schedule format {format:?} (expected {FORMAT:?})");
+    }
+    let tech_name = v.req("technique")?.as_str().context("technique")?;
+    let technique = Technique::parse(tech_name)
+        .with_context(|| format!("unknown technique {tech_name:?}"))?;
+    let app = match v.req("app")?.req("kind")?.as_str().context("app kind")? {
+        "synthetic" => ChaosApp::Synthetic,
+        "mandelbrot" => ChaosApp::Mandelbrot {
+            side: v.req("app")?.req("side")?.as_usize().context("side")?,
+            max_iter: v.req("app")?.req("max_iter")?.as_u64().context("max_iter")? as u32,
+        },
+        other => bail!("unknown chaos app kind {other:?}"),
+    };
+    let faults = v
+        .req("faults")?
+        .as_arr()
+        .context("faults must be an array")?
+        .iter()
+        .map(|f| {
+            Ok(WorkerFault {
+                fail_after: f.get("fail_after").and_then(Json::as_f64),
+                slowdown: f.req("slowdown")?.as_f64().context("slowdown")?,
+                latency: f.req("latency")?.as_f64().context("latency")?,
+                join_after: f.req("join_after")?.as_f64().context("join_after")?,
+                stale_version: f.req("stale_version")?.as_bool().context("stale_version")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let wire = v.req("wire")?;
+    let sc = ChaosScenario {
+        id: v.req("id")?.as_u64().context("id")?,
+        seed: v.req("seed")?.as_u64().context("seed")?,
+        n: v.req("n")?.as_usize().context("n")?,
+        p: v.req("p")?.as_usize().context("p")?,
+        technique,
+        rdlb: v.req("rdlb")?.as_bool().context("rdlb")?,
+        mean_cost: v.req("mean_cost")?.as_f64().context("mean_cost")?,
+        app,
+        faults,
+        wire: WireChaos {
+            drop_prob: wire.req("drop_prob")?.as_f64().context("drop_prob")?,
+            dup_prob: wire.req("dup_prob")?.as_f64().context("dup_prob")?,
+            delay_prob: wire.req("delay_prob")?.as_f64().context("delay_prob")?,
+            delay_ms: wire.req("delay_ms")?.as_f64().context("delay_ms")?,
+        },
+        timeout_ms: v.req("timeout_ms")?.as_u64().context("timeout_ms")?,
+        bug: match v.get("bug").and_then(Json::as_str) {
+            None => None,
+            Some("drop-one-redispatch") => Some(BugHook::DropOneRedispatch),
+            Some(other) => bail!("unknown bug hook {other:?}"),
+        },
+    };
+    sc.validate()?;
+    Ok(sc)
+}
+
+/// Parse a schedule from JSON text.
+pub fn scenario_from_json_str(text: &str) -> Result<ChaosScenario> {
+    scenario_from_json(&Json::parse(text).context("invalid chaos schedule JSON")?)
+}
+
+/// Re-execute a serialized schedule and re-check every invariant.
+/// Returns the runs, the number of checks, and any violations.
+pub fn replay_str(text: &str) -> Result<(ChaosScenario, Vec<RuntimeRun>, usize, Vec<Violation>)> {
+    let sc = scenario_from_json_str(text)?;
+    let runs = execute_scenario(&sc)?;
+    let (checks, violations) = check_scenario(&sc, &runs);
+    Ok((sc, runs, checks, violations))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let mut sc = ChaosScenario::baseline(7, 0xDEAD_BEEF, 144, 4, Technique::AwfB, false, 2e-4);
+        sc.app = ChaosApp::Mandelbrot { side: 12, max_iter: 32 };
+        sc.faults[1].fail_after = Some(0.012_345);
+        sc.faults[2].slowdown = 1.75;
+        sc.faults[2].latency = 0.001_5;
+        sc.faults[3].join_after = 0.01;
+        sc.wire = WireChaos { drop_prob: 0.05, dup_prob: 0.02, delay_prob: 0.1, delay_ms: 0.7 };
+        sc.timeout_ms = 750;
+        let text = scenario_to_json_string(&sc);
+        let back = scenario_from_json_str(&text).unwrap();
+        assert_eq!(back, sc);
+        // And the serialized form itself is stable.
+        assert_eq!(scenario_to_json_string(&back), text);
+    }
+
+    #[test]
+    fn bug_hook_roundtrips() {
+        let mut sc = ChaosScenario::baseline(1, 5, 60, 2, Technique::Fac, true, 1e-4);
+        sc.bug = Some(BugHook::DropOneRedispatch);
+        let back = scenario_from_json_str(&scenario_to_json_string(&sc)).unwrap();
+        assert_eq!(back.bug, Some(BugHook::DropOneRedispatch));
+    }
+
+    #[test]
+    fn rejects_unknown_format_and_invalid_schedules() {
+        assert!(scenario_from_json_str("{}").is_err());
+        let sc = ChaosScenario::baseline(1, 5, 60, 2, Technique::Fac, true, 1e-4);
+        let text = scenario_to_json_string(&sc).replace(FORMAT, "bogus-v9");
+        assert!(scenario_from_json_str(&text).is_err());
+        // A doctored schedule failing validation (worker 0 fault) is refused.
+        let mut bad = ChaosScenario::baseline(1, 5, 60, 2, Technique::Fac, true, 1e-4);
+        bad.faults[0].slowdown = 2.0;
+        assert!(scenario_from_json_str(&scenario_to_json_string(&bad)).is_err());
+    }
+
+    #[test]
+    fn replay_of_a_clean_schedule_passes() {
+        let sc = ChaosScenario::baseline(3, 21, 60, 2, Technique::Gss, true, 5e-5);
+        let (back, runs, checks, violations) =
+            replay_str(&scenario_to_json_string(&sc)).unwrap();
+        assert_eq!(back, sc);
+        assert!(!runs.is_empty());
+        assert!(checks > 0);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+}

@@ -1,0 +1,208 @@
+//! Campaign driver behind `rdlb chaos`: draw a budget of schedules, run
+//! each on every applicable runtime, check the invariant oracle, and
+//! shrink + serialize anything that fails.
+//!
+//! All stdout this module produces is a pure function of `(seed, budget)`
+//! on a passing campaign — no wall-clock times, no machine identifiers —
+//! so `rdlb chaos --seed 1 --budget quick` twice yields byte-identical
+//! output (the CI determinism gate relies on this).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::gen::{ChaosBudget, ScheduleGen};
+use super::invariants::{check_scenario, Violation};
+use super::replay::scenario_to_json_string;
+use super::run::execute_scenario;
+use super::shrink::shrink;
+use super::{BugHook, ChaosScenario};
+
+/// Campaign configuration.
+#[derive(Debug, Clone)]
+pub struct ChaosSettings {
+    pub seed: u64,
+    pub budget: ChaosBudget,
+    /// Where shrunk failing schedules are written (`None` = keep in memory
+    /// only; the CLI passes the current directory).
+    pub out_dir: Option<PathBuf>,
+    /// Candidate executions per shrink.
+    pub shrink_budget: usize,
+    /// Progress lines on stdout (deterministic content only).
+    pub verbose: bool,
+    /// Arm a deliberate coordinator bug in every drawn scenario — the
+    /// oracle self-test path (see [`BugHook`]).  Never set by the CLI.
+    pub bug: Option<BugHook>,
+}
+
+impl ChaosSettings {
+    pub fn new(seed: u64, budget: ChaosBudget) -> ChaosSettings {
+        ChaosSettings { seed, budget, out_dir: None, shrink_budget: 64, verbose: false, bug: None }
+    }
+}
+
+/// One detected failure: the raw schedule, its shrunk reproducer, and the
+/// evidence.
+#[derive(Debug, Clone)]
+pub struct FailureCase {
+    pub original: ChaosScenario,
+    pub shrunk: ChaosScenario,
+    pub violations: Vec<Violation>,
+    /// Where the reproducer JSON was written, if an out dir was set.
+    pub path: Option<PathBuf>,
+}
+
+/// Aggregate campaign result.
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    pub seed: u64,
+    pub scenarios: usize,
+    /// Runtime executions (each scenario runs on 1–3 runtimes).
+    pub runs: usize,
+    /// Invariant checks evaluated (deterministic given seed + budget).
+    pub checks: usize,
+    pub failures: Vec<FailureCase>,
+}
+
+impl ChaosOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// The deterministic one-line campaign summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "chaos: seed={} scenarios={} runs={} checks={} failures={}",
+            self.seed,
+            self.scenarios,
+            self.runs,
+            self.checks,
+            self.failures.len()
+        )
+    }
+}
+
+/// Run a full campaign.
+pub fn run_chaos(settings: &ChaosSettings) -> Result<ChaosOutcome> {
+    let mut gen = ScheduleGen::new(settings.seed);
+    gen.bug = settings.bug;
+    let mut outcome = ChaosOutcome {
+        seed: settings.seed,
+        scenarios: 0,
+        runs: 0,
+        checks: 0,
+        failures: Vec::new(),
+    };
+    let total = settings.budget.scenarios;
+    for i in 0..total {
+        let sc = gen.next_scenario();
+        // An execution error (worker panic, runtime construction failure)
+        // is itself a finding — record it as a failing schedule and keep
+        // the campaign going, exactly as the shrinker treats it, instead
+        // of aborting with no reproducer for the panic-class regressions
+        // the fuzzer exists to catch.
+        let (runs, checks, violations) = match execute_scenario(&sc) {
+            Ok(runs) => {
+                let (checks, violations) = check_scenario(&sc, &runs);
+                (runs, checks, violations)
+            }
+            Err(e) => (
+                Vec::new(),
+                0,
+                vec![Violation {
+                    invariant: "harness",
+                    runtime: None,
+                    detail: format!("execution error: {e:#}"),
+                }],
+            ),
+        };
+        outcome.runs += runs.len();
+        outcome.checks += checks;
+        outcome.scenarios += 1;
+        if !violations.is_empty() {
+            if settings.verbose {
+                println!(
+                    "chaos: FAIL {} — {} violation(s); shrinking",
+                    sc.label(),
+                    violations.len()
+                );
+                for v in &violations {
+                    println!("chaos:   {v}");
+                }
+            }
+            let shrunk = shrink(&sc, settings.shrink_budget);
+            // Shrinking re-runs the schedule; on a timing-marginal failure
+            // the confirmation run may pass — keep the original evidence.
+            let evidence =
+                if shrunk.violations.is_empty() { violations } else { shrunk.violations };
+            let path = match &settings.out_dir {
+                Some(dir) => {
+                    std::fs::create_dir_all(dir)
+                        .with_context(|| format!("create {}", dir.display()))?;
+                    let p = dir.join(format!("chaos_failure_{}.json", sc.id));
+                    std::fs::write(&p, scenario_to_json_string(&shrunk.scenario))
+                        .with_context(|| format!("write {}", p.display()))?;
+                    if settings.verbose {
+                        println!("chaos: shrunk reproducer -> {}", p.display());
+                    }
+                    Some(p)
+                }
+                None => None,
+            };
+            outcome.failures.push(FailureCase {
+                original: sc,
+                shrunk: shrunk.scenario,
+                violations: evidence,
+                path,
+            });
+        }
+        if settings.verbose && (i + 1) % 32 == 0 {
+            println!(
+                "chaos: {}/{} scenarios, {} runs, {} checks, {} failures",
+                i + 1,
+                total,
+                outcome.runs,
+                outcome.checks,
+                outcome.failures.len()
+            );
+        }
+    }
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(seed: u64, scenarios: usize) -> ChaosSettings {
+        ChaosSettings::new(seed, ChaosBudget { scenarios })
+    }
+
+    #[test]
+    fn small_campaign_passes_and_is_deterministic() {
+        let a = run_chaos(&quiet(5, 12)).unwrap();
+        let b = run_chaos(&quiet(5, 12)).unwrap();
+        assert!(a.passed(), "{:?}", a.failures);
+        assert_eq!(a.scenarios, 12);
+        assert!(a.runs >= 12, "every scenario runs at least on the net runtime");
+        assert_eq!((a.scenarios, a.runs, a.checks), (b.scenarios, b.runs, b.checks));
+        assert_eq!(a.summary(), b.summary());
+    }
+
+    #[test]
+    fn campaign_with_armed_bug_detects_and_shrinks() {
+        let mut settings = quiet(2, 16);
+        settings.bug = Some(super::super::BugHook::DropOneRedispatch);
+        settings.shrink_budget = 24;
+        let outcome = run_chaos(&settings).unwrap();
+        assert!(
+            !outcome.failures.is_empty(),
+            "16 bug-armed scenarios must trip the oracle at least once"
+        );
+        let case = &outcome.failures[0];
+        assert!(!case.violations.is_empty());
+        assert!(case.shrunk.validate().is_ok());
+        assert!(case.shrunk.n <= case.original.n);
+        assert!(case.path.is_none(), "no out_dir, nothing written");
+    }
+}

@@ -1,0 +1,258 @@
+//! Execute a [`ChaosScenario`] on each applicable runtime.
+//!
+//! The net runtime gets the full fault surface: per-worker fail-stop /
+//! slowdown / latency envelopes (in-band [`FaultSpec`]s), late-joining
+//! workers (the worker thread registers after a delay), stale-version
+//! churners (refused at the handshake), and frame drop/duplicate/delay via
+//! [`FaultInjectingTransport`] on every worker but the pristine worker 0.
+//! The native runtime covers the envelope subset; the simulator covers
+//! pure fail-stop/baseline schedules in virtual time.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::apps::{AppKind, CostModel, MandelbrotApp};
+use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
+use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
+use crate::net::{
+    run_worker, FaultInjectingTransport, FaultSpec, Frame, LoopbackTransport, NetMaster,
+    NetMasterParams, Transport, WorkerHello, WorkerReport, PROTOCOL_VERSION,
+};
+use crate::sim::{Outcome, SimCluster};
+use crate::util::Rng;
+
+use super::{BugHook, ChaosApp, ChaosScenario};
+
+/// One runtime's execution of a scenario.
+#[derive(Debug, Clone)]
+pub struct RuntimeRun {
+    pub runtime: RuntimeKind,
+    pub outcome: Outcome,
+    /// Per-worker reports (net runtime only; empty elsewhere).
+    pub reports: Vec<WorkerReport>,
+}
+
+/// The scenario's compute backend for the wall-clock runtimes.
+pub fn backend(sc: &ChaosScenario) -> ComputeBackend {
+    match sc.app {
+        ChaosApp::Synthetic => ComputeBackend::Synthetic {
+            model: Arc::new(cost_model(sc)),
+            scale: 1.0,
+        },
+        ChaosApp::Mandelbrot { side, max_iter } => ComputeBackend::Mandelbrot(Arc::new(
+            MandelbrotApp { width: side, height: side, max_iter, ..Default::default() },
+        )),
+    }
+}
+
+/// Seeded per-task costs (synthetic kernel): uniform in
+/// `[0.5, 1.5] × mean_cost`, a pure function of the scenario seed.
+fn cost_model(sc: &ChaosScenario) -> CostModel {
+    let mut rng = Rng::new(sc.seed ^ 0xC057);
+    CostModel::from_costs(
+        (0..sc.n).map(|_| rng.uniform(0.5 * sc.mean_cost, 1.5 * sc.mean_cost)).collect(),
+    )
+}
+
+/// The serial kernel's digest — the exactly-once oracle every completed
+/// wall-clock run must reproduce bit-for-bit.  The synthetic kernel
+/// digests 1.0 per task (sum = N); the Mandelbrot kernel digests the
+/// per-task escape count (integer-valued, so sums are exact and every
+/// task's contribution is distinct).
+pub fn expected_digest(sc: &ChaosScenario) -> f64 {
+    match sc.app {
+        ChaosApp::Synthetic => sc.n as f64,
+        ChaosApp::Mandelbrot { side, max_iter } => {
+            let app =
+                MandelbrotApp { width: side, height: side, max_iter, ..Default::default() };
+            app.compute_range(0, sc.n as u32).iter().map(|&c| c as f64).sum()
+        }
+    }
+}
+
+/// Run the scenario on every applicable runtime (see
+/// [`ChaosScenario::runtimes`]), in deterministic order.
+pub fn execute_scenario(sc: &ChaosScenario) -> Result<Vec<RuntimeRun>> {
+    sc.validate()?;
+    sc.runtimes().into_iter().map(|kind| execute_on(sc, kind)).collect()
+}
+
+/// Run the scenario on one runtime.
+pub fn execute_on(sc: &ChaosScenario, kind: RuntimeKind) -> Result<RuntimeRun> {
+    let outcome = match kind {
+        RuntimeKind::Sim => {
+            return Ok(RuntimeRun {
+                runtime: kind,
+                outcome: run_sim(sc).with_context(|| format!("sim run of {}", sc.label()))?,
+                reports: Vec::new(),
+            })
+        }
+        RuntimeKind::Native => {
+            run_native(sc).with_context(|| format!("native run of {}", sc.label()))?
+        }
+        RuntimeKind::Net => {
+            return run_net(sc).with_context(|| format!("net run of {}", sc.label()))
+        }
+    };
+    Ok(RuntimeRun { runtime: kind, outcome, reports: Vec::new() })
+}
+
+fn run_sim(sc: &ChaosScenario) -> Result<Outcome> {
+    let app = match sc.app {
+        ChaosApp::Synthetic => AppKind::Uniform,
+        ChaosApp::Mandelbrot { .. } => AppKind::Mandelbrot,
+    };
+    let scenario = match sc.failures() {
+        0 => Scenario::Baseline,
+        k => Scenario::failures(k),
+    };
+    let cfg = ExperimentConfig::builder()
+        .app(app)
+        .tasks(sc.n)
+        .topology(1, sc.p)
+        .technique(sc.technique)
+        .rdlb(sc.rdlb)
+        .scenario(scenario)
+        .mean_cost(sc.mean_cost)
+        .seed(sc.seed)
+        .build()?;
+    SimCluster::new(cfg.sim_params(0)?)?.run()
+}
+
+fn run_native(sc: &ChaosScenario) -> Result<Outcome> {
+    let mut params =
+        NativeParams::new(sc.n, sc.p, sc.technique, sc.rdlb, backend(sc));
+    params.tech_params.seed = sc.seed ^ 0x4A4D;
+    params.timeout = Duration::from_millis(sc.timeout_ms);
+    for (w, fault) in sc.faults.iter().enumerate() {
+        params.failures[w] = fault.fail_after;
+        params.slowdown[w] = fault.slowdown;
+        params.latency[w] = fault.latency;
+    }
+    NativeRuntime::new(params)?.run()
+}
+
+/// The full-surface net execution: one loopback connection per worker,
+/// each worker on its own thread.
+fn run_net(sc: &ChaosScenario) -> Result<RuntimeRun> {
+    let p = sc.p;
+    let backend = backend(sc);
+    let mut params = NetMasterParams::new(sc.n, p, sc.technique, sc.rdlb);
+    params.tech_params.seed = sc.seed ^ 0x4A4D;
+    params.timeout = Duration::from_millis(sc.timeout_ms);
+    params.test_drop_one_redispatch = matches!(sc.bug, Some(BugHook::DropOneRedispatch));
+    for (w, fault) in sc.faults.iter().enumerate() {
+        params.faults[w] = FaultSpec {
+            fail_after: fault.fail_after,
+            slowdown: fault.slowdown,
+            latency: fault.latency,
+        };
+    }
+
+    let mut connections: Vec<Box<dyn Transport>> = Vec::with_capacity(p);
+    let mut joins = Vec::with_capacity(p);
+    for w in 0..p {
+        let (master_end, worker_end) = LoopbackTransport::pair();
+        connections.push(Box::new(master_end));
+        let fault = sc.faults[w].clone();
+        let wire = sc.wire.clone();
+        let b = backend.clone();
+        let seed = sc.seed;
+        joins.push(std::thread::spawn(move || -> Result<WorkerReport> {
+            if fault.join_after > 0.0 {
+                // Late joiner: the master must absorb mid-run registration.
+                std::thread::sleep(Duration::from_secs_f64(fault.join_after));
+            }
+            // Worker 0 is never wrapped: one pristine worker guarantees
+            // progress, so rDLB completion stays a theorem, not a race.
+            let transport: Box<dyn Transport> = if w > 0 && !wire.is_quiet() {
+                Box::new(FaultInjectingTransport::new(
+                    Box::new(worker_end),
+                    wire.plan(seed ^ (w as u64).wrapping_mul(0x9E37_79B9)),
+                ))
+            } else {
+                Box::new(worker_end)
+            };
+            if fault.stale_version {
+                // Churning peer: wrong protocol version, expects Terminate.
+                let (mut tx, mut rx) = transport.split()?;
+                tx.send(&Frame::Hello(WorkerHello {
+                    version: PROTOCOL_VERSION.wrapping_sub(1),
+                    backend: "chaos-stale".into(),
+                }))?;
+                let _ = rx.recv(); // Terminate (or shutdown close)
+                return Ok(WorkerReport { worker: w as u32, ..WorkerReport::default() });
+            }
+            run_worker(transport, b, "chaos")
+        }));
+    }
+
+    let outcome = NetMaster::new(params)?.run(connections)?;
+    let mut reports = Vec::with_capacity(p);
+    for (w, join) in joins.into_iter().enumerate() {
+        match join.join() {
+            Ok(Ok(report)) => reports.push(report),
+            Ok(Err(_)) => {
+                // A worker that errored out (e.g. a late joiner whose
+                // registration raced the end of the run) is, to the master,
+                // indistinguishable from a fail-stop; record an empty
+                // report — the invariants judge the outcome, not the error.
+                reports.push(WorkerReport { worker: w as u32, ..WorkerReport::default() });
+            }
+            Err(_) => anyhow::bail!("chaos net worker {w} panicked"),
+        }
+    }
+    Ok(RuntimeRun { runtime: RuntimeKind::Net, outcome, reports })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dls::Technique;
+
+    #[test]
+    fn baseline_runs_on_all_three_runtimes() {
+        let sc = ChaosScenario::baseline(0, 7, 120, 3, Technique::Fac, true, 5e-5);
+        let runs = execute_scenario(&sc).unwrap();
+        assert_eq!(runs.len(), 3);
+        for run in &runs {
+            assert!(run.outcome.completed(), "{:?}: {:?}", run.runtime, run.outcome);
+            assert_eq!(run.outcome.finished, 120);
+        }
+        // Wall-clock digests hit the serial kernel's value exactly.
+        for run in runs.iter().filter(|r| r.runtime != RuntimeKind::Sim) {
+            assert_eq!(run.outcome.result_digest, expected_digest(&sc));
+        }
+    }
+
+    #[test]
+    fn stale_churner_is_refused_and_never_scheduled() {
+        // Workload sized so the run comfortably outlives the churner's
+        // registration (a sub-ms run could complete before its Hello).
+        let mut sc = ChaosScenario::baseline(1, 11, 80, 3, Technique::Fac, true, 5e-4);
+        sc.faults[2].stale_version = true;
+        let runs = execute_scenario(&sc).unwrap();
+        assert_eq!(runs.len(), 1, "stale churners are net-only");
+        let net = &runs[0];
+        assert!(net.outcome.completed(), "{:?}", net.outcome);
+        assert_eq!(net.outcome.stats.refused_workers, 1);
+        assert_eq!(net.reports[2].chunks, 0, "refused peer must never be scheduled");
+        assert_eq!(net.outcome.result_digest, expected_digest(&sc));
+    }
+
+    #[test]
+    fn mandelbrot_scenario_digest_matches_serial_kernel() {
+        let mut sc = ChaosScenario::baseline(2, 13, 64, 3, Technique::Gss, true, 1e-4);
+        sc.app = ChaosApp::Mandelbrot { side: 8, max_iter: 32 };
+        sc.faults[1].fail_after = Some(0.002);
+        let runs = execute_scenario(&sc).unwrap();
+        let expect = expected_digest(&sc);
+        assert!(expect > 0.0);
+        for run in runs.iter().filter(|r| r.runtime != RuntimeKind::Sim) {
+            assert!(run.outcome.completed(), "{:?}: {:?}", run.runtime, run.outcome);
+            assert_eq!(run.outcome.result_digest, expect, "{:?}", run.runtime);
+        }
+    }
+}

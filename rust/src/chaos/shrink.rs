@@ -1,0 +1,213 @@
+//! Greedy shrinking of failing chaos schedules.
+//!
+//! Once the oracle flags a schedule, the raw reproducer is usually noisy:
+//! five workers, wire chaos, perturbations, hundreds of tasks.  The
+//! shrinker repeatedly tries simplifying candidates — quiet the wire,
+//! drop churners and late joins, reset perturbations, remove failures one
+//! by one, swap the real kernel for the synthetic one, halve N, drop
+//! workers, tighten fail times toward zero — and adopts a candidate
+//! whenever the simplified schedule *still violates an invariant*.  The
+//! fixpoint is a minimal reproducer worth committing to a bug report.
+//!
+//! Shrinking re-executes candidates, so a timing-marginal failure may
+//! survive some candidates it "should" accept; the loop is greedy and
+//! budgeted, not exhaustive — determinism comes from the replay file, not
+//! from the shrink path.
+
+use super::invariants::{check_scenario, Violation};
+use super::run::execute_scenario;
+use super::{ChaosApp, ChaosScenario, WireChaos};
+
+/// Outcome of a shrink: the minimal still-failing schedule and the
+/// violations it produced on its final execution.
+#[derive(Debug, Clone)]
+pub struct ShrinkResult {
+    pub scenario: ChaosScenario,
+    pub violations: Vec<Violation>,
+    /// Candidate executions spent (≤ the budget).
+    pub attempts: usize,
+}
+
+/// Does this schedule still fail?  (Execution errors count as failures to
+/// shrink toward, reported as a synthetic violation.)
+fn still_fails(sc: &ChaosScenario) -> Option<Vec<Violation>> {
+    match execute_scenario(sc) {
+        Ok(runs) => {
+            let (_checks, violations) = check_scenario(sc, &runs);
+            if violations.is_empty() {
+                None
+            } else {
+                Some(violations)
+            }
+        }
+        Err(e) => Some(vec![Violation {
+            invariant: "harness",
+            runtime: None,
+            detail: format!("execution error: {e:#}"),
+        }]),
+    }
+}
+
+/// All single-step simplifications of `sc`, most aggressive first.
+fn candidates(sc: &ChaosScenario) -> Vec<ChaosScenario> {
+    let mut out = Vec::new();
+
+    if !sc.wire.is_quiet() {
+        let mut c = sc.clone();
+        c.wire = WireChaos::quiet();
+        out.push(c);
+    }
+    if let ChaosApp::Mandelbrot { .. } = sc.app {
+        let mut c = sc.clone();
+        c.app = ChaosApp::Synthetic;
+        c.mean_cost = 1e-4;
+        out.push(c);
+    }
+    if sc.stale_workers() > 0 {
+        let mut c = sc.clone();
+        for f in &mut c.faults {
+            f.stale_version = false;
+        }
+        out.push(c);
+    }
+    if sc.faults.iter().any(|f| f.join_after > 0.0) {
+        let mut c = sc.clone();
+        for f in &mut c.faults {
+            f.join_after = 0.0;
+        }
+        out.push(c);
+    }
+    if sc.has_perturbations() {
+        let mut c = sc.clone();
+        for f in &mut c.faults {
+            f.slowdown = 1.0;
+            f.latency = 0.0;
+        }
+        out.push(c);
+    }
+    // Remove failures one at a time (highest worker first, so the shrunk
+    // schedule keeps the lowest-numbered victims).
+    for w in (1..sc.p).rev() {
+        if sc.faults[w].fail_after.is_some() {
+            let mut c = sc.clone();
+            c.faults[w].fail_after = None;
+            out.push(c);
+        }
+    }
+    // Shrink the task range.
+    if sc.n > 8 && matches!(sc.app, ChaosApp::Synthetic) {
+        for next in [sc.n / 2, sc.n * 3 / 4] {
+            if next >= 8 && next < sc.n {
+                let mut c = sc.clone();
+                c.n = next;
+                out.push(c);
+            }
+        }
+    }
+    // Drop the last worker (its fault plan goes with it).
+    if sc.p > 2 {
+        let mut c = sc.clone();
+        c.p -= 1;
+        c.faults.pop();
+        out.push(c);
+    }
+    // Tighten fail times toward immediate failure.
+    if sc.faults.iter().any(|f| f.fail_after.is_some_and(|t| t > 1e-3)) {
+        let mut c = sc.clone();
+        for f in &mut c.faults {
+            if let Some(t) = f.fail_after {
+                f.fail_after = Some((t * 0.5).max(5e-4));
+            }
+        }
+        out.push(c);
+    }
+    out.retain(|c| c.validate().is_ok());
+    out
+}
+
+/// Shrink a failing schedule to a (locally) minimal one, spending at most
+/// `budget` candidate executions.  `violations` is the failure evidence of
+/// the schedule as last executed.
+pub fn shrink(sc: &ChaosScenario, budget: usize) -> ShrinkResult {
+    let mut current = sc.clone();
+    let mut evidence = still_fails(&current).unwrap_or_default();
+    let mut attempts = 0usize;
+    if attempts < budget {
+        attempts += 1; // the confirmation run above
+    }
+    loop {
+        let mut improved = false;
+        for candidate in candidates(&current) {
+            if attempts >= budget {
+                return ShrinkResult { scenario: current, violations: evidence, attempts };
+            }
+            attempts += 1;
+            if let Some(vs) = still_fails(&candidate) {
+                current = candidate;
+                evidence = vs;
+                improved = true;
+                break; // restart from the simplified schedule
+            }
+        }
+        if !improved {
+            return ShrinkResult { scenario: current, violations: evidence, attempts };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::BugHook;
+    use crate::dls::Technique;
+
+    #[test]
+    fn candidates_simplify_without_invalidating() {
+        let mut sc = ChaosScenario::baseline(0, 1, 200, 5, Technique::Fac, true, 1e-4);
+        sc.faults[2].fail_after = Some(0.01);
+        sc.faults[3].fail_after = Some(0.02);
+        sc.faults[4].slowdown = 2.0;
+        sc.faults[1].join_after = 0.005;
+        sc.wire.drop_prob = 0.1;
+        for c in candidates(&sc) {
+            c.validate().unwrap();
+            assert!(
+                c.n < sc.n
+                    || c.p < sc.p
+                    || c.failures() < sc.failures()
+                    || c.wire.is_quiet()
+                    || !c.has_perturbations()
+                    || c.faults.iter().all(|f| f.join_after == 0.0)
+                    || c.faults.iter().zip(&sc.faults).any(|(a, b)| a.fail_after < b.fail_after),
+                "every candidate must simplify something"
+            );
+        }
+    }
+
+    #[test]
+    fn passing_schedule_shrinks_to_itself() {
+        let sc = ChaosScenario::baseline(1, 3, 60, 2, Technique::Fac, true, 5e-5);
+        let r = shrink(&sc, 4);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.scenario, sc);
+    }
+
+    #[test]
+    fn injected_bug_shrinks_to_a_small_failing_schedule() {
+        // A noisy schedule around the deliberate coordinator bug: the
+        // shrinker must strip the noise while keeping the failure.
+        let mut sc = ChaosScenario::baseline(2, 11, 160, 4, Technique::Fac, true, 2e-4);
+        sc.bug = Some(BugHook::DropOneRedispatch);
+        sc.faults[3].fail_after = Some(sc.est_makespan() * 0.3);
+        sc.faults[2].slowdown = 1.5;
+        sc.faults[1].latency = 5e-4;
+        sc.wire.dup_prob = 0.05;
+        let r = shrink(&sc, 48);
+        assert!(!r.violations.is_empty(), "the bug must still be detected after shrinking");
+        assert!(r.scenario.validate().is_ok());
+        assert!(r.scenario.n <= sc.n && r.scenario.p <= sc.p);
+        assert!(r.scenario.wire.is_quiet(), "wire chaos is noise for this bug");
+        assert!(!r.scenario.has_perturbations(), "perturbations are noise for this bug");
+        assert!(r.scenario.bug.is_some(), "the armed bug must survive shrinking");
+    }
+}

@@ -85,6 +85,10 @@ pub struct Master {
     extra_holds: HashSet<(u32, u32)>,
     /// Rotating rDLB pool of Scheduled-unfinished ids (lazy deletion).
     redispatch: VecDeque<u32>,
+    /// Deliberate-bug hook for the chaos oracle's self-test (see
+    /// [`Master::enable_test_drop_one_redispatch`]). Never set in
+    /// production paths.
+    test_drop_one_redispatch: bool,
     stats: MasterStats,
 }
 
@@ -127,9 +131,23 @@ impl Master {
             first_holder: Vec::new(),
             extra_holds: HashSet::new(),
             redispatch: VecDeque::new(),
+            test_drop_one_redispatch: false,
             stats: MasterStats::default(),
             cfg,
         }
+    }
+
+    /// **Test-only** deliberate bug, used by the chaos harness to prove its
+    /// oracle actually detects coordinator regressions: the next rDLB
+    /// re-dispatch marks its tasks `Finished` at *issue* time (a premature
+    /// flag transition), so the chunk's real results are later discarded as
+    /// duplicates and those iterations silently never contribute to the
+    /// result digest.  Fires once, then clears itself.  Nothing in the
+    /// library sets this; the chaos self-test and `ChaosScenario::bug`
+    /// plumb it through [`crate::net::NetMasterParams`].
+    #[doc(hidden)]
+    pub fn enable_test_drop_one_redispatch(&mut self) {
+        self.test_drop_one_redispatch = true;
     }
 
     /// Does `worker` currently hold `task`? (Only meaningful once holder
@@ -204,6 +222,15 @@ impl Master {
         let tasks = self.pick_redispatch(worker, now);
         if tasks.is_empty() {
             return Reply::Wait;
+        }
+        if self.test_drop_one_redispatch {
+            // Injected bug (chaos oracle self-test): prematurely flag the
+            // chunk Finished, so its eventual results are dropped as
+            // duplicates — the run "completes" with a short digest.
+            self.test_drop_one_redispatch = false;
+            for &t in &tasks {
+                self.table.finish(t as usize);
+            }
         }
         Reply::Assign(self.issue(worker, TaskSet::List(tasks), true, now))
     }
@@ -516,6 +543,39 @@ mod tests {
         }
         assert!(m.is_complete());
         assert_eq!(m.stats().finished_iterations as usize, n);
+    }
+
+    #[test]
+    fn test_hook_silently_drops_one_redispatch() {
+        // The chaos oracle's deliberate bug: with the hook armed, a run that
+        // needs re-dispatch "completes" while strictly fewer than N first
+        // completions were ever recorded — exactly the kind of silent
+        // correctness regression the digest/stats invariants must catch.
+        let n = 8;
+        let mut m = master(n, 2, Technique::Gss, true);
+        m.enable_test_drop_one_redispatch();
+        let _lost = assign(&mut m, 0, 0.0); // worker 0 grabs a chunk and dies
+        let mut guard = 0;
+        loop {
+            match m.on_request(1, 1.0) {
+                Reply::Assign(a) => {
+                    m.on_result(1, a.id, 0.1, 1.1);
+                }
+                Reply::Terminate => break,
+                Reply::Wait => panic!("rDLB must not Wait while work is pending"),
+            }
+            guard += 1;
+            assert!(guard < 10 * n, "did not terminate");
+        }
+        assert!(m.is_complete(), "the buggy run still reaches completion");
+        assert!(
+            (m.stats().finished_iterations as usize) < n,
+            "the dropped re-dispatch must be missing from first completions: {:?}",
+            m.stats()
+        );
+        // The conservation identities themselves still hold — the bug is
+        // only visible at the digest / finished-count level.
+        assert!(m.stats().identity_violations().is_empty());
     }
 
     #[test]

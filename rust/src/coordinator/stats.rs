@@ -33,6 +33,87 @@ pub struct MasterStats {
 }
 
 impl MasterStats {
+    /// Chunks assigned but never completed — lost to fail-stops, dropped
+    /// frames, or the run ending first.  Together with
+    /// [`MasterStats::completed_chunks`] this is the conservation identity
+    /// the chaos oracle checks: `assigned = completed + lost`.
+    pub fn lost_chunks(&self) -> u64 {
+        self.assigned_chunks.saturating_sub(self.completed_chunks)
+    }
+
+    /// Iterations whose results actually arrived (first completions plus
+    /// wasted duplicates).
+    pub fn executed_iterations(&self) -> u64 {
+        self.finished_iterations + self.duplicate_iterations
+    }
+
+    /// Internal accounting identities that must hold after **any** run, on
+    /// any runtime, under any fault schedule.  Returns one human-readable
+    /// line per violated identity (empty = consistent).  The chaos
+    /// invariant oracle folds these into every scenario check, so a
+    /// counter-update bug anywhere in the master loop surfaces as a
+    /// shrinkable failing schedule instead of a silently wrong report.
+    pub fn identity_violations(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        let mut check = |ok: bool, msg: String| {
+            if !ok {
+                v.push(msg);
+            }
+        };
+        check(
+            self.completed_chunks <= self.assigned_chunks,
+            format!(
+                "completed_chunks {} > assigned_chunks {} (assigned = completed + lost)",
+                self.completed_chunks, self.assigned_chunks
+            ),
+        );
+        check(
+            self.assigned_chunks <= self.requests,
+            format!(
+                "assigned_chunks {} > requests {} (every assignment answers a request)",
+                self.assigned_chunks, self.requests
+            ),
+        );
+        check(
+            self.rescheduled_chunks <= self.assigned_chunks,
+            format!(
+                "rescheduled_chunks {} > assigned_chunks {}",
+                self.rescheduled_chunks, self.assigned_chunks
+            ),
+        );
+        check(
+            self.rescheduled_iterations <= self.assigned_iterations,
+            format!(
+                "rescheduled_iterations {} > assigned_iterations {}",
+                self.rescheduled_iterations, self.assigned_iterations
+            ),
+        );
+        check(
+            self.rescheduled_completions <= self.rescheduled_chunks,
+            format!(
+                "rescheduled_completions {} > rescheduled_chunks {}",
+                self.rescheduled_completions, self.rescheduled_chunks
+            ),
+        );
+        check(
+            self.rescheduled_completions <= self.completed_chunks,
+            format!(
+                "rescheduled_completions {} > completed_chunks {}",
+                self.rescheduled_completions, self.completed_chunks
+            ),
+        );
+        check(
+            self.executed_iterations() <= self.assigned_iterations,
+            format!(
+                "executed iterations {} > assigned_iterations {} \
+                 (results for work never handed out)",
+                self.executed_iterations(),
+                self.assigned_iterations
+            ),
+        );
+        v
+    }
+
     /// Fraction of executed iterations that were wasted duplicates.
     pub fn waste_ratio(&self) -> f64 {
         let done = self.finished_iterations + self.duplicate_iterations;
@@ -68,5 +149,53 @@ mod tests {
     fn mean_chunk() {
         let s = MasterStats { assigned_chunks: 4, assigned_iterations: 100, ..Default::default() };
         assert_eq!(s.mean_chunk(), 25.0);
+    }
+
+    #[test]
+    fn lost_chunks_conservation() {
+        let s = MasterStats { assigned_chunks: 10, completed_chunks: 7, ..Default::default() };
+        assert_eq!(s.lost_chunks(), 3);
+        assert_eq!(s.assigned_chunks, s.completed_chunks + s.lost_chunks());
+        assert_eq!(MasterStats::default().lost_chunks(), 0);
+    }
+
+    #[test]
+    fn identities_hold_on_consistent_stats() {
+        let s = MasterStats {
+            requests: 20,
+            assigned_chunks: 10,
+            assigned_iterations: 100,
+            rescheduled_chunks: 2,
+            rescheduled_iterations: 8,
+            completed_chunks: 9,
+            rescheduled_completions: 2,
+            finished_iterations: 88,
+            duplicate_iterations: 4,
+            unknown_results: 1,
+            refused_workers: 0,
+        };
+        assert_eq!(s.identity_violations(), Vec::<String>::new());
+        assert_eq!(s.executed_iterations(), 92);
+    }
+
+    #[test]
+    fn identities_flag_each_inconsistency() {
+        // More completions than assignments.
+        let s = MasterStats { assigned_chunks: 1, completed_chunks: 2, ..Default::default() };
+        assert!(!s.identity_violations().is_empty());
+        // Assignments without requests.
+        let s = MasterStats { assigned_chunks: 3, requests: 1, ..Default::default() };
+        assert!(s.identity_violations().iter().any(|m| m.contains("requests")));
+        // Executed iterations exceeding handed-out iterations.
+        let s = MasterStats {
+            requests: 10,
+            assigned_chunks: 2,
+            assigned_iterations: 10,
+            completed_chunks: 2,
+            finished_iterations: 9,
+            duplicate_iterations: 2,
+            ..Default::default()
+        };
+        assert!(s.identity_violations().iter().any(|m| m.contains("executed")));
     }
 }

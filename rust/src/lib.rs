@@ -27,6 +27,7 @@
 //! | [`analysis`] | §3.1 closed forms: E\[T\] under failures, overhead, checkpointing comparison |
 //! | [`experiments`] | drivers regenerating every table/figure of the paper |
 //! | [`bench`] | seeded cross-runtime benchmark campaigns, `BENCH_*.json` reports, regression gating (`rdlb bench`) |
+//! | [`chaos`] | seeded fault-schedule fuzzing across all three runtimes with an invariant oracle and shrinking (`rdlb chaos`) |
 //! | [`config`] | TOML/CLI experiment configuration (Table 1 factors) |
 //! | [`trace`] | per-chunk execution traces (Gantt-style, Figures 1–2) |
 //!
@@ -50,6 +51,7 @@
 pub mod analysis;
 pub mod apps;
 pub mod bench;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod dls;

@@ -25,6 +25,7 @@ use rdlb::apps::AppKind;
 use rdlb::bench::{
     compare_reports, run_campaign, BenchScale, BenchSettings, CampaignReport, Thresholds,
 };
+use rdlb::chaos::{self, ChaosBudget, ChaosSettings};
 use rdlb::config::{ExperimentConfig, RuntimeKind, Scenario};
 use rdlb::dls::Technique;
 use rdlb::experiments::{
@@ -63,6 +64,9 @@ USAGE:
   rdlb bench      [--scale smoke|quick|full] [--seed K] [--runtimes sim,native,net]
                   [--out FILE] [--compare BASELINE.json] [--threshold FRAC]
                   [--wall-threshold FRAC] [--events-threshold FRAC] [--quiet]
+  rdlb chaos      [--seed K] [--budget quick|deep|N] [--out-dir DIR]
+                  [--shrink-budget N] [--quiet]
+  rdlb chaos      --replay FILE
 
 `bench` runs a seeded, deterministic benchmark campaign across the three
 runtimes × DLS techniques × fault scenarios — plus wire-codec microbench
@@ -72,6 +76,19 @@ simulator events/s, codec round-trips/s). With --compare it gates against a
 committed baseline and exits non-zero on regressions beyond the thresholds
 (default 0.25 = 25%), normalizing wall times by each report's stored CPU
 calibration. See README §Benchmarking and §Performance.
+
+`chaos` fuzzes the whole system: a seeded generator draws random workloads
+× DLS techniques × fault schedules (fail-stop up to P-1 workers incl.
+mid-chunk, slowdown/latency, late joiners, stale-version churners, and
+frame drop/duplicate/delay on the net runtime), runs every schedule on all
+applicable runtimes (sim/native/net) and checks an invariant oracle:
+exactly-once completion (digest parity with the serial kernel),
+cross-runtime digest agreement, completion despite <=P-1 failures with
+rDLB on, documented hang-at-timeout with rDLB off, and the MasterStats
+accounting identities. Failing schedules are shrunk to a minimal JSON
+reproducer (chaos_failure_<id>.json) that `--replay FILE` re-executes
+deterministically. Output is seed-deterministic; exits non-zero on any
+violation. See TESTING.md.
 
 `serve` drives the distributed net runtime: it listens for P workers over
 the length-prefixed TCP wire protocol and schedules with the identical rDLB
@@ -614,11 +631,74 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `rdlb chaos`: seeded fault-schedule fuzzing with the invariant oracle,
+/// or deterministic replay of a shrunk reproducer.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("replay") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read chaos schedule {path}"))?;
+        let (sc, runs, checks, violations) = chaos::replay::replay_str(&text)?;
+        println!("chaos replay: {}", sc.label());
+        for run in &runs {
+            let o = &run.outcome;
+            println!(
+                "chaos replay: {} -> {} (finished {}/{}, digest {})",
+                run.runtime,
+                if o.completed() { "completed" } else if o.hung { "HUNG" } else { "incomplete" },
+                o.finished,
+                o.n,
+                o.result_digest,
+            );
+        }
+        for v in &violations {
+            println!("chaos replay: VIOLATION {v}");
+        }
+        println!(
+            "chaos replay: {} runtime run(s), {} checks, {} violation(s)",
+            runs.len(),
+            checks,
+            violations.len()
+        );
+        anyhow::ensure!(
+            violations.is_empty(),
+            "replayed schedule violates {} invariant(s)",
+            violations.len()
+        );
+        return Ok(());
+    }
+
+    let budget = ChaosBudget::parse(&args.str_or("budget", "quick"))
+        .ok_or_else(|| anyhow!("unknown budget (quick|deep|<scenario count>)"))?;
+    let mut settings = ChaosSettings::new(args.u64_or("seed", 1)?, budget);
+    settings.out_dir = Some(PathBuf::from(args.str_or("out-dir", ".")));
+    settings.shrink_budget = args.usize_or("shrink-budget", 64)?;
+    settings.verbose = !args.bool_or("quiet", false)?;
+    let outcome = chaos::run_chaos(&settings)?;
+    println!("{}", outcome.summary());
+    if !outcome.passed() {
+        for case in &outcome.failures {
+            println!("chaos: failing schedule {}:", case.original.label());
+            for v in &case.violations {
+                println!("chaos:   {v}");
+            }
+            if let Some(p) = &case.path {
+                println!("chaos:   reproducer: {} (rdlb chaos --replay {})", p.display(), p.display());
+            }
+        }
+        anyhow::bail!(
+            "chaos campaign found {} invariant-violating schedule(s)",
+            outcome.failures.len()
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("bench") => cmd_bench(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("trace") => cmd_trace(&args),
         Some("theory") => cmd_theory(&args),

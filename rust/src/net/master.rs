@@ -39,6 +39,12 @@ pub struct NetMasterParams {
     /// Wall-clock hang bound (the paper's "waits indefinitely" case,
     /// bounded for practicality).
     pub timeout: Duration,
+    /// **Test-only**: arm the coordinator's deliberate drop-one-re-dispatch
+    /// bug (see [`Master::enable_test_drop_one_redispatch`]); the chaos
+    /// harness uses it to prove its invariant oracle catches coordinator
+    /// regressions. Never set by production paths.
+    #[doc(hidden)]
+    pub test_drop_one_redispatch: bool,
 }
 
 impl NetMasterParams {
@@ -50,6 +56,7 @@ impl NetMasterParams {
             rdlb,
             faults: vec![FaultSpec::default(); workers],
             timeout: Duration::from_secs(60),
+            test_drop_one_redispatch: false,
         }
     }
 
@@ -105,6 +112,9 @@ impl NetMaster {
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
         });
+        if prm.test_drop_one_redispatch {
+            master.enable_test_drop_one_redispatch();
+        }
 
         // One reader thread per connection; all send halves stay here.
         let (event_tx, event_rx) = mpsc::channel::<Event>();

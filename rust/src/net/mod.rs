@@ -13,9 +13,10 @@
 //!   length) and encodes through reusable scratch buffers — see
 //!   `PROTOCOL.md`;
 //! * [`transport`] — the [`Transport`] abstraction with [`TcpTransport`]
-//!   (real sockets, one `write` per frame) and [`LoopbackTransport`]
+//!   (real sockets, one `write` per frame), [`LoopbackTransport`]
 //!   (in-process, codec-exercising channels, so the whole stack is
-//!   unit-testable without ports);
+//!   unit-testable without ports), and [`FaultInjectingTransport`] (seeded
+//!   drop/duplicate/delay of data-plane frames for the chaos harness);
 //! * [`master`] — listener, worker registry and the dispatch loop, with the
 //!   paper's no-detection semantics and a wall-clock hang bound;
 //! * [`worker`] — connect, register, request–compute–report over any
@@ -35,7 +36,10 @@ pub use protocol::{
     FaultSpec, Frame, Welcome, WireAssignment, WorkResult, WorkerHello, MAX_FRAME_LEN,
     PROTOCOL_VERSION,
 };
-pub use transport::{FrameRx, FrameTx, LoopbackTransport, TcpTransport, Transport};
+pub use transport::{
+    FaultInjectingTransport, FrameRx, FrameTx, LoopbackTransport, TcpTransport, Transport,
+    WireFaultPlan,
+};
 pub use worker::{run_worker, WorkerReport};
 
 use anyhow::{Context as _, Result};

@@ -16,12 +16,22 @@
 //! [`LoopbackTransport`] carries *encoded* frame bytes over in-memory
 //! channels, so every unit test exercises the full codec without opening a
 //! port; [`TcpTransport`] carries the same bytes over a socket.
+//!
+//! [`FaultInjectingTransport`] wraps any transport with a seeded
+//! [`WireFaultPlan`] that drops, duplicates, or delays *data-plane* frames
+//! (`Request` / `Assign` / `Wait` / `Result`) — the chaos harness's network
+//! perturbation layer.  Control-plane frames (`Hello` / `Welcome` /
+//! `Terminate`) always pass untouched, so registration and shutdown stay
+//! reliable and every chaotic run still terminates.
 
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
+
+use crate::util::Rng;
 
 use super::protocol::{encode_frame_into, read_frame_into, Frame};
 
@@ -161,6 +171,161 @@ impl Transport for LoopbackTransport {
     }
 }
 
+// ------------------------------------------------------- fault injection
+
+/// Seeded plan for a [`FaultInjectingTransport`]: per-frame probabilities
+/// of dropping, duplicating, or delaying a data-plane frame.  Decisions are
+/// a pure function of `(seed, frame index)` via the in-tree PRNG, so a
+/// chaos schedule replays the same drop/dup/delay pattern every time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireFaultPlan {
+    /// Probability a data-plane frame silently evaporates.
+    pub drop_prob: f64,
+    /// Probability a data-plane frame is delivered twice.
+    pub dup_prob: f64,
+    /// Probability a data-plane frame is held for [`WireFaultPlan::delay`].
+    pub delay_prob: f64,
+    /// Hold time for delayed frames.
+    pub delay: Duration,
+    /// PRNG seed; each direction derives an independent stream.
+    pub seed: u64,
+}
+
+impl WireFaultPlan {
+    /// A plan that never perturbs anything.
+    pub fn quiet(seed: u64) -> WireFaultPlan {
+        WireFaultPlan {
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            delay_prob: 0.0,
+            delay: Duration::ZERO,
+            seed,
+        }
+    }
+
+    pub fn is_quiet(&self) -> bool {
+        self.drop_prob <= 0.0 && self.dup_prob <= 0.0 && self.delay_prob <= 0.0
+    }
+}
+
+/// Only work-phase frames may be perturbed: losing a `Request`, `Assign`,
+/// `Wait` or `Result` models a lossy interconnect the rDLB master must
+/// absorb without detection; losing `Hello` / `Welcome` / `Terminate`
+/// would wedge registration or shutdown, which no scheduler can survive.
+fn chaos_eligible(frame: &Frame) -> bool {
+    matches!(
+        frame,
+        Frame::Request { .. } | Frame::Assign(_) | Frame::Wait | Frame::Result(_)
+    )
+}
+
+/// Transport wrapper injecting seeded frame faults in both directions.
+/// Install it on the **worker** end of a connection (the chaos harness
+/// never wraps worker 0, so one pristine worker always guarantees
+/// progress); any sleep for a delayed frame then blocks only that worker's
+/// thread, exactly like a latency perturbation.
+pub struct FaultInjectingTransport {
+    inner: Box<dyn Transport>,
+    plan: WireFaultPlan,
+}
+
+impl FaultInjectingTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: WireFaultPlan) -> FaultInjectingTransport {
+        FaultInjectingTransport { inner, plan }
+    }
+}
+
+impl Transport for FaultInjectingTransport {
+    fn peer(&self) -> String {
+        format!("chaos:{}", self.inner.peer())
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+        let FaultInjectingTransport { inner, plan } = *self;
+        let (tx, rx) = inner.split()?;
+        let mut root = Rng::new(plan.seed ^ 0x57A6_F00D);
+        let tx_rng = root.fork(1);
+        let rx_rng = root.fork(2);
+        Ok((
+            Box::new(FaultTx { inner: tx, rng: tx_rng, plan: plan.clone() }),
+            Box::new(FaultRx { inner: rx, rng: rx_rng, plan, pending: None }),
+        ))
+    }
+}
+
+/// Roll one fault decision. Returns (drop, dup, delay).
+fn roll(rng: &mut Rng, plan: &WireFaultPlan) -> (bool, bool, bool) {
+    let x = rng.next_f64();
+    if x < plan.drop_prob {
+        (true, false, false)
+    } else if x < plan.drop_prob + plan.dup_prob {
+        (false, true, false)
+    } else if x < plan.drop_prob + plan.dup_prob + plan.delay_prob {
+        (false, false, true)
+    } else {
+        (false, false, false)
+    }
+}
+
+struct FaultTx {
+    inner: Box<dyn FrameTx>,
+    rng: Rng,
+    plan: WireFaultPlan,
+}
+
+impl FrameTx for FaultTx {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        if !chaos_eligible(frame) {
+            return self.inner.send(frame);
+        }
+        let (drop, dup, delay) = roll(&mut self.rng, &self.plan);
+        if drop {
+            return Ok(()); // evaporated in flight
+        }
+        if delay {
+            std::thread::sleep(self.plan.delay);
+        }
+        self.inner.send(frame)?;
+        if dup {
+            self.inner.send(frame)?;
+        }
+        Ok(())
+    }
+}
+
+struct FaultRx {
+    inner: Box<dyn FrameRx>,
+    rng: Rng,
+    plan: WireFaultPlan,
+    /// A duplicated inbound frame awaiting its second delivery.
+    pending: Option<Frame>,
+}
+
+impl FrameRx for FaultRx {
+    fn recv(&mut self) -> Result<Frame> {
+        if let Some(f) = self.pending.take() {
+            return Ok(f);
+        }
+        loop {
+            let frame = self.inner.recv()?;
+            if !chaos_eligible(&frame) {
+                return Ok(frame);
+            }
+            let (drop, dup, delay) = roll(&mut self.rng, &self.plan);
+            if drop {
+                continue; // evaporated before delivery
+            }
+            if delay {
+                std::thread::sleep(self.plan.delay);
+            }
+            if dup {
+                self.pending = Some(frame.clone());
+            }
+            return Ok(frame);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +386,96 @@ mod tests {
         tx.send(&hello()).unwrap();
         assert_eq!(rx.recv().unwrap(), hello());
         join.join().unwrap();
+    }
+
+    fn assign(id: u64) -> Frame {
+        Frame::Assign(WireAssignment {
+            id,
+            worker: 0,
+            rescheduled: false,
+            tasks: TaskSet::Range { start: 0, end: 4 },
+        })
+    }
+
+    #[test]
+    fn fault_wrapper_never_touches_control_frames() {
+        let (a, b) = LoopbackTransport::pair();
+        let plan = WireFaultPlan {
+            drop_prob: 1.0, // every eligible frame dropped
+            ..WireFaultPlan::quiet(9)
+        };
+        let (mut a_tx, mut a_rx) =
+            Box::new(FaultInjectingTransport::new(Box::new(a), plan)).split().unwrap();
+        let (mut b_tx, mut b_rx) = Box::new(b).split().unwrap();
+        // Control plane passes both directions.
+        a_tx.send(&hello()).unwrap();
+        assert_eq!(b_rx.recv().unwrap(), hello());
+        b_tx.send(&Frame::Terminate).unwrap();
+        assert_eq!(a_rx.recv().unwrap(), Frame::Terminate);
+        // Data plane evaporates on send...
+        a_tx.send(&assign(1)).unwrap();
+        a_tx.send(&Frame::Hello(WorkerHello { version: 1, backend: "x".into() })).unwrap();
+        assert!(matches!(b_rx.recv().unwrap(), Frame::Hello(h) if h.version == 1));
+        // ...and on receive (the Terminate behind it is delivered instead).
+        b_tx.send(&assign(2)).unwrap();
+        b_tx.send(&Frame::Terminate).unwrap();
+        assert_eq!(a_rx.recv().unwrap(), Frame::Terminate);
+    }
+
+    #[test]
+    fn fault_wrapper_duplicates_frames() {
+        let (a, b) = LoopbackTransport::pair();
+        let plan = WireFaultPlan { dup_prob: 1.0, ..WireFaultPlan::quiet(5) };
+        let (mut a_tx, _a_rx) =
+            Box::new(FaultInjectingTransport::new(Box::new(a), plan)).split().unwrap();
+        let (_b_tx, mut b_rx) = Box::new(b).split().unwrap();
+        a_tx.send(&assign(7)).unwrap();
+        assert_eq!(b_rx.recv().unwrap(), assign(7));
+        assert_eq!(b_rx.recv().unwrap(), assign(7), "dup_prob=1 must deliver twice");
+    }
+
+    #[test]
+    fn fault_wrapper_decisions_are_seed_deterministic() {
+        let run = |seed: u64| -> Vec<u64> {
+            let (a, b) = LoopbackTransport::pair();
+            let plan = WireFaultPlan { drop_prob: 0.5, ..WireFaultPlan::quiet(seed) };
+            let (mut a_tx, _a_rx) =
+                Box::new(FaultInjectingTransport::new(Box::new(a), plan)).split().unwrap();
+            let (_b_tx, mut b_rx) = Box::new(b).split().unwrap();
+            for i in 0..64 {
+                a_tx.send(&assign(i)).unwrap();
+            }
+            a_tx.send(&Frame::Terminate).unwrap();
+            let mut got = Vec::new();
+            loop {
+                match b_rx.recv().unwrap() {
+                    Frame::Assign(a) => got.push(a.id),
+                    Frame::Terminate => break,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            got
+        };
+        let first = run(1234);
+        assert!(!first.is_empty() && first.len() < 64, "p=0.5 must drop some, not all");
+        assert_eq!(first, run(1234), "same seed, same drop pattern");
+        assert_ne!(first, run(99), "different seed, different pattern");
+    }
+
+    #[test]
+    fn quiet_plan_is_transparent() {
+        let plan = WireFaultPlan::quiet(3);
+        assert!(plan.is_quiet());
+        let (a, b) = LoopbackTransport::pair();
+        let (mut a_tx, _a_rx) =
+            Box::new(FaultInjectingTransport::new(Box::new(a), plan)).split().unwrap();
+        let (_b_tx, mut b_rx) = Box::new(b).split().unwrap();
+        for i in 0..16 {
+            a_tx.send(&assign(i)).unwrap();
+        }
+        for i in 0..16 {
+            assert_eq!(b_rx.recv().unwrap(), assign(i));
+        }
     }
 
     #[test]

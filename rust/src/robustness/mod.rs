@@ -132,4 +132,53 @@ mod tests {
         assert!(rows.iter().all(|r| r.rho.is_infinite()));
         assert!(most_robust(&rows).is_none());
     }
+
+    #[test]
+    fn resilience_and_flexibility_are_the_fepia_metric() {
+        // Both paper metrics are ρ over their scenario family; the rows
+        // must match the generic computation exactly (Fig. 4 vs Fig. 5
+        // differ only in *which* perturbed times are fed in).
+        let inputs = [input("SS", 10.0, 13.0), input("FAC", 10.0, 11.5)];
+        let generic = robustness_metrics(&inputs);
+        for rows in [resilience(&inputs), flexibility(&inputs)] {
+            assert_eq!(rows.len(), generic.len());
+            for (a, b) in rows.iter().zip(&generic) {
+                assert_eq!(a.technique, b.technique);
+                assert_eq!(a.radius, b.radius);
+                assert_eq!(a.rho, b.rho);
+            }
+        }
+        assert_eq!(most_robust(&generic).unwrap().technique, "FAC");
+    }
+
+    #[test]
+    fn single_technique_is_trivially_most_robust() {
+        let rows = robustness_metrics(&[input("TSS", 5.0, 9.0)]);
+        assert_eq!(rows.len(), 1);
+        assert!((rows[0].rho - 1.0).abs() < 1e-12, "alone ⇒ ρ = 1");
+        assert!((rows[0].radius - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_rows() {
+        assert!(robustness_metrics(&[]).is_empty());
+        assert!(most_robust(&[]).is_none());
+    }
+
+    #[test]
+    fn rho_ordering_matches_radius_ordering() {
+        // ρ is a monotone rescaling of the radius: sorting by ρ must equal
+        // sorting by radius, with ties preserved.
+        let rows = robustness_metrics(&[
+            input("A", 10.0, 16.0), // r = 6
+            input("B", 10.0, 12.0), // r = 2
+            input("C", 10.0, 12.0), // r = 2 (tie)
+            input("D", 10.0, f64::INFINITY),
+        ]);
+        assert_eq!(rows[1].rho, rows[2].rho, "equal radii ⇒ equal ρ");
+        assert!((rows[0].rho - 3.0).abs() < 1e-12);
+        assert!(rows[3].rho.is_infinite());
+        let best = most_robust(&rows).unwrap();
+        assert_eq!(best.technique, "B", "first of the tied minimum wins");
+    }
 }

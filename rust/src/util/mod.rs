@@ -7,8 +7,10 @@ pub mod par;
 pub mod park;
 pub mod rng;
 pub mod stats;
+pub mod watchdog;
 
 pub use par::{default_threads, par_map};
 pub use park::ParkedSet;
 pub use rng::Rng;
 pub use stats::Summary;
+pub use watchdog::Watchdog;

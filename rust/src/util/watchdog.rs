@@ -1,0 +1,86 @@
+//! [`Watchdog`]: a wall-clock guard for integration tests and chaos runs
+//! that drive real threads and sockets.
+//!
+//! A deadlocked TCP test used to stall `cargo test` until the CI job's
+//! 30-minute timeout, with no hint of *which* test wedged.  Arming a
+//! watchdog bounds that: if the guard is not dropped within its limit, it
+//! prints a diagnostic naming the guarded section and aborts the process,
+//! so CI fails in seconds with an attributable message instead.
+//!
+//! The limit should be generous (an order of magnitude above the expected
+//! runtime) — the watchdog exists to catch *deadlocks*, not slowness.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Aborts the process with a diagnostic if not dropped within the limit.
+///
+/// ```no_run
+/// use std::time::Duration;
+/// use rdlb::util::Watchdog;
+///
+/// let _guard = Watchdog::arm("my_tcp_test", Duration::from_secs(120));
+/// // ... test body; dropping the guard disarms the watchdog ...
+/// ```
+pub struct Watchdog {
+    disarmed: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    /// Arm a watchdog over the section `name`; disarm by dropping the
+    /// returned guard.
+    pub fn arm(name: &str, limit: Duration) -> Watchdog {
+        let disarmed = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&disarmed);
+        let name = name.to_string();
+        std::thread::spawn(move || {
+            let deadline = Instant::now() + limit;
+            loop {
+                if flag.load(Ordering::Relaxed) {
+                    return; // guard dropped: normal completion
+                }
+                if Instant::now() >= deadline {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            if flag.load(Ordering::Relaxed) {
+                return;
+            }
+            eprintln!(
+                "WATCHDOG: {name:?} still running after {limit:?} — presumed \
+                 deadlocked; aborting so the failure is attributable instead \
+                 of stalling to the job timeout"
+            );
+            std::process::abort();
+        });
+        Watchdog { disarmed }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.disarmed.store(true, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropping_disarms_before_the_limit() {
+        let guard = Watchdog::arm("disarm-test", Duration::from_millis(60));
+        drop(guard);
+        // If disarming were broken, this sleep would let the watchdog
+        // abort the whole test process.
+        std::thread::sleep(Duration::from_millis(160));
+    }
+
+    #[test]
+    fn armed_guard_is_quiet_within_the_limit() {
+        let _guard = Watchdog::arm("quiet-test", Duration::from_secs(60));
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end tests of the chaos harness: a deterministic smoke campaign,
+//! the oracle self-test (a deliberately injected coordinator bug must be
+//! detected, shrunk to a minimal schedule, and replayable from its JSON
+//! reproducer), and wire-chaos resilience.
+//!
+//! Every test arms a wall-clock watchdog so a deadlock fails in seconds
+//! with a diagnostic instead of stalling CI to the job timeout.
+
+use std::time::Duration;
+
+use rdlb::chaos::{
+    check_scenario, execute_scenario, expected_digest, run_chaos, scenario_from_json_str,
+    scenario_to_json_string, shrink, BugHook, ChaosBudget, ChaosScenario, ChaosSettings,
+    WireChaos,
+};
+use rdlb::config::RuntimeKind;
+use rdlb::dls::Technique;
+use rdlb::util::Watchdog;
+
+/// A small campaign passes every invariant and is seed-deterministic in
+/// all its reported counts.
+#[test]
+fn smoke_campaign_passes_and_repeats_identically() {
+    let _wd = Watchdog::arm("chaos smoke campaign", Duration::from_secs(300));
+    let settings = ChaosSettings::new(9, ChaosBudget { scenarios: 24 });
+    let a = run_chaos(&settings).unwrap();
+    let b = run_chaos(&settings).unwrap();
+    assert!(a.passed(), "invariant violations in a clean build: {:?}", a.failures);
+    assert_eq!(a.scenarios, 24);
+    assert_eq!((a.scenarios, a.runs, a.checks), (b.scenarios, b.runs, b.checks));
+    assert_eq!(a.summary(), b.summary(), "campaign output must be seed-deterministic");
+    assert!(a.runs >= a.scenarios, "every scenario runs on >=1 runtime");
+    assert!(a.checks > a.runs * 2, "multiple invariants per run");
+}
+
+/// The acceptance-criteria oracle self-test: a deliberately injected
+/// coordinator bug (the test-only hook that drops one re-dispatch by
+/// prematurely marking it Finished) is detected by the invariants and
+/// shrunk to a minimal schedule whose JSON reproducer replays the failure
+/// deterministically.
+#[test]
+fn injected_redispatch_drop_is_detected_shrunk_and_replayable() {
+    let _wd = Watchdog::arm("chaos bug detection", Duration::from_secs(300));
+
+    // A noisy schedule around the bug: one mid-chunk fail-stop forces a
+    // re-dispatch (which the armed bug silently drops), plus perturbation
+    // and wire noise the shrinker should strip.
+    let mut sc = ChaosScenario::baseline(0, 11, 160, 4, Technique::Fac, true, 2e-4);
+    sc.bug = Some(BugHook::DropOneRedispatch);
+    sc.faults[3].fail_after = Some(sc.est_makespan() * 0.3);
+    sc.faults[2].slowdown = 1.5;
+    sc.faults[1].latency = 5e-4;
+    sc.wire = WireChaos { drop_prob: 0.0, dup_prob: 0.05, delay_prob: 0.1, delay_ms: 0.3 };
+    sc.validate().unwrap();
+
+    // 1. Detection.
+    let runs = execute_scenario(&sc).unwrap();
+    assert_eq!(runs.len(), 1, "bug-armed schedules are net-only");
+    let (checks, violations) = check_scenario(&sc, &runs);
+    assert!(checks >= 4);
+    assert!(
+        violations.iter().any(|v| v.invariant == "exactly-once"),
+        "the dropped re-dispatch must surface as an exactly-once violation: {violations:?}"
+    );
+
+    // 2. Shrinking strips the noise but keeps the failure.
+    let shrunk = shrink(&sc, 48);
+    assert!(!shrunk.violations.is_empty(), "shrunk schedule must still fail");
+    assert!(shrunk.scenario.validate().is_ok());
+    assert!(shrunk.scenario.wire.is_quiet(), "wire noise must shrink away");
+    assert!(!shrunk.scenario.has_perturbations(), "perturbations must shrink away");
+    assert!(shrunk.scenario.n <= sc.n && shrunk.scenario.p <= sc.p);
+
+    // 3. The JSON reproducer round-trips exactly and replays the failure.
+    let text = scenario_to_json_string(&shrunk.scenario);
+    let back = scenario_from_json_str(&text).unwrap();
+    assert_eq!(back, shrunk.scenario, "reproducer must deserialize to the identical schedule");
+    let replayed = execute_scenario(&back).unwrap();
+    let (_checks, again) = check_scenario(&back, &replayed);
+    assert!(
+        again.iter().any(|v| v.invariant == "exactly-once"),
+        "replayed reproducer must reproduce the violation: {again:?}"
+    );
+}
+
+/// Heavy frame chaos (drops, duplicates, delays) on top of a fail-stop:
+/// with rDLB on, the run still completes with the exact serial digest —
+/// the paper's no-detection robustness extends to a lossy interconnect.
+#[test]
+fn wire_chaos_with_failures_still_completes_exactly_once() {
+    let _wd = Watchdog::arm("chaos wire resilience", Duration::from_secs(300));
+    let mut sc = ChaosScenario::baseline(1, 23, 120, 4, Technique::Gss, true, 2e-4);
+    sc.faults[2].fail_after = Some(sc.est_makespan() * 0.4);
+    sc.wire = WireChaos { drop_prob: 0.15, dup_prob: 0.10, delay_prob: 0.15, delay_ms: 1.0 };
+    let runs = execute_scenario(&sc).unwrap();
+    assert_eq!(runs.len(), 1);
+    let net = &runs[0];
+    assert_eq!(net.runtime, RuntimeKind::Net);
+    assert!(net.outcome.completed(), "{:?}", net.outcome);
+    assert_eq!(net.outcome.result_digest, expected_digest(&sc));
+    let (_checks, violations) = check_scenario(&sc, &runs);
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+/// Late joiners and a stale-version churner: the master absorbs mid-run
+/// registration, refuses the stale peer (visible in stats, never
+/// scheduled), and still completes exactly once.
+#[test]
+fn late_join_and_churn_are_absorbed() {
+    let _wd = Watchdog::arm("chaos churn", Duration::from_secs(300));
+    // Workload sized so the run comfortably outlives both the late join and
+    // the churner's registration.
+    let mut sc = ChaosScenario::baseline(2, 31, 100, 4, Technique::Fac, true, 1e-3);
+    sc.faults[1].join_after = sc.est_makespan() * 0.5;
+    sc.faults[3].stale_version = true;
+    let runs = execute_scenario(&sc).unwrap();
+    let net = &runs[0];
+    assert!(net.outcome.completed(), "{:?}", net.outcome);
+    assert_eq!(net.outcome.stats.refused_workers, 1);
+    assert_eq!(net.reports[3].chunks, 0, "refused churner must never be scheduled");
+    assert_eq!(net.outcome.result_digest, expected_digest(&sc));
+    let (_checks, violations) = check_scenario(&sc, &runs);
+    assert!(violations.is_empty(), "{violations:?}");
+}

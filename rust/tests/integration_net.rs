@@ -1,6 +1,10 @@
 //! End-to-end tests of the distributed net runtime: full-protocol loopback
 //! parity with the native runtime, real-socket runs, and the paper's
 //! P−1-failure scenario across the wire.
+//!
+//! Every test that blocks on threads or sockets arms a [`Watchdog`]: a
+//! deadlocked run fails within the guard's limit with a diagnostic naming
+//! the test, instead of stalling `cargo test` to the CI job timeout.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -10,6 +14,7 @@ use rdlb::apps::{CostModel, MandelbrotApp};
 use rdlb::dls::Technique;
 use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
 use rdlb::net::{run_loopback, run_worker, serve_tcp, NetMasterParams, TcpTransport};
+use rdlb::util::Watchdog;
 
 fn synthetic(n: usize, cost: f64) -> ComputeBackend {
     ComputeBackend::Synthetic {
@@ -23,6 +28,7 @@ fn synthetic(n: usize, cost: f64) -> ComputeBackend {
 /// runtime running the identical kernel.
 #[test]
 fn loopback_full_run_parity_with_native_runtime() {
+    let _wd = Watchdog::arm("loopback_full_run_parity_with_native_runtime", Duration::from_secs(180));
     let app = MandelbrotApp { width: 32, height: 32, max_iter: 64, ..Default::default() };
     let n = app.n_tasks();
     let backend = ComputeBackend::Mandelbrot(Arc::new(app));
@@ -48,6 +54,7 @@ fn loopback_full_run_parity_with_native_runtime() {
 /// workers fail-stop mid-run and rDLB still finishes every iteration.
 #[test]
 fn tcp_p_minus_1_failures_complete_with_rdlb() {
+    let _wd = Watchdog::arm("tcp_p_minus_1_failures_complete_with_rdlb", Duration::from_secs(180));
     let n = 600;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -81,6 +88,7 @@ fn tcp_p_minus_1_failures_complete_with_rdlb() {
 /// the hang with the configured wall-clock timeout and reports it.
 #[test]
 fn failures_without_rdlb_hang_at_the_timeout_bound() {
+    let _wd = Watchdog::arm("failures_without_rdlb_hang_at_the_timeout_bound", Duration::from_secs(120));
     let bound = Duration::from_millis(700);
     let mut params =
         NetMasterParams::new(600, 4, Technique::Fac, false).with_failures(3, 0.05).unwrap();

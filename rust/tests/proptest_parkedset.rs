@@ -1,0 +1,142 @@
+//! Property tests for `util::ParkedSet` against a naive `Vec`-based
+//! reference model (proptest is unavailable offline; random op sequences
+//! come from the in-tree PRNG).
+//!
+//! The master loops of all three runtimes depend on three properties:
+//! insert/contains idempotence, order-preserving `drain_into`, and exact
+//! agreement between the bitset (membership) and the insertion-order list
+//! (iteration) across arbitrary interleavings of park/drain cycles.
+
+use rdlb::util::{ParkedSet, Rng};
+
+/// The obviously-correct reference: a Vec with linear scans.
+#[derive(Default)]
+struct NaiveSet {
+    order: Vec<u32>,
+}
+
+impl NaiveSet {
+    fn contains(&self, worker: usize) -> bool {
+        self.order.contains(&(worker as u32))
+    }
+
+    fn insert(&mut self, worker: usize) -> bool {
+        if self.contains(worker) {
+            return false;
+        }
+        self.order.push(worker as u32);
+        true
+    }
+
+    fn drain_into(&mut self, out: &mut Vec<u32>) {
+        out.clear();
+        std::mem::swap(&mut self.order, out);
+    }
+
+    fn len(&self) -> usize {
+        self.order.len()
+    }
+}
+
+/// Cross-check every observable of the two sets.
+fn assert_agree(real: &ParkedSet, model: &NaiveSet, capacity: usize, ctx: &str) {
+    assert_eq!(real.len(), model.len(), "{ctx}: len");
+    assert_eq!(real.is_empty(), model.len() == 0, "{ctx}: is_empty");
+    for w in 0..capacity {
+        assert_eq!(real.contains(w), model.contains(w), "{ctx}: contains({w})");
+    }
+}
+
+#[test]
+fn random_op_sequences_match_the_naive_model() {
+    let mut rng = Rng::new(0x9A7C_ED);
+    // Capacities straddling the u64 bitset word boundaries.
+    for &capacity in &[1usize, 5, 63, 64, 65, 128, 129, 200] {
+        for round in 0..40 {
+            let mut real = ParkedSet::new(capacity);
+            let mut model = NaiveSet::default();
+            let mut real_out = Vec::new();
+            let mut model_out = Vec::new();
+            for step in 0..200 {
+                let ctx = format!("cap={capacity} round={round} step={step}");
+                if rng.next_f64() < 0.85 {
+                    let w = rng.gen_range(0, capacity as u64 - 1) as usize;
+                    assert_eq!(real.insert(w), model.insert(w), "{ctx}: insert({w})");
+                } else {
+                    real.drain_into(&mut real_out);
+                    model.drain_into(&mut model_out);
+                    assert_eq!(real_out, model_out, "{ctx}: drain order");
+                    assert!(real.is_empty(), "{ctx}: drained set must be empty");
+                }
+                assert_agree(&real, &model, capacity, &ctx);
+            }
+            // Final drain must surface exactly the surviving members, in
+            // insertion order.
+            real.drain_into(&mut real_out);
+            model.drain_into(&mut model_out);
+            assert_eq!(real_out, model_out, "cap={capacity} round={round}: final drain");
+        }
+    }
+}
+
+#[test]
+fn insert_is_idempotent_under_repetition() {
+    let mut rng = Rng::new(77);
+    let mut set = ParkedSet::new(64);
+    let mut firsts = 0usize;
+    for _ in 0..1000 {
+        let w = rng.gen_range(0, 15) as usize;
+        if set.insert(w) {
+            firsts += 1;
+        }
+        assert!(set.contains(w));
+        assert!(!set.insert(w), "second insert of a present member must be a no-op");
+    }
+    assert_eq!(firsts, 16, "each of the 16 workers parks exactly once");
+    assert_eq!(set.len(), 16);
+}
+
+#[test]
+fn drain_preserves_order_across_repark_cycles() {
+    let mut rng = Rng::new(0xD1CE);
+    let mut set = ParkedSet::new(100);
+    let mut out = Vec::new();
+    for _ in 0..50 {
+        // Park a random permutation prefix, then verify drain order.
+        let k = rng.gen_range(1, 30) as usize;
+        let mut expect = Vec::new();
+        for _ in 0..k {
+            let w = rng.gen_range(0, 99) as usize;
+            if set.insert(w) {
+                expect.push(w as u32);
+            }
+        }
+        set.drain_into(&mut out);
+        assert_eq!(out, expect, "drain must replay insertion order");
+        // The drained buffer stays valid while re-parking (the wakeup-pass
+        // pattern in the master loops).
+        for &w in &out {
+            assert!(set.insert(w as usize), "re-park after drain must succeed");
+        }
+        set.drain_into(&mut out);
+        assert_eq!(out, expect);
+    }
+}
+
+#[test]
+fn bitset_and_list_agree_at_word_boundaries() {
+    let mut set = ParkedSet::new(129);
+    for w in [0usize, 63, 64, 65, 127, 128] {
+        assert!(set.insert(w));
+    }
+    for w in 0..129 {
+        let expected = matches!(w, 0 | 63 | 64 | 65 | 127 | 128);
+        assert_eq!(set.contains(w), expected, "contains({w})");
+    }
+    let mut out = Vec::new();
+    set.drain_into(&mut out);
+    assert_eq!(out, vec![0, 63, 64, 65, 127, 128]);
+    for w in 0..129 {
+        assert!(!set.contains(w), "drain must clear every bit ({w})");
+    }
+}
