@@ -128,7 +128,14 @@ impl BenchSettings {
         BenchSettings {
             scale,
             seed,
-            runtimes: vec![RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net],
+            // All four runtimes by default: the committed baseline carries
+            // hier cases, so a default `--compare` run must produce them.
+            runtimes: vec![
+                RuntimeKind::Sim,
+                RuntimeKind::Native,
+                RuntimeKind::Net,
+                RuntimeKind::Hier,
+            ],
             verbose: false,
         }
     }
@@ -175,6 +182,8 @@ fn real_case(
     scenario: Scenario,
 ) -> Result<CaseSpec> {
     let sc = &settings.scale;
+    // Hier cases run `NetSettings::default().groups` (2) groups of
+    // real_pes/2 workers — every preset has an even P.
     let mut cfg = ExperimentConfig::builder()
         .app(AppKind::Uniform)
         .pes(sc.real_pes)
@@ -271,6 +280,16 @@ pub fn campaign_cases(settings: &BenchSettings) -> Result<Vec<CaseSpec>> {
                     (Technique::Gss, Scenario::Baseline),
                 ] {
                     cases.push(real_case(settings, runtime, technique, scenario)?);
+                }
+            }
+            RuntimeKind::Hier => {
+                // Two cases: healthy, and P/2 failures — with the
+                // plan_failures victim mapping, the failure case kills the
+                // entire second group (its master slot included), so the
+                // root-level re-dispatch path is benchmarked on every run.
+                let half = (sc.real_pes / 2).max(1);
+                for scenario in [Scenario::Baseline, Scenario::failures(half)] {
+                    cases.push(real_case(settings, runtime, Technique::Fac, scenario)?);
                 }
             }
         }
@@ -428,9 +447,36 @@ mod tests {
     #[test]
     fn quick_grid_has_unique_ids_across_all_runtimes() {
         let cases = campaign_cases(&BenchSettings::new(BenchScale::quick(), 1)).unwrap();
-        // 10 sim (6 grid + no-rdlb + 2 perturb + flagship) + 3 native + 3 net.
-        assert_eq!(cases.len(), 16, "{:?}", cases.iter().map(|c| &c.id).collect::<Vec<_>>());
+        // 10 sim (6 grid + no-rdlb + 2 perturb + flagship) + 3 native
+        // + 3 net + 2 hier.
+        assert_eq!(cases.len(), 18, "{:?}", cases.iter().map(|c| &c.id).collect::<Vec<_>>());
         assert!(cases.iter().any(|c| c.cfg.runtime == RuntimeKind::Net));
+        assert!(cases.iter().any(|c| c.cfg.runtime == RuntimeKind::Hier));
+    }
+
+    #[test]
+    fn hier_cases_build_and_run_at_smoke_scale() {
+        let settings = BenchSettings {
+            runtimes: vec![RuntimeKind::Hier],
+            ..BenchSettings::new(BenchScale::smoke(), 3)
+        };
+        let cases = campaign_cases(&settings).unwrap();
+        assert_eq!(cases.len(), 2, "{:?}", cases.iter().map(|c| &c.id).collect::<Vec<_>>());
+        assert!(cases.iter().all(|c| c.cfg.runtime == RuntimeKind::Hier));
+        assert!(cases[0].id.starts_with("hier/"), "{}", cases[0].id);
+        // The failure case kills the whole second group (master slot
+        // included): the root re-dispatch path must still complete it.
+        for case in &cases {
+            let report = run_case(case).unwrap();
+            assert!(!report.outcome.hung, "{} hung", case.id);
+            assert_eq!(report.outcome.finished, report.outcome.n, "{} incomplete", case.id);
+            assert_eq!(
+                report.outcome.digest,
+                report.outcome.n as f64,
+                "{}: synthetic digest is 1.0/task",
+                case.id
+            );
+        }
     }
 
     #[test]

@@ -182,6 +182,11 @@ pub struct ChaosScenario {
     pub timeout_ms: u64,
     /// Armed deliberate bug (oracle self-test only).
     pub bug: Option<BugHook>,
+    /// Also run the two-level hierarchical runtime (2 groups of P/2
+    /// workers) as an additional differential oracle.  Opt-in (see
+    /// [`ChaosScenario::arm_hier`] / `rdlb chaos --hier`) so campaigns
+    /// without the flag keep byte-identical output across versions.
+    pub hier: bool,
 }
 
 impl ChaosScenario {
@@ -209,7 +214,22 @@ impl ChaosScenario {
             wire: WireChaos::quiet(),
             timeout_ms: 20_000,
             bug: None,
+            hier: false,
         }
+    }
+
+    /// Can the two-level runtime express this schedule?  It needs an even
+    /// P ≥ 4 (2 groups of P/2), no net-only behaviour, and — like the
+    /// native runtime — skips expected-hang schedules (rDLB off with
+    /// failures), which would burn a wall-clock timeout for no new signal.
+    pub fn hier_capable(&self) -> bool {
+        self.p >= 4 && self.p % 2 == 0 && !self.net_only() && (self.rdlb || self.failures() == 0)
+    }
+
+    /// Arm the hierarchical differential run when the schedule can express
+    /// it (no RNG draws: campaign output stays a pure function of the seed).
+    pub fn arm_hier(&mut self) {
+        self.hier = self.hier_capable();
     }
 
     /// Number of injected fail-stop failures (< P by construction: worker 0
@@ -255,12 +275,15 @@ impl ChaosScenario {
     /// hangs) covers pure fail-stop/baseline schedules — per-worker
     /// slowdown/latency draws have no sim-side encoding.
     pub fn runtimes(&self) -> Vec<RuntimeKind> {
-        let mut kinds = Vec::with_capacity(3);
+        let mut kinds = Vec::with_capacity(4);
         if !self.net_only() && !self.has_perturbations() {
             kinds.push(RuntimeKind::Sim);
         }
         if !self.net_only() && (self.rdlb || self.failures() == 0) {
             kinds.push(RuntimeKind::Native);
+        }
+        if self.hier && self.hier_capable() {
+            kinds.push(RuntimeKind::Hier);
         }
         kinds.push(RuntimeKind::Net);
         kinds
@@ -288,6 +311,9 @@ impl ChaosScenario {
         if self.bug.is_some() {
             tags.push_str("+bug");
         }
+        if self.hier {
+            tags.push_str("+hier");
+        }
         format!(
             "s{}/{}/n{}/p{}/{}/{}/f{}{}",
             self.id,
@@ -314,6 +340,12 @@ impl ChaosScenario {
             self.seed < (1u64 << 53),
             "seed must be f64-exact so the JSON reproducer replays identically"
         );
+        if self.hier {
+            anyhow::ensure!(
+                self.p >= 4 && self.p % 2 == 0,
+                "hier schedules need an even P >= 4 (2 groups of P/2)"
+            );
+        }
         if let ChaosApp::Mandelbrot { side, max_iter } = self.app {
             anyhow::ensure!(side * side == self.n, "mandelbrot N must equal side²");
             anyhow::ensure!(max_iter > 0, "max_iter must be positive");
@@ -373,6 +405,33 @@ mod tests {
         let mut sc = ChaosScenario::baseline(7, 1, 100, 3, Technique::Fac, true, 1e-4);
         sc.app = ChaosApp::Mandelbrot { side: 7, max_iter: 8 };
         assert!(sc.validate().is_err(), "mandelbrot N must be side²");
+    }
+
+    #[test]
+    fn hier_arming_is_capability_gated() {
+        let mut sc = ChaosScenario::baseline(10, 1, 100, 4, Technique::Fac, true, 1e-4);
+        sc.arm_hier();
+        assert!(sc.hier);
+        sc.validate().unwrap();
+        assert_eq!(
+            sc.runtimes(),
+            vec![RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Hier, RuntimeKind::Net]
+        );
+        assert!(sc.label().contains("+hier"), "{}", sc.label());
+        // Odd P cannot split into two groups.
+        let mut odd = ChaosScenario::baseline(11, 1, 100, 5, Technique::Fac, true, 1e-4);
+        odd.arm_hier();
+        assert!(!odd.hier);
+        // Expected-hang schedules skip hier like they skip native.
+        let mut hang = ChaosScenario::baseline(12, 1, 100, 4, Technique::Fac, false, 1e-4);
+        hang.faults[1].fail_after = Some(0.001);
+        hang.arm_hier();
+        assert!(!hang.hier);
+        // Net-only behaviour added after arming still forces net-only runs.
+        let mut stale = ChaosScenario::baseline(13, 1, 100, 4, Technique::Fac, true, 1e-4);
+        stale.arm_hier();
+        stale.faults[2].stale_version = true;
+        assert_eq!(stale.runtimes(), vec![RuntimeKind::Net]);
     }
 
     #[test]

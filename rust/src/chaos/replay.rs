@@ -71,6 +71,11 @@ pub fn scenario_to_json(sc: &ChaosScenario) -> Json {
         // shrunk reproducer replays faithfully.
         obj.push(("bug", Json::str("drop-one-redispatch")));
     }
+    if sc.hier {
+        // Only serialized when armed, so pre-hier reproducers and replays
+        // are byte-identical to the v1 format they were written in.
+        obj.push(("hier", Json::Bool(true)));
+    }
     Json::obj(obj)
 }
 
@@ -134,6 +139,7 @@ pub fn scenario_from_json(v: &Json) -> Result<ChaosScenario> {
             Some("drop-one-redispatch") => Some(BugHook::DropOneRedispatch),
             Some(other) => bail!("unknown bug hook {other:?}"),
         },
+        hier: v.get("hier").and_then(Json::as_bool).unwrap_or(false),
     };
     sc.validate()?;
     Ok(sc)
@@ -172,6 +178,22 @@ mod tests {
         assert_eq!(back, sc);
         // And the serialized form itself is stable.
         assert_eq!(scenario_to_json_string(&back), text);
+    }
+
+    #[test]
+    fn hier_flag_roundtrips_and_replays_on_the_hier_runtime() {
+        let mut sc = ChaosScenario::baseline(4, 23, 80, 4, Technique::Fac, true, 5e-5);
+        sc.arm_hier();
+        assert!(sc.hier);
+        let back = scenario_from_json_str(&scenario_to_json_string(&sc)).unwrap();
+        assert_eq!(back, sc);
+        let (_sc, runs, _checks, violations) =
+            replay_str(&scenario_to_json_string(&sc)).unwrap();
+        assert!(
+            runs.iter().any(|r| r.runtime == crate::config::RuntimeKind::Hier),
+            "armed reproducers must re-execute the hier runtime"
+        );
+        assert!(violations.is_empty(), "{violations:?}");
     }
 
     #[test]

@@ -33,11 +33,24 @@ pub struct ChaosSettings {
     /// Arm a deliberate coordinator bug in every drawn scenario — the
     /// oracle self-test path (see [`BugHook`]).  Never set by the CLI.
     pub bug: Option<BugHook>,
+    /// Run the two-level hierarchical runtime as an additional differential
+    /// oracle on every hier-expressible schedule (`rdlb chaos --hier`).
+    /// Off by default so `(seed, budget)` campaigns keep byte-identical
+    /// output across versions.
+    pub hier: bool,
 }
 
 impl ChaosSettings {
     pub fn new(seed: u64, budget: ChaosBudget) -> ChaosSettings {
-        ChaosSettings { seed, budget, out_dir: None, shrink_budget: 64, verbose: false, bug: None }
+        ChaosSettings {
+            seed,
+            budget,
+            out_dir: None,
+            shrink_budget: 64,
+            verbose: false,
+            bug: None,
+            hier: false,
+        }
     }
 }
 
@@ -95,7 +108,12 @@ pub fn run_chaos(settings: &ChaosSettings) -> Result<ChaosOutcome> {
     };
     let total = settings.budget.scenarios;
     for i in 0..total {
-        let sc = gen.next_scenario();
+        let mut sc = gen.next_scenario();
+        if settings.hier {
+            // No RNG draws involved: the schedule sequence is identical
+            // with or without the hierarchical differential runs.
+            sc.arm_hier();
+        }
         // An execution error (worker panic, runtime construction failure)
         // is itself a finding — record it as a failing schedule and keep
         // the campaign going, exactly as the shrinker treats it, instead
@@ -187,6 +205,20 @@ mod tests {
         assert!(a.runs >= 12, "every scenario runs at least on the net runtime");
         assert_eq!((a.scenarios, a.runs, a.checks), (b.scenarios, b.runs, b.checks));
         assert_eq!(a.summary(), b.summary());
+    }
+
+    #[test]
+    fn hier_campaign_adds_runs_and_stays_deterministic() {
+        let mut settings = quiet(5, 8);
+        settings.hier = true;
+        let a = run_chaos(&settings).unwrap();
+        let b = run_chaos(&settings).unwrap();
+        assert!(a.passed(), "{:?}", a.failures);
+        assert_eq!(a.summary(), b.summary(), "hier campaigns must stay seed-deterministic");
+        let base = run_chaos(&quiet(5, 8)).unwrap();
+        assert!(base.passed(), "{:?}", base.failures);
+        assert!(a.runs >= base.runs, "arming hier can only add runtime runs");
+        assert_eq!(a.scenarios, base.scenarios);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use anyhow::{Context, Result};
 
 use crate::apps::{AppKind, CostModel, MandelbrotApp};
 use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
+use crate::hier::{HierParams, HierRuntime};
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
 use crate::net::{
     run_worker, FaultInjectingTransport, FaultSpec, Frame, LoopbackTransport, NetMaster,
@@ -92,6 +93,9 @@ pub fn execute_on(sc: &ChaosScenario, kind: RuntimeKind) -> Result<RuntimeRun> {
         RuntimeKind::Native => {
             run_native(sc).with_context(|| format!("native run of {}", sc.label()))?
         }
+        RuntimeKind::Hier => {
+            run_hier(sc).with_context(|| format!("hier run of {}", sc.label()))?
+        }
         RuntimeKind::Net => {
             return run_net(sc).with_context(|| format!("net run of {}", sc.label()))
         }
@@ -127,11 +131,26 @@ fn run_native(sc: &ChaosScenario) -> Result<Outcome> {
     params.tech_params.seed = sc.seed ^ 0x4A4D;
     params.timeout = Duration::from_millis(sc.timeout_ms);
     for (w, fault) in sc.faults.iter().enumerate() {
-        params.failures[w] = fault.fail_after;
-        params.slowdown[w] = fault.slowdown;
-        params.latency[w] = fault.latency;
+        params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
     }
     NativeRuntime::new(params)?.run()
+}
+
+/// The two-level hierarchical run: 2 groups of P/2 workers, per-worker
+/// envelopes mapped globally — a fault on a group's first slot (group 1's
+/// local 0 = global worker P/2) is a group-master fail-stop, so drawn
+/// schedules routinely kill a whole group.
+fn run_hier(sc: &ChaosScenario) -> Result<Outcome> {
+    anyhow::ensure!(sc.hier_capable(), "schedule is not hier-expressible: {}", sc.label());
+    let groups = 2;
+    let wpg = sc.p / groups;
+    let mut params = HierParams::new(sc.n, groups, wpg, sc.technique, sc.rdlb, backend(sc));
+    params.tech_params.seed = sc.seed ^ 0x4A4D;
+    params.timeout = Duration::from_millis(sc.timeout_ms);
+    for (w, fault) in sc.faults.iter().enumerate() {
+        params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
+    }
+    HierRuntime::new(params)?.run()
 }
 
 /// The full-surface net execution: one loopback connection per worker,
@@ -240,6 +259,26 @@ mod tests {
         assert_eq!(net.outcome.stats.refused_workers, 1);
         assert_eq!(net.reports[2].chunks, 0, "refused peer must never be scheduled");
         assert_eq!(net.outcome.result_digest, expected_digest(&sc));
+    }
+
+    #[test]
+    fn hier_joins_the_differential_oracle_with_digest_parity() {
+        let mut sc = ChaosScenario::baseline(7, 17, 120, 4, Technique::Fac, true, 5e-5);
+        sc.arm_hier();
+        // Global worker 2 = group 1's master slot: a group-master
+        // fail-stop rides an ordinary drawn fault schedule.
+        sc.faults[2].fail_after = Some(0.004);
+        let runs = execute_scenario(&sc).unwrap();
+        assert!(runs.iter().any(|r| r.runtime == RuntimeKind::Hier), "{runs:?}");
+        for run in runs.iter().filter(|r| r.runtime != RuntimeKind::Sim) {
+            assert!(run.outcome.completed(), "{:?}: {:?}", run.runtime, run.outcome);
+            assert_eq!(
+                run.outcome.result_digest,
+                expected_digest(&sc),
+                "{:?} must agree with the serial kernel",
+                run.runtime
+            );
+        }
     }
 
     #[test]

@@ -57,6 +57,13 @@ fn candidates(sc: &ChaosScenario) -> Vec<ChaosScenario> {
         c.wire = WireChaos::quiet();
         out.push(c);
     }
+    // A failure that also reproduces without the hierarchical differential
+    // run is simpler to diagnose; a hier-only failure keeps the flag.
+    if sc.hier {
+        let mut c = sc.clone();
+        c.hier = false;
+        out.push(c);
+    }
     if let ChaosApp::Mandelbrot { .. } = sc.app {
         let mut c = sc.clone();
         c.app = ChaosApp::Synthetic;
@@ -108,6 +115,17 @@ fn candidates(sc: &ChaosScenario) -> Vec<ChaosScenario> {
     if sc.p > 2 {
         let mut c = sc.clone();
         c.p -= 1;
+        c.faults.pop();
+        out.push(c);
+    }
+    // Hier schedules need an even P ≥ 4, so the drop-one candidate above is
+    // always rejected by validate() while the flag is armed: drop a pair
+    // instead, keeping the worker-count dimension shrinkable for exactly
+    // the hier-only failures the flag exists to find.
+    if sc.hier && sc.p > 4 {
+        let mut c = sc.clone();
+        c.p -= 2;
+        c.faults.pop();
         c.faults.pop();
         out.push(c);
     }
@@ -181,6 +199,23 @@ mod tests {
                     || c.faults.iter().zip(&sc.faults).any(|(a, b)| a.fail_after < b.fail_after),
                 "every candidate must simplify something"
             );
+        }
+    }
+
+    #[test]
+    fn hier_candidates_drop_worker_pairs() {
+        let mut sc = ChaosScenario::baseline(3, 7, 100, 6, Technique::Fac, true, 1e-4);
+        sc.arm_hier();
+        let cs = candidates(&sc);
+        assert!(
+            cs.iter().any(|c| c.hier && c.p == 4),
+            "hier pair-drop candidate must survive validation"
+        );
+        assert!(cs.iter().any(|c| !c.hier && c.p == 6), "drop-hier candidate present");
+        // The odd single-drop candidate cannot survive while armed.
+        assert!(cs.iter().all(|c| !(c.hier && c.p == 5)));
+        for c in &cs {
+            c.validate().unwrap();
         }
     }
 

@@ -20,6 +20,10 @@ pub enum RuntimeKind {
     /// Distributed master–worker runtime over the wire protocol
     /// (loopback in-process, or TCP across OS processes).
     Net,
+    /// Two-level hierarchical runtime: a root engine schedules super-chunks
+    /// across [`NetSettings::groups`] group masters, each running a full
+    /// inner rDLB engine over its share of the PEs.
+    Hier,
 }
 
 impl RuntimeKind {
@@ -28,6 +32,7 @@ impl RuntimeKind {
             RuntimeKind::Sim => "sim",
             RuntimeKind::Native => "native",
             RuntimeKind::Net => "net",
+            RuntimeKind::Hier => "hier",
         }
     }
 
@@ -36,6 +41,7 @@ impl RuntimeKind {
             "sim" | "simulator" => Some(RuntimeKind::Sim),
             "native" | "threads" => Some(RuntimeKind::Native),
             "net" | "tcp" | "distributed" => Some(RuntimeKind::Net),
+            "hier" | "hierarchical" | "two-level" => Some(RuntimeKind::Hier),
             _ => None,
         }
     }
@@ -63,6 +69,9 @@ pub struct NetSettings {
     pub spawn_local: Option<usize>,
     /// Wall-clock hang bound for the run, seconds.
     pub timeout_secs: u64,
+    /// Group-master count for [`RuntimeKind::Hier`] (must divide the PE
+    /// count; each group runs P/groups workers).
+    pub groups: usize,
 }
 
 impl Default for NetSettings {
@@ -72,17 +81,20 @@ impl Default for NetSettings {
             connect: "127.0.0.1:7077".to_string(),
             spawn_local: None,
             timeout_secs: 60,
+            groups: 2,
         }
     }
 }
 
 impl NetSettings {
-    /// JSON form: `{"listen": .., "connect": .., "spawn_local": .., "timeout_secs": ..}`.
+    /// JSON form: `{"listen": .., "connect": .., "spawn_local": ..,
+    /// "timeout_secs": .., "groups": ..}`.
     pub fn to_json(&self) -> Json {
         let mut obj = vec![
             ("listen", Json::str(self.listen.as_str())),
             ("connect", Json::str(self.connect.as_str())),
             ("timeout_secs", Json::num(self.timeout_secs as f64)),
+            ("groups", Json::num(self.groups as f64)),
         ];
         if let Some(p) = self.spawn_local {
             obj.push(("spawn_local", Json::num(p as f64)));
@@ -105,6 +117,7 @@ impl NetSettings {
                 .unwrap_or(d.connect),
             spawn_local: v.get("spawn_local").and_then(Json::as_usize),
             timeout_secs: v.get("timeout_secs").and_then(Json::as_u64).unwrap_or(d.timeout_secs),
+            groups: v.get("groups").and_then(Json::as_usize).unwrap_or(d.groups),
         })
     }
 }
@@ -243,6 +256,15 @@ impl ExperimentConfig {
         ensure!(self.nodes > 0 && self.ranks_per_node > 0, "empty topology");
         ensure!(self.n() > 0, "no tasks");
         ensure!(self.mean_cost > 0.0, "mean_cost must be positive");
+        if self.runtime == RuntimeKind::Hier {
+            ensure!(self.net.groups >= 1, "hier runtime needs at least one group");
+            ensure!(
+                self.pes() % self.net.groups == 0,
+                "hier runtime needs P divisible by groups (P={}, groups={})",
+                self.pes(),
+                self.net.groups
+            );
+        }
         match self.scenario {
             Scenario::Baseline => {}
             Scenario::Failures { count } => {
@@ -631,6 +653,7 @@ mod tests {
                 connect: "10.0.0.1:9000".into(),
                 spawn_local: Some(4),
                 timeout_secs: 120,
+                groups: 4,
             })
             .build()
             .unwrap();
@@ -641,6 +664,23 @@ mod tests {
         let plain = ExperimentConfig::from_json("{}").unwrap();
         assert_eq!(plain.runtime, RuntimeKind::Sim);
         assert_eq!(plain.net, NetSettings::default());
+    }
+
+    #[test]
+    fn hier_runtime_validates_group_divisibility() {
+        let ok = ExperimentConfig::builder()
+            .pes(8)
+            .tasks(100)
+            .runtime(RuntimeKind::Hier)
+            .build()
+            .unwrap();
+        assert_eq!(ok.net.groups, 2, "default group count");
+        let mut bad = ok.clone();
+        bad.net.groups = 3;
+        assert!(bad.validate().is_err(), "8 PEs don't split into 3 groups");
+        assert_eq!(RuntimeKind::parse("hier"), Some(RuntimeKind::Hier));
+        assert_eq!(RuntimeKind::parse("two-level"), Some(RuntimeKind::Hier));
+        assert_eq!(RuntimeKind::Hier.name(), "hier");
     }
 
     #[test]

@@ -1,0 +1,569 @@
+//! The sans-I/O coordinator engine: the **single** dispatch/park/wake
+//! implementation shared by every runtime.
+//!
+//! The rDLB paper's scalability claim is about the coordinator *logic*, not
+//! about any particular transport.  This module is that logic with all I/O
+//! removed: a pure, single-threaded state machine that consumes
+//! [`EngineEvent`]s (a worker requests work, a result arrives, a peer is
+//! refused at registration, the hang bound expires) and emits [`Effect`]s
+//! (hand out this chunk, park this worker, wake those parked workers, tell
+//! a worker to exit, the run is complete).  It owns the [`Master`], the
+//! [`ParkedSet`], the wake-pass ordering, the exactly-once result-digest
+//! attribution, and the useful/wasted-work split that previously lived in
+//! three drifting copies inside `sim`, `native` and `net`.
+//!
+//! The drivers are thin translators:
+//!
+//! * the **simulator** turns queue events into engine events and delivers
+//!   `Wake` effects by enqueueing the woken worker's request at the current
+//!   virtual time (requests sit *at* the master, so waking adds no message
+//!   latency);
+//! * the **native** and **net** runtimes deliver `Wake` by immediately
+//!   re-submitting [`EngineEvent::WorkerRequest`] for the woken worker, and
+//!   turn `Assign`/`Park`/`TerminateWorker` into channel sends or wire
+//!   frames;
+//! * the **hier** runtime embeds one engine per level: a root engine over
+//!   group masters and a fresh inner engine per super-chunk inside each
+//!   group.
+//!
+//! ## Park/wake semantics (the uniform behavior decision)
+//!
+//! Every parked worker is woken on **every** result receipt — including a
+//! result that finishes nothing new (an all-duplicate completion).  The
+//! pool size is not the only thing a result can change: a completion also
+//! *releases the reporting worker's holds*, and the rDLB rule "never hand a
+//! worker an iteration it already holds" means a parked worker can become
+//! servable without the pending count shrinking.  A spurious wake is
+//! harmless — the woken worker's request merely parks again — while a
+//! missed wake is a liveness bug.  This rule is now enforced in exactly one
+//! place and pinned by a regression test
+//! (`tests/engine_script.rs::duplicate_result_still_wakes_parked_workers`);
+//! previously each runtime hand-rolled its own wake pass and they had begun
+//! to drift.
+//!
+//! ## Effect contract
+//!
+//! `handle` appends effects in a documented, driver-relied-upon shape:
+//!
+//! | event | effects |
+//! |---|---|
+//! | `WorkerRequest` | exactly one of `Assign` / `Park` / `TerminateWorker` |
+//! | `ResultReceived` | `[Completed]`, or zero-or-more `Wake`s (in park order) |
+//! | `VersionRefused` | `[TerminateWorker]` |
+//! | `WorkerDisconnected` | none (the paper's no-detection semantics) |
+//! | `Timeout` | none (the engine records the hang; the driver stops) |
+//!
+//! A `Wake { worker }` means "this worker's pending request may now be
+//! servable — re-submit `WorkerRequest` for it".  When and how that
+//! re-submission happens (immediately, or through an event queue) is the
+//! driver's I/O concern; *who* is woken, and in what order, is the
+//! engine's.
+
+use super::assignment::{Assignment, AssignmentId};
+use super::master::{Master, MasterConfig, Reply};
+use super::stats::MasterStats;
+use crate::util::ParkedSet;
+
+/// An I/O observation translated by a driver into coordinator terms.
+#[derive(Debug, Clone, Copy)]
+pub enum EngineEvent<'a> {
+    /// A registered worker asks for work (its first request, a piggy-backed
+    /// request after a result, or the re-submission of a `Wake`).
+    WorkerRequest {
+        /// Requesting worker id.
+        worker: usize,
+    },
+    /// A completed chunk arrived.  `digests` carries one per-task result
+    /// value in assignment-position order on the wall-clock runtimes; the
+    /// virtual-time simulator passes an empty slice (it computes nothing)
+    /// and the engine then derives the duplicate split from the master's
+    /// counters instead.
+    ResultReceived {
+        /// Reporting worker id.
+        worker: usize,
+        /// The id the chunk was issued under.
+        assignment_id: AssignmentId,
+        /// Worker-side compute seconds for the chunk.
+        compute_secs: f64,
+        /// Per-task digests in assignment-position order (empty = none).
+        digests: &'a [f64],
+    },
+    /// A worker's connection closed.  Faithful to the paper, this is
+    /// recorded and otherwise ignored: the master performs no failure
+    /// detection, and lost work is only ever recovered by rDLB re-dispatch.
+    WorkerDisconnected {
+        /// The worker whose connection closed.
+        worker: usize,
+    },
+    /// A peer was refused at registration (wire-protocol version mismatch).
+    /// Counted separately from fail-stops so a refused peer stays
+    /// distinguishable in the final stats.
+    VersionRefused {
+        /// The refused connection's worker slot.
+        worker: usize,
+    },
+    /// The wall-clock hang bound expired (the paper's "waits indefinitely"
+    /// outcome, bounded for practicality).  The engine records whether the
+    /// run actually hung; the driver stops its loop.
+    Timeout,
+}
+
+/// An action the driver must perform on its I/O.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Effect {
+    /// Send this chunk to `Assignment::worker`.
+    Assign(Assignment),
+    /// Nothing is assignable to this worker right now; it is parked inside
+    /// the engine.  Drivers with an explicit wait signal (the net runtime's
+    /// `Wait` frame) send it; the others do nothing.
+    Park {
+        /// The parked worker.
+        worker: usize,
+    },
+    /// A parked worker's pending request may now be servable: re-submit
+    /// [`EngineEvent::WorkerRequest`] for it.
+    Wake {
+        /// The woken worker.
+        worker: usize,
+    },
+    /// Tell this worker to exit (Terminate frame / channel close).
+    TerminateWorker {
+        /// The terminated worker.
+        worker: usize,
+    },
+    /// Every iteration is Finished: stop the run and terminate everyone
+    /// (the distributed equivalent of the paper's `MPI_Abort`).
+    Completed,
+}
+
+/// The runtime-agnostic coordinator state machine.  Pure: it never blocks,
+/// sleeps, reads clocks, or touches sockets/threads — drivers feed it
+/// `(now, event)` pairs and execute the effects it returns.
+pub struct Engine {
+    master: Master,
+    parked: ParkedSet,
+    /// Scratch for the wake pass (reused; no steady-state allocation).
+    woken: Vec<u32>,
+    /// Scratch for [`Engine::on_result_with`] (reused across results).
+    effects_scratch: Vec<Effect>,
+    useful: f64,
+    wasted: f64,
+    digest: f64,
+    refused: u64,
+    disconnects: u64,
+    hung: bool,
+}
+
+impl Engine {
+    /// Build an engine (and its [`Master`]) for one run.
+    pub fn new(cfg: MasterConfig) -> Engine {
+        let p = cfg.p;
+        Engine {
+            master: Master::new(cfg),
+            parked: ParkedSet::new(p),
+            woken: Vec::with_capacity(p),
+            effects_scratch: Vec::with_capacity(p + 1),
+            useful: 0.0,
+            wasted: 0.0,
+            digest: 0.0,
+            refused: 0,
+            disconnects: 0,
+            hung: false,
+        }
+    }
+
+    /// **Test-only**: arm the master's deliberate drop-one-re-dispatch bug
+    /// (the chaos oracle's self-test; see
+    /// [`Master::enable_test_drop_one_redispatch`]).
+    #[doc(hidden)]
+    pub fn arm_test_drop_one_redispatch(&mut self) {
+        self.master.enable_test_drop_one_redispatch();
+    }
+
+    /// Consume one event at master-clock `now`, appending the resulting
+    /// effects to `out` (which is *not* cleared — drivers own the buffer).
+    /// See the module docs for the per-event effect contract.
+    pub fn handle(&mut self, now: f64, event: EngineEvent<'_>, out: &mut Vec<Effect>) {
+        match event {
+            EngineEvent::WorkerRequest { worker } => self.dispatch(worker, now, out),
+            EngineEvent::ResultReceived { worker, assignment_id, compute_secs, digests } => {
+                let dup_before = self.master.stats().duplicate_iterations;
+                let newly = self.master.on_result(worker, assignment_id, compute_secs, now);
+                let fins = newly.len() as f64;
+                // Wall-clock results report one digest per task, so the
+                // duplicate share is everything beyond the first
+                // completions; the simulator reports no digests and the
+                // master's counter delta is used instead (identical for any
+                // well-formed result — the counter path merely also ignores
+                // unknown-id results, which the simulator cannot produce).
+                let dups = if digests.is_empty() {
+                    (self.master.stats().duplicate_iterations - dup_before) as f64
+                } else {
+                    (digests.len() as f64 - fins).max(0.0)
+                };
+                if dups + fins > 0.0 {
+                    self.wasted += compute_secs * dups / (dups + fins);
+                    self.useful += compute_secs * fins / (dups + fins);
+                }
+                // Exactly-once digest attribution: only positions whose
+                // completion was the FIRST one contribute.
+                for &pos in &newly {
+                    if let Some(d) = digests.get(pos) {
+                        self.digest += d;
+                    }
+                }
+                if self.master.is_complete() {
+                    out.push(Effect::Completed);
+                    return;
+                }
+                // The uniform wake pass (see module docs): every parked
+                // worker is woken on every result, in park order; skipped
+                // entirely when nothing is parked.
+                if !self.parked.is_empty() {
+                    self.parked.drain_into(&mut self.woken);
+                    for &w in &self.woken {
+                        out.push(Effect::Wake { worker: w as usize });
+                    }
+                }
+            }
+            EngineEvent::WorkerDisconnected { worker: _ } => {
+                // No detection: rDLB recovers the work, or the run hangs.
+                self.disconnects += 1;
+            }
+            EngineEvent::VersionRefused { worker } => {
+                self.refused += 1;
+                out.push(Effect::TerminateWorker { worker });
+            }
+            EngineEvent::Timeout => {
+                if !self.master.is_complete() {
+                    self.hung = true;
+                }
+            }
+        }
+    }
+
+    /// The one result-effect interpreter shared by every wall-clock driver
+    /// (the simulator uses it too, queueing wakes instead of serving them):
+    /// consume a result, invoke `serve(engine, worker)` for each `Wake` in
+    /// park order, and return whether the run completed.  `serve` delivers
+    /// the woken worker's re-submitted request however the driver's I/O
+    /// works — typically by feeding [`EngineEvent::WorkerRequest`] back in
+    /// and executing the single effect.  Built on [`Engine::handle`], so
+    /// the effect contract (and the scripted tests pinning it) remains the
+    /// single source of truth.
+    pub fn on_result_with(
+        &mut self,
+        now: f64,
+        worker: usize,
+        assignment_id: AssignmentId,
+        compute_secs: f64,
+        digests: &[f64],
+        mut serve: impl FnMut(&mut Engine, usize),
+    ) -> bool {
+        // Take the scratch out of `self` so `serve` may re-borrow the
+        // engine re-entrantly while the effect list is iterated.
+        let mut effects = std::mem::take(&mut self.effects_scratch);
+        effects.clear();
+        self.handle(
+            now,
+            EngineEvent::ResultReceived { worker, assignment_id, compute_secs, digests },
+            &mut effects,
+        );
+        let mut completed = false;
+        for eff in &effects {
+            match eff {
+                Effect::Completed => {
+                    completed = true;
+                    break;
+                }
+                Effect::Wake { worker } => serve(self, *worker),
+                _ => {}
+            }
+        }
+        self.effects_scratch = effects;
+        completed
+    }
+
+    /// Answer one work request: the only dispatch implementation in the
+    /// crate (drivers translate the returned effect, never re-decide it).
+    fn dispatch(&mut self, worker: usize, now: f64, out: &mut Vec<Effect>) {
+        match self.master.on_request(worker, now) {
+            Reply::Assign(a) => out.push(Effect::Assign(a)),
+            Reply::Wait => {
+                self.parked.insert(worker);
+                out.push(Effect::Park { worker });
+            }
+            Reply::Terminate => out.push(Effect::TerminateWorker { worker }),
+        }
+    }
+
+    /// Add driver-observed wasted compute (e.g. the simulator's
+    /// partial work burned by a mid-compute fail-stop) into the same
+    /// accumulator as the duplicate-completion waste, preserving the
+    /// pre-refactor accumulation order bit for bit.
+    pub fn note_wasted(&mut self, secs: f64) {
+        self.wasted += secs;
+    }
+
+    /// True once every iteration is Finished.
+    pub fn is_complete(&self) -> bool {
+        self.master.is_complete()
+    }
+
+    /// Iterations whose first completion arrived.
+    pub fn finished_count(&self) -> usize {
+        self.master.table().finished_count()
+    }
+
+    /// Did a [`EngineEvent::Timeout`] arrive before completion?
+    pub fn hung(&self) -> bool {
+        self.hung
+    }
+
+    /// Seconds of compute attributed to first completions.
+    pub fn useful_work(&self) -> f64 {
+        self.useful
+    }
+
+    /// Seconds of compute attributed to duplicates / lost mid-compute work.
+    pub fn wasted_work(&self) -> f64 {
+        self.wasted
+    }
+
+    /// Sum of per-task digests, exactly one contribution per iteration.
+    pub fn result_digest(&self) -> f64 {
+        self.digest
+    }
+
+    /// Connections observed closing ([`EngineEvent::WorkerDisconnected`]).
+    pub fn disconnects(&self) -> u64 {
+        self.disconnects
+    }
+
+    /// Workers currently parked, in park order (the hier runtime carries
+    /// these pending requests across inner runs).
+    pub fn parked(&self) -> &[u32] {
+        self.parked.as_slice()
+    }
+
+    /// The master's counters with the engine-owned refusal count folded in
+    /// — the single `MasterStats` assembly point for every runtime.
+    pub fn final_stats(&self) -> MasterStats {
+        let mut stats = self.master.stats().clone();
+        stats.refused_workers = self.refused;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dls::{Technique, TechniqueParams};
+
+    fn engine(n: usize, p: usize, technique: Technique, rdlb: bool) -> Engine {
+        Engine::new(MasterConfig {
+            n,
+            p,
+            technique,
+            params: TechniqueParams::default(),
+            rdlb,
+        })
+    }
+
+    fn one(e: &mut Engine, now: f64, ev: EngineEvent<'_>) -> Effect {
+        let mut out = Vec::new();
+        e.handle(now, ev, &mut out);
+        assert_eq!(out.len(), 1, "expected exactly one effect, got {out:?}");
+        out.pop().unwrap()
+    }
+
+    #[test]
+    fn request_yields_exactly_one_effect() {
+        let mut e = engine(4, 2, Technique::Ss, true);
+        match one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 0 }) {
+            Effect::Assign(a) => assert_eq!(a.worker, 0),
+            other => panic!("expected Assign, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn completion_emits_completed_and_suppresses_wakes() {
+        let mut e = engine(1, 2, Technique::Ss, true);
+        let a = match one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 0 }) {
+            Effect::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        // Park worker 1 (it holds nothing, but the only task is held by 0
+        // and rDLB never duplicates onto the holder... it does not hold it,
+        // so it receives the duplicate instead; park it after that).
+        match one(&mut e, 0.1, EngineEvent::WorkerRequest { worker: 1 }) {
+            Effect::Assign(dup) => assert!(dup.rescheduled),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            one(&mut e, 0.2, EngineEvent::WorkerRequest { worker: 1 }),
+            Effect::Park { worker: 1 }
+        ));
+        // First completion finishes everything: Completed, with no Wake
+        // for the parked worker 1.
+        let digests = [7.0];
+        let eff = one(
+            &mut e,
+            0.3,
+            EngineEvent::ResultReceived {
+                worker: 0,
+                assignment_id: a.id,
+                compute_secs: 0.1,
+                digests: &digests,
+            },
+        );
+        assert_eq!(eff, Effect::Completed);
+        assert!(e.is_complete());
+        assert_eq!(e.result_digest(), 7.0);
+        assert_eq!(e.useful_work(), 0.1);
+        assert_eq!(e.wasted_work(), 0.0);
+    }
+
+    #[test]
+    fn on_result_with_serves_wakes_and_reports_completion() {
+        // Same scripted shape as `completion_emits_completed...`, driven
+        // through the shared interpreter: the parked worker is served via
+        // the callback on a non-final result, and the final result returns
+        // `true` without invoking it.
+        let mut e = engine(2, 2, Technique::Gss, true);
+        let a0 = match one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 0 }) {
+            Effect::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let a1 = match one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 1 }) {
+            Effect::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        // Worker 1 duplicates task 0 via rDLB, then parks (holds both).
+        let dup = match one(&mut e, 0.1, EngineEvent::WorkerRequest { worker: 1 }) {
+            Effect::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert!(dup.rescheduled);
+        assert!(matches!(
+            one(&mut e, 0.2, EngineEvent::WorkerRequest { worker: 1 }),
+            Effect::Park { worker: 1 }
+        ));
+        let d = [1.0];
+        let mut served = Vec::new();
+        let completed = e.on_result_with(0.3, 1, a1.id, 0.1, &d, |_, w| served.push(w));
+        assert!(!completed, "task 0 still pending");
+        assert_eq!(served, vec![1], "the parked worker is served through the callback");
+        let completed = e.on_result_with(0.4, 0, a0.id, 0.1, &d, |_, w| served.push(w));
+        assert!(completed);
+        assert_eq!(served, vec![1], "no wakes on the completing result");
+        assert_eq!(e.result_digest(), 2.0);
+    }
+
+    #[test]
+    fn refusal_counts_and_terminates() {
+        let mut e = engine(4, 2, Technique::Fac, true);
+        let eff = one(&mut e, 0.0, EngineEvent::VersionRefused { worker: 1 });
+        assert_eq!(eff, Effect::TerminateWorker { worker: 1 });
+        assert_eq!(e.final_stats().refused_workers, 1);
+    }
+
+    #[test]
+    fn disconnect_is_recorded_but_inert() {
+        let mut e = engine(4, 2, Technique::Fac, true);
+        let mut out = Vec::new();
+        e.handle(0.0, EngineEvent::WorkerDisconnected { worker: 1 }, &mut out);
+        assert!(out.is_empty(), "no detection: {out:?}");
+        assert_eq!(e.disconnects(), 1);
+    }
+
+    #[test]
+    fn timeout_records_hang_only_when_incomplete() {
+        let mut e = engine(1, 1, Technique::Ss, true);
+        let mut out = Vec::new();
+        e.handle(5.0, EngineEvent::Timeout, &mut out);
+        assert!(out.is_empty() && e.hung());
+        // A completed engine does not hang at the bound.
+        let mut done = engine(1, 1, Technique::Ss, true);
+        let a = match one(&mut done, 0.0, EngineEvent::WorkerRequest { worker: 0 }) {
+            Effect::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let d = [1.0];
+        let _ = one(
+            &mut done,
+            0.1,
+            EngineEvent::ResultReceived {
+                worker: 0,
+                assignment_id: a.id,
+                compute_secs: 0.1,
+                digests: &d,
+            },
+        );
+        done.handle(5.0, EngineEvent::Timeout, &mut out);
+        assert!(!done.hung());
+    }
+
+    #[test]
+    fn simulator_mode_splits_waste_from_counter_delta() {
+        // Empty digest slices (the simulator) must produce the same
+        // useful/wasted split as explicit per-task digests.
+        let mk = |with_digests: bool| {
+            let mut e = engine(2, 2, Technique::Gss, true);
+            let a0 = match one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 0 }) {
+                Effect::Assign(a) => a,
+                other => panic!("{other:?}"),
+            };
+            let a1 = match one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 1 }) {
+                Effect::Assign(a) => a,
+                other => panic!("{other:?}"),
+            };
+            let d1 = [1.0];
+            let mut out = Vec::new();
+            e.handle(
+                0.1,
+                EngineEvent::ResultReceived {
+                    worker: 1,
+                    assignment_id: a1.id,
+                    compute_secs: 0.1,
+                    digests: if with_digests { &d1 } else { &[] },
+                },
+                &mut out,
+            );
+            assert!(out.is_empty(), "nothing parked, not complete: {out:?}");
+            // Worker 1 now duplicates worker 0's task via rDLB.
+            let dup = match one(&mut e, 0.2, EngineEvent::WorkerRequest { worker: 1 }) {
+                Effect::Assign(a) => a,
+                other => panic!("{other:?}"),
+            };
+            assert!(dup.rescheduled);
+            // Original first, duplicate second: the duplicate is all waste.
+            let d0 = [1.0];
+            e.handle(
+                0.5,
+                EngineEvent::ResultReceived {
+                    worker: 0,
+                    assignment_id: a0.id,
+                    compute_secs: 0.5,
+                    digests: if with_digests { &d0 } else { &[] },
+                },
+                &mut out,
+            );
+            e.handle(
+                0.6,
+                EngineEvent::ResultReceived {
+                    worker: 1,
+                    assignment_id: dup.id,
+                    compute_secs: 0.4,
+                    digests: if with_digests { &d0 } else { &[] },
+                },
+                &mut out,
+            );
+            (e.useful_work(), e.wasted_work())
+        };
+        assert_eq!(mk(true), mk(false));
+        let (useful, wasted) = mk(true);
+        assert_eq!(useful, 0.1 + 0.5);
+        assert_eq!(wasted, 0.4);
+    }
+}

@@ -4,17 +4,25 @@
 //! iteration; [`Master`] is the DLS4LB-style master state machine extended
 //! with the rDLB re-dispatch loop.  The master is *pure*: it is driven
 //! exclusively through [`Master::on_request`] / [`Master::on_result`] and
-//! never touches clocks, sockets or threads — the discrete-event simulator,
-//! the native thread runtime and the distributed net runtime all embed the
-//! identical object, which is what makes the simulator a faithful
-//! substitute for the MPI library.
+//! never touches clocks, sockets or threads.
+//!
+//! [`Engine`] wraps the master into the **sans-I/O coordinator engine**: a
+//! state machine consuming [`EngineEvent`]s and emitting [`Effect`]s that
+//! also owns parking/waking, exactly-once digest attribution and the
+//! useful/wasted-work split.  The discrete-event simulator, the native
+//! thread runtime, the distributed net runtime and both levels of the
+//! hierarchical runtime are thin I/O drivers around the identical engine —
+//! which is what makes the simulator a faithful substitute for the MPI
+//! library, and `ARCHITECTURE.md`'s engine/driver split possible.
 
 mod assignment;
+mod engine;
 mod master;
 mod stats;
 mod task_table;
 
 pub use assignment::{Assignment, AssignmentId, TaskSet, TaskSetIter};
+pub use engine::{Effect, Engine, EngineEvent};
 pub use master::{Master, MasterConfig, Reply};
 pub use stats::MasterStats;
 pub use task_table::{TaskFlag, TaskTable};

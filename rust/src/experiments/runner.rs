@@ -1,8 +1,8 @@
 //! Replicated-cell execution: one Table 1 cell = (app, technique, rDLB,
 //! scenario) × `reps` replications, aggregated — plus single-run execution
 //! of any configured scenario on any [`RuntimeKind`] (simulator, native
-//! threads, or the distributed net runtime), all producing the same
-//! [`Outcome`] shape.
+//! threads, the distributed net runtime, or the two-level hierarchical
+//! runtime), all producing the same [`Outcome`] shape.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -12,6 +12,7 @@ use anyhow::Result;
 use crate::apps::Workload;
 use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
 use crate::dls::TechniqueParams;
+use crate::hier::{HierParams, HierRuntime};
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
 use crate::net::{run_loopback, FaultSpec, NetMasterParams};
 use crate::sim::{Outcome, SimCluster};
@@ -270,22 +271,39 @@ pub fn native_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Re
         NativeParams::new(cfg.n(), cfg.pes(), cfg.technique, cfg.rdlb, setup.backend);
     params.tech_params = setup.tech_params;
     for (w, fault) in setup.faults.iter().enumerate() {
-        params.failures[w] = fault.fail_after;
-        params.slowdown[w] = fault.slowdown;
-        params.latency[w] = fault.latency;
+        params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
     }
     params.timeout = setup.timeout;
     NativeRuntime::new(params)?.run()
 }
 
+/// Run replication `rep` of `cfg` on the **two-level hierarchical
+/// runtime**: `cfg.net.groups` group masters (the root's workers), each
+/// driving `P/groups` worker threads, with the same scenario mapping as
+/// [`net_outcome`].  A fault landing on a group's first PE (for groups
+/// other than group 0) is a group-master fail-stop.
+pub fn hier_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
+    let setup = real_runtime_setup(cfg, rep, time_scale)?;
+    let groups = cfg.net.groups;
+    let wpg = cfg.pes() / groups; // divisibility checked by cfg.validate()
+    let mut params = HierParams::new(cfg.n(), groups, wpg, cfg.technique, cfg.rdlb, setup.backend);
+    params.tech_params = setup.tech_params;
+    for (w, fault) in setup.faults.iter().enumerate() {
+        params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
+    }
+    params.timeout = setup.timeout;
+    HierRuntime::new(params)?.run()
+}
+
 /// Execute one replication of `cfg` on whichever runtime `cfg.runtime`
 /// selects. `time_scale` compresses the cost model's virtual seconds into
-/// wall-clock sleeps on the two real runtimes (the simulator ignores it).
+/// wall-clock sleeps on the real runtimes (the simulator ignores it).
 pub fn run_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
     match cfg.runtime {
         RuntimeKind::Sim => SimCluster::new(cfg.sim_params(rep)?)?.run(),
         RuntimeKind::Native => native_outcome(cfg, rep, time_scale),
         RuntimeKind::Net => net_outcome(cfg, rep, time_scale),
+        RuntimeKind::Hier => hier_outcome(cfg, rep, time_scale),
     }
 }
 
@@ -359,8 +377,8 @@ mod tests {
     }
 
     #[test]
-    fn dispatcher_honors_runtime_kind() {
-        for kind in [RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net] {
+    fn run_outcome_honors_runtime_kind() {
+        for kind in [RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net, RuntimeKind::Hier] {
             let mut cfg = small_cfg(Scenario::Baseline, true);
             cfg.runtime = kind;
             let o = run_outcome(&cfg, 0, 1.0).unwrap();

@@ -1,0 +1,721 @@
+//! Two-level hierarchical runtime: rDLB over rDLB.
+//!
+//! The authors' follow-up work (*Two-level Dynamic Load Balancing for High
+//! Performance Scientific Applications*, PAPERS.md) layers a coarse
+//! scheduling level above the per-worker self-scheduling loop so the single
+//! master stops being the scalability bottleneck.  This runtime is that
+//! design expressed through the sans-I/O [`Engine`]:
+//!
+//! * a **root engine** treats each *group master* as one "worker" of a
+//!   P = `groups` cluster and schedules coarse **super-chunks** of the
+//!   iteration space across them with the ordinary DLS rule — including
+//!   the rDLB re-dispatch phase, so a group master that fail-stops is
+//!   tolerated exactly the way a worker failure is: its in-flight
+//!   super-chunk evaporates and is re-dispatched to a surviving group;
+//! * each group master runs a **fresh inner engine per super-chunk** over
+//!   its `workers_per_group` OS-thread workers (a full rDLB instance in
+//!   the super-chunk's local iteration space), so worker fail-stops,
+//!   slowdowns and latency perturbations are absorbed *inside* the group
+//!   without the root ever hearing about them.
+//!
+//! Fault model: global worker `w = g·W + l` (group `g`, local `l`).  A
+//! fail-stop on a group's local slot 0 of a group `g > 0` is a **group
+//! master** failure — the whole group (master half and workers) goes
+//! silent.  Global worker 0 (group 0, local 0) is pristine, preserving the
+//! paper's surviving-master assumption at both levels: group 0 always makes
+//! progress, so with rDLB on, completion under a group-master fail-stop
+//! plus up to W−1 worker failures in every surviving group remains a
+//! theorem, not a race.
+//!
+//! Exactly-once attribution is layered: an inner engine attributes each
+//! local iteration once within its group and the group reports one digest
+//! per super-chunk position; the root engine's first-completion filter then
+//! attributes each super-chunk position once globally, even when the rDLB
+//! phase duplicated the super-chunk across groups.  Digest parity with the
+//! serial kernel therefore holds bit-for-bit (the kernels' digests are
+//! integer-valued, so the sums are order-independent).
+//!
+//! Useful/wasted-work accounting is layered the same way (groups report
+//! their inner engine's split; the root's first-completion filter splits
+//! only the useful share), with the same tail approximation every runtime
+//! makes at `MPI_Abort`: compute still in flight when the run ends — a
+//! flat runtime's unreported straggler chunk, or here a group's
+//! half-finished super-chunk — is not folded into `Outcome::wasted_work`.
+//!
+//! No new wire frames: the hierarchical runtime is in-process (channels),
+//! like [`crate::native`] — see `PROTOCOL.md` §Hierarchical mode.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    Assignment, AssignmentId, Effect, Engine, EngineEvent, MasterConfig, TaskSet,
+};
+use crate::dls::{Technique, TechniqueParams};
+use crate::native::{compute_chunk_with_faults, ComputeBackend};
+use crate::sim::Outcome;
+
+/// Parameters of one hierarchical execution.
+#[derive(Clone)]
+pub struct HierParams {
+    /// Loop iterations N.
+    pub n: usize,
+    /// Group-master count G (the root's "workers").
+    pub groups: usize,
+    /// Workers per group W; total PEs = G × W.
+    pub workers_per_group: usize,
+    /// DLS rule used by the root (over super-chunks) and by every inner
+    /// engine (over its super-chunk's iterations).
+    pub technique: Technique,
+    pub tech_params: TechniqueParams,
+    /// Enable the rDLB re-dispatch phase on both levels.
+    pub rdlb: bool,
+    pub backend: ComputeBackend,
+    /// Per **global** worker fail-stop time (index `g·W + l`); a time on a
+    /// group's local slot 0 (for `g > 0`) fail-stops the whole group.
+    /// Global worker 0 cannot fail.
+    pub failures: Vec<Option<f64>>,
+    /// Per global worker compute dilation factor (1.0 = nominal).
+    pub slowdown: Vec<f64>,
+    /// Per global worker extra one-way message latency, seconds.
+    pub latency: Vec<f64>,
+    /// Wall-clock hang bound for the whole run.
+    pub timeout: Duration,
+}
+
+impl HierParams {
+    /// Defaults: healthy workers, 60 s hang bound.
+    pub fn new(
+        n: usize,
+        groups: usize,
+        workers_per_group: usize,
+        technique: Technique,
+        rdlb: bool,
+        backend: ComputeBackend,
+    ) -> Self {
+        let total = groups * workers_per_group;
+        HierParams {
+            n,
+            groups,
+            workers_per_group,
+            technique,
+            tech_params: TechniqueParams::default(),
+            rdlb,
+            backend,
+            failures: vec![None; total],
+            slowdown: vec![1.0; total],
+            latency: vec![0.0; total],
+            timeout: Duration::from_secs(60),
+        }
+    }
+
+    /// Total PEs G × W.
+    pub fn total_workers(&self) -> usize {
+        self.groups * self.workers_per_group
+    }
+
+    /// Install one global worker's full fault envelope — the single
+    /// mapping point used by the experiments runner and the chaos harness
+    /// (mirrors [`crate::native::NativeParams::set_fault_envelope`]).
+    pub fn set_fault_envelope(
+        &mut self,
+        worker: usize,
+        fail_after: Option<f64>,
+        slowdown: f64,
+        latency: f64,
+    ) {
+        self.failures[worker] = fail_after;
+        self.slowdown[worker] = slowdown;
+        self.latency[worker] = latency;
+    }
+}
+
+/// The two-level runtime.
+pub struct HierRuntime {
+    params: HierParams,
+}
+
+/// Root → group-master messages.
+enum ToGroup {
+    Assign(Assignment),
+    Terminate,
+}
+
+/// Group-master → root messages (a result piggy-backs the next request).
+struct FromGroup {
+    group: usize,
+    /// `(root assignment id, useful compute seconds, wasted compute
+    /// seconds, one digest per super-chunk position)` of a completed
+    /// super-chunk.  The useful/wasted split comes from the inner engine
+    /// (intra-group rDLB duplicates are waste even when the super-chunk's
+    /// completion is the first one at the root), plus any stale-epoch
+    /// leftovers burned since the previous report.
+    result: Option<(AssignmentId, f64, f64, Vec<f64>)>,
+}
+
+/// Group-master → group-worker messages.  `epoch` identifies the inner run
+/// (one per super-chunk) so leftover duplicate results from a previous run
+/// cannot collide with the fresh engine's assignment ids.
+enum ToGWorker {
+    Assign { epoch: u64, id: AssignmentId, tasks: TaskSet },
+    Terminate,
+}
+
+/// Group-worker → group-master messages.
+struct FromGWorker {
+    local: usize,
+    epoch: u64,
+    result: Option<(AssignmentId, f64, Vec<f64>)>,
+}
+
+impl HierRuntime {
+    pub fn new(params: HierParams) -> Result<Self> {
+        anyhow::ensure!(params.n >= 1, "no tasks");
+        anyhow::ensure!(params.groups >= 1, "need at least one group");
+        anyhow::ensure!(params.workers_per_group >= 1, "need at least one worker per group");
+        let total = params.total_workers();
+        anyhow::ensure!(params.failures.len() == total, "failures sized to G*W");
+        anyhow::ensure!(params.slowdown.len() == total, "slowdown sized to G*W");
+        anyhow::ensure!(params.latency.len() == total, "latency sized to G*W");
+        anyhow::ensure!(
+            params.failures[0].is_none(),
+            "global worker 0 (group 0's master half) cannot fail"
+        );
+        Ok(HierRuntime { params })
+    }
+
+    /// Execute the run: the root loop on this thread, one group-master
+    /// thread per group, W worker threads inside each group.
+    pub fn run(&self) -> Result<Outcome> {
+        let prm = &self.params;
+        let groups = prm.groups;
+        let wpg = prm.workers_per_group;
+        let n = prm.n;
+        // The root engine schedules super-chunks across group masters.
+        let mut engine = Engine::new(MasterConfig {
+            n,
+            p: groups,
+            technique: prm.technique,
+            params: prm.tech_params.clone(),
+            rdlb: prm.rdlb,
+        });
+
+        let start = Instant::now();
+        let hard_deadline = start + prm.timeout;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (to_root, root_rx) = mpsc::channel::<FromGroup>();
+        let mut group_tx: Vec<mpsc::Sender<ToGroup>> = Vec::with_capacity(groups);
+        let mut joins = Vec::with_capacity(groups);
+        for g in 0..groups {
+            let (tx, rx) = mpsc::channel::<ToGroup>();
+            group_tx.push(tx);
+            let ctx = GroupCtx {
+                group: g,
+                wpg,
+                technique: prm.technique,
+                tech_params: prm.tech_params.clone(),
+                rdlb: prm.rdlb,
+                backend: prm.backend.clone(),
+                failures: prm.failures[g * wpg..(g + 1) * wpg].to_vec(),
+                slowdown: prm.slowdown[g * wpg..(g + 1) * wpg].to_vec(),
+                latency: prm.latency[g * wpg..(g + 1) * wpg].to_vec(),
+                start,
+                hard_deadline,
+                shutdown: Arc::clone(&shutdown),
+            };
+            let to_root = to_root.clone();
+            joins.push(std::thread::spawn(move || ctx.run(rx, to_root)));
+        }
+        drop(to_root);
+
+        // Root loop: the same thin driver shape as the native runtime, one
+        // level up — group masters are its "workers".
+        let mut reply: Vec<Effect> = Vec::with_capacity(1);
+        loop {
+            let left = hard_deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
+                break;
+            }
+            let msg = match root_rx.recv_timeout(left) {
+                Ok(m) => m,
+                // Timed out, or every group is gone: no further progress.
+                Err(_) => {
+                    let now = start.elapsed().as_secs_f64();
+                    engine.handle(now, EngineEvent::Timeout, &mut reply);
+                    break;
+                }
+            };
+            let now = start.elapsed().as_secs_f64();
+            if let Some((id, useful, wasted, digests)) = msg.result {
+                // Layered waste accounting: the group's inner waste
+                // (intra-group rDLB duplicates, stale leftovers) is waste
+                // no matter how the root classifies the super-chunk; only
+                // the group's *useful* compute is handed to the root's
+                // first-completion split, so a duplicated super-chunk
+                // wastes exactly its useful part on top.
+                engine.note_wasted(wasted);
+                let completed = engine.on_result_with(now, msg.group, id, useful, &digests, |e, g| {
+                    serve_group(e, g, now, &mut reply, &group_tx)
+                });
+                if completed {
+                    break;
+                }
+            }
+            // The message's own (initial or piggy-backed) request.
+            serve_group(&mut engine, msg.group, now, &mut reply, &group_tx);
+        }
+
+        // MPI_Abort: stop every group (which stops its workers).  The
+        // shutdown flag reaches group masters stuck waiting on workers that
+        // fail-stopped while idle.
+        shutdown.store(true, Ordering::Relaxed);
+        for tx in &group_tx {
+            let _ = tx.send(ToGroup::Terminate);
+        }
+        drop(group_tx);
+        for j in joins {
+            let _ = j.join();
+        }
+
+        let elapsed = start.elapsed().as_secs_f64();
+        let hung = engine.hung();
+        let stats = engine.final_stats();
+        Ok(Outcome {
+            parallel_time: if hung { f64::INFINITY } else { elapsed },
+            hung,
+            finished: engine.finished_count(),
+            n,
+            events: stats.requests + stats.completed_chunks,
+            stats,
+            wasted_work: engine.wasted_work(),
+            useful_work: engine.useful_work(),
+            failures: prm.failures.iter().filter(|f| f.is_some()).count(),
+            result_digest: engine.result_digest(),
+        })
+    }
+}
+
+/// Feed one root-level `WorkerRequest` into the root engine and execute the
+/// single effect.  A failed send is a group fail-stop in progress — the
+/// super-chunk evaporates and the root, faithfully, does not react.
+fn serve_group(
+    engine: &mut Engine,
+    group: usize,
+    now: f64,
+    reply: &mut Vec<Effect>,
+    group_tx: &[mpsc::Sender<ToGroup>],
+) {
+    reply.clear();
+    engine.handle(now, EngineEvent::WorkerRequest { worker: group }, reply);
+    match reply.pop() {
+        Some(Effect::Assign(a)) => {
+            let _ = group_tx[group].send(ToGroup::Assign(a));
+        }
+        Some(Effect::TerminateWorker { worker }) => {
+            let _ = group_tx[worker].send(ToGroup::Terminate);
+        }
+        // Park: the engine holds the group; its master simply blocks on its
+        // channel until woken or terminated.
+        _ => {}
+    }
+}
+
+/// Everything one group-master thread needs.
+struct GroupCtx {
+    group: usize,
+    wpg: usize,
+    technique: Technique,
+    tech_params: TechniqueParams,
+    rdlb: bool,
+    backend: ComputeBackend,
+    /// Per **local** worker (this group's slice of the global plan).
+    failures: Vec<Option<f64>>,
+    slowdown: Vec<f64>,
+    latency: Vec<f64>,
+    start: Instant,
+    hard_deadline: Instant,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl GroupCtx {
+    /// The group-master loop: spawn this group's workers, then serve one
+    /// inner rDLB run per super-chunk until terminated or fail-stopped.
+    fn run(self, group_rx: mpsc::Receiver<ToGroup>, to_root: mpsc::Sender<FromGroup>) {
+        let g = self.group;
+        let wpg = self.wpg;
+        let (to_group_master, worker_rx) = mpsc::channel::<FromGWorker>();
+        let mut worker_tx: Vec<mpsc::Sender<ToGWorker>> = Vec::with_capacity(wpg);
+        let mut joins = Vec::with_capacity(wpg);
+        for l in 0..wpg {
+            let (tx, rx) = mpsc::channel::<ToGWorker>();
+            worker_tx.push(tx);
+            let to_master = to_group_master.clone();
+            let backend = self.backend.clone();
+            let deadline = self.failures[l].map(|t| self.start + Duration::from_secs_f64(t));
+            let slow = self.slowdown[l].max(1.0);
+            let lat = Duration::from_secs_f64(self.latency[l].max(0.0));
+            joins.push(std::thread::spawn(move || {
+                group_worker(l, rx, to_master, backend, deadline, slow, lat)
+            }));
+        }
+        drop(to_group_master);
+
+        // A fail time on local slot 0 of a non-root group is a group-master
+        // fail-stop: past it, this whole loop goes silent (in-flight
+        // super-chunk evaporates; the root's rDLB phase recovers it).
+        let master_deadline = if g > 0 {
+            self.failures[0].map(|t| self.start + Duration::from_secs_f64(t))
+        } else {
+            None
+        };
+        let m_dead = |t: Instant| master_deadline.is_some_and(|d| t >= d);
+
+        let mut epoch = 0u64;
+        // Workers whose pending request outlived the previous inner run
+        // (parked at its completion); served first in the next run.
+        let mut pending = vec![false; wpg];
+        // Compute burned by stale-epoch results (duplicates outliving
+        // their super-chunk); folded into the next report's wasted share.
+        let mut carry_wasted = 0.0f64;
+        let mut reply: Vec<Effect> = Vec::with_capacity(1);
+
+        // Every exit from this block — termination, fail-stop, hang bound,
+        // root gone — falls through to the terminate/join epilogue below,
+        // so worker threads never outlive the run (cf. the native runtime).
+        if to_root.send(FromGroup { group: g, result: None }).is_ok() {
+            'chunks: while let Ok(msg) = group_rx.recv() {
+                let sup = match msg {
+                    ToGroup::Terminate => break,
+                    ToGroup::Assign(a) => a,
+                };
+                if m_dead(Instant::now()) {
+                    break; // group-master fail-stop: the super-chunk evaporates
+                }
+                epoch += 1;
+                let len = sup.len();
+                // A fresh inner engine over the super-chunk's local
+                // iteration space [0, len) — a complete rDLB instance
+                // inside the group.
+                let mut tp = self.tech_params.clone();
+                tp.seed = tp.seed ^ ((g as u64) << 17) ^ epoch;
+                let mut engine = Engine::new(MasterConfig {
+                    n: len,
+                    p: wpg,
+                    technique: self.technique,
+                    params: tp,
+                    rdlb: self.rdlb,
+                });
+                let mut chunk_digests = vec![0.0f64; len];
+                // Local TaskSet per inner assignment (ids are sequential;
+                // a Range — every primary chunk — stores as O(1) bounds).
+                let mut issued: Vec<TaskSet> = Vec::new();
+
+                for l in 0..wpg {
+                    if std::mem::take(&mut pending[l]) {
+                        let now = self.start.elapsed().as_secs_f64();
+                        serve_local(
+                            &mut engine,
+                            l,
+                            now,
+                            epoch,
+                            &sup,
+                            &mut issued,
+                            &mut reply,
+                            &worker_tx,
+                        );
+                    }
+                }
+
+                while !engine.is_complete() {
+                    let left = self.hard_deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        break 'chunks; // global hang bound: the run is over
+                    }
+                    // Tick instead of sleeping the full bound: a group
+                    // whose workers all fail-stopped while idle would
+                    // otherwise hold the root's final join until the bound.
+                    let tick = left.min(Duration::from_millis(20));
+                    let wmsg = match worker_rx.recv_timeout(tick) {
+                        Ok(m) => m,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if self.shutdown.load(Ordering::Relaxed) || m_dead(Instant::now()) {
+                                break 'chunks;
+                            }
+                            continue;
+                        }
+                        // Every worker of this group is gone: the
+                        // super-chunk can never complete here — go silent
+                        // so the root's rDLB phase re-dispatches it.
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break 'chunks,
+                    };
+                    if m_dead(Instant::now()) {
+                        break 'chunks; // died mid-super-chunk
+                    }
+                    let now = self.start.elapsed().as_secs_f64();
+                    if let Some((id, compute, digests)) = wmsg.result {
+                        if wmsg.epoch == epoch {
+                            // Record digests for every reported position:
+                            // a duplicate overwrites with the identical
+                            // value (the kernels are deterministic); the
+                            // root engine's first-completion filter
+                            // provides the global exactly-once guarantee.
+                            if let Some(local_ids) = issued.get(id as usize) {
+                                for (pos, lt) in local_ids.iter().enumerate() {
+                                    if let Some(&d) = digests.get(pos) {
+                                        chunk_digests[lt as usize] = d;
+                                    }
+                                }
+                            }
+                            let done = engine.on_result_with(
+                                now,
+                                wmsg.local,
+                                id,
+                                compute,
+                                &digests,
+                                |e, w| {
+                                    serve_local(
+                                        e,
+                                        w,
+                                        now,
+                                        epoch,
+                                        &sup,
+                                        &mut issued,
+                                        &mut reply,
+                                        &worker_tx,
+                                    )
+                                },
+                            );
+                            if done {
+                                // The reporter's piggy-backed request was
+                                // not served; it carries to the next run.
+                                pending[wmsg.local] = true;
+                                break;
+                            }
+                        } else {
+                            // A stale-epoch result (a leftover rDLB
+                            // duplicate from an earlier super-chunk)
+                            // carries no work for this run — its compute
+                            // is pure waste, reported with the next
+                            // super-chunk — but its piggy-backed request
+                            // is live: fall through and serve it.
+                            carry_wasted += compute;
+                        }
+                    }
+                    serve_local(
+                        &mut engine,
+                        wmsg.local,
+                        now,
+                        epoch,
+                        &sup,
+                        &mut issued,
+                        &mut reply,
+                        &worker_tx,
+                    );
+                }
+
+                // Requests parked at completion carry over to the next run.
+                for &l in engine.parked() {
+                    pending[l as usize] = true;
+                }
+                if m_dead(Instant::now()) {
+                    break; // died before reporting the super-chunk
+                }
+                // Report the completed super-chunk (one digest per
+                // position) with the inner engine's useful/wasted split —
+                // intra-group duplicates are waste regardless of how the
+                // root classifies the super-chunk; this piggy-backs the
+                // group's next request.
+                let wasted = engine.wasted_work() + std::mem::take(&mut carry_wasted);
+                let result = Some((sup.id, engine.useful_work(), wasted, chunk_digests));
+                if to_root.send(FromGroup { group: g, result }).is_err() {
+                    break; // root gone: the MPI_Abort path
+                }
+            }
+        }
+
+        for tx in &worker_tx {
+            let _ = tx.send(ToGWorker::Terminate);
+        }
+        drop(worker_tx);
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Feed one local `WorkerRequest` into the inner engine and execute the
+/// single effect: translate the local chunk into global task ids and send
+/// it to the worker thread.  A failed send is a worker fail-stop — the
+/// chunk evaporates; the inner rDLB phase recovers it.
+#[allow(clippy::too_many_arguments)]
+fn serve_local(
+    engine: &mut Engine,
+    worker: usize,
+    now: f64,
+    epoch: u64,
+    sup: &Assignment,
+    issued: &mut Vec<TaskSet>,
+    reply: &mut Vec<Effect>,
+    worker_tx: &[mpsc::Sender<ToGWorker>],
+) {
+    reply.clear();
+    engine.handle(now, EngineEvent::WorkerRequest { worker }, reply);
+    if let Some(Effect::Assign(a)) = reply.pop() {
+        debug_assert_eq!(issued.len(), a.id as usize, "inner assignment ids are sequential");
+        let tasks = to_global(&sup.tasks, &a.tasks);
+        // Keep the local TaskSet for position→local-id mapping: a Range —
+        // every primary chunk — stores as O(1) bounds, no id list.
+        issued.push(a.tasks);
+        let _ = worker_tx[worker].send(ToGWorker::Assign { epoch, id: a.id, tasks });
+    }
+    // Park: the worker blocks on its channel.  TerminateWorker cannot occur
+    // here: the inner loop only serves requests while the run is incomplete
+    // (and the persistent workers outlive each inner run regardless).
+}
+
+/// Map a chunk in the super-chunk's local iteration space `[0, len)` onto
+/// global task ids.  Ascending in, ascending out.
+fn to_global(sup: &TaskSet, local: &TaskSet) -> TaskSet {
+    match (sup, local) {
+        (TaskSet::Range { start, .. }, TaskSet::Range { start: ls, end: le }) => {
+            TaskSet::Range { start: start + ls, end: start + le }
+        }
+        (TaskSet::Range { start, .. }, TaskSet::List(v)) => {
+            TaskSet::List(v.iter().map(|l| start + l).collect())
+        }
+        (TaskSet::List(ids), TaskSet::Range { start: ls, end: le }) => {
+            TaskSet::List(ids[*ls as usize..*le as usize].to_vec())
+        }
+        (TaskSet::List(ids), TaskSet::List(v)) => {
+            TaskSet::List(v.iter().map(|&l| ids[l as usize]).collect())
+        }
+    }
+}
+
+/// One group worker: the same request–compute–report loop as the native
+/// runtime's workers — the per-chunk fault semantics are literally shared
+/// ([`compute_chunk_with_faults`]) — with the inner-run epoch echoed back
+/// so the group master can tell live results from leftovers of a finished
+/// super-chunk.
+fn group_worker(
+    local: usize,
+    rx: mpsc::Receiver<ToGWorker>,
+    to_master: mpsc::Sender<FromGWorker>,
+    backend: ComputeBackend,
+    deadline: Option<Instant>,
+    slow: f64,
+    lat: Duration,
+) {
+    let dead = |t: Instant| deadline.is_some_and(|d| t >= d);
+    if !lat.is_zero() {
+        std::thread::sleep(lat); // delayed initial request
+    }
+    if to_master.send(FromGWorker { local, epoch: 0, result: None }).is_err() {
+        return;
+    }
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToGWorker::Terminate => break,
+            ToGWorker::Assign { epoch, id, tasks } => {
+                let Some((compute, digests)) =
+                    compute_chunk_with_faults(&backend, &tasks, &dead, slow, lat)
+                else {
+                    return; // fail-stop: chunk evaporates
+                };
+                let msg = FromGWorker { local, epoch, result: Some((id, compute, digests)) };
+                if to_master.send(msg).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{CostModel, MandelbrotApp};
+    use std::sync::Arc;
+
+    fn synthetic(n: usize, cost: f64) -> ComputeBackend {
+        ComputeBackend::Synthetic {
+            model: Arc::new(CostModel::from_costs(vec![cost; n])),
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn baseline_completes_with_exact_digest() {
+        let n = 200;
+        let p = HierParams::new(n, 2, 3, Technique::Fac, true, synthetic(n, 1e-4));
+        let o = HierRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.finished, n);
+        assert_eq!(o.result_digest, n as f64, "synthetic digest is 1.0 per task");
+        assert!(o.stats.identity_violations().is_empty(), "{:?}", o.stats);
+    }
+
+    #[test]
+    fn single_group_degenerates_to_flat_rdlb() {
+        let n = 96;
+        let p = HierParams::new(n, 1, 4, Technique::Gss, true, synthetic(n, 1e-4));
+        let o = HierRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.result_digest, n as f64);
+    }
+
+    #[test]
+    fn group_master_failure_is_recovered_by_root_redispatch() {
+        let n = 160;
+        let mut p = HierParams::new(n, 2, 2, Technique::Fac, true, synthetic(n, 2e-3));
+        // Global worker 2 = group 1, local 0: a group-master fail-stop.
+        p.failures[2] = Some(0.05);
+        p.timeout = Duration::from_secs(30);
+        let o = HierRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "group death must be absorbed: {o:?}");
+        assert_eq!(o.finished, n);
+        assert_eq!(o.result_digest, n as f64);
+        assert_eq!(o.failures, 1);
+    }
+
+    #[test]
+    fn failure_without_rdlb_hangs_until_timeout() {
+        let n = 120;
+        let mut p = HierParams::new(n, 2, 2, Technique::Fac, false, synthetic(n, 2e-3));
+        p.failures[2] = Some(0.03);
+        p.timeout = Duration::from_millis(900);
+        let o = HierRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.hung, "group death without rDLB must hang: {o:?}");
+        assert!(o.parallel_time.is_infinite());
+    }
+
+    #[test]
+    fn mandelbrot_digest_matches_serial_kernel() {
+        let app = MandelbrotApp { width: 16, height: 16, max_iter: 32, ..Default::default() };
+        let n = app.n_tasks();
+        let serial: f64 = app.compute_range(0, n as u32).iter().map(|&c| c as f64).sum();
+        let backend = ComputeBackend::Mandelbrot(Arc::new(app));
+        let o = HierRuntime::new(HierParams::new(n, 2, 2, Technique::Gss, true, backend))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.result_digest, serial, "hier ↔ serial digest parity");
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let p = HierParams::new(10, 2, 2, Technique::Ss, true, synthetic(10, 1e-4));
+        let mut bad = p.clone();
+        bad.failures[0] = Some(0.1);
+        assert!(HierRuntime::new(bad).is_err(), "global worker 0 must never fail");
+        let mut bad = p.clone();
+        bad.failures.pop();
+        assert!(HierRuntime::new(bad).is_err(), "fault plan must be sized to G*W");
+        assert!(HierRuntime::new(p).is_ok());
+    }
+}

@@ -17,11 +17,13 @@
 //! | module | role |
 //! |---|---|
 //! | [`dls`] | the 13 DLS chunk-size techniques of DLS4LB (+ RAND) |
-//! | [`coordinator`] | the paper's contribution: task-state table, master state machine, rDLB re-dispatch, termination |
+//! | [`coordinator`] | the paper's contribution: task-state table, master state machine, rDLB re-dispatch, termination — plus the sans-I/O [`coordinator::Engine`] every runtime drives (see `ARCHITECTURE.md`) |
 //! | [`apps`] | the two evaluated applications (Mandelbrot, PSIA): native compute + simulator cost models |
 //! | [`sim`] | discrete-event cluster simulator (the miniHPC substitute): topology, latency, failures, perturbations |
 //! | [`native`] | in-process master–worker runtime executing real chunks (PJRT or native rust) on OS threads |
 //! | [`net`] | distributed master–worker runtime: length-prefixed wire protocol on TCP (or in-process loopback), fault-injection envelopes, `rdlb serve`/`worker` |
+//! | [`hier`] | two-level hierarchical runtime: a root engine schedules super-chunks across group masters, each running a full inner rDLB engine (`rdlb run --runtime hier`) |
+//! | [`cli`] | the `rdlb` command-line interface (subcommand parsing and drivers) |
 //! | [`runtime`] | PJRT CPU client: loads `artifacts/*.hlo.txt` produced by the JAX/Pallas AOT path |
 //! | [`robustness`] | FePIA robustness metrics (resilience ρ_res, flexibility ρ_flex) |
 //! | [`analysis`] | §3.1 closed forms: E\[T\] under failures, overhead, checkpointing comparison |
@@ -52,10 +54,12 @@ pub mod analysis;
 pub mod apps;
 pub mod bench;
 pub mod chaos;
+pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dls;
 pub mod experiments;
+pub mod hier;
 pub mod native;
 pub mod net;
 pub mod robustness;
@@ -68,8 +72,9 @@ pub mod util;
 pub mod prelude {
     pub use crate::apps::AppKind;
     pub use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
-    pub use crate::coordinator::{Master, Reply, TaskFlag};
+    pub use crate::coordinator::{Effect, Engine, EngineEvent, Master, Reply, TaskFlag};
     pub use crate::dls::Technique;
+    pub use crate::hier::{HierParams, HierRuntime};
     pub use crate::native::NativeRuntime;
     pub use crate::net::{run_loopback, serve_tcp, FaultSpec, NetMasterParams};
     pub use crate::robustness::{flexibility, resilience};

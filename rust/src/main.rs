@@ -1,717 +1,13 @@
-//! `rdlb` — CLI for the rDLB reproduction.
+//! `rdlb` — binary entry point.
 //!
-//! ```text
-//! rdlb run        [--app A --technique T --pes P --tasks N --rdlb B --scenario S --seed K]
-//! rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1 [--scale smoke|quick|paper] [--out DIR]
-//! rdlb trace      [--scenario fig1|fig2] [--rdlb B]
-//! rdlb theory     [--reps R]
-//! rdlb native     [--app A --workers W --technique T --rdlb B --backend native|pjrt
-//!                  --artifacts DIR --failures F --tasks N]
-//! rdlb serve      [--listen ADDR] [--workers P | --spawn-local P] [--app A --technique T]
-//!                 [--rdlb | --no-rdlb] [--failures K --horizon S] [--tasks N --timeout S]
-//! rdlb worker     --connect ADDR [--app A --backend native|pjrt --artifacts DIR]
-//! ```
-//!
-//! Scenario syntax for `run`: `baseline`, `failures:<count>`, `pe`,
-//! `latency`, `combined`.
+//! All subcommand parsing and drivers live in [`rdlb::cli`] (a library
+//! module, so the flag → configuration mapping is unit-tested); this file
+//! only wires `argv` to [`rdlb::cli::execute`].
 
-use std::net::TcpListener;
-use std::path::{Path, PathBuf};
-use std::time::{Duration, Instant};
+use anyhow::Result;
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use rdlb::apps::AppKind;
-use rdlb::bench::{
-    compare_reports, run_campaign, BenchScale, BenchSettings, CampaignReport, Thresholds,
-};
-use rdlb::chaos::{self, ChaosBudget, ChaosSettings};
-use rdlb::config::{ExperimentConfig, RuntimeKind, Scenario};
-use rdlb::dls::Technique;
-use rdlb::experiments::{
-    cells_to_csv, conceptual_trace, fig3_failures, fig3_perturbations, fig4_resilience,
-    fig5_flexibility, perturb_to_csv, robustness_to_csv, run_outcome, table1_summary,
-    theory_validation, ConceptualScenario, Scale,
-};
-use rdlb::config::NetSettings;
-use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
-use rdlb::net::{run_worker, serve_tcp, NetMasterParams, TcpTransport};
-use rdlb::runtime::ComputeService;
 use rdlb::util::cli::Args;
 
-const USAGE: &str = "\
-rdlb — robust dynamic load balancing (Mohammed, Cavelan, Ciorba 2019) reproduction
-
-USAGE:
-  rdlb run        [--app mandelbrot|psia|uniform|exponential] [--technique SS|FAC|...]
-                  [--pes P] [--tasks N] [--rdlb true|false]
-                  [--scenario baseline|failures:<k>|pe|latency|combined] [--seed K]
-                  [--runtime sim|native|net] [--time-scale X] [--timeout S]
-  rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1
-                  [--scale smoke|quick|paper] [--out DIR]
-  rdlb trace      [--scenario fig1|fig2] [--rdlb true|false]
-  rdlb theory     [--reps R]
-  rdlb native     [--app mandelbrot|psia] [--workers W] [--technique T]
-                  [--rdlb true|false] [--backend native|pjrt]
-                  [--artifacts DIR] [--failures F] [--tasks N]
-  rdlb serve      [--config FILE] [--listen ADDR] [--workers P | --spawn-local P]
-                  [--app mandelbrot|psia] [--technique T] [--rdlb | --no-rdlb]
-                  [--failures K] [--horizon S] [--tasks N] [--timeout S]
-                  [--max-iter I]
-  rdlb worker     [--config FILE] --connect ADDR [--app mandelbrot|psia]
-                  [--backend native|pjrt] [--artifacts DIR] [--max-iter I]
-                  [--retry-connect S]
-  rdlb bench      [--scale smoke|quick|full] [--seed K] [--runtimes sim,native,net]
-                  [--out FILE] [--compare BASELINE.json] [--threshold FRAC]
-                  [--wall-threshold FRAC] [--events-threshold FRAC] [--quiet]
-  rdlb chaos      [--seed K] [--budget quick|deep|N] [--out-dir DIR]
-                  [--shrink-budget N] [--quiet]
-  rdlb chaos      --replay FILE
-
-`bench` runs a seeded, deterministic benchmark campaign across the three
-runtimes × DLS techniques × fault scenarios — plus wire-codec microbench
-cases (range vs list Assign frames, large Result frames) — and writes a
-machine-readable BENCH_<n>.json (wall-time median/p95, task throughput,
-simulator events/s, codec round-trips/s). With --compare it gates against a
-committed baseline and exits non-zero on regressions beyond the thresholds
-(default 0.25 = 25%), normalizing wall times by each report's stored CPU
-calibration. See README §Benchmarking and §Performance.
-
-`chaos` fuzzes the whole system: a seeded generator draws random workloads
-× DLS techniques × fault schedules (fail-stop up to P-1 workers incl.
-mid-chunk, slowdown/latency, late joiners, stale-version churners, and
-frame drop/duplicate/delay on the net runtime), runs every schedule on all
-applicable runtimes (sim/native/net) and checks an invariant oracle:
-exactly-once completion (digest parity with the serial kernel),
-cross-runtime digest agreement, completion despite <=P-1 failures with
-rDLB on, documented hang-at-timeout with rDLB off, and the MasterStats
-accounting identities. Failing schedules are shrunk to a minimal JSON
-reproducer (chaos_failure_<id>.json) that `--replay FILE` re-executes
-deterministically. Output is seed-deterministic; exits non-zero on any
-violation. See TESTING.md.
-
-`serve` drives the distributed net runtime: it listens for P workers over
-the length-prefixed TCP wire protocol and schedules with the identical rDLB
-master the simulator uses. `--spawn-local P` forks P `rdlb worker`
-processes against an ephemeral port for a one-command end-to-end run;
-`--failures K` assigns fail-stop envelopes to K of the P workers (the
-paper's §4 scenarios across real OS processes).
-";
-
-fn parse_scenario(s: &str, pes: usize) -> Result<Scenario> {
-    let topo = if pes % 16 == 0 && pes >= 32 {
-        rdlb::sim::Topology::new(pes / 16, 16)
-    } else {
-        rdlb::sim::Topology::flat(pes)
-    };
-    Ok(match s.trim().to_ascii_lowercase().as_str() {
-        "baseline" => Scenario::Baseline,
-        "pe" => Scenario::pe_perturb_default(&topo),
-        "latency" => Scenario::latency_default(&topo),
-        "combined" => Scenario::combined_default(&topo),
-        other => {
-            if let Some(count) = other.strip_prefix("failures:") {
-                Scenario::failures(count.parse()?)
-            } else {
-                bail!("unknown scenario {other}")
-            }
-        }
-    })
-}
-
-fn cmd_run(args: &Args) -> Result<()> {
-    let app = AppKind::parse(&args.str_or("app", "mandelbrot"))
-        .ok_or_else(|| anyhow!("unknown app"))?;
-    let technique = Technique::parse(&args.str_or("technique", "FAC"))
-        .ok_or_else(|| anyhow!("unknown technique"))?;
-    let runtime = RuntimeKind::parse(&args.str_or("runtime", "sim"))
-        .ok_or_else(|| anyhow!("unknown runtime (sim|native|net)"))?;
-    // Real runtimes execute every virtual task as a wall-clock sleep with a
-    // live thread per PE — default to a scale that stays tractable.
-    let default_pes = if runtime == RuntimeKind::Sim { 256 } else { 8 };
-    let pes = args.usize_or("pes", default_pes)?;
-    let rdlb = args.bool_or("rdlb", true)?;
-    let scenario = parse_scenario(&args.str_or("scenario", "baseline"), pes)?;
-    let mut b = ExperimentConfig::builder()
-        .app(app)
-        .pes(pes)
-        .technique(technique)
-        .rdlb(rdlb)
-        .runtime(runtime)
-        .scenario(scenario)
-        .seed(args.u64_or("seed", 1)?);
-    if let Some(n) = args.usize_opt("tasks")? {
-        b = b.tasks(n);
-    } else if runtime != RuntimeKind::Sim {
-        b = b.tasks(2048);
-    }
-    let mut cfg = b.build()?;
-    cfg.net.timeout_secs = args.u64_or("timeout", cfg.net.timeout_secs)?;
-    let time_scale = args.f64_or("time-scale", 1.0)?;
-    let t0 = std::time::Instant::now();
-    let outcome = run_outcome(&cfg, 0, time_scale)?;
-    println!(
-        "app={} technique={} P={} N={} rdlb={} scenario={} runtime={}",
-        app, technique, cfg.pes(), cfg.n(), rdlb, cfg.scenario.label(), runtime
-    );
-    if outcome.hung {
-        println!(
-            "RESULT: HUNG (finished {}/{} — the paper's 'waits indefinitely' case)",
-            outcome.finished, outcome.n
-        );
-    } else {
-        println!("RESULT: T_par = {:.4}s", outcome.parallel_time);
-    }
-    println!(
-        "chunks={} rescheduled={} duplicates={} waste={:.2}%  (wall {:?})",
-        outcome.stats.assigned_chunks,
-        outcome.stats.rescheduled_chunks,
-        outcome.stats.duplicate_iterations,
-        outcome.waste_fraction() * 100.0,
-        t0.elapsed()
-    );
-    Ok(())
-}
-
-fn cmd_experiment(args: &Args) -> Result<()> {
-    let id = args.get("id").ok_or_else(|| anyhow!("--id required"))?.to_string();
-    let scale = Scale::parse(&args.str_or("scale", "quick"))
-        .ok_or_else(|| anyhow!("unknown scale (smoke|quick|paper)"))?;
-    let out = PathBuf::from(args.str_or("out", "results"));
-    std::fs::create_dir_all(&out)?;
-    let write = |name: &str, data: &str| -> Result<()> {
-        let path = out.join(name);
-        std::fs::write(&path, data)?;
-        println!("wrote {}", path.display());
-        Ok(())
-    };
-    match id.as_str() {
-        "fig3a" | "fig3b" => {
-            let app = if id == "fig3a" { AppKind::Psia } else { AppKind::Mandelbrot };
-            let data = fig3_failures(app, &scale)?;
-            write(&format!("{id}.csv"), &cells_to_csv(&data.cells))?;
-        }
-        "fig3c" | "fig3d" => {
-            let app = if id == "fig3c" { AppKind::Psia } else { AppKind::Mandelbrot };
-            let cells = fig3_perturbations(app, &scale)?;
-            write(&format!("{id}.csv"), &perturb_to_csv(&cells))?;
-        }
-        "fig4" => {
-            for (app, tag) in [(AppKind::Psia, "psia"), (AppKind::Mandelbrot, "mandelbrot")] {
-                let fig3 = fig3_failures(app, &scale)?;
-                let tables = fig4_resilience(&fig3);
-                write(&format!("fig4_{tag}.csv"), &robustness_to_csv(&tables))?;
-            }
-        }
-        "fig5" => {
-            for (app, tag) in [(AppKind::Psia, "psia"), (AppKind::Mandelbrot, "mandelbrot")] {
-                let cells = fig3_perturbations(app, &scale)?;
-                let tables: Vec<_> =
-                    fig5_flexibility(&cells).into_iter().flat_map(|(a, b)| [a, b]).collect();
-                write(&format!("fig5_{tag}.csv"), &robustness_to_csv(&tables))?;
-            }
-        }
-        "table1" => {
-            let data = table1_summary(&scale)?;
-            write("table1.csv", &cells_to_csv(&data.cells))?;
-        }
-        other => bail!("unknown experiment id {other} (fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1)"),
-    }
-    Ok(())
-}
-
-fn cmd_trace(args: &Args) -> Result<()> {
-    let rdlb = args.bool_or("rdlb", true)?;
-    let sc = match args.str_or("scenario", "fig1").as_str() {
-        "fig1" => ConceptualScenario::Failure { rdlb },
-        "fig2" => ConceptualScenario::Perturbation { rdlb },
-        other => bail!("unknown trace scenario {other}"),
-    };
-    let (outcome, trace) = conceptual_trace(sc)?;
-    println!("{}", trace.ascii_gantt(72));
-    if outcome.hung {
-        println!("outcome: HUNG after {}/{} tasks", outcome.finished, outcome.n);
-    } else {
-        println!("outcome: completed in {:.3}s", outcome.parallel_time);
-    }
-    Ok(())
-}
-
-fn cmd_theory(args: &Args) -> Result<()> {
-    let reps = args.usize_or("reps", 16)?;
-    println!("§3.1 theory vs simulation (one certain failure, equal tasks):");
-    println!("{:>6} {:>12} {:>12} {:>8}", "q", "T_model", "T_sim", "rel_err");
-    for (q, model, sim, err) in theory_validation(reps)? {
-        println!("{q:>6} {model:>12.5} {sim:>12.5} {err:>8.4}");
-    }
-    let p = rdlb::analysis::TheoryParams { n_per_pe: 1024.0, q: 256.0, t_task: 2e-3, lambda: 1e-5 };
-    println!(
-        "\noverhead (λ=1e-5, q=256): rDLB {:.3e}, checkpoint crossover C* = {:.3e}s",
-        p.overhead_rdlb(),
-        p.checkpoint_crossover()
-    );
-    Ok(())
-}
-
-/// CLI kernel shapes — the single source of truth for per-app task
-/// capacity, shared by `build_backend` (worker side) and `cmd_serve`'s
-/// `--tasks` bound (master side).
-const MANDELBROT_GRID: (usize, usize) = (256, 256);
-const PSIA_CLI_TASKS: usize = 4096;
-
-/// Per-app task capacity of the CLI kernels.
-fn kernel_capacity(app: AppKind) -> Result<usize> {
-    Ok(match app {
-        AppKind::Mandelbrot => MANDELBROT_GRID.0 * MANDELBROT_GRID.1,
-        AppKind::Psia => PSIA_CLI_TASKS,
-        other => bail!("the native/net CLI kernels support mandelbrot|psia (got {other})"),
-    })
-}
-
-/// Build the compute backend for `app`/`backend_kind`, returning the
-/// kernel's task capacity alongside it. A spawned PJRT service (if any) is
-/// parked in `keepalive` so it outlives the run.
-fn build_backend(
-    app: AppKind,
-    backend_kind: &str,
-    artifacts: &Path,
-    max_iter: u32,
-    keepalive: &mut Option<ComputeService>,
-) -> Result<(usize, ComputeBackend)> {
-    let capacity = kernel_capacity(app)?;
-    Ok(match (app, backend_kind) {
-        (AppKind::Mandelbrot, "native") => {
-            let a = rdlb::apps::MandelbrotApp {
-                width: MANDELBROT_GRID.0,
-                height: MANDELBROT_GRID.1,
-                max_iter,
-                ..Default::default()
-            };
-            debug_assert_eq!(a.n_tasks(), capacity);
-            (capacity, ComputeBackend::Mandelbrot(std::sync::Arc::new(a)))
-        }
-        (AppKind::Psia, "native") => {
-            let a = rdlb::apps::PsiaApp::synthetic(PSIA_CLI_TASKS);
-            debug_assert_eq!(a.n_tasks(), capacity);
-            (capacity, ComputeBackend::Psia(std::sync::Arc::new(a)))
-        }
-        (AppKind::Mandelbrot | AppKind::Psia, "pjrt") => {
-            let svc = ComputeService::spawn(artifacts.to_path_buf())?;
-            let handle = svc.handle();
-            *keepalive = Some(svc);
-            let backend = if app == AppKind::Mandelbrot {
-                ComputeBackend::PjrtMandelbrot(handle)
-            } else {
-                ComputeBackend::PjrtPsia(handle)
-            };
-            (capacity, backend)
-        }
-        (a, b) => bail!("unsupported app/backend combo {a}/{b}"),
-    })
-}
-
-fn cmd_native(args: &Args) -> Result<()> {
-    let app = AppKind::parse(&args.str_or("app", "mandelbrot")).ok_or_else(|| anyhow!("unknown app"))?;
-    let technique = Technique::parse(&args.str_or("technique", "FAC"))
-        .ok_or_else(|| anyhow!("unknown technique"))?;
-    let workers = args.usize_or("workers", 8)?;
-    let rdlb = args.bool_or("rdlb", true)?;
-    let backend_kind = args.str_or("backend", "native");
-    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let failures = args.usize_or("failures", 0)?;
-    let max_iter = args.u64_or("max-iter", 300)? as u32;
-
-    // The service must outlive the run when the PJRT backend is used.
-    let mut _service_keepalive: Option<ComputeService> = None;
-    let (n_default, backend) =
-        build_backend(app, &backend_kind, &artifacts, max_iter, &mut _service_keepalive)?;
-    let n = args.usize_opt("tasks")?.unwrap_or(n_default);
-    let mut params = NativeParams::new(n, workers, technique, rdlb, backend);
-    if failures > 0 {
-        // Same bound the net runtime enforces; the library-level
-        // `with_failures` would otherwise silently saturate at P-1.
-        anyhow::ensure!(
-            failures < workers,
-            "at most P-1 failures are tolerable (got {failures} for P={workers})"
-        );
-        params = params.with_failures(failures, 2.0);
-    }
-    params.timeout = std::time::Duration::from_secs(args.u64_or("timeout", 120)?);
-    let t0 = std::time::Instant::now();
-    let outcome = NativeRuntime::new(params)?.run()?;
-    if outcome.hung {
-        println!("RESULT: HUNG (finished {}/{})", outcome.finished, outcome.n);
-    } else {
-        println!(
-            "RESULT: T_par = {:.3}s  chunks={} rescheduled={} duplicates={}  (wall {:?})",
-            outcome.parallel_time,
-            outcome.stats.assigned_chunks,
-            outcome.stats.rescheduled_chunks,
-            outcome.stats.duplicate_iterations,
-            t0.elapsed()
-        );
-    }
-    Ok(())
-}
-
-/// Load `--config FILE` (an [`ExperimentConfig`] JSON, including its `net`
-/// settings) when given; CLI flags override its values.
-fn load_config(args: &Args) -> Result<Option<ExperimentConfig>> {
-    match args.get("config") {
-        Some(path) => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("read config {path}"))?;
-            Ok(Some(ExperimentConfig::from_json(&text)?))
-        }
-        None => Ok(None),
-    }
-}
-
-/// `rdlb serve`: the distributed master. Binds the listener, optionally
-/// forks `--spawn-local P` worker processes against it, accepts P
-/// registrations and drives the run over the wire protocol. Defaults come
-/// from `--config FILE` (its `net` block supplies listen / spawn_local /
-/// timeout) with flags taking precedence.
-fn cmd_serve(args: &Args) -> Result<()> {
-    let file = load_config(args)?;
-    let net = file.as_ref().map(|c| c.net.clone()).unwrap_or_default();
-    let app = match args.get("app") {
-        Some(s) => AppKind::parse(s).ok_or_else(|| anyhow!("unknown app"))?,
-        None => file.as_ref().map(|c| c.app).unwrap_or(AppKind::Mandelbrot),
-    };
-    let technique = match args.get("technique") {
-        Some(s) => Technique::parse(s).ok_or_else(|| anyhow!("unknown technique"))?,
-        None => file.as_ref().map(|c| c.technique).unwrap_or(Technique::Fac),
-    };
-    // Flags override the config: an explicit --spawn-local wins outright,
-    // and an explicit --workers suppresses the config's spawn_local.
-    let spawn_flag = args.usize_opt("spawn-local")?;
-    let workers_flag = args.usize_opt("workers")?;
-    let spawn_local = match (spawn_flag, workers_flag) {
-        (Some(p), _) => Some(p),
-        (None, Some(_)) => None,
-        (None, None) => net.spawn_local,
-    };
-    // Worker count falls back to the config's topology (P = nodes × ranks).
-    let workers = spawn_local
-        .or(workers_flag)
-        .or_else(|| file.as_ref().map(|c| c.pes()))
-        .unwrap_or(4);
-    anyhow::ensure!(workers >= 1, "need at least one worker");
-    let rdlb_default = file.as_ref().map(|c| c.rdlb).unwrap_or(true);
-    let rdlb =
-        if args.bool_or("no-rdlb", false)? { false } else { args.bool_or("rdlb", rdlb_default)? };
-    // Failure count falls back to the config's scenario; serve has no
-    // perturbation surface (use `run --runtime net` for those), so a
-    // perturbation scenario in the config is refused rather than silently
-    // run as baseline.
-    let cfg_failures = match file.as_ref().map(|c| c.scenario) {
-        None | Some(Scenario::Baseline) => 0,
-        Some(Scenario::Failures { count }) => count,
-        Some(other) => bail!(
-            "serve does not support the {} scenario from --config; \
-             use `rdlb run --runtime net` for perturbations",
-            other.label()
-        ),
-    };
-    let failures = args.usize_or("failures", cfg_failures)?;
-    let horizon = args.f64_or("horizon", 1.0)?;
-    let timeout = Duration::from_secs(args.u64_or("timeout", net.timeout_secs)?);
-    // Forwarded to --spawn-local workers. The default is deliberately heavy
-    // (vs `native`'s 300) so the run outlasts the failure horizon and the
-    // injected fail-stops actually fire mid-run on any machine.
-    let max_iter = args.u64_or("max-iter", 50_000)?;
-    // Listen precedence: flag, then a loaded config's address, then an
-    // ephemeral port for flag-driven --spawn-local runs.
-    let listen = match (args.get("listen"), file.is_some()) {
-        (Some(l), _) => l.to_string(),
-        (None, true) => net.listen.clone(),
-        (None, false) if spawn_local.is_some() => "127.0.0.1:0".to_string(),
-        (None, false) => net.listen.clone(),
-    };
-
-    // N defaults to the worker-side kernel's capacity; workers rebuild the
-    // same kernel from `--app`, so N may not exceed it.
-    let n_default = kernel_capacity(app)?;
-    let n = args
-        .usize_opt("tasks")?
-        .or(file.as_ref().and_then(|c| c.tasks))
-        .unwrap_or(n_default);
-    anyhow::ensure!(
-        (1..=n_default).contains(&n),
-        "--tasks must be in 1..={n_default} for {app} (workers size their kernel to it)"
-    );
-
-    let listener =
-        TcpListener::bind(&listen).with_context(|| format!("bind listener on {listen}"))?;
-    let addr = listener.local_addr()?;
-    println!(
-        "serve: listening on {addr} for {workers} workers \
-         (app={app}, technique={technique}, N={n}, rdlb={rdlb}, failures={failures})"
-    );
-
-    let mut params = NetMasterParams::new(n, workers, technique, rdlb);
-    params.timeout = timeout;
-    if failures > 0 {
-        params = params.with_failures(failures, horizon)?;
-        for (w, fault) in params.faults.iter().enumerate() {
-            if let Some(t) = fault.fail_after {
-                println!("serve: worker {w} will fail-stop {t:.2}s after registration");
-            }
-        }
-    }
-
-    let mut children = Vec::new();
-    if spawn_local.is_some() {
-        let exe = std::env::current_exe().context("resolve current executable")?;
-        for i in 0..workers {
-            let child = std::process::Command::new(&exe)
-                .arg("worker")
-                .arg("--connect")
-                .arg(addr.to_string())
-                .arg("--app")
-                .arg(app.name().to_ascii_lowercase())
-                .arg("--max-iter")
-                .arg(max_iter.to_string())
-                .arg("--retry-connect")
-                .arg("10")
-                .spawn()
-                .with_context(|| format!("spawn local worker {i}"))?;
-            children.push(child);
-        }
-        println!("serve: spawned {workers} local worker processes");
-    }
-
-    let t0 = Instant::now();
-    let result = serve_tcp(listener, params, timeout.max(Duration::from_secs(30)));
-    // Reap the forked workers regardless of how the run ended; Terminate
-    // has already been sent, the kill only catches wedged stragglers.
-    for child in &mut children {
-        let _ = child.kill();
-        let _ = child.wait();
-    }
-    let outcome = result?;
-
-    if outcome.hung {
-        println!(
-            "RESULT: HUNG at the {}s hang bound (finished {}/{} — the paper's \
-             'waits indefinitely' case)",
-            timeout.as_secs(),
-            outcome.finished,
-            outcome.n
-        );
-    } else {
-        println!(
-            "RESULT: T_par = {:.3}s  chunks={} rescheduled={} duplicates={} digest={:.1}  (wall {:?})",
-            outcome.parallel_time,
-            outcome.stats.assigned_chunks,
-            outcome.stats.rescheduled_chunks,
-            outcome.stats.duplicate_iterations,
-            outcome.result_digest,
-            t0.elapsed()
-        );
-    }
-    Ok(())
-}
-
-/// `rdlb worker`: connect to a serving master and compute until terminated.
-fn cmd_worker(args: &Args) -> Result<()> {
-    let file = load_config(args)?;
-    let app = match args.get("app") {
-        Some(s) => AppKind::parse(s).ok_or_else(|| anyhow!("unknown app"))?,
-        None => file.as_ref().map(|c| c.app).unwrap_or(AppKind::Mandelbrot),
-    };
-    let backend_kind = args.str_or("backend", "native");
-    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let connect = match args.get("connect") {
-        Some(c) => c.to_string(),
-        None => file.map(|c| c.net.connect).unwrap_or_else(|| NetSettings::default().connect),
-    };
-    let max_iter = args.u64_or("max-iter", 300)? as u32;
-    // Retry window for connection errors. 0 (the default) surfaces a wrong
-    // address immediately; `serve --spawn-local` passes 10 s to its forked
-    // workers to cover the master's accept loop coming up a beat late.
-    let retry = Duration::from_secs_f64(args.f64_or("retry-connect", 0.0)?.max(0.0));
-
-    let mut _service_keepalive: Option<ComputeService> = None;
-    let (_capacity, backend) =
-        build_backend(app, &backend_kind, &artifacts, max_iter, &mut _service_keepalive)?;
-
-    let deadline = Instant::now() + retry;
-    let transport = loop {
-        match TcpTransport::connect(&connect) {
-            Ok(t) => break t,
-            Err(e) => {
-                if Instant::now() >= deadline {
-                    return Err(e);
-                }
-                std::thread::sleep(Duration::from_millis(50));
-            }
-        }
-    };
-
-    let label = format!("{}/{}", app.name().to_ascii_lowercase(), backend_kind);
-    let report = run_worker(Box::new(transport), backend, &label)?;
-    println!(
-        "worker {}: {} chunks, {} iterations{}",
-        report.worker,
-        report.chunks,
-        report.iterations,
-        if report.failed { " (fail-stop injected)" } else { "" }
-    );
-    Ok(())
-}
-
-/// Find the first unused `BENCH_<n>.json` name in the current directory.
-fn next_bench_path() -> PathBuf {
-    for k in 1..10_000u32 {
-        let candidate = PathBuf::from(format!("BENCH_{k}.json"));
-        if !candidate.exists() {
-            return candidate;
-        }
-    }
-    PathBuf::from("BENCH_overflow.json")
-}
-
-/// `rdlb bench`: run the campaign, write the report, optionally gate
-/// against a baseline (non-zero exit on regression).
-fn cmd_bench(args: &Args) -> Result<()> {
-    let scale = BenchScale::parse(&args.str_or("scale", "quick"))
-        .ok_or_else(|| anyhow!("unknown scale (smoke|quick|full)"))?;
-    let mut settings = BenchSettings::new(scale, args.u64_or("seed", 1)?);
-    settings.verbose = !args.bool_or("quiet", false)?;
-    if let Some(list) = args.get("runtimes") {
-        let mut runtimes = Vec::new();
-        for word in list.split(',') {
-            let kind = RuntimeKind::parse(word)
-                .ok_or_else(|| anyhow!("unknown runtime {word:?} in --runtimes"))?;
-            if !runtimes.contains(&kind) {
-                runtimes.push(kind);
-            }
-        }
-        anyhow::ensure!(!runtimes.is_empty(), "--runtimes must name at least one runtime");
-        settings.runtimes = runtimes;
-    }
-
-    let report = run_campaign(&settings)?;
-    let out = args.get("out").map(PathBuf::from).unwrap_or_else(next_bench_path);
-    std::fs::write(&out, report.to_json_string())
-        .with_context(|| format!("write {}", out.display()))?;
-    println!(
-        "bench: wrote {} ({} cases, {:.1} s wall{})",
-        out.display(),
-        report.cases.len(),
-        report.total_wall_s(),
-        report
-            .sim_events_per_s()
-            .map(|e| format!(", sim {:.2} M events/s", e / 1e6))
-            .unwrap_or_default()
-    );
-
-    if let Some(baseline_path) = args.get("compare") {
-        let text = std::fs::read_to_string(baseline_path)
-            .with_context(|| format!("read baseline {baseline_path}"))?;
-        let baseline = CampaignReport::from_json_str(&text)?;
-        let uniform = args.f64_or("threshold", 0.25)?;
-        let thresholds = Thresholds {
-            wall_frac: args.f64_or("wall-threshold", uniform)?,
-            events_frac: args.f64_or("events-threshold", uniform)?,
-            ..Thresholds::default()
-        };
-        let cmp = compare_reports(&report, &baseline, &thresholds);
-        print!("{}", cmp.summary());
-        anyhow::ensure!(
-            cmp.passed(),
-            "bench regression vs {baseline_path}: {} regressions, {} missing cases",
-            cmp.regressions.len(),
-            cmp.missing_cases.len()
-        );
-        println!("bench: no regression vs {baseline_path}");
-    }
-    Ok(())
-}
-
-/// `rdlb chaos`: seeded fault-schedule fuzzing with the invariant oracle,
-/// or deterministic replay of a shrunk reproducer.
-fn cmd_chaos(args: &Args) -> Result<()> {
-    if let Some(path) = args.get("replay") {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("read chaos schedule {path}"))?;
-        let (sc, runs, checks, violations) = chaos::replay::replay_str(&text)?;
-        println!("chaos replay: {}", sc.label());
-        for run in &runs {
-            let o = &run.outcome;
-            println!(
-                "chaos replay: {} -> {} (finished {}/{}, digest {})",
-                run.runtime,
-                if o.completed() { "completed" } else if o.hung { "HUNG" } else { "incomplete" },
-                o.finished,
-                o.n,
-                o.result_digest,
-            );
-        }
-        for v in &violations {
-            println!("chaos replay: VIOLATION {v}");
-        }
-        println!(
-            "chaos replay: {} runtime run(s), {} checks, {} violation(s)",
-            runs.len(),
-            checks,
-            violations.len()
-        );
-        anyhow::ensure!(
-            violations.is_empty(),
-            "replayed schedule violates {} invariant(s)",
-            violations.len()
-        );
-        return Ok(());
-    }
-
-    let budget = ChaosBudget::parse(&args.str_or("budget", "quick"))
-        .ok_or_else(|| anyhow!("unknown budget (quick|deep|<scenario count>)"))?;
-    let mut settings = ChaosSettings::new(args.u64_or("seed", 1)?, budget);
-    settings.out_dir = Some(PathBuf::from(args.str_or("out-dir", ".")));
-    settings.shrink_budget = args.usize_or("shrink-budget", 64)?;
-    settings.verbose = !args.bool_or("quiet", false)?;
-    let outcome = chaos::run_chaos(&settings)?;
-    println!("{}", outcome.summary());
-    if !outcome.passed() {
-        for case in &outcome.failures {
-            println!("chaos: failing schedule {}:", case.original.label());
-            for v in &case.violations {
-                println!("chaos:   {v}");
-            }
-            if let Some(p) = &case.path {
-                println!("chaos:   reproducer: {} (rdlb chaos --replay {})", p.display(), p.display());
-            }
-        }
-        anyhow::bail!(
-            "chaos campaign found {} invariant-violating schedule(s)",
-            outcome.failures.len()
-        );
-    }
-    Ok(())
-}
-
 fn main() -> Result<()> {
-    let args = Args::from_env()?;
-    match args.subcommand.as_deref() {
-        Some("run") => cmd_run(&args),
-        Some("bench") => cmd_bench(&args),
-        Some("chaos") => cmd_chaos(&args),
-        Some("experiment") => cmd_experiment(&args),
-        Some("trace") => cmd_trace(&args),
-        Some("theory") => cmd_theory(&args),
-        Some("native") => cmd_native(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("worker") => cmd_worker(&args),
-        Some(other) => {
-            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
-            std::process::exit(2);
-        }
-        None => {
-            println!("{USAGE}");
-            Ok(())
-        }
-    }
+    rdlb::cli::execute(&Args::from_env()?)
 }

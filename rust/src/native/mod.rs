@@ -1,6 +1,6 @@
 //! Native master–worker runtime: real chunk execution (PJRT artifacts or
-//! native rust kernels) on OS threads, behind the *identical* [`Master`]
-//! state machine the simulator uses.
+//! native rust kernels) on OS threads, behind the *identical*
+//! [`Engine`](crate::coordinator::Engine) the simulator uses.
 //!
 //! Failure/perturbation injection mirrors the paper's §4.1 mechanics:
 //!  * fail-stop: a worker whose deadline passed simply stops participating
@@ -19,10 +19,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Assignment, Master, MasterConfig, Reply};
+use crate::coordinator::{Assignment, Effect, Engine, EngineEvent, MasterConfig, TaskSet};
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
-use crate::util::ParkedSet;
 
 /// Parameters of one native execution.
 #[derive(Clone)]
@@ -90,11 +89,73 @@ impl NativeParams {
         }
         self
     }
+
+    /// Install one worker's full fault envelope — the single mapping point
+    /// used by the experiments runner and the chaos harness, so a new
+    /// envelope knob cannot be wired into one caller and silently dropped
+    /// from another.
+    pub fn set_fault_envelope(
+        &mut self,
+        worker: usize,
+        fail_after: Option<f64>,
+        slowdown: f64,
+        latency: f64,
+    ) {
+        self.failures[worker] = fail_after;
+        self.slowdown[worker] = slowdown;
+        self.latency[worker] = latency;
+    }
 }
 
 /// The native runtime.
 pub struct NativeRuntime {
     params: NativeParams,
+}
+
+/// Worker-side execution of one chunk under the paper's fault envelope:
+/// latency-delayed delivery, fail-stop checks before and after compute,
+/// slowdown dilation, latency-delayed result.  Returns `None` when the
+/// fail-stop deadline (or a backend error) ended participation — the chunk
+/// evaporates and the caller stops — otherwise `Some((compute_secs,
+/// digests))`.  Shared by the native worker threads and the hierarchical
+/// runtime's group workers, so the §4.1 fault semantics cannot drift
+/// between runtimes.
+///
+/// The digest vector is pre-sized OUTSIDE the timed window, so
+/// `compute_secs` bills pure (dilated) kernel time.
+pub(crate) fn compute_chunk_with_faults(
+    backend: &ComputeBackend,
+    tasks: &TaskSet,
+    dead: &impl Fn(Instant) -> bool,
+    slow: f64,
+    lat: Duration,
+) -> Option<(f64, Vec<f64>)> {
+    if !lat.is_zero() {
+        std::thread::sleep(lat); // delayed delivery
+    }
+    if dead(Instant::now()) {
+        return None; // fail-stop: chunk evaporates
+    }
+    // Range-native: primary chunks are iterated as [start, end) — no
+    // task-id list materialized.
+    let mut digests = Vec::with_capacity(tasks.len());
+    let t0 = Instant::now();
+    if backend.compute_into(tasks, &mut digests).is_err() {
+        return None;
+    }
+    let mut compute = t0.elapsed();
+    if slow > 1.0 {
+        // PE perturbation: dilate compute.
+        std::thread::sleep(compute.mul_f64(slow - 1.0));
+        compute = compute.mul_f64(slow);
+    }
+    if dead(Instant::now()) {
+        return None; // died mid-compute
+    }
+    if !lat.is_zero() {
+        std::thread::sleep(lat); // delayed result
+    }
+    Some((compute.as_secs_f64(), digests))
 }
 
 enum ToWorker {
@@ -124,7 +185,9 @@ impl NativeRuntime {
         let prm = &self.params;
         let p = prm.workers;
         let n = prm.n;
-        let mut master = Master::new(MasterConfig {
+        // The sans-I/O coordinator engine; this driver only moves channel
+        // messages in and executes the effects (sends) coming out.
+        let mut engine = Engine::new(MasterConfig {
             n,
             p,
             technique: prm.technique,
@@ -157,40 +220,14 @@ impl NativeRuntime {
                     match msg {
                         ToWorker::Terminate => break,
                         ToWorker::Assign(a) => {
-                            if !lat.is_zero() {
-                                std::thread::sleep(lat); // delayed delivery
-                            }
-                            if dead(Instant::now()) {
+                            let Some((compute, digests)) =
+                                compute_chunk_with_faults(&backend, &a.tasks, &dead, slow, lat)
+                            else {
                                 return; // fail-stop: chunk evaporates
-                            }
-                            // Range-native: primary chunks are iterated as
-                            // [start, end) — no task-id list materialized.
-                            // The digest vector's ownership passes to the
-                            // master through the channel, so (unlike the
-                            // net worker's reclaimed buffer) one allocation
-                            // per chunk remains — but it is pre-sized here,
-                            // OUTSIDE the timed window, so compute_secs
-                            // bills pure kernel time.
-                            let mut digests = Vec::with_capacity(a.len());
-                            let t0 = Instant::now();
-                            if backend.compute_into(&a.tasks, &mut digests).is_err() {
-                                return;
-                            }
-                            let mut compute = t0.elapsed();
-                            if slow > 1.0 {
-                                // PE perturbation: dilate compute.
-                                std::thread::sleep(compute.mul_f64(slow - 1.0));
-                                compute = compute.mul_f64(slow);
-                            }
-                            if dead(Instant::now()) {
-                                return; // died mid-compute
-                            }
-                            if !lat.is_zero() {
-                                std::thread::sleep(lat); // delayed result
-                            }
+                            };
                             let msg = FromWorker {
                                 worker: w,
-                                result: Some((a.id, compute.as_secs_f64(), digests)),
+                                result: Some((a.id, compute, digests)),
                             };
                             if to_master.send(msg).is_err() {
                                 return;
@@ -202,59 +239,40 @@ impl NativeRuntime {
         }
         drop(to_master);
 
-        // Master loop, bounded by the hang timeout.
-        let mut parked = ParkedSet::new(p);
-        let mut woken: Vec<u32> = Vec::with_capacity(p);
-        let mut useful = 0.0f64;
-        let mut wasted = 0.0f64;
-        let mut result_digest = 0.0f64;
+        // Master loop, bounded by the hang timeout.  A `Wake` effect is
+        // delivered by immediately re-submitting the woken worker's
+        // request; every other effect is a channel send (or a no-op park).
+        let mut reply: Vec<Effect> = Vec::with_capacity(1);
         let hard_deadline = start + prm.timeout;
-        let mut hung = false;
 
         loop {
             let left = hard_deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
-                hung = !master.is_complete();
+                engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
                 break;
             }
             let msg = match master_rx.recv_timeout(left) {
                 Ok(m) => m,
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    hung = !master.is_complete();
-                    break;
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    hung = !master.is_complete();
+                // Timed out, or every worker is gone: either way the run
+                // can no longer progress.
+                Err(_) => {
+                    let now = start.elapsed().as_secs_f64();
+                    engine.handle(now, EngineEvent::Timeout, &mut reply);
                     break;
                 }
             };
             let now = start.elapsed().as_secs_f64();
             if let Some((id, compute, digests)) = msg.result {
-                let newly = master.on_result(msg.worker, id, compute, now);
-                let fins = newly.len() as f64;
-                let dups = digests.len() as f64 - fins;
-                if dups + fins > 0.0 {
-                    wasted += compute * dups / (dups + fins);
-                    useful += compute * fins / (dups + fins);
-                }
-                // Exactly one digest contribution per iteration: only the
-                // positions whose completion was the FIRST one count.
-                for &pos in &newly {
-                    result_digest += digests[pos];
-                }
-                if master.is_complete() {
+                let w = msg.worker;
+                let completed = engine.on_result_with(now, w, id, compute, &digests, |e, pw| {
+                    serve_request(e, pw, now, &mut reply, &worker_tx)
+                });
+                if completed {
                     break;
                 }
-                // Wakeup pass: touch only the actually-parked workers (the
-                // pool may have shrunk); skipped entirely when none are.
-                if !parked.is_empty() {
-                    parked.drain_into(&mut woken);
-                    for &pw in &woken {
-                        dispatch(&mut master, pw as usize, now, &worker_tx, &mut parked);
-                    }
-                }
             }
-            dispatch(&mut master, msg.worker, now, &worker_tx, &mut parked);
+            // The message's own (initial or piggy-backed) request.
+            serve_request(&mut engine, msg.worker, now, &mut reply, &worker_tx);
         }
 
         // MPI_Abort: stop everyone immediately.
@@ -267,18 +285,19 @@ impl NativeRuntime {
         }
 
         let elapsed = start.elapsed().as_secs_f64();
-        let stats = master.stats().clone();
+        let hung = engine.hung();
+        let stats = engine.final_stats();
         Ok(Outcome {
             parallel_time: if hung { f64::INFINITY } else { elapsed },
             hung,
-            finished: master.table().finished_count(),
+            finished: engine.finished_count(),
             n,
             events: stats.requests + stats.completed_chunks,
             stats,
-            wasted_work: wasted,
-            useful_work: useful,
+            wasted_work: engine.wasted_work(),
+            useful_work: engine.useful_work(),
             failures: self.params.failures.iter().filter(|f| f.is_some()).count(),
-            result_digest,
+            result_digest: engine.result_digest(),
         })
     }
 
@@ -288,23 +307,29 @@ impl NativeRuntime {
     }
 }
 
-fn dispatch(
-    master: &mut Master,
+/// Feed one `WorkerRequest` into the engine and execute the single effect
+/// it returns (see the engine's effect contract).  A failed send is a
+/// fail-stop in progress — the chunk evaporates and the master, faithfully,
+/// does not react.
+fn serve_request(
+    engine: &mut Engine,
     worker: usize,
     now: f64,
+    reply: &mut Vec<Effect>,
     worker_tx: &[mpsc::Sender<ToWorker>],
-    parked: &mut ParkedSet,
 ) {
-    match master.on_request(worker, now) {
-        Reply::Assign(a) => {
+    reply.clear();
+    engine.handle(now, EngineEvent::WorkerRequest { worker }, reply);
+    match reply.pop() {
+        Some(Effect::Assign(a)) => {
             let _ = worker_tx[worker].send(ToWorker::Assign(a));
         }
-        Reply::Wait => {
-            parked.insert(worker);
-        }
-        Reply::Terminate => {
+        Some(Effect::TerminateWorker { worker }) => {
             let _ = worker_tx[worker].send(ToWorker::Terminate);
         }
+        // Park (or nothing): the engine holds the worker; the thread simply
+        // blocks on its channel until woken or terminated.
+        _ => {}
     }
 }
 

@@ -1,7 +1,8 @@
-//! The distributed master: drives the *identical* [`Master`] state machine
-//! the simulator and the in-process native runtime use, but over
-//! [`Transport`] connections — one reader thread per worker feeding a
-//! single dispatch loop, all send halves owned by that loop.
+//! The distributed master: drives the *identical*
+//! [`Engine`](crate::coordinator::Engine) the simulator and the in-process
+//! native runtime use, but over [`Transport`] connections — one reader
+//! thread per worker feeding a single event loop, all send halves owned by
+//! that loop.
 //!
 //! Faithful to the paper, the master performs **no failure detection**: a
 //! closed connection is noted and ignored, an undeliverable assignment
@@ -16,10 +17,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
-use crate::coordinator::{Master, MasterConfig, Reply};
+use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig};
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
-use crate::util::ParkedSet;
 
 use super::protocol::{FaultSpec, Frame, Welcome, WireAssignment, PROTOCOL_VERSION};
 use super::transport::{FrameRx as _, FrameTx, TcpTransport, Transport};
@@ -40,9 +40,9 @@ pub struct NetMasterParams {
     /// bounded for practicality).
     pub timeout: Duration,
     /// **Test-only**: arm the coordinator's deliberate drop-one-re-dispatch
-    /// bug (see [`Master::enable_test_drop_one_redispatch`]); the chaos
-    /// harness uses it to prove its invariant oracle catches coordinator
-    /// regressions. Never set by production paths.
+    /// bug (see [`crate::coordinator::Master::enable_test_drop_one_redispatch`]);
+    /// the chaos harness uses it to prove its invariant oracle catches
+    /// coordinator regressions. Never set by production paths.
     #[doc(hidden)]
     pub test_drop_one_redispatch: bool,
 }
@@ -105,7 +105,9 @@ impl NetMaster {
         let p = prm.faults.len();
         ensure!(transports.len() == p, "expected {p} connections, got {}", transports.len());
 
-        let mut master = Master::new(MasterConfig {
+        // The sans-I/O coordinator engine; this driver translates frames
+        // into engine events and effects into frame sends.
+        let mut engine = Engine::new(MasterConfig {
             n: prm.n,
             p,
             technique: prm.technique,
@@ -113,7 +115,7 @@ impl NetMaster {
             rdlb: prm.rdlb,
         });
         if prm.test_drop_one_redispatch {
-            master.enable_test_drop_one_redispatch();
+            engine.arm_test_drop_one_redispatch();
         }
 
         // One reader thread per connection; all send halves stay here.
@@ -143,31 +145,32 @@ impl NetMaster {
         let hard_deadline = start + prm.timeout;
         let mut registered = vec![false; p];
         let mut refused_slot = vec![false; p];
-        let mut parked = ParkedSet::new(p);
-        let mut woken: Vec<u32> = Vec::with_capacity(p);
-        let mut useful = 0.0f64;
-        let mut wasted = 0.0f64;
-        let mut result_digest = 0.0f64;
-        let mut hung = false;
+        let mut reply: Vec<Effect> = Vec::with_capacity(1);
 
         loop {
             let left = hard_deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
-                hung = !master.is_complete();
+                engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
                 break;
             }
             let event = match event_rx.recv_timeout(left) {
                 Ok(e) => e,
+                // Timed out, or every reader thread is gone: either way the
+                // run can no longer progress.
                 Err(mpsc::RecvTimeoutError::Timeout)
                 | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    hung = !master.is_complete();
+                    let now = start.elapsed().as_secs_f64();
+                    engine.handle(now, EngineEvent::Timeout, &mut reply);
                     break;
                 }
             };
             let now = start.elapsed().as_secs_f64();
             match event {
-                Event::Closed(_) => {
-                    // No detection: rDLB recovers the work, or the run hangs.
+                Event::Closed(w) => {
+                    // No detection: the engine records the disconnect and —
+                    // faithful to the paper — emits nothing; rDLB recovers
+                    // the work, or the run hangs.
+                    engine.handle(now, EngineEvent::WorkerDisconnected { worker: w }, &mut reply);
                 }
                 Event::Frame(w, Frame::Hello(hello)) => {
                     if registered[w] || refused_slot[w] {
@@ -177,20 +180,23 @@ impl NetMaster {
                         continue;
                     }
                     if hello.version != PROTOCOL_VERSION {
-                        // Incompatible peer: tell it to exit (dropping our
-                        // send half alone would not close the socket — the
-                        // reader thread's clone keeps it open), refuse
-                        // further traffic, and count the refusal so the
-                        // Outcome's stats distinguish it from a fail-stop
-                        // at t=0.
+                        // Incompatible peer: the engine counts the refusal
+                        // (so the Outcome's stats distinguish it from a
+                        // fail-stop at t=0) and orders the Terminate;
+                        // dropping our send half alone would not close the
+                        // socket — the reader thread's clone keeps it open.
                         eprintln!(
                             "net: refusing worker {w}: protocol version {} != {} \
                              (slot stays unregistered)",
                             hello.version, PROTOCOL_VERSION
                         );
                         refused_slot[w] = true;
-                        send_or_drop(&mut txs, w, &Frame::Terminate);
-                        txs[w] = None;
+                        reply.clear();
+                        engine.handle(now, EngineEvent::VersionRefused { worker: w }, &mut reply);
+                        if let Some(Effect::TerminateWorker { worker }) = reply.pop() {
+                            send_or_drop(&mut txs, worker, &Frame::Terminate);
+                            txs[worker] = None;
+                        }
                         continue;
                     }
                     registered[w] = true;
@@ -205,39 +211,21 @@ impl NetMaster {
                     if !registered[w] || worker as usize != w {
                         continue; // protocol violation: ignore
                     }
-                    dispatch(&mut master, w, now, &mut txs, &mut parked);
+                    serve_request(&mut engine, w, now, &mut reply, &mut txs);
                 }
                 Event::Frame(w, Frame::Result(r)) => {
                     if !registered[w] || r.worker as usize != w {
                         continue;
                     }
-                    let newly = master.on_result(w, r.assignment, r.compute_secs, now);
-                    let fins = newly.len() as f64;
-                    let dups = (r.digests.len() as f64 - fins).max(0.0);
-                    if dups + fins > 0.0 {
-                        wasted += r.compute_secs * dups / (dups + fins);
-                        useful += r.compute_secs * fins / (dups + fins);
-                    }
-                    // Exactly one digest contribution per iteration: only
-                    // positions whose completion was the FIRST one count.
-                    for &pos in &newly {
-                        if let Some(d) = r.digests.get(pos) {
-                            result_digest += d;
-                        }
-                    }
-                    if master.is_complete() {
+                    let completed = engine
+                        .on_result_with(now, w, r.assignment, r.compute_secs, &r.digests, |e, pw| {
+                            serve_request(e, pw, now, &mut reply, &mut txs)
+                        });
+                    if completed {
                         break;
                     }
-                    // Wakeup pass: only the actually-parked workers are
-                    // touched, and the pass is skipped when none are.
-                    if !parked.is_empty() {
-                        parked.drain_into(&mut woken);
-                        for &pw in &woken {
-                            dispatch(&mut master, pw as usize, now, &mut txs, &mut parked);
-                        }
-                    }
                     // Result piggy-backs the next request (MPI semantics).
-                    dispatch(&mut master, w, now, &mut txs, &mut parked);
+                    serve_request(&mut engine, w, now, &mut reply, &mut txs);
                 }
                 Event::Frame(_, _) => {
                     // Master-bound connections must not carry master frames.
@@ -252,47 +240,50 @@ impl NetMaster {
         drop(txs);
 
         let elapsed = start.elapsed().as_secs_f64();
-        let mut stats = master.stats().clone();
-        stats.refused_workers = refused_slot.iter().filter(|&&r| r).count() as u64;
+        let hung = engine.hung();
+        let stats = engine.final_stats();
         Ok(Outcome {
             parallel_time: if hung { f64::INFINITY } else { elapsed },
             hung,
-            finished: master.table().finished_count(),
+            finished: engine.finished_count(),
             n: prm.n,
             events: stats.requests + stats.completed_chunks,
             stats,
-            wasted_work: wasted,
-            useful_work: useful,
+            wasted_work: engine.wasted_work(),
+            useful_work: engine.useful_work(),
             failures: prm.faults.iter().filter(|f| f.fail_after.is_some()).count(),
-            result_digest,
+            result_digest: engine.result_digest(),
         })
     }
 }
 
-/// Answer one work request: send the chunk, park the worker, or terminate
-/// it. A failed send is a fail-stop in progress — the chunk evaporates and
-/// the master, faithfully, does not react.
-fn dispatch(
-    master: &mut Master,
+/// Feed one `WorkerRequest` into the engine and execute the single effect
+/// it returns: send the chunk, send `Wait` for a park, or terminate the
+/// peer.  A failed send is a fail-stop in progress — the chunk evaporates
+/// and the master, faithfully, does not react.
+fn serve_request(
+    engine: &mut Engine,
     worker: usize,
     now: f64,
+    reply: &mut Vec<Effect>,
     txs: &mut [Option<Box<dyn FrameTx>>],
-    parked: &mut ParkedSet,
 ) {
-    match master.on_request(worker, now) {
-        Reply::Assign(a) => {
+    reply.clear();
+    engine.handle(now, EngineEvent::WorkerRequest { worker }, reply);
+    match reply.pop() {
+        Some(Effect::Assign(a)) => {
             // Moves the TaskSet onto the wire frame: a contiguous primary
             // chunk never materializes its ids, in memory or on the wire.
             let frame = Frame::Assign(WireAssignment::from_assignment(a));
             send_or_drop(txs, worker, &frame);
         }
-        Reply::Wait => {
+        Some(Effect::Park { worker }) => {
             send_or_drop(txs, worker, &Frame::Wait);
-            parked.insert(worker);
         }
-        Reply::Terminate => {
+        Some(Effect::TerminateWorker { worker }) => {
             send_or_drop(txs, worker, &Frame::Terminate);
         }
+        _ => {}
     }
 }
 

@@ -25,10 +25,9 @@ use super::outcome::Outcome;
 use super::perturbation::PerturbationModel;
 use super::topology::Topology;
 use crate::apps::Workload;
-use crate::coordinator::{Master, MasterConfig, Reply};
+use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig};
 use crate::dls::{Technique, TechniqueParams};
 use crate::trace::{Trace, TraceRecord};
-use crate::util::ParkedSet;
 
 /// Full parameterization of one simulated execution.
 #[derive(Debug, Clone)]
@@ -113,7 +112,11 @@ impl SimCluster {
             tech_params.mu = s.mean;
             tech_params.sigma = s.std;
         }
-        let mut master = Master::new(MasterConfig {
+        // The sans-I/O coordinator engine owns the master, parking/waking
+        // and the useful/wasted-work split; this driver only translates
+        // queue events into engine events and effects back into queue
+        // pushes.
+        let mut engine = Engine::new(MasterConfig {
             n,
             p,
             technique: prm.technique,
@@ -122,10 +125,7 @@ impl SimCluster {
         });
 
         let mut queue = EventQueue::new();
-        let mut parked = ParkedSet::new(p);
-        let mut woken: Vec<u32> = Vec::with_capacity(p);
-        let mut useful_work = 0.0f64;
-        let mut wasted_work = 0.0f64;
+        let mut reply: Vec<Effect> = Vec::with_capacity(1);
         let mut end_time: Option<f64> = None;
         let mut events: u64 = 0;
 
@@ -150,63 +150,58 @@ impl SimCluster {
             match event {
                 Event::RequestAtMaster { worker, result } => {
                     if let Some(res) = result {
-                        let dup_before = master.stats().duplicate_iterations;
-                        let newly =
-                            master.on_result(worker, res.assignment_id, res.compute_time, now);
-                        let fins = newly.len() as f64;
-                        let dups = (master.stats().duplicate_iterations - dup_before) as f64;
-                        let total = dups + fins;
-                        if total > 0.0 {
-                            wasted_work += res.compute_time * dups / total;
-                            useful_work += res.compute_time * fins / total;
-                        }
-                        if master.is_complete() {
-                            end_time = Some(now);
-                            break;
-                        }
-                        // Pool shrank: retry parked workers (their requests
-                        // sit at the master; no extra message latency).
-                        if !parked.is_empty() {
-                            parked.drain_into(&mut woken);
-                            for &pw in &woken {
+                        // Woken requests sit at the master already, so
+                        // delivery adds no message latency — but they go
+                        // through the event queue, keeping the seeded
+                        // event order identical to the pre-engine
+                        // simulator.
+                        let completed = engine.on_result_with(
+                            now,
+                            worker,
+                            res.assignment_id,
+                            res.compute_time,
+                            &[],
+                            |_, pw| {
                                 queue.push(
                                     now,
-                                    Event::RequestAtMaster { worker: pw as usize, result: None },
-                                );
-                            }
+                                    Event::RequestAtMaster { worker: pw, result: None },
+                                )
+                            },
+                        );
+                        if completed {
+                            end_time = Some(now);
+                            break;
                         }
                     }
                     // The request itself (the sender may since have failed;
                     // the master cannot know and replies anyway).
-                    match master.on_request(worker, now) {
-                        Reply::Assign(assignment) => {
-                            let t_reply = now + prm.sched_overhead + latency(worker, now);
+                    reply.clear();
+                    engine.handle(now, EngineEvent::WorkerRequest { worker }, &mut reply);
+                    // Park: the engine holds the worker; the simulator sends
+                    // nothing.  Terminate: the virtual worker simply exits.
+                    if let Some(Effect::Assign(assignment)) = reply.pop() {
+                        let t_reply = now + prm.sched_overhead + latency(worker, now);
+                        if let Some(tr) = trace.as_deref_mut() {
+                            tr.push(TraceRecord {
+                                assignment_id: assignment.id,
+                                worker,
+                                first_task: assignment.tasks.first().unwrap_or(0),
+                                task_count: assignment.len(),
+                                assigned_at: now,
+                                started_at: None,
+                                finished_at: None,
+                                rescheduled: assignment.rescheduled,
+                                lost: false,
+                            });
+                        }
+                        if prm.failures.is_failed(worker, t_reply) {
+                            // Chunk evaporates (Fig. 1b's T4-on-P3 case).
                             if let Some(tr) = trace.as_deref_mut() {
-                                tr.push(TraceRecord {
-                                    assignment_id: assignment.id,
-                                    worker,
-                                    first_task: assignment.tasks.first().unwrap_or(0),
-                                    task_count: assignment.len(),
-                                    assigned_at: now,
-                                    started_at: None,
-                                    finished_at: None,
-                                    rescheduled: assignment.rescheduled,
-                                    lost: false,
-                                });
+                                mark_lost(tr, assignment.id);
                             }
-                            if prm.failures.is_failed(worker, t_reply) {
-                                // Chunk evaporates (Fig. 1b's T4-on-P3 case).
-                                if let Some(tr) = trace.as_deref_mut() {
-                                    mark_lost(tr, assignment.id);
-                                }
-                                continue;
-                            }
-                            queue.push(t_reply, Event::ReplyAtWorker { worker, assignment });
+                            continue;
                         }
-                        Reply::Wait => {
-                            parked.insert(worker);
-                        }
-                        Reply::Terminate => { /* worker exits */ }
+                        queue.push(t_reply, Event::ReplyAtWorker { worker, assignment });
                     }
                 }
 
@@ -227,7 +222,7 @@ impl SimCluster {
                     if let Some(ft) = prm.failures.time_of(worker) {
                         if ft <= finish {
                             // Dies mid-compute: partial work burned, chunk lost.
-                            wasted_work += (ft - now).max(0.0);
+                            engine.note_wasted((ft - now).max(0.0));
                             if let Some(tr) = trace.as_deref_mut() {
                                 mark_lost(tr, assignment.id);
                             }
@@ -261,15 +256,15 @@ impl SimCluster {
             }
         }
 
-        let hung = end_time.is_none() && !master.is_complete();
+        let hung = end_time.is_none() && !engine.is_complete();
         Outcome {
             parallel_time: end_time.unwrap_or(f64::INFINITY),
             hung,
-            finished: master.table().finished_count(),
+            finished: engine.finished_count(),
             n,
-            stats: master.stats().clone(),
-            wasted_work,
-            useful_work,
+            stats: engine.final_stats(),
+            wasted_work: engine.wasted_work(),
+            useful_work: engine.useful_work(),
             failures: prm.failures.count(),
             result_digest: 0.0,
             events,

@@ -49,6 +49,12 @@ impl ParkedSet {
         true
     }
 
+    /// The parked ids in insertion order, without unparking them (the
+    /// hierarchical runtime carries parked requests across inner runs).
+    pub fn as_slice(&self) -> &[u32] {
+        &self.order
+    }
+
     /// Unpark everyone: move the parked ids (in insertion order) into
     /// `out`, clearing it first.  Both buffers keep their capacity, so the
     /// per-result wakeup pass is allocation-free at steady state, and

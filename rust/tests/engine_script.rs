@@ -1,0 +1,250 @@
+//! Scripted-driver tests for the sans-I/O coordinator engine: hand-written
+//! event sequences, asserted effect sequences, and `MasterStats`
+//! identities — no threads, no sockets, no clocks.
+//!
+//! These scripts are the executable specification of the engine/driver
+//! contract (see `ARCHITECTURE.md`): every runtime is a thin translator
+//! around exactly these effect sequences, so behavior pinned here is pinned
+//! for the simulator, the native threads, the net runtime and both levels
+//! of the hierarchical runtime at once.
+
+use rdlb::coordinator::{Assignment, Effect, Engine, EngineEvent, MasterConfig};
+use rdlb::dls::{Technique, TechniqueParams};
+
+fn engine(n: usize, p: usize, technique: Technique, rdlb: bool) -> Engine {
+    Engine::new(MasterConfig { n, p, technique, params: TechniqueParams::default(), rdlb })
+}
+
+/// Feed one event, returning the full effect list.
+fn feed(e: &mut Engine, now: f64, ev: EngineEvent<'_>) -> Vec<Effect> {
+    let mut out = Vec::new();
+    e.handle(now, ev, &mut out);
+    out
+}
+
+/// Feed a `WorkerRequest` and unwrap the promised single `Assign`.
+fn assign(e: &mut Engine, worker: usize, now: f64) -> Assignment {
+    let mut out = feed(e, now, EngineEvent::WorkerRequest { worker });
+    assert_eq!(out.len(), 1, "a request yields exactly one effect: {out:?}");
+    match out.pop().unwrap() {
+        Effect::Assign(a) => {
+            assert_eq!(a.worker, worker);
+            a
+        }
+        other => panic!("expected Assign for worker {worker}, got {other:?}"),
+    }
+}
+
+fn result_event(worker: usize, id: u64, digests: &[f64]) -> EngineEvent<'_> {
+    EngineEvent::ResultReceived {
+        worker,
+        assignment_id: id,
+        compute_secs: 0.01,
+        digests,
+    }
+}
+
+/// Drive the scripted state where worker 0 holds every pending iteration
+/// and is parked, with worker 1's original chunk for task 1 still in
+/// flight.  Returns `(engine, a0, a1, dup)`:
+/// task 0 held by w0 (a0), task 1 held by w1 (a1) and duplicated by w0
+/// (dup).
+fn parked_holder_state() -> (Engine, Assignment, Assignment, Assignment) {
+    let mut e = engine(2, 2, Technique::Gss, true);
+    let a0 = assign(&mut e, 0, 0.0); // primary: task 0
+    assert_eq!(a0.tasks.to_vec(), vec![0]);
+    let a1 = assign(&mut e, 1, 0.0); // primary: task 1
+    assert_eq!(a1.tasks.to_vec(), vec![1]);
+    // Everything is Scheduled: w0's next request enters the rDLB phase and
+    // duplicates the one pending task it does not hold — task 1.
+    let dup = assign(&mut e, 0, 0.1);
+    assert!(dup.rescheduled);
+    assert_eq!(dup.tasks.to_vec(), vec![1]);
+    // Now w0 holds both pending tasks: its request parks.
+    let out = feed(&mut e, 0.2, EngineEvent::WorkerRequest { worker: 0 });
+    assert_eq!(out, vec![Effect::Park { worker: 0 }]);
+    (e, a0, a1, dup)
+}
+
+#[test]
+fn park_then_wake_on_first_completion() {
+    let (mut e, _a0, _a1, dup) = parked_holder_state();
+    // w0 completes its duplicate of task 1: a FIRST completion (w1 has not
+    // reported).  The run is not complete (task 0 pending), so the parked
+    // w0 is woken — in park order, as the one and only effect.
+    let d = [1.0];
+    let out = feed(&mut e, 0.3, result_event(0, dup.id, &d));
+    assert_eq!(out, vec![Effect::Wake { worker: 0 }], "pool shrank: parked worker must wake");
+    // The wake delivery: w0 still holds pending task 0, so it re-parks.
+    let out = feed(&mut e, 0.3, EngineEvent::WorkerRequest { worker: 0 });
+    assert_eq!(out, vec![Effect::Park { worker: 0 }]);
+    let stats = e.final_stats();
+    assert_eq!(stats.finished_iterations, 1);
+    assert_eq!(stats.duplicate_iterations, 0);
+    assert_eq!(stats.identity_violations(), Vec::<String>::new());
+}
+
+/// The uniform park/wake behavior decision, pinned: an **all-duplicate**
+/// result (nothing newly finished — the pool did not shrink) still wakes
+/// every parked worker, because a completion also releases the reporter's
+/// holds and "never hand a worker an iteration it already holds" can be
+/// what parked them.  Before the engine extraction each runtime hand-rolled
+/// this pass and the three copies had begun to drift; any future divergence
+/// fails this script for all runtimes at once.
+#[test]
+fn duplicate_result_still_wakes_parked_workers() {
+    let (mut e, a0, a1, dup) = parked_holder_state();
+    let d = [1.0];
+    // First completion of task 1 via w0's duplicate; w0 wakes and re-parks.
+    assert_eq!(feed(&mut e, 0.3, result_event(0, dup.id, &d)), vec![Effect::Wake { worker: 0 }]);
+    assert_eq!(
+        feed(&mut e, 0.3, EngineEvent::WorkerRequest { worker: 0 }),
+        vec![Effect::Park { worker: 0 }]
+    );
+    // w1's original result for task 1 arrives late: ALL duplicate work.
+    let out = feed(&mut e, 0.4, result_event(1, a1.id, &d));
+    assert_eq!(
+        out,
+        vec![Effect::Wake { worker: 0 }],
+        "an all-duplicate completion must still wake parked workers"
+    );
+    assert_eq!(e.final_stats().duplicate_iterations, 1);
+    // w0 still holds the last pending task; re-parks once more.
+    assert_eq!(
+        feed(&mut e, 0.4, EngineEvent::WorkerRequest { worker: 0 }),
+        vec![Effect::Park { worker: 0 }]
+    );
+    // Its own original chunk for task 0 completes the run: no further
+    // wakes, just Completed.
+    let out = feed(&mut e, 0.5, result_event(0, a0.id, &d));
+    assert_eq!(out, vec![Effect::Completed]);
+    let stats = e.final_stats();
+    assert_eq!(stats.finished_iterations, 2);
+    assert_eq!(stats.duplicate_iterations, 1);
+    assert_eq!(e.result_digest(), 2.0, "exactly one digest contribution per iteration");
+    assert_eq!(stats.identity_violations(), Vec::<String>::new());
+}
+
+#[test]
+fn mid_chunk_fail_stop_is_recovered_by_redispatch() {
+    // w0 grabs the first GSS chunk and goes silent mid-chunk (the driver
+    // simply never delivers a result — exactly what a fail-stop looks like
+    // to the engine).  w1 alone must finish everything via re-dispatch.
+    let n = 8;
+    let mut e = engine(n, 2, Technique::Gss, true);
+    let lost = assign(&mut e, 0, 0.0); // tasks 0..4, never completed
+    assert_eq!(lost.tasks.to_vec(), vec![0, 1, 2, 3]);
+    let digest_ones = vec![1.0f64; n];
+    let mut redispatched = 0u64;
+    let mut guard = 0;
+    loop {
+        let mut out = feed(&mut e, 1.0, EngineEvent::WorkerRequest { worker: 1 });
+        assert_eq!(out.len(), 1);
+        match out.pop().unwrap() {
+            Effect::Assign(a) => {
+                if a.rescheduled {
+                    redispatched += 1;
+                    for t in a.tasks.iter() {
+                        assert!(lost.tasks.contains(t), "re-dispatch must cover the lost chunk");
+                    }
+                }
+                let d = &digest_ones[..a.len()];
+                let fx = feed(&mut e, 1.1, result_event(1, a.id, d));
+                if fx == vec![Effect::Completed] {
+                    break;
+                }
+                assert!(fx.is_empty(), "nothing parked: {fx:?}");
+            }
+            Effect::TerminateWorker { worker: 1 } => break,
+            other => panic!("w1 must never park while work is pending: {other:?}"),
+        }
+        guard += 1;
+        assert!(guard < 10 * n, "did not terminate");
+    }
+    assert!(e.is_complete());
+    assert!(redispatched > 0, "the lost chunk must have been re-dispatched");
+    let stats = e.final_stats();
+    assert_eq!(stats.finished_iterations as usize, n);
+    assert_eq!(stats.lost_chunks(), 1, "exactly w0's chunk was assigned but never completed");
+    assert_eq!(e.result_digest(), n as f64);
+    assert_eq!(stats.identity_violations(), Vec::<String>::new());
+}
+
+#[test]
+fn stale_version_refusal_terminates_and_is_counted() {
+    let n = 4;
+    let mut e = engine(n, 2, Technique::Fac, true);
+    // Slot 1 registers with a stale protocol version; the driver reports
+    // the refusal and must be told to terminate exactly that peer.
+    let out = feed(&mut e, 0.0, EngineEvent::VersionRefused { worker: 1 });
+    assert_eq!(out, vec![Effect::TerminateWorker { worker: 1 }]);
+    // The surviving worker computes everything.
+    let ones = [1.0f64; 4];
+    let mut guard = 0;
+    loop {
+        let mut out = feed(&mut e, 1.0, EngineEvent::WorkerRequest { worker: 0 });
+        match out.pop().unwrap() {
+            Effect::Assign(a) => {
+                let fx = feed(&mut e, 1.1, result_event(0, a.id, &ones[..a.len()]));
+                if fx == vec![Effect::Completed] {
+                    break;
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        guard += 1;
+        assert!(guard < 10 * n);
+    }
+    let stats = e.final_stats();
+    assert_eq!(stats.refused_workers, 1, "refusal must be visible in the final stats");
+    assert_eq!(stats.finished_iterations as usize, n);
+    assert_eq!(e.result_digest(), n as f64);
+    assert_eq!(stats.identity_violations(), Vec::<String>::new());
+}
+
+#[test]
+fn last_chunk_redispatch_races_and_attributes_once() {
+    // Three SS chunks on three workers; w2 goes silent holding task 2.
+    // Both idle workers duplicate the last pending chunk; the first copy
+    // completes the run, the second is recorded as pure duplicate work and
+    // must not contribute to the digest.
+    let mut e = engine(3, 3, Technique::Ss, true);
+    let a0 = assign(&mut e, 0, 0.0);
+    let a1 = assign(&mut e, 1, 0.0);
+    let _lost = assign(&mut e, 2, 0.0); // task 2, never completed
+    let d = [1.0];
+    assert!(feed(&mut e, 0.1, result_event(0, a0.id, &d)).is_empty());
+    assert!(feed(&mut e, 0.1, result_event(1, a1.id, &d)).is_empty());
+    // Both w0 and w1 now duplicate task 2 (neither holds it).
+    let dup0 = assign(&mut e, 0, 0.2);
+    let dup1 = assign(&mut e, 1, 0.2);
+    assert!(dup0.rescheduled && dup1.rescheduled);
+    assert_eq!(dup0.tasks.to_vec(), vec![2]);
+    assert_eq!(dup1.tasks.to_vec(), vec![2]);
+    // First copy home wins the run.
+    let d2 = [7.0];
+    assert_eq!(feed(&mut e, 0.3, result_event(0, dup0.id, &d2)), vec![Effect::Completed]);
+    assert_eq!(e.result_digest(), 1.0 + 1.0 + 7.0);
+    // The straggling second copy is tolerated, counted, and digest-inert.
+    let fx = feed(&mut e, 0.4, result_event(1, dup1.id, &d2));
+    assert_eq!(fx, vec![Effect::Completed], "post-completion results re-report Completed");
+    assert_eq!(e.result_digest(), 1.0 + 1.0 + 7.0, "duplicate must not contribute");
+    let stats = e.final_stats();
+    assert_eq!(stats.finished_iterations, 3);
+    assert_eq!(stats.duplicate_iterations, 1);
+    assert_eq!(stats.rescheduled_chunks, 2);
+    assert_eq!(stats.rescheduled_completions, 2);
+    assert_eq!(stats.identity_violations(), Vec::<String>::new());
+}
+
+#[test]
+fn timeout_and_disconnect_are_inert_bookkeeping() {
+    let mut e = engine(4, 2, Technique::Fac, true);
+    let _a = assign(&mut e, 0, 0.0);
+    assert!(feed(&mut e, 0.1, EngineEvent::WorkerDisconnected { worker: 1 }).is_empty());
+    assert_eq!(e.disconnects(), 1);
+    assert!(!e.hung());
+    assert!(feed(&mut e, 60.0, EngineEvent::Timeout).is_empty());
+    assert!(e.hung(), "timeout before completion records the hang");
+    assert_eq!(e.final_stats().identity_violations(), Vec::<String>::new());
+}

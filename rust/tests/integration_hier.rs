@@ -1,0 +1,99 @@
+//! Integration tests for the two-level hierarchical runtime: completion
+//! and exact digest parity with the serial kernel under group-master
+//! fail-stops and worker failures, hang documentation without rDLB, and
+//! invariance of the digest across group shapes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdlb::apps::{CostModel, MandelbrotApp};
+use rdlb::dls::Technique;
+use rdlb::hier::{HierParams, HierRuntime};
+use rdlb::native::ComputeBackend;
+use rdlb::util::Watchdog;
+
+fn synthetic(n: usize, cost: f64) -> ComputeBackend {
+    ComputeBackend::Synthetic { model: Arc::new(CostModel::from_costs(vec![cost; n])), scale: 1.0 }
+}
+
+/// The acceptance scenario: a group-master fail-stop PLUS W−1 worker
+/// failures inside a surviving group, with digest parity against the
+/// serial kernel.  Two groups of three: group 1's master (global worker 3)
+/// dies mid-run — taking its workers 4 and 5 with it, which also fail on
+/// their own schedule — and group 0 loses workers 1 and 2, leaving global
+/// worker 0 alone (P−1 = 5 failed PEs).  rDLB at both levels must still
+/// finish every iteration exactly once.
+#[test]
+fn group_master_failure_plus_p_minus_1_workers_completes_with_digest_parity() {
+    let _guard = Watchdog::arm("hier_group_master_failure", Duration::from_secs(120));
+    let n = 400;
+    let mut p = HierParams::new(n, 2, 3, Technique::Fac, true, synthetic(n, 2e-3));
+    // Failure-free makespan ≈ n·cost/6 ≈ 130 ms: these all land mid-run.
+    p.failures[3] = Some(0.05); // group 1's master slot: the whole group dies
+    p.failures[4] = Some(0.06);
+    p.failures[5] = Some(0.07);
+    p.failures[1] = Some(0.08); // surviving group 0 loses W−1 workers...
+    p.failures[2] = Some(0.11); // ...leaving only global worker 0
+    p.timeout = Duration::from_secs(60);
+    let o = HierRuntime::new(p).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+    assert_eq!(o.finished, n);
+    assert_eq!(o.failures, 5);
+    assert_eq!(
+        o.result_digest, n as f64,
+        "serial-kernel digest parity (1.0 per task, exactly once): {o:?}"
+    );
+    assert!(o.stats.identity_violations().is_empty(), "{:?}", o.stats);
+}
+
+/// Same shape on the Mandelbrot kernel, whose per-task digests are all
+/// distinct — a misattributed or double-counted iteration cannot cancel
+/// out.  Fail times are tiny (the kernel is fast); whether each failure
+/// fires before, during or after the chunk stream, parity must hold.
+#[test]
+fn hier_mandelbrot_digest_matches_serial_kernel_under_failures() {
+    let _guard = Watchdog::arm("hier_mandelbrot_parity", Duration::from_secs(120));
+    let app = MandelbrotApp { width: 32, height: 32, max_iter: 64, ..Default::default() };
+    let n = app.n_tasks();
+    let serial: f64 = app.compute_range(0, n as u32).iter().map(|&c| c as f64).sum();
+    let backend = ComputeBackend::Mandelbrot(Arc::new(app));
+    let mut p = HierParams::new(n, 2, 2, Technique::Gss, true, backend);
+    p.failures[2] = Some(0.002); // group 1's master
+    p.failures[1] = Some(0.003); // group 0's second worker
+    p.timeout = Duration::from_secs(60);
+    let o = HierRuntime::new(p).unwrap().run().unwrap();
+    assert!(o.completed(), "{o:?}");
+    assert_eq!(o.result_digest, serial, "hier ↔ serial digest parity: {o:?}");
+}
+
+#[test]
+fn hier_digest_invariant_across_runs_and_group_shapes() {
+    let _guard = Watchdog::arm("hier_digest_invariance", Duration::from_secs(120));
+    let n = 240;
+    let run = |groups: usize, wpg: usize| {
+        let mut p = HierParams::new(n, groups, wpg, Technique::Fac, true, synthetic(n, 1e-4));
+        p.timeout = Duration::from_secs(30);
+        let o = HierRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "{groups}x{wpg}: {o:?}");
+        o.result_digest
+    };
+    assert_eq!(run(2, 3), n as f64);
+    assert_eq!(run(2, 3), run(2, 3), "same shape twice must agree exactly");
+    assert_eq!(run(2, 3), run(3, 2), "digest must not depend on the group shape");
+}
+
+/// The paper's documented failure mode survives the hierarchy: without
+/// rDLB a lost chunk (here: a whole lost group) hangs the run, reported at
+/// the wall-clock bound instead of completing wrongly.
+#[test]
+fn hier_failure_without_rdlb_hangs_at_the_bound() {
+    let _guard = Watchdog::arm("hier_hang_documented", Duration::from_secs(120));
+    let n = 160;
+    let mut p = HierParams::new(n, 2, 2, Technique::Fac, false, synthetic(n, 2e-3));
+    p.failures[2] = Some(0.02); // group 1's master dies holding a super-chunk
+    p.timeout = Duration::from_millis(900);
+    let o = HierRuntime::new(p).unwrap().run().unwrap();
+    assert!(o.hung, "must hang without rDLB: {o:?}");
+    assert!(o.parallel_time.is_infinite());
+    assert!(o.finished < n, "work must demonstrably be missing");
+}
