@@ -338,6 +338,10 @@ pub fn run_case(spec: &CaseSpec) -> Result<CaseReport> {
         outcomes.push(outcome);
     }
     let w = Summary::of(&walls);
+    let mut wall_hist = crate::obs::Histogram::new();
+    for &wall in &walls {
+        wall_hist.record(wall);
+    }
     let total_wall: f64 = walls.iter().sum::<f64>().max(1e-12);
     let total_tasks: u64 = outcomes.iter().map(|o| o.finished as u64).sum();
     let total_events: u64 = outcomes.iter().map(|o| o.events).sum();
@@ -366,6 +370,8 @@ pub fn run_case(spec: &CaseSpec) -> Result<CaseReport> {
             min_s: w.min,
             tasks_per_s: total_tasks as f64 / total_wall,
             events_per_s: is_sim.then_some(total_events as f64 / total_wall),
+            hist_p50_s: Some(wall_hist.percentile(0.50)),
+            hist_p99_s: Some(wall_hist.percentile(0.99)),
         },
     })
 }

@@ -90,6 +90,8 @@ fn bench_frame(id: String, frame: &Frame, tasks: u64, reps: usize) -> CaseReport
             min_s: w.min,
             tasks_per_s: total_iters as f64 * tasks as f64 / total_wall,
             events_per_s: Some(roundtrips_per_s),
+            hist_p50_s: None,
+            hist_p99_s: None,
         },
     }
 }

@@ -257,6 +257,8 @@ mod tests {
                 min_s: median,
                 tasks_per_s: 100.0 / median,
                 events_per_s: eps,
+                hist_p50_s: None,
+                hist_p99_s: None,
             },
         }
     }

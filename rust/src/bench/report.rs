@@ -106,6 +106,12 @@ pub struct WallMetrics {
     /// Simulator events per wall second — simulator cases only; the
     /// headline hot-path throughput number.
     pub events_per_s: Option<f64>,
+    /// p50 / p99 of the per-rep walls from a log-linear
+    /// [`crate::obs::Histogram`] — the same aggregation `--metrics`
+    /// exports, so its bucket error (≤ ~9%) is exercised on real samples
+    /// every campaign.  Absent in pre-observability baselines.
+    pub hist_p50_s: Option<f64>,
+    pub hist_p99_s: Option<f64>,
 }
 
 impl WallMetrics {
@@ -121,6 +127,12 @@ impl WallMetrics {
         if let Some(e) = self.events_per_s {
             fields.push(("events_per_s", num_or_null(e)));
         }
+        if let Some(p) = self.hist_p50_s {
+            fields.push(("hist_p50_s", num_or_null(p)));
+        }
+        if let Some(p) = self.hist_p99_s {
+            fields.push(("hist_p99_s", num_or_null(p)));
+        }
         Json::obj(fields)
     }
 
@@ -133,6 +145,8 @@ impl WallMetrics {
             min_s: v.req("min_s")?.as_f64().context("min_s")?,
             tasks_per_s: v.get("tasks_per_s").and_then(Json::as_f64).unwrap_or(0.0),
             events_per_s: v.get("events_per_s").and_then(Json::as_f64),
+            hist_p50_s: v.get("hist_p50_s").and_then(Json::as_f64),
+            hist_p99_s: v.get("hist_p99_s").and_then(Json::as_f64),
         })
     }
 }
@@ -319,6 +333,8 @@ mod tests {
                 min_s: median * 0.9,
                 tasks_per_s: 1000.0 / median,
                 events_per_s: sim.then_some(3000.0 / median),
+                hist_p50_s: Some(median),
+                hist_p99_s: Some(median * 1.3),
             },
         }
     }

@@ -6,6 +6,7 @@
 //! | `exactly-once` | a completed wall-clock run's result digest equals the serial kernel's bit-for-bit, and exactly N first completions were recorded — no lost and no double-counted iteration, even with rDLB duplicates and duplicated frames |
 //! | `stats-identities` | the [`MasterStats`](crate::coordinator::MasterStats) conservation identities hold (assigned = completed + lost, executed ≤ assigned, …) |
 //! | `refused-accounting` | stale-version churners are counted in `refused_workers`, are never scheduled, and a worker reports `failed` only if a fail-stop was injected (net runtime) |
+//! | `journal-oracle` | when the engine journal tap is armed (`rdlb chaos --journal-oracle`), the journal decodes cleanly and [`replay_stats`](crate::obs::replay_stats) over it reproduces the live [`MasterStats`](crate::coordinator::MasterStats) exactly |
 //! | `cross-runtime` | all applicable runtimes agree: same completion verdict under rDLB, identical digests across the wall-clock runtimes |
 
 use crate::config::RuntimeKind;
@@ -123,6 +124,32 @@ pub fn check_scenario(sc: &ChaosScenario, runs: &[RuntimeRun]) -> (usize, Vec<Vi
             violations.push(Violation::new("stats-identities", Some(rt), msg));
         }
 
+        // -- journal-oracle (only when the tap was armed) -----------------
+        if let Some(bytes) = &run.journal {
+            checks += 1;
+            match crate::obs::read_journal(bytes) {
+                Ok(records) => {
+                    let replayed = crate::obs::replay_stats(&records);
+                    if replayed != o.stats {
+                        violations.push(Violation::new(
+                            "journal-oracle",
+                            Some(rt),
+                            format!(
+                                "journal replay diverges from live counters: \
+                                 replayed {replayed:?} != live {:?}",
+                                o.stats
+                            ),
+                        ));
+                    }
+                }
+                Err(e) => violations.push(Violation::new(
+                    "journal-oracle",
+                    Some(rt),
+                    format!("journal failed to decode: {e:#}"),
+                )),
+            }
+        }
+
         // -- refused-accounting (net only: reports exist) -----------------
         if rt == RuntimeKind::Net {
             checks += 1;
@@ -214,6 +241,25 @@ mod tests {
         let a = check_scenario(&sc, &execute_scenario(&sc).unwrap()).0;
         let b = check_scenario(&sc, &execute_scenario(&sc).unwrap()).0;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn journal_oracle_replay_matches_live_counters() {
+        let sc = ChaosScenario::baseline(4, 21, 100, 3, Technique::Fac, true, 5e-5);
+        let runs = crate::chaos::execute_scenario_observed(&sc, true).unwrap();
+        assert!(runs.iter().all(|r| r.journal.is_some()), "tap was armed on every run");
+        let (checks, violations) = check_scenario(&sc, &runs);
+        assert!(violations.is_empty(), "{violations:?}");
+        // The armed tap adds exactly one replay check per runtime run.
+        assert_eq!(checks, 3 * 3 + 1 + 1 + runs.len());
+
+        // Doctoring the journal bytes must trip the decode arm.
+        let mut doctored = runs.clone();
+        if let Some(j) = doctored[0].journal.as_mut() {
+            j.truncate(j.len() - 1);
+        }
+        let (_c, violations) = check_scenario(&sc, &doctored);
+        assert!(violations.iter().any(|v| v.invariant == "journal-oracle"), "{violations:?}");
     }
 
     #[test]

@@ -48,7 +48,7 @@ pub use gen::{ChaosBudget, ScheduleGen};
 pub use invariants::{check_scenario, Violation};
 pub use replay::{scenario_from_json_str, scenario_to_json_string};
 pub use report::{run_chaos, ChaosOutcome, ChaosSettings, FailureCase};
-pub use run::{execute_scenario, expected_digest, RuntimeRun};
+pub use run::{execute_scenario, execute_scenario_observed, expected_digest, RuntimeRun};
 pub use shrink::{shrink, ShrinkResult};
 
 use crate::config::RuntimeKind;

@@ -14,7 +14,7 @@ use anyhow::{Context, Result};
 use super::gen::{ChaosBudget, ScheduleGen};
 use super::invariants::{check_scenario, Violation};
 use super::replay::scenario_to_json_string;
-use super::run::execute_scenario;
+use super::run::execute_scenario_observed;
 use super::shrink::shrink;
 use super::{BugHook, ChaosScenario};
 
@@ -38,6 +38,12 @@ pub struct ChaosSettings {
     /// Off by default so `(seed, budget)` campaigns keep byte-identical
     /// output across versions.
     pub hier: bool,
+    /// Tap every run with an engine journal and check that
+    /// [`replay_stats`](crate::obs::replay_stats) over it reproduces the
+    /// live counters (`rdlb chaos --journal-oracle`).  Off by default for
+    /// the same output-stability reason as `hier`: it adds one check per
+    /// run to the deterministic `checks` counter.
+    pub journal_oracle: bool,
 }
 
 impl ChaosSettings {
@@ -50,6 +56,7 @@ impl ChaosSettings {
             verbose: false,
             bug: None,
             hier: false,
+            journal_oracle: false,
         }
     }
 }
@@ -119,7 +126,8 @@ pub fn run_chaos(settings: &ChaosSettings) -> Result<ChaosOutcome> {
         // the campaign going, exactly as the shrinker treats it, instead
         // of aborting with no reproducer for the panic-class regressions
         // the fuzzer exists to catch.
-        let (runs, checks, violations) = match execute_scenario(&sc) {
+        let executed = execute_scenario_observed(&sc, settings.journal_oracle);
+        let (runs, checks, violations) = match executed {
             Ok(runs) => {
                 let (checks, violations) = check_scenario(&sc, &runs);
                 (runs, checks, violations)
@@ -219,6 +227,17 @@ mod tests {
         assert!(base.passed(), "{:?}", base.failures);
         assert!(a.runs >= base.runs, "arming hier can only add runtime runs");
         assert_eq!(a.scenarios, base.scenarios);
+    }
+
+    #[test]
+    fn journal_oracle_campaign_adds_one_check_per_run() {
+        let mut settings = quiet(5, 6);
+        settings.journal_oracle = true;
+        let a = run_chaos(&settings).unwrap();
+        assert!(a.passed(), "{:?}", a.failures);
+        let base = run_chaos(&quiet(5, 6)).unwrap();
+        assert_eq!(a.runs, base.runs, "the tap must not change which runtimes run");
+        assert_eq!(a.checks, base.checks + a.runs, "one replay check per journaled run");
     }
 
     #[test]

@@ -8,19 +8,21 @@
 //! The native runtime covers the envelope subset; the simulator covers
 //! pure fail-stop/baseline schedules in virtual time.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::apps::{AppKind, CostModel, MandelbrotApp};
 use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
+use crate::coordinator::SharedSink;
 use crate::hier::{HierParams, HierRuntime};
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
 use crate::net::{
     run_worker, FaultInjectingTransport, FaultSpec, Frame, LoopbackTransport, NetMaster,
     NetMasterParams, Transport, WorkerHello, WorkerReport, PROTOCOL_VERSION,
 };
+use crate::obs::JournalSink;
 use crate::sim::{Outcome, SimCluster};
 use crate::util::Rng;
 
@@ -33,6 +35,11 @@ pub struct RuntimeRun {
     pub outcome: Outcome,
     /// Per-worker reports (net runtime only; empty elsewhere).
     pub reports: Vec<WorkerReport>,
+    /// Raw engine journal captured during the run (`rdlb chaos
+    /// --journal-oracle`; `None` when the tap was not armed).  The
+    /// invariant oracle replays it and demands
+    /// [`replay_stats`](crate::obs::replay_stats) `==` the live counters.
+    pub journal: Option<Vec<u8>>,
 }
 
 /// The scenario's compute backend for the wall-clock runtimes.
@@ -76,34 +83,60 @@ pub fn expected_digest(sc: &ChaosScenario) -> f64 {
 /// Run the scenario on every applicable runtime (see
 /// [`ChaosScenario::runtimes`]), in deterministic order.
 pub fn execute_scenario(sc: &ChaosScenario) -> Result<Vec<RuntimeRun>> {
+    execute_scenario_observed(sc, false)
+}
+
+/// [`execute_scenario`] with an optional engine-journal tap on every run
+/// (`rdlb chaos --journal-oracle`): each [`RuntimeRun`] then carries the
+/// raw journal bytes for the oracle's replay check.
+pub fn execute_scenario_observed(sc: &ChaosScenario, journal: bool) -> Result<Vec<RuntimeRun>> {
     sc.validate()?;
-    sc.runtimes().into_iter().map(|kind| execute_on(sc, kind)).collect()
+    sc.runtimes().into_iter().map(|kind| execute_on_observed(sc, kind, journal)).collect()
 }
 
 /// Run the scenario on one runtime.
 pub fn execute_on(sc: &ChaosScenario, kind: RuntimeKind) -> Result<RuntimeRun> {
-    let outcome = match kind {
-        RuntimeKind::Sim => {
-            return Ok(RuntimeRun {
-                runtime: kind,
-                outcome: run_sim(sc).with_context(|| format!("sim run of {}", sc.label()))?,
-                reports: Vec::new(),
-            })
-        }
-        RuntimeKind::Native => {
-            run_native(sc).with_context(|| format!("native run of {}", sc.label()))?
-        }
-        RuntimeKind::Hier => {
-            run_hier(sc).with_context(|| format!("hier run of {}", sc.label()))?
-        }
-        RuntimeKind::Net => {
-            return run_net(sc).with_context(|| format!("net run of {}", sc.label()))
-        }
-    };
-    Ok(RuntimeRun { runtime: kind, outcome, reports: Vec::new() })
+    execute_on_observed(sc, kind, false)
 }
 
-fn run_sim(sc: &ChaosScenario) -> Result<Outcome> {
+/// [`execute_on`] with an optional engine-journal tap.
+pub fn execute_on_observed(
+    sc: &ChaosScenario,
+    kind: RuntimeKind,
+    journal: bool,
+) -> Result<RuntimeRun> {
+    let tap = journal.then(|| Arc::new(Mutex::new(JournalSink::new())));
+    let sink = tap.as_ref().map(|j| SharedSink::from_arc(j.clone()));
+    let mut run = match kind {
+        RuntimeKind::Sim => RuntimeRun {
+            runtime: kind,
+            outcome: run_sim(sc, sink).with_context(|| format!("sim run of {}", sc.label()))?,
+            reports: Vec::new(),
+            journal: None,
+        },
+        RuntimeKind::Native => RuntimeRun {
+            runtime: kind,
+            outcome: run_native(sc, sink)
+                .with_context(|| format!("native run of {}", sc.label()))?,
+            reports: Vec::new(),
+            journal: None,
+        },
+        RuntimeKind::Hier => RuntimeRun {
+            runtime: kind,
+            outcome: run_hier(sc, sink)
+                .with_context(|| format!("hier run of {}", sc.label()))?,
+            reports: Vec::new(),
+            journal: None,
+        },
+        RuntimeKind::Net => {
+            run_net(sc, sink).with_context(|| format!("net run of {}", sc.label()))?
+        }
+    };
+    run.journal = tap.map(|j| j.lock().unwrap_or_else(|e| e.into_inner()).bytes().to_vec());
+    Ok(run)
+}
+
+fn run_sim(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Outcome> {
     let app = match sc.app {
         ChaosApp::Synthetic => AppKind::Uniform,
         ChaosApp::Mandelbrot { .. } => AppKind::Mandelbrot,
@@ -122,12 +155,15 @@ fn run_sim(sc: &ChaosScenario) -> Result<Outcome> {
         .mean_cost(sc.mean_cost)
         .seed(sc.seed)
         .build()?;
-    SimCluster::new(cfg.sim_params(0)?)?.run()
+    let mut params = cfg.sim_params(0)?;
+    params.sink = sink;
+    SimCluster::new(params)?.run()
 }
 
-fn run_native(sc: &ChaosScenario) -> Result<Outcome> {
+fn run_native(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Outcome> {
     let mut params =
         NativeParams::new(sc.n, sc.p, sc.technique, sc.rdlb, backend(sc));
+    params.sink = sink;
     params.tech_params.seed = sc.seed ^ 0x4A4D;
     params.timeout = Duration::from_millis(sc.timeout_ms);
     for (w, fault) in sc.faults.iter().enumerate() {
@@ -140,11 +176,12 @@ fn run_native(sc: &ChaosScenario) -> Result<Outcome> {
 /// envelopes mapped globally — a fault on a group's first slot (group 1's
 /// local 0 = global worker P/2) is a group-master fail-stop, so drawn
 /// schedules routinely kill a whole group.
-fn run_hier(sc: &ChaosScenario) -> Result<Outcome> {
+fn run_hier(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Outcome> {
     anyhow::ensure!(sc.hier_capable(), "schedule is not hier-expressible: {}", sc.label());
     let groups = 2;
     let wpg = sc.p / groups;
     let mut params = HierParams::new(sc.n, groups, wpg, sc.technique, sc.rdlb, backend(sc));
+    params.sink = sink;
     params.tech_params.seed = sc.seed ^ 0x4A4D;
     params.timeout = Duration::from_millis(sc.timeout_ms);
     for (w, fault) in sc.faults.iter().enumerate() {
@@ -155,10 +192,11 @@ fn run_hier(sc: &ChaosScenario) -> Result<Outcome> {
 
 /// The full-surface net execution: one loopback connection per worker,
 /// each worker on its own thread.
-fn run_net(sc: &ChaosScenario) -> Result<RuntimeRun> {
+fn run_net(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<RuntimeRun> {
     let p = sc.p;
     let backend = backend(sc);
     let mut params = NetMasterParams::new(sc.n, p, sc.technique, sc.rdlb);
+    params.sink = sink;
     params.tech_params.seed = sc.seed ^ 0x4A4D;
     params.timeout = Duration::from_millis(sc.timeout_ms);
     params.test_drop_one_redispatch = matches!(sc.bug, Some(BugHook::DropOneRedispatch));
@@ -223,7 +261,7 @@ fn run_net(sc: &ChaosScenario) -> Result<RuntimeRun> {
             Err(_) => anyhow::bail!("chaos net worker {w} panicked"),
         }
     }
-    Ok(RuntimeRun { runtime: RuntimeKind::Net, outcome, reports })
+    Ok(RuntimeRun { runtime: RuntimeKind::Net, outcome, reports, journal: None })
 }
 
 #[cfg(test)]

@@ -7,20 +7,24 @@
 //! ```text
 //! rdlb run        [--app A --technique T --pes P --tasks N --rdlb B --scenario S --seed K]
 //!                 [--runtime sim|native|net|hier] [--groups G]
+//!                 [--journal FILE] [--metrics] [--trace-out FILE.csv] [--gantt WIDTH]
 //! rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1 [--scale smoke|quick|paper] [--out DIR]
 //! rdlb trace      [--scenario fig1|fig2] [--rdlb B]
+//! rdlb trace-export --journal FILE [--csv FILE] [--gantt WIDTH] [--chrome FILE]
 //! rdlb theory     [--reps R]
 //! rdlb native     [--app A --workers W --technique T --rdlb B --backend native|pjrt
 //!                  --artifacts DIR --failures F --tasks N]
 //! rdlb serve      [--listen ADDR] [--workers P | --spawn-local P] [--app A --technique T]
 //!                 [--rdlb | --no-rdlb] [--failures K --horizon S] [--tasks N --timeout S]
+//!                 [--metrics-every SECS]
 //! rdlb worker     --connect ADDR [--app A --backend native|pjrt --artifacts DIR]
 //! rdlb bench      [--scale smoke|quick|full] [--runtimes sim,native,net,hier] ...
-//! rdlb chaos      [--seed K] [--budget quick|deep|N] [--hier] ... | --replay FILE
+//! rdlb chaos      [--seed K] [--budget quick|deep|N] [--hier] [--journal-oracle] ... | --replay FILE
 //! ```
 
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -31,14 +35,19 @@ use crate::bench::{
 };
 use crate::chaos::{self, ChaosBudget, ChaosSettings};
 use crate::config::{ExperimentConfig, NetSettings, RuntimeKind, Scenario};
+use crate::coordinator::SharedSink;
 use crate::dls::Technique;
 use crate::experiments::{
     cells_to_csv, conceptual_trace, fig3_failures, fig3_perturbations, fig4_resilience,
-    fig5_flexibility, perturb_to_csv, robustness_to_csv, run_outcome, table1_summary,
+    fig5_flexibility, perturb_to_csv, robustness_to_csv, run_outcome_observed, table1_summary,
     theory_validation, ConceptualScenario, Scale,
 };
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
 use crate::net::{run_worker, serve_tcp, NetMasterParams, TcpTransport};
+use crate::obs::{
+    self, chrome_trace, read_journal, replay_stats, replay_trace, JournalSink, MetricsRegistry,
+    MetricsSink, TraceSink,
+};
 use crate::runtime::ComputeService;
 use crate::util::cli::Args;
 
@@ -51,9 +60,11 @@ USAGE:
                   [--scenario baseline|failures:<k>|pe|latency|combined] [--seed K]
                   [--runtime sim|native|net|hier] [--groups G]
                   [--time-scale X] [--timeout S]
+                  [--journal FILE] [--metrics] [--trace-out FILE.csv] [--gantt WIDTH]
   rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1
                   [--scale smoke|quick|paper] [--out DIR]
   rdlb trace      [--scenario fig1|fig2] [--rdlb true|false]
+  rdlb trace-export --journal FILE [--csv FILE] [--gantt WIDTH] [--chrome FILE]
   rdlb theory     [--reps R]
   rdlb native     [--app mandelbrot|psia] [--workers W] [--technique T]
                   [--rdlb true|false] [--backend native|pjrt]
@@ -61,7 +72,7 @@ USAGE:
   rdlb serve      [--config FILE] [--listen ADDR] [--workers P | --spawn-local P]
                   [--app mandelbrot|psia] [--technique T] [--rdlb | --no-rdlb]
                   [--failures K] [--horizon S] [--tasks N] [--timeout S]
-                  [--max-iter I]
+                  [--max-iter I] [--metrics-every SECS]
   rdlb worker     [--config FILE] --connect ADDR [--app mandelbrot|psia]
                   [--backend native|pjrt] [--artifacts DIR] [--max-iter I]
                   [--retry-connect S]
@@ -69,7 +80,7 @@ USAGE:
                   [--out FILE] [--compare BASELINE.json] [--threshold FRAC]
                   [--wall-threshold FRAC] [--events-threshold FRAC] [--quiet]
   rdlb chaos      [--seed K] [--budget quick|deep|N] [--out-dir DIR]
-                  [--shrink-budget N] [--hier] [--quiet]
+                  [--shrink-budget N] [--hier] [--journal-oracle] [--quiet]
   rdlb chaos      --replay FILE
 
 `run --runtime hier` executes the scenario on the two-level hierarchical
@@ -106,7 +117,20 @@ the length-prefixed TCP wire protocol and schedules with the identical rDLB
 master the simulator uses. `--spawn-local P` forks P `rdlb worker`
 processes against an ephemeral port for a one-command end-to-end run;
 `--failures K` assigns fail-stop envelopes to K of the P workers (the
-paper's §4 scenarios across real OS processes).
+paper's §4 scenarios across real OS processes). `--metrics-every SECS`
+prints a Prometheus-text metrics snapshot (engine events/s, latency
+histograms) on that cadence.
+
+Observability (see ARCHITECTURE.md §Observability): every runtime drives
+the same sans-I/O engine, so `run --journal FILE` records the complete
+coordinator event stream of ANY runtime as a length-prefixed binary
+journal (byte-identical across executions for a seeded sim run),
+`--metrics` prints counter/histogram snapshots, and `--trace-out` /
+`--gantt` derive the per-chunk trace live. `trace-export` converts a
+journal offline into CSV, an ASCII Gantt chart, or Chrome trace_event
+JSON (`--chrome`, loadable in about:tracing / ui.perfetto.dev), and
+re-derives the MasterStats from the log — the differential oracle `chaos
+--journal-oracle` checks against every live run.
 ";
 
 /// Parse a `run` scenario word (`baseline`, `failures:<k>`, `pe`,
@@ -171,8 +195,32 @@ fn run_config_from_args(args: &Args) -> Result<ExperimentConfig> {
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = run_config_from_args(args)?;
     let time_scale = args.f64_or("time-scale", 1.0)?;
+
+    // Observability taps: each requested flag stacks one sink onto the
+    // engine; with none requested no sink is installed and the run pays
+    // only an untaken branch per event.
+    let journal_path = args.get("journal").map(PathBuf::from);
+    let metrics = args.bool_or("metrics", false)?;
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let gantt_width = args.usize_opt("gantt")?;
+
+    let journal = journal_path.as_ref().map(|_| Arc::new(Mutex::new(JournalSink::new())));
+    let registry = metrics.then(|| Arc::new(Mutex::new(MetricsRegistry::new())));
+    let tracer = (trace_out.is_some() || gantt_width.is_some())
+        .then(|| Arc::new(Mutex::new(TraceSink::new())));
+    let mut sink: Option<SharedSink> = None;
+    if let Some(j) = &journal {
+        sink = Some(obs::with_extra_sink(sink.take(), SharedSink::from_arc(j.clone())));
+    }
+    if let Some(r) = &registry {
+        sink = Some(obs::with_extra_sink(sink.take(), MetricsSink::new(r.clone())));
+    }
+    if let Some(t) = &tracer {
+        sink = Some(obs::with_extra_sink(sink.take(), SharedSink::from_arc(t.clone())));
+    }
+
     let t0 = std::time::Instant::now();
-    let outcome = run_outcome(&cfg, 0, time_scale)?;
+    let outcome = run_outcome_observed(&cfg, 0, time_scale, sink)?;
     print!(
         "app={} technique={} P={} N={} rdlb={} scenario={} runtime={}",
         cfg.app,
@@ -203,6 +251,32 @@ fn cmd_run(args: &Args) -> Result<()> {
         outcome.waste_fraction() * 100.0,
         t0.elapsed()
     );
+
+    if let (Some(path), Some(j)) = (&journal_path, &journal) {
+        let bytes = j.lock().unwrap_or_else(|e| e.into_inner()).bytes().to_vec();
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("write journal {}", path.display()))?;
+        println!("journal: wrote {} ({} bytes)", path.display(), bytes.len());
+    }
+    if let Some(r) = &registry {
+        print!("{}", r.lock().unwrap_or_else(|e| e.into_inner()).to_prometheus());
+    }
+    if let Some(t) = &tracer {
+        let trace = t.lock().unwrap_or_else(|e| e.into_inner()).take_trace();
+        if let Some(path) = &trace_out {
+            std::fs::write(path, trace.to_csv())
+                .with_context(|| format!("write trace {}", path.display()))?;
+            println!(
+                "trace: wrote {} ({} chunks, {} lost)",
+                path.display(),
+                trace.len(),
+                trace.lost().count()
+            );
+        }
+        if let Some(w) = gantt_width {
+            println!("{}", trace.ascii_gantt(w.max(20)));
+        }
+    }
     Ok(())
 }
 
@@ -266,6 +340,61 @@ fn cmd_trace(args: &Args) -> Result<()> {
         println!("outcome: HUNG after {}/{} tasks", outcome.finished, outcome.n);
     } else {
         println!("outcome: completed in {:.3}s", outcome.parallel_time);
+    }
+    Ok(())
+}
+
+/// `rdlb trace-export`: convert a binary engine journal (written by
+/// `rdlb run --journal FILE`) into human- and tool-facing formats.
+fn cmd_trace_export(args: &Args) -> Result<()> {
+    let path = args
+        .get("journal")
+        .ok_or_else(|| anyhow!("trace-export: --journal FILE is required"))?
+        .to_string();
+    let bytes = std::fs::read(&path).with_context(|| format!("reading journal {path}"))?;
+    let records = read_journal(&bytes)?;
+    let stats = replay_stats(&records);
+    println!(
+        "journal: {} records ({} bytes); replayed stats: {} requests, \
+         {}/{} chunks completed/assigned, {} rescheduled chunks, \
+         {} finished iterations, {} duplicates",
+        records.len(),
+        bytes.len(),
+        stats.requests,
+        stats.completed_chunks,
+        stats.assigned_chunks,
+        stats.rescheduled_chunks,
+        stats.finished_iterations,
+        stats.duplicate_iterations,
+    );
+
+    let csv_out = args.get("csv").map(str::to_string);
+    let gantt_width = args.usize_opt("gantt")?;
+    let chrome_out = args.get("chrome").map(str::to_string);
+    if csv_out.is_none() && gantt_width.is_none() && chrome_out.is_none() {
+        println!("trace-export: nothing exported; pass --csv FILE, --gantt WIDTH, --chrome FILE");
+        return Ok(());
+    }
+
+    if csv_out.is_some() || gantt_width.is_some() {
+        let trace = replay_trace(&records);
+        if let Some(file) = &csv_out {
+            std::fs::write(file, trace.to_csv()).with_context(|| format!("writing {file}"))?;
+            println!(
+                "trace: wrote {file} ({} chunks, {} lost, {} rescheduled)",
+                trace.len(),
+                trace.lost().count(),
+                trace.rescheduled().count()
+            );
+        }
+        if let Some(w) = gantt_width {
+            println!("{}", trace.ascii_gantt(w.max(20)));
+        }
+    }
+    if let Some(file) = &chrome_out {
+        let json = chrome_trace(&records);
+        std::fs::write(file, json.to_string_pretty()).with_context(|| format!("writing {file}"))?;
+        println!("chrome: wrote {file} (load in about:tracing or ui.perfetto.dev)");
     }
     Ok(())
 }
@@ -496,6 +625,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
+    // --metrics-every SECS: tap the engine with a MetricsSink and print a
+    // Prometheus snapshot (plus a frames/s rate derived by diffing
+    // rdlb_events_total between snapshots) on that cadence.  The printer
+    // thread is spawn-and-forget: it dies with the process once the run's
+    // RESULT line is out.
+    let metrics_every = args.u64_or("metrics-every", 0)?;
+    let registry = (metrics_every > 0).then(|| Arc::new(Mutex::new(MetricsRegistry::new())));
+    if let Some(r) = &registry {
+        params.sink = Some(SharedSink::new(MetricsSink::new(r.clone())));
+        let reg = Arc::clone(r);
+        let every = Duration::from_secs(metrics_every);
+        std::thread::spawn(move || {
+            let mut last_events = 0u64;
+            loop {
+                std::thread::sleep(every);
+                let snapshot = reg.lock().unwrap_or_else(|e| e.into_inner()).clone();
+                let events = snapshot.counter("rdlb_events_total");
+                println!(
+                    "metrics: {:.1} engine events/s over the last {}s",
+                    (events.saturating_sub(last_events)) as f64 / every.as_secs_f64(),
+                    every.as_secs()
+                );
+                print!("{}", snapshot.to_prometheus());
+                last_events = events;
+            }
+        });
+    }
+
     let mut children = Vec::new();
     if spawn_local.is_some() {
         let exe = std::env::current_exe().context("resolve current executable")?;
@@ -709,6 +866,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     settings.shrink_budget = args.usize_or("shrink-budget", 64)?;
     settings.verbose = !args.bool_or("quiet", false)?;
     settings.hier = args.bool_or("hier", false)?;
+    settings.journal_oracle = args.bool_or("journal-oracle", false)?;
     let outcome = chaos::run_chaos(&settings)?;
     println!("{}", outcome.summary());
     if !outcome.passed() {
@@ -742,6 +900,7 @@ pub fn execute(args: &Args) -> Result<()> {
         Some("chaos") => cmd_chaos(args),
         Some("experiment") => cmd_experiment(args),
         Some("trace") => cmd_trace(args),
+        Some("trace-export") => cmd_trace_export(args),
         Some("theory") => cmd_theory(args),
         Some("native") => cmd_native(args),
         Some("serve") => cmd_serve(args),

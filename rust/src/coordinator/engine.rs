@@ -61,6 +61,7 @@
 
 use super::assignment::{Assignment, AssignmentId};
 use super::master::{Master, MasterConfig, Reply};
+use super::sink::{EventSink, ResultNotes};
 use super::stats::MasterStats;
 use crate::util::ParkedSet;
 
@@ -152,6 +153,12 @@ pub struct Engine {
     refused: u64,
     disconnects: u64,
     hung: bool,
+    /// Observability tap (see [`super::EventSink`]); `None` by default, in
+    /// which case the only cost is one branch per handled event.
+    sink: Option<Box<dyn EventSink>>,
+    /// Scope id stamped on every record this engine emits (0 for flat
+    /// runtimes and the hierarchical root; `1 + g` for group `g`).
+    sink_scope: u32,
 }
 
 impl Engine {
@@ -169,7 +176,18 @@ impl Engine {
             refused: 0,
             disconnects: 0,
             hung: false,
+            sink: None,
+            sink_scope: 0,
         }
+    }
+
+    /// Install an observability tap (see the [`super::EventSink`] contract:
+    /// sinks are passive and never change a run's behaviour).  `scope` is
+    /// stamped on every record — 0 for flat runtimes and the hierarchical
+    /// root, `1 + g` for group `g`'s inner engines.
+    pub fn set_sink(&mut self, scope: u32, sink: Box<dyn EventSink>) {
+        self.sink_scope = scope;
+        self.sink = Some(sink);
     }
 
     /// **Test-only**: arm the master's deliberate drop-one-re-dispatch bug
@@ -184,10 +202,12 @@ impl Engine {
     /// effects to `out` (which is *not* cleared — drivers own the buffer).
     /// See the module docs for the per-event effect contract.
     pub fn handle(&mut self, now: f64, event: EngineEvent<'_>, out: &mut Vec<Effect>) {
+        let base = out.len();
+        let mut notes = ResultNotes::default();
         match event {
             EngineEvent::WorkerRequest { worker } => self.dispatch(worker, now, out),
             EngineEvent::ResultReceived { worker, assignment_id, compute_secs, digests } => {
-                let dup_before = self.master.stats().duplicate_iterations;
+                let before = self.master.stats().clone();
                 let newly = self.master.on_result(worker, assignment_id, compute_secs, now);
                 let fins = newly.len() as f64;
                 // Wall-clock results report one digest per task, so the
@@ -197,7 +217,7 @@ impl Engine {
                 // well-formed result — the counter path merely also ignores
                 // unknown-id results, which the simulator cannot produce).
                 let dups = if digests.is_empty() {
-                    (self.master.stats().duplicate_iterations - dup_before) as f64
+                    (self.master.stats().duplicate_iterations - before.duplicate_iterations) as f64
                 } else {
                     (digests.len() as f64 - fins).max(0.0)
                 };
@@ -207,19 +227,31 @@ impl Engine {
                 }
                 // Exactly-once digest attribution: only positions whose
                 // completion was the FIRST one contribute.
+                let mut digest_delta = 0.0;
                 for &pos in &newly {
                     if let Some(d) = digests.get(pos) {
-                        self.digest += d;
+                        digest_delta += d;
                     }
                 }
+                self.digest += digest_delta;
+                // The counter deltas attributed to this one result — what
+                // `obs::replay_stats` folds back into a `MasterStats`.
+                let after = self.master.stats();
+                notes = ResultNotes {
+                    completed_chunks: after.completed_chunks - before.completed_chunks,
+                    first_completions: after.finished_iterations - before.finished_iterations,
+                    duplicate_iterations: after.duplicate_iterations - before.duplicate_iterations,
+                    rescheduled_completions: after.rescheduled_completions
+                        - before.rescheduled_completions,
+                    unknown_results: after.unknown_results - before.unknown_results,
+                    digest_delta,
+                };
                 if self.master.is_complete() {
                     out.push(Effect::Completed);
-                    return;
-                }
-                // The uniform wake pass (see module docs): every parked
-                // worker is woken on every result, in park order; skipped
-                // entirely when nothing is parked.
-                if !self.parked.is_empty() {
+                } else if !self.parked.is_empty() {
+                    // The uniform wake pass (see module docs): every parked
+                    // worker is woken on every result, in park order;
+                    // skipped entirely when nothing is parked.
                     self.parked.drain_into(&mut self.woken);
                     for &w in &self.woken {
                         out.push(Effect::Wake { worker: w as usize });
@@ -239,6 +271,9 @@ impl Engine {
                     self.hung = true;
                 }
             }
+        }
+        if let Some(sink) = self.sink.as_mut() {
+            sink.record(self.sink_scope, now, &event, &out[base..], &notes);
         }
     }
 

@@ -14,15 +14,22 @@
 //! hierarchical runtime are thin I/O drivers around the identical engine —
 //! which is what makes the simulator a faithful substitute for the MPI
 //! library, and `ARCHITECTURE.md`'s engine/driver split possible.
+//!
+//! [`EventSink`] is the engine's observability tap: every `(now, event,
+//! effects)` triple handled by any engine can be recorded by a passive
+//! sink (journal, metrics, trace — see [`crate::obs`]) without changing
+//! run behaviour.
 
 mod assignment;
 mod engine;
 mod master;
+mod sink;
 mod stats;
 mod task_table;
 
 pub use assignment::{Assignment, AssignmentId, TaskSet, TaskSetIter};
 pub use engine::{Effect, Engine, EngineEvent};
 pub use master::{Master, MasterConfig, Reply};
+pub use sink::{EventSink, MultiSink, ResultNotes, SharedSink};
 pub use stats::MasterStats;
 pub use task_table::{TaskFlag, TaskTable};

@@ -11,5 +11,6 @@ pub use figures::{
 };
 pub use report::{cells_to_csv, cells_to_markdown, perturb_to_csv, robustness_to_csv};
 pub use runner::{
-    hier_outcome, native_outcome, net_outcome, run_cell, run_outcome, CellResult, Scale,
+    hier_outcome, native_outcome, net_outcome, run_cell, run_outcome, run_outcome_observed,
+    CellResult, Scale,
 };

@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use crate::apps::Workload;
 use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
+use crate::coordinator::SharedSink;
 use crate::dls::TechniqueParams;
 use crate::hier::{HierParams, HierRuntime};
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
@@ -253,11 +254,21 @@ fn real_runtime_setup(
 /// `time_scale` compresses virtual seconds into wall-clock sleeps (use
 /// small workloads — every PE is a live thread).
 pub fn net_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
+    net_outcome_sink(cfg, rep, time_scale, None)
+}
+
+fn net_outcome_sink(
+    cfg: &ExperimentConfig,
+    rep: usize,
+    time_scale: f64,
+    sink: Option<SharedSink>,
+) -> Result<Outcome> {
     let setup = real_runtime_setup(cfg, rep, time_scale)?;
     let mut params = NetMasterParams::new(cfg.n(), cfg.pes(), cfg.technique, cfg.rdlb);
     params.tech_params = setup.tech_params;
     params.faults = setup.faults;
     params.timeout = setup.timeout;
+    params.sink = sink;
     let (outcome, _reports) = run_loopback(params, &setup.backend)?;
     Ok(outcome)
 }
@@ -266,6 +277,15 @@ pub fn net_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Resul
 /// (OS threads, no wire protocol) with the same scenario mapping as
 /// [`net_outcome`].
 pub fn native_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
+    native_outcome_sink(cfg, rep, time_scale, None)
+}
+
+fn native_outcome_sink(
+    cfg: &ExperimentConfig,
+    rep: usize,
+    time_scale: f64,
+    sink: Option<SharedSink>,
+) -> Result<Outcome> {
     let setup = real_runtime_setup(cfg, rep, time_scale)?;
     let mut params =
         NativeParams::new(cfg.n(), cfg.pes(), cfg.technique, cfg.rdlb, setup.backend);
@@ -274,6 +294,7 @@ pub fn native_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Re
         params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
     }
     params.timeout = setup.timeout;
+    params.sink = sink;
     NativeRuntime::new(params)?.run()
 }
 
@@ -283,6 +304,15 @@ pub fn native_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Re
 /// [`net_outcome`].  A fault landing on a group's first PE (for groups
 /// other than group 0) is a group-master fail-stop.
 pub fn hier_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
+    hier_outcome_sink(cfg, rep, time_scale, None)
+}
+
+fn hier_outcome_sink(
+    cfg: &ExperimentConfig,
+    rep: usize,
+    time_scale: f64,
+    sink: Option<SharedSink>,
+) -> Result<Outcome> {
     let setup = real_runtime_setup(cfg, rep, time_scale)?;
     let groups = cfg.net.groups;
     let wpg = cfg.pes() / groups; // divisibility checked by cfg.validate()
@@ -292,6 +322,7 @@ pub fn hier_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Resu
         params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
     }
     params.timeout = setup.timeout;
+    params.sink = sink;
     HierRuntime::new(params)?.run()
 }
 
@@ -299,11 +330,28 @@ pub fn hier_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Resu
 /// selects. `time_scale` compresses the cost model's virtual seconds into
 /// wall-clock sleeps on the real runtimes (the simulator ignores it).
 pub fn run_outcome(cfg: &ExperimentConfig, rep: usize, time_scale: f64) -> Result<Outcome> {
+    run_outcome_observed(cfg, rep, time_scale, None)
+}
+
+/// [`run_outcome`] with an observability tap installed on the selected
+/// runtime's engine(s): every runtime accepts the same [`SharedSink`], so
+/// `rdlb run --journal/--metrics/--trace-out` behave identically across
+/// `--runtime sim|native|net|hier`.
+pub fn run_outcome_observed(
+    cfg: &ExperimentConfig,
+    rep: usize,
+    time_scale: f64,
+    sink: Option<SharedSink>,
+) -> Result<Outcome> {
     match cfg.runtime {
-        RuntimeKind::Sim => SimCluster::new(cfg.sim_params(rep)?)?.run(),
-        RuntimeKind::Native => native_outcome(cfg, rep, time_scale),
-        RuntimeKind::Net => net_outcome(cfg, rep, time_scale),
-        RuntimeKind::Hier => hier_outcome(cfg, rep, time_scale),
+        RuntimeKind::Sim => {
+            let mut params = cfg.sim_params(rep)?;
+            params.sink = sink;
+            SimCluster::new(params)?.run()
+        }
+        RuntimeKind::Native => native_outcome_sink(cfg, rep, time_scale, sink),
+        RuntimeKind::Net => net_outcome_sink(cfg, rep, time_scale, sink),
+        RuntimeKind::Hier => hier_outcome_sink(cfg, rep, time_scale, sink),
     }
 }
 

@@ -43,7 +43,7 @@
 //! half-finished super-chunk — is not folded into `Outcome::wasted_work`.
 //!
 //! No new wire frames: the hierarchical runtime is in-process (channels),
-//! like [`crate::native`] — see `PROTOCOL.md` §Hierarchical mode.
+//! like [`crate::native`] — see `PROTOCOL.md` appendix A.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -52,7 +52,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::{
-    Assignment, AssignmentId, Effect, Engine, EngineEvent, MasterConfig, TaskSet,
+    Assignment, AssignmentId, Effect, Engine, EngineEvent, MasterConfig, SharedSink, TaskSet,
 };
 use crate::dls::{Technique, TechniqueParams};
 use crate::native::{compute_chunk_with_faults, ComputeBackend};
@@ -84,6 +84,10 @@ pub struct HierParams {
     pub latency: Vec<f64>,
     /// Wall-clock hang bound for the whole run.
     pub timeout: Duration,
+    /// Observability tap installed on every engine of the hierarchy
+    /// (`None` = no overhead): the root records with scope 0, group `g`'s
+    /// inner engines with scope `1 + g`.
+    pub sink: Option<SharedSink>,
 }
 
 impl HierParams {
@@ -109,6 +113,7 @@ impl HierParams {
             slowdown: vec![1.0; total],
             latency: vec![0.0; total],
             timeout: Duration::from_secs(60),
+            sink: None,
         }
     }
 
@@ -202,6 +207,9 @@ impl HierRuntime {
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
         });
+        if let Some(s) = prm.sink.clone() {
+            engine.set_sink(0, Box::new(s));
+        }
 
         let start = Instant::now();
         let hard_deadline = start + prm.timeout;
@@ -225,6 +233,7 @@ impl HierRuntime {
                 start,
                 hard_deadline,
                 shutdown: Arc::clone(&shutdown),
+                sink: prm.sink.clone(),
             };
             let to_root = to_root.clone();
             joins.push(std::thread::spawn(move || ctx.run(rx, to_root)));
@@ -339,6 +348,9 @@ struct GroupCtx {
     start: Instant,
     hard_deadline: Instant,
     shutdown: Arc<AtomicBool>,
+    /// The run's shared observability tap; inner engines record with scope
+    /// `1 + group` so their events stay distinguishable from the root's.
+    sink: Option<SharedSink>,
 }
 
 impl GroupCtx {
@@ -409,6 +421,9 @@ impl GroupCtx {
                     params: tp,
                     rdlb: self.rdlb,
                 });
+                if let Some(s) = self.sink.clone() {
+                    engine.set_sink(1 + g as u32, Box::new(s));
+                }
                 let mut chunk_digests = vec![0.0f64; len];
                 // Local TaskSet per inner assignment (ids are sequential;
                 // a Range — every primary chunk — stores as O(1) bounds).

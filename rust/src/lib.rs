@@ -22,6 +22,7 @@
 //! | [`sim`] | discrete-event cluster simulator (the miniHPC substitute): topology, latency, failures, perturbations |
 //! | [`native`] | in-process master–worker runtime executing real chunks (PJRT or native rust) on OS threads |
 //! | [`net`] | distributed master–worker runtime: length-prefixed wire protocol on TCP (or in-process loopback), fault-injection envelopes, `rdlb serve`/`worker` |
+//! | [`obs`] | observability over the engine's [`coordinator::EventSink`] tap: binary event journal + replay oracle, metrics histograms, cross-runtime trace/Chrome export (`rdlb trace-export`) |
 //! | [`hier`] | two-level hierarchical runtime: a root engine schedules super-chunks across group masters, each running a full inner rDLB engine (`rdlb run --runtime hier`) |
 //! | [`cli`] | the `rdlb` command-line interface (subcommand parsing and drivers) |
 //! | [`runtime`] | PJRT CPU client: loads `artifacts/*.hlo.txt` produced by the JAX/Pallas AOT path |
@@ -62,6 +63,7 @@ pub mod experiments;
 pub mod hier;
 pub mod native;
 pub mod net;
+pub mod obs;
 pub mod robustness;
 pub mod runtime;
 pub mod sim;

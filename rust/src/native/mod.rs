@@ -19,7 +19,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Assignment, Effect, Engine, EngineEvent, MasterConfig, TaskSet};
+use crate::coordinator::{
+    Assignment, Effect, Engine, EngineEvent, MasterConfig, SharedSink, TaskSet,
+};
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
 
@@ -44,6 +46,8 @@ pub struct NativeParams {
     /// Wall-clock bound; exceeding it reports a hung run (the paper's
     /// "waits indefinitely" case, bounded for practicality).
     pub timeout: Duration,
+    /// Observability tap installed on the engine (`None` = no overhead).
+    pub sink: Option<SharedSink>,
 }
 
 impl NativeParams {
@@ -59,6 +63,7 @@ impl NativeParams {
             slowdown: vec![1.0; workers],
             latency: vec![0.0; workers],
             timeout: Duration::from_secs(60),
+            sink: None,
         }
     }
 
@@ -194,6 +199,9 @@ impl NativeRuntime {
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
         });
+        if let Some(s) = prm.sink.clone() {
+            engine.set_sink(0, Box::new(s));
+        }
 
         let (to_master, master_rx) = mpsc::channel::<FromWorker>();
         let start = Instant::now();

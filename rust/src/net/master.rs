@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
-use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig};
+use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig, SharedSink};
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
 
@@ -39,6 +39,8 @@ pub struct NetMasterParams {
     /// Wall-clock hang bound (the paper's "waits indefinitely" case,
     /// bounded for practicality).
     pub timeout: Duration,
+    /// Observability tap installed on the engine (`None` = no overhead).
+    pub sink: Option<SharedSink>,
     /// **Test-only**: arm the coordinator's deliberate drop-one-re-dispatch
     /// bug (see [`crate::coordinator::Master::enable_test_drop_one_redispatch`]);
     /// the chaos harness uses it to prove its invariant oracle catches
@@ -56,6 +58,7 @@ impl NetMasterParams {
             rdlb,
             faults: vec![FaultSpec::default(); workers],
             timeout: Duration::from_secs(60),
+            sink: None,
             test_drop_one_redispatch: false,
         }
     }
@@ -114,6 +117,9 @@ impl NetMaster {
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
         });
+        if let Some(s) = prm.sink.clone() {
+            engine.set_sink(0, Box::new(s));
+        }
         if prm.test_drop_one_redispatch {
             engine.arm_test_drop_one_redispatch();
         }

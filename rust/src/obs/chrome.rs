@@ -1,0 +1,174 @@
+//! Chrome `trace_event` export: convert a decoded journal into the JSON
+//! object format that `about:tracing` and Perfetto load directly.
+//!
+//! Mapping: each engine scope becomes a process (`pid` 0 = the flat
+//! runtime / hierarchical root, `1 + g` = group `g`), each worker a thread
+//! (`tid`).  A chunk's assign→result lifetime is one complete (`"X"`)
+//! event with `ts`/`dur` in microseconds of master-clock time; worker
+//! disconnects, version refusals, timeouts and run completion appear as
+//! instant (`"i"`) events.  Chunks whose result never arrives get no
+//! duration event — they show up in the CSV/Gantt exports as lost.
+
+use std::collections::HashMap;
+
+use crate::coordinator::Effect;
+use crate::util::json::Json;
+
+use super::journal::{JournalEvent, JournalRecord};
+
+fn us(secs: f64) -> f64 {
+    secs * 1e6
+}
+
+fn instant(name: &str, pid: u32, tid: usize, now: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("i")),
+        ("s", Json::str("p")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(us(now))),
+    ])
+}
+
+/// Build the `trace_event` JSON object (`{"traceEvents": [...]}`).
+pub fn chrome_trace(records: &[JournalRecord]) -> Json {
+    let mut events = Vec::new();
+    // (scope, assignment_id) → (worker, first_task, task_count, rescheduled)
+    let mut open: HashMap<(u32, u64), (usize, u32, usize, bool)> = HashMap::new();
+    for rec in records {
+        match &rec.event {
+            JournalEvent::Result { assignment_id, compute_secs, .. }
+                if rec.notes.unknown_results == 0 =>
+            {
+                if let Some((worker, first, count, resched)) =
+                    open.remove(&(rec.scope, *assignment_id))
+                {
+                    let dur = compute_secs.max(0.0);
+                    events.push(Json::obj(vec![
+                        ("name", Json::str(format!("chunk {assignment_id}"))),
+                        ("cat", Json::str(if resched { "rescheduled" } else { "primary" })),
+                        ("ph", Json::str("X")),
+                        ("pid", Json::num(rec.scope as f64)),
+                        ("tid", Json::num(worker as f64)),
+                        ("ts", Json::num(us(rec.now - dur))),
+                        ("dur", Json::num(us(dur))),
+                        (
+                            "args",
+                            Json::obj(vec![
+                                ("first_task", Json::num(first as f64)),
+                                ("tasks", Json::num(count as f64)),
+                                ("rescheduled", Json::Bool(resched)),
+                            ]),
+                        ),
+                    ]));
+                }
+            }
+            JournalEvent::Disconnected { worker } => {
+                events.push(instant("disconnect", rec.scope, *worker, rec.now));
+            }
+            JournalEvent::Refused { worker } => {
+                events.push(instant("version-refused", rec.scope, *worker, rec.now));
+            }
+            JournalEvent::Timeout => {
+                events.push(instant("timeout", rec.scope, 0, rec.now));
+            }
+            _ => {}
+        }
+        for eff in &rec.effects {
+            match eff {
+                Effect::Assign(a) => {
+                    open.insert(
+                        (rec.scope, a.id),
+                        (a.worker, a.tasks.first().unwrap_or(0), a.len(), a.rescheduled),
+                    );
+                }
+                Effect::Completed => {
+                    events.push(instant("completed", rec.scope, 0, rec.now));
+                }
+                _ => {}
+            }
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Assignment, EngineEvent, EventSink, ResultNotes, TaskSet};
+    use crate::obs::journal::{read_journal, JournalSink};
+
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let mut sink = JournalSink::new();
+        let zero = ResultNotes::default();
+        let a = Effect::Assign(Assignment {
+            id: 3,
+            worker: 1,
+            tasks: TaskSet::Range { start: 0, end: 10 },
+            rescheduled: false,
+        });
+        sink.record(
+            0,
+            0.0,
+            &EngineEvent::WorkerRequest { worker: 1 },
+            std::slice::from_ref(&a),
+            &zero,
+        );
+        sink.record(0, 0.2, &EngineEvent::WorkerDisconnected { worker: 2 }, &[], &zero);
+        let notes =
+            ResultNotes { completed_chunks: 1, first_completions: 10, ..ResultNotes::default() };
+        sink.record(
+            0,
+            1.0,
+            &EngineEvent::ResultReceived {
+                worker: 1,
+                assignment_id: 3,
+                compute_secs: 0.5,
+                digests: &[],
+            },
+            &[Effect::Completed],
+            &notes,
+        );
+        let records = read_journal(sink.bytes()).unwrap();
+        let json = chrome_trace(&records);
+        // Valid JSON that round-trips through the parser.
+        let text = json.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        let evts = back.req("traceEvents").unwrap().as_arr().unwrap();
+        // One X event (the chunk), one disconnect instant, one completed.
+        assert_eq!(evts.len(), 3);
+        let x = evts.iter().find(|e| e.get("ph").and_then(Json::as_str) == Some("X")).unwrap();
+        assert_eq!(x.get("pid").unwrap().as_f64(), Some(0.0));
+        assert_eq!(x.get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(x.get("ts").unwrap().as_f64(), Some(0.5e6));
+        assert_eq!(x.get("dur").unwrap().as_f64(), Some(0.5e6));
+        assert_eq!(x.req("args").unwrap().req("tasks").unwrap().as_usize(), Some(10));
+        assert!(evts.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("disconnect")));
+        assert!(evts.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("completed")));
+    }
+
+    #[test]
+    fn lost_chunks_produce_no_duration_event() {
+        let mut sink = JournalSink::new();
+        let a = Effect::Assign(Assignment {
+            id: 1,
+            worker: 0,
+            tasks: TaskSet::Range { start: 0, end: 2 },
+            rescheduled: true,
+        });
+        sink.record(
+            0,
+            0.0,
+            &EngineEvent::WorkerRequest { worker: 0 },
+            std::slice::from_ref(&a),
+            &ResultNotes::default(),
+        );
+        let json = chrome_trace(&read_journal(sink.bytes()).unwrap());
+        assert!(json.req("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,574 @@
+//! Length-prefixed binary event journal: the durable form of the engine's
+//! [`EventSink`] stream.
+//!
+//! The format follows the wire protocol's v2 codec idioms (`PROTOCOL.md`
+//! appendix B): little-endian fixed-width fields, one `u32` length prefix
+//! per record, tagged unions, range/list task-set encoding, and a
+//! bounds-checked reader that rejects trailing garbage.  Deliberately *not*
+//! recorded: wall-clock timestamps or anything else nondeterministic, so a
+//! seeded simulator run produces a byte-identical journal on every
+//! execution (pinned by `tests/obs.rs` and the CI `journal-determinism`
+//! step).
+//!
+//! The journal is a *differential oracle*: [`replay_stats`] folds the
+//! recorded events back into a [`MasterStats`] that must equal the live
+//! run's counters (the chaos harness checks this with `--journal-oracle`),
+//! and [`super::replay_trace`] rebuilds the per-chunk [`crate::trace::Trace`].
+//! It is also the substrate a future `Engine::replay` crash-recovery path
+//! will consume (ROADMAP item 1).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::{
+    Assignment, Effect, EngineEvent, EventSink, MasterStats, ResultNotes, TaskSet,
+};
+
+/// File magic: identifies a journal regardless of extension.
+pub const JOURNAL_MAGIC: [u8; 8] = *b"RDLBJRNL";
+/// Journal format version (bumped on any encoding change).
+pub const JOURNAL_VERSION: u16 = 1;
+/// Upper bound on one record's payload — same defensive cap as the wire
+/// protocol's `MAX_FRAME_LEN`.
+pub const MAX_RECORD_LEN: u32 = 32 << 20;
+
+// Event tags.
+const EV_REQUEST: u8 = 0x01;
+const EV_RESULT: u8 = 0x02;
+const EV_DISCONNECTED: u8 = 0x03;
+const EV_REFUSED: u8 = 0x04;
+const EV_TIMEOUT: u8 = 0x05;
+
+// Effect tags.
+const EF_ASSIGN: u8 = 0x10;
+const EF_PARK: u8 = 0x11;
+const EF_WAKE: u8 = 0x12;
+const EF_TERMINATE: u8 = 0x13;
+const EF_COMPLETED: u8 = 0x14;
+
+// Task-set kinds (same values as the wire protocol).
+const TS_RANGE: u8 = 0x00;
+const TS_LIST: u8 = 0x01;
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn push_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_task_set(buf: &mut Vec<u8>, ts: &TaskSet) {
+    match ts {
+        TaskSet::Range { start, end } => {
+            buf.push(TS_RANGE);
+            push_u32(buf, *start);
+            push_u32(buf, *end);
+        }
+        TaskSet::List(ids) => {
+            buf.push(TS_LIST);
+            push_u32(buf, ids.len() as u32);
+            for id in ids {
+                push_u32(buf, *id);
+            }
+        }
+    }
+}
+
+fn push_effect(buf: &mut Vec<u8>, eff: &Effect) {
+    match eff {
+        Effect::Assign(a) => {
+            buf.push(EF_ASSIGN);
+            push_u64(buf, a.id);
+            push_u32(buf, a.worker as u32);
+            buf.push(a.rescheduled as u8);
+            push_task_set(buf, &a.tasks);
+        }
+        Effect::Park { worker } => {
+            buf.push(EF_PARK);
+            push_u32(buf, *worker as u32);
+        }
+        Effect::Wake { worker } => {
+            buf.push(EF_WAKE);
+            push_u32(buf, *worker as u32);
+        }
+        Effect::TerminateWorker { worker } => {
+            buf.push(EF_TERMINATE);
+            push_u32(buf, *worker as u32);
+        }
+        Effect::Completed => buf.push(EF_COMPLETED),
+    }
+}
+
+/// Encode one record (payload into `scratch`, then length-prefixed into
+/// `buf`) — the scratch-buffer style of the v2 protocol codec.
+fn encode_record(
+    buf: &mut Vec<u8>,
+    scratch: &mut Vec<u8>,
+    scope: u32,
+    now: f64,
+    event: &EngineEvent<'_>,
+    effects: &[Effect],
+    notes: &ResultNotes,
+) {
+    scratch.clear();
+    match event {
+        EngineEvent::WorkerRequest { worker } => {
+            scratch.push(EV_REQUEST);
+            push_u32(scratch, scope);
+            push_f64(scratch, now);
+            push_u32(scratch, *worker as u32);
+        }
+        EngineEvent::ResultReceived { worker, assignment_id, compute_secs, digests } => {
+            scratch.push(EV_RESULT);
+            push_u32(scratch, scope);
+            push_f64(scratch, now);
+            push_u32(scratch, *worker as u32);
+            push_u64(scratch, *assignment_id);
+            push_f64(scratch, *compute_secs);
+            // Digest *values* are not journaled (they are the computed
+            // application output, not scheduling state); the attributed sum
+            // in the notes is enough for the oracle.
+            push_u32(scratch, digests.len() as u32);
+            scratch.push(notes.completed_chunks as u8);
+            scratch.push(notes.rescheduled_completions as u8);
+            scratch.push(notes.unknown_results as u8);
+            push_u64(scratch, notes.first_completions);
+            push_u64(scratch, notes.duplicate_iterations);
+            push_f64(scratch, notes.digest_delta);
+        }
+        EngineEvent::WorkerDisconnected { worker } => {
+            scratch.push(EV_DISCONNECTED);
+            push_u32(scratch, scope);
+            push_f64(scratch, now);
+            push_u32(scratch, *worker as u32);
+        }
+        EngineEvent::VersionRefused { worker } => {
+            scratch.push(EV_REFUSED);
+            push_u32(scratch, scope);
+            push_f64(scratch, now);
+            push_u32(scratch, *worker as u32);
+        }
+        EngineEvent::Timeout => {
+            scratch.push(EV_TIMEOUT);
+            push_u32(scratch, scope);
+            push_f64(scratch, now);
+        }
+    }
+    push_u32(scratch, effects.len() as u32);
+    for eff in effects {
+        push_effect(scratch, eff);
+    }
+    push_u32(buf, scratch.len() as u32);
+    buf.extend_from_slice(scratch);
+}
+
+/// An in-memory [`EventSink`] that appends every record to a journal byte
+/// buffer.  Runs are finite, so the whole journal is held in memory and
+/// written out once at the end (the CLI's `--journal FILE`).
+pub struct JournalSink {
+    buf: Vec<u8>,
+    scratch: Vec<u8>,
+}
+
+impl JournalSink {
+    pub fn new() -> JournalSink {
+        let mut buf = Vec::with_capacity(4096);
+        buf.extend_from_slice(&JOURNAL_MAGIC);
+        push_u16(&mut buf, JOURNAL_VERSION);
+        JournalSink { buf, scratch: Vec::with_capacity(256) }
+    }
+
+    /// The encoded journal so far (header + complete records).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Consume the sink, returning the encoded journal.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+impl Default for JournalSink {
+    fn default() -> Self {
+        JournalSink::new()
+    }
+}
+
+impl EventSink for JournalSink {
+    fn record(
+        &mut self,
+        scope: u32,
+        now: f64,
+        event: &EngineEvent<'_>,
+        effects: &[Effect],
+        notes: &ResultNotes,
+    ) {
+        encode_record(&mut self.buf, &mut self.scratch, scope, now, event, effects, notes);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader (the protocol codec's idiom).
+struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(bytes: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.bytes.len(), "journal record truncated");
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Reject records with trailing garbage.
+    fn finish(&self) -> Result<()> {
+        ensure!(self.pos == self.bytes.len(), "trailing bytes in journal record");
+        Ok(())
+    }
+}
+
+/// The event half of a decoded record ([`EngineEvent`] without the borrowed
+/// digest slice, which is not journaled).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalEvent {
+    Request { worker: usize },
+    Result { worker: usize, assignment_id: u64, compute_secs: f64, digest_count: u32 },
+    Disconnected { worker: usize },
+    Refused { worker: usize },
+    Timeout,
+}
+
+/// One decoded journal record: everything the sink observed for one event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalRecord {
+    /// Emitting engine: 0 = flat runtime / hierarchical root, `1 + g` =
+    /// group `g`'s inner engine.
+    pub scope: u32,
+    /// Master clock when the event was handled.
+    pub now: f64,
+    pub event: JournalEvent,
+    /// Per-result counter deltas (zero for non-result events).
+    pub notes: ResultNotes,
+    /// The effects this event appended, in order.
+    pub effects: Vec<Effect>,
+}
+
+fn decode_task_set(r: &mut ByteReader<'_>) -> Result<TaskSet> {
+    match r.u8()? {
+        TS_RANGE => {
+            let start = r.u32()?;
+            let end = r.u32()?;
+            ensure!(start <= end, "task range start {start} > end {end}");
+            Ok(TaskSet::Range { start, end })
+        }
+        TS_LIST => {
+            let count = r.u32()? as usize;
+            ensure!(count <= MAX_RECORD_LEN as usize / 4, "task list too long");
+            let mut ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                ids.push(r.u32()?);
+            }
+            Ok(TaskSet::List(ids))
+        }
+        other => bail!("unknown task-set kind 0x{other:02x}"),
+    }
+}
+
+fn decode_effect(r: &mut ByteReader<'_>) -> Result<Effect> {
+    Ok(match r.u8()? {
+        EF_ASSIGN => {
+            let id = r.u64()?;
+            let worker = r.u32()? as usize;
+            let rescheduled = r.u8()? != 0;
+            let tasks = decode_task_set(r)?;
+            Effect::Assign(Assignment { id, worker, tasks, rescheduled })
+        }
+        EF_PARK => Effect::Park { worker: r.u32()? as usize },
+        EF_WAKE => Effect::Wake { worker: r.u32()? as usize },
+        EF_TERMINATE => Effect::TerminateWorker { worker: r.u32()? as usize },
+        EF_COMPLETED => Effect::Completed,
+        other => bail!("unknown effect tag 0x{other:02x}"),
+    })
+}
+
+fn decode_record(payload: &[u8]) -> Result<JournalRecord> {
+    let mut r = ByteReader::new(payload);
+    let tag = r.u8()?;
+    let scope = r.u32()?;
+    let now = r.f64()?;
+    let mut notes = ResultNotes::default();
+    let event = match tag {
+        EV_REQUEST => JournalEvent::Request { worker: r.u32()? as usize },
+        EV_RESULT => {
+            let worker = r.u32()? as usize;
+            let assignment_id = r.u64()?;
+            let compute_secs = r.f64()?;
+            let digest_count = r.u32()?;
+            notes.completed_chunks = r.u8()? as u64;
+            notes.rescheduled_completions = r.u8()? as u64;
+            notes.unknown_results = r.u8()? as u64;
+            notes.first_completions = r.u64()?;
+            notes.duplicate_iterations = r.u64()?;
+            notes.digest_delta = r.f64()?;
+            JournalEvent::Result { worker, assignment_id, compute_secs, digest_count }
+        }
+        EV_DISCONNECTED => JournalEvent::Disconnected { worker: r.u32()? as usize },
+        EV_REFUSED => JournalEvent::Refused { worker: r.u32()? as usize },
+        EV_TIMEOUT => JournalEvent::Timeout,
+        other => bail!("unknown event tag 0x{other:02x}"),
+    };
+    let n_effects = r.u32()? as usize;
+    ensure!(n_effects <= MAX_RECORD_LEN as usize / 5, "effect list too long");
+    let mut effects = Vec::with_capacity(n_effects);
+    for _ in 0..n_effects {
+        effects.push(decode_effect(&mut r)?);
+    }
+    r.finish()?;
+    Ok(JournalRecord { scope, now, event, notes, effects })
+}
+
+/// Decode a complete journal (header + records).
+pub fn read_journal(bytes: &[u8]) -> Result<Vec<JournalRecord>> {
+    ensure!(bytes.len() >= 10, "journal shorter than its header");
+    ensure!(bytes[..8] == JOURNAL_MAGIC, "not a journal (bad magic)");
+    let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+    ensure!(version == JOURNAL_VERSION, "unsupported journal version {version}");
+    let mut records = Vec::new();
+    let mut pos = 10usize;
+    while pos < bytes.len() {
+        ensure!(pos + 4 <= bytes.len(), "truncated record length at byte {pos}");
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        ensure!(len <= MAX_RECORD_LEN, "record length {len} exceeds cap");
+        pos += 4;
+        ensure!(pos + len as usize <= bytes.len(), "truncated record at byte {pos}");
+        records.push(decode_record(&bytes[pos..pos + len as usize])?);
+        pos += len as usize;
+    }
+    Ok(records)
+}
+
+// ---------------------------------------------------------------------------
+// Replay oracle
+// ---------------------------------------------------------------------------
+
+/// Reconstruct the master's counters from a journal's **scope-0** records.
+///
+/// For any flat runtime — and for the hierarchical runtime, whose
+/// `Outcome::stats` are the *root* engine's — the result must equal the
+/// live run's `Outcome::stats` field for field.  The chaos harness arms
+/// this as an invariant with `rdlb chaos --journal-oracle`.
+pub fn replay_stats(records: &[JournalRecord]) -> MasterStats {
+    let mut s = MasterStats::default();
+    for rec in records {
+        if rec.scope != 0 {
+            continue;
+        }
+        match &rec.event {
+            JournalEvent::Request { .. } => s.requests += 1,
+            JournalEvent::Result { .. } => {
+                s.completed_chunks += rec.notes.completed_chunks;
+                s.finished_iterations += rec.notes.first_completions;
+                s.duplicate_iterations += rec.notes.duplicate_iterations;
+                s.rescheduled_completions += rec.notes.rescheduled_completions;
+                s.unknown_results += rec.notes.unknown_results;
+            }
+            JournalEvent::Refused { .. } => s.refused_workers += 1,
+            JournalEvent::Disconnected { .. } | JournalEvent::Timeout => {}
+        }
+        for eff in &rec.effects {
+            if let Effect::Assign(a) = eff {
+                s.assigned_chunks += 1;
+                s.assigned_iterations += a.len() as u64;
+                if a.rescheduled {
+                    s.rescheduled_chunks += 1;
+                    s.rescheduled_iterations += a.len() as u64;
+                }
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_effects() -> Vec<Effect> {
+        vec![
+            Effect::Assign(Assignment {
+                id: 7,
+                worker: 3,
+                tasks: TaskSet::Range { start: 10, end: 20 },
+                rescheduled: false,
+            }),
+            Effect::Assign(Assignment {
+                id: 8,
+                worker: 1,
+                tasks: TaskSet::List(vec![2, 5, 9]),
+                rescheduled: true,
+            }),
+            Effect::Park { worker: 2 },
+            Effect::Wake { worker: 2 },
+            Effect::TerminateWorker { worker: 0 },
+            Effect::Completed,
+        ]
+    }
+
+    #[test]
+    fn round_trips_every_event_and_effect_kind() {
+        let mut sink = JournalSink::new();
+        let effects = sample_effects();
+        let notes = ResultNotes {
+            completed_chunks: 1,
+            first_completions: 9,
+            duplicate_iterations: 1,
+            rescheduled_completions: 1,
+            unknown_results: 0,
+            digest_delta: 2.5,
+        };
+        let digests = [1.0, 2.0];
+        let zero = ResultNotes::default();
+        sink.record(0, 0.25, &EngineEvent::WorkerRequest { worker: 4 }, &effects[..1], &zero);
+        sink.record(
+            3,
+            0.5,
+            &EngineEvent::ResultReceived {
+                worker: 1,
+                assignment_id: 7,
+                compute_secs: 0.125,
+                digests: &digests,
+            },
+            &effects[2..4],
+            &notes,
+        );
+        sink.record(0, 0.75, &EngineEvent::WorkerDisconnected { worker: 2 }, &[], &zero);
+        sink.record(0, 0.8, &EngineEvent::VersionRefused { worker: 5 }, &effects[4..5], &zero);
+        sink.record(0, 1.0, &EngineEvent::Timeout, &effects[5..], &zero);
+
+        let records = read_journal(sink.bytes()).unwrap();
+        assert_eq!(records.len(), 5);
+        assert_eq!(records[0].event, JournalEvent::Request { worker: 4 });
+        assert_eq!(records[0].effects, effects[..1]);
+        assert_eq!(records[1].scope, 3);
+        assert_eq!(
+            records[1].event,
+            JournalEvent::Result {
+                worker: 1,
+                assignment_id: 7,
+                compute_secs: 0.125,
+                digest_count: 2
+            }
+        );
+        assert_eq!(records[1].notes, notes);
+        assert_eq!(records[1].effects, effects[2..4]);
+        assert_eq!(records[2].event, JournalEvent::Disconnected { worker: 2 });
+        assert_eq!(records[3].event, JournalEvent::Refused { worker: 5 });
+        assert_eq!(records[3].effects, effects[4..5]);
+        assert_eq!(records[4].event, JournalEvent::Timeout);
+        assert_eq!(records[4].effects, effects[5..]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_truncation() {
+        assert!(read_journal(b"NOTAJRNL\x01\x00").is_err());
+        assert!(read_journal(&JOURNAL_MAGIC).is_err(), "header alone is too short");
+        let mut wrong_version = JOURNAL_MAGIC.to_vec();
+        wrong_version.extend_from_slice(&99u16.to_le_bytes());
+        assert!(read_journal(&wrong_version).is_err());
+        // Truncate a valid journal mid-record.
+        let mut sink = JournalSink::new();
+        sink.record(0, 0.0, &EngineEvent::WorkerRequest { worker: 0 }, &[], &Default::default());
+        let bytes = sink.into_bytes();
+        assert!(read_journal(&bytes[..bytes.len() - 1]).is_err());
+        // Corrupt the event tag.
+        let mut bad = bytes.clone();
+        bad[14] = 0xEE;
+        assert!(read_journal(&bad).is_err());
+    }
+
+    #[test]
+    fn empty_journal_is_valid_and_replays_to_default_stats() {
+        let sink = JournalSink::new();
+        let records = read_journal(sink.bytes()).unwrap();
+        assert!(records.is_empty());
+        assert_eq!(replay_stats(&records), MasterStats::default());
+    }
+
+    #[test]
+    fn replay_counts_only_scope_zero() {
+        let mut sink = JournalSink::new();
+        let a = Effect::Assign(Assignment {
+            id: 1,
+            worker: 0,
+            tasks: TaskSet::Range { start: 0, end: 4 },
+            rescheduled: false,
+        });
+        let zero = ResultNotes::default();
+        let one = std::slice::from_ref(&a);
+        sink.record(0, 0.0, &EngineEvent::WorkerRequest { worker: 0 }, one, &zero);
+        // An inner-group record must not leak into the root replay.
+        sink.record(2, 0.0, &EngineEvent::WorkerRequest { worker: 0 }, one, &zero);
+        let notes = ResultNotes {
+            completed_chunks: 1,
+            first_completions: 4,
+            ..ResultNotes::default()
+        };
+        sink.record(
+            0,
+            0.5,
+            &EngineEvent::ResultReceived {
+                worker: 0,
+                assignment_id: 1,
+                compute_secs: 0.5,
+                digests: &[],
+            },
+            &[Effect::Completed],
+            &notes,
+        );
+        let s = replay_stats(&read_journal(sink.bytes()).unwrap());
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.assigned_chunks, 1);
+        assert_eq!(s.assigned_iterations, 4);
+        assert_eq!(s.completed_chunks, 1);
+        assert_eq!(s.finished_iterations, 4);
+        assert_eq!(s.identity_violations(), Vec::<String>::new());
+    }
+}

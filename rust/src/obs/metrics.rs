@@ -1,0 +1,449 @@
+//! Counters and log-linear histograms over the engine's event stream,
+//! snapshot-able as Prometheus text exposition or JSON.
+//!
+//! The histogram is log-linear: powers of two above a 1 ns floor, each
+//! octave split into [`SUBS`] linear sub-buckets, giving a worst-case
+//! relative bucket width of `1/SUBS` (12.5%) across ~20 decades with a
+//! small sparse footprint.  Percentile queries walk the cumulative bucket
+//! counts and return the bucket's upper bound clamped to the observed
+//! min/max — an upper-bound estimate whose error the tests bound against
+//! an exact sorted-vector model.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{Effect, EngineEvent, EventSink, ResultNotes};
+use crate::util::json::Json;
+
+/// Histogram value floor: everything at or below 1 ns lands in bucket 0.
+const HIST_MIN: f64 = 1e-9;
+/// Linear sub-buckets per power-of-two octave.
+const SUBS: u32 = 8;
+
+/// Sparse log-linear histogram (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    buckets: BTreeMap<u32, u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+fn bucket_index(v: f64) -> u32 {
+    if !(v > HIST_MIN) {
+        return 0;
+    }
+    let octave = (v / HIST_MIN).log2().floor();
+    let lower = HIST_MIN * 2f64.powi(octave as i32);
+    let sub = (((v - lower) / (lower / SUBS as f64)) as u32).min(SUBS - 1);
+    1 + octave as u32 * SUBS + sub
+}
+
+fn bucket_upper(idx: u32) -> f64 {
+    if idx == 0 {
+        return HIST_MIN;
+    }
+    let i = idx - 1;
+    let lower = HIST_MIN * 2f64.powi((i / SUBS) as i32);
+    lower * (1.0 + (i % SUBS + 1) as f64 / SUBS as f64)
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation (negative / non-finite values clamp to 0).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        *self.buckets.entry(bucket_index(v)).or_insert(0) += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Smallest observation (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest observation (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile `q ∈ [0, 1]` as an upper-bound estimate: the upper edge of
+    /// the bucket holding the `ceil(q·count)`-th observation, clamped to
+    /// the observed `[min, max]`.  Error is bounded by one bucket width
+    /// (≤ 12.5% relative above the floor).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (&idx, &c) in &self.buckets {
+            cum += c;
+            if cum >= target {
+                return bucket_upper(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Non-empty `(upper_bound, cumulative_count)` pairs in ascending
+    /// order — the Prometheus `le` series.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut cum = 0u64;
+        self.buckets
+            .iter()
+            .map(|(&idx, &c)| {
+                cum += c;
+                (bucket_upper(idx), cum)
+            })
+            .collect()
+    }
+}
+
+/// Named counters and histograms; the single mutable snapshot the
+/// [`MetricsSink`] updates and the CLI prints.
+///
+/// Counter names may carry Prometheus-style labels inline
+/// (`rdlb_requests_total{worker="3"}`); histogram names must be plain.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        if by > 0 {
+            *self.counters.entry(name.to_string()).or_insert(0) += by;
+        }
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Current value of a counter (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.hists.is_empty()
+    }
+
+    /// Prometheus text exposition (counters, then histograms with
+    /// cumulative `le` buckets, `_sum` and `_count`).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_base = "";
+        for (name, v) in &self.counters {
+            let base = name.split('{').next().unwrap_or(name);
+            if base != last_base {
+                let _ = writeln!(out, "# TYPE {base} counter");
+                last_base = base;
+            }
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, h) in &self.hists {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            for (le, cum) in h.cumulative_buckets() {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{le:e}\"}} {cum}");
+            }
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        out
+    }
+
+    /// JSON snapshot: counters verbatim, histograms summarized to
+    /// count/sum/min/max/mean and p50/p90/p99.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::num(*v as f64))).collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::num(h.count() as f64)),
+                            ("sum", Json::num(h.sum())),
+                            ("min", Json::num(h.min())),
+                            ("max", Json::num(h.max())),
+                            ("mean", Json::num(h.mean())),
+                            ("p50", Json::num(h.percentile(0.50))),
+                            ("p90", Json::num(h.percentile(0.90))),
+                            ("p99", Json::num(h.percentile(0.99))),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("histograms", hists)])
+    }
+}
+
+/// [`EventSink`] that folds the event stream into a shared
+/// [`MetricsRegistry`]: per-event counters, per-worker request counters
+/// (scope 0), and the latency histograms — assign→result time, chunk
+/// compute time, park duration, chunk size.
+///
+/// Rates (e.g. the net master's frames-per-second) are derived by the
+/// reader: `rdlb serve --metrics-every` diffs `rdlb_events_total` between
+/// snapshots, since every received frame becomes exactly one engine event.
+pub struct MetricsSink {
+    registry: Arc<Mutex<MetricsRegistry>>,
+    /// Assign time per in-flight `(scope, assignment_id)`.
+    assigned_at: HashMap<(u32, u64), f64>,
+    /// Park time per parked `(scope, worker)`.
+    parked_at: HashMap<(u32, u32), f64>,
+}
+
+impl MetricsSink {
+    pub fn new(registry: Arc<Mutex<MetricsRegistry>>) -> MetricsSink {
+        MetricsSink { registry, assigned_at: HashMap::new(), parked_at: HashMap::new() }
+    }
+}
+
+impl EventSink for MetricsSink {
+    fn record(
+        &mut self,
+        scope: u32,
+        now: f64,
+        event: &EngineEvent<'_>,
+        effects: &[Effect],
+        notes: &ResultNotes,
+    ) {
+        let mut reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
+        reg.inc("rdlb_events_total", 1);
+        match event {
+            EngineEvent::WorkerRequest { worker } => {
+                reg.inc("rdlb_requests_total", 1);
+                if scope == 0 {
+                    reg.inc(&format!("rdlb_requests_total{{worker=\"{worker}\"}}"), 1);
+                }
+            }
+            EngineEvent::ResultReceived { assignment_id, compute_secs, .. } => {
+                reg.inc("rdlb_results_total", 1);
+                reg.inc("rdlb_duplicate_iterations_total", notes.duplicate_iterations);
+                reg.inc("rdlb_unknown_results_total", notes.unknown_results);
+                reg.observe("rdlb_chunk_compute_seconds", *compute_secs);
+                if let Some(t0) = self.assigned_at.remove(&(scope, *assignment_id)) {
+                    reg.observe("rdlb_assign_to_result_seconds", now - t0);
+                }
+            }
+            EngineEvent::WorkerDisconnected { .. } => reg.inc("rdlb_disconnects_total", 1),
+            EngineEvent::VersionRefused { .. } => reg.inc("rdlb_refused_workers_total", 1),
+            EngineEvent::Timeout => reg.inc("rdlb_timeouts_total", 1),
+        }
+        for eff in effects {
+            match eff {
+                Effect::Assign(a) => {
+                    reg.inc("rdlb_assigned_chunks_total", 1);
+                    if a.rescheduled {
+                        reg.inc("rdlb_rescheduled_chunks_total", 1);
+                    }
+                    reg.observe("rdlb_chunk_tasks", a.len() as f64);
+                    self.assigned_at.insert((scope, a.id), now);
+                }
+                Effect::Park { worker } => {
+                    reg.inc("rdlb_parks_total", 1);
+                    self.parked_at.insert((scope, *worker as u32), now);
+                }
+                Effect::Wake { worker } => {
+                    reg.inc("rdlb_wakes_total", 1);
+                    if let Some(t0) = self.parked_at.remove(&(scope, *worker as u32)) {
+                        reg.observe("rdlb_park_seconds", now - t0);
+                    }
+                }
+                Effect::TerminateWorker { .. } => reg.inc("rdlb_terminations_total", 1),
+                Effect::Completed => reg.inc("rdlb_completions_total", 1),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0.0);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 10.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 4.0);
+        assert_eq!(h.mean(), 2.5);
+        // Upper-bound estimate: within one bucket (12.5%) of the exact.
+        let p50 = h.percentile(0.5);
+        assert!((2.0..=2.0 * 1.125).contains(&p50), "p50 {p50}");
+        assert_eq!(h.percentile(1.0), 4.0);
+        let p0 = h.percentile(0.0);
+        assert!((1.0..=1.125).contains(&p0), "p0 {p0}");
+    }
+
+    #[test]
+    fn histogram_floor_and_garbage() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        h.record(1e-12);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.max(), 1e-12);
+        assert!(h.percentile(0.99) <= HIST_MIN);
+    }
+
+    #[test]
+    fn bucket_index_monotone_and_upper_bound_valid() {
+        let mut prev_idx = 0;
+        let mut v = 1e-10;
+        while v < 1e6 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev_idx, "index not monotone at {v}");
+            assert!(bucket_upper(idx) >= v * (1.0 - 1e-12), "upper bound below value at {v}");
+            prev_idx = idx;
+            v *= 1.37;
+        }
+    }
+
+    #[test]
+    fn registry_counters_and_prometheus_shape() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("rdlb_requests_total", 2);
+        reg.inc("rdlb_requests_total{worker=\"1\"}", 1);
+        reg.observe("rdlb_chunk_compute_seconds", 0.5);
+        reg.observe("rdlb_chunk_compute_seconds", 1.5);
+        assert_eq!(reg.counter("rdlb_requests_total"), 2);
+        assert_eq!(reg.counter("missing"), 0);
+        let text = reg.to_prometheus();
+        assert!(text.contains("# TYPE rdlb_requests_total counter"));
+        // One TYPE line per base name, even with labeled variants.
+        assert_eq!(text.matches("# TYPE rdlb_requests_total counter").count(), 1);
+        assert!(text.contains("rdlb_requests_total 2"));
+        assert!(text.contains("rdlb_requests_total{worker=\"1\"} 1"));
+        assert!(text.contains("# TYPE rdlb_chunk_compute_seconds histogram"));
+        assert!(text.contains("rdlb_chunk_compute_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("rdlb_chunk_compute_seconds_count 2"));
+        assert!(text.contains("rdlb_chunk_compute_seconds_sum 2"));
+    }
+
+    #[test]
+    fn registry_json_snapshot_parses() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("a_total", 3);
+        reg.observe("h_seconds", 0.25);
+        let text = reg.to_json().to_string_pretty();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.req("counters").unwrap().req("a_total").unwrap().as_u64(), Some(3));
+        let h = v.req("histograms").unwrap().req("h_seconds").unwrap();
+        assert_eq!(h.req("count").unwrap().as_u64(), Some(1));
+        assert_eq!(h.req("max").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn metrics_sink_tracks_assign_to_result_and_park() {
+        use crate::coordinator::{Assignment, TaskSet};
+        let reg = Arc::new(Mutex::new(MetricsRegistry::new()));
+        let mut sink = MetricsSink::new(reg.clone());
+        let assign = Effect::Assign(Assignment {
+            id: 1,
+            worker: 0,
+            tasks: TaskSet::Range { start: 0, end: 8 },
+            rescheduled: false,
+        });
+        let zero = ResultNotes::default();
+        sink.record(
+            0,
+            1.0,
+            &EngineEvent::WorkerRequest { worker: 0 },
+            std::slice::from_ref(&assign),
+            &zero,
+        );
+        sink.record(
+            0,
+            1.5,
+            &EngineEvent::WorkerRequest { worker: 1 },
+            &[Effect::Park { worker: 1 }],
+            &zero,
+        );
+        let notes =
+            ResultNotes { completed_chunks: 1, first_completions: 8, ..ResultNotes::default() };
+        sink.record(
+            0,
+            3.0,
+            &EngineEvent::ResultReceived {
+                worker: 0,
+                assignment_id: 1,
+                compute_secs: 1.25,
+                digests: &[],
+            },
+            &[Effect::Wake { worker: 1 }],
+            &notes,
+        );
+        let reg = reg.lock().unwrap();
+        assert_eq!(reg.counter("rdlb_events_total"), 3);
+        assert_eq!(reg.counter("rdlb_assigned_chunks_total"), 1);
+        assert_eq!(reg.counter("rdlb_parks_total"), 1);
+        assert_eq!(reg.counter("rdlb_wakes_total"), 1);
+        let lat = reg.histogram("rdlb_assign_to_result_seconds").unwrap();
+        assert_eq!(lat.count(), 1);
+        assert_eq!(lat.max(), 2.0);
+        let park = reg.histogram("rdlb_park_seconds").unwrap();
+        assert_eq!(park.max(), 1.5);
+        assert_eq!(reg.histogram("rdlb_chunk_tasks").unwrap().max(), 8.0);
+    }
+}

@@ -1,0 +1,51 @@
+//! Observability over the sans-I/O engine: journal, metrics, traces.
+//!
+//! Everything here hangs off the [`crate::coordinator::EventSink`] tap on
+//! [`crate::coordinator::Engine::handle`].  Because all four runtimes —
+//! simulator, native threads, distributed net, and both levels of the
+//! hierarchical runtime — drive the identical engine, one sink sees the
+//! complete coordinator history of any run without per-runtime
+//! instrumentation, and a run with no sink installed pays only an
+//! untaken branch per event.
+//!
+//! | piece | role |
+//! |---|---|
+//! | [`JournalSink`] / [`read_journal`] | length-prefixed binary event log; deterministic for seeded sim runs (`rdlb run --journal`) |
+//! | [`replay_stats`] | fold a journal back into [`crate::coordinator::MasterStats`] — the differential oracle `rdlb chaos --journal-oracle` arms |
+//! | [`replay_trace`] / [`TraceSink`] | per-chunk [`crate::trace::Trace`] from any runtime, offline or live (`--trace-out`, `--gantt`) |
+//! | [`MetricsRegistry`] / [`MetricsSink`] | counters + log-linear histograms, Prometheus/JSON snapshots (`--metrics`, `serve --metrics-every`) |
+//! | [`chrome_trace`] | journal → Chrome `trace_event` JSON for `about:tracing` / Perfetto (`rdlb trace-export --chrome`) |
+//!
+//! The journal record format is specified in `PROTOCOL.md` appendix B; the
+//! sink contract (passive, order-preserving, never behaviour-changing) in
+//! `ARCHITECTURE.md` §Observability.
+
+pub mod chrome;
+pub mod journal;
+pub mod metrics;
+pub mod trace;
+
+pub use chrome::chrome_trace;
+pub use journal::{
+    read_journal, replay_stats, JournalEvent, JournalRecord, JournalSink, JOURNAL_MAGIC,
+    JOURNAL_VERSION, MAX_RECORD_LEN,
+};
+pub use metrics::{Histogram, MetricsRegistry, MetricsSink};
+pub use trace::{replay_trace, TraceBuilder, TraceSink};
+
+use crate::coordinator::{EventSink, MultiSink, SharedSink};
+
+/// Stack an extra sink onto an optional existing one: the common driver
+/// move when a caller-provided sink (journal/metrics) and an internal one
+/// (`run_traced`'s trace collector) must both observe the run.
+pub fn with_extra_sink(base: Option<SharedSink>, extra: impl EventSink + 'static) -> SharedSink {
+    match base {
+        None => SharedSink::new(extra),
+        Some(b) => {
+            let mut multi = MultiSink::new();
+            multi.push(Box::new(b));
+            multi.push(Box::new(extra));
+            SharedSink::new(multi)
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Building [`crate::trace::Trace`]s from the engine's event stream — the
+//! one construction path shared by the live [`TraceSink`] (any runtime,
+//! via the engine tap) and by [`replay_trace`] (offline, from a journal).
+//!
+//! Semantics: a chunk's record is opened by its `Assign` effect
+//! (`assigned_at`), and closed by the matching result (`finished_at` = the
+//! result's arrival time, `started_at` = arrival minus the reported
+//! compute seconds).  A chunk whose result never arrives — evaporated by a
+//! fail-stop, dropped by wire chaos, or outstanding when the run ends — is
+//! marked `lost` when the trace is finalized.  This subsumes the
+//! simulator's old inline `mark_lost` bookkeeping and extends traces to
+//! the wall-clock runtimes, which have no mid-compute observability.
+//!
+//! Only scope-0 records are traced: for the hierarchical runtime that is
+//! the root engine's super-chunk schedule (group-internal chunks remain
+//! visible in the journal and the Chrome export).
+
+use std::collections::HashMap;
+
+use crate::coordinator::{Assignment, Effect, EngineEvent, EventSink, ResultNotes};
+use crate::trace::{Trace, TraceRecord};
+
+use super::journal::{JournalEvent, JournalRecord};
+
+/// Incremental trace construction (see module docs for the semantics).
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    trace: Trace,
+    /// `assignment_id` → index into `trace.records` for open chunks.
+    open: HashMap<u64, usize>,
+}
+
+impl TraceBuilder {
+    pub fn new() -> TraceBuilder {
+        TraceBuilder::default()
+    }
+
+    /// A chunk was handed out at `now`.
+    pub fn on_assign(&mut self, now: f64, a: &Assignment) {
+        let idx = self.trace.len();
+        self.trace.push(TraceRecord {
+            assignment_id: a.id,
+            worker: a.worker,
+            first_task: a.tasks.first().unwrap_or(0),
+            task_count: a.len(),
+            assigned_at: now,
+            started_at: None,
+            finished_at: None,
+            rescheduled: a.rescheduled,
+            lost: false,
+        });
+        self.open.insert(a.id, idx);
+    }
+
+    /// The chunk's result arrived at `now` after `compute_secs` of work.
+    pub fn on_result(&mut self, now: f64, assignment_id: u64, compute_secs: f64) {
+        if let Some(idx) = self.open.remove(&assignment_id) {
+            let r = &mut self.trace.records[idx];
+            r.started_at = Some(now - compute_secs.max(0.0));
+            r.finished_at = Some(now);
+        }
+    }
+
+    /// Finalize: every still-open chunk evaporated (fail-stop, dropped
+    /// frame, or run end) and is marked lost.
+    pub fn finish(&mut self) -> Trace {
+        for (_, idx) in self.open.drain() {
+            self.trace.records[idx].lost = true;
+        }
+        std::mem::take(&mut self.trace)
+    }
+}
+
+/// Live [`EventSink`] collecting a scope-0 [`Trace`] during any run.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    builder: TraceBuilder,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::default()
+    }
+
+    /// Finalize and take the collected trace (call after the run).
+    pub fn take_trace(&mut self) -> Trace {
+        self.builder.finish()
+    }
+}
+
+impl EventSink for TraceSink {
+    fn record(
+        &mut self,
+        scope: u32,
+        now: f64,
+        event: &EngineEvent<'_>,
+        effects: &[Effect],
+        notes: &ResultNotes,
+    ) {
+        if scope != 0 {
+            return;
+        }
+        if let EngineEvent::ResultReceived { assignment_id, compute_secs, .. } = event {
+            if notes.unknown_results == 0 {
+                self.builder.on_result(now, *assignment_id, *compute_secs);
+            }
+        }
+        for eff in effects {
+            if let Effect::Assign(a) = eff {
+                self.builder.on_assign(now, a);
+            }
+        }
+    }
+}
+
+/// Rebuild the scope-0 [`Trace`] from decoded journal records — identical
+/// to what a live [`TraceSink`] would have collected during the run.
+pub fn replay_trace(records: &[JournalRecord]) -> Trace {
+    let mut b = TraceBuilder::new();
+    for rec in records {
+        if rec.scope != 0 {
+            continue;
+        }
+        if let JournalEvent::Result { assignment_id, compute_secs, .. } = rec.event {
+            if rec.notes.unknown_results == 0 {
+                b.on_result(rec.now, assignment_id, compute_secs);
+            }
+        }
+        for eff in &rec.effects {
+            if let Effect::Assign(a) = eff {
+                b.on_assign(rec.now, a);
+            }
+        }
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TaskSet;
+
+    fn assign(id: u64, worker: usize, start: u32, end: u32, resched: bool) -> Assignment {
+        Assignment { id, worker, tasks: TaskSet::Range { start, end }, rescheduled: resched }
+    }
+
+    #[test]
+    fn builder_opens_closes_and_marks_lost() {
+        let mut b = TraceBuilder::new();
+        b.on_assign(0.0, &assign(1, 0, 0, 4, false));
+        b.on_assign(0.1, &assign(2, 1, 4, 8, true));
+        b.on_result(1.0, 1, 0.75);
+        // Chunk 2 never reports; unknown ids are ignored.
+        b.on_result(1.5, 99, 0.1);
+        let t = b.finish();
+        assert_eq!(t.len(), 2);
+        let done = &t.records[0];
+        assert_eq!(done.started_at, Some(0.25));
+        assert_eq!(done.finished_at, Some(1.0));
+        assert!(!done.lost);
+        let lost = &t.records[1];
+        assert!(lost.lost);
+        assert!(lost.rescheduled);
+        assert_eq!(lost.finished_at, None);
+        assert_eq!(t.lost().count(), 1);
+        assert_eq!(t.rescheduled().count(), 1);
+    }
+
+    #[test]
+    fn trace_sink_ignores_inner_scopes_and_unknown_results() {
+        let mut sink = TraceSink::new();
+        let zero = ResultNotes::default();
+        let a = Effect::Assign(assign(1, 0, 0, 2, false));
+        sink.record(
+            0,
+            0.0,
+            &EngineEvent::WorkerRequest { worker: 0 },
+            std::slice::from_ref(&a),
+            &zero,
+        );
+        // Inner-group assign must not appear in the scope-0 trace.
+        let inner = Effect::Assign(assign(50, 0, 0, 2, false));
+        sink.record(
+            1,
+            0.0,
+            &EngineEvent::WorkerRequest { worker: 0 },
+            std::slice::from_ref(&inner),
+            &zero,
+        );
+        // An unknown-id result must not close anything.
+        let unknown = ResultNotes { unknown_results: 1, ..ResultNotes::default() };
+        sink.record(
+            0,
+            0.4,
+            &EngineEvent::ResultReceived {
+                worker: 0,
+                assignment_id: 1,
+                compute_secs: 0.1,
+                digests: &[],
+            },
+            &[],
+            &unknown,
+        );
+        let good =
+            ResultNotes { completed_chunks: 1, first_completions: 2, ..ResultNotes::default() };
+        sink.record(
+            0,
+            0.5,
+            &EngineEvent::ResultReceived {
+                worker: 0,
+                assignment_id: 1,
+                compute_secs: 0.1,
+                digests: &[],
+            },
+            &[Effect::Completed],
+            &good,
+        );
+        let t = sink.take_trace();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.records[0].finished_at, Some(0.5));
+        assert_eq!(t.lost().count(), 0);
+    }
+}

@@ -17,6 +17,8 @@
 //! exactly the observable behaviour of a crashed MPI rank under
 //! `MPI_ERRORS_RETURN` in the paper's implementation.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{ensure, Result};
 
 use super::event::{CompletedChunk, Event, EventQueue};
@@ -25,9 +27,10 @@ use super::outcome::Outcome;
 use super::perturbation::PerturbationModel;
 use super::topology::Topology;
 use crate::apps::Workload;
-use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig};
+use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig, SharedSink};
 use crate::dls::{Technique, TechniqueParams};
-use crate::trace::{Trace, TraceRecord};
+use crate::obs::TraceSink;
+use crate::trace::Trace;
 
 /// Full parameterization of one simulated execution.
 #[derive(Debug, Clone)]
@@ -43,6 +46,10 @@ pub struct SimParams {
     pub sched_overhead: f64,
     /// Base one-way message latency, seconds (0 for rank 0 = the master).
     pub base_latency: f64,
+    /// Observability tap installed on the engine (`None` = no overhead).
+    /// Sinks are passive: the seeded event order and outcome are identical
+    /// with or without one (see `ARCHITECTURE.md` §Observability).
+    pub sink: Option<SharedSink>,
 }
 
 impl SimParams {
@@ -58,6 +65,7 @@ impl SimParams {
             perturbations: PerturbationModel::none(),
             sched_overhead: 5e-6,
             base_latency: 2e-5,
+            sink: None,
         }
     }
 }
@@ -88,18 +96,30 @@ impl SimCluster {
 
     /// Run and return the outcome.
     pub fn run(&self) -> Result<Outcome> {
-        Ok(self.run_inner(None))
+        Ok(self.run_inner(&self.params))
     }
 
     /// Run, additionally collecting a per-chunk trace.
+    ///
+    /// A thin wrapper over [`SimCluster::run`]: the trace is assembled by an
+    /// [`crate::obs::TraceSink`] stacked onto whatever sink the caller
+    /// already installed, through the same engine tap every runtime shares —
+    /// the simulator has no private trace bookkeeping anymore.  Chunks whose
+    /// result never reaches the master (evaporated by a fail-stop, or still
+    /// in flight when the run completes) come back marked `lost`.
     pub fn run_traced(&self) -> Result<(Outcome, Trace)> {
-        let mut trace = Trace::default();
-        let outcome = self.run_inner(Some(&mut trace));
+        let tracer: Arc<Mutex<TraceSink>> = Arc::new(Mutex::new(TraceSink::new()));
+        let mut params = self.params.clone();
+        params.sink = Some(crate::obs::with_extra_sink(
+            params.sink.take(),
+            SharedSink::from_arc(tracer.clone()),
+        ));
+        let outcome = self.run_inner(&params);
+        let trace = tracer.lock().unwrap_or_else(|e| e.into_inner()).take_trace();
         Ok((outcome, trace))
     }
 
-    fn run_inner(&self, mut trace: Option<&mut Trace>) -> Outcome {
-        let prm = &self.params;
+    fn run_inner(&self, prm: &SimParams) -> Outcome {
         let topo = &prm.topology;
         let p = topo.total_pes();
         let n = prm.workload.n();
@@ -123,6 +143,9 @@ impl SimCluster {
             params: tech_params,
             rdlb: prm.rdlb,
         });
+        if let Some(s) = prm.sink.clone() {
+            engine.set_sink(0, Box::new(s));
+        }
 
         let mut queue = EventQueue::new();
         let mut reply: Vec<Effect> = Vec::with_capacity(1);
@@ -181,24 +204,10 @@ impl SimCluster {
                     // nothing.  Terminate: the virtual worker simply exits.
                     if let Some(Effect::Assign(assignment)) = reply.pop() {
                         let t_reply = now + prm.sched_overhead + latency(worker, now);
-                        if let Some(tr) = trace.as_deref_mut() {
-                            tr.push(TraceRecord {
-                                assignment_id: assignment.id,
-                                worker,
-                                first_task: assignment.tasks.first().unwrap_or(0),
-                                task_count: assignment.len(),
-                                assigned_at: now,
-                                started_at: None,
-                                finished_at: None,
-                                rescheduled: assignment.rescheduled,
-                                lost: false,
-                            });
-                        }
                         if prm.failures.is_failed(worker, t_reply) {
-                            // Chunk evaporates (Fig. 1b's T4-on-P3 case).
-                            if let Some(tr) = trace.as_deref_mut() {
-                                mark_lost(tr, assignment.id);
-                            }
+                            // Chunk evaporates (Fig. 1b's T4-on-P3 case); an
+                            // installed trace sink marks it lost at the end
+                            // because its result never arrives.
                             continue;
                         }
                         queue.push(t_reply, Event::ReplyAtWorker { worker, assignment });
@@ -207,25 +216,14 @@ impl SimCluster {
 
                 Event::ReplyAtWorker { worker, assignment } => {
                     if prm.failures.is_failed(worker, now) {
-                        if let Some(tr) = trace.as_deref_mut() {
-                            mark_lost(tr, assignment.id);
-                        }
                         continue;
                     }
                     let work = prm.workload.model.cost_of(&assignment.tasks);
                     let finish = prm.perturbations.finish_time(topo, worker, now, work);
-                    if let Some(tr) = trace.as_deref_mut() {
-                        if let Some(r) = tr.records.iter_mut().find(|r| r.assignment_id == assignment.id) {
-                            r.started_at = Some(now);
-                        }
-                    }
                     if let Some(ft) = prm.failures.time_of(worker) {
                         if ft <= finish {
                             // Dies mid-compute: partial work burned, chunk lost.
                             engine.note_wasted((ft - now).max(0.0));
-                            if let Some(tr) = trace.as_deref_mut() {
-                                mark_lost(tr, assignment.id);
-                            }
                             continue;
                         }
                     }
@@ -236,11 +234,6 @@ impl SimCluster {
                 }
 
                 Event::ComputeDone { worker, assignment, compute_time } => {
-                    if let Some(tr) = trace.as_deref_mut() {
-                        if let Some(r) = tr.records.iter_mut().find(|r| r.assignment_id == assignment.id) {
-                            r.finished_at = Some(now);
-                        }
-                    }
                     let arr = now + latency(worker, now);
                     queue.push(
                         arr,
@@ -269,12 +262,6 @@ impl SimCluster {
             result_digest: 0.0,
             events,
         }
-    }
-}
-
-fn mark_lost(tr: &mut Trace, id: u64) {
-    if let Some(r) = tr.records.iter_mut().find(|r| r.assignment_id == id) {
-        r.lost = true;
     }
 }
 

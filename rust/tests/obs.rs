@@ -1,0 +1,297 @@
+//! Integration tests of the observability layer (`rdlb::obs`): journal
+//! codec round-trips under randomized event streams, histogram percentiles
+//! bounded against an exact sorted model, byte-identical journals for
+//! seeded simulator runs, and the journal replay oracle on failure-heavy
+//! runs of the wall-clock runtimes.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use rdlb::apps::{AppKind, CostModel};
+use rdlb::config::{ExperimentConfig, Scenario};
+use rdlb::coordinator::{
+    Assignment, Effect, EngineEvent, EventSink, ResultNotes, SharedSink, TaskSet,
+};
+use rdlb::dls::Technique;
+use rdlb::hier::{HierParams, HierRuntime};
+use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+use rdlb::net::{run_loopback, NetMasterParams};
+use rdlb::obs::{
+    read_journal, replay_stats, replay_trace, Histogram, JournalEvent, JournalRecord, JournalSink,
+    MetricsRegistry, MetricsSink,
+};
+use rdlb::sim::{Outcome, SimCluster};
+use rdlb::util::{Rng, Watchdog};
+
+fn synthetic(n: usize, cost: f64) -> ComputeBackend {
+    ComputeBackend::Synthetic {
+        model: Arc::new(CostModel::from_costs(vec![cost; n])),
+        scale: 1.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Journal codec: randomized round-trip property
+// ---------------------------------------------------------------------------
+
+fn rand_task_set(rng: &mut Rng) -> TaskSet {
+    if rng.next_f64() < 0.5 {
+        let start = rng.gen_range(0, 100_000) as u32;
+        TaskSet::Range { start, end: start + rng.gen_range(0, 512) as u32 }
+    } else {
+        let count = rng.gen_range(0, 24) as usize;
+        TaskSet::List((0..count).map(|_| rng.gen_range(0, 1 << 20) as u32).collect())
+    }
+}
+
+fn rand_effect(rng: &mut Rng) -> Effect {
+    match rng.gen_range(0, 4) {
+        0 => Effect::Assign(Assignment {
+            id: rng.next_u64() >> 1,
+            worker: rng.gen_range(0, 255) as usize,
+            tasks: rand_task_set(rng),
+            rescheduled: rng.next_f64() < 0.3,
+        }),
+        1 => Effect::Park { worker: rng.gen_range(0, 255) as usize },
+        2 => Effect::Wake { worker: rng.gen_range(0, 255) as usize },
+        3 => Effect::TerminateWorker { worker: rng.gen_range(0, 255) as usize },
+        _ => Effect::Completed,
+    }
+}
+
+/// Feed hundreds of randomized `(scope, now, event, effects, notes)` tuples
+/// through a [`JournalSink`] and demand the decoder returns them exactly —
+/// every event kind, effect kind and task-set shape, in order.
+#[test]
+fn journal_round_trips_random_event_streams() {
+    let mut rng = Rng::new(0x0B5E_2026);
+    for _trial in 0..8 {
+        let mut sink = JournalSink::new();
+        let mut expected: Vec<JournalRecord> = Vec::new();
+        for _ in 0..rng.gen_range(1, 120) {
+            let scope = rng.gen_range(0, 5) as u32;
+            let now = rng.uniform(0.0, 1e4);
+            let effects: Vec<Effect> =
+                (0..rng.gen_range(0, 4)).map(|_| rand_effect(&mut rng)).collect();
+            let (event, notes) = match rng.gen_range(0, 4) {
+                0 => (JournalEvent::Request { worker: rng.gen_range(0, 255) as usize }, None),
+                1 => {
+                    let notes = ResultNotes {
+                        completed_chunks: rng.gen_range(0, 1),
+                        rescheduled_completions: rng.gen_range(0, 1),
+                        unknown_results: rng.gen_range(0, 1),
+                        first_completions: rng.gen_range(0, 1 << 20),
+                        duplicate_iterations: rng.gen_range(0, 1 << 20),
+                        digest_delta: rng.uniform(-10.0, 1e6),
+                    };
+                    (
+                        JournalEvent::Result {
+                            worker: rng.gen_range(0, 255) as usize,
+                            assignment_id: rng.next_u64() >> 1,
+                            compute_secs: rng.uniform(0.0, 60.0),
+                            digest_count: rng.gen_range(0, 4096) as u32,
+                        },
+                        Some(notes),
+                    )
+                }
+                2 => (JournalEvent::Disconnected { worker: rng.gen_range(0, 255) as usize }, None),
+                3 => (JournalEvent::Refused { worker: rng.gen_range(0, 255) as usize }, None),
+                _ => (JournalEvent::Timeout, None),
+            };
+            // Mirror the record through the sink's EventSink interface.
+            let notes = notes.unwrap_or_default();
+            let digests;
+            let engine_event = match &event {
+                JournalEvent::Request { worker } => EngineEvent::WorkerRequest { worker: *worker },
+                JournalEvent::Result { worker, assignment_id, compute_secs, digest_count } => {
+                    digests = vec![0.0; *digest_count as usize];
+                    EngineEvent::ResultReceived {
+                        worker: *worker,
+                        assignment_id: *assignment_id,
+                        compute_secs: *compute_secs,
+                        digests: &digests,
+                    }
+                }
+                JournalEvent::Disconnected { worker } => {
+                    EngineEvent::WorkerDisconnected { worker: *worker }
+                }
+                JournalEvent::Refused { worker } => EngineEvent::VersionRefused { worker: *worker },
+                JournalEvent::Timeout => EngineEvent::Timeout,
+            };
+            sink.record(scope, now, &engine_event, &effects, &notes);
+            expected.push(JournalRecord { scope, now, event, notes, effects });
+        }
+        let decoded = read_journal(sink.bytes()).unwrap();
+        assert_eq!(decoded, expected);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram percentiles vs an exact sorted model
+// ---------------------------------------------------------------------------
+
+/// The log-linear histogram's percentile is an upper-bound estimate with a
+/// one-sub-bucket error: for every quantile it must bracket the exact
+/// order statistic within `[exact, exact × (1 + 1/SUBS)]` (SUBS = 8).
+#[test]
+fn histogram_percentiles_bound_the_exact_sorted_model() {
+    let mut rng = Rng::new(7);
+    for _trial in 0..20 {
+        let n = rng.gen_range(1, 400) as usize;
+        let mut samples: Vec<f64> =
+            (0..n).map(|_| 10f64.powf(rng.uniform(-6.0, 2.0))).collect();
+        let mut h = Histogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let estimate = h.percentile(q);
+            let rank = (((q * n as f64).ceil() as usize).max(1) - 1).min(n - 1);
+            let exact = samples[rank];
+            assert!(
+                estimate >= exact * (1.0 - 1e-12),
+                "p{q}: estimate {estimate} below exact {exact} (n={n})"
+            );
+            assert!(
+                estimate <= exact * 1.125 * (1.0 + 1e-12),
+                "p{q}: estimate {estimate} beyond one bucket above exact {exact} (n={n})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seeded simulator: byte-identical journals, passive sinks
+// ---------------------------------------------------------------------------
+
+fn sim_params(seed: u64) -> rdlb::sim::SimParams {
+    ExperimentConfig::builder()
+        .app(AppKind::Uniform)
+        .tasks(600)
+        .pes(8)
+        .technique(Technique::Fac)
+        .rdlb(true)
+        .scenario(Scenario::failures(3))
+        .mean_cost(1e-3)
+        .seed(seed)
+        .build()
+        .unwrap()
+        .sim_params(0)
+        .unwrap()
+}
+
+fn journaled_sim_run(seed: u64) -> (Outcome, Vec<u8>) {
+    let sink = Arc::new(Mutex::new(JournalSink::new()));
+    let mut params = sim_params(seed);
+    params.sink = Some(SharedSink::from_arc(sink.clone()));
+    let outcome = SimCluster::new(params).unwrap().run().unwrap();
+    let bytes = sink.lock().unwrap().bytes().to_vec();
+    (outcome, bytes)
+}
+
+#[test]
+fn seeded_sim_journal_is_byte_identical_and_the_sink_is_passive() {
+    let (a, journal_a) = journaled_sim_run(1);
+    let (b, journal_b) = journaled_sim_run(1);
+    assert!(journal_a.len() > 10, "journal must contain records, not just the header");
+    assert_eq!(journal_a, journal_b, "same seed must produce a byte-identical journal");
+    assert_eq!(a.stats, b.stats);
+
+    // Passivity: a run with no sink installed is identical.
+    let bare = SimCluster::new(sim_params(1)).unwrap().run().unwrap();
+    assert_eq!(a.parallel_time, bare.parallel_time);
+    assert_eq!(a.finished, bare.finished);
+    assert_eq!(a.stats, bare.stats);
+
+    // Different seeds produce different histories.
+    let (_, journal_c) = journaled_sim_run(2);
+    assert_ne!(journal_a, journal_c);
+
+    // The replay oracle holds on the simulator too.
+    let records = read_journal(&journal_a).unwrap();
+    assert_eq!(replay_stats(&records), a.stats);
+}
+
+// ---------------------------------------------------------------------------
+// Journal replay oracle on the wall-clock runtimes
+// ---------------------------------------------------------------------------
+
+/// The paper's P−1-failure scenario over the loopback wire protocol, with
+/// the journal tap armed: replaying the journal must reproduce the live
+/// `MasterStats` exactly, and the reconstructed trace must show the rDLB
+/// re-dispatch that completed the run.
+#[test]
+fn journal_replay_matches_live_stats_under_p_minus_1_failures() {
+    let _wd = Watchdog::arm(
+        "journal_replay_matches_live_stats_under_p_minus_1_failures",
+        Duration::from_secs(180),
+    );
+    let n = 600;
+    let sink = Arc::new(Mutex::new(JournalSink::new()));
+    let mut params =
+        NetMasterParams::new(n, 4, Technique::Fac, true).with_failures(3, 0.12).unwrap();
+    params.timeout = Duration::from_secs(60);
+    params.sink = Some(SharedSink::from_arc(sink.clone()));
+
+    let (outcome, _reports) = run_loopback(params, &synthetic(n, 1e-3)).unwrap();
+    assert!(outcome.completed(), "rDLB must absorb P-1 failures: {outcome:?}");
+    assert_eq!(outcome.failures, 3);
+
+    let bytes = sink.lock().unwrap().bytes().to_vec();
+    let records = read_journal(&bytes).unwrap();
+    assert_eq!(replay_stats(&records), outcome.stats, "journal replay == live counters");
+
+    let trace = replay_trace(&records);
+    assert!(!trace.is_empty());
+    assert!(trace.rescheduled().count() > 0, "recovery must appear as rescheduled chunks");
+    assert!(trace.lost().count() > 0, "failed workers' in-flight chunks must appear lost");
+}
+
+/// The hierarchical runtime journals the root engine at scope 0 and each
+/// group's inner engine at scope 1+g into the same sink; the scope-0
+/// replay must equal the outcome's (root-engine) stats.
+#[test]
+fn hier_journal_replays_root_stats_from_scope_zero() {
+    let _wd =
+        Watchdog::arm("hier_journal_replays_root_stats_from_scope_zero", Duration::from_secs(180));
+    let n = 400;
+    let sink = Arc::new(Mutex::new(JournalSink::new()));
+    let mut params = HierParams::new(n, 2, 2, Technique::Fac, true, synthetic(n, 1e-4));
+    params.sink = Some(SharedSink::from_arc(sink.clone()));
+
+    let outcome = HierRuntime::new(params).unwrap().run().unwrap();
+    assert!(outcome.completed(), "{outcome:?}");
+
+    let bytes = sink.lock().unwrap().bytes().to_vec();
+    let records = read_journal(&bytes).unwrap();
+    assert!(records.iter().any(|r| r.scope == 0), "root engine records at scope 0");
+    assert!(records.iter().any(|r| r.scope >= 1), "inner engines record at scope 1+g");
+    assert_eq!(replay_stats(&records), outcome.stats, "scope-0 replay == root stats");
+}
+
+/// The metrics sink fills the registry from a real native run, and its
+/// counters agree with the outcome's.
+#[test]
+fn metrics_sink_populates_registry_on_a_native_run() {
+    let _wd =
+        Watchdog::arm("metrics_sink_populates_registry_on_a_native_run", Duration::from_secs(120));
+    let n = 400;
+    let registry = Arc::new(Mutex::new(MetricsRegistry::new()));
+    let mut params = NativeParams::new(n, 4, Technique::Fac, true, synthetic(n, 1e-4));
+    params.sink = Some(SharedSink::new(MetricsSink::new(registry.clone())));
+
+    let outcome = NativeRuntime::new(params).unwrap().run().unwrap();
+    assert!(outcome.completed(), "{outcome:?}");
+
+    let reg = registry.lock().unwrap();
+    assert!(!reg.is_empty());
+    assert_eq!(reg.counter("rdlb_results_total"), outcome.stats.completed_chunks);
+    assert_eq!(reg.counter("rdlb_assigned_chunks_total"), outcome.stats.assigned_chunks);
+    assert!(reg.counter("rdlb_events_total") > 0);
+    let compute = reg.histogram("rdlb_chunk_compute_seconds").unwrap();
+    assert_eq!(compute.count(), outcome.stats.completed_chunks);
+    let text = reg.to_prometheus();
+    assert!(text.contains("# TYPE rdlb_events_total counter"), "{text}");
+    assert!(text.contains("rdlb_chunk_compute_seconds_bucket"), "{text}");
+}
