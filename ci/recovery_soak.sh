@@ -1,0 +1,104 @@
+#!/usr/bin/env bash
+# Kill/resume soak for the journaled distributed master.
+#
+# Runs one uninterrupted `rdlb serve --spawn-local` reference run, then the
+# same workload under `--journal-dir`, kill -9s the master at KILLS points
+# (triggered by write-ahead journal growth, so the kills land mid-run on
+# any machine speed), resumes each time with `rdlb serve --resume`, and
+# asserts the recovered run completes with the reference run's digest —
+# which the chaos oracle already pins to the serial kernel's, so digest
+# parity here means no iteration was lost or double-counted across crashes.
+#
+# Knobs (env, with defaults): BIN=target/release/rdlb TECHNIQUE=fac
+# KILLS=2 WORKERS=4 TASKS=65536 MAX_ITER=800000 GROW=2048 SOAK_DIR=<mktemp>
+#
+# Exit 0 only if: every kill that landed was followed by a successful
+# resume, at least one kill landed mid-run, the final session printed a
+# RESULT digest, and that digest equals the uninterrupted reference's.
+set -euo pipefail
+
+BIN=${BIN:-target/release/rdlb}
+TECHNIQUE=${TECHNIQUE:-fac}
+KILLS=${KILLS:-2}
+WORKERS=${WORKERS:-4}
+TASKS=${TASKS:-65536}
+MAX_ITER=${MAX_ITER:-800000}
+# Journal bytes that must be appended between kill points.
+GROW=${GROW:-2048}
+WORK=${SOAK_DIR:-$(mktemp -d)}
+DIR="$WORK/wal"
+mkdir -p "$WORK"
+
+say() { printf '\nsoak: %s\n' "$*"; }
+
+PID=""
+cleanup() {
+    [ -n "$PID" ] && kill -9 "$PID" 2>/dev/null
+    # Orphaned --reconnect workers outlive a killed master by design; don't
+    # leave them polling a dead port after the soak itself is over.
+    pkill -f "rdlb worker --connect" 2>/dev/null
+    say "logs kept in $WORK"
+}
+trap 'cleanup || true' EXIT
+
+common=(--app mandelbrot --technique "$TECHNIQUE" --tasks "$TASKS"
+    --spawn-local "$WORKERS" --max-iter "$MAX_ITER" --timeout 300)
+
+say "reference run (uninterrupted): technique=$TECHNIQUE tasks=$TASKS workers=$WORKERS"
+"$BIN" serve "${common[@]}" | tee "$WORK/ref.log"
+REF=$(grep -o 'digest=[0-9.-]*' "$WORK/ref.log" | tail -1)
+if [ -z "$REF" ]; then
+    say "FAIL: reference run produced no digest"
+    exit 1
+fi
+
+say "journaled run: killing the master at $KILLS points ($GROW journal bytes apart)"
+"$BIN" serve "${common[@]}" --journal-dir "$DIR" >"$WORK/run0.log" 2>&1 &
+PID=$!
+
+jsize() { stat -c %s "$DIR/journal.bin" 2>/dev/null || echo 0; }
+
+landed=0
+for i in $(seq 1 "$KILLS"); do
+    target=$(($(jsize) + GROW))
+    while kill -0 "$PID" 2>/dev/null && [ "$(jsize)" -lt "$target" ]; do
+        sleep 0.2
+    done
+    if ! kill -9 "$PID" 2>/dev/null; then
+        say "run completed before kill $i could land (raise MAX_ITER to stretch the run)"
+        break
+    fi
+    wait "$PID" 2>/dev/null || true
+    landed=$i
+    say "kill $i landed at journal size $(jsize) — resuming"
+    "$BIN" serve --resume "$DIR" >"$WORK/run$i.log" 2>&1 &
+    PID=$!
+done
+
+wait "$PID" || true
+PID=""
+for f in "$WORK"/run*.log; do
+    printf '\n===== %s =====\n' "$f"
+    cat "$f"
+done
+
+if [ "$landed" -lt 1 ]; then
+    say "FAIL: no kill landed mid-run — the soak never exercised recovery"
+    exit 1
+fi
+if ! grep -q "resumed epoch" "$WORK/run$landed.log"; then
+    say "FAIL: resume $landed is missing the recovery banner"
+    exit 1
+fi
+
+FINAL=$(grep -ho 'digest=[0-9.-]*' "$WORK"/run*.log | tail -1)
+say "reference $REF vs recovered ${FINAL:-<none>}"
+if [ -z "$FINAL" ]; then
+    say "FAIL: no RESULT digest after recovery (hung or crashed run)"
+    exit 1
+fi
+if [ "$FINAL" != "$REF" ]; then
+    say "FAIL: digest parity broken after $landed kill(s): $FINAL != $REF"
+    exit 1
+fi
+say "PASS: $landed kill -9(s) survived with digest parity ($REF)"

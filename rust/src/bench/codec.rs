@@ -116,6 +116,7 @@ pub fn codec_cases(scale: &BenchScale) -> Vec<CaseReport> {
     let result = Frame::Result(WorkResult {
         worker: 3,
         assignment: 7,
+        epoch: 0,
         compute_secs: 0.5,
         digests: vec![1.5; n as usize],
     });

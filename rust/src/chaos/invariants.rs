@@ -2,7 +2,7 @@
 //!
 //! | invariant | statement |
 //! |---|---|
-//! | `completion` | with rDLB on, every run completes despite ≤ P−1 failures, perturbations, churn and frame chaos; with rDLB off a run either completes or hangs at the timeout with work demonstrably missing (the paper's documented "waits indefinitely" case) |
+//! | `completion` | with rDLB on, every run completes despite ≤ P−1 failures, perturbations, churn, frame chaos and a mid-run master kill/resume (`--master-kill`: the net run's outcome is the journal-recovered run's, so digest parity and the stats identities below double as the recovery oracle); with rDLB off a run either completes or hangs at the timeout with work demonstrably missing (the paper's documented "waits indefinitely" case) |
 //! | `exactly-once` | a completed wall-clock run's result digest equals the serial kernel's bit-for-bit, and exactly N first completions were recorded — no lost and no double-counted iteration, even with rDLB duplicates and duplicated frames |
 //! | `stats-identities` | the [`MasterStats`](crate::coordinator::MasterStats) conservation identities hold (assigned = completed + lost, executed ≤ assigned, …) |
 //! | `refused-accounting` | stale-version churners are counted in `refused_workers`, are never scheduled, and a worker reports `failed` only if a fail-stop was injected (net runtime) |

@@ -15,7 +15,10 @@
 //!   schedules: fail-stop up to P−1 workers (including mid-chunk),
 //!   slowdown/latency perturbations, late-joining and stale-version
 //!   churning workers, and — net only — frame drop/duplicate/delay via
-//!   [`crate::net::FaultInjectingTransport`];
+//!   [`crate::net::FaultInjectingTransport`] plus an opt-in mid-run
+//!   master kill/resume (`--master-kill`: the coordinator dies after a
+//!   seeded number of results and is rebuilt by replaying its event
+//!   journal, exercising the crash-recovery path end to end);
 //! * [`run`] — executes a drawn [`ChaosScenario`] on every applicable
 //!   runtime, producing ordinary [`crate::sim::Outcome`]s;
 //! * [`invariants`] — the oracle: exactly-once task completion (digest
@@ -187,6 +190,18 @@ pub struct ChaosScenario {
     /// [`ChaosScenario::arm_hier`] / `rdlb chaos --hier`) so campaigns
     /// without the flag keep byte-identical output across versions.
     pub hier: bool,
+    /// Net only: kill the master after this many completed chunk results,
+    /// then auto-resume it — replay the event journal into a fresh engine,
+    /// drop the dead session's in-flight work, bump the epoch, and let the
+    /// (reconnecting) workers re-register.  The recovered run must still
+    /// satisfy every invariant: completion, exactly-once digest parity and
+    /// the stats conservation identities.  Opt-in like [`hier`]
+    /// (see [`ChaosScenario::arm_master_kill`] / `rdlb chaos
+    /// --master-kill`) so campaigns without the flag keep byte-identical
+    /// output across versions.
+    ///
+    /// [`hier`]: ChaosScenario::hier
+    pub master_kill: Option<u64>,
 }
 
 impl ChaosScenario {
@@ -215,6 +230,7 @@ impl ChaosScenario {
             timeout_ms: 20_000,
             bug: None,
             hier: false,
+            master_kill: None,
         }
     }
 
@@ -230,6 +246,27 @@ impl ChaosScenario {
     /// it (no RNG draws: campaign output stays a pure function of the seed).
     pub fn arm_hier(&mut self) {
         self.hier = self.hier_capable();
+    }
+
+    /// Can a mid-run master kill/resume be injected?  Recovery re-enters
+    /// the run by re-dispatching the dead session's in-flight chunks, which
+    /// needs rDLB on; without it a kill is just a second way to hang.
+    pub fn master_kill_capable(&self) -> bool {
+        self.rdlb
+    }
+
+    /// Arm a master kill after `after_results` completed chunks when the
+    /// schedule can express it.  The kill point comes from a PRNG stream
+    /// derived off the scenario seed — never from the generator's own
+    /// stream — so arming the fault leaves every other drawn schedule (and
+    /// therefore unarmed campaign output) byte-identical.
+    pub fn arm_master_kill(&mut self) {
+        if self.master_kill_capable() {
+            let mut rng = crate::util::Rng::new(self.seed ^ 0x6B11_4D4B);
+            // Kill early: the interesting window is while chunks are still
+            // in flight, which at chaos scales means the first few results.
+            self.master_kill = Some(rng.gen_range(1, 4));
+        }
     }
 
     /// Number of injected fail-stop failures (< P by construction: worker 0
@@ -314,6 +351,9 @@ impl ChaosScenario {
         if self.hier {
             tags.push_str("+hier");
         }
+        if self.master_kill.is_some() {
+            tags.push_str("+mkill");
+        }
         format!(
             "s{}/{}/n{}/p{}/{}/{}/f{}{}",
             self.id,
@@ -344,6 +384,13 @@ impl ChaosScenario {
             anyhow::ensure!(
                 self.p >= 4 && self.p % 2 == 0,
                 "hier schedules need an even P >= 4 (2 groups of P/2)"
+            );
+        }
+        if let Some(k) = self.master_kill {
+            anyhow::ensure!(k >= 1, "master kill point must be >= 1 completed result");
+            anyhow::ensure!(
+                self.rdlb,
+                "master kill/resume needs rDLB on to re-dispatch the dead session's in-flight work"
             );
         }
         if let ChaosApp::Mandelbrot { side, max_iter } = self.app {
@@ -432,6 +479,27 @@ mod tests {
         stale.arm_hier();
         stale.faults[2].stale_version = true;
         assert_eq!(stale.runtimes(), vec![RuntimeKind::Net]);
+    }
+
+    #[test]
+    fn master_kill_arming_is_capability_gated_and_seeded() {
+        let mut sc = ChaosScenario::baseline(20, 7, 100, 4, Technique::Fac, true, 1e-4);
+        sc.arm_master_kill();
+        let k = sc.master_kill.expect("rdlb schedule arms a kill point");
+        assert!((1..=4).contains(&k), "kill point in the early window: {k}");
+        sc.validate().unwrap();
+        assert!(sc.label().contains("+mkill"), "{}", sc.label());
+        // Same seed, same kill point: arming is a pure function of the seed.
+        let mut again = ChaosScenario::baseline(21, 7, 100, 4, Technique::Fac, true, 1e-4);
+        again.arm_master_kill();
+        assert_eq!(again.master_kill, Some(k));
+        // A no-rDLB schedule cannot recover from a kill, so arming is a no-op
+        // and validation rejects a hand-armed one.
+        let mut off = ChaosScenario::baseline(22, 7, 100, 4, Technique::Fac, false, 1e-4);
+        off.arm_master_kill();
+        assert_eq!(off.master_kill, None);
+        off.master_kill = Some(2);
+        assert!(off.validate().is_err());
     }
 
     #[test]

@@ -76,6 +76,10 @@ pub fn scenario_to_json(sc: &ChaosScenario) -> Json {
         // are byte-identical to the v1 format they were written in.
         obj.push(("hier", Json::Bool(true)));
     }
+    if let Some(k) = sc.master_kill {
+        // Same byte-stability rule as `hier`: absent unless armed.
+        obj.push(("master_kill", Json::num(k as f64)));
+    }
     Json::obj(obj)
 }
 
@@ -140,6 +144,7 @@ pub fn scenario_from_json(v: &Json) -> Result<ChaosScenario> {
             Some(other) => bail!("unknown bug hook {other:?}"),
         },
         hier: v.get("hier").and_then(Json::as_bool).unwrap_or(false),
+        master_kill: v.get("master_kill").and_then(Json::as_u64),
     };
     sc.validate()?;
     Ok(sc)
@@ -192,6 +197,22 @@ mod tests {
         assert!(
             runs.iter().any(|r| r.runtime == crate::config::RuntimeKind::Hier),
             "armed reproducers must re-execute the hier runtime"
+        );
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn master_kill_roundtrips_and_replays_through_recovery() {
+        let mut sc = ChaosScenario::baseline(6, 31, 120, 4, Technique::Fac, true, 1e-4);
+        sc.arm_master_kill();
+        assert!(sc.master_kill.is_some());
+        let back = scenario_from_json_str(&scenario_to_json_string(&sc)).unwrap();
+        assert_eq!(back, sc);
+        let (_sc, runs, _checks, violations) =
+            replay_str(&scenario_to_json_string(&sc)).unwrap();
+        assert!(
+            runs.iter().any(|r| r.runtime == crate::config::RuntimeKind::Net),
+            "armed reproducers must re-execute the net kill/resume path"
         );
         assert!(violations.is_empty(), "{violations:?}");
     }

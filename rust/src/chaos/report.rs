@@ -44,6 +44,11 @@ pub struct ChaosSettings {
     /// the same output-stability reason as `hier`: it adds one check per
     /// run to the deterministic `checks` counter.
     pub journal_oracle: bool,
+    /// Kill and journal-resume the master mid-run on every kill-capable
+    /// (rDLB) schedule, at a seeded point (`rdlb chaos --master-kill`).
+    /// Off by default so `(seed, budget)` campaigns keep byte-identical
+    /// output across versions.
+    pub master_kill: bool,
 }
 
 impl ChaosSettings {
@@ -57,6 +62,7 @@ impl ChaosSettings {
             bug: None,
             hier: false,
             journal_oracle: false,
+            master_kill: false,
         }
     }
 }
@@ -120,6 +126,11 @@ pub fn run_chaos(settings: &ChaosSettings) -> Result<ChaosOutcome> {
             // No RNG draws involved: the schedule sequence is identical
             // with or without the hierarchical differential runs.
             sc.arm_hier();
+        }
+        if settings.master_kill {
+            // Kill point drawn off the scenario seed, not the generator's
+            // stream: the schedule sequence is identical with or without it.
+            sc.arm_master_kill();
         }
         // An execution error (worker panic, runtime construction failure)
         // is itself a finding — record it as a failing schedule and keep
@@ -227,6 +238,23 @@ mod tests {
         assert!(base.passed(), "{:?}", base.failures);
         assert!(a.runs >= base.runs, "arming hier can only add runtime runs");
         assert_eq!(a.scenarios, base.scenarios);
+    }
+
+    #[test]
+    fn master_kill_campaign_survives_recovery_and_stays_deterministic() {
+        let mut settings = quiet(5, 8);
+        settings.master_kill = true;
+        let a = run_chaos(&settings).unwrap();
+        let b = run_chaos(&settings).unwrap();
+        assert!(a.passed(), "{:?}", a.failures);
+        assert_eq!(a.summary(), b.summary(), "kill campaigns must stay seed-deterministic");
+        // Arming the kill changes neither the drawn schedules nor which
+        // runtimes run — only what the net run endures.
+        let base = run_chaos(&quiet(5, 8)).unwrap();
+        assert!(base.passed(), "{:?}", base.failures);
+        assert_eq!(a.scenarios, base.scenarios);
+        assert_eq!(a.runs, base.runs);
+        assert_eq!(a.checks, base.checks);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! The native runtime covers the envelope subset; the simulator covers
 //! pure fail-stop/baseline schedules in virtual time.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -15,14 +16,16 @@ use anyhow::{Context, Result};
 
 use crate::apps::{AppKind, CostModel, MandelbrotApp};
 use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
-use crate::coordinator::SharedSink;
+use crate::coordinator::{
+    Effect, Engine, EngineEvent, EventSink, MasterConfig, MultiSink, ResultNotes, SharedSink,
+};
 use crate::hier::{HierParams, HierRuntime};
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
 use crate::net::{
     run_worker, FaultInjectingTransport, FaultSpec, Frame, LoopbackTransport, NetMaster,
     NetMasterParams, Transport, WorkerHello, WorkerReport, PROTOCOL_VERSION,
 };
-use crate::obs::JournalSink;
+use crate::obs::{read_journal, JournalSink};
 use crate::sim::{Outcome, SimCluster};
 use crate::util::Rng;
 
@@ -190,9 +193,77 @@ fn run_hier(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Outcome> {
     HierRuntime::new(params)?.run()
 }
 
+/// One chaos worker on its own thread: late-join delay, optional wire
+/// wrapping (never on worker 0 — one pristine worker guarantees progress,
+/// so rDLB completion stays a theorem, not a race), stale-version churn,
+/// then the ordinary worker loop.  `wire_salt` decorrelates the seeded
+/// wire-fault pattern between a killed master's sessions (0 for session 1,
+/// so pre-feature runs draw identical patterns).
+fn spawn_chaos_worker(
+    sc: &ChaosScenario,
+    w: usize,
+    worker_end: LoopbackTransport,
+    backend: &ComputeBackend,
+    wire_salt: u64,
+) -> std::thread::JoinHandle<Result<WorkerReport>> {
+    let fault = sc.faults[w].clone();
+    let wire = sc.wire.clone();
+    let b = backend.clone();
+    let seed = sc.seed;
+    std::thread::spawn(move || -> Result<WorkerReport> {
+        if fault.join_after > 0.0 {
+            // Late joiner: the master must absorb mid-run registration.
+            std::thread::sleep(Duration::from_secs_f64(fault.join_after));
+        }
+        let transport: Box<dyn Transport> = if w > 0 && !wire.is_quiet() {
+            Box::new(FaultInjectingTransport::new(
+                Box::new(worker_end),
+                wire.plan(seed ^ (w as u64).wrapping_mul(0x9E37_79B9) ^ wire_salt),
+            ))
+        } else {
+            Box::new(worker_end)
+        };
+        if fault.stale_version {
+            // Churning peer: wrong protocol version, expects Terminate.
+            let (mut tx, mut rx) = transport.split()?;
+            tx.send(&Frame::Hello(WorkerHello {
+                version: PROTOCOL_VERSION.wrapping_sub(1),
+                backend: "chaos-stale".into(),
+            }))?;
+            let _ = rx.recv(); // Terminate (or shutdown close)
+            return Ok(WorkerReport { worker: w as u32, ..WorkerReport::default() });
+        }
+        run_worker(transport, b, "chaos")
+    })
+}
+
+/// Join chaos worker threads into per-worker reports, in worker order.
+fn collect_reports(
+    joins: Vec<std::thread::JoinHandle<Result<WorkerReport>>>,
+) -> Result<Vec<WorkerReport>> {
+    let mut reports = Vec::with_capacity(joins.len());
+    for (w, join) in joins.into_iter().enumerate() {
+        match join.join() {
+            Ok(Ok(report)) => reports.push(report),
+            Ok(Err(_)) => {
+                // A worker that errored out (e.g. a late joiner whose
+                // registration raced the end of the run) is, to the master,
+                // indistinguishable from a fail-stop; record an empty
+                // report — the invariants judge the outcome, not the error.
+                reports.push(WorkerReport { worker: w as u32, ..WorkerReport::default() });
+            }
+            Err(_) => anyhow::bail!("chaos net worker {w} panicked"),
+        }
+    }
+    Ok(reports)
+}
+
 /// The full-surface net execution: one loopback connection per worker,
 /// each worker on its own thread.
 fn run_net(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<RuntimeRun> {
+    if sc.master_kill.is_some() {
+        return run_net_with_kill(sc, sink);
+    }
     let p = sc.p;
     let backend = backend(sc);
     let mut params = NetMasterParams::new(sc.n, p, sc.technique, sc.rdlb);
@@ -213,55 +284,155 @@ fn run_net(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<RuntimeRun> {
     for w in 0..p {
         let (master_end, worker_end) = LoopbackTransport::pair();
         connections.push(Box::new(master_end));
-        let fault = sc.faults[w].clone();
-        let wire = sc.wire.clone();
-        let b = backend.clone();
-        let seed = sc.seed;
-        joins.push(std::thread::spawn(move || -> Result<WorkerReport> {
-            if fault.join_after > 0.0 {
-                // Late joiner: the master must absorb mid-run registration.
-                std::thread::sleep(Duration::from_secs_f64(fault.join_after));
-            }
-            // Worker 0 is never wrapped: one pristine worker guarantees
-            // progress, so rDLB completion stays a theorem, not a race.
-            let transport: Box<dyn Transport> = if w > 0 && !wire.is_quiet() {
-                Box::new(FaultInjectingTransport::new(
-                    Box::new(worker_end),
-                    wire.plan(seed ^ (w as u64).wrapping_mul(0x9E37_79B9)),
-                ))
-            } else {
-                Box::new(worker_end)
-            };
-            if fault.stale_version {
-                // Churning peer: wrong protocol version, expects Terminate.
-                let (mut tx, mut rx) = transport.split()?;
-                tx.send(&Frame::Hello(WorkerHello {
-                    version: PROTOCOL_VERSION.wrapping_sub(1),
-                    backend: "chaos-stale".into(),
-                }))?;
-                let _ = rx.recv(); // Terminate (or shutdown close)
-                return Ok(WorkerReport { worker: w as u32, ..WorkerReport::default() });
-            }
-            run_worker(transport, b, "chaos")
-        }));
+        joins.push(spawn_chaos_worker(sc, w, worker_end, &backend, 0));
     }
 
     let outcome = NetMaster::new(params)?.run(connections)?;
-    let mut reports = Vec::with_capacity(p);
-    for (w, join) in joins.into_iter().enumerate() {
-        match join.join() {
-            Ok(Ok(report)) => reports.push(report),
-            Ok(Err(_)) => {
-                // A worker that errored out (e.g. a late joiner whose
-                // registration raced the end of the run) is, to the master,
-                // indistinguishable from a fail-stop; record an empty
-                // report — the invariants judge the outcome, not the error.
-                reports.push(WorkerReport { worker: w as u32, ..WorkerReport::default() });
+    let reports = collect_reports(joins)?;
+    Ok(RuntimeRun { runtime: RuntimeKind::Net, outcome, reports, journal: None })
+}
+
+/// Flips `flag` once `remaining` completed-chunk results have flowed
+/// through the engine — the seeded "kill -9 the master" moment of a
+/// [`ChaosScenario::master_kill`] schedule.  A read-only tap like every
+/// sink: it never touches the engine; it only tells the session loop to
+/// stop, exactly as a real kill stops `rdlb serve` between frames.
+struct KillSwitchSink {
+    remaining: u64,
+    flag: Arc<AtomicBool>,
+}
+
+impl EventSink for KillSwitchSink {
+    fn record(
+        &mut self,
+        _scope: u32,
+        _now: f64,
+        event: &EngineEvent<'_>,
+        _effects: &[Effect],
+        notes: &ResultNotes,
+    ) {
+        if matches!(event, EngineEvent::ResultReceived { .. })
+            && notes.completed_chunks > 0
+            && self.remaining > 0
+        {
+            self.remaining -= 1;
+            if self.remaining == 0 {
+                self.flag.store(true, Ordering::Relaxed);
             }
-            Err(_) => anyhow::bail!("chaos net worker {w} panicked"),
         }
     }
-    Ok(RuntimeRun { runtime: RuntimeKind::Net, outcome, reports, journal: None })
+}
+
+/// The master-kill net execution: run a session until the kill switch
+/// fires, throw the live engine away, rebuild it by replaying the event
+/// journal (the in-process equivalent of `rdlb serve --resume` after a
+/// `kill -9`), drop the dead session's in-flight work, bump the epoch, and
+/// let the workers reconnect over fresh pairs into a second session.  The
+/// returned outcome is the recovered run's — its digest, completion and
+/// (cumulative) stats face the same invariant oracle as any other run.
+fn run_net_with_kill(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<RuntimeRun> {
+    let kill_after = sc.master_kill.context("run_net_with_kill without an armed kill")?;
+    let p = sc.p;
+    let backend = backend(sc);
+    let mut params = NetMasterParams::new(sc.n, p, sc.technique, sc.rdlb);
+    params.tech_params.seed = sc.seed ^ 0x4A4D;
+    params.timeout = Duration::from_millis(sc.timeout_ms);
+    params.test_drop_one_redispatch = matches!(sc.bug, Some(BugHook::DropOneRedispatch));
+    for (w, fault) in sc.faults.iter().enumerate() {
+        params.faults[w] = FaultSpec {
+            fail_after: fault.fail_after,
+            slowdown: fault.slowdown,
+            latency: fault.latency,
+        };
+    }
+
+    // The crash journal: what a `--journal-dir` master would have fsync'd
+    // by the kill point.  Recovery rebuilds the engine from these bytes
+    // alone — the live engine is deliberately discarded.
+    let crash_journal: Arc<Mutex<JournalSink>> = Arc::new(Mutex::new(JournalSink::new()));
+    let killed = Arc::new(AtomicBool::new(false));
+    let mut multi = MultiSink::new();
+    if let Some(s) = sink {
+        multi.push(Box::new(s));
+    }
+    multi.push(Box::new(SharedSink::from_arc(crash_journal.clone())));
+    multi.push(Box::new(KillSwitchSink { remaining: kill_after, flag: killed.clone() }));
+    params.sink = Some(SharedSink::new(multi));
+
+    let cfg = MasterConfig {
+        n: sc.n,
+        p,
+        technique: sc.technique,
+        params: params.tech_params.clone(),
+        rdlb: sc.rdlb,
+    };
+    let mut engine = Engine::new(cfg.clone());
+    if params.test_drop_one_redispatch {
+        engine.arm_test_drop_one_redispatch();
+    }
+    let master = NetMaster::new(params)?;
+
+    // Session 1: until the kill switch fires — or to completion, when a
+    // small schedule legitimately outruns its kill point.
+    let mut transports: Vec<Option<Box<dyn Transport>>> = Vec::with_capacity(p);
+    let mut joins = Vec::with_capacity(p);
+    for w in 0..p {
+        let (master_end, worker_end) = LoopbackTransport::pair();
+        transports.push(Some(Box::new(master_end)));
+        joins.push(spawn_chaos_worker(sc, w, worker_end, &backend, 0));
+    }
+    let (outcome1, live) = master.run_session(engine, transports, Some(&killed))?;
+    let mut reports = collect_reports(joins)?;
+
+    if !killed.load(Ordering::Relaxed) || outcome1.completed() || outcome1.hung {
+        // No mid-run kill happened: an ordinary net run.
+        return Ok(RuntimeRun { runtime: RuntimeKind::Net, outcome: outcome1, reports, journal: None });
+    }
+
+    // "kill -9": rebuild purely from the journal and demand bit-identical
+    // state (the snapshot codec is the engine-equality oracle), then do
+    // what `rdlb serve --resume` does to re-enter the run.
+    let bytes = crash_journal.lock().unwrap_or_else(|e| e.into_inner()).bytes().to_vec();
+    let records = read_journal(&bytes).context("master-kill: crash journal unreadable")?;
+    let mut recovered =
+        Engine::replay(cfg, &records).context("master-kill: journal replay failed")?;
+    anyhow::ensure!(
+        recovered.snapshot() == live.snapshot(),
+        "master-kill: replayed engine diverges from the live engine at the kill point"
+    );
+    drop(live);
+    recovered.mark_all_in_flight_lost();
+    recovered.bump_epoch();
+
+    // Session 2: workers reconnect over fresh pairs and re-Hello into the
+    // new epoch.  Stale churners were already refused and left for good —
+    // their slot stays empty, so the refusal counter is not double-bumped.
+    let mut transports2: Vec<Option<Box<dyn Transport>>> = Vec::with_capacity(p);
+    let mut joins2: Vec<Option<std::thread::JoinHandle<Result<WorkerReport>>>> =
+        Vec::with_capacity(p);
+    for w in 0..p {
+        if sc.faults[w].stale_version {
+            transports2.push(None);
+            joins2.push(None);
+            continue;
+        }
+        let (master_end, worker_end) = LoopbackTransport::pair();
+        transports2.push(Some(Box::new(master_end)));
+        joins2.push(Some(spawn_chaos_worker(sc, w, worker_end, &backend, 0xEC40_0517)));
+    }
+    let (outcome2, _recovered) = master.run_session(recovered, transports2, None)?;
+    for (w, join) in joins2.into_iter().enumerate() {
+        let Some(join) = join else { continue };
+        let r2 = match join.join() {
+            Ok(Ok(report)) => report,
+            Ok(Err(_)) => WorkerReport { worker: w as u32, ..WorkerReport::default() },
+            Err(_) => anyhow::bail!("chaos net worker {w} panicked after resume"),
+        };
+        reports[w].chunks += r2.chunks;
+        reports[w].iterations += r2.iterations;
+        reports[w].failed |= r2.failed;
+    }
+    Ok(RuntimeRun { runtime: RuntimeKind::Net, outcome: outcome2, reports, journal: None })
 }
 
 #[cfg(test)]
@@ -317,6 +488,51 @@ mod tests {
                 run.runtime
             );
         }
+    }
+
+    #[test]
+    fn master_kill_recovers_with_digest_parity_and_conserved_stats() {
+        // A workload long enough that the kill lands mid-run: the master
+        // dies after 2 completed chunks, replays its journal, drops the
+        // dead session's in-flight chunks, and the reconnected workers
+        // finish the run under epoch 1.
+        let mut sc = ChaosScenario::baseline(30, 41, 160, 4, Technique::Fac, true, 5e-4);
+        sc.master_kill = Some(2);
+        let runs = execute_scenario(&sc).unwrap();
+        let net = runs.iter().find(|r| r.runtime == RuntimeKind::Net).unwrap();
+        assert!(net.outcome.completed(), "{:?}", net.outcome);
+        assert_eq!(net.outcome.finished, 160);
+        assert_eq!(
+            net.outcome.result_digest,
+            expected_digest(&sc),
+            "recovery must preserve exactly-once digest parity"
+        );
+        assert_eq!(net.outcome.stats.finished_iterations, 160);
+        assert_eq!(
+            net.outcome.stats.identity_violations(),
+            Vec::<String>::new(),
+            "cumulative stats must stay conserved across the kill"
+        );
+        // The kill genuinely dropped in-flight work: rDLB re-dispatched it.
+        assert!(
+            net.outcome.stats.lost_chunks() > 0,
+            "kill at 2 completed chunks must strand in-flight work: {:?}",
+            net.outcome.stats
+        );
+    }
+
+    #[test]
+    fn master_kill_with_worker_failures_still_completes() {
+        // Crash recovery composed with the paper's fail-stop schedule: a
+        // worker dies in the pre-kill session, the master then dies too,
+        // and the resumed session still drives the run to digest parity.
+        let mut sc = ChaosScenario::baseline(31, 43, 160, 4, Technique::Gss, true, 5e-4);
+        sc.faults[2].fail_after = Some(sc.est_makespan() * 0.2);
+        sc.master_kill = Some(1);
+        let runs = execute_scenario(&sc).unwrap();
+        let net = runs.iter().find(|r| r.runtime == RuntimeKind::Net).unwrap();
+        assert!(net.outcome.completed(), "{:?}", net.outcome);
+        assert_eq!(net.outcome.result_digest, expected_digest(&sc));
     }
 
     #[test]

@@ -64,6 +64,19 @@ fn candidates(sc: &ChaosScenario) -> Vec<ChaosScenario> {
         c.hier = false;
         out.push(c);
     }
+    // Likewise a failure that reproduces without the mid-run master
+    // kill/resume is simpler; a recovery-only failure keeps the kill but
+    // tries to tighten it toward the first completed result.
+    if let Some(k) = sc.master_kill {
+        let mut c = sc.clone();
+        c.master_kill = None;
+        out.push(c);
+        if k > 1 {
+            let mut c = sc.clone();
+            c.master_kill = Some(k / 2);
+            out.push(c);
+        }
+    }
     if let ChaosApp::Mandelbrot { .. } = sc.app {
         let mut c = sc.clone();
         c.app = ChaosApp::Synthetic;
@@ -214,6 +227,21 @@ mod tests {
         assert!(cs.iter().any(|c| !c.hier && c.p == 6), "drop-hier candidate present");
         // The odd single-drop candidate cannot survive while armed.
         assert!(cs.iter().all(|c| !(c.hier && c.p == 5)));
+        for c in &cs {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn master_kill_candidates_drop_or_tighten_the_kill() {
+        let mut sc = ChaosScenario::baseline(4, 9, 100, 4, Technique::Fac, true, 1e-4);
+        sc.master_kill = Some(4);
+        let cs = candidates(&sc);
+        assert!(cs.iter().any(|c| c.master_kill.is_none()), "drop-kill candidate present");
+        assert!(
+            cs.iter().any(|c| c.master_kill == Some(2)),
+            "tighten-kill candidate halves the kill point"
+        );
         for c in &cs {
             c.validate().unwrap();
         }

@@ -16,10 +16,11 @@
 //!                  --artifacts DIR --failures F --tasks N]
 //! rdlb serve      [--listen ADDR] [--workers P | --spawn-local P] [--app A --technique T]
 //!                 [--rdlb | --no-rdlb] [--failures K --horizon S] [--tasks N --timeout S]
-//!                 [--metrics-every SECS]
+//!                 [--metrics-every SECS] [--journal-dir DIR | --resume DIR]
 //! rdlb worker     --connect ADDR [--app A --backend native|pjrt --artifacts DIR]
+//!                 [--reconnect S]
 //! rdlb bench      [--scale smoke|quick|full] [--runtimes sim,native,net,hier] ...
-//! rdlb chaos      [--seed K] [--budget quick|deep|N] [--hier] [--journal-oracle] ... | --replay FILE
+//! rdlb chaos      [--seed K] [--budget quick|deep|N] [--hier] [--journal-oracle] [--master-kill] ... | --replay FILE
 //! ```
 
 use std::net::TcpListener;
@@ -35,7 +36,7 @@ use crate::bench::{
 };
 use crate::chaos::{self, ChaosBudget, ChaosSettings};
 use crate::config::{ExperimentConfig, NetSettings, RuntimeKind, Scenario};
-use crate::coordinator::SharedSink;
+use crate::coordinator::{Engine, SharedSink};
 use crate::dls::Technique;
 use crate::experiments::{
     cells_to_csv, conceptual_trace, fig3_failures, fig3_perturbations, fig4_resilience,
@@ -43,13 +44,17 @@ use crate::experiments::{
     theory_validation, ConceptualScenario, Scale,
 };
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
-use crate::net::{run_worker, serve_tcp, NetMasterParams, TcpTransport};
+use crate::net::{
+    bind_reusable, run_worker, run_worker_reconnecting, serve_tcp, serve_tcp_session, wal,
+    NetMasterParams, TcpTransport,
+};
 use crate::obs::{
     self, chrome_trace, read_journal, replay_stats, replay_trace, JournalSink, MetricsRegistry,
     MetricsSink, TraceSink,
 };
 use crate::runtime::ComputeService;
 use crate::util::cli::Args;
+use crate::util::signal;
 
 const USAGE: &str = "\
 rdlb — robust dynamic load balancing (Mohammed, Cavelan, Ciorba 2019) reproduction
@@ -73,14 +78,16 @@ USAGE:
                   [--app mandelbrot|psia] [--technique T] [--rdlb | --no-rdlb]
                   [--failures K] [--horizon S] [--tasks N] [--timeout S]
                   [--max-iter I] [--metrics-every SECS]
+                  [--journal-dir DIR | --resume DIR]
   rdlb worker     [--config FILE] --connect ADDR [--app mandelbrot|psia]
                   [--backend native|pjrt] [--artifacts DIR] [--max-iter I]
-                  [--retry-connect S]
+                  [--retry-connect S] [--reconnect S]
   rdlb bench      [--scale smoke|quick|full] [--seed K] [--runtimes sim,native,net,hier]
                   [--out FILE] [--compare BASELINE.json] [--threshold FRAC]
                   [--wall-threshold FRAC] [--events-threshold FRAC] [--quiet]
   rdlb chaos      [--seed K] [--budget quick|deep|N] [--out-dir DIR]
-                  [--shrink-budget N] [--hier] [--journal-oracle] [--quiet]
+                  [--shrink-budget N] [--hier] [--journal-oracle]
+                  [--master-kill] [--quiet]
   rdlb chaos      --replay FILE
 
 `run --runtime hier` executes the scenario on the two-level hierarchical
@@ -107,7 +114,10 @@ applicable runtimes (sim/native/net, plus hier with --hier) and checks an
 invariant oracle: exactly-once completion (digest parity with the serial
 kernel), cross-runtime digest agreement, completion despite <=P-1 failures
 with rDLB on, documented hang-at-timeout with rDLB off, and the
-MasterStats accounting identities. Failing schedules are shrunk to a
+MasterStats accounting identities. `--master-kill` additionally kills the
+net master at a seeded point mid-run and resumes it by replaying its event
+journal (the in-process twin of `serve --resume` after a kill -9); the
+recovered run faces the same oracle. Failing schedules are shrunk to a
 minimal JSON reproducer (chaos_failure_<id>.json) that `--replay FILE`
 re-executes deterministically. Output is seed-deterministic; exits non-zero
 on any violation. See TESTING.md.
@@ -120,6 +130,18 @@ processes against an ephemeral port for a one-command end-to-end run;
 paper's §4 scenarios across real OS processes). `--metrics-every SECS`
 prints a Prometheus-text metrics snapshot (engine events/s, latency
 histograms) on that cadence.
+
+With `--journal-dir DIR` the serve master write-ahead journals every
+engine event into DIR (one fsync'd append per record). A master killed
+mid-run — `kill -9` included — restarts with `rdlb serve --resume DIR`:
+the journal (or snapshot + suffix) replays into the exact pre-crash
+engine state, the dead session's in-flight chunks drop back to the pool,
+and the run re-enters under a new epoch on the same listen address.
+Workers run with `--reconnect S` ride out the crash and re-register;
+results stamped with a pre-crash epoch are dropped, preserving
+exactly-once digest parity. SIGINT/SIGTERM stop a journaled master
+gracefully (snapshot written, workers left alive to reconnect). See
+PROTOCOL.md appendix C and README §Crash recovery.
 
 Observability (see ARCHITECTURE.md §Observability): every runtime drives
 the same sans-I/O engine, so `run --journal FILE` records the complete
@@ -537,6 +559,15 @@ fn load_config(args: &Args) -> Result<Option<ExperimentConfig>> {
 /// from `--config FILE` (its `net` block supplies listen / spawn_local /
 /// timeout) with flags taking precedence.
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(dir) = args.get("resume") {
+        anyhow::ensure!(
+            args.get("journal-dir").is_none(),
+            "--journal-dir and --resume are mutually exclusive \
+             (--resume keeps journaling into its own directory)"
+        );
+        let dir = PathBuf::from(dir);
+        return cmd_serve_resume(args, &dir);
+    }
     let file = load_config(args)?;
     let net = file.as_ref().map(|c| c.net.clone()).unwrap_or_default();
     let app = match args.get("app") {
@@ -606,6 +637,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "--tasks must be in 1..={n_default} for {app} (workers size their kernel to it)"
     );
 
+    // --journal-dir DIR: arm the write-ahead state directory so this run
+    // can be killed and resumed (see `net::wal`).
+    let wal_dir = args.get("journal-dir").map(PathBuf::from);
+
     let listener =
         TcpListener::bind(&listen).with_context(|| format!("bind listener on {listen}"))?;
     let addr = listener.local_addr()?;
@@ -625,54 +660,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
-    // --metrics-every SECS: tap the engine with a MetricsSink and print a
-    // Prometheus snapshot (plus a frames/s rate derived by diffing
-    // rdlb_events_total between snapshots) on that cadence.  The printer
-    // thread is spawn-and-forget: it dies with the process once the run's
-    // RESULT line is out.
-    let metrics_every = args.u64_or("metrics-every", 0)?;
-    let registry = (metrics_every > 0).then(|| Arc::new(Mutex::new(MetricsRegistry::new())));
-    if let Some(r) = &registry {
-        params.sink = Some(SharedSink::new(MetricsSink::new(r.clone())));
-        let reg = Arc::clone(r);
-        let every = Duration::from_secs(metrics_every);
-        std::thread::spawn(move || {
-            let mut last_events = 0u64;
-            loop {
-                std::thread::sleep(every);
-                let snapshot = reg.lock().unwrap_or_else(|e| e.into_inner()).clone();
-                let events = snapshot.counter("rdlb_events_total");
-                println!(
-                    "metrics: {:.1} engine events/s over the last {}s",
-                    (events.saturating_sub(last_events)) as f64 / every.as_secs_f64(),
-                    every.as_secs()
-                );
-                print!("{}", snapshot.to_prometheus());
-                last_events = events;
-            }
-        });
+    arm_metrics(args, &mut params)?;
+
+    if let Some(dir) = &wal_dir {
+        let meta = wal::WalMeta {
+            app,
+            technique,
+            n,
+            workers,
+            rdlb,
+            max_iter,
+            timeout_secs: timeout.as_secs(),
+            listen: addr.to_string(),
+            epoch: 0,
+        };
+        let journal = wal::create(dir, &meta)?;
+        params.sink = Some(obs::with_extra_sink(params.sink.take(), journal));
+        println!(
+            "serve: write-ahead journal at {} (after a crash: rdlb serve --resume {})",
+            dir.display(),
+            dir.display()
+        );
+        let engine = Engine::new(meta.master_config());
+        let mut children = match spawn_local {
+            // Journaled children get a reconnect window: they must ride out
+            // a master kill and re-Hello into the resumed session.
+            Some(_) => spawn_local_workers(&addr.to_string(), app, max_iter, workers, Some(60))?,
+            None => Vec::new(),
+        };
+        let shutdown = signal::install_shutdown_handler();
+        let t0 = Instant::now();
+        let result = serve_tcp_session(
+            listener,
+            params,
+            timeout.max(Duration::from_secs(30)),
+            engine,
+            Some(shutdown),
+            false,
+        );
+        for child in &mut children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        let (outcome, engine) = result?;
+        let covered = wal::snapshot_now(dir, &engine)?;
+        if signal::shutdown_requested() && !engine.is_complete() {
+            println!(
+                "serve: shutdown — {covered} journal records + snapshot saved to {}; \
+                 finish with `rdlb serve --resume {}`",
+                dir.display(),
+                dir.display()
+            );
+            return Ok(());
+        }
+        print_serve_result(&outcome, timeout, t0);
+        return Ok(());
     }
 
-    let mut children = Vec::new();
-    if spawn_local.is_some() {
-        let exe = std::env::current_exe().context("resolve current executable")?;
-        for i in 0..workers {
-            let child = std::process::Command::new(&exe)
-                .arg("worker")
-                .arg("--connect")
-                .arg(addr.to_string())
-                .arg("--app")
-                .arg(app.name().to_ascii_lowercase())
-                .arg("--max-iter")
-                .arg(max_iter.to_string())
-                .arg("--retry-connect")
-                .arg("10")
-                .spawn()
-                .with_context(|| format!("spawn local worker {i}"))?;
-            children.push(child);
-        }
-        println!("serve: spawned {workers} local worker processes");
-    }
+    let mut children = match spawn_local {
+        Some(_) => spawn_local_workers(&addr.to_string(), app, max_iter, workers, None)?,
+        None => Vec::new(),
+    };
 
     let t0 = Instant::now();
     let result = serve_tcp(listener, params, timeout.max(Duration::from_secs(30)));
@@ -683,7 +731,161 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let _ = child.wait();
     }
     let outcome = result?;
+    print_serve_result(&outcome, timeout, t0);
+    Ok(())
+}
 
+/// `rdlb serve --resume DIR`: recover a crashed (or signal-stopped)
+/// journaled run.  The state directory is authoritative for every run
+/// parameter (only `--timeout`, `--metrics-every` and `--spawn-local` are
+/// honoured as flags), and the original listen address is re-bound with
+/// `SO_REUSEADDR` so surviving workers reconnect to the address they
+/// already know.
+fn cmd_serve_resume(args: &Args, dir: &Path) -> Result<()> {
+    let r = wal::resume(dir)?;
+    let meta = r.meta;
+    println!(
+        "serve: resumed epoch {} from {} — {} journal records recovered, \
+         {}/{} tasks already finished, {} in-flight chunks dropped for re-dispatch",
+        meta.epoch,
+        dir.display(),
+        r.replayed_records,
+        r.engine.finished_count(),
+        meta.n,
+        r.dropped_in_flight
+    );
+    if r.engine.is_complete() {
+        // The crash landed between the final journaled result and exit.
+        println!(
+            "RESULT: T_par = recovered-complete  finished={}/{} digest={:.1}",
+            r.engine.finished_count(),
+            meta.n,
+            r.engine.result_digest()
+        );
+        return Ok(());
+    }
+    let timeout = Duration::from_secs(args.u64_or("timeout", meta.timeout_secs)?);
+    let listener = bind_reusable(&meta.listen)?;
+    let addr = listener.local_addr()?;
+    println!(
+        "serve: listening on {addr} for up to {} reconnecting workers \
+         (app={}, technique={}, N={}, rdlb={}, epoch={})",
+        meta.workers, meta.app, meta.technique, meta.n, meta.rdlb, meta.epoch
+    );
+    let mut params = NetMasterParams::new(meta.n, meta.workers, meta.technique, meta.rdlb);
+    params.timeout = timeout;
+    params.sink = Some(SharedSink::new(r.journal));
+    arm_metrics(args, &mut params)?;
+
+    let mut children = Vec::new();
+    if let Some(p) = args.usize_opt("spawn-local")? {
+        anyhow::ensure!(
+            p == meta.workers,
+            "--spawn-local {p} does not match the run's {} workers",
+            meta.workers
+        );
+        children = spawn_local_workers(&addr.to_string(), meta.app, meta.max_iter, p, Some(60))?;
+    }
+    let shutdown = signal::install_shutdown_handler();
+    let t0 = Instant::now();
+    let result = serve_tcp_session(
+        listener,
+        params,
+        timeout.max(Duration::from_secs(30)),
+        r.engine,
+        Some(shutdown),
+        // A fail-stopped worker never reconnects: proceed with whoever
+        // re-registered and let rDLB re-dispatch cover the rest.
+        true,
+    );
+    for child in &mut children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    let (outcome, engine) = result?;
+    let covered = wal::snapshot_now(dir, &engine)?;
+    if signal::shutdown_requested() && !engine.is_complete() {
+        println!(
+            "serve: shutdown — {covered} journal records + snapshot saved; \
+             finish with `rdlb serve --resume {}`",
+            dir.display()
+        );
+        return Ok(());
+    }
+    print_serve_result(&outcome, timeout, t0);
+    Ok(())
+}
+
+/// `--metrics-every SECS`: tap the engine with a MetricsSink (composed
+/// with any sink already installed — e.g. the WAL journal) and print a
+/// Prometheus snapshot (plus a frames/s rate derived by diffing
+/// rdlb_events_total between snapshots) on that cadence.  The printer
+/// thread is spawn-and-forget: it dies with the process once the run's
+/// RESULT line is out.
+fn arm_metrics(args: &Args, params: &mut NetMasterParams) -> Result<()> {
+    let metrics_every = args.u64_or("metrics-every", 0)?;
+    if metrics_every == 0 {
+        return Ok(());
+    }
+    let registry = Arc::new(Mutex::new(MetricsRegistry::new()));
+    params.sink =
+        Some(obs::with_extra_sink(params.sink.take(), MetricsSink::new(registry.clone())));
+    let reg = Arc::clone(&registry);
+    let every = Duration::from_secs(metrics_every);
+    std::thread::spawn(move || {
+        let mut last_events = 0u64;
+        loop {
+            std::thread::sleep(every);
+            let snapshot = reg.lock().unwrap_or_else(|e| e.into_inner()).clone();
+            let events = snapshot.counter("rdlb_events_total");
+            println!(
+                "metrics: {:.1} engine events/s over the last {}s",
+                (events.saturating_sub(last_events)) as f64 / every.as_secs_f64(),
+                every.as_secs()
+            );
+            print!("{}", snapshot.to_prometheus());
+            last_events = events;
+        }
+    });
+    Ok(())
+}
+
+/// Fork `rdlb worker` processes against `addr` for `--spawn-local`.
+/// `reconnect_secs` is forwarded as `--reconnect` when the master journals:
+/// such workers must survive a master kill and re-Hello into the resumed
+/// session instead of exiting on the lost connection.
+fn spawn_local_workers(
+    addr: &str,
+    app: AppKind,
+    max_iter: u64,
+    workers: usize,
+    reconnect_secs: Option<u64>,
+) -> Result<Vec<std::process::Child>> {
+    let exe = std::env::current_exe().context("resolve current executable")?;
+    let mut children = Vec::with_capacity(workers);
+    for i in 0..workers {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--connect")
+            .arg(addr)
+            .arg("--app")
+            .arg(app.name().to_ascii_lowercase())
+            .arg("--max-iter")
+            .arg(max_iter.to_string())
+            .arg("--retry-connect")
+            .arg("10");
+        if let Some(s) = reconnect_secs {
+            cmd.arg("--reconnect").arg(s.to_string());
+        }
+        let child = cmd.spawn().with_context(|| format!("spawn local worker {i}"))?;
+        children.push(child);
+    }
+    println!("serve: spawned {workers} local worker processes");
+    Ok(children)
+}
+
+/// The serve RESULT line, shared by fresh and resumed runs.
+fn print_serve_result(outcome: &crate::sim::Outcome, timeout: Duration, t0: Instant) {
     if outcome.hung {
         println!(
             "RESULT: HUNG at the {}s hang bound (finished {}/{} — the paper's \
@@ -703,7 +905,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
             t0.elapsed()
         );
     }
-    Ok(())
 }
 
 /// `rdlb worker`: connect to a serving master and compute until terminated.
@@ -723,11 +924,32 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // Retry window for connection errors. 0 (the default) surfaces a wrong
     // address immediately; `serve --spawn-local` passes 10 s to its forked
     // workers to cover the master's accept loop coming up a beat late.
-    let retry = Duration::from_secs_f64(args.f64_or("retry-connect", 0.0)?.max(0.0));
+    let retry_secs = args.f64_or("retry-connect", 0.0)?.max(0.0);
+    let retry = Duration::from_secs_f64(retry_secs);
+    // --reconnect S: survive a master crash.  On a lost connection, keep
+    // re-dialing for S seconds and re-Hello into the resumed session (a
+    // journaled `serve --spawn-local` hands its workers this flag).
+    let reconnect_secs = args.f64_or("reconnect", 0.0)?.max(0.0);
 
     let mut _service_keepalive: Option<ComputeService> = None;
     let (_capacity, backend) =
         build_backend(app, &backend_kind, &artifacts, max_iter, &mut _service_keepalive)?;
+    let label = format!("{}/{}", app.name().to_ascii_lowercase(), backend_kind);
+
+    if reconnect_secs > 0.0 {
+        // The window also covers the initial connect, so it subsumes
+        // --retry-connect.
+        let window = Duration::from_secs_f64(reconnect_secs.max(retry_secs));
+        let report = run_worker_reconnecting(&connect, backend, &label, window)?;
+        println!(
+            "worker {}: {} chunks, {} iterations{}",
+            report.worker,
+            report.chunks,
+            report.iterations,
+            if report.failed { " (fail-stop injected)" } else { "" }
+        );
+        return Ok(());
+    }
 
     let deadline = Instant::now() + retry;
     let transport = loop {
@@ -742,7 +964,6 @@ fn cmd_worker(args: &Args) -> Result<()> {
         }
     };
 
-    let label = format!("{}/{}", app.name().to_ascii_lowercase(), backend_kind);
     let report = run_worker(Box::new(transport), backend, &label)?;
     println!(
         "worker {}: {} chunks, {} iterations{}",
@@ -867,6 +1088,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     settings.verbose = !args.bool_or("quiet", false)?;
     settings.hier = args.bool_or("hier", false)?;
     settings.journal_oracle = args.bool_or("journal-oracle", false)?;
+    settings.master_kill = args.bool_or("master-kill", false)?;
     let outcome = chaos::run_chaos(&settings)?;
     println!("{}", outcome.summary());
     if !outcome.passed() {

@@ -59,10 +59,15 @@
 //! driver's I/O concern; *who* is woken, and in what order, is the
 //! engine's.
 
+use anyhow::{ensure, Result};
+
 use super::assignment::{Assignment, AssignmentId};
 use super::master::{Master, MasterConfig, Reply};
 use super::sink::{EventSink, ResultNotes};
+use super::snapshot::{SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
 use super::stats::MasterStats;
+use crate::obs::{JournalEvent, JournalRecord};
+use crate::util::codec::{push_bool, push_f64, push_u16, push_u32, push_u64, Reader};
 use crate::util::ParkedSet;
 
 /// An I/O observation translated by a driver into coordinator terms.
@@ -137,6 +142,15 @@ pub enum Effect {
     Completed,
 }
 
+/// Where a result's digests come from (see [`Engine::apply_result`]).
+enum DigestSource<'a> {
+    /// A live result: per-task digest values in assignment-position order.
+    Live(&'a [f64]),
+    /// A journaled result: values were never recorded, only the count and
+    /// the delta attributed at record time.
+    Replay { digest_count: u32, digest_delta: f64 },
+}
+
 /// The runtime-agnostic coordinator state machine.  Pure: it never blocks,
 /// sleeps, reads clocks, or touches sockets/threads — drivers feed it
 /// `(now, event)` pairs and execute the effects it returns.
@@ -153,6 +167,10 @@ pub struct Engine {
     refused: u64,
     disconnects: u64,
     hung: bool,
+    /// Recovery epoch: 0 for a fresh run, bumped on every `--resume` so
+    /// results computed under a pre-crash session are recognizably stale
+    /// (the net driver stamps it into `Welcome` and checks it on `Result`).
+    epoch: u32,
     /// Observability tap (see [`super::EventSink`]); `None` by default, in
     /// which case the only cost is one branch per handled event.
     sink: Option<Box<dyn EventSink>>,
@@ -176,6 +194,7 @@ impl Engine {
             refused: 0,
             disconnects: 0,
             hung: false,
+            epoch: 0,
             sink: None,
             sink_scope: 0,
         }
@@ -207,56 +226,14 @@ impl Engine {
         match event {
             EngineEvent::WorkerRequest { worker } => self.dispatch(worker, now, out),
             EngineEvent::ResultReceived { worker, assignment_id, compute_secs, digests } => {
-                let before = self.master.stats().clone();
-                let newly = self.master.on_result(worker, assignment_id, compute_secs, now);
-                let fins = newly.len() as f64;
-                // Wall-clock results report one digest per task, so the
-                // duplicate share is everything beyond the first
-                // completions; the simulator reports no digests and the
-                // master's counter delta is used instead (identical for any
-                // well-formed result — the counter path merely also ignores
-                // unknown-id results, which the simulator cannot produce).
-                let dups = if digests.is_empty() {
-                    (self.master.stats().duplicate_iterations - before.duplicate_iterations) as f64
-                } else {
-                    (digests.len() as f64 - fins).max(0.0)
-                };
-                if dups + fins > 0.0 {
-                    self.wasted += compute_secs * dups / (dups + fins);
-                    self.useful += compute_secs * fins / (dups + fins);
-                }
-                // Exactly-once digest attribution: only positions whose
-                // completion was the FIRST one contribute.
-                let mut digest_delta = 0.0;
-                for &pos in &newly {
-                    if let Some(d) = digests.get(pos) {
-                        digest_delta += d;
-                    }
-                }
-                self.digest += digest_delta;
-                // The counter deltas attributed to this one result — what
-                // `obs::replay_stats` folds back into a `MasterStats`.
-                let after = self.master.stats();
-                notes = ResultNotes {
-                    completed_chunks: after.completed_chunks - before.completed_chunks,
-                    first_completions: after.finished_iterations - before.finished_iterations,
-                    duplicate_iterations: after.duplicate_iterations - before.duplicate_iterations,
-                    rescheduled_completions: after.rescheduled_completions
-                        - before.rescheduled_completions,
-                    unknown_results: after.unknown_results - before.unknown_results,
-                    digest_delta,
-                };
-                if self.master.is_complete() {
-                    out.push(Effect::Completed);
-                } else if !self.parked.is_empty() {
-                    // The uniform wake pass (see module docs): every parked
-                    // worker is woken on every result, in park order;
-                    // skipped entirely when nothing is parked.
-                    self.parked.drain_into(&mut self.woken);
-                    for &w in &self.woken {
-                        out.push(Effect::Wake { worker: w as usize });
-                    }
-                }
+                notes = self.apply_result(
+                    now,
+                    worker,
+                    assignment_id,
+                    compute_secs,
+                    DigestSource::Live(digests),
+                    out,
+                );
             }
             EngineEvent::WorkerDisconnected { worker: _ } => {
                 // No detection: rDLB recovers the work, or the run hangs.
@@ -275,6 +252,85 @@ impl Engine {
         if let Some(sink) = self.sink.as_mut() {
             sink.record(self.sink_scope, now, &event, &out[base..], &notes);
         }
+    }
+
+    /// The one result-application body, shared by the live path
+    /// ([`Engine::handle`]) and the crash-recovery replay path
+    /// ([`Engine::replay_records`]): master bookkeeping, useful/wasted
+    /// split, exactly-once digest attribution, then `Completed`-or-wakes.
+    /// The two paths differ only in where digests come from — live results
+    /// carry the values, journal records carry the count plus the already
+    /// attributed delta (digest *values* are never journaled).
+    fn apply_result(
+        &mut self,
+        now: f64,
+        worker: usize,
+        assignment_id: AssignmentId,
+        compute_secs: f64,
+        src: DigestSource<'_>,
+        out: &mut Vec<Effect>,
+    ) -> ResultNotes {
+        let before = self.master.stats().clone();
+        let newly = self.master.on_result(worker, assignment_id, compute_secs, now);
+        let fins = newly.len() as f64;
+        let digest_count = match src {
+            DigestSource::Live(digests) => digests.len(),
+            DigestSource::Replay { digest_count, .. } => digest_count as usize,
+        };
+        // Wall-clock results report one digest per task, so the
+        // duplicate share is everything beyond the first
+        // completions; the simulator reports no digests and the
+        // master's counter delta is used instead (identical for any
+        // well-formed result — the counter path merely also ignores
+        // unknown-id results, which the simulator cannot produce).
+        let dups = if digest_count == 0 {
+            (self.master.stats().duplicate_iterations - before.duplicate_iterations) as f64
+        } else {
+            (digest_count as f64 - fins).max(0.0)
+        };
+        if dups + fins > 0.0 {
+            self.wasted += compute_secs * dups / (dups + fins);
+            self.useful += compute_secs * fins / (dups + fins);
+        }
+        // Exactly-once digest attribution: only positions whose
+        // completion was the FIRST one contribute.
+        let digest_delta = match src {
+            DigestSource::Live(digests) => {
+                let mut delta = 0.0;
+                for &pos in &newly {
+                    if let Some(d) = digests.get(pos) {
+                        delta += d;
+                    }
+                }
+                delta
+            }
+            DigestSource::Replay { digest_delta, .. } => digest_delta,
+        };
+        self.digest += digest_delta;
+        // The counter deltas attributed to this one result — what
+        // `obs::replay_stats` folds back into a `MasterStats`.
+        let after = self.master.stats();
+        let notes = ResultNotes {
+            completed_chunks: after.completed_chunks - before.completed_chunks,
+            first_completions: after.finished_iterations - before.finished_iterations,
+            duplicate_iterations: after.duplicate_iterations - before.duplicate_iterations,
+            rescheduled_completions: after.rescheduled_completions
+                - before.rescheduled_completions,
+            unknown_results: after.unknown_results - before.unknown_results,
+            digest_delta,
+        };
+        if self.master.is_complete() {
+            out.push(Effect::Completed);
+        } else if !self.parked.is_empty() {
+            // The uniform wake pass (see module docs): every parked
+            // worker is woken on every result, in park order;
+            // skipped entirely when nothing is parked.
+            self.parked.drain_into(&mut self.woken);
+            for &w in &self.woken {
+                out.push(Effect::Wake { worker: w as usize });
+            }
+        }
+        notes
     }
 
     /// The one result-effect interpreter shared by every wall-clock driver
@@ -381,12 +437,198 @@ impl Engine {
         self.parked.as_slice()
     }
 
+    /// The configuration this engine (and its master) was built with.
+    pub fn config(&self) -> &MasterConfig {
+        self.master.config()
+    }
+
     /// The master's counters with the engine-owned refusal count folded in
     /// — the single `MasterStats` assembly point for every runtime.
     pub fn final_stats(&self) -> MasterStats {
         let mut stats = self.master.stats().clone();
         stats.refused_workers = self.refused;
         stats
+    }
+
+    // -----------------------------------------------------------------------
+    // Crash recovery: snapshot codec + event-sourced replay
+    // -----------------------------------------------------------------------
+
+    /// Recovery epoch of this engine (0 until the first resume).
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Enter the next recovery epoch.  Called once per `--resume`; results
+    /// stamped with an older epoch are stale pre-crash work and must be
+    /// dropped by the driver before they reach the engine.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// Set the recovery epoch outright.  `Engine::replay` over a journal
+    /// yields epoch 0 (the journal does not record resume boundaries); the
+    /// WAL driver restores the authoritative epoch from its meta file and
+    /// then advances it for the new session.
+    pub fn set_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
+    }
+
+    /// Drop all in-flight work and release its holds — the recovery path's
+    /// acknowledgement that the pre-crash connections died with the crash.
+    /// Also unparks every parked worker: their pending requests died with
+    /// their connections, and each reconnecting worker sends a fresh one
+    /// (a stale parked entry would later produce a spurious `Wake` and an
+    /// unsolicited assignment).  See [`Master::mark_all_in_flight_lost`];
+    /// NOT called by [`Engine::replay`] itself, which must reconstruct the
+    /// pre-crash state exactly.  Returns the number of assignments dropped.
+    pub fn mark_all_in_flight_lost(&mut self) -> usize {
+        self.parked.drain_into(&mut self.woken);
+        self.woken.clear();
+        self.master.mark_all_in_flight_lost()
+    }
+
+    /// Serialize the complete engine state (`PROTOCOL.md` appendix C):
+    /// magic, version, epoch, config, master (task table, in-flight slab,
+    /// holders, re-dispatch pool, stats, calculator state), parked order,
+    /// and the engine accumulators.  Canonical bytes: two engines in
+    /// identical states snapshot identically, so byte equality is the
+    /// engine-equality oracle the recovery tests use.  The observability
+    /// sink is deliberately not captured — drivers re-install sinks on
+    /// restore.
+    pub fn snapshot(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(256);
+        out.extend_from_slice(&SNAPSHOT_MAGIC);
+        push_u16(&mut out, SNAPSHOT_VERSION);
+        push_u32(&mut out, self.epoch);
+        self.master.snapshot_into(&mut out);
+        push_u32(&mut out, self.parked.as_slice().len() as u32);
+        for &w in self.parked.as_slice() {
+            push_u32(&mut out, w);
+        }
+        push_f64(&mut out, self.useful);
+        push_f64(&mut out, self.wasted);
+        push_f64(&mut out, self.digest);
+        push_u64(&mut out, self.refused);
+        push_u64(&mut out, self.disconnects);
+        push_bool(&mut out, self.hung);
+        out
+    }
+
+    /// Rebuild an engine from [`Engine::snapshot`] bytes (no sink installed).
+    pub fn restore(bytes: &[u8]) -> Result<Engine> {
+        ensure!(bytes.len() >= 10, "snapshot shorter than its header");
+        ensure!(bytes[..8] == SNAPSHOT_MAGIC, "not an engine snapshot (bad magic)");
+        let mut r = Reader::new(&bytes[8..]);
+        let version = r.u16()?;
+        ensure!(version == SNAPSHOT_VERSION, "unsupported snapshot version {version}");
+        let epoch = r.u32()?;
+        let master = Master::from_snapshot(&mut r)?;
+        let p = master.config().p;
+        let n_parked = r.u32()? as usize;
+        ensure!(n_parked <= p, "snapshot parks {n_parked} workers with P={p}");
+        let mut parked = ParkedSet::new(p);
+        for _ in 0..n_parked {
+            let w = r.u32()? as usize;
+            ensure!(w < p, "snapshot parked worker {w} out of range");
+            ensure!(parked.insert(w), "snapshot parks worker {w} twice");
+        }
+        let useful = r.f64()?;
+        let wasted = r.f64()?;
+        let digest = r.f64()?;
+        let refused = r.u64()?;
+        let disconnects = r.u64()?;
+        let hung = r.bool()?;
+        r.finish()?;
+        Ok(Engine {
+            master,
+            parked,
+            woken: Vec::with_capacity(p),
+            effects_scratch: Vec::with_capacity(p + 1),
+            useful,
+            wasted,
+            digest,
+            refused,
+            disconnects,
+            hung,
+            epoch,
+            sink: None,
+            sink_scope: 0,
+        })
+    }
+
+    /// Event-sourced recovery: rebuild an engine by re-running a journal's
+    /// scope-0 records against a fresh engine for `cfg`.  The journal must
+    /// come from an engine started with the same config (the write-ahead
+    /// `meta.json` pins it).  Equivalent to feeding the same events live —
+    /// pinned by `tests/engine_replay.rs`.
+    pub fn replay(cfg: MasterConfig, records: &[JournalRecord]) -> Result<Engine> {
+        let mut engine = Engine::new(cfg);
+        engine.replay_records(records)?;
+        Ok(engine)
+    }
+
+    /// Re-run journal records against this engine (scope-0 records only;
+    /// inner-group scopes belong to other engines).  Each replayed event
+    /// must regenerate exactly the effects the journal recorded — any
+    /// divergence means the journal and the engine disagree about history,
+    /// and recovery must fail loudly rather than resume from a lie.
+    ///
+    /// Replay reconstructs the *pre-crash* state exactly (including
+    /// in-flight assignments whose workers died with the crash); resuming
+    /// drivers follow up with [`Engine::mark_all_in_flight_lost`] +
+    /// [`Engine::bump_epoch`].  Install sinks only after replay — replayed
+    /// events are already journaled and must not be re-recorded.
+    pub fn replay_records(&mut self, records: &[JournalRecord]) -> Result<()> {
+        let mut out = Vec::new();
+        for (i, rec) in records.iter().enumerate() {
+            if rec.scope != 0 {
+                continue;
+            }
+            out.clear();
+            match &rec.event {
+                JournalEvent::Request { worker } => {
+                    self.handle(rec.now, EngineEvent::WorkerRequest { worker: *worker }, &mut out);
+                }
+                JournalEvent::Result { worker, assignment_id, compute_secs, digest_count } => {
+                    let notes = self.apply_result(
+                        rec.now,
+                        *worker,
+                        *assignment_id,
+                        *compute_secs,
+                        DigestSource::Replay {
+                            digest_count: *digest_count,
+                            digest_delta: rec.notes.digest_delta,
+                        },
+                        &mut out,
+                    );
+                    ensure!(
+                        notes == rec.notes,
+                        "replay diverged at record {i}: result notes {notes:?} != journaled {:?}",
+                        rec.notes
+                    );
+                }
+                JournalEvent::Disconnected { worker } => {
+                    self.handle(
+                        rec.now,
+                        EngineEvent::WorkerDisconnected { worker: *worker },
+                        &mut out,
+                    );
+                }
+                JournalEvent::Refused { worker } => {
+                    self.handle(rec.now, EngineEvent::VersionRefused { worker: *worker }, &mut out);
+                }
+                JournalEvent::Timeout => {
+                    self.handle(rec.now, EngineEvent::Timeout, &mut out);
+                }
+            }
+            ensure!(
+                out == rec.effects,
+                "replay diverged at record {i}: regenerated effects {out:?} != journaled {:?}",
+                rec.effects
+            );
+        }
+        Ok(())
     }
 }
 
@@ -537,6 +779,100 @@ mod tests {
         );
         done.handle(5.0, EngineEvent::Timeout, &mut out);
         assert!(!done.hung());
+    }
+
+    #[test]
+    fn snapshot_round_trips_mid_run_and_resumes_identically() {
+        let mut e = engine(64, 3, Technique::Fac, true);
+        let mut out = Vec::new();
+        // Drive a partial run: several assigns, one result, one park.
+        let mut ids = Vec::new();
+        for w in 0..3 {
+            match one(&mut e, 0.1 * w as f64, EngineEvent::WorkerRequest { worker: w }) {
+                Effect::Assign(a) => ids.push(a),
+                other => panic!("{other:?}"),
+            }
+        }
+        let d: Vec<f64> = ids[1].tasks.iter().map(|t| t as f64).collect();
+        e.handle(
+            0.5,
+            EngineEvent::ResultReceived {
+                worker: 1,
+                assignment_id: ids[1].id,
+                compute_secs: 0.3,
+                digests: &d,
+            },
+            &mut out,
+        );
+        e.handle(0.6, EngineEvent::WorkerDisconnected { worker: 2 }, &mut out);
+        let snap = e.snapshot();
+        let mut restored = Engine::restore(&snap).unwrap();
+        assert_eq!(restored.snapshot(), snap, "snapshot bytes must be canonical");
+        assert_eq!(restored.final_stats(), e.final_stats());
+        assert_eq!(restored.result_digest().to_bits(), e.result_digest().to_bits());
+        assert_eq!(restored.parked(), e.parked());
+        assert_eq!(restored.disconnects(), e.disconnects());
+        // Both engines must now behave identically.
+        let eff_live = one(&mut e, 1.0, EngineEvent::WorkerRequest { worker: 1 });
+        let eff_rest = one(&mut restored, 1.0, EngineEvent::WorkerRequest { worker: 1 });
+        assert_eq!(eff_live, eff_rest);
+        assert_eq!(restored.snapshot(), e.snapshot());
+    }
+
+    #[test]
+    fn restore_rejects_garbage() {
+        assert!(Engine::restore(b"short").is_err());
+        assert!(Engine::restore(b"NOTASNAPxxxxxxxxxxxx").is_err());
+        let mut e = engine(8, 2, Technique::Ss, true);
+        let _ = one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 0 });
+        let snap = e.snapshot();
+        assert!(Engine::restore(&snap[..snap.len() - 1]).is_err(), "truncation");
+        let mut trailing = snap.clone();
+        trailing.push(0);
+        assert!(Engine::restore(&trailing).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn mark_all_in_flight_lost_unblocks_redispatch() {
+        // Worker 0 takes everything and "crashes"; after the recovery path
+        // drops the in-flight work, worker 0 itself (reconnected) can be
+        // re-served the tasks it previously held — without the drop, the
+        // holder rule would Wait forever (the P=1 resume hang).
+        let mut e = engine(4, 2, Technique::Gss, true);
+        let a = match one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 0 }) {
+            Effect::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        while !matches!(
+            one(&mut e, 0.0, EngineEvent::WorkerRequest { worker: 0 }),
+            Effect::Park { .. }
+        ) {}
+        let snap = e.snapshot();
+        let mut r = Engine::restore(&snap).unwrap();
+        assert!(r.mark_all_in_flight_lost() > 0);
+        r.bump_epoch();
+        assert_eq!(r.epoch(), 1);
+        // The reconnected worker 0 gets its own lost tasks back.
+        match one(&mut r, 1.0, EngineEvent::WorkerRequest { worker: 0 }) {
+            Effect::Assign(b) => {
+                assert!(b.rescheduled);
+                assert!(b.tasks.iter().all(|t| a.tasks.contains(t) || t >= a.tasks.len() as u32));
+            }
+            other => panic!("expected redispatch after loss, got {other:?}"),
+        }
+        // Stale result for the dropped assignment: absorbed as unknown.
+        let mut out = Vec::new();
+        r.handle(
+            1.1,
+            EngineEvent::ResultReceived {
+                worker: 0,
+                assignment_id: a.id,
+                compute_secs: 0.1,
+                digests: &[],
+            },
+            &mut out,
+        );
+        assert_eq!(r.final_stats().unknown_results, 1);
     }
 
     #[test]

@@ -16,10 +16,14 @@
 
 use std::collections::{HashSet, VecDeque};
 
+use anyhow::{ensure, Result};
+
 use super::assignment::{Assignment, AssignmentId, TaskSet};
+use super::snapshot::{push_config, push_task_set, read_config, read_task_set};
 use super::stats::MasterStats;
 use super::task_table::{TaskFlag, TaskTable};
 use crate::dls::{ChunkCalculator, ChunkFeedback, SchedCtx, Technique, TechniqueParams};
+use crate::util::codec::{push_bool, push_bytes, push_f64, push_u32, push_u64, Reader};
 
 /// Master construction parameters.
 #[derive(Debug, Clone)]
@@ -316,6 +320,184 @@ impl Master {
             rescheduled,
         }));
         Assignment { id, worker, tasks, rescheduled }
+    }
+
+    /// Drop every in-flight assignment and release its holds: the crash
+    /// recovery path's acknowledgement that the pre-crash connections (and
+    /// with them the chunks they were computing) are gone.  Without this, a
+    /// replayed master would refuse to re-dispatch a lost chunk to the very
+    /// worker recorded as holding it — with P=1 that is a resume that Waits
+    /// forever.  Any straggler result for a dropped id is absorbed by the
+    /// ordinary unknown-id path (`unknown_results`), so completed work can
+    /// never be double-attributed.  The chunks stay visible in the stats as
+    /// `lost_chunks` (assigned − completed), exactly like a fail-stop.
+    ///
+    /// Returns the number of assignments dropped.
+    pub fn mark_all_in_flight_lost(&mut self) -> usize {
+        let mut lost = 0;
+        for i in 0..self.in_flight.len() {
+            if let Some(inflight) = self.in_flight[i].take() {
+                lost += 1;
+                if self.holders_active {
+                    for t in inflight.tasks.iter() {
+                        release_hold(
+                            &mut self.first_holder,
+                            &mut self.extra_holds,
+                            t,
+                            inflight.worker,
+                        );
+                    }
+                }
+            }
+        }
+        lost
+    }
+
+    /// Serialize the complete master state for the engine snapshot codec
+    /// (`PROTOCOL.md` appendix C).  Canonical: unordered sets are written
+    /// sorted, so equal states produce equal bytes.
+    pub(crate) fn snapshot_into(&self, out: &mut Vec<u8>) {
+        push_config(out, &self.cfg);
+        self.table.snapshot_into(out);
+        push_u64(out, self.chunk_index as u64);
+        push_u64(out, self.next_id);
+        push_u32(out, self.in_flight.len() as u32);
+        for slot in &self.in_flight {
+            match slot {
+                None => push_bool(out, false),
+                Some(inflight) => {
+                    push_bool(out, true);
+                    push_u32(out, inflight.worker);
+                    push_f64(out, inflight.assigned_at);
+                    push_bool(out, inflight.rescheduled);
+                    push_task_set(out, &inflight.tasks);
+                }
+            }
+        }
+        push_bool(out, self.holders_active);
+        if self.holders_active {
+            // Sparse: only tasks with a holder (NO_HOLDER slots are implied).
+            let held: Vec<(u32, u32)> = self
+                .first_holder
+                .iter()
+                .enumerate()
+                .filter(|(_, &w)| w != NO_HOLDER)
+                .map(|(t, &w)| (t as u32, w))
+                .collect();
+            push_u32(out, held.len() as u32);
+            for (t, w) in held {
+                push_u32(out, t);
+                push_u32(out, w);
+            }
+            let mut extra: Vec<(u32, u32)> = self.extra_holds.iter().copied().collect();
+            extra.sort_unstable();
+            push_u32(out, extra.len() as u32);
+            for (t, w) in extra {
+                push_u32(out, t);
+                push_u32(out, w);
+            }
+        }
+        push_u32(out, self.redispatch.len() as u32);
+        for t in &self.redispatch {
+            push_u32(out, *t);
+        }
+        push_bool(out, self.test_drop_one_redispatch);
+        for v in [
+            self.stats.requests,
+            self.stats.assigned_chunks,
+            self.stats.assigned_iterations,
+            self.stats.rescheduled_chunks,
+            self.stats.rescheduled_iterations,
+            self.stats.completed_chunks,
+            self.stats.rescheduled_completions,
+            self.stats.finished_iterations,
+            self.stats.duplicate_iterations,
+            self.stats.unknown_results,
+            self.stats.refused_workers,
+        ] {
+            push_u64(out, v);
+        }
+        let mut calc_state = Vec::new();
+        self.calc.save_state(&mut calc_state);
+        push_bytes(out, &calc_state);
+    }
+
+    /// Rebuild a master from [`Master::snapshot_into`] bytes.
+    pub(crate) fn from_snapshot(r: &mut Reader<'_>) -> Result<Master> {
+        let cfg = read_config(r)?;
+        ensure!(cfg.p > 0, "snapshot has p = 0");
+        let table = TaskTable::from_snapshot(r, cfg.n)?;
+        let chunk_index = r.u64()? as usize;
+        let next_id = r.u64()?;
+        let n_slots = r.u32()? as usize;
+        ensure!(n_slots as u64 == next_id, "snapshot slab has {n_slots} slots, next_id {next_id}");
+        let mut in_flight = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            if r.bool()? {
+                let worker = r.u32()?;
+                let assigned_at = r.f64()?;
+                let rescheduled = r.bool()?;
+                let tasks = read_task_set(r)?;
+                in_flight.push(Some(InFlight { worker, tasks, assigned_at, rescheduled }));
+            } else {
+                in_flight.push(None);
+            }
+        }
+        let holders_active = r.bool()?;
+        let mut first_holder = Vec::new();
+        let mut extra_holds = HashSet::new();
+        if holders_active {
+            first_holder = vec![NO_HOLDER; cfg.n];
+            let n_held = r.u32()? as usize;
+            for _ in 0..n_held {
+                let t = r.u32()? as usize;
+                let w = r.u32()?;
+                ensure!(t < cfg.n, "snapshot holder task {t} out of range");
+                first_holder[t] = w;
+            }
+            let n_extra = r.u32()? as usize;
+            for _ in 0..n_extra {
+                let t = r.u32()?;
+                let w = r.u32()?;
+                extra_holds.insert((t, w));
+            }
+        }
+        let n_pool = r.u32()? as usize;
+        ensure!(n_pool <= cfg.n, "snapshot re-dispatch pool larger than n");
+        let mut redispatch = VecDeque::with_capacity(n_pool);
+        for _ in 0..n_pool {
+            redispatch.push_back(r.u32()?);
+        }
+        let test_drop_one_redispatch = r.bool()?;
+        let stats = MasterStats {
+            requests: r.u64()?,
+            assigned_chunks: r.u64()?,
+            assigned_iterations: r.u64()?,
+            rescheduled_chunks: r.u64()?,
+            rescheduled_iterations: r.u64()?,
+            completed_chunks: r.u64()?,
+            rescheduled_completions: r.u64()?,
+            finished_iterations: r.u64()?,
+            duplicate_iterations: r.u64()?,
+            unknown_results: r.u64()?,
+            refused_workers: r.u64()?,
+        };
+        let mut calc = cfg.technique.calculator(cfg.n, cfg.p, &cfg.params);
+        calc.restore_state(r.bytes()?)?;
+        Ok(Master {
+            table,
+            calc,
+            chunk_index,
+            next_id,
+            in_flight,
+            holders_active,
+            first_holder,
+            extra_holds,
+            redispatch,
+            test_drop_one_redispatch,
+            stats,
+            cfg,
+        })
     }
 
     /// Pick the next rDLB chunk for `worker`: oldest Scheduled-unfinished

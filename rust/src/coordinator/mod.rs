@@ -24,6 +24,7 @@ mod assignment;
 mod engine;
 mod master;
 mod sink;
+mod snapshot;
 mod stats;
 mod task_table;
 
@@ -31,5 +32,6 @@ pub use assignment::{Assignment, AssignmentId, TaskSet, TaskSetIter};
 pub use engine::{Effect, Engine, EngineEvent};
 pub use master::{Master, MasterConfig, Reply};
 pub use sink::{EventSink, MultiSink, ResultNotes, SharedSink};
+pub use snapshot::{SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
 pub use stats::MasterStats;
 pub use task_table::{TaskFlag, TaskTable};

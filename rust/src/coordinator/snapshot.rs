@@ -1,0 +1,174 @@
+//! The engine snapshot codec: constants and shared field encoders for the
+//! compact durable form of a whole [`super::Engine`] (`PROTOCOL.md`
+//! appendix C).
+//!
+//! A snapshot is a *state* capture, complementing the event journal's
+//! *history* capture: a long run resumes from `snapshot + journal suffix`
+//! instead of replaying every record since t=0.  The byte layout is
+//! versioned, little-endian via [`crate::util::codec`], and **canonical** —
+//! two engines in identical states produce identical snapshot bytes (sets
+//! are serialized in sorted order), which is what lets the recovery tests
+//! use snapshot-byte equality as the engine-equality oracle.
+//!
+//! The encoding of each layer lives next to the fields it captures
+//! ([`super::Master::snapshot_into`] / [`super::Engine::snapshot`]); this
+//! module owns the envelope plus the codecs for the shared value types
+//! ([`MasterConfig`], [`TaskSet`]).
+
+use anyhow::{bail, ensure, Result};
+
+use super::assignment::TaskSet;
+use super::master::MasterConfig;
+use crate::dls::{Technique, TechniqueParams};
+use crate::util::codec::{push_bool, push_f64, push_u32, push_u64, push_u8, Reader};
+
+/// File magic: identifies an engine snapshot regardless of extension.
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"RDLBSNAP";
+/// Snapshot format version (bumped on any encoding change).
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+pub(crate) fn push_task_set(out: &mut Vec<u8>, ts: &TaskSet) {
+    match ts {
+        TaskSet::Range { start, end } => {
+            push_u8(out, 0);
+            push_u32(out, *start);
+            push_u32(out, *end);
+        }
+        TaskSet::List(ids) => {
+            push_u8(out, 1);
+            push_u32(out, ids.len() as u32);
+            for id in ids {
+                push_u32(out, *id);
+            }
+        }
+    }
+}
+
+pub(crate) fn read_task_set(r: &mut Reader<'_>) -> Result<TaskSet> {
+    match r.u8()? {
+        0 => {
+            let start = r.u32()?;
+            let end = r.u32()?;
+            ensure!(start <= end, "snapshot task range start {start} > end {end}");
+            Ok(TaskSet::Range { start, end })
+        }
+        1 => {
+            let count = r.u32()? as usize;
+            ensure!(count <= r.remaining() / 4, "snapshot task list longer than its record");
+            let mut ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                ids.push(r.u32()?);
+            }
+            Ok(TaskSet::List(ids))
+        }
+        other => bail!("unknown snapshot task-set kind 0x{other:02x}"),
+    }
+}
+
+/// Stable on-disk id for a technique: its index in [`Technique::ALL`]
+/// (append-only by construction — Table 1 is fixed).
+fn technique_id(t: Technique) -> u8 {
+    Technique::ALL.iter().position(|&x| x == t).expect("technique in ALL") as u8
+}
+
+pub(crate) fn push_config(out: &mut Vec<u8>, cfg: &MasterConfig) {
+    push_u64(out, cfg.n as u64);
+    push_u64(out, cfg.p as u64);
+    push_u8(out, technique_id(cfg.technique));
+    push_bool(out, cfg.rdlb);
+    push_f64(out, cfg.params.overhead_h);
+    push_f64(out, cfg.params.mu);
+    push_f64(out, cfg.params.sigma);
+    push_u64(out, cfg.params.seed);
+    push_u32(out, cfg.params.weights.len() as u32);
+    for w in &cfg.params.weights {
+        push_f64(out, *w);
+    }
+}
+
+pub(crate) fn read_config(r: &mut Reader<'_>) -> Result<MasterConfig> {
+    let n = r.u64()? as usize;
+    let p = r.u64()? as usize;
+    let tid = r.u8()? as usize;
+    ensure!(tid < Technique::ALL.len(), "unknown technique id {tid}");
+    let technique = Technique::ALL[tid];
+    let rdlb = r.bool()?;
+    let overhead_h = r.f64()?;
+    let mu = r.f64()?;
+    let sigma = r.f64()?;
+    let seed = r.u64()?;
+    let n_weights = r.u32()? as usize;
+    ensure!(n_weights <= r.remaining() / 8, "snapshot weight list longer than its record");
+    let mut weights = Vec::with_capacity(n_weights);
+    for _ in 0..n_weights {
+        weights.push(r.f64()?);
+    }
+    Ok(MasterConfig {
+        n,
+        p,
+        technique,
+        params: TechniqueParams { overhead_h, mu, sigma, weights, seed },
+        rdlb,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn technique_ids_are_stable_and_total() {
+        // The on-disk id is the Table 1 index; pin the mapping so a future
+        // reorder of `Technique::ALL` fails loudly instead of silently
+        // reinterpreting old snapshots.
+        assert_eq!(technique_id(Technique::Static), 0);
+        assert_eq!(technique_id(Technique::Ss), 1);
+        assert_eq!(technique_id(Technique::Af), 13);
+        for t in Technique::ALL {
+            let mut out = Vec::new();
+            push_u8(&mut out, technique_id(t));
+            let mut r = Reader::new(&out);
+            let id = r.u8().unwrap() as usize;
+            assert_eq!(Technique::ALL[id], t);
+        }
+    }
+
+    #[test]
+    fn config_round_trips() {
+        let cfg = MasterConfig {
+            n: 12345,
+            p: 7,
+            technique: Technique::AwfD,
+            params: TechniqueParams {
+                overhead_h: 3e-4,
+                mu: 2e-3,
+                sigma: 5e-4,
+                weights: vec![1.0, 2.0, 0.5, 1.0, 1.0, 3.0, 0.25],
+                seed: 0xFEED,
+            },
+            rdlb: true,
+        };
+        let mut out = Vec::new();
+        push_config(&mut out, &cfg);
+        let mut r = Reader::new(&out);
+        let back = read_config(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.n, cfg.n);
+        assert_eq!(back.p, cfg.p);
+        assert_eq!(back.technique, cfg.technique);
+        assert_eq!(back.rdlb, cfg.rdlb);
+        assert_eq!(back.params.weights, cfg.params.weights);
+        assert_eq!(back.params.seed, cfg.params.seed);
+    }
+
+    #[test]
+    fn task_set_round_trips() {
+        for ts in [TaskSet::Range { start: 3, end: 9 }, TaskSet::List(vec![1, 5, 6, 100])] {
+            let mut out = Vec::new();
+            push_task_set(&mut out, &ts);
+            let mut r = Reader::new(&out);
+            assert_eq!(read_task_set(&mut r).unwrap(), ts);
+            r.finish().unwrap();
+        }
+    }
+}

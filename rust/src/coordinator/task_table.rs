@@ -108,6 +108,39 @@ impl TaskTable {
         }
     }
 
+    /// Serialize the table for the engine snapshot codec (`PROTOCOL.md`
+    /// appendix C).  `n` itself is not written — it comes from the
+    /// enclosing master config.
+    pub(crate) fn snapshot_into(&self, out: &mut Vec<u8>) {
+        use crate::util::codec::{push_u32, push_u64};
+        push_u64(out, self.cursor as u64);
+        push_u64(out, self.finished as u64);
+        push_u32(out, self.finished_bits.len() as u32);
+        for word in &self.finished_bits {
+            push_u64(out, *word);
+        }
+    }
+
+    /// Rebuild a table from [`TaskTable::snapshot_into`] bytes.
+    pub(crate) fn from_snapshot(
+        r: &mut crate::util::codec::Reader<'_>,
+        n: usize,
+    ) -> anyhow::Result<TaskTable> {
+        use anyhow::ensure;
+        let cursor = r.u64()? as usize;
+        let finished = r.u64()? as usize;
+        let n_words = r.u32()? as usize;
+        ensure!(n_words == n.div_ceil(64), "snapshot bitset has {n_words} words for n={n}");
+        let mut finished_bits = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            finished_bits.push(r.u64()?);
+        }
+        ensure!(cursor <= n && finished <= cursor, "snapshot table counts inconsistent");
+        let popcount: u64 = finished_bits.iter().map(|w| w.count_ones() as u64).sum();
+        ensure!(popcount == finished as u64, "snapshot finished count != bitset population");
+        Ok(TaskTable { n, cursor, finished_bits, finished })
+    }
+
     /// Scheduled-but-unfinished iterations in index order — the rDLB
     /// re-dispatch pool (§3: "reschedule scheduled and unfinished loop
     /// iterations").  Fully-finished 64-iteration words are skipped whole.

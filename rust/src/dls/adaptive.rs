@@ -28,7 +28,9 @@
 
 use super::ctx::{ChunkFeedback, SchedCtx};
 use super::{clamp_chunk, ChunkCalculator, Technique};
+use crate::util::codec::{push_bool, push_f64, push_u64, Reader};
 use crate::util::stats::Welford;
+use anyhow::ensure;
 
 /// Which AWF update rule is in force.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -157,6 +159,37 @@ impl ChunkCalculator for AdaptiveWeightedFactoring {
     fn technique(&self) -> Technique {
         self.variant.technique()
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        push_u64(out, self.records.len() as u64);
+        for r in &self.records {
+            push_f64(out, r.iters);
+            push_f64(out, r.time);
+        }
+        for w in &self.weights {
+            push_f64(out, *w);
+        }
+        push_bool(out, self.weights_dirty);
+        push_u64(out, self.batch_left as u64);
+        push_f64(out, self.batch_chunk);
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = Reader::new(bytes);
+        let p = r.u64()? as usize;
+        ensure!(p == self.records.len(), "AWF state is for P={p}, calculator has P={}", self.records.len());
+        for rec in &mut self.records {
+            rec.iters = r.f64()?;
+            rec.time = r.f64()?;
+        }
+        for w in &mut self.weights {
+            *w = r.f64()?;
+        }
+        self.weights_dirty = r.bool()?;
+        self.batch_left = r.u64()? as usize;
+        self.batch_chunk = r.f64()?;
+        r.finish()
+    }
 }
 
 /// AF — adaptive factoring with per-PE (μ, σ) learned online.
@@ -254,6 +287,35 @@ impl ChunkCalculator for AdaptiveFactoring {
 
     fn technique(&self) -> Technique {
         Technique::Af
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        push_u64(out, self.estimates.len() as u64);
+        for w in &self.estimates {
+            let (n, mean, m2) = w.raw_parts();
+            push_u64(out, n);
+            push_f64(out, mean);
+            push_f64(out, m2);
+        }
+        push_f64(out, self.sum_mu);
+        push_f64(out, self.sum_var);
+        push_u64(out, self.with_history as u64);
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = Reader::new(bytes);
+        let p = r.u64()? as usize;
+        ensure!(p == self.estimates.len(), "AF state is for P={p}, calculator has P={}", self.estimates.len());
+        for w in &mut self.estimates {
+            let n = r.u64()?;
+            let mean = r.f64()?;
+            let m2 = r.f64()?;
+            *w = Welford::from_raw_parts(n, mean, m2);
+        }
+        self.sum_mu = r.f64()?;
+        self.sum_var = r.f64()?;
+        self.with_history = r.u64()? as usize;
+        r.finish()
     }
 }
 

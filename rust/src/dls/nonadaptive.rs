@@ -9,6 +9,7 @@
 
 use super::ctx::SchedCtx;
 use super::{clamp_chunk, ChunkCalculator, Technique, TechniqueParams};
+use crate::util::codec::{push_f64, push_u64, push_u8, Reader};
 use crate::util::Rng;
 
 /// STATIC block scheduling: every PE receives one block of ⌈N/P⌉ iterations
@@ -171,6 +172,17 @@ impl ChunkCalculator for Tss {
     fn technique(&self) -> Technique {
         Technique::Tss
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        // `delta`/`last` are derived from (n, p); only the ramp position moves.
+        push_f64(out, self.next);
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = Reader::new(bytes);
+        self.next = r.f64()?;
+        r.finish()
+    }
 }
 
 /// FAC — practical factoring (FAC2): each batch is half the remaining work,
@@ -211,6 +223,18 @@ impl ChunkCalculator for Fac {
 
     fn technique(&self) -> Technique {
         Technique::Fac
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        push_u64(out, self.batch_left as u64);
+        push_u64(out, self.chunk as u64);
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = Reader::new(bytes);
+        self.batch_left = r.u64()? as usize;
+        self.chunk = r.u64()? as usize;
+        r.finish()
     }
 }
 
@@ -255,6 +279,19 @@ impl ChunkCalculator for Wf {
     fn technique(&self) -> Technique {
         Technique::Wf
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        // Static weights are rebuilt from params; only batch progress moves.
+        push_u64(out, self.batch_left as u64);
+        push_f64(out, self.batch_chunk);
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = Reader::new(bytes);
+        self.batch_left = r.u64()? as usize;
+        self.batch_chunk = r.f64()?;
+        r.finish()
+    }
 }
 
 /// RAND — uniformly random chunk in `[N/(100P), N/(2P)]` (Ciorba et al. 2018).
@@ -280,6 +317,28 @@ impl ChunkCalculator for Rand {
 
     fn technique(&self) -> Technique {
         Technique::Rand
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        let (s, spare) = self.rng.state();
+        for word in s {
+            push_u64(out, word);
+        }
+        push_u8(out, spare.is_some() as u8);
+        push_f64(out, spare.unwrap_or(0.0));
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = Reader::new(bytes);
+        let mut s = [0u64; 4];
+        for word in &mut s {
+            *word = r.u64()?;
+        }
+        let has_spare = r.u8()? != 0;
+        let spare = r.f64()?;
+        r.finish()?;
+        self.rng = Rng::from_state(s, has_spare.then_some(spare));
+        Ok(())
     }
 }
 

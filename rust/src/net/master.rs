@@ -12,10 +12,11 @@
 //! indefinitely" outcome into a reported hung run.
 
 use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig, SharedSink};
 use crate::dls::{Technique, TechniqueParams};
@@ -107,9 +108,6 @@ impl NetMaster {
         let prm = &self.params;
         let p = prm.faults.len();
         ensure!(transports.len() == p, "expected {p} connections, got {}", transports.len());
-
-        // The sans-I/O coordinator engine; this driver translates frames
-        // into engine events and effects into frame sends.
         let mut engine = Engine::new(MasterConfig {
             n: prm.n,
             p,
@@ -117,17 +115,54 @@ impl NetMaster {
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
         });
-        if let Some(s) = prm.sink.clone() {
-            engine.set_sink(0, Box::new(s));
-        }
         if prm.test_drop_one_redispatch {
             engine.arm_test_drop_one_redispatch();
         }
+        let (outcome, _engine) =
+            self.run_session(engine, transports.into_iter().map(Some).collect(), None)?;
+        Ok(outcome)
+    }
 
-        // One reader thread per connection; all send halves stay here.
+    /// Drive one **session** of a run over a caller-provided engine — the
+    /// recovery-aware core [`NetMaster::run`] wraps.  A fresh run is one
+    /// session; a crash-recovered run is several, each over the engine
+    /// state the previous session journaled ([`Engine::replay`] /
+    /// [`Engine::restore`] + [`Engine::mark_all_in_flight_lost`] +
+    /// [`Engine::bump_epoch`], done by the caller).
+    ///
+    /// `transports` has one slot per worker; `None` marks a worker that did
+    /// not (re)connect — a fail-stopped peer on resume.  `shutdown`, when
+    /// provided, is polled between frames: once set, the loop exits
+    /// *without* broadcasting `Terminate`, so workers survive to reconnect
+    /// into the next session (the graceful SIGTERM path of `rdlb serve`).
+    ///
+    /// The engine's epoch is stamped into every `Welcome`; `Result` frames
+    /// carrying an older epoch are pre-crash work for assignment ids that
+    /// no longer exist and are dropped before they reach the engine (their
+    /// piggy-backed request is still served — the worker is live).
+    pub fn run_session(
+        &self,
+        mut engine: Engine,
+        transports: Vec<Option<Box<dyn Transport>>>,
+        shutdown: Option<&AtomicBool>,
+    ) -> Result<(Outcome, Engine)> {
+        let prm = &self.params;
+        let p = prm.faults.len();
+        ensure!(transports.len() == p, "expected {p} connection slots, got {}", transports.len());
+        ensure!(engine.config().n == prm.n && engine.config().p == p, "engine/params mismatch");
+        if let Some(s) = prm.sink.clone() {
+            engine.set_sink(0, Box::new(s));
+        }
+        let epoch = engine.epoch();
+
+        // One reader thread per live connection; all send halves stay here.
         let (event_tx, event_rx) = mpsc::channel::<Event>();
         let mut txs: Vec<Option<Box<dyn FrameTx>>> = Vec::with_capacity(p);
         for (w, transport) in transports.into_iter().enumerate() {
+            let Some(transport) = transport else {
+                txs.push(None);
+                continue;
+            };
             let (tx, mut rx) = transport.split()?;
             txs.push(Some(tx));
             let events = event_tx.clone();
@@ -149,22 +184,33 @@ impl NetMaster {
 
         let start = Instant::now();
         let hard_deadline = start + prm.timeout;
+        // With a shutdown flag armed, block at most this long per recv so
+        // the flag is noticed promptly even on an idle connection set.
+        let poll_slice = Duration::from_millis(200);
         let mut registered = vec![false; p];
         let mut refused_slot = vec![false; p];
         let mut reply: Vec<Effect> = Vec::with_capacity(1);
+        let mut graceful = false;
 
         loop {
+            if shutdown.is_some_and(|s| s.load(Ordering::Relaxed)) {
+                graceful = true;
+                break;
+            }
             let left = hard_deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
                 break;
             }
-            let event = match event_rx.recv_timeout(left) {
+            let wait = if shutdown.is_some() { left.min(poll_slice) } else { left };
+            let event = match event_rx.recv_timeout(wait) {
                 Ok(e) => e,
-                // Timed out, or every reader thread is gone: either way the
-                // run can no longer progress.
-                Err(mpsc::RecvTimeoutError::Timeout)
-                | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // A poll slice or the hang bound elapsed: loop back — the
+                // `left.is_zero()` check converts an expired bound into the
+                // Timeout event.
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                // Every reader thread is gone: the run cannot progress.
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
                     let now = start.elapsed().as_secs_f64();
                     engine.handle(now, EngineEvent::Timeout, &mut reply);
                     break;
@@ -209,9 +255,17 @@ impl NetMaster {
                     let welcome = Frame::Welcome(Welcome {
                         worker: w as u32,
                         n: prm.n as u64,
+                        epoch,
                         fault: prm.faults[w].clone(),
                     });
                     send_or_drop(&mut txs, w, &welcome);
+                    // A recovered engine can already be complete (the crash
+                    // landed between the final journaled result and exit):
+                    // stop as soon as the first worker checks in, and the
+                    // exit broadcast terminates everyone.
+                    if engine.is_complete() {
+                        break;
+                    }
                 }
                 Event::Frame(w, Frame::Request { worker }) => {
                     if !registered[w] || worker as usize != w {
@@ -221,6 +275,17 @@ impl NetMaster {
                 }
                 Event::Frame(w, Frame::Result(r)) => {
                     if !registered[w] || r.worker as usize != w {
+                        continue;
+                    }
+                    if r.epoch != epoch {
+                        // Pre-crash work: its assignment id belongs to a
+                        // dead session.  Drop the result, keep the worker.
+                        eprintln!(
+                            "net: dropping stale result from worker {w} \
+                             (epoch {} < session epoch {epoch})",
+                            r.epoch
+                        );
+                        serve_request(&mut engine, w, now, &mut reply, &mut txs);
                         continue;
                     }
                     let completed = engine
@@ -239,16 +304,21 @@ impl NetMaster {
             }
         }
 
-        // MPI_Abort: stop every surviving worker immediately.
-        for tx in txs.iter_mut().flatten() {
-            let _ = tx.send(&Frame::Terminate);
+        if !graceful {
+            // MPI_Abort: stop every surviving worker immediately.
+            for tx in txs.iter_mut().flatten() {
+                let _ = tx.send(&Frame::Terminate);
+            }
         }
+        // On graceful shutdown the send halves are dropped without a
+        // Terminate: workers must outlive this master to reconnect into
+        // the resumed session.
         drop(txs);
 
         let elapsed = start.elapsed().as_secs_f64();
         let hung = engine.hung();
         let stats = engine.final_stats();
-        Ok(Outcome {
+        let outcome = Outcome {
             parallel_time: if hung { f64::INFINITY } else { elapsed },
             hung,
             finished: engine.finished_count(),
@@ -259,7 +329,8 @@ impl NetMaster {
             useful_work: engine.useful_work(),
             failures: prm.faults.iter().filter(|f| f.fail_after.is_some()).count(),
             result_digest: engine.result_digest(),
-        })
+        };
+        Ok((outcome, engine))
     }
 }
 
@@ -331,4 +402,130 @@ pub fn serve_tcp(
         }
     }
     NetMaster::new(params)?.run(transports)
+}
+
+/// Accept TCP workers for one **session** over a caller-provided engine —
+/// the recovery-aware sibling of [`serve_tcp`].  Accepts up to P
+/// connections; when `allow_partial` is set, proceeds once the accept
+/// window closes with at least one worker connected (on resume a
+/// fail-stopped worker never reconnects — its slot runs as `None` and rDLB
+/// re-dispatch covers its lost work).  Worker slots are assigned in arrival
+/// order, so a resumed session may permute worker ids; that only reshuffles
+/// which per-worker timing history the adaptive techniques consult, never
+/// task accounting (assignment ids are session-scoped and epoch-guarded).
+pub fn serve_tcp_session(
+    listener: TcpListener,
+    params: NetMasterParams,
+    accept_timeout: Duration,
+    engine: Engine,
+    shutdown: Option<&AtomicBool>,
+    allow_partial: bool,
+) -> Result<(Outcome, Engine)> {
+    let p = params.workers();
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let deadline = Instant::now() + accept_timeout;
+    let mut transports: Vec<Option<Box<dyn Transport>>> = Vec::with_capacity(p);
+    while transports.len() < p {
+        if shutdown.is_some_and(|s| s.load(Ordering::Relaxed)) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                stream.set_nonblocking(false).context("blocking worker stream")?;
+                transports.push(Some(Box::new(TcpTransport::new(stream))));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    if allow_partial && !transports.is_empty() {
+                        break;
+                    }
+                    bail!(
+                        "timed out waiting for workers to connect ({}/{p} arrived)",
+                        transports.len()
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accept worker connection"),
+        }
+    }
+    transports.resize_with(p, || None);
+    NetMaster::new(params)?.run_session(engine, transports, shutdown)
+}
+
+/// Bind a TCP listener with `SO_REUSEADDR`, so a resumed master can rebind
+/// the port its killed predecessor left in `TIME_WAIT` (sockets with
+/// in-flight data linger there for minutes after a `kill -9`).  The std
+/// library exposes no socket options and no socket crate is vendored, so on
+/// Linux (IPv4) this drives the libc the process already links against;
+/// everything else falls back to a plain bind — worst case the resumed
+/// master must wait out `TIME_WAIT`.
+#[cfg(target_os = "linux")]
+pub fn bind_reusable(addr: &str) -> Result<TcpListener> {
+    use std::ffi::{c_int, c_void};
+    use std::net::SocketAddr;
+    use std::os::fd::FromRawFd;
+
+    extern "C" {
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *const c_void,
+            len: u32,
+        ) -> c_int;
+        fn bind(fd: c_int, addr: *const c_void, len: u32) -> c_int;
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+    const AF_INET: c_int = 2;
+    const SOCK_STREAM: c_int = 1;
+    const SOL_SOCKET: c_int = 1;
+    const SO_REUSEADDR: c_int = 2;
+
+    let parsed: SocketAddr = addr.parse().with_context(|| format!("parse address {addr}"))?;
+    let SocketAddr::V4(v4) = parsed else {
+        return TcpListener::bind(parsed).with_context(|| format!("bind {addr}"));
+    };
+
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        ensure!(fd >= 0, "socket() failed: {}", std::io::Error::last_os_error());
+        let fail = |what: &str| {
+            let err = std::io::Error::last_os_error();
+            close(fd);
+            anyhow::anyhow!("{what} failed for {addr}: {err}")
+        };
+        let one: c_int = 1;
+        if setsockopt(
+            fd,
+            SOL_SOCKET,
+            SO_REUSEADDR,
+            &one as *const c_int as *const c_void,
+            std::mem::size_of::<c_int>() as u32,
+        ) != 0
+        {
+            return Err(fail("setsockopt(SO_REUSEADDR)"));
+        }
+        // struct sockaddr_in: family (native), port + address (network
+        // byte order), 8 bytes of zero padding.
+        let mut sa = [0u8; 16];
+        sa[0..2].copy_from_slice(&(AF_INET as u16).to_ne_bytes());
+        sa[2..4].copy_from_slice(&v4.port().to_be_bytes());
+        sa[4..8].copy_from_slice(&v4.ip().octets());
+        if bind(fd, sa.as_ptr() as *const c_void, sa.len() as u32) != 0 {
+            return Err(fail("bind"));
+        }
+        if listen(fd, 128) != 0 {
+            return Err(fail("listen"));
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+/// Non-Linux fallback: plain bind (no socket-option access without a crate).
+#[cfg(not(target_os = "linux"))]
+pub fn bind_reusable(addr: &str) -> Result<TcpListener> {
+    TcpListener::bind(addr).with_context(|| format!("bind {addr}"))
 }

@@ -20,7 +20,13 @@
 //! * [`master`] — listener, worker registry and the dispatch loop, with the
 //!   paper's no-detection semantics and a wall-clock hang bound;
 //! * [`worker`] — connect, register, request–compute–report over any
-//!   [`crate::native::ComputeBackend`].
+//!   [`crate::native::ComputeBackend`], with a reconnecting outer loop
+//!   ([`run_worker_reconnecting`]) that rides out a master crash;
+//! * [`wal`] — the `rdlb serve` write-ahead state directory (`meta.json`
+//!   + fsync'd event journal + engine snapshot) behind `--journal-dir` /
+//!   `--resume`: a killed master replays its journal, drops the dead
+//!   session's in-flight work, and re-enters the run under a new epoch —
+//!   see `PROTOCOL.md` appendix C.
 //!
 //! The CLI exposes it as `rdlb serve` / `rdlb worker --connect`, including
 //! a single-binary `--spawn-local P` mode that forks P worker processes for
@@ -29,9 +35,10 @@
 pub mod master;
 pub mod protocol;
 pub mod transport;
+pub mod wal;
 pub mod worker;
 
-pub use master::{serve_tcp, NetMaster, NetMasterParams};
+pub use master::{bind_reusable, serve_tcp, serve_tcp_session, NetMaster, NetMasterParams};
 pub use protocol::{
     FaultSpec, Frame, Welcome, WireAssignment, WorkResult, WorkerHello, MAX_FRAME_LEN,
     PROTOCOL_VERSION,
@@ -40,7 +47,7 @@ pub use transport::{
     FaultInjectingTransport, FrameRx, FrameTx, LoopbackTransport, TcpTransport, Transport,
     WireFaultPlan,
 };
-pub use worker::{run_worker, WorkerReport};
+pub use worker::{run_worker, run_worker_reconnecting, WorkerReport};
 
 use anyhow::{Context as _, Result};
 

@@ -41,7 +41,13 @@ use crate::coordinator::{Assignment, TaskSet};
 ///
 /// v2: range-native `Assign` task sets (kind-tagged `Range`/`List`
 /// encoding) replacing v1's unconditional explicit id lists.
-pub const PROTOCOL_VERSION: u16 = 2;
+///
+/// v3: crash recovery (`PROTOCOL.md` appendix C) adds a session **epoch**
+/// to [`Welcome`] (stamped by the master, bumped on every `--resume`) and
+/// to [`WorkResult`] (echoed by the worker), letting a recovered master
+/// discard in-flight results from before the crash instead of
+/// double-attributing them.
+pub const PROTOCOL_VERSION: u16 = 3;
 
 /// Upper bound on one frame payload, guarding against corrupt length
 /// prefixes (a full paper-scale explicit-list assignment is ~1 MiB).
@@ -119,6 +125,9 @@ pub struct WorkerHello {
 pub struct Welcome {
     pub worker: u32,
     pub n: u64,
+    /// Session epoch (v3): 0 for a fresh run, incremented on every
+    /// `--resume`.  Workers echo it in [`WorkResult`].
+    pub epoch: u32,
     pub fault: FaultSpec,
 }
 
@@ -156,6 +165,10 @@ impl WireAssignment {
 pub struct WorkResult {
     pub worker: u32,
     pub assignment: u64,
+    /// Session epoch (v3) the assignment was received under.  A recovered
+    /// master drops results whose epoch predates its own — they refer to
+    /// pre-crash assignment ids that no longer exist.
+    pub epoch: u32,
     /// Worker-side chunk execution time, seconds (feeds the adaptive
     /// techniques' per-chunk timing).
     pub compute_secs: f64,
@@ -373,6 +386,7 @@ impl Frame {
                 buf.push(TAG_WELCOME);
                 push_u32(buf, w.worker);
                 push_u64(buf, w.n);
+                push_u32(buf, w.epoch);
                 push_fault(buf, &w.fault);
             }
             Frame::Request { worker } => {
@@ -391,6 +405,7 @@ impl Frame {
                 buf.push(TAG_RESULT);
                 push_u32(buf, r.worker);
                 push_u64(buf, r.assignment);
+                push_u32(buf, r.epoch);
                 push_f64(buf, r.compute_secs);
                 push_vec_f64(buf, &r.digests);
             }
@@ -416,6 +431,7 @@ impl Frame {
             TAG_WELCOME => Frame::Welcome(Welcome {
                 worker: r.u32()?,
                 n: r.u64()?,
+                epoch: r.u32()?,
                 fault: read_fault(&mut r)?,
             }),
             TAG_REQUEST => Frame::Request { worker: r.u32()? },
@@ -429,6 +445,7 @@ impl Frame {
             TAG_RESULT => Frame::Result(WorkResult {
                 worker: r.u32()?,
                 assignment: r.u64()?,
+                epoch: r.u32()?,
                 compute_secs: r.f64()?,
                 digests: r.vec_f64()?,
             }),
@@ -509,6 +526,7 @@ mod tests {
             Frame::Welcome(Welcome {
                 worker: 3,
                 n: 262_144,
+                epoch: 2,
                 fault: FaultSpec { fail_after: Some(1.25), slowdown: 2.0, latency: 0.1 },
             }),
             Frame::Request { worker: 7 },
@@ -528,6 +546,7 @@ mod tests {
             Frame::Result(WorkResult {
                 worker: 1,
                 assignment: 42,
+                epoch: 1,
                 compute_secs: 0.125,
                 digests: vec![1.0, 2.5, -3.0],
             }),

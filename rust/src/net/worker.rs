@@ -9,12 +9,12 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::native::ComputeBackend;
 
 use super::protocol::{Frame, WorkResult, WorkerHello, PROTOCOL_VERSION};
-use super::transport::{FrameRx as _, FrameTx as _, Transport};
+use super::transport::{FrameRx as _, FrameTx as _, TcpTransport, Transport};
 
 /// Summary of one worker's participation (for logs and tests).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -26,6 +26,11 @@ pub struct WorkerReport {
     pub iterations: u64,
     /// True when the injected fail-stop deadline ended participation.
     pub failed: bool,
+    /// True when the session ended because the connection dropped *without*
+    /// a `Terminate` — the master crashed (or was killed).  A reconnecting
+    /// worker (`rdlb worker --reconnect`) re-registers into the resumed
+    /// session instead of exiting.
+    pub lost_master: bool,
 }
 
 /// Run the worker loop to completion over an established connection.
@@ -39,13 +44,20 @@ pub fn run_worker(
     label: &str,
 ) -> Result<WorkerReport> {
     let (mut tx, mut rx) = transport.split()?;
-    tx.send(&Frame::Hello(WorkerHello {
-        version: PROTOCOL_VERSION,
-        backend: label.to_string(),
-    }))?;
-    let (me, fault) = match rx.recv().context("awaiting Welcome")? {
-        Frame::Welcome(w) => (w.worker, w.fault),
-        other => bail!("expected Welcome, got {}", other.label()),
+    let lost = || Ok(WorkerReport { lost_master: true, ..WorkerReport::default() });
+    if tx
+        .send(&Frame::Hello(WorkerHello {
+            version: PROTOCOL_VERSION,
+            backend: label.to_string(),
+        }))
+        .is_err()
+    {
+        return lost(); // master died before registration
+    }
+    let (me, epoch, fault) = match rx.recv() {
+        Ok(Frame::Welcome(w)) => (w.worker, w.epoch, w.fault),
+        Ok(other) => bail!("expected Welcome, got {}", other.label()),
+        Err(_) => return lost(), // master died awaiting Welcome
     };
 
     let start = Instant::now();
@@ -71,7 +83,10 @@ pub fn run_worker(
     loop {
         let frame = match rx.recv() {
             Ok(f) => f,
-            Err(_) => break, // master gone: the MPI_Abort path
+            Err(_) => {
+                report.lost_master = true; // master gone without Terminate
+                break;
+            }
         };
         match frame {
             Frame::Terminate => break,
@@ -109,6 +124,7 @@ pub fn run_worker(
                 let result = Frame::Result(WorkResult {
                     worker: me,
                     assignment: a.id,
+                    epoch,
                     compute_secs: compute.as_secs_f64(),
                     digests: std::mem::take(&mut digest_buf),
                 });
@@ -117,11 +133,58 @@ pub fn run_worker(
                     digest_buf = r.digests; // reclaim the buffer
                 }
                 if !sent {
-                    break; // master closed mid-run
+                    report.lost_master = true; // master closed mid-run
+                    break;
                 }
             }
             other => bail!("unexpected frame from master: {}", other.label()),
         }
     }
     Ok(report)
+}
+
+/// Run the worker loop with **crash-recovery reconnects**: whenever a
+/// session ends with `lost_master` (connection dropped without `Terminate`
+/// — the master was killed), keep retrying `addr` for up to
+/// `reconnect_window` and re-register into the resumed session.  A clean
+/// `Terminate` or an injected fail-stop ends the loop; per-session chunk
+/// and iteration counts are accumulated across sessions.
+///
+/// The worker's id and fault envelope are re-assigned at each registration
+/// (slots go by arrival order), and its epoch comes from each session's
+/// `Welcome` — a result computed pre-crash but sent post-resume carries the
+/// old epoch and is dropped by the recovered master.
+pub fn run_worker_reconnecting(
+    addr: &str,
+    backend: ComputeBackend,
+    label: &str,
+    reconnect_window: Duration,
+) -> Result<WorkerReport> {
+    let mut total = WorkerReport::default();
+    loop {
+        let stream = {
+            let deadline = Instant::now() + reconnect_window;
+            loop {
+                match std::net::TcpStream::connect(addr) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        ensure!(
+                            Instant::now() < deadline,
+                            "gave up reconnecting to {addr} after {reconnect_window:?}: {e}"
+                        );
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        };
+        let report = run_worker(Box::new(TcpTransport::new(stream)), backend.clone(), label)?;
+        total.worker = report.worker;
+        total.chunks += report.chunks;
+        total.iterations += report.iterations;
+        total.failed |= report.failed;
+        total.lost_master = report.lost_master;
+        if !report.lost_master {
+            return Ok(total);
+        }
+    }
 }

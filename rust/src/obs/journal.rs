@@ -14,8 +14,10 @@
 //! recorded events back into a [`MasterStats`] that must equal the live
 //! run's counters (the chaos harness checks this with `--journal-oracle`),
 //! and [`super::replay_trace`] rebuilds the per-chunk [`crate::trace::Trace`].
-//! It is also the substrate a future `Engine::replay` crash-recovery path
-//! will consume (ROADMAP item 1).
+//! It is also the write-ahead log behind crash recovery:
+//! [`crate::coordinator::Engine::replay`] reconstructs the exact engine
+//! state from a journal (optionally from a snapshot plus the journal
+//! suffix), which is how `rdlb serve --resume` survives a master `kill -9`.
 
 use anyhow::{bail, ensure, Result};
 
@@ -220,6 +222,87 @@ impl EventSink for JournalSink {
     }
 }
 
+/// Durable write-ahead [`EventSink`]: every record is appended to a file
+/// with ONE `write_all` of `length ‖ payload` followed by `sync_data`, so a
+/// `kill -9` at any instant can lose at most the tail record being appended
+/// — never corrupt an earlier one — and every record the master *acted on*
+/// is already on disk when the action's effects become visible to workers.
+/// The torn-tail case is exactly what [`read_journal_tolerant`] absorbs on
+/// `--resume`.
+pub struct FileJournal {
+    file: std::fs::File,
+    record_buf: Vec<u8>,
+    scratch: Vec<u8>,
+    records: u64,
+}
+
+impl FileJournal {
+    /// Start a fresh journal at `path` (truncating any existing file):
+    /// header is written and fsynced before this returns.
+    pub fn create(path: &std::path::Path) -> Result<FileJournal> {
+        use std::io::Write;
+        let mut file = std::fs::File::create(path)?;
+        let mut header = Vec::with_capacity(10);
+        header.extend_from_slice(&JOURNAL_MAGIC);
+        push_u16(&mut header, JOURNAL_VERSION);
+        file.write_all(&header)?;
+        file.sync_data()?;
+        Ok(FileJournal {
+            file,
+            record_buf: Vec::with_capacity(256),
+            scratch: Vec::with_capacity(256),
+            records: 0,
+        })
+    }
+
+    /// Reopen `path` for appending after a crash: the file is truncated to
+    /// `valid_len` (discarding a torn tail record, as reported by
+    /// [`read_journal_tolerant`]) and the counter resumes at
+    /// `existing_records`.
+    pub fn append_after(
+        path: &std::path::Path,
+        valid_len: u64,
+        existing_records: u64,
+    ) -> Result<FileJournal> {
+        use std::io::Seek;
+        let mut file = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+        file.set_len(valid_len)?;
+        file.seek(std::io::SeekFrom::End(0))?;
+        file.sync_data()?;
+        Ok(FileJournal {
+            file,
+            record_buf: Vec::with_capacity(256),
+            scratch: Vec::with_capacity(256),
+            records: existing_records,
+        })
+    }
+
+    /// Total complete records in the file (pre-crash + appended here).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+}
+
+impl EventSink for FileJournal {
+    fn record(
+        &mut self,
+        scope: u32,
+        now: f64,
+        event: &EngineEvent<'_>,
+        effects: &[Effect],
+        notes: &ResultNotes,
+    ) {
+        use std::io::Write;
+        self.record_buf.clear();
+        encode_record(&mut self.record_buf, &mut self.scratch, scope, now, event, effects, notes);
+        // A write-ahead log that silently loses records is worse than a
+        // crash: fail loudly so the operator sees durability is gone.
+        self.file.write_all(&self.record_buf).expect("journal append failed");
+        self.file.sync_data().expect("journal fsync failed");
+        self.records += 1;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Decoding
 // ---------------------------------------------------------------------------
@@ -385,6 +468,35 @@ pub fn read_journal(bytes: &[u8]) -> Result<Vec<JournalRecord>> {
     Ok(records)
 }
 
+/// Decode a journal that may end in a **torn tail record** — the one shape
+/// of damage a `kill -9` can inflict on a [`FileJournal`], whose appends are
+/// a single `write_all` + fsync.  Complete records are returned together
+/// with the byte length of the valid prefix (`header ‖ complete records`),
+/// which is what [`FileJournal::append_after`] truncates to on `--resume`.
+/// Only tail truncation is tolerated: bad magic/version, an over-cap length
+/// or an undecodable record that is fully present is still an error.
+pub fn read_journal_tolerant(bytes: &[u8]) -> Result<(Vec<JournalRecord>, u64)> {
+    ensure!(bytes.len() >= 10, "journal shorter than its header");
+    ensure!(bytes[..8] == JOURNAL_MAGIC, "not a journal (bad magic)");
+    let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+    ensure!(version == JOURNAL_VERSION, "unsupported journal version {version}");
+    let mut records = Vec::new();
+    let mut pos = 10usize;
+    loop {
+        if pos + 4 > bytes.len() {
+            break; // torn length prefix
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        ensure!(len <= MAX_RECORD_LEN, "record length {len} exceeds cap");
+        if pos + 4 + len as usize > bytes.len() {
+            break; // torn payload
+        }
+        records.push(decode_record(&bytes[pos + 4..pos + 4 + len as usize])?);
+        pos += 4 + len as usize;
+    }
+    Ok((records, pos as u64))
+}
+
 // ---------------------------------------------------------------------------
 // Replay oracle
 // ---------------------------------------------------------------------------
@@ -522,6 +634,74 @@ mod tests {
         let mut bad = bytes.clone();
         bad[14] = 0xEE;
         assert!(read_journal(&bad).is_err());
+    }
+
+    #[test]
+    fn tolerant_reader_stops_at_torn_tail_only() {
+        let mut sink = JournalSink::new();
+        let zero = ResultNotes::default();
+        sink.record(0, 0.0, &EngineEvent::WorkerRequest { worker: 0 }, &[], &zero);
+        let after_first = sink.bytes().len() as u64;
+        sink.record(0, 1.0, &EngineEvent::WorkerRequest { worker: 1 }, &[], &zero);
+        let bytes = sink.into_bytes();
+
+        // Intact journal: everything decodes, valid prefix is the whole file.
+        let (records, valid) = read_journal_tolerant(&bytes).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(valid, bytes.len() as u64);
+
+        // Torn payload and torn length prefix: the strict reader errors, the
+        // tolerant one yields the first record plus its byte boundary.
+        for cut in [bytes.len() - 3, after_first as usize + 2] {
+            assert!(read_journal(&bytes[..cut]).is_err());
+            let (records, valid) = read_journal_tolerant(&bytes[..cut]).unwrap();
+            assert_eq!(records.len(), 1);
+            assert_eq!(valid, after_first);
+        }
+
+        // Mid-file corruption is NOT tolerated.
+        let mut bad = bytes.clone();
+        bad[14] = 0xEE;
+        assert!(read_journal_tolerant(&bad).is_err());
+        assert!(read_journal_tolerant(b"NOTAJRNL\x01\x00").is_err());
+    }
+
+    #[test]
+    fn file_journal_survives_torn_tail_and_resume() {
+        let path = std::env::temp_dir()
+            .join(format!("rdlb-journal-test-{}.bin", std::process::id()));
+        let zero = ResultNotes::default();
+
+        // Write two records durably; the file must match the in-memory sink.
+        let mut file_sink = FileJournal::create(&path).unwrap();
+        let mut mem_sink = JournalSink::new();
+        file_sink.record(0, 0.0, &EngineEvent::WorkerRequest { worker: 0 }, &[], &zero);
+        mem_sink.record(0, 0.0, &EngineEvent::WorkerRequest { worker: 0 }, &[], &zero);
+        file_sink.record(0, 1.0, &EngineEvent::WorkerRequest { worker: 1 }, &[], &zero);
+        mem_sink.record(0, 1.0, &EngineEvent::WorkerRequest { worker: 1 }, &[], &zero);
+        assert_eq!(file_sink.records(), 2);
+        drop(file_sink);
+        let on_disk = std::fs::read(&path).unwrap();
+        assert_eq!(on_disk, mem_sink.bytes());
+
+        // Tear the tail (as a crash mid-append would), then resume.
+        std::fs::write(&path, &on_disk[..on_disk.len() - 3]).unwrap();
+        let torn = std::fs::read(&path).unwrap();
+        let (records, valid) = read_journal_tolerant(&torn).unwrap();
+        assert_eq!(records.len(), 1);
+        let mut resumed = FileJournal::append_after(&path, valid, records.len() as u64).unwrap();
+        assert_eq!(resumed.records(), 1);
+        resumed.record(0, 2.0, &EngineEvent::WorkerRequest { worker: 2 }, &[], &zero);
+        assert_eq!(resumed.records(), 2);
+        drop(resumed);
+
+        // The healed journal is strictly valid again: record 1 survived the
+        // tear, the torn record is gone, the new record follows it.
+        let healed = read_journal(&std::fs::read(&path).unwrap()).unwrap();
+        assert_eq!(healed.len(), 2);
+        assert_eq!(healed[0].event, JournalEvent::Request { worker: 0 });
+        assert_eq!(healed[1].event, JournalEvent::Request { worker: 2 });
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! | piece | role |
 //! |---|---|
 //! | [`JournalSink`] / [`read_journal`] | length-prefixed binary event log; deterministic for seeded sim runs (`rdlb run --journal`) |
+//! | [`FileJournal`] / [`read_journal_tolerant`] | fsync'd write-ahead journal + torn-tail-tolerant reader — the substrate of `rdlb serve --journal-dir` / `--resume` crash recovery (`PROTOCOL.md` appendix C) |
 //! | [`replay_stats`] | fold a journal back into [`crate::coordinator::MasterStats`] — the differential oracle `rdlb chaos --journal-oracle` arms |
 //! | [`replay_trace`] / [`TraceSink`] | per-chunk [`crate::trace::Trace`] from any runtime, offline or live (`--trace-out`, `--gantt`) |
 //! | [`MetricsRegistry`] / [`MetricsSink`] | counters + log-linear histograms, Prometheus/JSON snapshots (`--metrics`, `serve --metrics-every`) |
@@ -27,8 +28,8 @@ pub mod trace;
 
 pub use chrome::chrome_trace;
 pub use journal::{
-    read_journal, replay_stats, JournalEvent, JournalRecord, JournalSink, JOURNAL_MAGIC,
-    JOURNAL_VERSION, MAX_RECORD_LEN,
+    read_journal, read_journal_tolerant, replay_stats, FileJournal, JournalEvent, JournalRecord,
+    JournalSink, JOURNAL_MAGIC, JOURNAL_VERSION, MAX_RECORD_LEN,
 };
 pub use metrics::{Histogram, MetricsRegistry, MetricsSink};
 pub use trace::{replay_trace, TraceBuilder, TraceSink};

@@ -1,0 +1,152 @@
+//! Little-endian byte codec shared by the snapshot format and calculator
+//! state persistence (`coordinator/snapshot.rs`, `dls` save/restore).
+//!
+//! Floats round-trip through their raw bit patterns, so a decode(encode(x))
+//! cycle is *bit-exact* — the property the crash-recovery proofs rest on
+//! (snapshot-byte equality is used as the engine-equality oracle).
+
+use anyhow::{bail, Result};
+
+pub fn push_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn push_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+/// Length-prefixed (u32) byte string.
+pub fn push_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    push_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+/// Cursor-style reader over an encoded buffer; every accessor is
+/// bounds-checked and `finish` rejects trailing garbage.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("codec: wanted {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("codec: invalid bool byte {b:#x}"),
+        }
+    }
+
+    /// A [`push_bytes`]-encoded byte string.
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let len = self.u32()? as usize;
+        self.take(len)
+    }
+
+    /// Assert the buffer is fully consumed.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("codec: {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_types() {
+        let mut out = Vec::new();
+        push_u8(&mut out, 7);
+        push_u16(&mut out, 0xBEEF);
+        push_u32(&mut out, 0xDEAD_BEEF);
+        push_u64(&mut out, u64::MAX - 3);
+        push_f64(&mut out, -0.0);
+        push_bool(&mut out, true);
+        push_bytes(&mut out, b"abc");
+        let mut r = Reader::new(&out);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.bool().unwrap());
+        assert_eq!(r.bytes().unwrap(), b"abc");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_rejected() {
+        let mut out = Vec::new();
+        push_u64(&mut out, 1);
+        let mut r = Reader::new(&out[..4]);
+        assert!(r.u64().is_err());
+        let mut r = Reader::new(&out);
+        r.u32().unwrap();
+        assert!(r.finish().is_err(), "trailing bytes must be rejected");
+    }
+
+    #[test]
+    fn nan_bits_survive() {
+        let weird = f64::from_bits(0x7FF8_0000_0000_1234);
+        let mut out = Vec::new();
+        push_f64(&mut out, weird);
+        let mut r = Reader::new(&out);
+        assert_eq!(r.f64().unwrap().to_bits(), weird.to_bits());
+    }
+}

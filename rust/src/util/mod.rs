@@ -2,10 +2,12 @@
 
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod json;
 pub mod par;
 pub mod park;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 pub mod watchdog;
 

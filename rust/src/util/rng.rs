@@ -39,6 +39,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Raw generator state (xoshiro words + cached Box–Muller spare), for
+    /// the engine snapshot codec: restoring these parts resumes the stream
+    /// exactly where it left off.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare_normal)
+    }
+
+    /// Rebuild a generator from raw [`Rng::state`] parts.
+    pub fn from_state(s: [u64; 4], spare_normal: Option<f64>) -> Rng {
+        Rng { s, spare_normal }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

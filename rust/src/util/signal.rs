@@ -1,0 +1,50 @@
+//! Minimal SIGINT/SIGTERM hook for graceful `rdlb serve` shutdown, with no
+//! signal crate: the handler does the one async-signal-safe thing — store
+//! into a process-global atomic — and the serve loop polls that flag
+//! between frames (see `net::NetMaster::run_session`).  On receipt the
+//! master flushes + fsyncs its write-ahead journal (every append already
+//! is), writes a final engine snapshot, and exits *without* terminating
+//! workers, so they survive to reconnect into a `--resume`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// The one shutdown flag; a second signal while it is already set falls
+/// back to the default disposition via the OS only on `kill -9` — a repeat
+/// SIGINT/SIGTERM is absorbed by the same handler.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Install the SIGINT + SIGTERM handler and return the flag it sets.
+/// Idempotent; the flag is process-global and never resets.
+#[cfg(unix)]
+pub fn install_shutdown_handler() -> &'static AtomicBool {
+    use std::ffi::c_int;
+    // `signal(2)` via the libc every Unix Rust binary already links
+    // against (no signal crate is vendored).  `sighandler_t` is a function
+    // pointer, ABI-compatible with a pointer-sized integer.
+    extern "C" {
+        fn signal(signum: c_int, handler: usize) -> usize;
+    }
+    extern "C" fn on_signal(_sig: c_int) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    const SIGINT: c_int = 2;
+    const SIGTERM: c_int = 15;
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+    &SHUTDOWN
+}
+
+/// Non-Unix fallback: no handler is installed; the returned flag simply
+/// never fires and Ctrl-C keeps its default process-killing behaviour
+/// (recovery then goes through `--resume`, same as a `kill -9`).
+#[cfg(not(unix))]
+pub fn install_shutdown_handler() -> &'static AtomicBool {
+    &SHUTDOWN
+}
+
+/// Has a shutdown signal arrived? (The polling half of the handler.)
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}

@@ -84,6 +84,18 @@ impl Welford {
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
+
+    /// Raw accumulator parts `(n, mean, M2)` for the engine snapshot codec;
+    /// serializing mean/variance alone would lose the exact `M2` needed to
+    /// continue the stream bit-identically.
+    pub fn raw_parts(&self) -> (u64, f64, f64) {
+        (self.n, self.mean, self.m2)
+    }
+
+    /// Rebuild an accumulator from raw [`Welford::raw_parts`].
+    pub fn from_raw_parts(n: u64, mean: f64, m2: f64) -> Welford {
+        Welford { n, mean, m2 }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,255 @@
+//! Property-based tests of the engine's event-sourced crash recovery
+//! (seeded randomized cases over the in-tree PRNG — proptest is
+//! unavailable offline, so each property is checked across generated
+//! cases and failures print the offending seed).
+//!
+//! Each case drives a live engine through a protocol-valid random event
+//! stream — requests, results with per-task digests, fail-stops that
+//! strand in-flight chunks, version refusals, a terminal timeout on
+//! expected-hang schedules — with the journal tap installed, then demands:
+//!
+//!  * **prefix fidelity** — [`Engine::replay`] over ANY journal prefix
+//!    reconstructs exactly the live engine's state at that point in the
+//!    run, byte-for-byte under the snapshot codec;
+//!  * **resume equivalence** — [`Engine::restore`] of a mid-run snapshot
+//!    plus [`Engine::replay_records`] over the journal suffix lands in the
+//!    same state as replaying the whole journal (the `--resume` fast path
+//!    equals the slow path);
+//!  * **tap completeness** — the journal holds one record per handled
+//!    event; nothing is silently dropped.
+
+use std::sync::{Arc, Mutex};
+
+use rdlb::coordinator::{Assignment, Effect, Engine, EngineEvent, MasterConfig, SharedSink};
+use rdlb::dls::{Technique, TechniqueParams};
+use rdlb::obs::{read_journal, JournalSink};
+use rdlb::util::Rng;
+
+/// Drives one engine through a random valid event stream, recording the
+/// live snapshot after every handled event.
+struct Driver {
+    engine: Engine,
+    /// `snapshots[i]` = live engine state right after journal record `i`.
+    snapshots: Vec<Vec<u8>>,
+    rng: Rng,
+    /// In-flight assignments whose workers are still alive.
+    pending: Vec<(usize, Assignment)>,
+    /// Worker dies after this many served requests (`None` = never).
+    fail_after: Vec<Option<usize>>,
+    requests_served: Vec<usize>,
+    alive: Vec<bool>,
+    complete: bool,
+    now: f64,
+}
+
+impl Driver {
+    fn new(engine: Engine, seed: u64, fail_after: Vec<Option<usize>>) -> Driver {
+        let p = fail_after.len();
+        Driver {
+            engine,
+            snapshots: Vec::new(),
+            rng: Rng::new(seed ^ 0xD21F),
+            pending: Vec::new(),
+            fail_after,
+            requests_served: vec![0; p],
+            alive: vec![true; p],
+            complete: false,
+            now: 0.0,
+        }
+    }
+
+    /// Feed one event, snapshot the resulting state, return the effects.
+    fn step(&mut self, event: EngineEvent<'_>) -> Vec<Effect> {
+        let mut out = Vec::new();
+        self.now += 1.0;
+        self.engine.handle(self.now, event, &mut out);
+        self.snapshots.push(self.engine.snapshot());
+        out
+    }
+
+    /// One worker request, honoring the effect contract (exactly one of
+    /// Assign / Park / TerminateWorker).  An assignment handed to a worker
+    /// at its death point is lost — the crash-recovery scenario the journal
+    /// must survive.
+    fn request(&mut self, w: usize) {
+        let effects = self.step(EngineEvent::WorkerRequest { worker: w });
+        assert_eq!(effects.len(), 1, "request must yield exactly one effect: {effects:?}");
+        self.requests_served[w] += 1;
+        match effects.into_iter().next().unwrap() {
+            Effect::Assign(a) => {
+                let dies = self.fail_after[w].is_some_and(|k| self.requests_served[w] >= k);
+                if dies {
+                    self.alive[w] = false; // chunk evaporates mid-compute
+                } else {
+                    self.pending.push((w, a));
+                }
+            }
+            Effect::Park { .. } | Effect::TerminateWorker { .. } => {}
+            other => panic!("request produced {other:?}"),
+        }
+    }
+
+    /// Deliver one pending result with per-task digests, then serve the
+    /// wake pass and the reporter's piggy-backed request like the real
+    /// drivers do.
+    fn deliver(&mut self, idx: usize) {
+        let (w, a) = self.pending.swap_remove(idx);
+        let ids = a.tasks.to_vec();
+        let digests: Vec<f64> = ids.iter().map(|&id| 1.0 + id as f64 * 0.25).collect();
+        let effects = self.step(EngineEvent::ResultReceived {
+            worker: w,
+            assignment_id: a.id,
+            compute_secs: 1e-3 * ids.len() as f64,
+            digests: &digests,
+        });
+        let mut wakes = Vec::new();
+        for eff in &effects {
+            match eff {
+                Effect::Completed => {
+                    self.complete = true;
+                    return;
+                }
+                Effect::Wake { worker } => wakes.push(*worker),
+                other => panic!("result produced {other:?}"),
+            }
+        }
+        for ww in wakes {
+            self.request(ww);
+        }
+        if self.alive[w] {
+            self.request(w);
+        }
+    }
+
+    /// Run the stream to completion or to a documented hang.
+    fn run(&mut self, refused: Option<usize>) {
+        let p = self.alive.len();
+        if let Some(w) = refused {
+            self.alive[w] = false;
+            let effects = self.step(EngineEvent::VersionRefused { worker: w });
+            assert!(matches!(effects.as_slice(), [Effect::TerminateWorker { .. }]));
+        }
+        for w in 0..p {
+            if self.alive[w] {
+                self.request(w);
+                if self.complete {
+                    return;
+                }
+            }
+        }
+        let mut guard = 0usize;
+        while !self.complete {
+            if self.pending.is_empty() {
+                // No live in-flight work and no completion: the documented
+                // hang (lost chunks without rDLB, or everyone refused/dead).
+                self.step(EngineEvent::Timeout);
+                assert!(self.engine.hung(), "empty pipeline without completion must hang");
+                return;
+            }
+            let idx = self.rng.gen_range(0, (self.pending.len() - 1) as u64) as usize;
+            self.deliver(idx);
+            guard += 1;
+            assert!(guard < 100_000, "runaway stream");
+        }
+    }
+}
+
+/// Build one random case: config, fault plan, optional refused worker.
+fn random_case(seed: u64) -> (MasterConfig, Vec<Option<usize>>, Option<usize>) {
+    let mut rng = Rng::new(seed);
+    let techniques = [
+        Technique::Ss,
+        Technique::Gss,
+        Technique::Fac,
+        Technique::Tss,
+        Technique::AwfC,
+        Technique::Af,
+    ];
+    let n = 16 + (rng.next_u64() % 100) as usize;
+    let p = 2 + (rng.next_u64() % 5) as usize;
+    let technique = techniques[(rng.next_u64() % 6) as usize];
+    let rdlb = rng.next_f64() < 0.7;
+    let cfg = MasterConfig { n, p, technique, params: TechniqueParams::default(), rdlb };
+    // Worker 0 pristine; others may die after a few served requests.
+    let fail_after: Vec<Option<usize>> = (0..p)
+        .map(|w| (w != 0 && rng.next_f64() < 0.35).then(|| 1 + (rng.next_u64() % 4) as usize))
+        .collect();
+    let refused = (p > 2 && rng.next_f64() < 0.25).then(|| p - 1);
+    (cfg, fail_after, refused)
+}
+
+#[test]
+fn prop_replay_of_any_prefix_matches_the_live_engine() {
+    for seed in 0..24u64 {
+        let (cfg, fail_after, refused) = random_case(seed);
+        let tap = Arc::new(Mutex::new(JournalSink::new()));
+        let mut engine = Engine::new(cfg.clone());
+        engine.set_sink(0, Box::new(SharedSink::from_arc(tap.clone())));
+        let mut driver = Driver::new(engine, seed, fail_after);
+        driver.run(refused);
+
+        let bytes = tap.lock().unwrap().bytes().to_vec();
+        let records = read_journal(&bytes).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        assert_eq!(
+            records.len(),
+            driver.snapshots.len(),
+            "seed {seed}: one journal record per handled event"
+        );
+
+        // The empty prefix is a fresh engine...
+        assert_eq!(
+            Engine::replay(cfg.clone(), &[]).unwrap().snapshot(),
+            Engine::new(cfg.clone()).snapshot(),
+            "seed {seed}"
+        );
+        // ...and every other prefix replays to the exact live state at that
+        // point (stride the long tails to keep the quadratic cost bounded).
+        let len = records.len();
+        let stride = 1 + len / 64;
+        for k in (1..=len).filter(|k| k % stride == 0 || *k == len) {
+            let replayed = Engine::replay(cfg.clone(), &records[..k])
+                .unwrap_or_else(|e| panic!("seed {seed} prefix {k}: {e:#}"));
+            assert_eq!(
+                replayed.snapshot(),
+                driver.snapshots[k - 1],
+                "seed {seed}: prefix {k}/{len} diverges from the live engine"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_snapshot_plus_suffix_equals_full_replay() {
+    for seed in 100..118u64 {
+        let (cfg, fail_after, refused) = random_case(seed);
+        let tap = Arc::new(Mutex::new(JournalSink::new()));
+        let mut engine = Engine::new(cfg.clone());
+        engine.set_sink(0, Box::new(SharedSink::from_arc(tap.clone())));
+        let mut driver = Driver::new(engine, seed, fail_after);
+        driver.run(refused);
+
+        let bytes = tap.lock().unwrap().bytes().to_vec();
+        let records = read_journal(&bytes).unwrap();
+        let len = records.len();
+        assert!(len > 0, "seed {seed}: empty stream");
+        let full = Engine::replay(cfg.clone(), &records).unwrap().snapshot();
+        assert_eq!(full, *driver.snapshots.last().unwrap(), "seed {seed}: full replay");
+        for k in [len / 3, len / 2, 2 * len / 3] {
+            if k == 0 || k >= len {
+                continue;
+            }
+            // Resume fast path: restore the snapshot covering k records,
+            // then replay only the suffix.
+            let mut resumed = Engine::restore(&driver.snapshots[k - 1])
+                .unwrap_or_else(|e| panic!("seed {seed} restore@{k}: {e:#}"));
+            resumed
+                .replay_records(&records[k..])
+                .unwrap_or_else(|e| panic!("seed {seed} suffix@{k}: {e:#}"));
+            assert_eq!(
+                resumed.snapshot(),
+                full,
+                "seed {seed}: snapshot@{k} + suffix diverges from full replay"
+            );
+        }
+    }
+}

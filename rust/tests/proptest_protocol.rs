@@ -46,6 +46,7 @@ fn rand_frame(rng: &mut Rng) -> Frame {
         1 => Frame::Welcome(Welcome {
             worker: rng.next_u64() as u32,
             n: rng.next_u64() % (1 << 48),
+            epoch: rng.next_u64() as u32,
             fault: FaultSpec {
                 fail_after: if rng.next_f64() < 0.5 { Some(rng.next_f64() * 100.0) } else { None },
                 slowdown: 1.0 + rng.next_f64() * 4.0,
@@ -65,6 +66,7 @@ fn rand_frame(rng: &mut Rng) -> Frame {
             Frame::Result(WorkResult {
                 worker: rng.next_u64() as u32,
                 assignment: rng.next_u64(),
+                epoch: rng.next_u64() as u32,
                 compute_secs: rng.next_f64() * 10.0,
                 digests: (0..len).map(|_| (rng.next_f64() - 0.5) * 1e6).collect(),
             })
