@@ -1,0 +1,106 @@
+#!/usr/bin/env bash
+# Straggler soak for the worker-health layer.
+#
+# Runs one uninterrupted `rdlb serve --spawn-local` reference run, then the
+# same workload with `--health` armed, SIGSTOPs one worker process mid-run
+# (a real OS-level straggler: the whole process freezes, heartbeats
+# included), and asserts the run still completes in bounded time with the
+# reference digest — i.e. the overdue chunk was speculatively re-dispatched
+# to a healthy worker and the straggler's late/lost work neither hangs the
+# run nor corrupts the result.
+#
+# Knobs (env, with defaults): BIN=target/release/rdlb TECHNIQUE=fac
+# WORKERS=4 TASKS=65536 MAX_ITER=800000 STOP_AFTER=1.0 SOAK_DIR=<mktemp>
+#
+# Exit 0 only if: the stop landed while the run was still going, the
+# worker-health banner shows the layer was armed, the run printed a
+# non-HUNG RESULT with rescheduled > 0, and its digest equals the
+# uninterrupted reference's.
+set -euo pipefail
+
+BIN=${BIN:-target/release/rdlb}
+TECHNIQUE=${TECHNIQUE:-fac}
+WORKERS=${WORKERS:-4}
+TASKS=${TASKS:-65536}
+MAX_ITER=${MAX_ITER:-800000}
+# Seconds to wait after all worker processes exist before freezing one
+# (covers registration; by then every worker is holding a chunk).
+STOP_AFTER=${STOP_AFTER:-1.0}
+WORK=${SOAK_DIR:-$(mktemp -d)}
+mkdir -p "$WORK"
+
+say() { printf '\nsoak: %s\n' "$*"; }
+
+PID=""
+FROZEN=""
+cleanup() {
+    [ -n "$FROZEN" ] && { kill -CONT "$FROZEN" 2>/dev/null; kill -9 "$FROZEN" 2>/dev/null; }
+    [ -n "$PID" ] && kill -9 "$PID" 2>/dev/null
+    pkill -f "rdlb worker --connect" 2>/dev/null
+    say "logs kept in $WORK"
+}
+trap 'cleanup || true' EXIT
+
+common=(--app mandelbrot --technique "$TECHNIQUE" --tasks "$TASKS"
+    --spawn-local "$WORKERS" --max-iter "$MAX_ITER" --timeout 300)
+
+say "reference run (no straggler): technique=$TECHNIQUE tasks=$TASKS workers=$WORKERS"
+"$BIN" serve "${common[@]}" | tee "$WORK/ref.log"
+REF=$(grep -o 'digest=[0-9.-]*' "$WORK/ref.log" | tail -1)
+if [ -z "$REF" ]; then
+    say "FAIL: reference run produced no digest"
+    exit 1
+fi
+
+say "health-armed run: freezing one worker with SIGSTOP mid-run"
+"$BIN" serve "${common[@]}" --health --health-tick 0.2 >"$WORK/run.log" 2>&1 &
+PID=$!
+
+# Wait for all forked workers to exist, give them a beat to register and
+# pick up their first chunks, then freeze the last one.
+for _ in $(seq 1 100); do
+    [ "$(pgrep -cf 'rdlb worker --connect' || true)" -ge "$WORKERS" ] && break
+    if ! kill -0 "$PID" 2>/dev/null; then
+        say "FAIL: master exited before its workers appeared"
+        exit 1
+    fi
+    sleep 0.1
+done
+sleep "$STOP_AFTER"
+FROZEN=$(pgrep -f 'rdlb worker --connect' | tail -1)
+if [ -z "$FROZEN" ] || ! kill -0 "$PID" 2>/dev/null; then
+    say "FAIL: run finished before the straggler could be frozen (raise TASKS/MAX_ITER)"
+    exit 1
+fi
+kill -STOP "$FROZEN"
+say "worker pid $FROZEN frozen — waiting for the master to route around it"
+
+wait "$PID" || true
+PID=""
+printf '\n===== %s =====\n' "$WORK/run.log"
+cat "$WORK/run.log"
+
+if ! grep -q "worker-health armed" "$WORK/run.log"; then
+    say "FAIL: the worker-health banner is missing — the layer never armed"
+    exit 1
+fi
+if grep -q "RESULT: HUNG" "$WORK/run.log"; then
+    say "FAIL: run hung despite the health layer (straggler never routed around)"
+    exit 1
+fi
+FINAL=$(grep -o 'digest=[0-9.-]*' "$WORK/run.log" | tail -1)
+say "reference $REF vs straggler run ${FINAL:-<none>}"
+if [ -z "$FINAL" ]; then
+    say "FAIL: no RESULT digest (crashed run?)"
+    exit 1
+fi
+if [ "$FINAL" != "$REF" ]; then
+    say "FAIL: digest parity broken by speculative re-dispatch: $FINAL != $REF"
+    exit 1
+fi
+RESCHED=$(grep -o 'rescheduled=[0-9]*' "$WORK/run.log" | tail -1 | cut -d= -f2)
+if [ "${RESCHED:-0}" -lt 1 ]; then
+    say "FAIL: rescheduled=${RESCHED:-0} — the frozen worker's chunk was never speculated"
+    exit 1
+fi
+say "PASS: straggler routed around (rescheduled=$RESCHED) with digest parity ($REF)"

@@ -21,6 +21,7 @@ fn master_roundtrip_bench(technique: Technique, n: usize, p: usize) {
             technique,
             params: TechniqueParams::default(),
             rdlb: true,
+            health: Default::default(),
         });
         let mut w = 0usize;
         let mut t = 0.0f64;
@@ -45,6 +46,7 @@ fn master_roundtrip_bench(technique: Technique, n: usize, p: usize) {
             technique,
             params: TechniqueParams::default(),
             rdlb: true,
+            health: Default::default(),
         });
         let mut count = 0u64;
         let mut w = 0;
@@ -91,6 +93,7 @@ fn rdlb_redispatch_bench() {
             technique: Technique::Gss,
             params: TechniqueParams::default(),
             rdlb: true,
+            health: Default::default(),
         });
         loop {
             match master.on_request(1, 0.0) {

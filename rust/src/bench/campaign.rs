@@ -199,6 +199,41 @@ fn real_case(
     Ok(CaseSpec { id: cfg.case_label(), cfg, time_scale: 1.0, reps: sc.reps })
 }
 
+/// The straggler case: half the net workers (the second node) freeze
+/// mid-chunk a quarter of the way into the run and stay frozen for 4x the
+/// failure-free horizon — without the worker-health layer the run would
+/// idle until the stall lifts; with it armed, the overdue chunks are
+/// speculatively re-dispatched to the healthy half and time-to-completion
+/// stays near the baseline. Gated in CI like every other case.
+fn net_stall_case(settings: &BenchSettings) -> Result<CaseSpec> {
+    let sc = &settings.scale;
+    // Two "nodes" so the stall hits a proper subset (every preset has an
+    // even real P).
+    let mut cfg = ExperimentConfig::builder()
+        .app(AppKind::Uniform)
+        .topology(2, sc.real_pes / 2)
+        .tasks(sc.real_tasks)
+        .technique(Technique::Fac)
+        .rdlb(true)
+        .scenario(Scenario::Stall { node: 1 })
+        .mean_cost(sc.real_mean_cost)
+        .seed(settings.seed)
+        .runtime(RuntimeKind::Net)
+        .build()?;
+    cfg.net.timeout_secs = sc.timeout_secs;
+    // Deadline floor and tick scaled to the compressed bench horizon (the
+    // same scaling the chaos harness applies), clamped away from zero so
+    // OS-level scheduling jitter on a loaded CI box cannot flag a healthy
+    // chunk.
+    let h = cfg.estimated_makespan(&cfg.workload()).max(1e-6);
+    cfg.health = crate::coordinator::HealthPolicy {
+        floor_secs: (h * 0.5).clamp(0.002, 0.25),
+        tick_secs: (h * 0.25).clamp(0.002, 0.5),
+        ..crate::coordinator::HealthPolicy::on()
+    };
+    Ok(CaseSpec { id: cfg.case_label(), cfg, time_scale: 1.0, reps: sc.reps })
+}
+
 /// Build the full case grid for `settings`.
 pub fn campaign_cases(settings: &BenchSettings) -> Result<Vec<CaseSpec>> {
     let sc = &settings.scale;
@@ -280,6 +315,9 @@ pub fn campaign_cases(settings: &BenchSettings) -> Result<Vec<CaseSpec>> {
                     (Technique::Gss, Scenario::Baseline),
                 ] {
                     cases.push(real_case(settings, runtime, technique, scenario)?);
+                }
+                if runtime == RuntimeKind::Net {
+                    cases.push(net_stall_case(settings)?);
                 }
             }
             RuntimeKind::Hier => {
@@ -454,10 +492,29 @@ mod tests {
     fn quick_grid_has_unique_ids_across_all_runtimes() {
         let cases = campaign_cases(&BenchSettings::new(BenchScale::quick(), 1)).unwrap();
         // 10 sim (6 grid + no-rdlb + 2 perturb + flagship) + 3 native
-        // + 3 net + 2 hier.
-        assert_eq!(cases.len(), 18, "{:?}", cases.iter().map(|c| &c.id).collect::<Vec<_>>());
+        // + 4 net (3 grid + stall) + 2 hier.
+        assert_eq!(cases.len(), 19, "{:?}", cases.iter().map(|c| &c.id).collect::<Vec<_>>());
         assert!(cases.iter().any(|c| c.cfg.runtime == RuntimeKind::Net));
         assert!(cases.iter().any(|c| c.cfg.runtime == RuntimeKind::Hier));
+        let stall = cases.iter().find(|c| c.id.contains("/stall/")).expect("stall case");
+        assert!(stall.cfg.health.enabled, "stall case must arm the health layer");
+    }
+
+    #[test]
+    fn net_stall_case_completes_in_bounded_time_at_smoke_scale() {
+        let settings = BenchSettings {
+            runtimes: vec![RuntimeKind::Net],
+            ..BenchSettings::new(BenchScale::smoke(), 5)
+        };
+        let cases = campaign_cases(&settings).unwrap();
+        let stall = cases.into_iter().find(|c| c.id.contains("/stall/")).expect("stall case");
+        let report = run_case(&stall).unwrap();
+        // Without speculative re-dispatch the stalled node would idle the
+        // run for 4x the horizon; with health armed it must complete, and
+        // complete every task exactly (synthetic digest is 1.0/task).
+        assert!(!report.outcome.hung, "{} hung", stall.id);
+        assert_eq!(report.outcome.finished, report.outcome.n, "{} incomplete", stall.id);
+        assert_eq!(report.outcome.digest, report.outcome.n as f64, "{} digest", stall.id);
     }
 
     #[test]

@@ -53,11 +53,29 @@ pub struct ScheduleGen {
     /// Armed deliberate bug applied to every drawn scenario (oracle
     /// self-tests only; forces net-only execution).
     pub bug: Option<BugHook>,
+    /// Arm a seeded mid-chunk stall (plus the worker-health layer) on
+    /// every stall-capable drawn scenario (`rdlb chaos --stall`).  The
+    /// draw comes off the scenario seed, not the generator's stream, so
+    /// unarmed campaigns stay byte-identical — pinned by
+    /// `stall_and_partition_arming_leaves_other_fields_identical`.
+    pub stall: bool,
+    /// Arm a seeded both-direction partition window (plus the health
+    /// layer) on every partition-capable drawn scenario (`rdlb chaos
+    /// --partition`).  Same byte-stability rule as [`stall`].
+    ///
+    /// [`stall`]: ScheduleGen::stall
+    pub partition: bool,
 }
 
 impl ScheduleGen {
     pub fn new(campaign_seed: u64) -> ScheduleGen {
-        ScheduleGen { rng: Rng::new(campaign_seed ^ 0xC4A0_55ED), next_id: 0, bug: None }
+        ScheduleGen {
+            rng: Rng::new(campaign_seed ^ 0xC4A0_55ED),
+            next_id: 0,
+            bug: None,
+            stall: false,
+            partition: false,
+        }
     }
 
     /// Draw the next schedule in the campaign's deterministic sequence.
@@ -135,6 +153,15 @@ impl ScheduleGen {
             ((horizon * 20_000.0) as u64).clamp(400, 1500)
         };
 
+        // Stall/partition arming draws off the *scenario* seed, so flipping
+        // these flags never touches the generator's own stream above.
+        if self.stall {
+            sc.arm_stall();
+        }
+        if self.partition {
+            sc.arm_partition();
+        }
+
         debug_assert!(sc.validate().is_ok(), "generator drew an invalid scenario");
         sc
     }
@@ -195,6 +222,37 @@ mod tests {
             "256 draws must cover the whole fault surface"
         );
         assert!(saw_sim, "some scenarios must be simulator-expressible");
+    }
+
+    #[test]
+    fn stall_and_partition_arming_leaves_other_fields_identical() {
+        // The byte-identity pin: arming stall/partition campaigns must not
+        // perturb the generator's PRNG stream, so every drawn schedule is
+        // identical to the unarmed draw except for the stall envelope, the
+        // partition window, and the health flag they add.
+        let base = ScheduleGen::new(77).take(64);
+        let mut g = ScheduleGen::new(77);
+        g.stall = true;
+        g.partition = true;
+        let armed = g.take(64);
+        assert_ne!(base, armed, "rdlb draws must actually arm something");
+        let mut saw_stall = false;
+        let mut saw_partition = false;
+        for (plain, sc) in base.iter().zip(&armed) {
+            sc.validate().unwrap();
+            saw_stall |= sc.stalled_workers() > 0;
+            saw_partition |= sc.wire.partition_secs > 0.0;
+            let mut stripped = sc.clone();
+            for f in &mut stripped.faults {
+                f.stall_after = None;
+                f.stall_secs = 0.0;
+            }
+            stripped.wire.partition_from = 0.0;
+            stripped.wire.partition_secs = 0.0;
+            stripped.health = false;
+            assert_eq!(&stripped, plain, "arming may only add stall/partition/health");
+        }
+        assert!(saw_stall && saw_partition, "64 draws must arm both fault kinds");
     }
 
     #[test]

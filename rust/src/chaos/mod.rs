@@ -76,6 +76,14 @@ pub struct WorkerFault {
     /// Net only: a churning peer that registers with a stale protocol
     /// version, is refused, and leaves — it must never be scheduled.
     pub stale_version: bool,
+    /// Net only (protocol v4): hang this many seconds after start
+    /// *without* closing the connection — the SIGSTOP'd-process shape a
+    /// fail-stop cannot model.  The worker keeps answering heartbeats with
+    /// a frozen progress counter, so only the deadline layer can tell it
+    /// from a slow-but-advancing peer.  `None` = no stall.
+    pub stall_after: Option<f64>,
+    /// How long a stall lasts before the worker resumes, seconds.
+    pub stall_secs: f64,
 }
 
 impl WorkerFault {
@@ -86,6 +94,8 @@ impl WorkerFault {
             latency: 0.0,
             join_after: 0.0,
             stale_version: false,
+            stall_after: None,
+            stall_secs: 0.0,
         }
     }
 
@@ -95,11 +105,13 @@ impl WorkerFault {
             && self.latency <= 0.0
             && self.join_after <= 0.0
             && !self.stale_version
+            && self.stall_after.is_none()
     }
 
-    /// Any net-only behaviour (late join / stale churner)?
+    /// Any net-only behaviour (late join / stale churner / mid-chunk
+    /// stall)?
     pub fn net_only(&self) -> bool {
-        self.join_after > 0.0 || self.stale_version
+        self.join_after > 0.0 || self.stale_version || self.stall_after.is_some()
     }
 }
 
@@ -111,15 +123,33 @@ pub struct WireChaos {
     pub dup_prob: f64,
     pub delay_prob: f64,
     pub delay_ms: f64,
+    /// Partition window: this many seconds after the connection opens,
+    /// every data frame in *both* directions is blackholed (handshake and
+    /// Terminate still pass) — probability-free, so arming it never
+    /// perturbs the drop/dup/delay PRNG streams.  `partition_secs == 0`
+    /// means no partition.
+    pub partition_from: f64,
+    /// Partition window length, seconds.
+    pub partition_secs: f64,
 }
 
 impl WireChaos {
     pub fn quiet() -> WireChaos {
-        WireChaos { drop_prob: 0.0, dup_prob: 0.0, delay_prob: 0.0, delay_ms: 0.0 }
+        WireChaos {
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            delay_prob: 0.0,
+            delay_ms: 0.0,
+            partition_from: 0.0,
+            partition_secs: 0.0,
+        }
     }
 
     pub fn is_quiet(&self) -> bool {
-        self.drop_prob <= 0.0 && self.dup_prob <= 0.0 && self.delay_prob <= 0.0
+        self.drop_prob <= 0.0
+            && self.dup_prob <= 0.0
+            && self.delay_prob <= 0.0
+            && self.partition_secs <= 0.0
     }
 
     /// The transport-level plan for one connection — the single place the
@@ -133,6 +163,8 @@ impl WireChaos {
             dup_prob: self.dup_prob,
             delay_prob: self.delay_prob,
             delay: std::time::Duration::from_secs_f64(self.delay_ms / 1e3),
+            partition_from: self.partition_from,
+            partition_secs: self.partition_secs,
             seed,
         }
     }
@@ -202,6 +234,13 @@ pub struct ChaosScenario {
     ///
     /// [`hier`]: ChaosScenario::hier
     pub master_kill: Option<u64>,
+    /// Arm the proactive worker-health layer (per-chunk deadlines,
+    /// heartbeats, overdue speculation, quarantine) with a chaos-scaled
+    /// policy derived from the expected makespan.  Set by
+    /// [`ChaosScenario::arm_stall`] / [`ChaosScenario::arm_partition`] so
+    /// deadline speculation races the injected straggler; serialized only
+    /// when armed, keeping pre-v4 reproducers byte-identical.
+    pub health: bool,
 }
 
 impl ChaosScenario {
@@ -231,6 +270,7 @@ impl ChaosScenario {
             bug: None,
             hier: false,
             master_kill: None,
+            health: false,
         }
     }
 
@@ -269,10 +309,67 @@ impl ChaosScenario {
         }
     }
 
+    /// Can a mid-chunk stall be injected?  Routing around a stalled-but-
+    /// alive worker needs rDLB re-dispatch; without it the run just waits
+    /// the stall out, which is a slow no-op for the oracle.
+    pub fn stall_capable(&self) -> bool {
+        self.rdlb && self.p >= 2
+    }
+
+    /// Arm a seeded mid-chunk stall on one non-pristine worker, plus the
+    /// worker-health layer that is supposed to flag it.  The stall point
+    /// and length come from a PRNG stream derived off the scenario seed —
+    /// never from the generator's own stream — so arming the fault leaves
+    /// every other drawn schedule (and therefore unarmed campaign output)
+    /// byte-identical.  The stall is long relative to the run, so without
+    /// overdue speculation the stalled chunk would dominate the makespan;
+    /// it still ends well inside the hang bound, so completion never
+    /// depends on health timing.
+    pub fn arm_stall(&mut self) {
+        if !self.stall_capable() {
+            return;
+        }
+        let mut rng = crate::util::Rng::new(self.seed ^ 0x57A1_1ED0);
+        let w = 1 + (rng.next_u64() % (self.p as u64 - 1)) as usize;
+        let horizon = self.est_makespan();
+        self.faults[w].stall_after = Some(horizon * rng.uniform(0.1, 0.5));
+        self.faults[w].stall_secs = (horizon * rng.uniform(2.0, 4.0)).max(0.05);
+        self.health = true;
+    }
+
+    /// Can a partition window be injected?  Same rDLB requirement as
+    /// [`stall_capable`](ChaosScenario::stall_capable): chunks assigned to
+    /// partitioned workers must be re-dispatchable to the reachable side.
+    pub fn partition_capable(&self) -> bool {
+        self.rdlb && self.p >= 2
+    }
+
+    /// Arm a seeded both-direction frame blackhole window on every
+    /// non-pristine connection, plus the worker-health layer.  Window
+    /// bounds come off the scenario seed (see
+    /// [`arm_stall`](ChaosScenario::arm_stall) for the byte-stability
+    /// rule); worker 0's connection is never wrapped, so progress — and
+    /// with rDLB, completion — survives an arbitrarily long window.
+    pub fn arm_partition(&mut self) {
+        if !self.partition_capable() {
+            return;
+        }
+        let mut rng = crate::util::Rng::new(self.seed ^ 0x9A27_7171);
+        let horizon = self.est_makespan();
+        self.wire.partition_from = horizon * rng.uniform(0.05, 0.4);
+        self.wire.partition_secs = (horizon * rng.uniform(0.5, 2.0)).max(0.02);
+        self.health = true;
+    }
+
     /// Number of injected fail-stop failures (< P by construction: worker 0
     /// never fails).
     pub fn failures(&self) -> usize {
         self.faults.iter().filter(|f| f.fail_after.is_some()).count()
+    }
+
+    /// Number of workers with an armed mid-chunk stall.
+    pub fn stalled_workers(&self) -> usize {
+        self.faults.iter().filter(|f| f.stall_after.is_some()).count()
     }
 
     /// Number of stale-version churners.
@@ -345,6 +442,15 @@ impl ChaosScenario {
         if !self.wire.is_quiet() {
             tags.push_str("+wire");
         }
+        if self.stalled_workers() > 0 {
+            tags.push_str("+stall");
+        }
+        if self.wire.partition_secs > 0.0 {
+            tags.push_str("+part");
+        }
+        if self.health {
+            tags.push_str("+health");
+        }
         if self.bug.is_some() {
             tags.push_str("+bug");
         }
@@ -376,6 +482,16 @@ impl ChaosScenario {
         anyhow::ensure!(self.failures() < self.p, "at most P-1 failures");
         anyhow::ensure!(self.mean_cost > 0.0, "mean_cost must be positive");
         anyhow::ensure!(self.timeout_ms > 0, "timeout must be positive");
+        for (w, f) in self.faults.iter().enumerate() {
+            anyhow::ensure!(f.stall_secs >= 0.0, "worker {w}: negative stall length");
+            if f.stall_after.is_some() {
+                anyhow::ensure!(f.stall_secs > 0.0, "worker {w}: stall armed with zero length");
+            }
+        }
+        anyhow::ensure!(
+            self.wire.partition_from >= 0.0 && self.wire.partition_secs >= 0.0,
+            "negative partition window"
+        );
         anyhow::ensure!(
             self.seed < (1u64 << 53),
             "seed must be f64-exact so the JSON reproducer replays identically"
@@ -500,6 +616,42 @@ mod tests {
         assert_eq!(off.master_kill, None);
         off.master_kill = Some(2);
         assert!(off.validate().is_err());
+    }
+
+    #[test]
+    fn stall_and_partition_arming_is_capability_gated_and_seeded() {
+        let mut sc = ChaosScenario::baseline(40, 19, 100, 4, Technique::Fac, true, 1e-4);
+        sc.arm_stall();
+        sc.arm_partition();
+        assert_eq!(sc.stalled_workers(), 1, "one worker stalls");
+        assert!(sc.faults[0].is_healthy(), "worker 0 stays pristine");
+        assert!(sc.wire.partition_secs > 0.0 && sc.wire.partition_from >= 0.0);
+        assert!(sc.health, "arming a stall/partition arms the health layer");
+        sc.validate().unwrap();
+        assert_eq!(sc.runtimes(), vec![RuntimeKind::Net], "stall/partition are net-only");
+        let l = sc.label();
+        assert!(
+            l.contains("+stall") && l.contains("+part") && l.contains("+health"),
+            "{l}"
+        );
+        // Same seed, same draw: arming is a pure function of the seed.
+        let mut again = ChaosScenario::baseline(41, 19, 100, 4, Technique::Fac, true, 1e-4);
+        again.arm_stall();
+        again.arm_partition();
+        assert_eq!(again.faults, sc.faults);
+        assert_eq!(again.wire, sc.wire);
+        // A no-rDLB schedule cannot route around either fault: arming is a
+        // no-op.
+        let mut off = ChaosScenario::baseline(42, 19, 100, 4, Technique::Fac, false, 1e-4);
+        off.arm_stall();
+        off.arm_partition();
+        assert_eq!(off.stalled_workers(), 0);
+        assert_eq!(off.wire, WireChaos::quiet());
+        assert!(!off.health);
+        // A stall with a zero length is rejected outright.
+        let mut bad = ChaosScenario::baseline(43, 19, 100, 4, Technique::Fac, true, 1e-4);
+        bad.faults[1].stall_after = Some(0.01);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

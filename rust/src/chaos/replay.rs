@@ -33,6 +33,12 @@ pub fn scenario_to_json(sc: &ChaosScenario) -> Json {
             if let Some(t) = f.fail_after {
                 obj.push(("fail_after", Json::num(t)));
             }
+            if let Some(t) = f.stall_after {
+                // Only serialized when armed, so pre-v4 reproducers stay
+                // byte-identical (same rule as `hier` / `master_kill`).
+                obj.push(("stall_after", Json::num(t)));
+                obj.push(("stall_secs", Json::num(f.stall_secs)));
+            }
             Json::obj(obj)
         })
         .collect();
@@ -55,15 +61,20 @@ pub fn scenario_to_json(sc: &ChaosScenario) -> Json {
         ("mean_cost", Json::num(sc.mean_cost)),
         ("app", app),
         ("faults", Json::Arr(faults)),
-        (
-            "wire",
-            Json::obj(vec![
+        ("wire", {
+            let mut wire = vec![
                 ("drop_prob", Json::num(sc.wire.drop_prob)),
                 ("dup_prob", Json::num(sc.wire.dup_prob)),
                 ("delay_prob", Json::num(sc.wire.delay_prob)),
                 ("delay_ms", Json::num(sc.wire.delay_ms)),
-            ]),
-        ),
+            ];
+            if sc.wire.partition_secs > 0.0 {
+                // Armed-only, like the stall fields above.
+                wire.push(("partition_from", Json::num(sc.wire.partition_from)));
+                wire.push(("partition_secs", Json::num(sc.wire.partition_secs)));
+            }
+            Json::obj(wire)
+        }),
         ("timeout_ms", Json::num(sc.timeout_ms as f64)),
     ];
     if let Some(BugHook::DropOneRedispatch) = sc.bug {
@@ -79,6 +90,10 @@ pub fn scenario_to_json(sc: &ChaosScenario) -> Json {
     if let Some(k) = sc.master_kill {
         // Same byte-stability rule as `hier`: absent unless armed.
         obj.push(("master_kill", Json::num(k as f64)));
+    }
+    if sc.health {
+        // Same byte-stability rule again: absent unless armed.
+        obj.push(("health", Json::Bool(true)));
     }
     Json::obj(obj)
 }
@@ -117,6 +132,8 @@ pub fn scenario_from_json(v: &Json) -> Result<ChaosScenario> {
                 latency: f.req("latency")?.as_f64().context("latency")?,
                 join_after: f.req("join_after")?.as_f64().context("join_after")?,
                 stale_version: f.req("stale_version")?.as_bool().context("stale_version")?,
+                stall_after: f.get("stall_after").and_then(Json::as_f64),
+                stall_secs: f.get("stall_secs").and_then(Json::as_f64).unwrap_or(0.0),
             })
         })
         .collect::<Result<Vec<_>>>()?;
@@ -136,6 +153,8 @@ pub fn scenario_from_json(v: &Json) -> Result<ChaosScenario> {
             dup_prob: wire.req("dup_prob")?.as_f64().context("dup_prob")?,
             delay_prob: wire.req("delay_prob")?.as_f64().context("delay_prob")?,
             delay_ms: wire.req("delay_ms")?.as_f64().context("delay_ms")?,
+            partition_from: wire.get("partition_from").and_then(Json::as_f64).unwrap_or(0.0),
+            partition_secs: wire.get("partition_secs").and_then(Json::as_f64).unwrap_or(0.0),
         },
         timeout_ms: v.req("timeout_ms")?.as_u64().context("timeout_ms")?,
         bug: match v.get("bug").and_then(Json::as_str) {
@@ -145,6 +164,7 @@ pub fn scenario_from_json(v: &Json) -> Result<ChaosScenario> {
         },
         hier: v.get("hier").and_then(Json::as_bool).unwrap_or(false),
         master_kill: v.get("master_kill").and_then(Json::as_u64),
+        health: v.get("health").and_then(Json::as_bool).unwrap_or(false),
     };
     sc.validate()?;
     Ok(sc)
@@ -176,7 +196,13 @@ mod tests {
         sc.faults[2].slowdown = 1.75;
         sc.faults[2].latency = 0.001_5;
         sc.faults[3].join_after = 0.01;
-        sc.wire = WireChaos { drop_prob: 0.05, dup_prob: 0.02, delay_prob: 0.1, delay_ms: 0.7 };
+        sc.wire = WireChaos {
+            drop_prob: 0.05,
+            dup_prob: 0.02,
+            delay_prob: 0.1,
+            delay_ms: 0.7,
+            ..WireChaos::quiet()
+        };
         sc.timeout_ms = 750;
         let text = scenario_to_json_string(&sc);
         let back = scenario_from_json_str(&text).unwrap();
@@ -215,6 +241,26 @@ mod tests {
             "armed reproducers must re-execute the net kill/resume path"
         );
         assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn stall_partition_and_health_roundtrip_and_stay_absent_when_unarmed() {
+        let mut sc = ChaosScenario::baseline(8, 29, 96, 3, Technique::Fac, true, 1e-4);
+        sc.arm_stall();
+        sc.arm_partition();
+        assert!(sc.health && sc.stalled_workers() == 1 && sc.wire.partition_secs > 0.0);
+        let text = scenario_to_json_string(&sc);
+        let back = scenario_from_json_str(&text).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(scenario_to_json_string(&back), text);
+        // Unarmed schedules keep the pre-v4 serialized shape: none of the
+        // new keys appear, so old reproducers and new ones hash the same.
+        let plain = ChaosScenario::baseline(9, 29, 96, 3, Technique::Fac, true, 1e-4);
+        let t = scenario_to_json_string(&plain);
+        assert!(
+            !t.contains("stall") && !t.contains("partition") && !t.contains("health"),
+            "{t}"
+        );
     }
 
     #[test]

@@ -49,6 +49,15 @@ pub struct ChaosSettings {
     /// Off by default so `(seed, budget)` campaigns keep byte-identical
     /// output across versions.
     pub master_kill: bool,
+    /// Arm a seeded mid-chunk stall — a worker hangs with its connection
+    /// open, heartbeating a frozen progress counter — plus the
+    /// worker-health layer on every stall-capable (rDLB) schedule
+    /// (`rdlb chaos --stall`).  Off by default, same stability rule.
+    pub stall: bool,
+    /// Arm a seeded both-direction frame blackhole window plus the
+    /// worker-health layer on every partition-capable (rDLB) schedule
+    /// (`rdlb chaos --partition`).  Off by default, same stability rule.
+    pub partition: bool,
 }
 
 impl ChaosSettings {
@@ -63,6 +72,8 @@ impl ChaosSettings {
             hier: false,
             journal_oracle: false,
             master_kill: false,
+            stall: false,
+            partition: false,
         }
     }
 }
@@ -112,6 +123,8 @@ impl ChaosOutcome {
 pub fn run_chaos(settings: &ChaosSettings) -> Result<ChaosOutcome> {
     let mut gen = ScheduleGen::new(settings.seed);
     gen.bug = settings.bug;
+    gen.stall = settings.stall;
+    gen.partition = settings.partition;
     let mut outcome = ChaosOutcome {
         seed: settings.seed,
         scenarios: 0,
@@ -255,6 +268,26 @@ mod tests {
         assert_eq!(a.scenarios, base.scenarios);
         assert_eq!(a.runs, base.runs);
         assert_eq!(a.checks, base.checks);
+    }
+
+    #[test]
+    fn stall_partition_campaign_passes_and_stays_deterministic() {
+        let mut settings = quiet(5, 8);
+        settings.stall = true;
+        settings.partition = true;
+        let a = run_chaos(&settings).unwrap();
+        let b = run_chaos(&settings).unwrap();
+        assert!(a.passed(), "{:?}", a.failures);
+        assert_eq!(
+            a.summary(),
+            b.summary(),
+            "stall/partition campaigns must stay seed-deterministic"
+        );
+        // Arming draws off scenario seeds only: the unarmed campaign's
+        // schedule sequence — and hence its scenario count — is untouched.
+        let base = run_chaos(&quiet(5, 8)).unwrap();
+        assert!(base.passed(), "{:?}", base.failures);
+        assert_eq!(a.scenarios, base.scenarios);
     }
 
     #[test]

@@ -17,7 +17,8 @@ use anyhow::{Context, Result};
 use crate::apps::{AppKind, CostModel, MandelbrotApp};
 use crate::config::{ExperimentConfig, RuntimeKind, Scenario};
 use crate::coordinator::{
-    Effect, Engine, EngineEvent, EventSink, MasterConfig, MultiSink, ResultNotes, SharedSink,
+    Effect, Engine, EngineEvent, EventSink, HealthPolicy, MasterConfig, MultiSink, ResultNotes,
+    SharedSink,
 };
 use crate::hier::{HierParams, HierRuntime};
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
@@ -65,6 +66,23 @@ fn cost_model(sc: &ChaosScenario) -> CostModel {
     CostModel::from_costs(
         (0..sc.n).map(|_| rng.uniform(0.5 * sc.mean_cost, 1.5 * sc.mean_cost)).collect(),
     )
+}
+
+/// The chaos-scaled worker-health policy for an armed scenario: deadline
+/// floor and tick shrink with the expected makespan so millisecond-scale
+/// chaos runs actually exercise overdue detection (the serve-scale
+/// defaults in [`HealthPolicy::on`] would never fire inside one).  A pure
+/// function of the scenario, like everything else the harness derives.
+fn health_policy(sc: &ChaosScenario) -> HealthPolicy {
+    if !sc.health {
+        return HealthPolicy::default();
+    }
+    let h = sc.est_makespan();
+    HealthPolicy {
+        floor_secs: (h * 0.5).clamp(0.002, 0.25),
+        tick_secs: (h * 0.25).clamp(0.002, 0.5),
+        ..HealthPolicy::on()
+    }
 }
 
 /// The serial kernel's digest — the exactly-once oracle every completed
@@ -160,6 +178,7 @@ fn run_sim(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Outcome> {
         .build()?;
     let mut params = cfg.sim_params(0)?;
     params.sink = sink;
+    params.health = health_policy(sc);
     SimCluster::new(params)?.run()
 }
 
@@ -169,6 +188,7 @@ fn run_native(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Outcome> {
     params.sink = sink;
     params.tech_params.seed = sc.seed ^ 0x4A4D;
     params.timeout = Duration::from_millis(sc.timeout_ms);
+    params.health = health_policy(sc);
     for (w, fault) in sc.faults.iter().enumerate() {
         params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
     }
@@ -187,6 +207,7 @@ fn run_hier(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Outcome> {
     params.sink = sink;
     params.tech_params.seed = sc.seed ^ 0x4A4D;
     params.timeout = Duration::from_millis(sc.timeout_ms);
+    params.health = health_policy(sc);
     for (w, fault) in sc.faults.iter().enumerate() {
         params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
     }
@@ -270,12 +291,15 @@ fn run_net(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<RuntimeRun> {
     params.sink = sink;
     params.tech_params.seed = sc.seed ^ 0x4A4D;
     params.timeout = Duration::from_millis(sc.timeout_ms);
+    params.health = health_policy(sc);
     params.test_drop_one_redispatch = matches!(sc.bug, Some(BugHook::DropOneRedispatch));
     for (w, fault) in sc.faults.iter().enumerate() {
         params.faults[w] = FaultSpec {
             fail_after: fault.fail_after,
             slowdown: fault.slowdown,
             latency: fault.latency,
+            stall_after: fault.stall_after,
+            stall_secs: fault.stall_secs,
         };
     }
 
@@ -337,12 +361,15 @@ fn run_net_with_kill(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Run
     let mut params = NetMasterParams::new(sc.n, p, sc.technique, sc.rdlb);
     params.tech_params.seed = sc.seed ^ 0x4A4D;
     params.timeout = Duration::from_millis(sc.timeout_ms);
+    params.health = health_policy(sc);
     params.test_drop_one_redispatch = matches!(sc.bug, Some(BugHook::DropOneRedispatch));
     for (w, fault) in sc.faults.iter().enumerate() {
         params.faults[w] = FaultSpec {
             fail_after: fault.fail_after,
             slowdown: fault.slowdown,
             latency: fault.latency,
+            stall_after: fault.stall_after,
+            stall_secs: fault.stall_secs,
         };
     }
 
@@ -365,6 +392,7 @@ fn run_net_with_kill(sc: &ChaosScenario, sink: Option<SharedSink>) -> Result<Run
         technique: sc.technique,
         params: params.tech_params.clone(),
         rdlb: sc.rdlb,
+        health: params.health.clone(),
     };
     let mut engine = Engine::new(cfg.clone());
     if params.test_drop_one_redispatch {
@@ -533,6 +561,51 @@ mod tests {
         let net = runs.iter().find(|r| r.runtime == RuntimeKind::Net).unwrap();
         assert!(net.outcome.completed(), "{:?}", net.outcome);
         assert_eq!(net.outcome.result_digest, expected_digest(&sc));
+    }
+
+    #[test]
+    fn stalled_worker_is_flagged_overdue_and_digest_parity_holds() {
+        // Worker 2 hangs mid-chunk for 250 ms with its connection open —
+        // far past the chaos-scaled deadline — while the run's natural
+        // makespan is ~20 ms.  The health layer must flag the chunk
+        // overdue, rDLB must re-dispatch it, and the straggler's late
+        // result must be suppressed by first-completion filtering: the
+        // digest stays bit-identical to the serial kernel.
+        let mut sc = ChaosScenario::baseline(40, 53, 160, 4, Technique::Fac, true, 5e-4);
+        sc.faults[2].stall_after = Some(0.01);
+        sc.faults[2].stall_secs = 0.25;
+        sc.health = true;
+        let runs = execute_scenario(&sc).unwrap();
+        assert_eq!(runs.len(), 1, "stalls are net-only");
+        let net = &runs[0];
+        assert!(net.outcome.completed(), "{:?}", net.outcome);
+        assert_eq!(net.outcome.result_digest, expected_digest(&sc));
+        assert!(
+            net.outcome.stats.overdue_chunks > 0,
+            "the stalled chunk must be flagged overdue: {:?}",
+            net.outcome.stats
+        );
+        assert_eq!(net.outcome.stats.identity_violations(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn partition_window_recovers_with_redispatch_and_digest_parity() {
+        // Every connection but worker 0's blackholes all data frames from
+        // 5 ms on, effectively forever.  rDLB re-dispatches the stranded
+        // in-flight chunks to the reachable side; the run completes with
+        // exactly-once digest parity and Terminate still reaches the
+        // partitioned workers so their threads exit cleanly.
+        let mut sc = ChaosScenario::baseline(41, 59, 160, 4, Technique::Fac, true, 5e-4);
+        sc.wire.partition_from = 0.005;
+        sc.wire.partition_secs = 30.0;
+        sc.health = true;
+        let runs = execute_scenario(&sc).unwrap();
+        assert_eq!(runs.len(), 1, "partitions are net-only");
+        let net = &runs[0];
+        assert!(net.outcome.completed(), "{:?}", net.outcome);
+        assert_eq!(net.outcome.finished, 160);
+        assert_eq!(net.outcome.result_digest, expected_digest(&sc));
+        assert_eq!(net.outcome.stats.identity_violations(), Vec::<String>::new());
     }
 
     #[test]

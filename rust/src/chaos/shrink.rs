@@ -77,6 +77,44 @@ fn candidates(sc: &ChaosScenario) -> Vec<ChaosScenario> {
             out.push(c);
         }
     }
+    // A failure that reproduces without the health layer (no overdue
+    // speculation racing the straggler) is simpler to diagnose; a
+    // health-only failure keeps the flag.
+    if sc.health {
+        let mut c = sc.clone();
+        c.health = false;
+        out.push(c);
+    }
+    // Drop armed stalls wholesale, then try shortening the hang.
+    if sc.stalled_workers() > 0 {
+        let mut c = sc.clone();
+        for f in &mut c.faults {
+            f.stall_after = None;
+            f.stall_secs = 0.0;
+        }
+        out.push(c);
+        if sc.faults.iter().any(|f| f.stall_after.is_some() && f.stall_secs > 0.02) {
+            let mut c = sc.clone();
+            for f in &mut c.faults {
+                if f.stall_after.is_some() {
+                    f.stall_secs = (f.stall_secs * 0.5).max(0.01);
+                }
+            }
+            out.push(c);
+        }
+    }
+    // Likewise the partition window: drop it, then shorten it.
+    if sc.wire.partition_secs > 0.0 {
+        let mut c = sc.clone();
+        c.wire.partition_from = 0.0;
+        c.wire.partition_secs = 0.0;
+        out.push(c);
+        if sc.wire.partition_secs > 0.02 {
+            let mut c = sc.clone();
+            c.wire.partition_secs = (sc.wire.partition_secs * 0.5).max(0.01);
+            out.push(c);
+        }
+    }
     if let ChaosApp::Mandelbrot { .. } = sc.app {
         let mut c = sc.clone();
         c.app = ChaosApp::Synthetic;
@@ -241,6 +279,41 @@ mod tests {
         assert!(
             cs.iter().any(|c| c.master_kill == Some(2)),
             "tighten-kill candidate halves the kill point"
+        );
+        for c in &cs {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn stall_and_partition_candidates_drop_or_shorten() {
+        let mut sc = ChaosScenario::baseline(5, 13, 120, 4, Technique::Fac, true, 1e-4);
+        sc.faults[2].stall_after = Some(0.001);
+        sc.faults[2].stall_secs = 0.2;
+        sc.wire.partition_from = 0.001;
+        sc.wire.partition_secs = 0.1;
+        sc.health = true;
+        sc.validate().unwrap();
+        let cs = candidates(&sc);
+        assert!(
+            cs.iter().any(|c| c.stalled_workers() == 0 && c.wire.partition_secs > 0.0),
+            "drop-stall candidate present"
+        );
+        assert!(
+            cs.iter().any(|c| c.faults[2].stall_after.is_some() && c.faults[2].stall_secs == 0.1),
+            "shorten-stall candidate halves the hang"
+        );
+        assert!(
+            cs.iter().any(|c| c.wire.partition_secs == 0.0 && c.stalled_workers() > 0),
+            "drop-partition candidate present"
+        );
+        assert!(
+            cs.iter().any(|c| c.wire.partition_secs == 0.05),
+            "shorten-partition candidate halves the window"
+        );
+        assert!(
+            cs.iter().any(|c| !c.health && c.stalled_workers() > 0),
+            "drop-health candidate keeps the fault but disarms speculation"
         );
         for c in &cs {
             c.validate().unwrap();

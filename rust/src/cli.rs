@@ -7,6 +7,8 @@
 //! ```text
 //! rdlb run        [--app A --technique T --pes P --tasks N --rdlb B --scenario S --seed K]
 //!                 [--runtime sim|native|net|hier] [--groups G]
+//!                 [--health] [--health-slack X --health-floor S --health-k K
+//!                  --health-min-pool M --health-tick S]
 //!                 [--journal FILE] [--metrics] [--trace-out FILE.csv] [--gantt WIDTH]
 //! rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1 [--scale smoke|quick|paper] [--out DIR]
 //! rdlb trace      [--scenario fig1|fig2] [--rdlb B]
@@ -16,11 +18,12 @@
 //!                  --artifacts DIR --failures F --tasks N]
 //! rdlb serve      [--listen ADDR] [--workers P | --spawn-local P] [--app A --technique T]
 //!                 [--rdlb | --no-rdlb] [--failures K --horizon S] [--tasks N --timeout S]
-//!                 [--metrics-every SECS] [--journal-dir DIR | --resume DIR]
+//!                 [--health ...] [--metrics-every SECS] [--journal-dir DIR | --resume DIR]
 //! rdlb worker     --connect ADDR [--app A --backend native|pjrt --artifacts DIR]
 //!                 [--reconnect S]
 //! rdlb bench      [--scale smoke|quick|full] [--runtimes sim,native,net,hier] ...
-//! rdlb chaos      [--seed K] [--budget quick|deep|N] [--hier] [--journal-oracle] [--master-kill] ... | --replay FILE
+//! rdlb chaos      [--seed K] [--budget quick|deep|N] [--hier] [--journal-oracle] [--master-kill]
+//!                 [--stall] [--partition] ... | --replay FILE
 //! ```
 
 use std::net::TcpListener;
@@ -36,7 +39,7 @@ use crate::bench::{
 };
 use crate::chaos::{self, ChaosBudget, ChaosSettings};
 use crate::config::{ExperimentConfig, NetSettings, RuntimeKind, Scenario};
-use crate::coordinator::{Engine, SharedSink};
+use crate::coordinator::{Engine, HealthPolicy, SharedSink};
 use crate::dls::Technique;
 use crate::experiments::{
     cells_to_csv, conceptual_trace, fig3_failures, fig3_perturbations, fig4_resilience,
@@ -45,8 +48,8 @@ use crate::experiments::{
 };
 use crate::native::{ComputeBackend, NativeParams, NativeRuntime};
 use crate::net::{
-    bind_reusable, run_worker, run_worker_reconnecting, serve_tcp, serve_tcp_session, wal,
-    NetMasterParams, TcpTransport,
+    bind_reusable, reconnect_backoff, run_worker, run_worker_reconnecting, serve_tcp,
+    serve_tcp_session, wal, NetMasterParams, TcpTransport,
 };
 use crate::obs::{
     self, chrome_trace, read_journal, replay_stats, replay_trace, JournalSink, MetricsRegistry,
@@ -62,9 +65,11 @@ rdlb — robust dynamic load balancing (Mohammed, Cavelan, Ciorba 2019) reproduc
 USAGE:
   rdlb run        [--app mandelbrot|psia|uniform|exponential] [--technique SS|FAC|...]
                   [--pes P] [--tasks N] [--rdlb true|false]
-                  [--scenario baseline|failures:<k>|pe|latency|combined] [--seed K]
+                  [--scenario baseline|failures:<k>|pe|latency|combined|stall] [--seed K]
                   [--runtime sim|native|net|hier] [--groups G]
                   [--time-scale X] [--timeout S]
+                  [--health] [--health-slack X] [--health-floor S] [--health-k K]
+                  [--health-min-pool M] [--health-tick S]
                   [--journal FILE] [--metrics] [--trace-out FILE.csv] [--gantt WIDTH]
   rdlb experiment --id fig3a|fig3b|fig3c|fig3d|fig4|fig5|table1
                   [--scale smoke|quick|paper] [--out DIR]
@@ -73,10 +78,12 @@ USAGE:
   rdlb theory     [--reps R]
   rdlb native     [--app mandelbrot|psia] [--workers W] [--technique T]
                   [--rdlb true|false] [--backend native|pjrt]
-                  [--artifacts DIR] [--failures F] [--tasks N]
+                  [--artifacts DIR] [--failures F] [--tasks N] [--health ...]
   rdlb serve      [--config FILE] [--listen ADDR] [--workers P | --spawn-local P]
                   [--app mandelbrot|psia] [--technique T] [--rdlb | --no-rdlb]
                   [--failures K] [--horizon S] [--tasks N] [--timeout S]
+                  [--health] [--health-slack X] [--health-floor S] [--health-k K]
+                  [--health-min-pool M] [--health-tick S]
                   [--max-iter I] [--metrics-every SECS]
                   [--journal-dir DIR | --resume DIR]
   rdlb worker     [--config FILE] --connect ADDR [--app mandelbrot|psia]
@@ -87,7 +94,7 @@ USAGE:
                   [--wall-threshold FRAC] [--events-threshold FRAC] [--quiet]
   rdlb chaos      [--seed K] [--budget quick|deep|N] [--out-dir DIR]
                   [--shrink-budget N] [--hier] [--journal-oracle]
-                  [--master-kill] [--quiet]
+                  [--master-kill] [--stall] [--partition] [--quiet]
   rdlb chaos      --replay FILE
 
 `run --runtime hier` executes the scenario on the two-level hierarchical
@@ -117,10 +124,29 @@ with rDLB on, documented hang-at-timeout with rDLB off, and the
 MasterStats accounting identities. `--master-kill` additionally kills the
 net master at a seeded point mid-run and resumes it by replaying its event
 journal (the in-process twin of `serve --resume` after a kill -9); the
-recovered run faces the same oracle. Failing schedules are shrunk to a
+recovered run faces the same oracle. `--stall` arms a seeded mid-run worker
+stall (hung with its connection open, heartbeating a frozen progress
+counter — the SIGSTOP shape) and `--partition` a seeded both-direction
+frame blackhole window; both also arm the worker-health layer, so overdue
+detection and speculative re-dispatch race the injected straggler under
+the same digest-parity oracle. Failing schedules are shrunk to a
 minimal JSON reproducer (chaos_failure_<id>.json) that `--replay FILE`
 re-executes deterministically. Output is seed-deterministic; exits non-zero
 on any violation. See TESTING.md.
+
+`--health` (run/native/serve) arms the proactive worker-health layer: the
+master keeps an online per-worker rate estimate, derives a per-chunk
+deadline (predicted compute × --health-slack, floored at --health-floor
+seconds), and flags overdue chunks for immediate speculative rDLB
+re-dispatch instead of waiting for the hang bound — the straggler stays
+registered, and its late result is still honored through the ordinary
+first-completion filter. A worker going overdue --health-k times in a row
+is quarantined (no new primary work; never below --health-min-pool
+eligible workers) until it completes a chunk cleanly. On the net runtime
+the v4 protocol adds Ping/Pong heartbeats carrying an in-chunk progress
+counter, so a slow-but-alive worker is told apart from a gone one. Any
+--health-* knob implies --health; all off by default, leaving seeded
+outcomes bit-identical. See ARCHITECTURE.md §Worker health.
 
 `serve` drives the distributed net runtime: it listens for P workers over
 the length-prefixed TCP wire protocol and schedules with the identical rDLB
@@ -156,7 +182,7 @@ re-derives the MasterStats from the log — the differential oracle `chaos
 ";
 
 /// Parse a `run` scenario word (`baseline`, `failures:<k>`, `pe`,
-/// `latency`, `combined`) against a `pes`-sized topology.
+/// `latency`, `combined`, `stall`) against a `pes`-sized topology.
 fn parse_scenario(s: &str, pes: usize) -> Result<Scenario> {
     let topo = if pes % 16 == 0 && pes >= 32 {
         crate::sim::Topology::new(pes / 16, 16)
@@ -168,6 +194,7 @@ fn parse_scenario(s: &str, pes: usize) -> Result<Scenario> {
         "pe" => Scenario::pe_perturb_default(&topo),
         "latency" => Scenario::latency_default(&topo),
         "combined" => Scenario::combined_default(&topo),
+        "stall" => Scenario::stall_default(&topo),
         other => {
             if let Some(count) = other.strip_prefix("failures:") {
                 Scenario::failures(count.parse()?)
@@ -175,6 +202,29 @@ fn parse_scenario(s: &str, pes: usize) -> Result<Scenario> {
                 bail!("unknown scenario {other}")
             }
         }
+    })
+}
+
+/// Parse the worker-health flags shared by `run`, `native`, and `serve`:
+/// `--health` arms the layer with its defaults, and any knob flag
+/// (`--health-slack` &c.) both sets the knob and implies arming — nobody
+/// tunes a disabled layer. With none of the flags present the returned
+/// policy is the inert default, so seeded outcomes stay bit-identical.
+fn health_from_args(args: &Args) -> Result<HealthPolicy> {
+    const KNOBS: [&str; 5] =
+        ["health-slack", "health-floor", "health-k", "health-min-pool", "health-tick"];
+    let armed = args.bool_or("health", false)? || KNOBS.iter().any(|k| args.get(k).is_some());
+    if !armed {
+        return Ok(HealthPolicy::default());
+    }
+    let d = HealthPolicy::on();
+    Ok(HealthPolicy {
+        enabled: true,
+        slack: args.f64_or("health-slack", d.slack)?,
+        floor_secs: args.f64_or("health-floor", d.floor_secs)?,
+        quarantine_k: args.u64_or("health-k", d.quarantine_k as u64)? as u32,
+        min_pool: args.usize_or("health-min-pool", d.min_pool)?,
+        tick_secs: args.f64_or("health-tick", d.tick_secs)?,
     })
 }
 
@@ -200,7 +250,8 @@ fn run_config_from_args(args: &Args) -> Result<ExperimentConfig> {
         .rdlb(rdlb)
         .runtime(runtime)
         .scenario(scenario)
-        .seed(args.u64_or("seed", 1)?);
+        .seed(args.u64_or("seed", 1)?)
+        .health(health_from_args(args)?);
     if let Some(groups) = args.usize_opt("groups")? {
         b = b.net(NetSettings { groups, ..NetSettings::default() });
     }
@@ -523,6 +574,7 @@ fn cmd_native(args: &Args) -> Result<()> {
         params = params.with_failures(failures, 2.0);
     }
     params.timeout = std::time::Duration::from_secs(args.u64_or("timeout", 120)?);
+    params.health = health_from_args(args)?;
     let t0 = std::time::Instant::now();
     let outcome = NativeRuntime::new(params)?.run()?;
     if outcome.hung {
@@ -649,8 +701,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
          (app={app}, technique={technique}, N={n}, rdlb={rdlb}, failures={failures})"
     );
 
+    // Health precedence mirrors every other serve flag: explicit --health*
+    // flags win, then a loaded config's policy, else disabled.
+    let mut health = health_from_args(args)?;
+    if !health.enabled {
+        if let Some(c) = &file {
+            health = c.health.clone();
+        }
+    }
     let mut params = NetMasterParams::new(n, workers, technique, rdlb);
     params.timeout = timeout;
+    params.health = health.clone();
+    if health.enabled {
+        println!(
+            "serve: worker-health armed (deadline = prediction x {} slack, floor {}s, \
+             tick {}s, quarantine after {} consecutive overdue)",
+            health.slack, health.floor_secs, health.tick_secs, health.quarantine_k
+        );
+    }
     if failures > 0 {
         params = params.with_failures(failures, horizon)?;
         for (w, fault) in params.faults.iter().enumerate() {
@@ -673,6 +741,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             timeout_secs: timeout.as_secs(),
             listen: addr.to_string(),
             epoch: 0,
+            health: health.clone(),
         };
         let journal = wal::create(dir, &meta)?;
         params.sink = Some(obs::with_extra_sink(params.sink.take(), journal));
@@ -774,6 +843,10 @@ fn cmd_serve_resume(args: &Args, dir: &Path) -> Result<()> {
     );
     let mut params = NetMasterParams::new(meta.n, meta.workers, meta.technique, meta.rdlb);
     params.timeout = timeout;
+    // The state directory is authoritative: the resumed session re-arms the
+    // crashed run's health policy (the recovered snapshot carries matching
+    // per-worker deadline state).
+    params.health = meta.health.clone();
     params.sink = Some(SharedSink::new(r.journal));
     arm_metrics(args, &mut params)?;
 
@@ -951,7 +1024,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // Address-seeded exponential backoff instead of a fixed 50 ms spin, so
+    // a fleet of workers aimed at a not-yet-listening master desynchronizes
+    // instead of thundering at it in lockstep (run_worker_reconnecting uses
+    // the same schedule for its crash-recovery redials).
     let deadline = Instant::now() + retry;
+    let mut backoff = reconnect_backoff(&connect);
     let transport = loop {
         match TcpTransport::connect(&connect) {
             Ok(t) => break t,
@@ -959,7 +1037,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
                 if Instant::now() >= deadline {
                     return Err(e);
                 }
-                std::thread::sleep(Duration::from_millis(50));
+                std::thread::sleep(backoff.next_delay());
             }
         }
     };
@@ -1089,6 +1167,8 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     settings.hier = args.bool_or("hier", false)?;
     settings.journal_oracle = args.bool_or("journal-oracle", false)?;
     settings.master_kill = args.bool_or("master-kill", false)?;
+    settings.stall = args.bool_or("stall", false)?;
+    settings.partition = args.bool_or("partition", false)?;
     let outcome = chaos::run_chaos(&settings)?;
     println!("{}", outcome.summary());
     if !outcome.passed() {
@@ -1193,6 +1273,32 @@ mod tests {
     }
 
     #[test]
+    fn health_flags_arm_and_tune_the_policy() {
+        // Strictly opt-in: a plain run config carries the inert default.
+        let cfg = run_config_from_args(&parse(&["run"])).unwrap();
+        assert!(!cfg.health.enabled);
+
+        // Bare --health arms the defaults.
+        let cfg = run_config_from_args(&parse(&["run", "--health"])).unwrap();
+        assert!(cfg.health.enabled);
+        assert_eq!(cfg.health.slack, HealthPolicy::on().slack);
+
+        // Any knob implies arming and overrides its default.
+        let cfg = run_config_from_args(&parse(&[
+            "run", "--health-slack", "4.5", "--health-tick", "0.1", "--health-k", "3",
+        ]))
+        .unwrap();
+        assert!(cfg.health.enabled, "tuning a knob implies --health");
+        assert_eq!(cfg.health.slack, 4.5);
+        assert_eq!(cfg.health.tick_secs, 0.1);
+        assert_eq!(cfg.health.quarantine_k, 3);
+        assert_eq!(cfg.health.floor_secs, HealthPolicy::on().floor_secs);
+
+        // Config validation rejects a slack that would flag every chunk.
+        assert!(run_config_from_args(&parse(&["run", "--health-slack", "0.5"])).is_err());
+    }
+
+    #[test]
     fn scenario_words_parse() {
         assert_eq!(parse_scenario("baseline", 8).unwrap(), Scenario::Baseline);
         assert_eq!(parse_scenario("failures:3", 8).unwrap(), Scenario::failures(3));
@@ -1202,6 +1308,7 @@ mod tests {
             Scenario::LatencyPerturb { .. }
         ));
         assert!(matches!(parse_scenario("combined", 64).unwrap(), Scenario::Combined { .. }));
+        assert_eq!(parse_scenario("stall", 64).unwrap(), Scenario::Stall { node: 3 });
         assert!(parse_scenario("bogus", 8).is_err());
     }
 }

@@ -5,6 +5,7 @@
 use anyhow::{ensure, Context, Result};
 
 use crate::apps::{AppKind, Workload};
+use crate::coordinator::HealthPolicy;
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::{FailurePlan, PerturbationModel, SimCluster, Topology};
 use crate::util::json::Json;
@@ -136,6 +137,13 @@ pub enum Scenario {
     LatencyPerturb { node: usize, delay: f64 },
     /// PE + latency on the same node.
     Combined { node: usize, factor: f64, delay: f64 },
+    /// Mid-run stall: every PE on one node freezes inside its current chunk
+    /// (SIGSTOP-like — the process stays connected but makes no progress)
+    /// and stays frozen well past the failure-free horizon. Net runtime
+    /// only (its workers model mid-chunk stalls); the straggler is recovered
+    /// by the worker-health layer's speculative re-dispatch, not by
+    /// fail-stop detection.
+    Stall { node: usize },
 }
 
 impl Scenario {
@@ -157,6 +165,10 @@ impl Scenario {
         Scenario::Combined { node: topo.nodes - 1, factor: 0.5, delay: 10.0 }
     }
 
+    pub fn stall_default(topo: &Topology) -> Self {
+        Scenario::Stall { node: topo.nodes - 1 }
+    }
+
     pub fn label(&self) -> String {
         match self {
             Scenario::Baseline => "baseline".into(),
@@ -164,6 +176,7 @@ impl Scenario {
             Scenario::PePerturb { .. } => "pe-perturb".into(),
             Scenario::LatencyPerturb { .. } => "latency-perturb".into(),
             Scenario::Combined { .. } => "combined-perturb".into(),
+            Scenario::Stall { .. } => "stall".into(),
         }
     }
 
@@ -196,6 +209,11 @@ pub struct ExperimentConfig {
     pub runtime: RuntimeKind,
     /// Connection settings when `runtime == RuntimeKind::Net`.
     pub net: NetSettings,
+    /// Proactive worker-health layer (per-chunk deadlines, heartbeats,
+    /// speculative re-dispatch; see ARCHITECTURE.md §Worker health).
+    /// Disabled by default — seeded outcomes are unchanged unless armed —
+    /// and serialized only when enabled, so pre-health configs load as-is.
+    pub health: HealthPolicy,
 }
 
 impl Default for ExperimentConfig {
@@ -215,6 +233,7 @@ impl Default for ExperimentConfig {
             replications: 1,
             runtime: RuntimeKind::default(),
             net: NetSettings::default(),
+            health: HealthPolicy::default(),
         }
     }
 }
@@ -256,6 +275,12 @@ impl ExperimentConfig {
         ensure!(self.nodes > 0 && self.ranks_per_node > 0, "empty topology");
         ensure!(self.n() > 0, "no tasks");
         ensure!(self.mean_cost > 0.0, "mean_cost must be positive");
+        if self.health.enabled {
+            ensure!(self.health.slack > 1.0, "health slack must exceed 1 (got {})", self.health.slack);
+            ensure!(self.health.floor_secs >= 0.0, "health floor must be non-negative");
+            ensure!(self.health.tick_secs > 0.0, "health tick must be positive");
+            ensure!(self.health.min_pool >= 1, "health min_pool must be at least 1");
+        }
         if self.runtime == RuntimeKind::Hier {
             ensure!(self.net.groups >= 1, "hier runtime needs at least one group");
             ensure!(
@@ -280,6 +305,13 @@ impl ExperimentConfig {
             }
             Scenario::LatencyPerturb { node, .. } => {
                 ensure!(node < self.nodes, "perturbed node {node} out of range (nodes={})", self.nodes);
+            }
+            Scenario::Stall { node } => {
+                ensure!(node < self.nodes, "stalled node {node} out of range (nodes={})", self.nodes);
+                ensure!(
+                    self.runtime == RuntimeKind::Net,
+                    "the stall scenario needs the net runtime (only its workers model mid-chunk stalls)"
+                );
             }
         }
         Ok(())
@@ -332,6 +364,7 @@ impl ExperimentConfig {
             seed: seed ^ 0x4A4D,
             ..TechniqueParams::default()
         };
+        params.health = self.health.clone();
         Ok(params)
     }
 
@@ -374,6 +407,21 @@ impl ExperimentConfig {
                 Some(n) => NetSettings::from_json(n)?,
                 None => d.net,
             },
+            health: match v.get("health") {
+                None => HealthPolicy::default(),
+                Some(h) => {
+                    let hd = HealthPolicy::on();
+                    let f = |k: &str, dft: f64| h.get(k).and_then(Json::as_f64).unwrap_or(dft);
+                    HealthPolicy {
+                        enabled: true,
+                        slack: f("slack", hd.slack),
+                        floor_secs: f("floor_secs", hd.floor_secs),
+                        quarantine_k: f("quarantine_k", hd.quarantine_k as f64) as u32,
+                        min_pool: f("min_pool", hd.min_pool as f64) as usize,
+                        tick_secs: f("tick_secs", hd.tick_secs),
+                    }
+                }
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -397,6 +445,18 @@ impl ExperimentConfig {
         ];
         if let Some(n) = self.tasks {
             obj.push(("tasks", Json::num(n as f64)));
+        }
+        if self.health.enabled {
+            obj.push((
+                "health",
+                Json::obj(vec![
+                    ("slack", Json::num(self.health.slack)),
+                    ("floor_secs", Json::num(self.health.floor_secs)),
+                    ("quarantine_k", Json::num(self.health.quarantine_k as f64)),
+                    ("min_pool", Json::num(self.health.min_pool as f64)),
+                    ("tick_secs", Json::num(self.health.tick_secs)),
+                ]),
+            ));
         }
         Json::obj(obj).to_string_pretty()
     }
@@ -427,6 +487,10 @@ impl Scenario {
                 ("factor", Json::num(factor)),
                 ("delay", Json::num(delay)),
             ]),
+            Scenario::Stall { node } => Json::obj(vec![
+                ("kind", Json::str("stall")),
+                ("node", Json::num(node as f64)),
+            ]),
         }
     }
 
@@ -449,6 +513,9 @@ impl Scenario {
                 node: v.req("node")?.as_usize().context("node")?,
                 factor: v.req("factor")?.as_f64().context("factor")?,
                 delay: v.req("delay")?.as_f64().context("delay")?,
+            },
+            "stall" => Scenario::Stall {
+                node: v.req("node")?.as_usize().context("node")?,
             },
             other => anyhow::bail!("unknown scenario kind {other:?}"),
         })
@@ -543,6 +610,11 @@ impl ExperimentConfigBuilder {
 
     pub fn net(mut self, settings: NetSettings) -> Self {
         self.get().net = settings;
+        self
+    }
+
+    pub fn health(mut self, policy: HealthPolicy) -> Self {
+        self.get().health = policy;
         self
     }
 
@@ -681,6 +753,39 @@ mod tests {
         assert_eq!(RuntimeKind::parse("hier"), Some(RuntimeKind::Hier));
         assert_eq!(RuntimeKind::parse("two-level"), Some(RuntimeKind::Hier));
         assert_eq!(RuntimeKind::Hier.name(), "hier");
+    }
+
+    #[test]
+    fn health_policy_json_roundtrip_and_armed_only_serialization() {
+        // Disabled health never appears in the JSON (pre-health configs and
+        // new ones stay byte-compatible) and loads back disabled.
+        let plain = ExperimentConfig::builder().build().unwrap();
+        assert!(!plain.to_json().contains("health"));
+        assert!(!ExperimentConfig::from_json(&plain.to_json()).unwrap().health.enabled);
+
+        let cfg = ExperimentConfig::builder()
+            .pes(8)
+            .tasks(100)
+            .health(HealthPolicy { slack: 2.5, tick_secs: 0.1, ..HealthPolicy::on() })
+            .build()
+            .unwrap();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.health.enabled);
+        assert_eq!(back.health.slack, 2.5);
+        assert_eq!(back.health.tick_secs, 0.1);
+        assert_eq!(back.health.quarantine_k, cfg.health.quarantine_k);
+        // A bare `"health": {}` arms the defaults.
+        let terse = ExperimentConfig::from_json(r#"{"health": {}}"#).unwrap();
+        assert!(terse.health.enabled);
+        assert_eq!(terse.health.slack, HealthPolicy::on().slack);
+        // The policy flows into the simulator parameterization.
+        let params = cfg.sim_params(0).unwrap();
+        assert!(params.health.enabled);
+        assert_eq!(params.health.slack, 2.5);
+        // Nonsense knobs are rejected, not silently run.
+        let mut bad = cfg.clone();
+        bad.health.slack = 0.5;
+        assert!(bad.validate().is_err(), "slack <= 1 flags every chunk");
     }
 
     #[test]

@@ -52,6 +52,8 @@
 //! | `VersionRefused` | `[TerminateWorker]` |
 //! | `WorkerDisconnected` | none (the paper's no-detection semantics) |
 //! | `Timeout` | none (the engine records the hang; the driver stops) |
+//! | `HealthTick` | zero-or-more `Overdue` (slab order), then — if any — zero-or-more `Wake`s (in park order) |
+//! | `Progress` | none (deadline anchors refreshed internally) |
 //!
 //! A `Wake { worker }` means "this worker's pending request may now be
 //! servable — re-submit `WorkerRequest` for it".  When and how that
@@ -112,6 +114,19 @@ pub enum EngineEvent<'a> {
     /// outcome, bounded for practicality).  The engine records whether the
     /// run actually hung; the driver stops its loop.
     Timeout,
+    /// The driver's health timer fired: evaluate every in-flight chunk
+    /// against its deadline (`HealthPolicy`).  Emits one
+    /// [`Effect::Overdue`] per newly overdue chunk, then wakes parked
+    /// workers (an overdue chunk enters the speculative re-dispatch pool,
+    /// so a parked worker may now be servable).  Inert unless
+    /// `MasterConfig::health.enabled`.
+    HealthTick,
+    /// A heartbeat showed `worker` made in-chunk progress since the last
+    /// tick: refresh its chunks' deadline anchors.  No effects.
+    Progress {
+        /// The worker that reported progress.
+        worker: usize,
+    },
 }
 
 /// An action the driver must perform on its I/O.
@@ -140,6 +155,19 @@ pub enum Effect {
     /// Every iteration is Finished: stop the run and terminate everyone
     /// (the distributed equivalent of the paper's `MPI_Abort`).
     Completed,
+    /// A health tick found this in-flight chunk past its deadline.  The
+    /// chunk stays registered (a late result is still honored through the
+    /// first-completion filter); its tasks entered the speculative
+    /// re-dispatch pool.  Purely informational for drivers — observability
+    /// taps record it, nothing must be sent anywhere.
+    Overdue {
+        /// The straggling worker.
+        worker: usize,
+        /// The overdue assignment.
+        assignment_id: AssignmentId,
+        /// True when this verdict pushed the worker into quarantine.
+        quarantined: bool,
+    },
 }
 
 /// Where a result's digests come from (see [`Engine::apply_result`]).
@@ -248,6 +276,26 @@ impl Engine {
                     self.hung = true;
                 }
             }
+            EngineEvent::HealthTick => {
+                let notices = self.master.health_tick(now);
+                for n in &notices {
+                    out.push(Effect::Overdue {
+                        worker: n.worker as usize,
+                        assignment_id: n.assignment_id,
+                        quarantined: n.quarantined,
+                    });
+                }
+                if !notices.is_empty() && !self.parked.is_empty() {
+                    // Overdue chunks entered the speculative pool: parked
+                    // workers may now be servable, same wake rule as a
+                    // result receipt.
+                    self.parked.drain_into(&mut self.woken);
+                    for &w in &self.woken {
+                        out.push(Effect::Wake { worker: w as usize });
+                    }
+                }
+            }
+            EngineEvent::Progress { worker } => self.master.note_progress(worker, now),
         }
         if let Some(sink) = self.sink.as_mut() {
             sink.record(self.sink_scope, now, &event, &out[base..], &notes);
@@ -621,6 +669,12 @@ impl Engine {
                 JournalEvent::Timeout => {
                     self.handle(rec.now, EngineEvent::Timeout, &mut out);
                 }
+                JournalEvent::HealthTick => {
+                    self.handle(rec.now, EngineEvent::HealthTick, &mut out);
+                }
+                JournalEvent::Progress { worker } => {
+                    self.handle(rec.now, EngineEvent::Progress { worker: *worker }, &mut out);
+                }
             }
             ensure!(
                 out == rec.effects,
@@ -644,6 +698,7 @@ mod tests {
             technique,
             params: TechniqueParams::default(),
             rdlb,
+            health: Default::default(),
         })
     }
 

@@ -22,8 +22,66 @@ use super::assignment::{Assignment, AssignmentId, TaskSet};
 use super::snapshot::{push_config, push_task_set, read_config, read_task_set};
 use super::stats::MasterStats;
 use super::task_table::{TaskFlag, TaskTable};
-use crate::dls::{ChunkCalculator, ChunkFeedback, SchedCtx, Technique, TechniqueParams};
+use crate::dls::{ChunkCalculator, ChunkFeedback, SchedCtx, Technique, TechniqueParams, WorkerRates};
 use crate::util::codec::{push_bool, push_bytes, push_f64, push_u32, push_u64, Reader};
+
+/// The proactive worker-health policy: per-chunk deadlines derived from the
+/// online per-worker rate estimates, speculative re-dispatch of overdue
+/// chunks, and quarantine of repeat offenders.  Disabled by default — every
+/// seeded run without health behaves bit-identically to a build that
+/// predates the feature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthPolicy {
+    /// Master switch; `false` makes every other field inert.
+    pub enabled: bool,
+    /// Deadline = predicted chunk compute time × `slack`.
+    pub slack: f64,
+    /// Deadline floor in seconds, so cold-start noise and tiny chunks are
+    /// never flagged by an aggressive prediction.
+    pub floor_secs: f64,
+    /// A worker whose chunks go overdue this many times *in a row* is
+    /// quarantined (no new primaries) until it completes a chunk cleanly.
+    pub quarantine_k: u32,
+    /// Quarantine never shrinks the eligible pool below this many workers
+    /// (graceful degradation: with everything overdue, somebody must still
+    /// be allowed to compute).
+    pub min_pool: usize,
+    /// Driver hint: seconds between `HealthTick` events (wall-clock for the
+    /// net/native runtimes, virtual for the simulator).
+    pub tick_secs: f64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            enabled: false,
+            slack: 3.0,
+            floor_secs: 0.25,
+            quarantine_k: 2,
+            min_pool: 1,
+            tick_secs: 0.5,
+        }
+    }
+}
+
+impl HealthPolicy {
+    /// The policy with health switched on and every knob at its default.
+    pub fn on() -> HealthPolicy {
+        HealthPolicy { enabled: true, ..HealthPolicy::default() }
+    }
+}
+
+/// One overdue verdict from [`Master::health_tick`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverdueNotice {
+    /// The straggling worker.
+    pub worker: u32,
+    /// The overdue assignment (stays in flight — a late result is still
+    /// honored through the ordinary first-completion filter).
+    pub assignment_id: AssignmentId,
+    /// Did this verdict push the worker into quarantine?
+    pub quarantined: bool,
+}
 
 /// Master construction parameters.
 #[derive(Debug, Clone)]
@@ -36,6 +94,8 @@ pub struct MasterConfig {
     pub params: TechniqueParams,
     /// Enable the rDLB re-dispatch phase.
     pub rdlb: bool,
+    /// Proactive worker-health layer (deadlines / speculation / quarantine).
+    pub health: HealthPolicy,
 }
 
 /// Master's answer to a work request.
@@ -57,6 +117,11 @@ struct InFlight {
     tasks: TaskSet,
     assigned_at: f64,
     rescheduled: bool,
+    /// Deadline anchor: assignment time, refreshed by worker progress
+    /// reports so a slow-but-advancing worker is not flagged.
+    anchor: f64,
+    /// Already flagged overdue (each chunk is flagged at most once).
+    overdue: bool,
 }
 
 /// The rDLB master. Pure state machine: drive it with `on_request` /
@@ -89,6 +154,16 @@ pub struct Master {
     extra_holds: HashSet<(u32, u32)>,
     /// Rotating rDLB pool of Scheduled-unfinished ids (lazy deletion).
     redispatch: VecDeque<u32>,
+    /// Online per-worker per-task rate estimates feeding the deadline
+    /// predictions (empty unless `cfg.health.enabled`).
+    rates: WorkerRates,
+    /// Consecutive overdue verdicts per worker (reset by any completion).
+    consec_overdue: Vec<u32>,
+    /// Quarantined workers: no new primaries until a clean completion.
+    quarantined: Vec<bool>,
+    /// Overdue assignment ids awaiting speculative re-dispatch (lazy
+    /// deletion, served before the primary phase when health is on).
+    spec_queue: VecDeque<AssignmentId>,
     /// Deliberate-bug hook for the chaos oracle's self-test (see
     /// [`Master::enable_test_drop_one_redispatch`]). Never set in
     /// production paths.
@@ -135,6 +210,10 @@ impl Master {
             first_holder: Vec::new(),
             extra_holds: HashSet::new(),
             redispatch: VecDeque::new(),
+            rates: WorkerRates::new(cfg.p),
+            consec_overdue: vec![0; cfg.p],
+            quarantined: vec![false; cfg.p],
+            spec_queue: VecDeque::new(),
             test_drop_one_redispatch: false,
             stats: MasterStats::default(),
             cfg,
@@ -200,6 +279,23 @@ impl Master {
         self.stats.requests += 1;
         if self.table.all_finished() {
             return Reply::Terminate;
+        }
+
+        if self.cfg.health.enabled {
+            // Parked-with-prejudice: a quarantined worker gets no new work
+            // until one of its outstanding chunks completes cleanly (its
+            // requests still count, and it is woken like any parked peer).
+            if self.quarantined[worker] {
+                return Reply::Wait;
+            }
+            // Speculation phase: overdue chunks are re-dispatched
+            // immediately — ahead of the primary phase — so a straggler
+            // never holds its work hostage until the final rDLB phase.
+            if self.cfg.rdlb {
+                if let Some(tasks) = self.pick_speculative(worker) {
+                    return Reply::Assign(self.issue(worker, TaskSet::List(tasks), true, now));
+                }
+            }
         }
 
         // Primary phase: carve Unscheduled iterations with the DLS rule.
@@ -280,6 +376,13 @@ impl Master {
         if inflight.rescheduled {
             self.stats.rescheduled_completions += 1;
         }
+        if self.cfg.health.enabled {
+            // Any completed chunk is evidence of life: feed the rate
+            // estimate, clear the overdue streak, and lift quarantine.
+            self.rates.observe(worker, compute_time, inflight.tasks.len());
+            self.consec_overdue[worker] = 0;
+            self.quarantined[worker] = false;
+        }
 
         // Adaptive-technique feedback: overhead is everything between
         // assignment and result arrival that was not compute.
@@ -294,6 +397,130 @@ impl Master {
             batch_done: false,
         });
         newly_positions
+    }
+
+    /// Evaluate every in-flight chunk against its deadline at master-clock
+    /// `now`.  An overdue chunk is flagged exactly once: it is counted,
+    /// queued for speculative re-dispatch (rDLB only) while *staying* in
+    /// flight — a late result still lands through the ordinary
+    /// first-completion filter — and its worker's overdue streak advances,
+    /// possibly into quarantine.  Deadline = `max(floor, predicted × slack)`
+    /// where the prediction comes from the worker's own completed-chunk
+    /// history, falling back to the pooled mean; with no observation
+    /// anywhere nothing is ever flagged (cold-start safety).
+    pub fn health_tick(&mut self, now: f64) -> Vec<OverdueNotice> {
+        if !self.cfg.health.enabled {
+            return Vec::new();
+        }
+        let health = self.cfg.health.clone();
+        let mut notices = Vec::new();
+        for id in 0..self.in_flight.len() {
+            let (worker, len, anchor) = match &self.in_flight[id] {
+                Some(inf) if !inf.overdue => (inf.worker, inf.tasks.len(), inf.anchor),
+                _ => continue,
+            };
+            let Some(predicted) = self.rates.predict(worker as usize, len) else {
+                continue;
+            };
+            let window = (predicted * health.slack).max(health.floor_secs);
+            if now - anchor <= window {
+                continue;
+            }
+            self.in_flight[id].as_mut().expect("checked above").overdue = true;
+            self.stats.overdue_chunks += 1;
+            let w = worker as usize;
+            self.consec_overdue[w] += 1;
+            if self.cfg.rdlb {
+                self.spec_queue.push_back(id as AssignmentId);
+            }
+            let mut entered_quarantine = false;
+            if !self.quarantined[w]
+                && self.consec_overdue[w] >= health.quarantine_k
+                && self.eligible_pool() > health.min_pool
+            {
+                self.quarantined[w] = true;
+                self.stats.quarantined_workers += 1;
+                entered_quarantine = true;
+            }
+            notices.push(OverdueNotice {
+                worker,
+                assignment_id: id as AssignmentId,
+                quarantined: entered_quarantine,
+            });
+        }
+        notices
+    }
+
+    /// Workers not currently quarantined.
+    fn eligible_pool(&self) -> usize {
+        self.cfg.p - self.quarantined.iter().filter(|&&q| q).count()
+    }
+
+    /// A heartbeat showed `worker` made in-chunk progress: refresh the
+    /// deadline anchor of its in-flight chunks, so slow-but-advancing is
+    /// never confused with gone.  Does not clear an existing overdue flag —
+    /// the speculation already happened.
+    pub fn note_progress(&mut self, worker: usize, now: f64) {
+        if !self.cfg.health.enabled {
+            return;
+        }
+        for slot in self.in_flight.iter_mut().flatten() {
+            if slot.worker == worker as u32 && slot.anchor < now {
+                slot.anchor = now;
+            }
+        }
+    }
+
+    /// Is `worker` currently quarantined?
+    pub fn is_quarantined(&self, worker: usize) -> bool {
+        self.cfg.health.enabled && self.quarantined[worker]
+    }
+
+    /// Pick an overdue chunk's unfinished tasks for speculative re-dispatch
+    /// to `worker`: oldest overdue first, never the straggler itself, never
+    /// tasks the requester already holds.  One speculation per overdue
+    /// verdict — a dispatched id leaves the queue (if the copy stalls too,
+    /// its own id is flagged by a later tick).
+    fn pick_speculative(&mut self, worker: usize) -> Option<Vec<u32>> {
+        if self.spec_queue.is_empty() {
+            return None;
+        }
+        self.activate_holders();
+        let budget = self.spec_queue.len();
+        for _ in 0..budget {
+            let id = self.spec_queue.pop_front()?;
+            let (owner, tasks) = match self.in_flight.get(id as usize).and_then(Option::as_ref) {
+                Some(inf) => (inf.worker, inf.tasks.clone()),
+                None => continue, // completed meanwhile: lazy deletion
+            };
+            if owner == worker as u32 {
+                // Never hand a straggler a duplicate of its own chunk.
+                self.spec_queue.push_back(id);
+                continue;
+            }
+            let mut picked: Vec<u32> = Vec::with_capacity(tasks.len());
+            let mut held_back = false;
+            for t in tasks.iter() {
+                if self.table.flag(t as usize) == TaskFlag::Finished {
+                    continue;
+                }
+                if self.holds(worker, t) {
+                    held_back = true;
+                    continue;
+                }
+                picked.push(t);
+            }
+            if picked.is_empty() {
+                if held_back {
+                    // Unfinished but everything is held by the requester:
+                    // keep the id available for a different worker.
+                    self.spec_queue.push_back(id);
+                }
+                continue;
+            }
+            return Some(picked);
+        }
+        None
     }
 
     /// Register a chunk and hand it out.
@@ -318,6 +545,8 @@ impl Master {
             tasks: tasks.clone(),
             assigned_at: now,
             rescheduled,
+            anchor: now,
+            overdue: false,
         }));
         Assignment { id, worker, tasks, rescheduled }
     }
@@ -370,6 +599,8 @@ impl Master {
                     push_u32(out, inflight.worker);
                     push_f64(out, inflight.assigned_at);
                     push_bool(out, inflight.rescheduled);
+                    push_f64(out, inflight.anchor);
+                    push_bool(out, inflight.overdue);
                     push_task_set(out, &inflight.tasks);
                 }
             }
@@ -401,6 +632,21 @@ impl Master {
         for t in &self.redispatch {
             push_u32(out, *t);
         }
+        // Worker-health state (v2): rate estimates, overdue streaks,
+        // quarantine flags and the speculative queue must all survive a
+        // resume, or the recovered master would re-learn deadlines from
+        // scratch and forget who was parked-with-prejudice.
+        self.rates.snapshot_into(out);
+        for c in &self.consec_overdue {
+            push_u32(out, *c);
+        }
+        for q in &self.quarantined {
+            push_bool(out, *q);
+        }
+        push_u32(out, self.spec_queue.len() as u32);
+        for id in &self.spec_queue {
+            push_u64(out, *id);
+        }
         push_bool(out, self.test_drop_one_redispatch);
         for v in [
             self.stats.requests,
@@ -414,6 +660,8 @@ impl Master {
             self.stats.duplicate_iterations,
             self.stats.unknown_results,
             self.stats.refused_workers,
+            self.stats.overdue_chunks,
+            self.stats.quarantined_workers,
         ] {
             push_u64(out, v);
         }
@@ -437,8 +685,17 @@ impl Master {
                 let worker = r.u32()?;
                 let assigned_at = r.f64()?;
                 let rescheduled = r.bool()?;
+                let anchor = r.f64()?;
+                let overdue = r.bool()?;
                 let tasks = read_task_set(r)?;
-                in_flight.push(Some(InFlight { worker, tasks, assigned_at, rescheduled }));
+                in_flight.push(Some(InFlight {
+                    worker,
+                    tasks,
+                    assigned_at,
+                    rescheduled,
+                    anchor,
+                    overdue,
+                }));
             } else {
                 in_flight.push(None);
             }
@@ -468,6 +725,21 @@ impl Master {
         for _ in 0..n_pool {
             redispatch.push_back(r.u32()?);
         }
+        let rates = WorkerRates::from_snapshot(r, cfg.p)?;
+        let mut consec_overdue = Vec::with_capacity(cfg.p);
+        for _ in 0..cfg.p {
+            consec_overdue.push(r.u32()?);
+        }
+        let mut quarantined = Vec::with_capacity(cfg.p);
+        for _ in 0..cfg.p {
+            quarantined.push(r.bool()?);
+        }
+        let n_spec = r.u32()? as usize;
+        ensure!(n_spec as u64 <= next_id, "snapshot speculation queue larger than the slab");
+        let mut spec_queue = VecDeque::with_capacity(n_spec);
+        for _ in 0..n_spec {
+            spec_queue.push_back(r.u64()?);
+        }
         let test_drop_one_redispatch = r.bool()?;
         let stats = MasterStats {
             requests: r.u64()?,
@@ -481,6 +753,8 @@ impl Master {
             duplicate_iterations: r.u64()?,
             unknown_results: r.u64()?,
             refused_workers: r.u64()?,
+            overdue_chunks: r.u64()?,
+            quarantined_workers: r.u64()?,
         };
         let mut calc = cfg.technique.calculator(cfg.n, cfg.p, &cfg.params);
         calc.restore_state(r.bytes()?)?;
@@ -494,6 +768,10 @@ impl Master {
             first_holder,
             extra_holds,
             redispatch,
+            rates,
+            consec_overdue,
+            quarantined,
+            spec_queue,
             test_drop_one_redispatch,
             stats,
             cfg,
@@ -555,7 +833,25 @@ mod tests {
     use super::*;
 
     fn master(n: usize, p: usize, technique: Technique, rdlb: bool) -> Master {
-        Master::new(MasterConfig { n, p, technique, params: TechniqueParams::default(), rdlb })
+        Master::new(MasterConfig {
+            n,
+            p,
+            technique,
+            params: TechniqueParams::default(),
+            rdlb,
+            health: HealthPolicy::default(),
+        })
+    }
+
+    fn health_master(n: usize, p: usize, rdlb: bool, health: HealthPolicy) -> Master {
+        Master::new(MasterConfig {
+            n,
+            p,
+            technique: Technique::Ss,
+            params: TechniqueParams::default(),
+            rdlb,
+            health,
+        })
     }
 
     fn assign(m: &mut Master, w: usize, now: f64) -> Assignment {
@@ -758,6 +1054,139 @@ mod tests {
         // The conservation identities themselves still hold — the bug is
         // only visible at the digest / finished-count level.
         assert!(m.stats().identity_violations().is_empty());
+    }
+
+    #[test]
+    fn health_tick_is_inert_when_disabled_or_cold() {
+        let mut m = master(4, 2, Technique::Ss, true);
+        let _a = assign(&mut m, 0, 0.0);
+        assert!(m.health_tick(1e9).is_empty(), "disabled health must never flag");
+        // Enabled but with zero completed chunks anywhere: cold-start safety.
+        let mut m = health_master(4, 2, true, HealthPolicy::on());
+        let _a = assign(&mut m, 0, 0.0);
+        assert!(m.health_tick(1e9).is_empty(), "no rate estimate, nothing flagged");
+        assert_eq!(m.stats().overdue_chunks, 0);
+    }
+
+    #[test]
+    fn overdue_chunk_is_speculatively_redispatched_once() {
+        let mut h = HealthPolicy::on();
+        h.floor_secs = 0.1;
+        h.quarantine_k = 100; // no quarantine in this test
+        let mut m = health_master(4, 2, true, h);
+        // Establish a rate: worker 1 completes a 1-task chunk in 0.1 s.
+        let warm = assign(&mut m, 1, 0.0);
+        m.on_result(1, warm.id, 0.1, 0.1);
+        // Worker 0 takes a chunk and stalls.
+        let stuck = assign(&mut m, 0, 0.2);
+        // Within the window: nothing flagged.
+        assert!(m.health_tick(0.3).is_empty());
+        // Way past deadline: flagged exactly once.
+        let notices = m.health_tick(50.0);
+        assert_eq!(notices.len(), 1);
+        assert_eq!(notices[0].assignment_id, stuck.id);
+        assert_eq!(notices[0].worker, 0);
+        assert!(m.health_tick(60.0).is_empty(), "a chunk is flagged at most once");
+        assert_eq!(m.stats().overdue_chunks, 1);
+        // Worker 1 now receives the speculative copy (rescheduled), while
+        // the primary phase still has unscheduled work left.
+        let spec = match m.on_request(1, 61.0) {
+            Reply::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert!(spec.rescheduled);
+        assert_eq!(spec.tasks.to_vec(), stuck.tasks.to_vec());
+        // The straggler's late result is absorbed as duplicates after the
+        // speculative copy reports first.
+        m.on_result(1, spec.id, 0.1, 61.2);
+        m.on_result(0, stuck.id, 60.0, 61.5);
+        assert_eq!(m.stats().duplicate_iterations, spec.len() as u64);
+        assert!(m.stats().identity_violations().is_empty(), "{:?}", m.stats());
+    }
+
+    #[test]
+    fn progress_refreshes_the_deadline_anchor() {
+        let mut h = HealthPolicy::on();
+        h.floor_secs = 0.1;
+        let mut m = health_master(4, 2, true, h);
+        let warm = assign(&mut m, 1, 0.0);
+        m.on_result(1, warm.id, 0.1, 0.1);
+        let _slow = assign(&mut m, 0, 0.2);
+        // Heartbeats keep arriving with progress: anchor keeps moving.
+        m.note_progress(0, 49.9);
+        assert!(m.health_tick(50.0).is_empty(), "slow-but-alive is not overdue");
+        // Progress stops: the chunk goes overdue relative to the anchor.
+        assert_eq!(m.health_tick(100.0).len(), 1);
+    }
+
+    #[test]
+    fn quarantine_enters_on_streak_and_exits_on_clean_completion() {
+        let mut h = HealthPolicy::on();
+        h.floor_secs = 0.01;
+        h.quarantine_k = 2;
+        h.min_pool = 1;
+        let mut m = health_master(8, 2, true, h);
+        let warm = assign(&mut m, 1, 0.0);
+        m.on_result(1, warm.id, 0.01, 0.01);
+        // Two consecutive overdue chunks on worker 0 → quarantine.
+        let s1 = assign(&mut m, 0, 0.1);
+        let n1 = m.health_tick(10.0);
+        assert_eq!(n1.len(), 1);
+        assert!(!n1[0].quarantined, "first strike is not quarantine");
+        let s2 = assign(&mut m, 0, 10.1);
+        let n2 = m.health_tick(20.0);
+        assert_eq!(n2.len(), 1);
+        assert!(n2[0].quarantined, "second consecutive strike quarantines");
+        assert!(m.is_quarantined(0));
+        assert_eq!(m.stats().quarantined_workers, 1);
+        // Parked-with-prejudice: no new work for worker 0.
+        assert_eq!(m.on_request(0, 21.0), Reply::Wait);
+        // A clean completion lifts the quarantine and resets the streak.
+        m.on_result(0, s1.id, 9.0, 22.0);
+        assert!(!m.is_quarantined(0));
+        assert!(matches!(m.on_request(0, 23.0), Reply::Assign(_)));
+        m.on_result(0, s2.id, 9.0, 23.5);
+        assert!(m.stats().identity_violations().is_empty(), "{:?}", m.stats());
+    }
+
+    #[test]
+    fn quarantine_never_drains_the_pool_below_min() {
+        let mut h = HealthPolicy::on();
+        h.floor_secs = 0.01;
+        h.quarantine_k = 1;
+        h.min_pool = 1;
+        let mut m = health_master(8, 2, true, h);
+        let warm = assign(&mut m, 1, 0.0);
+        m.on_result(1, warm.id, 0.01, 0.01);
+        // Both workers stall; only one may be quarantined with min_pool=1.
+        let _s0 = assign(&mut m, 0, 0.1);
+        let _s1 = assign(&mut m, 1, 0.1);
+        let notices = m.health_tick(10.0);
+        assert_eq!(notices.len(), 2);
+        let quarantined = notices.iter().filter(|n| n.quarantined).count();
+        assert_eq!(quarantined, 1, "graceful degradation: {notices:?}");
+        assert_eq!(m.stats().quarantined_workers, 1);
+    }
+
+    #[test]
+    fn speculation_never_targets_the_straggler_itself() {
+        let mut h = HealthPolicy::on();
+        h.floor_secs = 0.01;
+        h.quarantine_k = 100;
+        let mut m = health_master(2, 2, true, h);
+        let warm = assign(&mut m, 1, 0.0);
+        m.on_result(1, warm.id, 0.01, 0.01);
+        let stuck = assign(&mut m, 0, 0.1);
+        assert_eq!(m.health_tick(10.0).len(), 1);
+        // The straggler itself asks for work: it must not get its own chunk
+        // back; with nothing else pending it Waits.
+        assert_eq!(m.on_request(0, 11.0), Reply::Wait);
+        // Another worker gets the speculative copy.
+        let spec = match m.on_request(1, 12.0) {
+            Reply::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(spec.tasks.to_vec(), stuck.tasks.to_vec());
     }
 
     #[test]

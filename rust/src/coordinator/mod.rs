@@ -30,7 +30,7 @@ mod task_table;
 
 pub use assignment::{Assignment, AssignmentId, TaskSet, TaskSetIter};
 pub use engine::{Effect, Engine, EngineEvent};
-pub use master::{Master, MasterConfig, Reply};
+pub use master::{HealthPolicy, Master, MasterConfig, OverdueNotice, Reply};
 pub use sink::{EventSink, MultiSink, ResultNotes, SharedSink};
 pub use snapshot::{SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
 pub use stats::MasterStats;

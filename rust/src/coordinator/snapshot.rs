@@ -18,14 +18,18 @@
 use anyhow::{bail, ensure, Result};
 
 use super::assignment::TaskSet;
-use super::master::MasterConfig;
+use super::master::{HealthPolicy, MasterConfig};
 use crate::dls::{Technique, TechniqueParams};
 use crate::util::codec::{push_bool, push_f64, push_u32, push_u64, push_u8, Reader};
 
 /// File magic: identifies an engine snapshot regardless of extension.
 pub const SNAPSHOT_MAGIC: [u8; 8] = *b"RDLBSNAP";
 /// Snapshot format version (bumped on any encoding change).
-pub const SNAPSHOT_VERSION: u16 = 1;
+/// v2: worker-health state — `HealthPolicy` in the config, per-chunk
+/// deadline anchors/overdue flags in the in-flight slab, rate estimates,
+/// overdue streaks, quarantine flags, the speculation queue, and the
+/// `overdue_chunks` / `quarantined_workers` counters.
+pub const SNAPSHOT_VERSION: u16 = 2;
 
 pub(crate) fn push_task_set(out: &mut Vec<u8>, ts: &TaskSet) {
     match ts {
@@ -84,6 +88,12 @@ pub(crate) fn push_config(out: &mut Vec<u8>, cfg: &MasterConfig) {
     for w in &cfg.params.weights {
         push_f64(out, *w);
     }
+    push_bool(out, cfg.health.enabled);
+    push_f64(out, cfg.health.slack);
+    push_f64(out, cfg.health.floor_secs);
+    push_u32(out, cfg.health.quarantine_k);
+    push_u64(out, cfg.health.min_pool as u64);
+    push_f64(out, cfg.health.tick_secs);
 }
 
 pub(crate) fn read_config(r: &mut Reader<'_>) -> Result<MasterConfig> {
@@ -103,12 +113,21 @@ pub(crate) fn read_config(r: &mut Reader<'_>) -> Result<MasterConfig> {
     for _ in 0..n_weights {
         weights.push(r.f64()?);
     }
+    let health = HealthPolicy {
+        enabled: r.bool()?,
+        slack: r.f64()?,
+        floor_secs: r.f64()?,
+        quarantine_k: r.u32()?,
+        min_pool: r.u64()? as usize,
+        tick_secs: r.f64()?,
+    };
     Ok(MasterConfig {
         n,
         p,
         technique,
         params: TechniqueParams { overhead_h, mu, sigma, weights, seed },
         rdlb,
+        health,
     })
 }
 
@@ -147,6 +166,14 @@ mod tests {
                 seed: 0xFEED,
             },
             rdlb: true,
+            health: HealthPolicy {
+                enabled: true,
+                slack: 4.5,
+                floor_secs: 0.125,
+                quarantine_k: 3,
+                min_pool: 2,
+                tick_secs: 0.2,
+            },
         };
         let mut out = Vec::new();
         push_config(&mut out, &cfg);
@@ -159,6 +186,7 @@ mod tests {
         assert_eq!(back.rdlb, cfg.rdlb);
         assert_eq!(back.params.weights, cfg.params.weights);
         assert_eq!(back.params.seed, cfg.params.seed);
+        assert_eq!(back.health, cfg.health);
     }
 
     #[test]

@@ -30,6 +30,13 @@ pub struct MasterStats {
     /// refused peer from a fail-stop at t=0, which used to be
     /// indistinguishable in `Outcome`-level stats.
     pub refused_workers: u64,
+    /// In-flight chunks flagged past their health deadline (each chunk at
+    /// most once).  Zero unless the worker-health layer is enabled.
+    pub overdue_chunks: u64,
+    /// Quarantine entries: workers parked-with-prejudice after
+    /// `quarantine_k` consecutive overdue chunks (cumulative — a worker
+    /// that is quarantined, cleared and quarantined again counts twice).
+    pub quarantined_workers: u64,
 }
 
 impl MasterStats {
@@ -103,6 +110,13 @@ impl MasterStats {
             ),
         );
         check(
+            self.overdue_chunks <= self.assigned_chunks,
+            format!(
+                "overdue_chunks {} > assigned_chunks {} (only in-flight work can be overdue)",
+                self.overdue_chunks, self.assigned_chunks
+            ),
+        );
+        check(
             self.executed_iterations() <= self.assigned_iterations,
             format!(
                 "executed iterations {} > assigned_iterations {} \
@@ -173,6 +187,8 @@ mod tests {
             duplicate_iterations: 4,
             unknown_results: 1,
             refused_workers: 0,
+            overdue_chunks: 1,
+            quarantined_workers: 1,
         };
         assert_eq!(s.identity_violations(), Vec::<String>::new());
         assert_eq!(s.executed_iterations(), 92);

@@ -11,10 +11,12 @@
 mod adaptive;
 mod ctx;
 mod nonadaptive;
+mod rates;
 
 pub use adaptive::{AdaptiveFactoring, AdaptiveWeightedFactoring, AwfVariant};
 pub use ctx::{ChunkFeedback, SchedCtx};
 pub use nonadaptive::{Fac, Fsc, Gss, MFsc, Rand, SelfSched, StaticSched, Tss, Wf};
+pub use rates::WorkerRates;
 
 
 /// Runtime parameters some techniques need (FSC/mFSC use the scheduling

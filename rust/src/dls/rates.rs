@@ -1,0 +1,136 @@
+//! Online per-worker execution-rate estimates.
+//!
+//! The adaptive techniques (AWF, AF) already keep Welford accumulators over
+//! chunk timings; the worker-health layer needs the same statistic — mean
+//! per-*task* compute seconds per worker — to derive per-chunk deadlines
+//! (`predicted chunk time × slack`).  This type is that estimate, factored
+//! out so the master's health logic and future weighted techniques share
+//! one implementation, with raw-parts access for the engine snapshot codec
+//! (the deadline state must survive a crash/resume bit-identically).
+
+use crate::util::codec::{push_f64, push_u32, push_u64, Reader};
+use crate::util::stats::Welford;
+use anyhow::{ensure, Result};
+
+/// Per-worker online mean/variance of per-task compute seconds, plus a
+/// pooled estimate over all workers (the cold-start fallback: a worker with
+/// no completed chunk yet borrows the pool's mean).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerRates {
+    per_worker: Vec<Welford>,
+    pooled: Welford,
+}
+
+impl WorkerRates {
+    pub fn new(p: usize) -> WorkerRates {
+        WorkerRates { per_worker: vec![Welford::new(); p], pooled: Welford::new() }
+    }
+
+    /// Record one completed chunk: `compute_secs` spent on `tasks` tasks.
+    pub fn observe(&mut self, worker: usize, compute_secs: f64, tasks: usize) {
+        if tasks == 0 {
+            return;
+        }
+        let per_task = compute_secs.max(0.0) / tasks as f64;
+        self.per_worker[worker].push(per_task);
+        self.pooled.push(per_task);
+    }
+
+    /// Predicted compute seconds for a `tasks`-task chunk on `worker`:
+    /// the worker's own mean if it has history, else the pooled mean, else
+    /// `None` (no observation anywhere yet — the caller must not flag a
+    /// cold-start chunk as overdue on zero information).
+    pub fn predict(&self, worker: usize, tasks: usize) -> Option<f64> {
+        let w = &self.per_worker[worker];
+        let per_task = if w.count() > 0 {
+            w.mean()
+        } else if self.pooled.count() > 0 {
+            self.pooled.mean()
+        } else {
+            return None;
+        };
+        Some(per_task * tasks as f64)
+    }
+
+    /// Samples observed for `worker`.
+    pub fn count(&self, worker: usize) -> u64 {
+        self.per_worker[worker].count()
+    }
+
+    /// Canonical serialization for the engine snapshot codec.
+    pub fn snapshot_into(&self, out: &mut Vec<u8>) {
+        push_u32(out, self.per_worker.len() as u32);
+        for w in self.per_worker.iter().chain(std::iter::once(&self.pooled)) {
+            let (n, mean, m2) = w.raw_parts();
+            push_u64(out, n);
+            push_f64(out, mean);
+            push_f64(out, m2);
+        }
+    }
+
+    /// Rebuild from [`WorkerRates::snapshot_into`] bytes; `p` is the
+    /// expected worker count (pinned by the enclosing config).
+    pub fn from_snapshot(r: &mut Reader<'_>, p: usize) -> Result<WorkerRates> {
+        let n = r.u32()? as usize;
+        ensure!(n == p, "snapshot rate table has {n} workers, config has {p}");
+        let mut read_one = |r: &mut Reader<'_>| -> Result<Welford> {
+            let n = r.u64()?;
+            let mean = r.f64()?;
+            let m2 = r.f64()?;
+            Ok(Welford::from_raw_parts(n, mean, m2))
+        };
+        let mut per_worker = Vec::with_capacity(n);
+        for _ in 0..n {
+            per_worker.push(read_one(r)?);
+        }
+        let pooled = read_one(r)?;
+        Ok(WorkerRates { per_worker, pooled })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_predicts_nothing() {
+        let rates = WorkerRates::new(3);
+        assert_eq!(rates.predict(0, 10), None);
+    }
+
+    #[test]
+    fn fresh_worker_borrows_pooled_mean() {
+        let mut rates = WorkerRates::new(2);
+        rates.observe(0, 2.0, 4); // 0.5 s/task
+        assert_eq!(rates.predict(1, 10), Some(5.0));
+        // The experienced worker uses its own history.
+        assert_eq!(rates.predict(0, 2), Some(1.0));
+    }
+
+    #[test]
+    fn empty_chunks_are_ignored() {
+        let mut rates = WorkerRates::new(1);
+        rates.observe(0, 1.0, 0);
+        assert_eq!(rates.count(0), 0);
+        assert_eq!(rates.predict(0, 1), None);
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_identically() {
+        let mut rates = WorkerRates::new(3);
+        rates.observe(0, 0.7, 3);
+        rates.observe(2, 1.9, 7);
+        rates.observe(2, 2.2, 5);
+        let mut out = Vec::new();
+        rates.snapshot_into(&mut out);
+        let mut r = Reader::new(&out);
+        let back = WorkerRates::from_snapshot(&mut r, 3).unwrap();
+        r.finish().unwrap();
+        let mut again = Vec::new();
+        back.snapshot_into(&mut again);
+        assert_eq!(out, again, "snapshot bytes must be canonical");
+        assert_eq!(back.predict(1, 4), rates.predict(1, 4));
+        let mut r = Reader::new(&out);
+        assert!(WorkerRates::from_snapshot(&mut r, 4).is_err(), "worker-count mismatch");
+    }
+}

@@ -208,6 +208,15 @@ fn scenario_faults(
                 faults[w].latency = delay * time_scale;
             }
         }
+        Scenario::Stall { node } => {
+            // Freeze a quarter of the way in, for 4x the failure-free
+            // horizon — without speculative re-dispatch the run would blow
+            // far past its hang bound.
+            for w in topo.ranks_on(node) {
+                faults[w].stall_after = Some(0.25 * horizon);
+                faults[w].stall_secs = 4.0 * horizon;
+            }
+        }
     }
     Ok(faults)
 }
@@ -268,6 +277,7 @@ fn net_outcome_sink(
     params.tech_params = setup.tech_params;
     params.faults = setup.faults;
     params.timeout = setup.timeout;
+    params.health = cfg.health.clone();
     params.sink = sink;
     let (outcome, _reports) = run_loopback(params, &setup.backend)?;
     Ok(outcome)
@@ -294,6 +304,7 @@ fn native_outcome_sink(
         params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
     }
     params.timeout = setup.timeout;
+    params.health = cfg.health.clone();
     params.sink = sink;
     NativeRuntime::new(params)?.run()
 }
@@ -322,6 +333,7 @@ fn hier_outcome_sink(
         params.set_fault_envelope(w, fault.fail_after, fault.slowdown, fault.latency);
     }
     params.timeout = setup.timeout;
+    params.health = cfg.health.clone();
     params.sink = sink;
     HierRuntime::new(params)?.run()
 }
@@ -429,6 +441,19 @@ mod tests {
         for kind in [RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net, RuntimeKind::Hier] {
             let mut cfg = small_cfg(Scenario::Baseline, true);
             cfg.runtime = kind;
+            let o = run_outcome(&cfg, 0, 1.0).unwrap();
+            assert!(o.completed(), "{kind}: {o:?}");
+            assert_eq!(o.finished, 200, "{kind}");
+        }
+    }
+
+    #[test]
+    fn health_enabled_config_completes_on_every_runtime() {
+        use crate::coordinator::HealthPolicy;
+        for kind in [RuntimeKind::Sim, RuntimeKind::Native, RuntimeKind::Net, RuntimeKind::Hier] {
+            let mut cfg = small_cfg(Scenario::Baseline, true);
+            cfg.runtime = kind;
+            cfg.health = HealthPolicy { floor_secs: 0.05, tick_secs: 0.02, ..HealthPolicy::on() };
             let o = run_outcome(&cfg, 0, 1.0).unwrap();
             assert!(o.completed(), "{kind}: {o:?}");
             assert_eq!(o.finished, 200, "{kind}");

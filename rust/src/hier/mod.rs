@@ -52,7 +52,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::{
-    Assignment, AssignmentId, Effect, Engine, EngineEvent, MasterConfig, SharedSink, TaskSet,
+    Assignment, AssignmentId, Effect, Engine, EngineEvent, HealthPolicy, MasterConfig, SharedSink,
+    TaskSet,
 };
 use crate::dls::{Technique, TechniqueParams};
 use crate::native::{compute_chunk_with_faults, ComputeBackend};
@@ -84,6 +85,14 @@ pub struct HierParams {
     pub latency: Vec<f64>,
     /// Wall-clock hang bound for the whole run.
     pub timeout: Duration,
+    /// Worker-health policy for the **root** engine: a group master whose
+    /// super-chunk goes overdue is treated exactly like a straggling worker
+    /// one level down — the super-chunk enters the root's speculative
+    /// re-dispatch pool and a surviving group recomputes it before the
+    /// final phase.  Inner engines always run with health disabled (their
+    /// runs are one super-chunk long; intra-group stragglers are already
+    /// absorbed by the inner rDLB phase).
+    pub health: HealthPolicy,
     /// Observability tap installed on every engine of the hierarchy
     /// (`None` = no overhead): the root records with scope 0, group `g`'s
     /// inner engines with scope `1 + g`.
@@ -113,6 +122,7 @@ impl HierParams {
             slowdown: vec![1.0; total],
             latency: vec![0.0; total],
             timeout: Duration::from_secs(60),
+            health: HealthPolicy::default(),
             sink: None,
         }
     }
@@ -206,6 +216,7 @@ impl HierRuntime {
             technique: prm.technique,
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
+            health: prm.health.clone(),
         });
         if let Some(s) = prm.sink.clone() {
             engine.set_sink(0, Box::new(s));
@@ -243,16 +254,47 @@ impl HierRuntime {
         // Root loop: the same thin driver shape as the native runtime, one
         // level up — group masters are its "workers".
         let mut reply: Vec<Effect> = Vec::with_capacity(1);
+        // Root-level health timer: an overdue verdict here means a whole
+        // super-chunk is speculatively re-dispatched to another group.
+        let tick = Duration::from_secs_f64(prm.health.tick_secs.max(0.01));
+        let mut next_tick = if prm.health.enabled { Some(start + tick) } else { None };
         loop {
             let left = hard_deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
                 break;
             }
-            let msg = match root_rx.recv_timeout(left) {
+            let wait = match next_tick {
+                Some(t) => left.min(t.saturating_duration_since(Instant::now())),
+                None => left,
+            };
+            let msg = match root_rx.recv_timeout(wait) {
                 Ok(m) => m,
-                // Timed out, or every group is gone: no further progress.
-                Err(_) => {
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // A tick or the hang bound elapsed; the `left.is_zero()`
+                    // check above converts an expired bound into Timeout.
+                    if let Some(t) = next_tick {
+                        if Instant::now() >= t {
+                            let now = start.elapsed().as_secs_f64();
+                            reply.clear();
+                            engine.handle(now, EngineEvent::HealthTick, &mut reply);
+                            let woken: Vec<usize> = reply
+                                .iter()
+                                .filter_map(|e| match e {
+                                    Effect::Wake { worker } => Some(*worker),
+                                    _ => None,
+                                })
+                                .collect();
+                            for gw in woken {
+                                serve_group(&mut engine, gw, now, &mut reply, &group_tx);
+                            }
+                            next_tick = Some(Instant::now() + tick);
+                        }
+                    }
+                    continue;
+                }
+                // Every group is gone: no further progress.
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
                     let now = start.elapsed().as_secs_f64();
                     engine.handle(now, EngineEvent::Timeout, &mut reply);
                     break;
@@ -420,6 +462,9 @@ impl GroupCtx {
                     technique: self.technique,
                     params: tp,
                     rdlb: self.rdlb,
+                    // Inner runs are one super-chunk long; intra-group
+                    // stragglers are the inner rDLB phase's job.
+                    health: HealthPolicy::default(),
                 });
                 if let Some(s) = self.sink.clone() {
                     engine.set_sink(1 + g as u32, Box::new(s));
@@ -695,6 +740,30 @@ mod tests {
         assert_eq!(o.finished, n);
         assert_eq!(o.result_digest, n as f64);
         assert_eq!(o.failures, 1);
+    }
+
+    #[test]
+    fn root_health_flags_dead_groups_superchunk() {
+        // Group 1's master dies holding a super-chunk.  With root-level
+        // health armed, the root flags the chunk overdue (speculative
+        // re-dispatch) instead of waiting for the final phase — the run
+        // completes and the overdue counter proves the early detection.
+        let n = 160;
+        let mut p = HierParams::new(n, 2, 2, Technique::Fac, true, synthetic(n, 2e-3));
+        p.failures[2] = Some(0.05);
+        p.timeout = Duration::from_secs(30);
+        p.health = HealthPolicy {
+            slack: 1.5,
+            floor_secs: 0.01,
+            tick_secs: 0.02,
+            ..HealthPolicy::on()
+        };
+        let o = HierRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "group death must be absorbed: {o:?}");
+        assert_eq!(o.finished, n);
+        assert_eq!(o.result_digest, n as f64);
+        assert!(o.stats.overdue_chunks > 0, "dead group's super-chunk must go overdue: {:?}", o.stats);
+        assert!(o.stats.identity_violations().is_empty(), "{:?}", o.stats);
     }
 
     #[test]

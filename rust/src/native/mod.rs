@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::{
-    Assignment, Effect, Engine, EngineEvent, MasterConfig, SharedSink, TaskSet,
+    Assignment, Effect, Engine, EngineEvent, HealthPolicy, MasterConfig, SharedSink, TaskSet,
 };
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
@@ -48,6 +48,10 @@ pub struct NativeParams {
     pub timeout: Duration,
     /// Observability tap installed on the engine (`None` = no overhead).
     pub sink: Option<SharedSink>,
+    /// Worker-health layer (per-chunk deadlines, speculation, quarantine).
+    /// Disabled by default; when disabled the master loop never wakes on a
+    /// health timer.
+    pub health: HealthPolicy,
 }
 
 impl NativeParams {
@@ -64,6 +68,7 @@ impl NativeParams {
             latency: vec![0.0; workers],
             timeout: Duration::from_secs(60),
             sink: None,
+            health: HealthPolicy::default(),
         }
     }
 
@@ -198,6 +203,7 @@ impl NativeRuntime {
             technique: prm.technique,
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
+            health: prm.health.clone(),
         });
         if let Some(s) = prm.sink.clone() {
             engine.set_sink(0, Box::new(s));
@@ -250,8 +256,12 @@ impl NativeRuntime {
         // Master loop, bounded by the hang timeout.  A `Wake` effect is
         // delivered by immediately re-submitting the woken worker's
         // request; every other effect is a channel send (or a no-op park).
+        // With the health layer armed, channel waits are additionally
+        // bounded by the next deadline-check tick.
         let mut reply: Vec<Effect> = Vec::with_capacity(1);
         let hard_deadline = start + prm.timeout;
+        let tick = Duration::from_secs_f64(prm.health.tick_secs.max(0.01));
+        let mut next_tick = if prm.health.enabled { Some(start + tick) } else { None };
 
         loop {
             let left = hard_deadline.saturating_duration_since(Instant::now());
@@ -259,11 +269,36 @@ impl NativeRuntime {
                 engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
                 break;
             }
-            let msg = match master_rx.recv_timeout(left) {
+            let wait = match next_tick {
+                Some(t) => left.min(t.saturating_duration_since(Instant::now())),
+                None => left,
+            };
+            let msg = match master_rx.recv_timeout(wait) {
                 Ok(m) => m,
-                // Timed out, or every worker is gone: either way the run
-                // can no longer progress.
-                Err(_) => {
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Some(t) = next_tick {
+                        if Instant::now() >= t {
+                            let now = start.elapsed().as_secs_f64();
+                            reply.clear();
+                            engine.handle(now, EngineEvent::HealthTick, &mut reply);
+                            let woken: Vec<usize> = reply
+                                .iter()
+                                .filter_map(|e| match e {
+                                    Effect::Wake { worker } => Some(*worker),
+                                    _ => None,
+                                })
+                                .collect();
+                            for w in woken {
+                                serve_request(&mut engine, w, now, &mut reply, &worker_tx);
+                            }
+                            next_tick = Some(Instant::now() + tick);
+                        }
+                    }
+                    // The hard deadline is re-checked at the top of the loop.
+                    continue;
+                }
+                // Every worker is gone: the run can no longer progress.
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
                     let now = start.elapsed().as_secs_f64();
                     engine.handle(now, EngineEvent::Timeout, &mut reply);
                     break;
@@ -430,6 +465,28 @@ mod tests {
         assert!(times.iter().all(|&t| t > 0.0 && t < 2.0));
         // The saturated plan still constructs a valid runtime.
         assert!(NativeRuntime::new(p).is_ok());
+    }
+
+    #[test]
+    fn health_flags_straggler_and_run_completes() {
+        // Worker 3's compute is dilated 10×: its first chunk straggles for
+        // ~1 s while the rest of the run takes a fraction of that.  The
+        // health layer must flag the chunk overdue mid-run and the rDLB
+        // speculation path must complete without waiting for the straggler.
+        let mut p = NativeParams::new(400, 4, Technique::Fac, true, synthetic(400, 2e-3));
+        p.slowdown[3] = 10.0;
+        p.timeout = Duration::from_secs(60);
+        p.health = HealthPolicy {
+            slack: 1.5,
+            floor_secs: 0.01,
+            tick_secs: 0.01,
+            ..HealthPolicy::on()
+        };
+        let o = NativeRuntime::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "{o:?}");
+        assert_eq!(o.finished, 400);
+        assert!(o.stats.overdue_chunks > 0, "straggler chunk never flagged: {:?}", o.stats);
+        assert_eq!(o.stats.identity_violations(), Vec::<String>::new());
     }
 
     #[test]

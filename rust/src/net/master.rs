@@ -4,12 +4,20 @@
 //! thread per worker feeding a single event loop, all send halves owned by
 //! that loop.
 //!
-//! Faithful to the paper, the master performs **no failure detection**: a
-//! closed connection is noted and ignored, an undeliverable assignment
-//! simply evaporates (fail-stop), and lost work is only ever recovered by
-//! the rDLB re-dispatch phase.  The only concession to practicality is a
-//! wall-clock hang bound (`timeout`) that converts the paper's "waits
-//! indefinitely" outcome into a reported hung run.
+//! Faithful to the paper, the master by default performs **no failure
+//! detection**: a closed connection is noted and ignored, an undeliverable
+//! assignment simply evaporates (fail-stop), and lost work is only ever
+//! recovered by the rDLB re-dispatch phase.  The only concession to
+//! practicality is a wall-clock hang bound (`timeout`) that converts the
+//! paper's "waits indefinitely" outcome into a reported hung run.
+//!
+//! The optional worker-health layer ([`NetMasterParams::health`]) goes
+//! beyond the paper: each tick the master `Ping`s every registered worker,
+//! workers answer `Pong` with a cumulative in-chunk progress counter, and
+//! the engine judges in-flight chunks against per-chunk deadlines —
+//! overdue work enters the speculative re-dispatch pool *before* the final
+//! phase, while an advancing counter ("slow but alive") refreshes the
+//! deadline anchor so healthy-but-loaded workers are never flagged.
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -18,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig, SharedSink};
+use crate::coordinator::{Effect, Engine, EngineEvent, HealthPolicy, MasterConfig, SharedSink};
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
 
@@ -40,6 +48,12 @@ pub struct NetMasterParams {
     /// Wall-clock hang bound (the paper's "waits indefinitely" case,
     /// bounded for practicality).
     pub timeout: Duration,
+    /// Proactive worker-health layer (per-chunk deadlines + heartbeats).
+    /// Disabled by default — the paper's no-detection master.  When enabled
+    /// the master `Ping`s every registered worker each tick, folds `Pong`
+    /// progress into deadline anchors, and lets the engine flag overdue
+    /// chunks for speculative rDLB re-dispatch.
+    pub health: HealthPolicy,
     /// Observability tap installed on the engine (`None` = no overhead).
     pub sink: Option<SharedSink>,
     /// **Test-only**: arm the coordinator's deliberate drop-one-re-dispatch
@@ -59,6 +73,7 @@ impl NetMasterParams {
             rdlb,
             faults: vec![FaultSpec::default(); workers],
             timeout: Duration::from_secs(60),
+            health: HealthPolicy::default(),
             sink: None,
             test_drop_one_redispatch: false,
         }
@@ -114,6 +129,7 @@ impl NetMaster {
             technique: prm.technique,
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
+            health: prm.health.clone(),
         });
         if prm.test_drop_one_redispatch {
             engine.arm_test_drop_one_redispatch();
@@ -187,6 +203,14 @@ impl NetMaster {
         // With a shutdown flag armed, block at most this long per recv so
         // the flag is noticed promptly even on an idle connection set.
         let poll_slice = Duration::from_millis(200);
+        // Health timer: each tick pings every registered worker and asks
+        // the engine to judge in-flight chunks against their deadlines.
+        let tick = Duration::from_secs_f64(prm.health.tick_secs.max(0.01));
+        let mut next_tick = if prm.health.enabled { Some(start + tick) } else { None };
+        // Highest cumulative in-chunk progress counter seen per worker; a
+        // Pong that advances it proves the worker is computing (slow, not
+        // gone) and refreshes its deadline anchors.
+        let mut last_progress = vec![0u64; p];
         let mut registered = vec![false; p];
         let mut refused_slot = vec![false; p];
         let mut reply: Vec<Effect> = Vec::with_capacity(1);
@@ -202,13 +226,16 @@ impl NetMaster {
                 engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
                 break;
             }
-            let wait = if shutdown.is_some() { left.min(poll_slice) } else { left };
+            let mut wait = if shutdown.is_some() { left.min(poll_slice) } else { left };
+            if let Some(t) = next_tick {
+                wait = wait.min(t.saturating_duration_since(Instant::now()));
+            }
             let event = match event_rx.recv_timeout(wait) {
-                Ok(e) => e,
-                // A poll slice or the hang bound elapsed: loop back — the
-                // `left.is_zero()` check converts an expired bound into the
-                // Timeout event.
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Ok(e) => Some(e),
+                // A poll slice, the health tick, or the hang bound elapsed:
+                // fall through — the tick check below runs either way, and
+                // `left.is_zero()` converts an expired bound into Timeout.
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
                 // Every reader thread is gone: the run cannot progress.
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     let now = start.elapsed().as_secs_f64();
@@ -216,6 +243,32 @@ impl NetMaster {
                     break;
                 }
             };
+            // Checked on every pass (not only on recv timeout) so a busy
+            // connection set cannot starve the health timer.
+            if let Some(t) = next_tick {
+                if Instant::now() >= t {
+                    let now = start.elapsed().as_secs_f64();
+                    for w in 0..p {
+                        if registered[w] {
+                            send_or_drop(&mut txs, w, &Frame::Ping);
+                        }
+                    }
+                    reply.clear();
+                    engine.handle(now, EngineEvent::HealthTick, &mut reply);
+                    let woken: Vec<usize> = reply
+                        .iter()
+                        .filter_map(|e| match e {
+                            Effect::Wake { worker } => Some(*worker),
+                            _ => None,
+                        })
+                        .collect();
+                    for w in woken {
+                        serve_request(&mut engine, w, now, &mut reply, &mut txs);
+                    }
+                    next_tick = Some(Instant::now() + tick);
+                }
+            }
+            let Some(event) = event else { continue };
             let now = start.elapsed().as_secs_f64();
             match event {
                 Event::Closed(w) => {
@@ -256,6 +309,7 @@ impl NetMaster {
                         worker: w as u32,
                         n: prm.n as u64,
                         epoch,
+                        ping: prm.health.enabled,
                         fault: prm.faults[w].clone(),
                     });
                     send_or_drop(&mut txs, w, &welcome);
@@ -297,6 +351,19 @@ impl NetMaster {
                     }
                     // Result piggy-backs the next request (MPI semantics).
                     serve_request(&mut engine, w, now, &mut reply, &mut txs);
+                }
+                Event::Frame(w, Frame::Pong { worker, progress }) => {
+                    if !registered[w] || worker as usize != w {
+                        continue;
+                    }
+                    // Only an *advancing* counter is evidence of life: a
+                    // stalled worker answers Pings too (connection open),
+                    // but its counter freezes and its deadline stands.
+                    if progress > last_progress[w] {
+                        last_progress[w] = progress;
+                        reply.clear();
+                        engine.handle(now, EngineEvent::Progress { worker: w }, &mut reply);
+                    }
                 }
                 Event::Frame(_, _) => {
                     // Master-bound connections must not carry master frames.

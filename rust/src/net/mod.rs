@@ -47,7 +47,9 @@ pub use transport::{
     FaultInjectingTransport, FrameRx, FrameTx, LoopbackTransport, TcpTransport, Transport,
     WireFaultPlan,
 };
-pub use worker::{run_worker, run_worker_reconnecting, WorkerReport};
+pub use worker::{
+    reconnect_backoff, run_worker, run_worker_reconnecting, ReconnectBackoff, WorkerReport,
+};
 
 use anyhow::{Context as _, Result};
 

@@ -47,7 +47,14 @@ use crate::coordinator::{Assignment, TaskSet};
 /// to [`WorkResult`] (echoed by the worker), letting a recovered master
 /// discard in-flight results from before the crash instead of
 /// double-attributing them.
-pub const PROTOCOL_VERSION: u16 = 3;
+///
+/// v4: worker health — [`Welcome`] carries a `ping` flag asking the worker
+/// to answer heartbeat [`Frame::Ping`] frames with [`Frame::Pong`]
+/// (cumulative in-chunk progress counter), so the master distinguishes
+/// "slow but alive" from "gone"; [`FaultSpec`] gains a stall envelope
+/// (`stall_after`/`stall_secs`: the worker hangs mid-chunk *without*
+/// closing its connection, optionally resuming).
+pub const PROTOCOL_VERSION: u16 = 4;
 
 /// Upper bound on one frame payload, guarding against corrupt length
 /// prefixes (a full paper-scale explicit-list assignment is ~1 MiB).
@@ -61,6 +68,8 @@ const TAG_ASSIGN: u8 = 0x04;
 const TAG_WAIT: u8 = 0x05;
 const TAG_RESULT: u8 = 0x06;
 const TAG_TERMINATE: u8 = 0x07;
+const TAG_PING: u8 = 0x08;
+const TAG_PONG: u8 = 0x09;
 
 /// Task-set kind bytes inside an `Assign` payload (protocol v2).
 const TASKSET_RANGE: u8 = 0x00;
@@ -80,11 +89,24 @@ pub struct FaultSpec {
     /// Extra one-way latency, seconds, on every message the worker sends or
     /// receives (the paper's PMPI interposer added 10 s).
     pub latency: f64,
+    /// Stall (v4): this many seconds after registration the worker hangs
+    /// mid-chunk *without* closing its connection — the SIGSTOP'd-process
+    /// shape a fail-stop cannot model.  `None` = no stall.
+    pub stall_after: Option<f64>,
+    /// How long a stall lasts before the worker resumes, seconds.
+    /// Non-finite or huge values effectively never resume.
+    pub stall_secs: f64,
 }
 
 impl Default for FaultSpec {
     fn default() -> Self {
-        FaultSpec { fail_after: None, slowdown: 1.0, latency: 0.0 }
+        FaultSpec {
+            fail_after: None,
+            slowdown: 1.0,
+            latency: 0.0,
+            stall_after: None,
+            stall_secs: 0.0,
+        }
     }
 }
 
@@ -128,6 +150,11 @@ pub struct Welcome {
     /// Session epoch (v3): 0 for a fresh run, incremented on every
     /// `--resume`.  Workers echo it in [`WorkResult`].
     pub epoch: u32,
+    /// Heartbeats requested (v4): the worker must answer every
+    /// [`Frame::Ping`] with a [`Frame::Pong`] carrying its cumulative
+    /// in-chunk progress.  When `false` the worker never sees a `Ping` and
+    /// runs the single-threaded pre-v4 loop unchanged.
+    pub ping: bool,
     pub fault: FaultSpec,
 }
 
@@ -196,6 +223,15 @@ pub enum Frame {
     /// Master → worker: every iteration Finished (or the hang bound hit) —
     /// exit immediately (the paper's `MPI_Abort`).
     Terminate,
+    /// Master → worker (v4): heartbeat probe; sent only to workers welcomed
+    /// with `ping: true`.
+    Ping,
+    /// Worker → master (v4): heartbeat answer.  `progress` is a cumulative
+    /// count of tasks computed by this worker across all chunks — a counter
+    /// that still advances mid-chunk, so a straggling-but-alive worker's
+    /// pongs keep refreshing its deadline anchor while a stalled or
+    /// SIGSTOP'd worker's counter freezes (and a dead one stops answering).
+    Pong { worker: u32, progress: u64 },
 }
 
 // ---------------------------------------------------------------- encoding
@@ -365,10 +401,18 @@ fn push_fault(buf: &mut Vec<u8>, f: &FaultSpec) {
     push_opt_f64(buf, f.fail_after);
     push_f64(buf, f.slowdown);
     push_f64(buf, f.latency);
+    push_opt_f64(buf, f.stall_after);
+    push_f64(buf, f.stall_secs);
 }
 
 fn read_fault(r: &mut ByteReader<'_>) -> Result<FaultSpec> {
-    Ok(FaultSpec { fail_after: r.opt_f64()?, slowdown: r.f64()?, latency: r.f64()? })
+    Ok(FaultSpec {
+        fail_after: r.opt_f64()?,
+        slowdown: r.f64()?,
+        latency: r.f64()?,
+        stall_after: r.opt_f64()?,
+        stall_secs: r.f64()?,
+    })
 }
 
 impl Frame {
@@ -387,6 +431,7 @@ impl Frame {
                 push_u32(buf, w.worker);
                 push_u64(buf, w.n);
                 push_u32(buf, w.epoch);
+                push_bool(buf, w.ping);
                 push_fault(buf, &w.fault);
             }
             Frame::Request { worker } => {
@@ -410,6 +455,12 @@ impl Frame {
                 push_vec_f64(buf, &r.digests);
             }
             Frame::Terminate => buf.push(TAG_TERMINATE),
+            Frame::Ping => buf.push(TAG_PING),
+            Frame::Pong { worker, progress } => {
+                buf.push(TAG_PONG);
+                push_u32(buf, *worker);
+                push_u64(buf, *progress);
+            }
         }
     }
 
@@ -432,6 +483,7 @@ impl Frame {
                 worker: r.u32()?,
                 n: r.u64()?,
                 epoch: r.u32()?,
+                ping: r.boolean()?,
                 fault: read_fault(&mut r)?,
             }),
             TAG_REQUEST => Frame::Request { worker: r.u32()? },
@@ -450,6 +502,8 @@ impl Frame {
                 digests: r.vec_f64()?,
             }),
             TAG_TERMINATE => Frame::Terminate,
+            TAG_PING => Frame::Ping,
+            TAG_PONG => Frame::Pong { worker: r.u32()?, progress: r.u64()? },
             other => bail!("unknown frame tag {other:#04x}"),
         };
         r.finish()?;
@@ -466,6 +520,8 @@ impl Frame {
             Frame::Wait => "Wait",
             Frame::Result(_) => "Result",
             Frame::Terminate => "Terminate",
+            Frame::Ping => "Ping",
+            Frame::Pong { .. } => "Pong",
         }
     }
 }
@@ -527,7 +583,14 @@ mod tests {
                 worker: 3,
                 n: 262_144,
                 epoch: 2,
-                fault: FaultSpec { fail_after: Some(1.25), slowdown: 2.0, latency: 0.1 },
+                ping: true,
+                fault: FaultSpec {
+                    fail_after: Some(1.25),
+                    slowdown: 2.0,
+                    latency: 0.1,
+                    stall_after: Some(0.75),
+                    stall_secs: 3.5,
+                },
             }),
             Frame::Request { worker: 7 },
             Frame::Assign(WireAssignment {
@@ -551,6 +614,8 @@ mod tests {
                 digests: vec![1.0, 2.5, -3.0],
             }),
             Frame::Terminate,
+            Frame::Ping,
+            Frame::Pong { worker: 5, progress: 12_345 },
         ]
     }
 

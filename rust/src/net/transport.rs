@@ -27,7 +27,7 @@
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -187,6 +187,17 @@ pub struct WireFaultPlan {
     pub delay_prob: f64,
     /// Hold time for delayed frames.
     pub delay: Duration,
+    /// Start of the **partition** blackhole window, in seconds after the
+    /// transport splits.  During the window every frame except
+    /// `Hello`/`Welcome`/`Terminate` is silently dropped in *both*
+    /// directions — heartbeats included, so to a health-checking master a
+    /// partitioned worker is indistinguishable from a dead one until the
+    /// window closes.  Probability-free: the window check never touches the
+    /// PRNG, so arming a partition leaves the drop/dup/delay streams
+    /// bit-identical.
+    pub partition_from: f64,
+    /// Width of the partition window; `0` disarms it.
+    pub partition_secs: f64,
     /// PRNG seed; each direction derives an independent stream.
     pub seed: u64,
 }
@@ -199,12 +210,17 @@ impl WireFaultPlan {
             dup_prob: 0.0,
             delay_prob: 0.0,
             delay: Duration::ZERO,
+            partition_from: 0.0,
+            partition_secs: 0.0,
             seed,
         }
     }
 
     pub fn is_quiet(&self) -> bool {
-        self.drop_prob <= 0.0 && self.dup_prob <= 0.0 && self.delay_prob <= 0.0
+        self.drop_prob <= 0.0
+            && self.dup_prob <= 0.0
+            && self.delay_prob <= 0.0
+            && self.partition_secs <= 0.0
     }
 }
 
@@ -217,6 +233,24 @@ fn chaos_eligible(frame: &Frame) -> bool {
         frame,
         Frame::Request { .. } | Frame::Assign(_) | Frame::Wait | Frame::Result(_)
     )
+}
+
+/// The partition blackhole swallows everything except registration and
+/// shutdown — heartbeats included (`Ping`/`Pong` are exactly what a real
+/// partition takes out first), but never `Hello`/`Welcome`/`Terminate`,
+/// so every chaotic run still registers and terminates.
+fn partition_eligible(frame: &Frame) -> bool {
+    !matches!(frame, Frame::Hello(_) | Frame::Welcome(_) | Frame::Terminate)
+}
+
+/// Is the wall clock inside the plan's partition window?  Never consults
+/// the PRNG — see [`WireFaultPlan::partition_from`].
+fn partitioned(epoch: Instant, plan: &WireFaultPlan) -> bool {
+    if plan.partition_secs <= 0.0 {
+        return false;
+    }
+    let t = epoch.elapsed().as_secs_f64();
+    t >= plan.partition_from && t < plan.partition_from + plan.partition_secs
 }
 
 /// Transport wrapper injecting seeded frame faults in both directions.
@@ -246,9 +280,11 @@ impl Transport for FaultInjectingTransport {
         let mut root = Rng::new(plan.seed ^ 0x57A6_F00D);
         let tx_rng = root.fork(1);
         let rx_rng = root.fork(2);
+        // Both halves measure the partition window from the same instant.
+        let epoch = Instant::now();
         Ok((
-            Box::new(FaultTx { inner: tx, rng: tx_rng, plan: plan.clone() }),
-            Box::new(FaultRx { inner: rx, rng: rx_rng, plan, pending: None }),
+            Box::new(FaultTx { inner: tx, rng: tx_rng, plan: plan.clone(), epoch }),
+            Box::new(FaultRx { inner: rx, rng: rx_rng, plan, pending: None, epoch }),
         ))
     }
 }
@@ -271,10 +307,14 @@ struct FaultTx {
     inner: Box<dyn FrameTx>,
     rng: Rng,
     plan: WireFaultPlan,
+    epoch: Instant,
 }
 
 impl FrameTx for FaultTx {
     fn send(&mut self, frame: &Frame) -> Result<()> {
+        if partition_eligible(frame) && partitioned(self.epoch, &self.plan) {
+            return Ok(()); // blackholed by the partition window
+        }
         if !chaos_eligible(frame) {
             return self.inner.send(frame);
         }
@@ -299,6 +339,7 @@ struct FaultRx {
     plan: WireFaultPlan,
     /// A duplicated inbound frame awaiting its second delivery.
     pending: Option<Frame>,
+    epoch: Instant,
 }
 
 impl FrameRx for FaultRx {
@@ -308,6 +349,9 @@ impl FrameRx for FaultRx {
         }
         loop {
             let frame = self.inner.recv()?;
+            if partition_eligible(&frame) && partitioned(self.epoch, &self.plan) {
+                continue; // blackholed before delivery
+            }
             if !chaos_eligible(&frame) {
                 return Ok(frame);
             }
@@ -460,6 +504,44 @@ mod tests {
         assert!(!first.is_empty() && first.len() < 64, "p=0.5 must drop some, not all");
         assert_eq!(first, run(1234), "same seed, same drop pattern");
         assert_ne!(first, run(99), "different seed, different pattern");
+    }
+
+    #[test]
+    fn partition_window_blackholes_data_but_not_terminate() {
+        let (a, b) = LoopbackTransport::pair();
+        // Window open from t=0 for 30s: everything data-plane vanishes for
+        // the duration of this test; Terminate still passes.
+        let plan =
+            WireFaultPlan { partition_from: 0.0, partition_secs: 30.0, ..WireFaultPlan::quiet(4) };
+        assert!(!plan.is_quiet());
+        let (mut a_tx, mut a_rx) =
+            Box::new(FaultInjectingTransport::new(Box::new(a), plan)).split().unwrap();
+        let (mut b_tx, mut b_rx) = Box::new(b).split().unwrap();
+        // Outbound: data frames and heartbeats evaporate, Terminate passes.
+        a_tx.send(&assign(1)).unwrap();
+        a_tx.send(&Frame::Pong { worker: 0, progress: 3 }).unwrap();
+        a_tx.send(&Frame::Terminate).unwrap();
+        assert_eq!(b_rx.recv().unwrap(), Frame::Terminate);
+        // Inbound: same rule.
+        b_tx.send(&assign(2)).unwrap();
+        b_tx.send(&Frame::Ping).unwrap();
+        b_tx.send(&Frame::Terminate).unwrap();
+        assert_eq!(a_rx.recv().unwrap(), Frame::Terminate);
+    }
+
+    #[test]
+    fn future_partition_window_is_transparent_now() {
+        let (a, b) = LoopbackTransport::pair();
+        let plan = WireFaultPlan {
+            partition_from: 1000.0,
+            partition_secs: 5.0,
+            ..WireFaultPlan::quiet(4)
+        };
+        let (mut a_tx, _a_rx) =
+            Box::new(FaultInjectingTransport::new(Box::new(a), plan)).split().unwrap();
+        let (_b_tx, mut b_rx) = Box::new(b).split().unwrap();
+        a_tx.send(&assign(9)).unwrap();
+        assert_eq!(b_rx.recv().unwrap(), assign(9));
     }
 
     #[test]

@@ -29,7 +29,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{ensure, Context, Result};
 
 use crate::apps::AppKind;
-use crate::coordinator::{Engine, MasterConfig};
+use crate::coordinator::{Engine, HealthPolicy, MasterConfig};
 use crate::dls::{Technique, TechniqueParams};
 use crate::obs::{read_journal, read_journal_tolerant, FileJournal};
 use crate::util::json::Json;
@@ -60,6 +60,11 @@ pub struct WalMeta {
     pub listen: String,
     /// Current recovery epoch: 0 for the fresh run, +1 per resume.
     pub epoch: u32,
+    /// Worker-health policy for the run; a resumed session must re-arm the
+    /// same deadlines/heartbeats the crashed one ran with (the engine
+    /// snapshot carries matching deadline state).  Serialized only when
+    /// enabled, so pre-health meta files load unchanged.
+    pub health: HealthPolicy,
 }
 
 impl WalMeta {
@@ -72,11 +77,12 @@ impl WalMeta {
             technique: self.technique,
             params: TechniqueParams::default(),
             rdlb: self.rdlb,
+            health: self.health.clone(),
         }
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("app", Json::str(self.app.name().to_ascii_lowercase())),
             ("technique", Json::str(self.technique.name())),
             ("n", Json::num(self.n as f64)),
@@ -86,7 +92,20 @@ impl WalMeta {
             ("timeout_secs", Json::num(self.timeout_secs as f64)),
             ("listen", Json::str(self.listen.clone())),
             ("epoch", Json::num(self.epoch as f64)),
-        ])
+        ];
+        if self.health.enabled {
+            fields.push((
+                "health",
+                Json::obj(vec![
+                    ("slack", Json::num(self.health.slack)),
+                    ("floor_secs", Json::num(self.health.floor_secs)),
+                    ("quarantine_k", Json::num(self.health.quarantine_k as f64)),
+                    ("min_pool", Json::num(self.health.min_pool as f64)),
+                    ("tick_secs", Json::num(self.health.tick_secs)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 
     fn from_json(j: &Json) -> Result<WalMeta> {
@@ -110,6 +129,24 @@ impl WalMeta {
             timeout_secs: num_field("timeout_secs")?,
             listen: str_field("listen")?.to_string(),
             epoch: num_field("epoch")? as u32,
+            health: match j.get("health") {
+                None => HealthPolicy::default(),
+                Some(h) => {
+                    let f = |k: &str| -> Result<f64> {
+                        h.req(k)?
+                            .as_f64()
+                            .with_context(|| format!("meta health field {k} must be a number"))
+                    };
+                    HealthPolicy {
+                        enabled: true,
+                        slack: f("slack")?,
+                        floor_secs: f("floor_secs")?,
+                        quarantine_k: f("quarantine_k")? as u32,
+                        min_pool: f("min_pool")? as usize,
+                        tick_secs: f("tick_secs")?,
+                    }
+                }
+            },
         })
     }
 
@@ -257,7 +294,23 @@ mod tests {
             timeout_secs: 60,
             listen: "127.0.0.1:4567".to_string(),
             epoch: 0,
+            health: HealthPolicy::default(),
         }
+    }
+
+    #[test]
+    fn meta_round_trips_health_policy() {
+        let mut m = meta();
+        m.health = HealthPolicy { slack: 2.5, tick_secs: 0.1, ..HealthPolicy::on() };
+        let back = WalMeta::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert!(back.master_config().health.enabled);
+        // Disabled health is omitted from the JSON entirely (pre-health
+        // meta files stay loadable, and loading one yields the default).
+        let plain = meta();
+        assert!(!plain.to_json().to_string().contains("health"));
+        let back = WalMeta::from_json(&Json::parse(&plain.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.health, HealthPolicy::default());
     }
 
     fn temp_dir(tag: &str) -> PathBuf {

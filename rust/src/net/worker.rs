@@ -5,16 +5,30 @@
 //! [`Welcome`](super::protocol::Welcome): past its fail-stop deadline it
 //! silently stops participating (the in-flight chunk evaporates and nothing
 //! informs the master — the paper's §4.1 fail-stop model); slowdown dilates
-//! every chunk's compute; latency delays every message in both directions.
+//! every chunk's compute; latency delays every message in both directions;
+//! a stall envelope freezes the worker mid-chunk with the connection open —
+//! the "slow but alive vs. gone" case the v4 heartbeats exist to resolve.
+//!
+//! When the master enables heartbeats (`Welcome::ping`), the worker splits
+//! in two: a reader thread answers every `Ping` with a `Pong` carrying a
+//! cumulative per-task progress counter (so the master sees in-chunk
+//! progress, not just chunk completions) and forwards all other frames to
+//! the compute loop, which slices each chunk into per-task computations to
+//! keep that counter live.  With heartbeats off, the pre-v4 single-threaded
+//! loop runs unchanged — one `compute_into` call per chunk.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
+use crate::coordinator::TaskSet;
 use crate::native::ComputeBackend;
+use crate::util::Rng;
 
-use super::protocol::{Frame, WorkResult, WorkerHello, PROTOCOL_VERSION};
-use super::transport::{FrameRx as _, FrameTx as _, TcpTransport, Transport};
+use super::protocol::{FaultSpec, Frame, WorkResult, WorkerHello, PROTOCOL_VERSION};
+use super::transport::{FrameRx, FrameTx, TcpTransport, Transport};
 
 /// Summary of one worker's participation (for logs and tests).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -33,6 +47,74 @@ pub struct WorkerReport {
     pub lost_master: bool,
 }
 
+/// Send half as the compute loop sees it: owned outright in the classic
+/// single-threaded mode, shared with the Pong responder in heartbeat mode.
+enum TxHandle {
+    Direct(Box<dyn FrameTx>),
+    Shared(Arc<Mutex<Box<dyn FrameTx>>>),
+}
+
+impl TxHandle {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        match self {
+            TxHandle::Direct(tx) => tx.send(frame),
+            TxHandle::Shared(tx) => {
+                tx.lock().map_err(|_| anyhow!("tx mutex poisoned"))?.send(frame)
+            }
+        }
+    }
+}
+
+/// Receive half as the compute loop sees it: the raw connection in classic
+/// mode, the reader thread's forwarding channel in heartbeat mode.
+enum RxHandle {
+    Direct(Box<dyn FrameRx>),
+    Forwarded(mpsc::Receiver<Result<Frame>>),
+}
+
+impl RxHandle {
+    fn recv(&mut self) -> Result<Frame> {
+        match self {
+            RxHandle::Direct(rx) => rx.recv(),
+            RxHandle::Forwarded(rx) => {
+                rx.recv().unwrap_or_else(|_| Err(anyhow!("reader thread gone")))
+            }
+        }
+    }
+}
+
+/// Self-enforced stall envelope: from `at` on, the next mid-chunk check
+/// freezes the worker for `dur` — compute stops, the connection stays open,
+/// heartbeat `Pong`s (sent by the reader thread) keep flowing with a frozen
+/// progress counter.  Exactly the failure mode a liveness-only detector
+/// cannot see and a progress-based one can.
+struct Stall {
+    at: Option<Instant>,
+    dur: Duration,
+    done: bool,
+}
+
+impl Stall {
+    fn new(fault: &FaultSpec, start: Instant) -> Stall {
+        Stall {
+            at: fault.stall_after.map(|s| start + Duration::from_secs_f64(s.max(0.0))),
+            dur: Duration::from_secs_f64(fault.stall_secs.max(0.0)),
+            done: false,
+        }
+    }
+
+    /// Sleep through the stall window if it is armed, due, and unspent.
+    fn maybe_stall(&mut self) {
+        if self.done || self.dur.is_zero() {
+            return;
+        }
+        if self.at.is_some_and(|at| Instant::now() >= at) {
+            self.done = true;
+            std::thread::sleep(self.dur);
+        }
+    }
+}
+
 /// Run the worker loop to completion over an established connection.
 ///
 /// `label` describes the backend in the registration frame (logs only).
@@ -43,9 +125,9 @@ pub fn run_worker(
     backend: ComputeBackend,
     label: &str,
 ) -> Result<WorkerReport> {
-    let (mut tx, mut rx) = transport.split()?;
+    let (mut raw_tx, mut raw_rx) = transport.split()?;
     let lost = || Ok(WorkerReport { lost_master: true, ..WorkerReport::default() });
-    if tx
+    if raw_tx
         .send(&Frame::Hello(WorkerHello {
             version: PROTOCOL_VERSION,
             backend: label.to_string(),
@@ -54,16 +136,55 @@ pub fn run_worker(
     {
         return lost(); // master died before registration
     }
-    let (me, epoch, fault) = match rx.recv() {
-        Ok(Frame::Welcome(w)) => (w.worker, w.epoch, w.fault),
+    let (me, epoch, ping, fault) = match raw_rx.recv() {
+        Ok(Frame::Welcome(w)) => (w.worker, w.epoch, w.ping, w.fault),
         Ok(other) => bail!("expected Welcome, got {}", other.label()),
         Err(_) => return lost(), // master died awaiting Welcome
+    };
+
+    // Cumulative tasks computed, across chunks — the heartbeat currency.
+    // Shared with the reader thread in heartbeat mode; the master only ever
+    // compares successive values, so the absolute count is arbitrary.
+    let progress = Arc::new(AtomicU64::new(0));
+    let (mut tx, mut rx) = if ping {
+        // Heartbeat mode: the reader thread owns the receive half, answers
+        // Pings inline (so a worker deep in compute still heartbeats), and
+        // forwards everything else to the compute loop below.
+        let shared = Arc::new(Mutex::new(raw_tx));
+        let (fwd_tx, fwd_rx) = mpsc::channel::<Result<Frame>>();
+        let pong_tx = Arc::clone(&shared);
+        let counter = Arc::clone(&progress);
+        std::thread::spawn(move || loop {
+            match raw_rx.recv() {
+                Ok(Frame::Ping) => {
+                    let pong =
+                        Frame::Pong { worker: me, progress: counter.load(Ordering::Relaxed) };
+                    let Ok(mut guard) = pong_tx.lock() else { return };
+                    if guard.send(&pong).is_err() {
+                        return; // connection gone; compute loop sees it too
+                    }
+                }
+                Ok(frame) => {
+                    if fwd_tx.send(Ok(frame)).is_err() {
+                        return; // compute loop exited
+                    }
+                }
+                Err(e) => {
+                    let _ = fwd_tx.send(Err(e));
+                    return;
+                }
+            }
+        });
+        (TxHandle::Shared(shared), RxHandle::Forwarded(fwd_rx))
+    } else {
+        (TxHandle::Direct(raw_tx), RxHandle::Direct(raw_rx))
     };
 
     let start = Instant::now();
     let deadline = fault.fail_after.map(|s| start + Duration::from_secs_f64(s.max(0.0)));
     let slow = fault.slowdown.max(1.0);
     let lat = Duration::from_secs_f64(fault.latency.max(0.0));
+    let mut stall = Stall::new(&fault, start);
     let dead = |at: Instant| deadline.is_some_and(|d| at >= d);
     let mut report = WorkerReport { worker: me, ..WorkerReport::default() };
 
@@ -76,10 +197,12 @@ pub fn run_worker(
     }
     tx.send(&Frame::Request { worker: me })?;
 
-    // Worker-owned digest buffer, reused across chunks: compute_into fills
-    // it, the Result frame briefly owns it for the send, and it is
-    // reclaimed afterwards — zero steady-state allocations per chunk.
+    // Worker-owned digest buffer, reused across chunks: compute fills it,
+    // the Result frame briefly owns it for the send, and it is reclaimed
+    // afterwards — zero steady-state allocations per chunk.
     let mut digest_buf: Vec<f64> = Vec::new();
+    // Heartbeat mode's per-task scratch (one digest per call).
+    let mut task_buf: Vec<f64> = Vec::new();
     loop {
         let frame = match rx.recv() {
             Ok(f) => f,
@@ -104,13 +227,38 @@ pub fn run_worker(
                     report.failed = true;
                     return Ok(report); // fail-stop: chunk evaporates
                 }
-                let t0 = Instant::now();
-                backend.compute_into(&a.tasks, &mut digest_buf)?;
-                let mut compute = t0.elapsed();
+                let mut compute;
+                if ping {
+                    // Per-task slicing keeps the progress counter live
+                    // mid-chunk; each task id's digest is a pure function
+                    // of the id, so the digests match the whole-chunk call
+                    // exactly.  Stall checks sit between tasks: a stalled
+                    // worker's counter freezes but its Pongs keep flowing.
+                    digest_buf.clear();
+                    compute = Duration::ZERO;
+                    for t in a.tasks.iter() {
+                        let t0 = Instant::now();
+                        backend
+                            .compute_into(&TaskSet::Range { start: t, end: t + 1 }, &mut task_buf)?;
+                        compute += t0.elapsed();
+                        digest_buf.extend_from_slice(&task_buf);
+                        progress.fetch_add(1, Ordering::Relaxed);
+                        stall.maybe_stall();
+                    }
+                } else {
+                    let t0 = Instant::now();
+                    backend.compute_into(&a.tasks, &mut digest_buf)?;
+                    compute = t0.elapsed();
+                }
                 if slow > 1.0 {
                     // PE perturbation: dilate compute.
                     std::thread::sleep(compute.mul_f64(slow - 1.0));
                     compute = compute.mul_f64(slow);
+                }
+                if !ping {
+                    // Classic mode stalls after compute, before the result:
+                    // the chunk is late, the connection open.
+                    stall.maybe_stall();
                 }
                 if dead(Instant::now()) {
                     report.failed = true;
@@ -150,6 +298,13 @@ pub fn run_worker(
 /// `Terminate` or an injected fail-stop ends the loop; per-session chunk
 /// and iteration counts are accumulated across sessions.
 ///
+/// Retries back off exponentially (50 ms doubling to a 2 s cap) with
+/// seeded jitter, so a fleet of workers orphaned by the same master crash
+/// does not hammer the listener in lockstep the instant it rebinds — the
+/// thundering-herd failure the previous fixed 50 ms loop invited.  The
+/// jitter seed is derived from the address and attempt number, keeping a
+/// given worker's retry schedule reproducible.
+///
 /// The worker's id and fault envelope are re-assigned at each registration
 /// (slots go by arrival order), and its epoch comes from each session's
 /// `Welcome` — a result computed pre-crash but sent post-resume carries the
@@ -164,6 +319,7 @@ pub fn run_worker_reconnecting(
     loop {
         let stream = {
             let deadline = Instant::now() + reconnect_window;
+            let mut backoff = reconnect_backoff(addr);
             loop {
                 match std::net::TcpStream::connect(addr) {
                     Ok(s) => break s,
@@ -172,7 +328,7 @@ pub fn run_worker_reconnecting(
                             Instant::now() < deadline,
                             "gave up reconnecting to {addr} after {reconnect_window:?}: {e}"
                         );
-                        std::thread::sleep(Duration::from_millis(50));
+                        std::thread::sleep(backoff.next_delay());
                     }
                 }
             }
@@ -186,5 +342,82 @@ pub fn run_worker_reconnecting(
         if !report.lost_master {
             return Ok(total);
         }
+    }
+}
+
+/// Capped exponential backoff with seeded jitter for connection retries.
+/// Delay `k` is uniform in `[base·2ᵏ / 2, base·2ᵏ]`, capped at
+/// [`ReconnectBackoff::CAP`]; the jitter stream is seeded from `key` so a
+/// given worker retries on a reproducible schedule while differently-keyed
+/// workers desynchronize.
+pub struct ReconnectBackoff {
+    rng: Rng,
+    next: Duration,
+}
+
+impl ReconnectBackoff {
+    /// First retry delay (pre-jitter).
+    pub const BASE: Duration = Duration::from_millis(50);
+    /// Upper bound any single delay grows to (pre-jitter).
+    pub const CAP: Duration = Duration::from_secs(2);
+
+    pub fn new(seed: u64) -> ReconnectBackoff {
+        ReconnectBackoff { rng: Rng::new(seed ^ 0xBAC0_FF5E), next: Self::BASE }
+    }
+
+    /// The delay to sleep before the next attempt (advances the schedule).
+    pub fn next_delay(&mut self) -> Duration {
+        let full = self.next;
+        self.next = (self.next * 2).min(Self::CAP);
+        // Jitter: uniform in [full/2, full].
+        let frac = 0.5 + 0.5 * self.rng.next_f64();
+        full.mul_f64(frac)
+    }
+}
+
+/// Seed a [`ReconnectBackoff`] from the target address, so two workers
+/// aimed at the same master still jitter apart (their process start times
+/// differ, but their seeds need not — the point is merely to avoid the
+/// pathological all-identical schedule of a constant).
+pub fn reconnect_backoff(addr: &str) -> ReconnectBackoff {
+    // FNV-1a over the address bytes: deterministic, dependency-free.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in addr.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    ReconnectBackoff::new(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_to_cap_with_bounded_jitter() {
+        let mut b = ReconnectBackoff::new(7);
+        let mut expect = ReconnectBackoff::BASE;
+        for _ in 0..10 {
+            let d = b.next_delay();
+            assert!(d >= expect.mul_f64(0.5) && d <= expect, "delay {d:?} outside [{expect:?}/2, {expect:?}]");
+            expect = (expect * 2).min(ReconnectBackoff::CAP);
+        }
+        // Steady state: capped, still jittered.
+        let d = b.next_delay();
+        assert!(d >= ReconnectBackoff::CAP.mul_f64(0.5) && d <= ReconnectBackoff::CAP);
+    }
+
+    #[test]
+    fn backoff_is_seed_deterministic() {
+        let take = |seed: u64| -> Vec<Duration> {
+            let mut b = ReconnectBackoff::new(seed);
+            (0..6).map(|_| b.next_delay()).collect()
+        };
+        assert_eq!(take(42), take(42));
+        assert_ne!(take(42), take(43));
+        // The address-derived constructor is deterministic too.
+        let mut a = reconnect_backoff("127.0.0.1:9000");
+        let mut b = reconnect_backoff("127.0.0.1:9000");
+        assert_eq!(a.next_delay(), b.next_delay());
     }
 }

@@ -86,6 +86,10 @@ pub fn chrome_trace(records: &[JournalRecord]) -> Json {
                 Effect::Completed => {
                     events.push(instant("completed", rec.scope, 0, rec.now));
                 }
+                Effect::Overdue { worker, quarantined, .. } => {
+                    let name = if *quarantined { "overdue+quarantine" } else { "overdue" };
+                    events.push(instant(name, rec.scope, *worker, rec.now));
+                }
                 _ => {}
             }
         }

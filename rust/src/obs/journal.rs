@@ -28,7 +28,9 @@ use crate::coordinator::{
 /// File magic: identifies a journal regardless of extension.
 pub const JOURNAL_MAGIC: [u8; 8] = *b"RDLBJRNL";
 /// Journal format version (bumped on any encoding change).
-pub const JOURNAL_VERSION: u16 = 1;
+/// v2: worker-health records — `HealthTick` / `Progress` events and the
+/// `Overdue` effect.
+pub const JOURNAL_VERSION: u16 = 2;
 /// Upper bound on one record's payload — same defensive cap as the wire
 /// protocol's `MAX_FRAME_LEN`.
 pub const MAX_RECORD_LEN: u32 = 32 << 20;
@@ -39,6 +41,8 @@ const EV_RESULT: u8 = 0x02;
 const EV_DISCONNECTED: u8 = 0x03;
 const EV_REFUSED: u8 = 0x04;
 const EV_TIMEOUT: u8 = 0x05;
+const EV_HEALTH_TICK: u8 = 0x06;
+const EV_PROGRESS: u8 = 0x07;
 
 // Effect tags.
 const EF_ASSIGN: u8 = 0x10;
@@ -46,6 +50,7 @@ const EF_PARK: u8 = 0x11;
 const EF_WAKE: u8 = 0x12;
 const EF_TERMINATE: u8 = 0x13;
 const EF_COMPLETED: u8 = 0x14;
+const EF_OVERDUE: u8 = 0x15;
 
 // Task-set kinds (same values as the wire protocol).
 const TS_RANGE: u8 = 0x00;
@@ -110,6 +115,12 @@ fn push_effect(buf: &mut Vec<u8>, eff: &Effect) {
             push_u32(buf, *worker as u32);
         }
         Effect::Completed => buf.push(EF_COMPLETED),
+        Effect::Overdue { worker, assignment_id, quarantined } => {
+            buf.push(EF_OVERDUE);
+            push_u32(buf, *worker as u32);
+            push_u64(buf, *assignment_id);
+            buf.push(*quarantined as u8);
+        }
     }
 }
 
@@ -166,6 +177,17 @@ fn encode_record(
             scratch.push(EV_TIMEOUT);
             push_u32(scratch, scope);
             push_f64(scratch, now);
+        }
+        EngineEvent::HealthTick => {
+            scratch.push(EV_HEALTH_TICK);
+            push_u32(scratch, scope);
+            push_f64(scratch, now);
+        }
+        EngineEvent::Progress { worker } => {
+            scratch.push(EV_PROGRESS);
+            push_u32(scratch, scope);
+            push_f64(scratch, now);
+            push_u32(scratch, *worker as u32);
         }
     }
     push_u32(scratch, effects.len() as u32);
@@ -357,6 +379,8 @@ pub enum JournalEvent {
     Disconnected { worker: usize },
     Refused { worker: usize },
     Timeout,
+    HealthTick,
+    Progress { worker: usize },
 }
 
 /// One decoded journal record: everything the sink observed for one event.
@@ -408,6 +432,12 @@ fn decode_effect(r: &mut ByteReader<'_>) -> Result<Effect> {
         EF_WAKE => Effect::Wake { worker: r.u32()? as usize },
         EF_TERMINATE => Effect::TerminateWorker { worker: r.u32()? as usize },
         EF_COMPLETED => Effect::Completed,
+        EF_OVERDUE => {
+            let worker = r.u32()? as usize;
+            let assignment_id = r.u64()?;
+            let quarantined = r.u8()? != 0;
+            Effect::Overdue { worker, assignment_id, quarantined }
+        }
         other => bail!("unknown effect tag 0x{other:02x}"),
     })
 }
@@ -436,6 +466,8 @@ fn decode_record(payload: &[u8]) -> Result<JournalRecord> {
         EV_DISCONNECTED => JournalEvent::Disconnected { worker: r.u32()? as usize },
         EV_REFUSED => JournalEvent::Refused { worker: r.u32()? as usize },
         EV_TIMEOUT => JournalEvent::Timeout,
+        EV_HEALTH_TICK => JournalEvent::HealthTick,
+        EV_PROGRESS => JournalEvent::Progress { worker: r.u32()? as usize },
         other => bail!("unknown event tag 0x{other:02x}"),
     };
     let n_effects = r.u32()? as usize;
@@ -523,16 +555,28 @@ pub fn replay_stats(records: &[JournalRecord]) -> MasterStats {
                 s.unknown_results += rec.notes.unknown_results;
             }
             JournalEvent::Refused { .. } => s.refused_workers += 1,
-            JournalEvent::Disconnected { .. } | JournalEvent::Timeout => {}
+            JournalEvent::Disconnected { .. }
+            | JournalEvent::Timeout
+            | JournalEvent::HealthTick
+            | JournalEvent::Progress { .. } => {}
         }
         for eff in &rec.effects {
-            if let Effect::Assign(a) = eff {
-                s.assigned_chunks += 1;
-                s.assigned_iterations += a.len() as u64;
-                if a.rescheduled {
-                    s.rescheduled_chunks += 1;
-                    s.rescheduled_iterations += a.len() as u64;
+            match eff {
+                Effect::Assign(a) => {
+                    s.assigned_chunks += 1;
+                    s.assigned_iterations += a.len() as u64;
+                    if a.rescheduled {
+                        s.rescheduled_chunks += 1;
+                        s.rescheduled_iterations += a.len() as u64;
+                    }
                 }
+                Effect::Overdue { quarantined, .. } => {
+                    s.overdue_chunks += 1;
+                    if *quarantined {
+                        s.quarantined_workers += 1;
+                    }
+                }
+                _ => {}
             }
         }
     }
@@ -561,6 +605,7 @@ mod tests {
             Effect::Wake { worker: 2 },
             Effect::TerminateWorker { worker: 0 },
             Effect::Completed,
+            Effect::Overdue { worker: 3, assignment_id: 7, quarantined: true },
         ]
     }
 
@@ -593,10 +638,12 @@ mod tests {
         );
         sink.record(0, 0.75, &EngineEvent::WorkerDisconnected { worker: 2 }, &[], &zero);
         sink.record(0, 0.8, &EngineEvent::VersionRefused { worker: 5 }, &effects[4..5], &zero);
-        sink.record(0, 1.0, &EngineEvent::Timeout, &effects[5..], &zero);
+        sink.record(0, 1.0, &EngineEvent::Timeout, &effects[5..6], &zero);
+        sink.record(0, 1.25, &EngineEvent::HealthTick, &effects[6..], &zero);
+        sink.record(0, 1.5, &EngineEvent::Progress { worker: 3 }, &[], &zero);
 
         let records = read_journal(sink.bytes()).unwrap();
-        assert_eq!(records.len(), 5);
+        assert_eq!(records.len(), 7);
         assert_eq!(records[0].event, JournalEvent::Request { worker: 4 });
         assert_eq!(records[0].effects, effects[..1]);
         assert_eq!(records[1].scope, 3);
@@ -615,7 +662,11 @@ mod tests {
         assert_eq!(records[3].event, JournalEvent::Refused { worker: 5 });
         assert_eq!(records[3].effects, effects[4..5]);
         assert_eq!(records[4].event, JournalEvent::Timeout);
-        assert_eq!(records[4].effects, effects[5..]);
+        assert_eq!(records[4].effects, effects[5..6]);
+        assert_eq!(records[5].event, JournalEvent::HealthTick);
+        assert_eq!(records[5].effects, effects[6..]);
+        assert_eq!(records[6].event, JournalEvent::Progress { worker: 3 });
+        assert!(records[6].effects.is_empty());
     }
 
     #[test]
@@ -750,5 +801,34 @@ mod tests {
         assert_eq!(s.completed_chunks, 1);
         assert_eq!(s.finished_iterations, 4);
         assert_eq!(s.identity_violations(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn replay_folds_overdue_effects_into_health_counters() {
+        let mut sink = JournalSink::new();
+        let zero = ResultNotes::default();
+        sink.record(
+            0,
+            1.0,
+            &EngineEvent::HealthTick,
+            &[
+                Effect::Overdue { worker: 1, assignment_id: 3, quarantined: false },
+                Effect::Overdue { worker: 2, assignment_id: 4, quarantined: true },
+            ],
+            &zero,
+        );
+        // An inner-group overdue must not leak into the root replay.
+        sink.record(
+            2,
+            1.0,
+            &EngineEvent::HealthTick,
+            &[Effect::Overdue { worker: 0, assignment_id: 9, quarantined: true }],
+            &zero,
+        );
+        sink.record(0, 1.1, &EngineEvent::Progress { worker: 1 }, &[], &zero);
+        let s = replay_stats(&read_journal(sink.bytes()).unwrap());
+        assert_eq!(s.overdue_chunks, 2);
+        assert_eq!(s.quarantined_workers, 1);
+        assert_eq!(s.requests, 0);
     }
 }

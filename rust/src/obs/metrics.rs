@@ -283,6 +283,8 @@ impl EventSink for MetricsSink {
             EngineEvent::WorkerDisconnected { .. } => reg.inc("rdlb_disconnects_total", 1),
             EngineEvent::VersionRefused { .. } => reg.inc("rdlb_refused_workers_total", 1),
             EngineEvent::Timeout => reg.inc("rdlb_timeouts_total", 1),
+            EngineEvent::HealthTick => reg.inc("rdlb_health_ticks_total", 1),
+            EngineEvent::Progress { .. } => reg.inc("rdlb_progress_total", 1),
         }
         for eff in effects {
             match eff {
@@ -306,6 +308,12 @@ impl EventSink for MetricsSink {
                 }
                 Effect::TerminateWorker { .. } => reg.inc("rdlb_terminations_total", 1),
                 Effect::Completed => reg.inc("rdlb_completions_total", 1),
+                Effect::Overdue { quarantined, .. } => {
+                    reg.inc("rdlb_overdue_chunks_total", 1);
+                    if *quarantined {
+                        reg.inc("rdlb_quarantines_total", 1);
+                    }
+                }
             }
         }
     }

@@ -27,7 +27,7 @@ use super::outcome::Outcome;
 use super::perturbation::PerturbationModel;
 use super::topology::Topology;
 use crate::apps::Workload;
-use crate::coordinator::{Effect, Engine, EngineEvent, MasterConfig, SharedSink};
+use crate::coordinator::{Effect, Engine, EngineEvent, HealthPolicy, MasterConfig, SharedSink};
 use crate::dls::{Technique, TechniqueParams};
 use crate::obs::TraceSink;
 use crate::trace::Trace;
@@ -50,6 +50,10 @@ pub struct SimParams {
     /// Sinks are passive: the seeded event order and outcome are identical
     /// with or without one (see `ARCHITECTURE.md` §Observability).
     pub sink: Option<SharedSink>,
+    /// Worker-health layer (per-chunk deadlines, speculation, quarantine).
+    /// Disabled by default; when disabled no `HealthTick` events are ever
+    /// scheduled, so seeded outcomes are bit-identical to pre-health runs.
+    pub health: HealthPolicy,
 }
 
 impl SimParams {
@@ -66,6 +70,7 @@ impl SimParams {
             sched_overhead: 5e-6,
             base_latency: 2e-5,
             sink: None,
+            health: HealthPolicy::default(),
         }
     }
 }
@@ -142,6 +147,7 @@ impl SimCluster {
             technique: prm.technique,
             params: tech_params,
             rdlb: prm.rdlb,
+            health: prm.health.clone(),
         });
         if let Some(s) = prm.sink.clone() {
             engine.set_sink(0, Box::new(s));
@@ -166,6 +172,12 @@ impl SimCluster {
         // All ranks are alive at t=0 and send their first request.
         for w in 0..p {
             queue.push(latency(w, 0.0), Event::RequestAtMaster { worker: w, result: None });
+        }
+        // Health layer armed: the master checks in-flight chunks against
+        // their deadlines on a synthetic periodic queue event.
+        let tick = prm.health.tick_secs;
+        if prm.health.enabled && tick > 0.0 {
+            queue.push(tick, Event::HealthTick);
         }
 
         while let Some((now, event)) = queue.pop() {
@@ -245,6 +257,27 @@ impl SimCluster {
                             }),
                         },
                     );
+                }
+
+                Event::HealthTick => {
+                    reply.clear();
+                    engine.handle(now, EngineEvent::HealthTick, &mut reply);
+                    // Overdue chunks re-enter dispatch through the woken
+                    // workers' requests (same delivery as result-wakes:
+                    // already at the master, zero added latency).
+                    for eff in reply.drain(..) {
+                        if let Effect::Wake { worker } = eff {
+                            queue.push(now, Event::RequestAtMaster { worker, result: None });
+                        }
+                    }
+                    // Re-arm while anything can still change.  Once the
+                    // queue holds no other events and the tick produced
+                    // nothing, the system is wedged (e.g. a no-rDLB hang
+                    // with every chunk already flagged) — stop ticking so
+                    // the run can terminate and report the hang.
+                    if !queue.is_empty() {
+                        queue.push(now + tick, Event::HealthTick);
+                    }
                 }
             }
         }
@@ -410,5 +443,53 @@ mod tests {
     fn master_alone_finishes_everything() {
         let o = SimCluster::new(base(300, 1, Technique::Gss, true)).unwrap().run().unwrap();
         assert!(o.completed());
+    }
+
+    fn aggressive_health() -> HealthPolicy {
+        HealthPolicy { slack: 2.0, floor_secs: 0.02, tick_secs: 0.05, ..HealthPolicy::on() }
+    }
+
+    #[test]
+    fn health_flags_evaporated_chunk_and_recovers_with_rdlb() {
+        let mut p = base(2000, 4, Technique::Fac, true);
+        p.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+        p.health = aggressive_health();
+        let o = SimCluster::new(p).unwrap().run().unwrap();
+        assert!(o.completed(), "health-armed rDLB run must survive the failure");
+        assert_eq!(o.finished, 2000);
+        assert!(o.stats.overdue_chunks > 0, "evaporated chunk never flagged");
+        assert!(o.stats.rescheduled_chunks > 0);
+        assert_eq!(o.stats.identity_violations(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn health_without_rdlb_counts_overdue_but_still_hangs() {
+        // Without the rDLB phase there is no speculation to recover the
+        // chunk — the run must still hang (not spin on health ticks) and
+        // the overdue counter must record the detection.
+        let mut p = base(2000, 4, Technique::Fac, false);
+        p.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+        p.health = aggressive_health();
+        let o = SimCluster::new(p).unwrap().run().unwrap();
+        assert!(o.hung, "no-rDLB failure must still hang");
+        assert!(o.stats.overdue_chunks > 0);
+        assert_eq!(o.stats.rescheduled_chunks, 0);
+    }
+
+    #[test]
+    fn health_disabled_outcome_matches_plain_run() {
+        // The disabled policy must be a true no-op: identical stats and
+        // event count to a run that never mentions health.
+        let mk = |health: HealthPolicy| {
+            let mut p = base(800, 4, Technique::Fac, true);
+            p.failures = FailurePlan::random(4, 2, 0.1, 9);
+            p.health = health;
+            SimCluster::new(p).unwrap().run().unwrap()
+        };
+        let plain = mk(HealthPolicy::default());
+        let off = mk(HealthPolicy { enabled: false, slack: 9.0, ..HealthPolicy::default() });
+        assert_eq!(plain.parallel_time, off.parallel_time);
+        assert_eq!(plain.stats, off.stats);
+        assert_eq!(plain.events, off.events);
     }
 }

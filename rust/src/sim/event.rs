@@ -15,6 +15,10 @@ pub enum Event {
     ReplyAtWorker { worker: usize, assignment: Assignment },
     /// The worker finishes computing a chunk locally.
     ComputeDone { worker: usize, assignment: Assignment, compute_time: f64 },
+    /// Periodic worker-health deadline check at the master (only scheduled
+    /// when the health layer is enabled, so seeded runs without it keep a
+    /// bit-identical event order).
+    HealthTick,
 }
 
 /// Worker-side record of a finished chunk travelling back to the master.

@@ -50,7 +50,13 @@ fn injected_redispatch_drop_is_detected_shrunk_and_replayable() {
     sc.faults[3].fail_after = Some(sc.est_makespan() * 0.3);
     sc.faults[2].slowdown = 1.5;
     sc.faults[1].latency = 5e-4;
-    sc.wire = WireChaos { drop_prob: 0.0, dup_prob: 0.05, delay_prob: 0.1, delay_ms: 0.3 };
+    sc.wire = WireChaos {
+        drop_prob: 0.0,
+        dup_prob: 0.05,
+        delay_prob: 0.1,
+        delay_ms: 0.3,
+        ..WireChaos::quiet()
+    };
     sc.validate().unwrap();
 
     // 1. Detection.
@@ -91,7 +97,13 @@ fn wire_chaos_with_failures_still_completes_exactly_once() {
     let _wd = Watchdog::arm("chaos wire resilience", Duration::from_secs(300));
     let mut sc = ChaosScenario::baseline(1, 23, 120, 4, Technique::Gss, true, 2e-4);
     sc.faults[2].fail_after = Some(sc.est_makespan() * 0.4);
-    sc.wire = WireChaos { drop_prob: 0.15, dup_prob: 0.10, delay_prob: 0.15, delay_ms: 1.0 };
+    sc.wire = WireChaos {
+        drop_prob: 0.15,
+        dup_prob: 0.10,
+        delay_prob: 0.15,
+        delay_ms: 1.0,
+        ..WireChaos::quiet()
+    };
     let runs = execute_scenario(&sc).unwrap();
     assert_eq!(runs.len(), 1);
     let net = &runs[0];

@@ -20,7 +20,9 @@
 
 use std::sync::{Arc, Mutex};
 
-use rdlb::coordinator::{Assignment, Effect, Engine, EngineEvent, MasterConfig, SharedSink};
+use rdlb::coordinator::{
+    Assignment, Effect, Engine, EngineEvent, HealthPolicy, MasterConfig, SharedSink,
+};
 use rdlb::dls::{Technique, TechniqueParams};
 use rdlb::obs::{read_journal, JournalSink};
 use rdlb::util::Rng;
@@ -169,7 +171,14 @@ fn random_case(seed: u64) -> (MasterConfig, Vec<Option<usize>>, Option<usize>) {
     let p = 2 + (rng.next_u64() % 5) as usize;
     let technique = techniques[(rng.next_u64() % 6) as usize];
     let rdlb = rng.next_f64() < 0.7;
-    let cfg = MasterConfig { n, p, technique, params: TechniqueParams::default(), rdlb };
+    let cfg = MasterConfig {
+        n,
+        p,
+        technique,
+        params: TechniqueParams::default(),
+        rdlb,
+        health: HealthPolicy::default(),
+    };
     // Worker 0 pristine; others may die after a few served requests.
     let fail_after: Vec<Option<usize>> = (0..p)
         .map(|w| (w != 0 && rng.next_f64() < 0.35).then(|| 1 + (rng.next_u64() % 4) as usize))
@@ -216,6 +225,152 @@ fn prop_replay_of_any_prefix_matches_the_live_engine() {
             );
         }
     }
+}
+
+/// Feed one event to a live engine, snapshot the resulting state, return
+/// the effects (scripted sibling of [`Driver::step`]).
+fn feed_and_snap(
+    e: &mut Engine,
+    snaps: &mut Vec<Vec<u8>>,
+    now: f64,
+    ev: EngineEvent<'_>,
+) -> Vec<Effect> {
+    let mut out = Vec::new();
+    e.handle(now, ev, &mut out);
+    snaps.push(e.snapshot());
+    out
+}
+
+fn take_assign(effects: Vec<Effect>) -> Assignment {
+    match effects.into_iter().next() {
+        Some(Effect::Assign(a)) => a,
+        other => panic!("expected Assign, got {other:?}"),
+    }
+}
+
+#[test]
+fn health_deadline_state_round_trips_through_snapshot_and_replay() {
+    // A health-armed scripted run: per-worker rate estimates, deadline
+    // anchors, overdue flags, the speculation queue and quarantine state
+    // must all survive the snapshot codec, and journal replay must
+    // reconstruct them exactly — otherwise a resumed master would forget
+    // which chunks it already flagged and re-speculate or re-quarantine.
+    let cfg = MasterConfig {
+        n: 4,
+        p: 2,
+        technique: Technique::Ss,
+        params: TechniqueParams::default(),
+        rdlb: true,
+        health: HealthPolicy {
+            enabled: true,
+            slack: 2.0,
+            floor_secs: 0.001,
+            quarantine_k: 1,
+            min_pool: 1,
+            tick_secs: 0.5,
+        },
+    };
+    let tap = Arc::new(Mutex::new(JournalSink::new()));
+    let mut engine = Engine::new(cfg.clone());
+    engine.set_sink(0, Box::new(SharedSink::from_arc(tap.clone())));
+    let mut snaps: Vec<Vec<u8>> = Vec::new();
+
+    // w0 takes task 0 and goes silent; w1 takes task 1 and finishes fast,
+    // seeding the rate estimator; a heartbeat refreshes w0's anchor.
+    let a0 = take_assign(feed_and_snap(&mut engine, &mut snaps, 0.0, EngineEvent::WorkerRequest {
+        worker: 0,
+    }));
+    let a1 = take_assign(feed_and_snap(&mut engine, &mut snaps, 0.1, EngineEvent::WorkerRequest {
+        worker: 1,
+    }));
+    assert!(feed_and_snap(&mut engine, &mut snaps, 0.2, EngineEvent::ResultReceived {
+        worker: 1,
+        assignment_id: a1.id,
+        compute_secs: 0.1,
+        digests: &[1.25],
+    })
+    .is_empty());
+    assert!(feed_and_snap(&mut engine, &mut snaps, 0.25, EngineEvent::Progress { worker: 0 })
+        .is_empty());
+
+    // The tick flags w0's chunk (window = 0.1s pooled rate × 2.0 slack,
+    // age 0.75s from the refreshed anchor) and quarantines w0 (k = 1).
+    assert_eq!(
+        feed_and_snap(&mut engine, &mut snaps, 1.0, EngineEvent::HealthTick),
+        vec![Effect::Overdue { worker: 0, assignment_id: a0.id, quarantined: true }]
+    );
+    // w1 picks up the speculative copy; quarantined w0 parks; then w0's
+    // own late result lands first, lifting the quarantine and waking it.
+    let spec = take_assign(feed_and_snap(&mut engine, &mut snaps, 1.1, EngineEvent::WorkerRequest {
+        worker: 1,
+    }));
+    assert!(spec.rescheduled);
+    assert_eq!(
+        feed_and_snap(&mut engine, &mut snaps, 1.2, EngineEvent::WorkerRequest { worker: 0 }),
+        vec![Effect::Park { worker: 0 }]
+    );
+    assert_eq!(
+        feed_and_snap(&mut engine, &mut snaps, 1.3, EngineEvent::ResultReceived {
+            worker: 0,
+            assignment_id: a0.id,
+            compute_secs: 1.3,
+            digests: &[2.0],
+        }),
+        vec![Effect::Wake { worker: 0 }]
+    );
+    // Drain the rest of the run, the duplicate speculative result included.
+    let a2 = take_assign(feed_and_snap(&mut engine, &mut snaps, 1.4, EngineEvent::WorkerRequest {
+        worker: 0,
+    }));
+    assert!(!a2.rescheduled);
+    assert!(feed_and_snap(&mut engine, &mut snaps, 1.5, EngineEvent::ResultReceived {
+        worker: 1,
+        assignment_id: spec.id,
+        compute_secs: 0.4,
+        digests: &[9.0],
+    })
+    .is_empty());
+    assert!(feed_and_snap(&mut engine, &mut snaps, 1.6, EngineEvent::ResultReceived {
+        worker: 0,
+        assignment_id: a2.id,
+        compute_secs: 0.2,
+        digests: &[3.0],
+    })
+    .is_empty());
+    let a3 = take_assign(feed_and_snap(&mut engine, &mut snaps, 1.7, EngineEvent::WorkerRequest {
+        worker: 0,
+    }));
+    assert_eq!(
+        feed_and_snap(&mut engine, &mut snaps, 1.8, EngineEvent::ResultReceived {
+            worker: 0,
+            assignment_id: a3.id,
+            compute_secs: 0.1,
+            digests: &[4.0],
+        }),
+        vec![Effect::Completed]
+    );
+
+    // Every journal prefix replays to the exact live state at that point —
+    // including the prefixes that end mid-quarantine and mid-speculation.
+    let bytes = tap.lock().unwrap().bytes().to_vec();
+    let records = read_journal(&bytes).unwrap();
+    assert_eq!(records.len(), snaps.len(), "one journal record per handled event");
+    for k in 1..=records.len() {
+        let replayed = Engine::replay(cfg.clone(), &records[..k])
+            .unwrap_or_else(|e| panic!("prefix {k}: {e:#}"));
+        assert_eq!(
+            replayed.snapshot(),
+            snaps[k - 1],
+            "prefix {k}/{} diverges from the live engine",
+            records.len()
+        );
+    }
+    // Resume fast path across the health-critical boundary: restore the
+    // snapshot taken right after the HealthTick, replay the suffix.
+    let full = snaps.last().unwrap();
+    let mut resumed = Engine::restore(&snaps[4]).unwrap();
+    resumed.replay_records(&records[5..]).unwrap();
+    assert_eq!(resumed.snapshot(), *full, "snapshot@tick + suffix diverges from full replay");
 }
 
 #[test]

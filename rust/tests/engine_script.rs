@@ -8,11 +8,30 @@
 //! for the simulator, the native threads, the net runtime and both levels
 //! of the hierarchical runtime at once.
 
-use rdlb::coordinator::{Assignment, Effect, Engine, EngineEvent, MasterConfig};
+use rdlb::coordinator::{Assignment, Effect, Engine, EngineEvent, HealthPolicy, MasterConfig};
 use rdlb::dls::{Technique, TechniqueParams};
 
 fn engine(n: usize, p: usize, technique: Technique, rdlb: bool) -> Engine {
-    Engine::new(MasterConfig { n, p, technique, params: TechniqueParams::default(), rdlb })
+    Engine::new(MasterConfig {
+        n,
+        p,
+        technique,
+        params: TechniqueParams::default(),
+        rdlb,
+        health: HealthPolicy::default(),
+    })
+}
+
+/// An engine with the worker-health layer armed under `policy`.
+fn health_engine(n: usize, p: usize, technique: Technique, policy: HealthPolicy) -> Engine {
+    Engine::new(MasterConfig {
+        n,
+        p,
+        technique,
+        params: TechniqueParams::default(),
+        rdlb: true,
+        health: policy,
+    })
 }
 
 /// Feed one event, returning the full effect list.
@@ -234,6 +253,133 @@ fn last_chunk_redispatch_races_and_attributes_once() {
     assert_eq!(stats.duplicate_iterations, 1);
     assert_eq!(stats.rescheduled_chunks, 2);
     assert_eq!(stats.rescheduled_completions, 2);
+    assert_eq!(stats.identity_violations(), Vec::<String>::new());
+}
+
+/// The worker-health contract end to end: a chunk past its deadline is
+/// flagged `Overdue` exactly once, its tasks are speculatively
+/// re-dispatched *ahead of the primary phase*, and the straggler's late
+/// result is absorbed as a digest-inert duplicate through the ordinary
+/// first-completion filter — with every stats identity intact.
+#[test]
+fn overdue_chunk_is_speculated_and_late_straggler_result_is_suppressed() {
+    let policy = HealthPolicy {
+        slack: 2.0,
+        floor_secs: 0.001,
+        quarantine_k: 99, // quarantine out of the picture for this script
+        ..HealthPolicy::on()
+    };
+    let mut e = health_engine(4, 2, Technique::Ss, policy);
+    let a0 = assign(&mut e, 0, 0.0); // task 0 — w0 goes silent holding it
+    assert_eq!(a0.tasks.to_vec(), vec![0]);
+    let a1 = assign(&mut e, 1, 0.0); // task 1 — completes promptly
+    assert_eq!(a1.tasks.to_vec(), vec![1]);
+    // w1's completion seeds the rate estimate (~0.01 s per task); w0 has no
+    // history, so its prediction falls back to the pooled mean.
+    assert!(feed(&mut e, 0.01, result_event(1, a1.id, &[1.0])).is_empty());
+
+    // Before any completion the tick is cold-start safe; afterwards w0's
+    // chunk (age 1.0 s >> 0.02 s window) is flagged — once, not twice.
+    let out = feed(&mut e, 1.0, EngineEvent::HealthTick);
+    assert_eq!(
+        out,
+        vec![Effect::Overdue { worker: 0, assignment_id: a0.id, quarantined: false }]
+    );
+    assert!(feed(&mut e, 1.01, EngineEvent::HealthTick).is_empty(), "flagged at most once");
+
+    // The overdue chunk is served to the next requester *before* the
+    // primary phase, although tasks 2 and 3 are still unscheduled.
+    let spec = assign(&mut e, 1, 1.1);
+    assert!(spec.rescheduled, "speculative copies are rescheduled chunks");
+    assert_eq!(spec.tasks.to_vec(), vec![0]);
+    assert!(feed(&mut e, 1.15, result_event(1, spec.id, &[5.0])).is_empty());
+    assert_eq!(e.result_digest(), 1.0 + 5.0, "the speculative copy won task 0");
+
+    // Drain the primary phase.
+    let a2 = assign(&mut e, 1, 1.2);
+    assert_eq!(a2.tasks.to_vec(), vec![2]);
+    assert!(feed(&mut e, 1.25, result_event(1, a2.id, &[1.0])).is_empty());
+    let a3 = assign(&mut e, 1, 1.3);
+    assert_eq!(a3.tasks.to_vec(), vec![3]);
+    assert_eq!(feed(&mut e, 1.35, result_event(1, a3.id, &[1.0])), vec![Effect::Completed]);
+
+    // The straggler finally reports: tolerated, counted, digest-inert.
+    assert_eq!(feed(&mut e, 3.0, result_event(0, a0.id, &[9.0])), vec![Effect::Completed]);
+    assert_eq!(e.result_digest(), 8.0, "late duplicate must not contribute");
+    let stats = e.final_stats();
+    assert_eq!(stats.finished_iterations, 4);
+    assert_eq!(stats.duplicate_iterations, 1);
+    assert_eq!(stats.overdue_chunks, 1);
+    assert_eq!(stats.rescheduled_chunks, 1);
+    assert_eq!(stats.quarantined_workers, 0);
+    assert_eq!(stats.identity_violations(), Vec::<String>::new());
+}
+
+/// Quarantine enter/exit, scripted: K consecutive overdue verdicts park a
+/// worker with prejudice (requests Wait), the min-pool floor stops the
+/// *last* eligible workers from being quarantined, and one clean completion
+/// lifts the quarantine and makes the worker schedulable again.
+#[test]
+fn quarantine_enters_respects_min_pool_and_exits_on_clean_completion() {
+    let policy = HealthPolicy {
+        slack: 1.5,
+        floor_secs: 0.001,
+        quarantine_k: 1, // first overdue verdict quarantines
+        min_pool: 1,
+        ..HealthPolicy::on()
+    };
+    let mut e = health_engine(6, 2, Technique::Ss, policy);
+    let a0 = assign(&mut e, 0, 0.0); // task 0 — stalls
+    let a1 = assign(&mut e, 1, 0.0); // task 1 — completes, seeding rates
+    assert!(feed(&mut e, 0.05, result_event(1, a1.id, &[1.0])).is_empty());
+
+    // w0 blows its deadline; k=1 pushes it straight into quarantine.
+    let out = feed(&mut e, 1.0, EngineEvent::HealthTick);
+    assert_eq!(
+        out,
+        vec![Effect::Overdue { worker: 0, assignment_id: a0.id, quarantined: true }]
+    );
+    // Parked with prejudice: no new work for w0 while quarantined.
+    assert_eq!(
+        feed(&mut e, 1.05, EngineEvent::WorkerRequest { worker: 0 }),
+        vec![Effect::Park { worker: 0 }]
+    );
+    // w1 picks up the speculative copy of w0's chunk... and stalls too.
+    let spec = assign(&mut e, 1, 1.1);
+    assert!(spec.rescheduled);
+    assert_eq!(spec.tasks.to_vec(), vec![0]);
+    let out = feed(&mut e, 5.0, EngineEvent::HealthTick);
+    assert_eq!(
+        out,
+        vec![
+            // The min-pool floor keeps the last eligible worker
+            // unquarantined...
+            Effect::Overdue { worker: 1, assignment_id: spec.id, quarantined: false },
+            // ...and a tick that flagged anything wakes parked workers —
+            // even quarantined ones, which simply re-park on their retry.
+            Effect::Wake { worker: 0 },
+        ]
+    );
+    assert_eq!(
+        feed(&mut e, 5.01, EngineEvent::WorkerRequest { worker: 0 }),
+        vec![Effect::Park { worker: 0 }]
+    );
+
+    // The original straggler's result lands first: a clean completion that
+    // lifts its quarantine and wakes it (it was parked).
+    let out = feed(&mut e, 5.1, result_event(0, a0.id, &[2.0]));
+    assert_eq!(out, vec![Effect::Wake { worker: 0 }]);
+    let revived = assign(&mut e, 0, 5.2);
+    assert!(!revived.rescheduled, "quarantine lifted: w0 draws primary work again");
+    assert_eq!(revived.tasks.to_vec(), vec![2]);
+
+    // w1's stalled duplicate of task 0 eventually reports: digest-inert.
+    assert!(feed(&mut e, 5.3, result_event(1, spec.id, &[9.0])).is_empty());
+    assert_eq!(e.result_digest(), 1.0 + 2.0, "duplicate of task 0 must not contribute");
+    let stats = e.final_stats();
+    assert_eq!(stats.overdue_chunks, 2);
+    assert_eq!(stats.quarantined_workers, 1, "only w0 ever entered quarantine");
+    assert_eq!(stats.duplicate_iterations, 1);
     assert_eq!(stats.identity_violations(), Vec::<String>::new());
 }
 

@@ -12,7 +12,7 @@
 //!    currently holds it;
 //!  * hang — with rDLB off, a lost chunk implies the run cannot complete.
 
-use rdlb::coordinator::{Master, MasterConfig, Reply};
+use rdlb::coordinator::{HealthPolicy, Master, MasterConfig, Reply};
 use rdlb::dls::{Technique, TechniqueParams};
 use rdlb::util::Rng;
 
@@ -110,6 +110,7 @@ fn prop_conservation_under_random_failures_with_rdlb() {
             technique,
             params: TechniqueParams::default(),
             rdlb: true,
+            health: HealthPolicy::default(),
         });
         let completed = drive(&mut master, p, &fail_after, &mut rng, 20 * n);
         assert!(completed, "seed {seed}: did not complete ({technique}, n={n}, p={p})");
@@ -139,6 +140,7 @@ fn prop_no_completion_without_rdlb_after_loss() {
             technique,
             params: TechniqueParams::default(),
             rdlb: false,
+            health: HealthPolicy::default(),
         });
         match master.on_request(victim, 0.0) {
             Reply::Assign(_lost) => {} // evaporates with the victim
@@ -165,6 +167,7 @@ fn prop_duplicate_results_never_double_count() {
             technique: Technique::Fac,
             params: TechniqueParams::default(),
             rdlb: true,
+            health: HealthPolicy::default(),
         });
         let mut assignments = Vec::new();
         let mut t = 0.0;
@@ -203,6 +206,7 @@ fn prop_holder_exclusion() {
             technique: Technique::Gss,
             params: TechniqueParams::default(),
             rdlb: true,
+            health: HealthPolicy::default(),
         });
         // Worker 1 grabs everything.
         let mut held: Vec<rdlb::coordinator::Assignment> = Vec::new();
@@ -238,6 +242,7 @@ fn prop_counts_partition_n() {
             technique: Technique::Tss,
             params: TechniqueParams::default(),
             rdlb: true,
+            health: HealthPolicy::default(),
         });
         let mut pending: Vec<(usize, rdlb::coordinator::Assignment)> = Vec::new();
         for step in 0..10 * n {

@@ -38,7 +38,7 @@ fn rand_task_set(rng: &mut Rng) -> TaskSet {
 }
 
 fn rand_frame(rng: &mut Rng) -> Frame {
-    match rng.next_u64() % 7 {
+    match rng.next_u64() % 9 {
         0 => Frame::Hello(WorkerHello {
             version: rng.next_u64() as u16,
             backend: rand_string(rng, 32),
@@ -47,10 +47,13 @@ fn rand_frame(rng: &mut Rng) -> Frame {
             worker: rng.next_u64() as u32,
             n: rng.next_u64() % (1 << 48),
             epoch: rng.next_u64() as u32,
+            ping: rng.next_f64() < 0.5,
             fault: FaultSpec {
                 fail_after: if rng.next_f64() < 0.5 { Some(rng.next_f64() * 100.0) } else { None },
                 slowdown: 1.0 + rng.next_f64() * 4.0,
                 latency: rng.next_f64(),
+                stall_after: if rng.next_f64() < 0.5 { Some(rng.next_f64() * 100.0) } else { None },
+                stall_secs: rng.next_f64() * 10.0,
             },
         }),
         2 => Frame::Request { worker: rng.next_u64() as u32 },
@@ -71,6 +74,8 @@ fn rand_frame(rng: &mut Rng) -> Frame {
                 digests: (0..len).map(|_| (rng.next_f64() - 0.5) * 1e6).collect(),
             })
         }
+        6 => Frame::Ping,
+        7 => Frame::Pong { worker: rng.next_u64() as u32, progress: rng.next_u64() },
         _ => Frame::Terminate,
     }
 }
