@@ -43,6 +43,10 @@ pub struct BenchScale {
     pub pe_factor: f64,
     /// Hang bound for the wall-clock runtimes, seconds.
     pub timeout_secs: u64,
+    /// Worker counts for the net fan-out cases (readiness-loop master at
+    /// hundreds-to-thousands of loopback workers, ~8 tasks per worker);
+    /// empty = skip them.
+    pub fanout_pes: &'static [usize],
 }
 
 impl BenchScale {
@@ -61,6 +65,7 @@ impl BenchScale {
             latency_delay: 0.2,
             pe_factor: 0.5,
             timeout_secs: 30,
+            fanout_pes: &[256, 1024],
         }
     }
 
@@ -79,6 +84,7 @@ impl BenchScale {
             latency_delay: 0.03,
             pe_factor: 0.5,
             timeout_secs: 10,
+            fanout_pes: &[],
         }
     }
 
@@ -97,6 +103,7 @@ impl BenchScale {
             latency_delay: 0.2,
             pe_factor: 0.5,
             timeout_secs: 60,
+            fanout_pes: &[256, 1024, 4096],
         }
     }
 
@@ -234,6 +241,28 @@ fn net_stall_case(settings: &BenchSettings) -> Result<CaseSpec> {
     Ok(CaseSpec { id: cfg.case_label(), cfg, time_scale: 1.0, reps: sc.reps })
 }
 
+/// A fan-out case: the single-threaded readiness-loop master against `p`
+/// loopback workers with ~8 tiny tasks each.  Per-task compute is nearly
+/// nothing, so the measurement is the master's event loop itself — accept,
+/// frame dispatch, coalesced writes — and the gated `events_per_s` is the
+/// master-side message throughput at that worker count.
+fn net_fanout_case(settings: &BenchSettings, p: usize) -> Result<CaseSpec> {
+    let sc = &settings.scale;
+    let mut cfg = ExperimentConfig::builder()
+        .app(AppKind::Uniform)
+        .pes(p)
+        .tasks(8 * p)
+        .technique(Technique::Fac)
+        .rdlb(true)
+        .scenario(Scenario::Baseline)
+        .mean_cost(sc.real_mean_cost)
+        .seed(settings.seed)
+        .runtime(RuntimeKind::Net)
+        .build()?;
+    cfg.net.timeout_secs = sc.timeout_secs;
+    Ok(CaseSpec { id: cfg.case_label(), cfg, time_scale: 1.0, reps: sc.reps })
+}
+
 /// Build the full case grid for `settings`.
 pub fn campaign_cases(settings: &BenchSettings) -> Result<Vec<CaseSpec>> {
     let sc = &settings.scale;
@@ -318,6 +347,9 @@ pub fn campaign_cases(settings: &BenchSettings) -> Result<Vec<CaseSpec>> {
                 }
                 if runtime == RuntimeKind::Net {
                     cases.push(net_stall_case(settings)?);
+                    for &fanout_p in sc.fanout_pes {
+                        cases.push(net_fanout_case(settings, fanout_p)?);
+                    }
                 }
             }
             RuntimeKind::Hier => {
@@ -384,6 +416,10 @@ pub fn run_case(spec: &CaseSpec) -> Result<CaseReport> {
     let total_tasks: u64 = outcomes.iter().map(|o| o.finished as u64).sum();
     let total_events: u64 = outcomes.iter().map(|o| o.events).sum();
     let is_sim = spec.cfg.runtime == RuntimeKind::Sim;
+    // Net cases report master-side message throughput (requests + results
+    // per wall second) as their gated events metric — the readiness-loop
+    // master's msgs/s at the case's fan-out.
+    let is_net = spec.cfg.runtime == RuntimeKind::Net;
     let first = &outcomes[0];
 
     Ok(CaseReport {
@@ -407,7 +443,7 @@ pub fn run_case(spec: &CaseSpec) -> Result<CaseReport> {
             mean_s: w.mean,
             min_s: w.min,
             tasks_per_s: total_tasks as f64 / total_wall,
-            events_per_s: is_sim.then_some(total_events as f64 / total_wall),
+            events_per_s: (is_sim || is_net).then_some(total_events as f64 / total_wall),
             hist_p50_s: Some(wall_hist.percentile(0.50)),
             hist_p99_s: Some(wall_hist.percentile(0.99)),
         },
@@ -492,12 +528,32 @@ mod tests {
     fn quick_grid_has_unique_ids_across_all_runtimes() {
         let cases = campaign_cases(&BenchSettings::new(BenchScale::quick(), 1)).unwrap();
         // 10 sim (6 grid + no-rdlb + 2 perturb + flagship) + 3 native
-        // + 4 net (3 grid + stall) + 2 hier.
-        assert_eq!(cases.len(), 19, "{:?}", cases.iter().map(|c| &c.id).collect::<Vec<_>>());
+        // + 6 net (3 grid + stall + 2 fan-out) + 2 hier.
+        assert_eq!(cases.len(), 21, "{:?}", cases.iter().map(|c| &c.id).collect::<Vec<_>>());
         assert!(cases.iter().any(|c| c.cfg.runtime == RuntimeKind::Net));
         assert!(cases.iter().any(|c| c.cfg.runtime == RuntimeKind::Hier));
         let stall = cases.iter().find(|c| c.id.contains("/stall/")).expect("stall case");
         assert!(stall.cfg.health.enabled, "stall case must arm the health layer");
+        // Fan-out cases: P from the scale preset, ~8 tasks per worker, and
+        // P-dominant (an order of magnitude past the grid's real_pes).
+        for p in [256usize, 1024] {
+            let id = format!("/p{p}/n{}/", 8 * p);
+            let case = cases
+                .iter()
+                .find(|c| c.cfg.runtime == RuntimeKind::Net && c.id.contains(&id))
+                .unwrap_or_else(|| panic!("missing fan-out case {id}"));
+            assert_eq!(case.cfg.pes(), p);
+        }
+    }
+
+    #[test]
+    fn smoke_scale_skips_fanout_cases() {
+        let settings = BenchSettings {
+            runtimes: vec![RuntimeKind::Net],
+            ..BenchSettings::new(BenchScale::smoke(), 1)
+        };
+        let cases = campaign_cases(&settings).unwrap();
+        assert_eq!(cases.len(), 4, "smoke net grid is 3 grid + stall, no fan-out");
     }
 
     #[test]

@@ -1,8 +1,24 @@
-//! The distributed master: drives the *identical*
-//! [`Engine`](crate::coordinator::Engine) the simulator and the in-process
-//! native runtime use, but over [`Transport`] connections — one reader
-//! thread per worker feeding a single event loop, all send halves owned by
-//! that loop.
+//! The distributed master: a **single-threaded readiness event loop**
+//! driving the *identical* [`Engine`](crate::coordinator::Engine) the
+//! simulator and the in-process native runtime use, but over [`Transport`]
+//! connections.  Every connection surrenders its raw kernel stream
+//! ([`Transport::into_stream`]), is switched nonblocking, and is registered
+//! in one `poll(2)` set alongside the TCP listener (accept is event-driven,
+//! never sleep-polled) and the SIGTERM self-pipe (shutdown is observed the
+//! instant it lands, not a poll slice later) — the master's thread count is
+//! O(1) in the worker count P, not one reader thread per connection.
+//!
+//! Per-connection scratch is reused across frames: each connection owns a
+//! read accumulation buffer (partial frames survive between readiness
+//! events) and queues encoded frames in pooled write buffers that recycle
+//! through a free list when flushed or when the connection closes.  All
+//! frames queued during one loop pass — e.g. a health tick's `Ping` plus
+//! the `Assign` a `Wake` produced for the same worker — leave in a single
+//! vectored write, so an engine pass costs one syscall per touched
+//! connection, not one per frame.  Refused or terminated connections are
+//! deregistered from the poll set as soon as their goodbye flushes, and
+//! their buffers return to the pool (no fd or buffer growth under churn;
+//! see [`open_conn_gauge`] / [`frame_buffer_allocs`]).
 //!
 //! Faithful to the paper, the master by default performs **no failure
 //! detection**: a closed connection is noted and ignored, an undeliverable
@@ -19,9 +35,12 @@
 //! phase, while an advancing counter ("slow but alive") refreshes the
 //! deadline anchor so healthy-but-loaded workers are never flagged.
 
+use std::collections::VecDeque;
+use std::io::{self, BufReader, IoSlice, Read, Write};
 use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -29,9 +48,14 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::coordinator::{Effect, Engine, EngineEvent, HealthPolicy, MasterConfig, SharedSink};
 use crate::dls::{Technique, TechniqueParams};
 use crate::sim::Outcome;
+use crate::util::signal;
 
-use super::protocol::{FaultSpec, Frame, Welcome, WireAssignment, PROTOCOL_VERSION};
-use super::transport::{FrameRx as _, FrameTx, TcpTransport, Transport};
+use super::poll::{poll_fds, PollFd, POLLIN, POLLOUT};
+use super::protocol::{
+    encode_frame_into, read_frame_into, FaultSpec, Frame, Welcome, WireAssignment,
+    MAX_FRAME_LEN, PROTOCOL_VERSION,
+};
+use super::transport::{ByteStream, Pollable, TcpTransport, Transport};
 
 /// Parameters of one distributed run.
 #[derive(Debug, Clone)]
@@ -96,12 +120,362 @@ impl NetMasterParams {
     }
 }
 
-/// What a reader thread observed on one connection.
-enum Event {
-    Frame(usize, Frame),
-    /// Connection closed or stream corrupted. The master notes it for logs
-    /// and — faithful to the paper — does nothing else.
-    Closed(usize),
+// ------------------------------------------------------------- I/O gauges
+
+/// Connections currently registered in some master's poll set.  A gauge,
+/// not a counter: churn tests assert it returns to baseline when refused
+/// or dead peers are deregistered.
+static OPEN_CONNS: AtomicUsize = AtomicUsize::new(0);
+/// Frame buffers ever allocated by the write-queue pool (a pool *miss*);
+/// bounded allocation under churn means closed connections really do
+/// recycle their buffers.
+static FRAME_BUF_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Test hook: connections currently held open by running masters.
+#[doc(hidden)]
+pub fn open_conn_gauge() -> usize {
+    OPEN_CONNS.load(Ordering::SeqCst)
+}
+
+/// Test hook: cumulative pool-miss buffer allocations across all masters.
+#[doc(hidden)]
+pub fn frame_buffer_allocs() -> u64 {
+    FRAME_BUF_ALLOCS.load(Ordering::SeqCst)
+}
+
+// ------------------------------------------------------- connection state
+
+/// Free list of write/read scratch buffers, recycled across frames and
+/// across connections so a churning peer population doesn't translate into
+/// allocator churn.
+struct BufPool {
+    free: Vec<Vec<u8>>,
+    cap: usize,
+}
+
+impl BufPool {
+    fn new(cap: usize) -> BufPool {
+        BufPool { free: Vec::new(), cap }
+    }
+
+    fn take(&mut self) -> Vec<u8> {
+        self.free.pop().unwrap_or_else(|| {
+            FRAME_BUF_ALLOCS.fetch_add(1, Ordering::SeqCst);
+            Vec::with_capacity(256)
+        })
+    }
+
+    fn put(&mut self, mut buf: Vec<u8>) {
+        if self.free.len() < self.cap {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+}
+
+/// One registered connection: the nonblocking stream plus its reused read
+/// accumulator and queued (encoded) outbound frames.
+struct Conn {
+    stream: Box<dyn ByteStream>,
+    fd: i32,
+    /// Inbound byte accumulator; a partial frame survives between
+    /// readiness events.  `rstart` is the parse cursor — consumed bytes are
+    /// compacted away after each read burst, so the buffer's high-water
+    /// mark is one frame plus one read's worth of pipelining.
+    rbuf: Vec<u8>,
+    rstart: usize,
+    /// Encoded frames awaiting the socket, oldest first; `out_off` is how
+    /// much of the front buffer a short write already consumed.
+    outq: VecDeque<Vec<u8>>,
+    out_off: usize,
+    /// Send half failed: queued and future frames evaporate (a fail-stop
+    /// in progress — the paper's master does not react), but the read half
+    /// stays registered until EOF so the disconnect is still observed.
+    tx_dead: bool,
+    /// Goodbye in flight: after `outq` drains the connection is closed by
+    /// *us* (version refusal / targeted terminate) — deregistered from the
+    /// poll set, buffers reclaimed, and **no** disconnect event synthesized.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: Box<dyn ByteStream>, rbuf: Vec<u8>) -> Conn {
+        OPEN_CONNS.fetch_add(1, Ordering::SeqCst);
+        let fd = stream.raw_fd();
+        Conn {
+            stream,
+            fd,
+            rbuf,
+            rstart: 0,
+            outq: VecDeque::new(),
+            out_off: 0,
+            tx_dead: false,
+            closing: false,
+        }
+    }
+}
+
+impl Drop for Conn {
+    fn drop(&mut self) {
+        OPEN_CONNS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// All per-session I/O state, separate from the engine so the
+/// `on_result_with` piggy-back closure can borrow both at once.
+struct NetIo {
+    conns: Vec<Option<Conn>>,
+    /// Slot ever held a connection (listener mode assigns arrival order to
+    /// the first never-used slot; a dead slot is not refilled mid-session).
+    assigned: Vec<bool>,
+    registered: Vec<bool>,
+    refused_slot: Vec<bool>,
+    /// Highest cumulative in-chunk progress counter seen per worker; a
+    /// Pong that advances it proves the worker is computing (slow, not
+    /// gone) and refreshes its deadline anchors.
+    last_progress: Vec<u64>,
+    pool: BufPool,
+    /// Frame-encoding scratch (`encode_frame_into` target), copied into a
+    /// pooled buffer per queued frame.
+    fscratch: Vec<u8>,
+    /// Connections ever installed (arrival count in listener mode).
+    accepted: usize,
+    /// Connections currently open.
+    live: usize,
+    /// The run completed: stop dispatching, exit after the final flush.
+    done: bool,
+}
+
+impl NetIo {
+    fn new(p: usize) -> NetIo {
+        NetIo {
+            conns: (0..p).map(|_| None).collect(),
+            assigned: vec![false; p],
+            registered: vec![false; p],
+            refused_slot: vec![false; p],
+            last_progress: vec![0u64; p],
+            // Steady state needs ~one write buffer per connection (flushed
+            // within the pass that queued it) plus read accumulators.
+            pool: BufPool::new(2 * p + 8),
+            fscratch: Vec::with_capacity(256),
+            accepted: 0,
+            live: 0,
+            done: false,
+        }
+    }
+
+    /// Register a transport's byte stream in slot `w` (nonblocking).
+    /// Opaque transports (chaos fault wrappers) are bridged through a local
+    /// socketpair pump — a compatibility path; the chaos harness installs
+    /// wrappers on worker ends only, so masters normally never take it.
+    fn install(&mut self, w: usize, transport: Box<dyn Transport>) -> Result<()> {
+        let stream: Box<dyn ByteStream> = match transport.into_stream() {
+            Pollable::Stream(s) => s,
+            Pollable::Opaque(t) => Box::new(bridge_opaque(t)?),
+        };
+        stream.set_nonblocking(true).context("nonblocking worker stream")?;
+        let rbuf = self.pool.take();
+        self.conns[w] = Some(Conn::new(stream, rbuf));
+        self.assigned[w] = true;
+        self.accepted += 1;
+        self.live += 1;
+        Ok(())
+    }
+
+    /// Encode `frame` and queue it on `w`'s connection; frames queued in
+    /// the same loop pass leave in one vectored write.  No-op for absent,
+    /// dead, or closing connections — exactly the old `send_or_drop`.
+    fn queue(&mut self, w: usize, frame: &Frame) {
+        if self.conns[w].as_ref().map_or(true, |c| c.tx_dead || c.closing) {
+            return;
+        }
+        if encode_frame_into(frame, &mut self.fscratch).is_err() {
+            return;
+        }
+        let mut buf = self.pool.take();
+        buf.extend_from_slice(&self.fscratch);
+        self.conns[w].as_mut().expect("checked above").outq.push_back(buf);
+    }
+
+    /// Goodbye sent: close the connection as soon as its queue drains.
+    fn mark_closing(&mut self, w: usize) {
+        if let Some(c) = self.conns[w].as_mut() {
+            c.closing = true;
+        }
+    }
+
+    /// Deregister slot `w`: the fd closes (stream drop) and every buffer
+    /// returns to the pool.
+    fn close_conn(&mut self, w: usize) {
+        if let Some(mut c) = self.conns[w].take() {
+            self.live -= 1;
+            self.pool.put(std::mem::take(&mut c.rbuf));
+            while let Some(b) = c.outq.pop_front() {
+                self.pool.put(b);
+            }
+        }
+    }
+
+    /// Drain the nonblocking stream into `w`'s read accumulator.  Returns
+    /// `true` when the connection is finished (EOF or error).
+    fn fill_rbuf(&mut self, w: usize, scratch: &mut [u8]) -> bool {
+        let Some(conn) = self.conns[w].as_mut() else { return true };
+        loop {
+            match conn.stream.read(scratch) {
+                Ok(0) => return true,
+                Ok(n) => conn.rbuf.extend_from_slice(&scratch[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// Write as much of `w`'s queue as the socket accepts, gathering up to
+    /// [`MAX_IOV`] queued frames per syscall.  A closing connection whose
+    /// queue drained (or died) is closed here.
+    fn flush(&mut self, w: usize) {
+        const MAX_IOV: usize = 16;
+        let mut finished_closing = false;
+        if let Some(conn) = self.conns[w].as_mut() {
+            while !conn.tx_dead && !conn.outq.is_empty() {
+                let mut iov: [IoSlice; MAX_IOV] = [IoSlice::new(&[]); MAX_IOV];
+                let mut cnt = 0;
+                for (i, b) in conn.outq.iter().enumerate().take(MAX_IOV) {
+                    iov[cnt] = IoSlice::new(if i == 0 { &b[conn.out_off..] } else { &b[..] });
+                    cnt += 1;
+                }
+                let res = if cnt == 1 {
+                    conn.stream.write(&iov[0])
+                } else {
+                    conn.stream.write_vectored(&iov[..cnt])
+                };
+                match res {
+                    Ok(0) => conn.tx_dead = true,
+                    Ok(mut n) => {
+                        while n > 0 {
+                            let front_left = conn.outq.front().expect("bytes imply a buffer").len()
+                                - conn.out_off;
+                            if n >= front_left {
+                                n -= front_left;
+                                let b = conn.outq.pop_front().expect("nonempty");
+                                self.pool.put(b);
+                                conn.out_off = 0;
+                            } else {
+                                conn.out_off += n;
+                                n = 0;
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => conn.tx_dead = true,
+                }
+            }
+            if conn.tx_dead {
+                // Undeliverable frames evaporate (fail-stop in progress).
+                while let Some(b) = conn.outq.pop_front() {
+                    self.pool.put(b);
+                }
+                conn.out_off = 0;
+            }
+            finished_closing = conn.closing && conn.outq.is_empty();
+        }
+        if finished_closing {
+            self.close_conn(w);
+        }
+    }
+
+    /// Flush every connection with pending output (or a pending goodbye) —
+    /// the once-per-pass coalescing point.
+    fn flush_all(&mut self) {
+        for w in 0..self.conns.len() {
+            let needs = self.conns[w]
+                .as_ref()
+                .map_or(false, |c| !c.outq.is_empty() || c.closing || c.tx_dead);
+            if needs {
+                self.flush(w);
+            }
+        }
+    }
+}
+
+/// Try to cut one complete frame out of `rbuf[*rstart..]`, advancing the
+/// cursor past it.  `Ok(None)` = need more bytes; `Err` = corrupt stream.
+fn try_parse_frame(rbuf: &[u8], rstart: &mut usize) -> Result<Option<Frame>> {
+    let avail = rbuf.len() - *rstart;
+    if avail < 4 {
+        return Ok(None);
+    }
+    let len =
+        u32::from_le_bytes(rbuf[*rstart..*rstart + 4].try_into().expect("4 bytes")) as usize;
+    ensure!(len > 0 && len <= MAX_FRAME_LEN, "implausible frame length {len}");
+    if avail < 4 + len {
+        return Ok(None);
+    }
+    let frame = Frame::decode(&rbuf[*rstart + 4..*rstart + 4 + len])?;
+    *rstart += 4 + len;
+    Ok(Some(frame))
+}
+
+/// Bridge a transport whose fault semantics live above the byte layer
+/// (no single pollable fd) into a plain socketpair the poll set can watch:
+/// two pump threads shuttle frames between the transport's blocking halves
+/// and the returned stream.  Only the chaos compatibility path pays this.
+fn bridge_opaque(transport: Box<dyn Transport>) -> Result<UnixStream> {
+    let (master_side, pump_side) = UnixStream::pair().context("bridge socketpair")?;
+    let (mut tx, mut rx) = transport.split()?;
+    let mut pump_wr = pump_side.try_clone().context("clone bridge pump")?;
+    std::thread::spawn(move || {
+        let mut scratch = Vec::with_capacity(256);
+        loop {
+            match rx.recv() {
+                Ok(frame) => {
+                    if encode_frame_into(&frame, &mut scratch).is_err()
+                        || pump_wr.write_all(&scratch).is_err()
+                    {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        let _ = pump_wr.shutdown(std::net::Shutdown::Write);
+    });
+    std::thread::spawn(move || {
+        let mut r = BufReader::new(pump_side);
+        let mut scratch = Vec::with_capacity(256);
+        while let Ok(frame) = read_frame_into(&mut r, &mut scratch) {
+            if tx.send(&frame).is_err() {
+                break;
+            }
+        }
+    });
+    Ok(master_side)
+}
+
+/// What one poll-set entry stands for.
+#[derive(Clone, Copy)]
+enum Tag {
+    /// SIGTERM self-pipe read end (see [`signal::shutdown_waker_fd`]).
+    Waker,
+    /// The TCP listener: readable = a worker is connecting.
+    Listener,
+    /// Worker slot `w`'s connection.
+    Conn(usize),
+}
+
+/// Listener-mode configuration for [`NetMaster::run_session_inner`]: the
+/// listener joins the poll set while slots remain, so accept is
+/// event-driven and late joiners register mid-session without a spin loop.
+struct AcceptCfg {
+    listener: TcpListener,
+    /// Registration window: workers must all arrive by here…
+    deadline: Instant,
+    /// …unless partial sessions are allowed (resume: a fail-stopped worker
+    /// never reconnects), in which case the deadline only requires *one*
+    /// arrival and the listener keeps accepting stragglers afterwards.
+    allow_partial: bool,
 }
 
 /// The distributed master runtime.
@@ -116,16 +490,12 @@ impl NetMaster {
         Ok(NetMaster { params })
     }
 
-    /// Drive a full run over pre-established connections (one per worker;
-    /// registration handshake included). Returns the same [`Outcome`] the
-    /// simulator and native runtime produce.
-    pub fn run(&self, transports: Vec<Box<dyn Transport>>) -> Result<Outcome> {
+    /// A fresh engine for this master's parameters.
+    fn fresh_engine(&self) -> Engine {
         let prm = &self.params;
-        let p = prm.faults.len();
-        ensure!(transports.len() == p, "expected {p} connections, got {}", transports.len());
         let mut engine = Engine::new(MasterConfig {
             n: prm.n,
-            p,
+            p: prm.faults.len(),
             technique: prm.technique,
             params: prm.tech_params.clone(),
             rdlb: prm.rdlb,
@@ -134,6 +504,16 @@ impl NetMaster {
         if prm.test_drop_one_redispatch {
             engine.arm_test_drop_one_redispatch();
         }
+        engine
+    }
+
+    /// Drive a full run over pre-established connections (one per worker;
+    /// registration handshake included). Returns the same [`Outcome`] the
+    /// simulator and native runtime produce.
+    pub fn run(&self, transports: Vec<Box<dyn Transport>>) -> Result<Outcome> {
+        let p = self.params.faults.len();
+        ensure!(transports.len() == p, "expected {p} connections, got {}", transports.len());
+        let engine = self.fresh_engine();
         let (outcome, _engine) =
             self.run_session(engine, transports.into_iter().map(Some).collect(), None)?;
         Ok(outcome)
@@ -148,9 +528,11 @@ impl NetMaster {
     ///
     /// `transports` has one slot per worker; `None` marks a worker that did
     /// not (re)connect — a fail-stopped peer on resume.  `shutdown`, when
-    /// provided, is polled between frames: once set, the loop exits
-    /// *without* broadcasting `Terminate`, so workers survive to reconnect
-    /// into the next session (the graceful SIGTERM path of `rdlb serve`).
+    /// provided, is polled between frames *and* observed via the signal
+    /// self-pipe in the poll set, so a SIGTERM interrupts a blocked master
+    /// immediately; once set, the loop exits *without* broadcasting
+    /// `Terminate`, so workers survive to reconnect into the next session
+    /// (the graceful SIGTERM path of `rdlb serve`).
     ///
     /// The engine's epoch is stamped into every `Welcome`; `Result` frames
     /// carrying an older epoch are pre-crash work for assignment ids that
@@ -158,9 +540,19 @@ impl NetMaster {
     /// piggy-backed request is still served — the worker is live).
     pub fn run_session(
         &self,
+        engine: Engine,
+        transports: Vec<Option<Box<dyn Transport>>>,
+        shutdown: Option<&AtomicBool>,
+    ) -> Result<(Outcome, Engine)> {
+        self.run_session_inner(engine, transports, shutdown, None)
+    }
+
+    fn run_session_inner(
+        &self,
         mut engine: Engine,
         transports: Vec<Option<Box<dyn Transport>>>,
         shutdown: Option<&AtomicBool>,
+        accept: Option<AcceptCfg>,
     ) -> Result<(Outcome, Engine)> {
         let prm = &self.params;
         let p = prm.faults.len();
@@ -171,90 +563,156 @@ impl NetMaster {
         }
         let epoch = engine.epoch();
 
-        // One reader thread per live connection; all send halves stay here.
-        let (event_tx, event_rx) = mpsc::channel::<Event>();
-        let mut txs: Vec<Option<Box<dyn FrameTx>>> = Vec::with_capacity(p);
+        let mut io = NetIo::new(p);
         for (w, transport) in transports.into_iter().enumerate() {
-            let Some(transport) = transport else {
-                txs.push(None);
-                continue;
-            };
-            let (tx, mut rx) = transport.split()?;
-            txs.push(Some(tx));
-            let events = event_tx.clone();
-            std::thread::spawn(move || loop {
-                match rx.recv() {
-                    Ok(frame) => {
-                        if events.send(Event::Frame(w, frame)).is_err() {
-                            return; // master gone
-                        }
-                    }
-                    Err(_) => {
-                        let _ = events.send(Event::Closed(w));
-                        return;
-                    }
-                }
-            });
+            if let Some(t) = transport {
+                io.install(w, t)?;
+            }
         }
-        drop(event_tx);
+        if let Some(acc) = &accept {
+            acc.listener.set_nonblocking(true).context("nonblocking listener")?;
+        }
 
         let start = Instant::now();
         let hard_deadline = start + prm.timeout;
-        // With a shutdown flag armed, block at most this long per recv so
-        // the flag is noticed promptly even on an idle connection set.
-        let poll_slice = Duration::from_millis(200);
         // Health timer: each tick pings every registered worker and asks
         // the engine to judge in-flight chunks against their deadlines.
         let tick = Duration::from_secs_f64(prm.health.tick_secs.max(0.01));
         let mut next_tick = if prm.health.enabled { Some(start + tick) } else { None };
-        // Highest cumulative in-chunk progress counter seen per worker; a
-        // Pong that advances it proves the worker is computing (slow, not
-        // gone) and refreshes its deadline anchors.
-        let mut last_progress = vec![0u64; p];
-        let mut registered = vec![false; p];
-        let mut refused_slot = vec![false; p];
         let mut reply: Vec<Effect> = Vec::with_capacity(1);
         let mut graceful = false;
+        let mut enforce_accept = accept.is_some();
+        let mut rscratch = vec![0u8; 64 * 1024];
+        let mut pfds: Vec<PollFd> = Vec::with_capacity(p + 2);
+        let mut tags: Vec<Tag> = Vec::with_capacity(p + 2);
 
         loop {
             if shutdown.is_some_and(|s| s.load(Ordering::Relaxed)) {
                 graceful = true;
                 break;
             }
-            let left = hard_deadline.saturating_duration_since(Instant::now());
+            let now_i = Instant::now();
+            let left = hard_deadline.saturating_duration_since(now_i);
             if left.is_zero() {
                 engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
                 break;
             }
-            let mut wait = if shutdown.is_some() { left.min(poll_slice) } else { left };
-            if let Some(t) = next_tick {
-                wait = wait.min(t.saturating_duration_since(Instant::now()));
-            }
-            let event = match event_rx.recv_timeout(wait) {
-                Ok(e) => Some(e),
-                // A poll slice, the health tick, or the hang bound elapsed:
-                // fall through — the tick check below runs either way, and
-                // `left.is_zero()` converts an expired bound into Timeout.
-                Err(mpsc::RecvTimeoutError::Timeout) => None,
-                // Every reader thread is gone: the run cannot progress.
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    let now = start.elapsed().as_secs_f64();
-                    engine.handle(now, EngineEvent::Timeout, &mut reply);
-                    break;
+            if let Some(acc) = &accept {
+                if enforce_accept && io.accepted < p && now_i >= acc.deadline {
+                    if acc.allow_partial && io.accepted >= 1 {
+                        // Proceed short-handed; keep the listener armed for
+                        // stragglers (their slots still exist).
+                        enforce_accept = false;
+                    } else {
+                        bail!(
+                            "timed out waiting for workers to connect ({}/{p} arrived)",
+                            io.accepted
+                        );
+                    }
                 }
-            };
-            // Checked on every pass (not only on recv timeout) so a busy
+            }
+            let listener_armed = accept.is_some() && io.accepted < p;
+            if io.live == 0 && !listener_armed {
+                // Every connection is gone and none can arrive: the run
+                // cannot progress (the old all-readers-exited case).
+                engine.handle(start.elapsed().as_secs_f64(), EngineEvent::Timeout, &mut reply);
+                break;
+            }
+
+            // Exact wait: the nearest of the hang bound, the health tick,
+            // and the accept deadline — no 200 ms quantization slice.  The
+            // signal self-pipe makes shutdown wake the poll directly; only
+            // when it's unavailable (non-Linux) does a bounded fallback
+            // slice keep a foreign shutdown flag observable.
+            let mut wait = left;
+            if let Some(t) = next_tick {
+                wait = wait.min(t.saturating_duration_since(now_i));
+            }
+            if let Some(acc) = &accept {
+                if enforce_accept && io.accepted < p {
+                    wait = wait.min(acc.deadline.saturating_duration_since(now_i));
+                }
+            }
+            let waker = if shutdown.is_some() { signal::shutdown_waker_fd() } else { None };
+            if shutdown.is_some() && waker.is_none() {
+                wait = wait.min(Duration::from_millis(100));
+            }
+
+            pfds.clear();
+            tags.clear();
+            if let Some(fd) = waker {
+                pfds.push(PollFd::new(fd, POLLIN));
+                tags.push(Tag::Waker);
+            }
+            if listener_armed {
+                let acc = accept.as_ref().expect("listener_armed implies accept");
+                pfds.push(PollFd::new(acc.listener.as_raw_fd(), POLLIN));
+                tags.push(Tag::Listener);
+            }
+            for (w, slot) in io.conns.iter().enumerate() {
+                let Some(c) = slot else { continue };
+                let mut ev: i16 = 0;
+                if !c.closing {
+                    ev |= POLLIN;
+                }
+                if !c.tx_dead && !c.outq.is_empty() {
+                    ev |= POLLOUT;
+                }
+                if ev != 0 {
+                    pfds.push(PollFd::new(c.fd, ev));
+                    tags.push(Tag::Conn(w));
+                }
+            }
+
+            let nready = poll_fds(&mut pfds, Some(wait)).context("master poll")?;
+            let now = start.elapsed().as_secs_f64();
+            if nready > 0 {
+                for i in 0..pfds.len() {
+                    if io.done {
+                        break;
+                    }
+                    if pfds[i].revents == 0 {
+                        continue;
+                    }
+                    match tags[i] {
+                        Tag::Waker => signal::drain_shutdown_waker(),
+                        Tag::Listener => {
+                            if pfds[i].readable() {
+                                let acc = accept.as_ref().expect("listener tag implies accept");
+                                accept_ready(&acc.listener, &mut io, p)?;
+                            }
+                        }
+                        Tag::Conn(w) => {
+                            if pfds[i].readable() {
+                                drain_readable(
+                                    &mut engine,
+                                    &mut io,
+                                    w,
+                                    now,
+                                    &mut reply,
+                                    &mut rscratch,
+                                    prm,
+                                    epoch,
+                                );
+                            }
+                            // Writability is handled by the pass-end flush.
+                        }
+                    }
+                }
+            }
+
+            // Checked on every pass (not only on poll timeout) so a busy
             // connection set cannot starve the health timer.
             if let Some(t) = next_tick {
-                if Instant::now() >= t {
-                    let now = start.elapsed().as_secs_f64();
+                if !io.done && Instant::now() >= t {
+                    let tnow = start.elapsed().as_secs_f64();
                     for w in 0..p {
-                        if registered[w] {
-                            send_or_drop(&mut txs, w, &Frame::Ping);
+                        if io.registered[w] {
+                            io.queue(w, &Frame::Ping);
                         }
                     }
                     reply.clear();
-                    engine.handle(now, EngineEvent::HealthTick, &mut reply);
+                    engine.handle(tnow, EngineEvent::HealthTick, &mut reply);
                     let woken: Vec<usize> = reply
                         .iter()
                         .filter_map(|e| match e {
@@ -263,124 +721,48 @@ impl NetMaster {
                         })
                         .collect();
                     for w in woken {
-                        serve_request(&mut engine, w, now, &mut reply, &mut txs);
+                        serve_request(&mut engine, &mut io, w, tnow, &mut reply);
                     }
                     next_tick = Some(Instant::now() + tick);
                 }
             }
-            let Some(event) = event else { continue };
-            let now = start.elapsed().as_secs_f64();
-            match event {
-                Event::Closed(w) => {
-                    // No detection: the engine records the disconnect and —
-                    // faithful to the paper — emits nothing; rDLB recovers
-                    // the work, or the run hangs.
-                    engine.handle(now, EngineEvent::WorkerDisconnected { worker: w }, &mut reply);
-                }
-                Event::Frame(w, Frame::Hello(hello)) => {
-                    if registered[w] || refused_slot[w] {
-                        // Duplicate Hello on a settled slot: protocol
-                        // violation — ignore it rather than deregistering
-                        // a live worker or double-counting a refusal.
-                        continue;
-                    }
-                    if hello.version != PROTOCOL_VERSION {
-                        // Incompatible peer: the engine counts the refusal
-                        // (so the Outcome's stats distinguish it from a
-                        // fail-stop at t=0) and orders the Terminate;
-                        // dropping our send half alone would not close the
-                        // socket — the reader thread's clone keeps it open.
-                        eprintln!(
-                            "net: refusing worker {w}: protocol version {} != {} \
-                             (slot stays unregistered)",
-                            hello.version, PROTOCOL_VERSION
-                        );
-                        refused_slot[w] = true;
-                        reply.clear();
-                        engine.handle(now, EngineEvent::VersionRefused { worker: w }, &mut reply);
-                        if let Some(Effect::TerminateWorker { worker }) = reply.pop() {
-                            send_or_drop(&mut txs, worker, &Frame::Terminate);
-                            txs[worker] = None;
-                        }
-                        continue;
-                    }
-                    registered[w] = true;
-                    let welcome = Frame::Welcome(Welcome {
-                        worker: w as u32,
-                        n: prm.n as u64,
-                        epoch,
-                        ping: prm.health.enabled,
-                        fault: prm.faults[w].clone(),
-                    });
-                    send_or_drop(&mut txs, w, &welcome);
-                    // A recovered engine can already be complete (the crash
-                    // landed between the final journaled result and exit):
-                    // stop as soon as the first worker checks in, and the
-                    // exit broadcast terminates everyone.
-                    if engine.is_complete() {
-                        break;
-                    }
-                }
-                Event::Frame(w, Frame::Request { worker }) => {
-                    if !registered[w] || worker as usize != w {
-                        continue; // protocol violation: ignore
-                    }
-                    serve_request(&mut engine, w, now, &mut reply, &mut txs);
-                }
-                Event::Frame(w, Frame::Result(r)) => {
-                    if !registered[w] || r.worker as usize != w {
-                        continue;
-                    }
-                    if r.epoch != epoch {
-                        // Pre-crash work: its assignment id belongs to a
-                        // dead session.  Drop the result, keep the worker.
-                        eprintln!(
-                            "net: dropping stale result from worker {w} \
-                             (epoch {} < session epoch {epoch})",
-                            r.epoch
-                        );
-                        serve_request(&mut engine, w, now, &mut reply, &mut txs);
-                        continue;
-                    }
-                    let completed = engine
-                        .on_result_with(now, w, r.assignment, r.compute_secs, &r.digests, |e, pw| {
-                            serve_request(e, pw, now, &mut reply, &mut txs)
-                        });
-                    if completed {
-                        break;
-                    }
-                    // Result piggy-backs the next request (MPI semantics).
-                    serve_request(&mut engine, w, now, &mut reply, &mut txs);
-                }
-                Event::Frame(w, Frame::Pong { worker, progress }) => {
-                    if !registered[w] || worker as usize != w {
-                        continue;
-                    }
-                    // Only an *advancing* counter is evidence of life: a
-                    // stalled worker answers Pings too (connection open),
-                    // but its counter freezes and its deadline stands.
-                    if progress > last_progress[w] {
-                        last_progress[w] = progress;
-                        reply.clear();
-                        engine.handle(now, EngineEvent::Progress { worker: w }, &mut reply);
-                    }
-                }
-                Event::Frame(_, _) => {
-                    // Master-bound connections must not carry master frames.
-                }
+
+            // The coalescing point: every frame queued during this pass —
+            // assigns, wakes, pings, welcomes — leaves in one vectored
+            // write per connection.
+            io.flush_all();
+            if io.done {
+                break;
             }
         }
 
-        if !graceful {
-            // MPI_Abort: stop every surviving worker immediately.
-            for tx in txs.iter_mut().flatten() {
-                let _ = tx.send(&Frame::Terminate);
+        // Final flush, blocking: deliver queued frames, then MPI_Abort
+        // semantics unless graceful — on graceful shutdown no Terminate is
+        // sent; workers must outlive this master to reconnect into the
+        // resumed session.
+        let mut term = Vec::with_capacity(16);
+        encode_frame_into(&Frame::Terminate, &mut term)?;
+        for w in 0..p {
+            let Some(mut conn) = io.conns[w].take() else { continue };
+            io.live -= 1;
+            if conn.tx_dead {
+                continue;
+            }
+            let _ = conn.stream.set_nonblocking(false);
+            let mut delivered = true;
+            let mut first = true;
+            while let Some(b) = conn.outq.pop_front() {
+                let s: &[u8] = if first { &b[conn.out_off..] } else { &b[..] };
+                first = false;
+                if conn.stream.write_all(s).is_err() {
+                    delivered = false;
+                    break;
+                }
+            }
+            if delivered && !graceful && !conn.closing {
+                let _ = conn.stream.write_all(&term);
             }
         }
-        // On graceful shutdown the send halves are dropped without a
-        // Terminate: workers must outlive this master to reconnect into
-        // the resumed session.
-        drop(txs);
 
         let elapsed = start.elapsed().as_secs_f64();
         let hung = engine.hung();
@@ -401,17 +783,202 @@ impl NetMaster {
     }
 }
 
-/// Feed one `WorkerRequest` into the engine and execute the single effect
-/// it returns: send the chunk, send `Wait` for a park, or terminate the
-/// peer.  A failed send is a fail-stop in progress — the chunk evaporates
-/// and the master, faithfully, does not react.
-fn serve_request(
+/// Accept every connection the listener has pending, assigning arrival
+/// order to the first never-used slot — event-driven, no sleep loop.
+fn accept_ready(listener: &TcpListener, io: &mut NetIo, p: usize) -> Result<()> {
+    while io.accepted < p {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let slot = (0..p)
+                    .find(|&w| !io.assigned[w])
+                    .expect("accepted < p implies a free slot");
+                io.install(slot, Box::new(TcpTransport::new(stream)))?;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("accept worker connection"),
+        }
+    }
+    Ok(())
+}
+
+/// A connection polled readable: drain its stream, dispatch every complete
+/// frame, compact the accumulator, and turn EOF/corruption into the
+/// engine's disconnect event (unless *we* were closing it).
+#[allow(clippy::too_many_arguments)]
+fn drain_readable(
     engine: &mut Engine,
-    worker: usize,
+    io: &mut NetIo,
+    w: usize,
     now: f64,
     reply: &mut Vec<Effect>,
-    txs: &mut [Option<Box<dyn FrameTx>>],
+    rscratch: &mut [u8],
+    prm: &NetMasterParams,
+    epoch: u32,
 ) {
+    let eof = io.fill_rbuf(w, rscratch);
+    let mut broken = false;
+    loop {
+        if io.done {
+            break;
+        }
+        let parsed = {
+            let Some(conn) = io.conns[w].as_mut() else { break };
+            if conn.closing {
+                // Goodbye in flight: anything the peer still says is moot.
+                conn.rbuf.clear();
+                conn.rstart = 0;
+                break;
+            }
+            try_parse_frame(&conn.rbuf, &mut conn.rstart)
+        };
+        match parsed {
+            Ok(Some(frame)) => on_frame(engine, io, prm, epoch, w, frame, now, reply),
+            Ok(None) => break,
+            Err(_) => {
+                broken = true;
+                break;
+            }
+        }
+    }
+    if let Some(conn) = io.conns[w].as_mut() {
+        if conn.rstart > 0 {
+            let len = conn.rbuf.len();
+            if conn.rstart >= len {
+                conn.rbuf.clear();
+            } else {
+                conn.rbuf.copy_within(conn.rstart..len, 0);
+                conn.rbuf.truncate(len - conn.rstart);
+            }
+            conn.rstart = 0;
+        }
+    }
+    if (eof || broken) && !io.done && io.conns[w].is_some() {
+        let was_closing = io.conns[w].as_ref().map_or(true, |c| c.closing);
+        io.close_conn(w);
+        if !was_closing {
+            // No detection: the engine records the disconnect and —
+            // faithful to the paper — emits nothing; rDLB recovers the
+            // work, or the run hangs.
+            engine.handle(now, EngineEvent::WorkerDisconnected { worker: w }, reply);
+        }
+    }
+}
+
+/// Dispatch one decoded frame from slot `w` — the same per-frame semantics
+/// the reader-thread master had, minus the threads.
+#[allow(clippy::too_many_arguments)]
+fn on_frame(
+    engine: &mut Engine,
+    io: &mut NetIo,
+    prm: &NetMasterParams,
+    epoch: u32,
+    w: usize,
+    frame: Frame,
+    now: f64,
+    reply: &mut Vec<Effect>,
+) {
+    match frame {
+        Frame::Hello(hello) => {
+            if io.registered[w] || io.refused_slot[w] {
+                // Duplicate Hello on a settled slot: protocol violation —
+                // ignore it rather than deregistering a live worker or
+                // double-counting a refusal.
+                return;
+            }
+            if hello.version != PROTOCOL_VERSION {
+                // Incompatible peer: the engine counts the refusal (so the
+                // Outcome's stats distinguish it from a fail-stop at t=0)
+                // and orders the Terminate; once it flushes, the fd leaves
+                // the poll set and its buffers return to the pool.
+                eprintln!(
+                    "net: refusing worker {w}: protocol version {} != {} \
+                     (slot stays unregistered)",
+                    hello.version, PROTOCOL_VERSION
+                );
+                io.refused_slot[w] = true;
+                reply.clear();
+                engine.handle(now, EngineEvent::VersionRefused { worker: w }, reply);
+                if let Some(Effect::TerminateWorker { worker }) = reply.pop() {
+                    io.queue(worker, &Frame::Terminate);
+                    io.mark_closing(worker);
+                }
+                return;
+            }
+            io.registered[w] = true;
+            let welcome = Frame::Welcome(Welcome {
+                worker: w as u32,
+                n: prm.n as u64,
+                epoch,
+                ping: prm.health.enabled,
+                fault: prm.faults[w].clone(),
+            });
+            io.queue(w, &welcome);
+            // A recovered engine can already be complete (the crash landed
+            // between the final journaled result and exit): stop as soon
+            // as the first worker checks in, and the exit broadcast
+            // terminates everyone.
+            if engine.is_complete() {
+                io.done = true;
+            }
+        }
+        Frame::Request { worker } => {
+            if !io.registered[w] || worker as usize != w {
+                return; // protocol violation: ignore
+            }
+            serve_request(engine, io, w, now, reply);
+        }
+        Frame::Result(r) => {
+            if !io.registered[w] || r.worker as usize != w {
+                return;
+            }
+            if r.epoch != epoch {
+                // Pre-crash work: its assignment id belongs to a dead
+                // session.  Drop the result, keep the worker.
+                eprintln!(
+                    "net: dropping stale result from worker {w} \
+                     (epoch {} < session epoch {epoch})",
+                    r.epoch
+                );
+                serve_request(engine, io, w, now, reply);
+                return;
+            }
+            let completed = engine
+                .on_result_with(now, w, r.assignment, r.compute_secs, &r.digests, |e, pw| {
+                    serve_request(e, io, pw, now, reply)
+                });
+            if completed {
+                io.done = true;
+                return;
+            }
+            // Result piggy-backs the next request (MPI semantics).
+            serve_request(engine, io, w, now, reply);
+        }
+        Frame::Pong { worker, progress } => {
+            if !io.registered[w] || worker as usize != w {
+                return;
+            }
+            // Only an *advancing* counter is evidence of life: a stalled
+            // worker answers Pings too (connection open), but its counter
+            // freezes and its deadline stands.
+            if progress > io.last_progress[w] {
+                io.last_progress[w] = progress;
+                reply.clear();
+                engine.handle(now, EngineEvent::Progress { worker: w }, reply);
+            }
+        }
+        _ => {
+            // Master-bound connections must not carry master frames.
+        }
+    }
+}
+
+/// Feed one `WorkerRequest` into the engine and queue the single effect it
+/// returns: the chunk, a `Wait` for a park, or a `Terminate` (after which
+/// the connection is closed as soon as the goodbye flushes).  A failed
+/// send is a fail-stop in progress — the chunk evaporates and the master,
+/// faithfully, does not react.
+fn serve_request(engine: &mut Engine, io: &mut NetIo, worker: usize, now: f64, reply: &mut Vec<Effect>) {
     reply.clear();
     engine.handle(now, EngineEvent::WorkerRequest { worker }, reply);
     match reply.pop() {
@@ -419,56 +986,36 @@ fn serve_request(
             // Moves the TaskSet onto the wire frame: a contiguous primary
             // chunk never materializes its ids, in memory or on the wire.
             let frame = Frame::Assign(WireAssignment::from_assignment(a));
-            send_or_drop(txs, worker, &frame);
+            io.queue(worker, &frame);
         }
         Some(Effect::Park { worker }) => {
-            send_or_drop(txs, worker, &Frame::Wait);
+            io.queue(worker, &Frame::Wait);
         }
         Some(Effect::TerminateWorker { worker }) => {
-            send_or_drop(txs, worker, &Frame::Terminate);
+            io.queue(worker, &Frame::Terminate);
+            io.mark_closing(worker);
         }
         _ => {}
     }
 }
 
-fn send_or_drop(txs: &mut [Option<Box<dyn FrameTx>>], worker: usize, frame: &Frame) {
-    if let Some(tx) = txs[worker].as_mut() {
-        if tx.send(frame).is_err() {
-            txs[worker] = None;
-        }
-    }
-}
-
 /// Accept exactly P = `params.workers()` TCP connections on `listener`,
-/// then drive the run. `accept_timeout` bounds the registration window so a
-/// worker that never connects cannot hang the server forever.
+/// then drive the run — with the listener in the poll set the registration
+/// window is event-driven, and `accept_timeout` bounds it so a worker that
+/// never connects cannot hang the server forever.
 pub fn serve_tcp(
     listener: TcpListener,
     params: NetMasterParams,
     accept_timeout: Duration,
 ) -> Result<Outcome> {
     let p = params.workers();
-    listener.set_nonblocking(true).context("nonblocking listener")?;
-    let deadline = Instant::now() + accept_timeout;
-    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(p);
-    while transports.len() < p {
-        match listener.accept() {
-            Ok((stream, _addr)) => {
-                stream.set_nonblocking(false).context("blocking worker stream")?;
-                transports.push(Box::new(TcpTransport::new(stream)));
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                ensure!(
-                    Instant::now() < deadline,
-                    "timed out waiting for workers to connect ({}/{p} arrived)",
-                    transports.len()
-                );
-                std::thread::sleep(Duration::from_millis(10));
-            }
-            Err(e) => return Err(e).context("accept worker connection"),
-        }
-    }
-    NetMaster::new(params)?.run(transports)
+    let master = NetMaster::new(params)?;
+    let engine = master.fresh_engine();
+    let accept =
+        AcceptCfg { listener, deadline: Instant::now() + accept_timeout, allow_partial: false };
+    let (outcome, _engine) =
+        master.run_session_inner(engine, (0..p).map(|_| None).collect(), None, Some(accept))?;
+    Ok(outcome)
 }
 
 /// Accept TCP workers for one **session** over a caller-provided engine —
@@ -476,10 +1023,12 @@ pub fn serve_tcp(
 /// connections; when `allow_partial` is set, proceeds once the accept
 /// window closes with at least one worker connected (on resume a
 /// fail-stopped worker never reconnects — its slot runs as `None` and rDLB
-/// re-dispatch covers its lost work).  Worker slots are assigned in arrival
-/// order, so a resumed session may permute worker ids; that only reshuffles
-/// which per-worker timing history the adaptive techniques consult, never
-/// task accounting (assignment ids are session-scoped and epoch-guarded).
+/// re-dispatch covers its lost work), and the listener stays in the poll
+/// set so late joiners still register mid-session.  Worker slots are
+/// assigned in arrival order, so a resumed session may permute worker ids;
+/// that only reshuffles which per-worker timing history the adaptive
+/// techniques consult, never task accounting (assignment ids are
+/// session-scoped and epoch-guarded).
 pub fn serve_tcp_session(
     listener: TcpListener,
     params: NetMasterParams,
@@ -489,35 +1038,10 @@ pub fn serve_tcp_session(
     allow_partial: bool,
 ) -> Result<(Outcome, Engine)> {
     let p = params.workers();
-    listener.set_nonblocking(true).context("nonblocking listener")?;
-    let deadline = Instant::now() + accept_timeout;
-    let mut transports: Vec<Option<Box<dyn Transport>>> = Vec::with_capacity(p);
-    while transports.len() < p {
-        if shutdown.is_some_and(|s| s.load(Ordering::Relaxed)) {
-            break;
-        }
-        match listener.accept() {
-            Ok((stream, _addr)) => {
-                stream.set_nonblocking(false).context("blocking worker stream")?;
-                transports.push(Some(Box::new(TcpTransport::new(stream))));
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if Instant::now() >= deadline {
-                    if allow_partial && !transports.is_empty() {
-                        break;
-                    }
-                    bail!(
-                        "timed out waiting for workers to connect ({}/{p} arrived)",
-                        transports.len()
-                    );
-                }
-                std::thread::sleep(Duration::from_millis(10));
-            }
-            Err(e) => return Err(e).context("accept worker connection"),
-        }
-    }
-    transports.resize_with(p, || None);
-    NetMaster::new(params)?.run_session(engine, transports, shutdown)
+    let master = NetMaster::new(params)?;
+    let accept =
+        AcceptCfg { listener, deadline: Instant::now() + accept_timeout, allow_partial };
+    master.run_session_inner(engine, (0..p).map(|_| None).collect(), shutdown, Some(accept))
 }
 
 /// Bind a TCP listener with `SO_REUSEADDR`, so a resumed master can rebind
@@ -595,4 +1119,86 @@ pub fn bind_reusable(addr: &str) -> Result<TcpListener> {
 #[cfg(not(target_os = "linux"))]
 pub fn bind_reusable(addr: &str) -> Result<TcpListener> {
     TcpListener::bind(addr).with_context(|| format!("bind {addr}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::protocol::write_frame;
+
+    /// Frames arrive however TCP fragments them; the incremental parser
+    /// must yield `None` until a frame completes, then the same frames the
+    /// blocking codec would have produced — byte-by-byte delivery included.
+    #[test]
+    fn parser_reassembles_fragmented_frames() {
+        let frames = [
+            Frame::Request { worker: 7 },
+            Frame::Ping,
+            Frame::Pong { worker: 7, progress: 41 },
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            write_frame(&mut wire, f).unwrap();
+        }
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut rstart = 0usize;
+        let mut got = Vec::new();
+        for (i, b) in wire.iter().enumerate() {
+            rbuf.push(*b);
+            while let Some(f) = try_parse_frame(&rbuf, &mut rstart).unwrap() {
+                got.push((i, f));
+            }
+        }
+        assert_eq!(got.len(), frames.len());
+        for ((_, got_f), want) in got.iter().zip(&frames) {
+            assert_eq!(format!("{got_f:?}"), format!("{want:?}"));
+        }
+        // Each frame must complete exactly at its final wire byte, never
+        // earlier (no partial decodes).
+        assert_eq!(rstart, wire.len());
+    }
+
+    /// A coalesced batch (several frames in one contiguous byte run — what
+    /// one vectored write puts on the wire) parses identically to frames
+    /// delivered one at a time: coalescing is framing-transparent.
+    #[test]
+    fn parser_consumes_coalesced_batch_in_one_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Frame::Ping).unwrap();
+        write_frame(&mut wire, &Frame::Wait).unwrap();
+        write_frame(&mut wire, &Frame::Terminate).unwrap();
+        let mut rstart = 0usize;
+        assert!(matches!(try_parse_frame(&wire, &mut rstart).unwrap(), Some(Frame::Ping)));
+        assert!(matches!(try_parse_frame(&wire, &mut rstart).unwrap(), Some(Frame::Wait)));
+        assert!(matches!(try_parse_frame(&wire, &mut rstart).unwrap(), Some(Frame::Terminate)));
+        assert!(try_parse_frame(&wire, &mut rstart).unwrap().is_none());
+        assert_eq!(rstart, wire.len());
+    }
+
+    /// An implausible length prefix is a corrupt stream, not a wait.
+    #[test]
+    fn parser_rejects_implausible_length() {
+        let wire = (u32::MAX).to_le_bytes().to_vec();
+        let mut rstart = 0usize;
+        assert!(try_parse_frame(&wire, &mut rstart).is_err());
+    }
+
+    /// Buffer-pool round trip: put-then-take reuses the allocation (the
+    /// free list drains to zero instead of minting a new buffer), and the
+    /// list never grows past its cap.
+    #[test]
+    fn buffer_pool_recycles() {
+        let mut pool = BufPool::new(2);
+        let mut b = pool.take();
+        b.extend_from_slice(b"payload");
+        pool.put(b);
+        assert_eq!(pool.free.len(), 1);
+        let b2 = pool.take();
+        assert!(b2.is_empty(), "recycled buffer must come back cleared");
+        assert_eq!(pool.free.len(), 0, "take must pop the free list, not allocate");
+        pool.put(Vec::new());
+        pool.put(Vec::new());
+        pool.put(Vec::new());
+        assert_eq!(pool.free.len(), 2, "free list is capped");
+    }
 }

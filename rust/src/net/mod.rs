@@ -33,6 +33,7 @@
 //! one-command end-to-end runs (see `PROTOCOL.md`).
 
 pub mod master;
+pub mod poll;
 pub mod protocol;
 pub mod transport;
 pub mod wal;
@@ -44,8 +45,8 @@ pub use protocol::{
     PROTOCOL_VERSION,
 };
 pub use transport::{
-    FaultInjectingTransport, FrameRx, FrameTx, LoopbackTransport, TcpTransport, Transport,
-    WireFaultPlan,
+    ByteStream, FaultInjectingTransport, FrameRx, FrameTx, LoopbackTransport, Pollable,
+    TcpTransport, Transport, WireFaultPlan,
 };
 pub use worker::{
     reconnect_backoff, run_worker, run_worker_reconnecting, ReconnectBackoff, WorkerReport,
@@ -72,13 +73,20 @@ pub fn run_loopback(
     let p = params.workers();
     let mut connections: Vec<Box<dyn Transport>> = Vec::with_capacity(p);
     let mut joins = Vec::with_capacity(p);
-    for _ in 0..p {
+    for w in 0..p {
         let (master_end, worker_end) = LoopbackTransport::pair();
         connections.push(Box::new(master_end));
         let b = backend.clone();
-        joins.push(std::thread::spawn(move || {
-            run_worker(Box::new(worker_end), b, "loopback")
-        }));
+        // Small explicit stacks: the worker loop is shallow, and the
+        // default 8 MiB × P = 4096 bench fan-out would reserve 32 GiB of
+        // address space for threads that need a fraction of one.
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("loopback-w{w}"))
+                .stack_size(256 * 1024)
+                .spawn(move || run_worker(Box::new(worker_end), b, "loopback"))
+                .context("spawn loopback worker")?,
+        );
     }
     let outcome = NetMaster::new(params)?.run(connections)?;
     let mut reports = Vec::with_capacity(p);

@@ -1,0 +1,128 @@
+//! Minimal `poll(2)` wrapper for the readiness-loop master.
+//!
+//! No async runtime or polling crate is vendored, so this drives the libc
+//! the process already links against (the same approach as
+//! [`super::master::bind_reusable`]).  Level-triggered `poll` is exactly
+//! right for the master's shape: the interest set changes every iteration
+//! (write interest appears only while a connection has queued output, the
+//! listener only while slots are unfilled), so the O(P) per-call set
+//! registration epoll would amortize away is rebuilt for free, and P is
+//! bounded by the run's worker count, not by a server's open-ended
+//! connection count.
+
+use std::ffi::c_int;
+use std::io;
+use std::time::Duration;
+
+/// `struct pollfd` — identical layout on every Unix libc.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: c_int,
+    pub events: i16,
+    pub revents: i16,
+}
+
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+impl PollFd {
+    pub fn new(fd: c_int, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Any readable condition: data, EOF, or error (all of which a read
+    /// will surface properly — never wait past them).
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+}
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: c_int) -> c_int;
+}
+
+/// Block until some registered fd is ready or `timeout` elapses.  Returns
+/// the number of ready fds (0 = timeout).  `EINTR` is reported as `Ok(0)`:
+/// the caller's loop re-checks its deadlines and shutdown flag at the top
+/// of every iteration anyway, which is precisely what a signal wants.
+///
+/// `None` means wait forever; `Some(d)` is rounded **up** to whole
+/// milliseconds so a sub-millisecond deadline cannot degenerate into a
+/// zero-timeout busy spin.
+pub fn poll_fds(fds: &mut [PollFd], timeout: Option<Duration>) -> io::Result<usize> {
+    let ms: c_int = match timeout {
+        None => -1,
+        Some(d) => d.as_micros().div_ceil(1000).min(c_int::MAX as u128) as c_int,
+    };
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(err);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+    use std::time::Instant;
+
+    #[test]
+    fn timeout_elapses_without_ready_fds() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let t0 = Instant::now();
+        let n = poll_fds(&mut fds, Some(Duration::from_millis(30))).unwrap();
+        assert_eq!(n, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(25), "returned too early");
+    }
+
+    #[test]
+    fn readable_after_peer_writes_and_after_peer_closes() {
+        let (a, mut b) = UnixStream::pair().unwrap();
+        b.write_all(b"x").unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, Some(Duration::from_secs(2))).unwrap(), 1);
+        assert!(fds[0].readable());
+        drop(b); // EOF must also wake a reader
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, Some(Duration::from_secs(2))).unwrap(), 1);
+        assert!(fds[0].readable());
+    }
+
+    #[test]
+    fn writable_when_buffer_has_room() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLOUT)];
+        assert_eq!(poll_fds(&mut fds, Some(Duration::from_secs(2))).unwrap(), 1);
+        assert!(fds[0].writable());
+    }
+
+    #[test]
+    fn sub_millisecond_timeout_rounds_up_not_to_zero() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        // A zero-rounded timeout would return instantly; rounding up to
+        // 1 ms keeps the loop from busy-spinning on a near deadline.
+        let t0 = Instant::now();
+        let n = poll_fds(&mut fds, Some(Duration::from_micros(300))).unwrap();
+        assert_eq!(n, 0);
+        assert!(t0.elapsed() >= Duration::from_micros(900), "must round up to 1ms");
+    }
+}

@@ -641,6 +641,54 @@ mod tests {
         assert!(read_frame(&mut cur).is_err(), "EOF must error");
     }
 
+    /// The readiness-loop master coalesces per-engine-pass output — e.g. an
+    /// `Assign` and a health `Ping` — into one vectored write.  Coalescing
+    /// must be framing-transparent: the byte-concatenation of individually
+    /// encoded frames decodes to exactly the same sequence as frames sent
+    /// one write apiece, so no protocol version bump is needed.
+    #[test]
+    fn coalesced_batch_decodes_identically_to_individual_frames() {
+        let batch = vec![
+            Frame::Assign(WireAssignment {
+                id: 9,
+                worker: 4,
+                rescheduled: false,
+                tasks: TaskSet::Range { start: 512, end: 1024 },
+            }),
+            Frame::Ping,
+            Frame::Assign(WireAssignment {
+                id: 10,
+                worker: 4,
+                rescheduled: true,
+                tasks: TaskSet::List(vec![2, 3, 99]),
+            }),
+            Frame::Wait,
+            Frame::Terminate,
+        ];
+        // One coalesced buffer: frames encoded back-to-back, as the
+        // master's write queue drains them in a single writev.
+        let mut coalesced = Vec::new();
+        let mut scratch = Vec::new();
+        for f in &batch {
+            encode_frame_into(f, &mut scratch).unwrap();
+            coalesced.extend_from_slice(&scratch);
+        }
+        // Reference: the same frames, each through its own writer call.
+        let mut individual = Vec::new();
+        for f in &batch {
+            write_frame(&mut individual, f).unwrap();
+        }
+        assert_eq!(coalesced, individual, "coalescing must not alter the byte stream");
+        // A reader that knows nothing about batching recovers the exact
+        // frame sequence from the coalesced bytes.
+        let mut cur = Cursor::new(&coalesced);
+        let mut payload = Vec::new();
+        for f in &batch {
+            assert_eq!(&read_frame_into(&mut cur, &mut payload).unwrap(), f, "{}", f.label());
+        }
+        assert_eq!(cur.position() as usize, coalesced.len(), "no trailing bytes");
+    }
+
     #[test]
     fn range_assign_is_constant_size() {
         let frame = |len: u32| {

@@ -1,10 +1,10 @@
 //! Frame transports: real TCP sockets and an in-process loopback.
 //!
-//! A [`Transport`] is a connected, bidirectional frame pipe that can be
-//! [`Transport::split`] into independently-owned send/receive halves — the
-//! master runs one reader thread per worker connection while keeping all
-//! send halves in its dispatch loop, exactly mirroring the structure of the
-//! in-process [`crate::native::NativeRuntime`].
+//! A [`Transport`] is a connected, bidirectional frame pipe.  Workers
+//! [`Transport::split`] it into independently-owned blocking send/receive
+//! halves; the readiness-loop master instead takes the raw byte stream via
+//! [`Transport::into_stream`] and registers its fd in a single poll set —
+//! one thread for every connection, not one thread per connection.
 //!
 //! Both halves of [`TcpTransport`] reuse per-connection scratch buffers:
 //! a send encodes the length-prefixed frame into the connection's scratch
@@ -13,23 +13,30 @@
 //! through a `BufWriter`, no separate prefix write; a receive reads the
 //! payload into a reused buffer ([`read_frame_into`]).
 //!
-//! [`LoopbackTransport`] carries *encoded* frame bytes over in-memory
-//! channels, so every unit test exercises the full codec without opening a
-//! port; [`TcpTransport`] carries the same bytes over a socket.
+//! [`LoopbackTransport`] is a `socketpair(2)` (`UnixStream::pair`) carrying
+//! the identical length-prefixed bytes a TCP connection would, so every
+//! unit test exercises the full codec *and* the master's readiness loop
+//! without opening a port — a loopback connection is a real kernel fd the
+//! poll set treats exactly like a TCP one.
 //!
 //! [`FaultInjectingTransport`] wraps any transport with a seeded
 //! [`WireFaultPlan`] that drops, duplicates, or delays *data-plane* frames
 //! (`Request` / `Assign` / `Wait` / `Result`) — the chaos harness's network
 //! perturbation layer.  Control-plane frames (`Hello` / `Welcome` /
 //! `Terminate`) always pass untouched, so registration and shutdown stay
-//! reliable and every chaotic run still terminates.
+//! reliable and every chaotic run still terminates.  Its fault decisions
+//! live above the byte layer, so it has no single pollable fd: it reports
+//! itself [`Pollable::Opaque`] and the master bridges it through a local
+//! socketpair (the chaos harness installs it on worker ends only, so the
+//! bridge is a compatibility path, never the hot one).
 
-use std::io::{BufReader, Write};
+use std::io::{self, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::sync::mpsc;
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::util::Rng;
 
@@ -46,13 +53,51 @@ pub trait FrameRx: Send {
     fn recv(&mut self) -> Result<Frame>;
 }
 
+/// A raw, pollable byte stream under a frame transport: something the
+/// readiness-loop master can switch nonblocking, register in its poll set,
+/// and read/write length-prefixed frame bytes through directly.
+pub trait ByteStream: Read + Write + Send {
+    fn raw_fd(&self) -> i32;
+    fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()>;
+}
+
+impl ByteStream for TcpStream {
+    fn raw_fd(&self) -> i32 {
+        self.as_raw_fd()
+    }
+    fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        TcpStream::set_nonblocking(self, nonblocking)
+    }
+}
+
+impl ByteStream for UnixStream {
+    fn raw_fd(&self) -> i32 {
+        self.as_raw_fd()
+    }
+    fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        UnixStream::set_nonblocking(self, nonblocking)
+    }
+}
+
+/// What [`Transport::into_stream`] yields: either the transport's raw
+/// kernel stream (registered directly in the master's poll set), or the
+/// transport itself when its semantics live above the byte layer and the
+/// master must bridge it through a pump.
+pub enum Pollable {
+    Stream(Box<dyn ByteStream>),
+    Opaque(Box<dyn Transport>),
+}
+
 /// A connected, bidirectional frame pipe.
 pub trait Transport: Send {
     /// Human-readable peer description, for logs.
     fn peer(&self) -> String;
 
-    /// Split into independently-owned halves.
+    /// Split into independently-owned blocking halves (the worker side).
     fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)>;
+
+    /// Surrender the underlying pollable byte stream (the master side).
+    fn into_stream(self: Box<Self>) -> Pollable;
 }
 
 // --------------------------------------------------------------------- TCP
@@ -116,48 +161,58 @@ impl Transport for TcpTransport {
             Box::new(TcpRx { r: BufReader::new(read_half), scratch: Vec::with_capacity(256) }),
         ))
     }
+
+    fn into_stream(self: Box<Self>) -> Pollable {
+        Pollable::Stream(Box::new(self.stream))
+    }
 }
 
 // ---------------------------------------------------------------- loopback
 
-/// In-process frame pipe carrying encoded frame bytes over channels, so the
-/// whole protocol stack (codec included) is unit-testable without ports.
+/// In-process frame pipe over a `socketpair(2)`: the same length-prefixed
+/// bytes as TCP through a real kernel fd, so the whole protocol stack —
+/// codec *and* the master's poll-driven I/O — is unit-testable without
+/// ports, and thousands of loopback workers cost fds, not master threads.
 pub struct LoopbackTransport {
-    tx: mpsc::Sender<Vec<u8>>,
-    rx: mpsc::Receiver<Vec<u8>>,
+    stream: UnixStream,
     label: &'static str,
 }
 
 impl LoopbackTransport {
     /// A connected pair: whatever one end sends, the other receives.
+    ///
+    /// Panics only on fd exhaustion — at the P=4096 bench fan-out the pairs
+    /// cost 8192 fds, well under any sane `RLIMIT_NOFILE`.
     pub fn pair() -> (LoopbackTransport, LoopbackTransport) {
-        let (a_to_b, from_a) = mpsc::channel();
-        let (b_to_a, from_b) = mpsc::channel();
+        let (a, b) = UnixStream::pair().expect("socketpair for loopback transport");
         (
-            LoopbackTransport { tx: a_to_b, rx: from_b, label: "loopback:a" },
-            LoopbackTransport { tx: b_to_a, rx: from_a, label: "loopback:b" },
+            LoopbackTransport { stream: a, label: "loopback:a" },
+            LoopbackTransport { stream: b, label: "loopback:b" },
         )
     }
 }
 
 struct LoopbackTx {
-    tx: mpsc::Sender<Vec<u8>>,
+    stream: UnixStream,
+    scratch: Vec<u8>,
 }
 
 impl FrameTx for LoopbackTx {
     fn send(&mut self, frame: &Frame) -> Result<()> {
-        self.tx.send(frame.encode()).map_err(|_| anyhow!("loopback peer closed"))
+        encode_frame_into(frame, &mut self.scratch)?;
+        self.stream.write_all(&self.scratch).context("write loopback frame")?;
+        Ok(())
     }
 }
 
 struct LoopbackRx {
-    rx: mpsc::Receiver<Vec<u8>>,
+    r: BufReader<UnixStream>,
+    scratch: Vec<u8>,
 }
 
 impl FrameRx for LoopbackRx {
     fn recv(&mut self) -> Result<Frame> {
-        let bytes = self.rx.recv().map_err(|_| anyhow!("loopback peer closed"))?;
-        Frame::decode(&bytes)
+        read_frame_into(&mut self.r, &mut self.scratch)
     }
 }
 
@@ -167,7 +222,18 @@ impl Transport for LoopbackTransport {
     }
 
     fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
-        Ok((Box::new(LoopbackTx { tx: self.tx }), Box::new(LoopbackRx { rx: self.rx })))
+        let read_half = self.stream.try_clone().context("clone loopback stream")?;
+        Ok((
+            Box::new(LoopbackTx { stream: self.stream, scratch: Vec::with_capacity(256) }),
+            Box::new(LoopbackRx {
+                r: BufReader::new(read_half),
+                scratch: Vec::with_capacity(256),
+            }),
+        ))
+    }
+
+    fn into_stream(self: Box<Self>) -> Pollable {
+        Pollable::Stream(Box::new(self.stream))
     }
 }
 
@@ -286,6 +352,13 @@ impl Transport for FaultInjectingTransport {
             Box::new(FaultTx { inner: tx, rng: tx_rng, plan: plan.clone(), epoch }),
             Box::new(FaultRx { inner: rx, rng: rx_rng, plan, pending: None, epoch }),
         ))
+    }
+
+    /// Fault decisions are per-*frame*, so there is no raw byte stream to
+    /// hand over: the master bridges this transport through a socketpair
+    /// pump instead (see `net::master`).
+    fn into_stream(self: Box<Self>) -> Pollable {
+        Pollable::Opaque(self)
     }
 }
 
@@ -412,6 +485,29 @@ mod tests {
         let (mut a_tx, _a_rx) = Box::new(a).split().unwrap();
         drop(b);
         assert!(a_tx.send(&hello()).is_err());
+    }
+
+    #[test]
+    fn loopback_surrenders_a_pollable_stream() {
+        let (a, b) = LoopbackTransport::pair();
+        let Pollable::Stream(mut s) = Box::new(a).into_stream() else {
+            panic!("loopback must expose its raw socketpair fd");
+        };
+        assert!(s.raw_fd() >= 0);
+        // The stream carries the same length-prefixed bytes the split
+        // halves do: a frame written raw arrives at the split peer.
+        let mut buf = Vec::new();
+        encode_frame_into(&hello(), &mut buf).unwrap();
+        s.write_all(&buf).unwrap();
+        let (_b_tx, mut b_rx) = Box::new(b).split().unwrap();
+        assert_eq!(b_rx.recv().unwrap(), hello());
+    }
+
+    #[test]
+    fn fault_wrapper_is_opaque_to_the_poll_set() {
+        let (a, _b) = LoopbackTransport::pair();
+        let wrapped = FaultInjectingTransport::new(Box::new(a), WireFaultPlan::quiet(1));
+        assert!(matches!(Box::new(wrapped).into_stream(), Pollable::Opaque(_)));
     }
 
     #[test]

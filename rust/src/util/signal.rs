@@ -1,17 +1,24 @@
 //! Minimal SIGINT/SIGTERM hook for graceful `rdlb serve` shutdown, with no
-//! signal crate: the handler does the one async-signal-safe thing — store
-//! into a process-global atomic — and the serve loop polls that flag
-//! between frames (see `net::NetMaster::run_session`).  On receipt the
-//! master flushes + fsyncs its write-ahead journal (every append already
-//! is), writes a final engine snapshot, and exits *without* terminating
-//! workers, so they survive to reconnect into a `--resume`.
+//! signal crate: the handler does two async-signal-safe things — store into
+//! a process-global atomic and write one byte into a **self-pipe** — and
+//! the serve loop both polls the flag and keeps the pipe's read end in its
+//! poll set (see `net::NetMaster::run_session`), so a signal arriving while
+//! the master is blocked in `poll(2)` wakes it immediately instead of after
+//! a timeout slice.  On receipt the master flushes + fsyncs its write-ahead
+//! journal (every append already is), writes a final engine snapshot, and
+//! exits *without* terminating workers, so they survive to reconnect into a
+//! `--resume`.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
 
 /// The one shutdown flag; a second signal while it is already set falls
 /// back to the default disposition via the OS only on `kill -9` — a repeat
 /// SIGINT/SIGTERM is absorbed by the same handler.
 static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Self-pipe fds (read, write); −1 until [`install_shutdown_handler`] runs.
+static WAKER_RD: AtomicI32 = AtomicI32::new(-1);
+static WAKER_WR: AtomicI32 = AtomicI32::new(-1);
 
 /// Install the SIGINT + SIGTERM handler and return the flag it sets.
 /// Idempotent; the flag is process-global and never resets.
@@ -26,15 +33,55 @@ pub fn install_shutdown_handler() -> &'static AtomicBool {
     }
     extern "C" fn on_signal(_sig: c_int) {
         SHUTDOWN.store(true, Ordering::SeqCst);
+        // Wake a master blocked in poll(2).  write(2) on a nonblocking
+        // pipe is async-signal-safe; a full pipe (EAGAIN) is fine — the
+        // byte already in it is wake-up enough.
+        extern "C" {
+            fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        }
+        let fd = WAKER_WR.load(Ordering::SeqCst);
+        if fd >= 0 {
+            let byte = 1u8;
+            unsafe {
+                let _ = write(fd, &byte, 1);
+            }
+        }
     }
     const SIGINT: c_int = 2;
     const SIGTERM: c_int = 15;
+    install_waker_pipe();
     unsafe {
         signal(SIGINT, on_signal as usize);
         signal(SIGTERM, on_signal as usize);
     }
     &SHUTDOWN
 }
+
+/// Create the self-pipe once (Linux: `pipe2` gives O_NONBLOCK + O_CLOEXEC
+/// atomically).  Elsewhere the waker stays uninstalled and the serve loop
+/// falls back to bounded poll timeouts.
+#[cfg(target_os = "linux")]
+fn install_waker_pipe() {
+    use std::ffi::c_int;
+    extern "C" {
+        fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+    }
+    const O_NONBLOCK: c_int = 0o4000;
+    const O_CLOEXEC: c_int = 0o2000000;
+    if WAKER_RD.load(Ordering::SeqCst) >= 0 {
+        return; // already installed
+    }
+    let mut fds = [-1 as c_int; 2];
+    if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } == 0 {
+        // Publish the read end only after the write end: the handler
+        // checks WAKER_WR, the poll loop checks WAKER_RD.
+        WAKER_WR.store(fds[1], Ordering::SeqCst);
+        WAKER_RD.store(fds[0], Ordering::SeqCst);
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+fn install_waker_pipe() {}
 
 /// Non-Unix fallback: no handler is installed; the returned flag simply
 /// never fires and Ctrl-C keeps its default process-killing behaviour
@@ -48,3 +95,30 @@ pub fn install_shutdown_handler() -> &'static AtomicBool {
 pub fn shutdown_requested() -> bool {
     SHUTDOWN.load(Ordering::SeqCst)
 }
+
+/// Read end of the shutdown self-pipe, if installed: register it for
+/// readability in a poll set to be woken the instant a signal lands.
+pub fn shutdown_waker_fd() -> Option<i32> {
+    let fd = WAKER_RD.load(Ordering::SeqCst);
+    (fd >= 0).then_some(fd)
+}
+
+/// Drain the self-pipe after it polled readable, so the next poll blocks
+/// again.  The *flag* is the truth; the pipe is only a doorbell.
+#[cfg(unix)]
+pub fn drain_shutdown_waker() {
+    use std::ffi::c_int;
+    extern "C" {
+        fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+    }
+    let fd = WAKER_RD.load(Ordering::SeqCst);
+    if fd < 0 {
+        return;
+    }
+    let mut buf = [0u8; 64];
+    // Nonblocking: returns -1/EAGAIN once empty.
+    while unsafe { read(fd, buf.as_mut_ptr(), buf.len()) } > 0 {}
+}
+
+#[cfg(not(unix))]
+pub fn drain_shutdown_waker() {}

@@ -1,0 +1,226 @@
+//! Fan-out tests of the readiness-loop net master: hundreds of loopback
+//! workers against the single-threaded poll loop, event-driven accept with
+//! late joiners, signal-latency bounds, and the opaque-transport bridge.
+//!
+//! Every test that blocks on threads or sockets arms a [`Watchdog`], so a
+//! deadlocked run fails with a diagnostic instead of stalling `cargo test`.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rdlb::apps::{CostModel, MandelbrotApp};
+use rdlb::coordinator::{Engine, HealthPolicy, MasterConfig};
+use rdlb::dls::Technique;
+use rdlb::native::{ComputeBackend, NativeParams, NativeRuntime};
+use rdlb::net::{
+    run_loopback, run_worker, serve_tcp, FaultInjectingTransport, LoopbackTransport,
+    NetMaster, NetMasterParams, TcpTransport, Transport, WireFaultPlan,
+};
+use rdlb::util::Watchdog;
+
+fn synthetic(n: usize, cost: f64) -> ComputeBackend {
+    ComputeBackend::Synthetic {
+        model: Arc::new(CostModel::from_costs(vec![cost; n])),
+        scale: 1.0,
+    }
+}
+
+/// `Threads:` from /proc/self/status — the whole test process.
+fn current_threads() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("proc status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line")
+}
+
+/// P = 256 loopback workers against one master thread: the digest must
+/// match a serial (P = 1) run of the identical kernel bit-for-bit, and the
+/// master must add O(1) threads — not one reader thread per connection.
+#[test]
+fn fanout_256_digest_parity_with_serial_kernel() {
+    let _wd = Watchdog::arm("fanout_256_digest_parity_with_serial_kernel", Duration::from_secs(240));
+    let app = MandelbrotApp { width: 32, height: 32, max_iter: 64, ..Default::default() };
+    let n = app.n_tasks();
+    let backend = ComputeBackend::Mandelbrot(Arc::new(app));
+
+    // Serial reference: the same kernel, one worker, no wire protocol.
+    let serial = NativeRuntime::new(NativeParams::new(n, 1, Technique::Fac, true, backend.clone()))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(serial.completed(), "{serial:?}");
+
+    let p = 256;
+    let base_threads = current_threads();
+    let peak = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let watcher = {
+        let (peak, stop) = (peak.clone(), stop.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                peak.fetch_max(current_threads(), Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+
+    let (net, reports) =
+        run_loopback(NetMasterParams::new(n, p, Technique::Fac, true), &backend).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    watcher.join().unwrap();
+
+    assert!(net.completed(), "{net:?}");
+    assert_eq!(net.finished, n);
+    assert_eq!(reports.len(), p);
+    // Escape-count digests are integer-valued: sums are exact, so a P=256
+    // schedule must reproduce the serial digest bit-for-bit.
+    assert_eq!(net.result_digest, serial.result_digest, "digest parity vs serial kernel");
+
+    // One thread per worker plus a constant for master + harness.  The old
+    // reader-thread master would add ~P more and trip this bound.
+    let peak = peak.load(Ordering::Relaxed);
+    assert!(
+        peak <= base_threads + p + 40,
+        "master thread count must be O(1) in P: peak {peak}, baseline {base_threads}, P {p}"
+    );
+}
+
+/// The paper's headline scenario at fan-out scale: P−1 = 255 of 256
+/// workers fail-stop and rDLB still finishes every iteration.
+#[test]
+fn fanout_256_completes_under_255_failures() {
+    let _wd = Watchdog::arm("fanout_256_completes_under_255_failures", Duration::from_secs(300));
+    let n = 600;
+    let p = 256;
+    let mut params =
+        NetMasterParams::new(n, p, Technique::Fac, true).with_failures(p - 1, 0.4).unwrap();
+    params.timeout = Duration::from_secs(120);
+    let (outcome, reports) = run_loopback(params, &synthetic(n, 2e-3)).unwrap();
+    assert!(outcome.completed(), "rDLB must absorb P-1 failures at P=256: {outcome:?}");
+    assert_eq!(outcome.finished, n);
+    assert_eq!(outcome.failures, p - 1);
+    assert_eq!(reports.iter().filter(|r| r.failed).count(), p - 1);
+    assert!(outcome.stats.rescheduled_chunks > 0, "recovery must go through re-dispatch");
+}
+
+/// Accept is event-driven: a worker connecting well after the others (and
+/// after the master has already started dispatching nothing is required to
+/// sleep-poll for it) registers mid-window and computes real work.
+#[test]
+fn late_joiner_registers_and_computes() {
+    let _wd = Watchdog::arm("late_joiner_registers_and_computes", Duration::from_secs(120));
+    let n = 600;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut params = NetMasterParams::new(n, 4, Technique::Fac, true);
+    params.timeout = Duration::from_secs(60);
+
+    let server = std::thread::spawn(move || serve_tcp(listener, params, Duration::from_secs(10)));
+    let workers: Vec<_> = (0..4)
+        .map(|w| {
+            let backend = synthetic(n, 2e-3);
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                if w == 3 {
+                    // The straggler: everyone else is already computing.
+                    std::thread::sleep(Duration::from_millis(300));
+                }
+                let transport = TcpTransport::connect(&addr).unwrap();
+                run_worker(Box::new(transport), backend, "late-joiner")
+            })
+        })
+        .collect();
+
+    let outcome = server.join().unwrap().unwrap();
+    assert!(outcome.completed(), "{outcome:?}");
+    assert_eq!(outcome.finished, n);
+    let reports: Vec<_> = workers.into_iter().map(|j| j.join().unwrap().unwrap()).collect();
+    let late = reports.iter().find(|r| r.worker == 3).expect("late joiner registered");
+    assert!(late.iterations > 0, "the late joiner must receive real work: {reports:?}");
+}
+
+/// A SIGTERM that lands while the master is blocked in `poll(2)` wakes it
+/// through the signal self-pipe immediately — bounded by scheduling noise,
+/// not by the old 200 ms poll-slice quantization.
+#[test]
+fn sigterm_wakes_a_blocked_master_immediately() {
+    let _wd = Watchdog::arm("sigterm_wakes_a_blocked_master_immediately", Duration::from_secs(60));
+    let flag = rdlb::util::signal::install_shutdown_handler();
+    let params = NetMasterParams::new(8, 1, Technique::Fac, true);
+    let cfg = MasterConfig {
+        n: 8,
+        p: 1,
+        technique: Technique::Fac,
+        params: params.tech_params.clone(),
+        rdlb: true,
+        health: HealthPolicy::default(),
+    };
+    let mut params = params;
+    params.timeout = Duration::from_secs(30);
+    let engine = Engine::new(cfg);
+    let master = NetMaster::new(params).unwrap();
+
+    // One connection held open whose peer never says Hello: with no tick
+    // armed and a 30 s hang bound, the only thing that can wake the poll
+    // is the signal.
+    let (master_end, _held_open) = LoopbackTransport::pair();
+    let (raised_tx, raised_rx) = std::sync::mpsc::channel::<Instant>();
+    let raiser = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(250));
+        extern "C" {
+            fn raise(sig: std::ffi::c_int) -> std::ffi::c_int;
+        }
+        const SIGTERM: std::ffi::c_int = 15;
+        unsafe { raise(SIGTERM) };
+        raised_tx.send(Instant::now()).unwrap();
+    });
+
+    let (outcome, _engine) = master
+        .run_session(engine, vec![Some(Box::new(master_end) as Box<dyn Transport>)], Some(flag))
+        .unwrap();
+    let returned = Instant::now();
+    raiser.join().unwrap();
+    let raised = raised_rx.recv().unwrap();
+
+    assert!(!outcome.completed());
+    assert!(!outcome.hung, "graceful shutdown is not a hang: {outcome:?}");
+    let latency = returned.saturating_duration_since(raised);
+    assert!(
+        latency < Duration::from_millis(150),
+        "signal-to-return latency {latency:?} — a poll-slice master would take ~200 ms+"
+    );
+}
+
+/// The compatibility bridge: a master handed an *opaque* transport (the
+/// chaos fault wrapper has no single pollable fd) pumps it through a local
+/// socketpair and the run still completes with full parity semantics.
+#[test]
+fn master_over_opaque_fault_wrapper_completes() {
+    let _wd = Watchdog::arm("master_over_opaque_fault_wrapper_completes", Duration::from_secs(120));
+    let n = 200;
+    let mut connections: Vec<Box<dyn Transport>> = Vec::new();
+    let mut joins = Vec::new();
+    for w in 0..2 {
+        let (master_end, worker_end) = LoopbackTransport::pair();
+        // A quiet plan injects nothing; what this exercises is the bridge
+        // path itself (Pollable::Opaque -> socketpair pump).
+        connections.push(Box::new(FaultInjectingTransport::new(
+            Box::new(master_end),
+            WireFaultPlan::quiet(0xB21D_6E00 + w as u64),
+        )));
+        let backend = synthetic(n, 1e-4);
+        joins.push(std::thread::spawn(move || run_worker(Box::new(worker_end), backend, "bridge")));
+    }
+    let mut params = NetMasterParams::new(n, 2, Technique::Fac, true);
+    params.timeout = Duration::from_secs(60);
+    let outcome = NetMaster::new(params).unwrap().run(connections).unwrap();
+    assert!(outcome.completed(), "{outcome:?}");
+    assert_eq!(outcome.finished, n);
+    for j in joins {
+        j.join().unwrap().unwrap();
+    }
+}

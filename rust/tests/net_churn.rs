@@ -1,0 +1,96 @@
+//! Resource-stability test for the readiness-loop master under a
+//! churner-heavy peer population: refused (stale-protocol) connections must
+//! be deregistered from the poll set the moment their goodbye flushes, with
+//! their fd closed and their scratch buffers reclaimed by the pool.
+//!
+//! This lives in its own test binary on purpose: it asserts on the
+//! process-global [`open_conn_gauge`] / [`frame_buffer_allocs`] hooks, and
+//! concurrent net tests in the same process would perturb them.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdlb::apps::CostModel;
+use rdlb::dls::Technique;
+use rdlb::native::ComputeBackend;
+use rdlb::net::master::{frame_buffer_allocs, open_conn_gauge};
+use rdlb::net::{
+    run_worker, Frame, LoopbackTransport, NetMaster, NetMasterParams, Transport, WorkerHello,
+    PROTOCOL_VERSION,
+};
+use rdlb::util::Watchdog;
+
+/// One good worker and 33 stale-version churners.  The run must complete,
+/// every churner's fd must be gone by the time the master returns, and the
+/// buffer pool must have absorbed the frame traffic: total pool-miss
+/// allocations stay O(P) while the frames exchanged are O(chunks) >> P.
+#[test]
+fn refused_churners_leak_no_fds_and_no_buffers() {
+    let _wd = Watchdog::arm("refused_churners_leak_no_fds_and_no_buffers", Duration::from_secs(180));
+    let n = 2000;
+    let p = 34;
+    let conns_before = open_conn_gauge();
+    let allocs_before = frame_buffer_allocs();
+
+    let mut params = NetMasterParams::new(n, p, Technique::Fac, true);
+    params.timeout = Duration::from_secs(60);
+    let backend = ComputeBackend::Synthetic {
+        model: Arc::new(CostModel::from_costs(vec![1e-5; n])),
+        scale: 1.0,
+    };
+
+    let mut connections: Vec<Box<dyn Transport>> = Vec::with_capacity(p);
+    let mut joins: Vec<std::thread::JoinHandle<anyhow::Result<bool>>> = Vec::with_capacity(p);
+    for w in 0..p {
+        let (master_end, worker_end) = LoopbackTransport::pair();
+        connections.push(Box::new(master_end));
+        if w == 0 {
+            let b = backend.clone();
+            joins.push(std::thread::spawn(move || {
+                run_worker(Box::new(worker_end), b, "survivor").map(|_| true)
+            }));
+        } else {
+            // A churner: stale Hello, expect Terminate, hang up.
+            joins.push(std::thread::spawn(move || {
+                let (mut tx, mut rx) = Box::new(worker_end).split()?;
+                tx.send(&Frame::Hello(WorkerHello {
+                    version: PROTOCOL_VERSION - 1,
+                    backend: "stale".into(),
+                }))?;
+                Ok(matches!(rx.recv(), Ok(Frame::Terminate)))
+            }));
+        }
+    }
+
+    let outcome = NetMaster::new(params).unwrap().run(connections).unwrap();
+    assert!(outcome.completed(), "{outcome:?}");
+    assert_eq!(outcome.finished, n);
+    assert_eq!(outcome.stats.refused_workers, (p - 1) as u64, "{:?}", outcome.stats);
+    assert_eq!(outcome.failures, 0, "a refusal is not an injected failure");
+    for (w, join) in joins.into_iter().enumerate() {
+        let got_goodbye = join.join().unwrap().unwrap();
+        assert!(got_goodbye, "worker {w} must see Terminate (churner) or finish (survivor)");
+    }
+
+    // Every fd the master registered is deregistered again.
+    assert_eq!(
+        open_conn_gauge(),
+        conns_before,
+        "refused/terminated fds must leave the poll set and close"
+    );
+    // Fac at P=34 over n=2000 exchanges hundreds of Assign/Request frames
+    // with the survivor; if closed connections really recycle their
+    // buffers through the pool, allocations stay bounded by the pool's
+    // working set (~3 buffers per connection), not by frame count.
+    let alloc_growth = frame_buffer_allocs() - allocs_before;
+    assert!(
+        alloc_growth <= (3 * p + 16) as u64,
+        "buffer allocations must be O(P), not O(frames): grew by {alloc_growth}"
+    );
+    assert!(
+        outcome.stats.completed_chunks > alloc_growth,
+        "sanity: the run exchanged more frames ({} chunks) than buffers allocated \
+         ({alloc_growth}) — otherwise the bound above proves nothing",
+        outcome.stats.completed_chunks
+    );
+}
