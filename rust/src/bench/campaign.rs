@@ -128,6 +128,13 @@ pub struct BenchSettings {
     pub runtimes: Vec<RuntimeKind>,
     /// Print one progress line per case while running.
     pub verbose: bool,
+    /// Worker threads for the parallel sim wave (`rdlb bench --jobs N`;
+    /// the CLI defaults to `available_parallelism`).  Only sim cases fan
+    /// out — [`CaseSpec::exclusive`] cases always run serially — and
+    /// reports are folded in canonical case order, so outcome metrics and
+    /// report layout are identical at any job count; `1` is the plain
+    /// serial loop.
+    pub jobs: usize,
 }
 
 impl BenchSettings {
@@ -144,6 +151,7 @@ impl BenchSettings {
                 RuntimeKind::Hier,
             ],
             verbose: false,
+            jobs: 1,
         }
     }
 }
@@ -156,6 +164,19 @@ pub struct CaseSpec {
     /// Virtual→wall compression for the wall-clock runtimes.
     pub time_scale: f64,
     pub reps: usize,
+}
+
+impl CaseSpec {
+    /// Whether this case must run alone.  Native/net/hier cases spawn
+    /// their own worker threads and are gated on real wall clock, so they
+    /// are classified `Exclusive` and run serially after the parallel sim
+    /// wave — oversubscription cannot skew their gated wall metrics.  Sim
+    /// cases are single-threaded pure compute (their `events_per_s` is
+    /// per-case work over per-case wall, timed inside one worker) and fan
+    /// out across the `--jobs` pool.
+    pub fn exclusive(&self) -> bool {
+        self.cfg.runtime != RuntimeKind::Sim
+    }
 }
 
 fn sim_case(
@@ -462,10 +483,11 @@ pub fn run_campaign(settings: &BenchSettings) -> Result<CampaignReport> {
         );
     }
     let cases = campaign_cases(settings)?;
-    let mut reports = Vec::with_capacity(cases.len());
-    for spec in &cases {
-        let report = run_case(spec)?;
-        if settings.verbose {
+    let total = cases.len();
+    let jobs = settings.jobs.max(1);
+    let verbose = settings.verbose;
+    let print_case = |report: &CaseReport| {
+        if verbose {
             let eps = report
                 .wall
                 .events_per_s
@@ -476,7 +498,48 @@ pub fn run_campaign(settings: &BenchSettings) -> Result<CampaignReport> {
                 report.id, report.wall.median_s, report.wall.reps, eps
             );
         }
-        reports.push(report);
+    };
+    let mut reports = Vec::with_capacity(total + 4);
+    if jobs == 1 {
+        for spec in &cases {
+            let report = run_case(spec)?;
+            print_case(&report);
+            reports.push(report);
+        }
+    } else {
+        // Parallel-safe cases fan out across the pool; Exclusive cases
+        // (wall-gated, thread-spawning) follow serially.  Reports land in
+        // canonical grid order either way via the original index, so the
+        // emitted JSON layout is identical to the serial run.
+        let (wave, exclusive): (Vec<_>, Vec<_>) =
+            cases.into_iter().enumerate().partition(|(_, spec)| !spec.exclusive());
+        let mut slots: Vec<Option<CaseReport>> = (0..total).map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        crate::util::pool::for_each_ordered(
+            wave,
+            jobs,
+            |(idx, spec)| (idx, run_case(&spec)),
+            |_, (idx, result)| match result {
+                Ok(report) => {
+                    print_case(&report);
+                    slots[idx] = Some(report);
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            },
+        );
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        for (idx, spec) in &exclusive {
+            let report = run_case(spec)?;
+            print_case(&report);
+            slots[*idx] = Some(report);
+        }
+        reports.extend(slots.into_iter().map(|s| s.expect("every case produced a report")));
     }
     // Wire-codec microbench cases ride along in every campaign (they cost
     // milliseconds) so encode/decode regressions are gated like runtime
@@ -615,6 +678,38 @@ mod tests {
             b.deterministic_digest(),
             "same seed must reproduce identical outcome metrics"
         );
+    }
+
+    #[test]
+    fn only_sim_cases_join_the_parallel_wave() {
+        let cases = campaign_cases(&BenchSettings::new(BenchScale::quick(), 1)).unwrap();
+        for c in &cases {
+            assert_eq!(
+                c.exclusive(),
+                c.cfg.runtime != RuntimeKind::Sim,
+                "{}: wall-gated / thread-spawning runtimes are Exclusive",
+                c.id
+            );
+        }
+        assert!(cases.iter().any(|c| !c.exclusive()));
+        assert!(cases.iter().any(|c| c.exclusive()));
+    }
+
+    #[test]
+    fn parallel_campaign_matches_serial_outcomes_and_order() {
+        let serial = run_campaign(&sim_only(BenchScale::smoke(), 7)).unwrap();
+        for jobs in [2, 8] {
+            let mut settings = sim_only(BenchScale::smoke(), 7);
+            settings.jobs = jobs;
+            let par = run_campaign(&settings).unwrap();
+            assert_eq!(
+                par.deterministic_digest(),
+                serial.deterministic_digest(),
+                "outcome metrics must be identical at jobs={jobs}"
+            );
+            let ids = |r: &CampaignReport| r.cases.iter().map(|c| c.id.clone()).collect::<Vec<_>>();
+            assert_eq!(ids(&par), ids(&serial), "canonical case order at jobs={jobs}");
+        }
     }
 
     #[test]

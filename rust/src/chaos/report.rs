@@ -58,6 +58,12 @@ pub struct ChaosSettings {
     /// worker-health layer on every partition-capable (rDLB) schedule
     /// (`rdlb chaos --partition`).  Off by default, same stability rule.
     pub partition: bool,
+    /// Worker threads executing scenarios concurrently (`rdlb chaos
+    /// --jobs N`; the CLI defaults to `available_parallelism`).  Results
+    /// are folded in canonical scenario order and shrinking stays
+    /// single-threaded, so stdout and reproducers are byte-identical at
+    /// any job count; `1` is the plain serial loop.
+    pub jobs: usize,
 }
 
 impl ChaosSettings {
@@ -74,6 +80,7 @@ impl ChaosSettings {
             master_kill: false,
             stall: false,
             partition: false,
+            jobs: 1,
         }
     }
 }
@@ -120,6 +127,14 @@ impl ChaosOutcome {
 }
 
 /// Run a full campaign.
+///
+/// Scenarios are drawn (and armed) up front from the generator's single
+/// RNG stream — identical to interleaving draws with execution — then
+/// executed on up to `settings.jobs` worker threads.  The fold below
+/// consumes results in canonical scenario order, so every accumulated
+/// counter, progress line, shrink, and reproducer write happens in the
+/// exact sequence the serial loop produced: campaign output is a pure
+/// function of `(seed, budget)` at any job count.
 pub fn run_chaos(settings: &ChaosSettings) -> Result<ChaosOutcome> {
     let mut gen = ScheduleGen::new(settings.seed);
     gen.bug = settings.bug;
@@ -133,7 +148,8 @@ pub fn run_chaos(settings: &ChaosSettings) -> Result<ChaosOutcome> {
         failures: Vec::new(),
     };
     let total = settings.budget.scenarios;
-    for i in 0..total {
+    let mut scenarios = Vec::with_capacity(total);
+    for _ in 0..total {
         let mut sc = gen.next_scenario();
         if settings.hier {
             // No RNG draws involved: the schedule sequence is identical
@@ -145,77 +161,110 @@ pub fn run_chaos(settings: &ChaosSettings) -> Result<ChaosOutcome> {
             // stream: the schedule sequence is identical with or without it.
             sc.arm_master_kill();
         }
-        // An execution error (worker panic, runtime construction failure)
-        // is itself a finding — record it as a failing schedule and keep
-        // the campaign going, exactly as the shrinker treats it, instead
-        // of aborting with no reproducer for the panic-class regressions
-        // the fuzzer exists to catch.
-        let executed = execute_scenario_observed(&sc, settings.journal_oracle);
-        let (runs, checks, violations) = match executed {
-            Ok(runs) => {
-                let (checks, violations) = check_scenario(&sc, &runs);
-                (runs, checks, violations)
-            }
-            Err(e) => (
-                Vec::new(),
-                0,
-                vec![Violation {
-                    invariant: "harness",
-                    runtime: None,
-                    detail: format!("execution error: {e:#}"),
-                }],
-            ),
-        };
-        outcome.runs += runs.len();
-        outcome.checks += checks;
-        outcome.scenarios += 1;
-        if !violations.is_empty() {
-            if settings.verbose {
-                println!(
-                    "chaos: FAIL {} — {} violation(s); shrinking",
-                    sc.label(),
-                    violations.len()
-                );
-                for v in &violations {
-                    println!("chaos:   {v}");
-                }
-            }
-            let shrunk = shrink(&sc, settings.shrink_budget);
-            // Shrinking re-runs the schedule; on a timing-marginal failure
-            // the confirmation run may pass — keep the original evidence.
-            let evidence =
-                if shrunk.violations.is_empty() { violations } else { shrunk.violations };
-            let path = match &settings.out_dir {
-                Some(dir) => {
-                    std::fs::create_dir_all(dir)
-                        .with_context(|| format!("create {}", dir.display()))?;
-                    let p = dir.join(format!("chaos_failure_{}.json", sc.id));
-                    std::fs::write(&p, scenario_to_json_string(&shrunk.scenario))
-                        .with_context(|| format!("write {}", p.display()))?;
-                    if settings.verbose {
-                        println!("chaos: shrunk reproducer -> {}", p.display());
+        scenarios.push(sc);
+    }
+
+    let journal_oracle = settings.journal_oracle;
+    let mut fold_err: Option<anyhow::Error> = None;
+    crate::util::pool::for_each_ordered(
+        scenarios,
+        settings.jobs,
+        // Worker side: execute and check only — both are pure functions of
+        // the scenario.  An execution error (worker panic, runtime
+        // construction failure) is itself a finding — record it as a
+        // failing schedule and keep the campaign going, exactly as the
+        // shrinker treats it, instead of aborting with no reproducer for
+        // the panic-class regressions the fuzzer exists to catch.
+        |sc| {
+            let (runs, checks, violations) =
+                match execute_scenario_observed(&sc, journal_oracle) {
+                    Ok(runs) => {
+                        let (checks, violations) = check_scenario(&sc, &runs);
+                        (runs.len(), checks, violations)
                     }
-                    Some(p)
+                    Err(e) => (
+                        0,
+                        0,
+                        vec![Violation {
+                            invariant: "harness",
+                            runtime: None,
+                            detail: format!("execution error: {e:#}"),
+                        }],
+                    ),
+                };
+            (sc, runs, checks, violations)
+        },
+        // Fold side, strictly in scenario order: accumulate, report,
+        // shrink (single-threaded, for reproducer stability), serialize.
+        |i, (sc, runs, checks, violations)| {
+            if fold_err.is_some() {
+                return;
+            }
+            outcome.runs += runs;
+            outcome.checks += checks;
+            outcome.scenarios += 1;
+            if !violations.is_empty() {
+                if settings.verbose {
+                    println!(
+                        "chaos: FAIL {} — {} violation(s); shrinking",
+                        sc.label(),
+                        violations.len()
+                    );
+                    for v in &violations {
+                        println!("chaos:   {v}");
+                    }
                 }
-                None => None,
-            };
-            outcome.failures.push(FailureCase {
-                original: sc,
-                shrunk: shrunk.scenario,
-                violations: evidence,
-                path,
-            });
-        }
-        if settings.verbose && (i + 1) % 32 == 0 {
-            println!(
-                "chaos: {}/{} scenarios, {} runs, {} checks, {} failures",
-                i + 1,
-                total,
-                outcome.runs,
-                outcome.checks,
-                outcome.failures.len()
-            );
-        }
+                let shrunk = shrink(&sc, settings.shrink_budget);
+                // Shrinking re-runs the schedule; on a timing-marginal failure
+                // the confirmation run may pass — keep the original evidence.
+                let evidence =
+                    if shrunk.violations.is_empty() { violations } else { shrunk.violations };
+                let path = match &settings.out_dir {
+                    Some(dir) => {
+                        let written = std::fs::create_dir_all(dir)
+                            .with_context(|| format!("create {}", dir.display()))
+                            .and_then(|()| {
+                                let p = dir.join(format!("chaos_failure_{}.json", sc.id));
+                                std::fs::write(&p, scenario_to_json_string(&shrunk.scenario))
+                                    .with_context(|| format!("write {}", p.display()))
+                                    .map(|()| p)
+                            });
+                        match written {
+                            Ok(p) => {
+                                if settings.verbose {
+                                    println!("chaos: shrunk reproducer -> {}", p.display());
+                                }
+                                Some(p)
+                            }
+                            Err(e) => {
+                                fold_err = Some(e);
+                                return;
+                            }
+                        }
+                    }
+                    None => None,
+                };
+                outcome.failures.push(FailureCase {
+                    original: sc,
+                    shrunk: shrunk.scenario,
+                    violations: evidence,
+                    path,
+                });
+            }
+            if settings.verbose && (i + 1) % 32 == 0 {
+                println!(
+                    "chaos: {}/{} scenarios, {} runs, {} checks, {} failures",
+                    i + 1,
+                    total,
+                    outcome.runs,
+                    outcome.checks,
+                    outcome.failures.len()
+                );
+            }
+        },
+    );
+    if let Some(e) = fold_err {
+        return Err(e);
     }
     Ok(outcome)
 }
@@ -299,6 +348,41 @@ mod tests {
         let base = run_chaos(&quiet(5, 6)).unwrap();
         assert_eq!(a.runs, base.runs, "the tap must not change which runtimes run");
         assert_eq!(a.checks, base.checks + a.runs, "one replay check per journaled run");
+    }
+
+    #[test]
+    fn parallel_campaign_matches_serial_outcome() {
+        let serial = run_chaos(&quiet(5, 12)).unwrap();
+        for jobs in [2, 8] {
+            let mut settings = quiet(5, 12);
+            settings.jobs = jobs;
+            let par = run_chaos(&settings).unwrap();
+            assert_eq!(par.summary(), serial.summary(), "jobs={jobs}");
+            assert_eq!(par.failures.len(), serial.failures.len(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn parallel_bug_campaign_shrinks_to_identical_reproducers() {
+        // A mid-campaign failing scenario must shrink to the same
+        // reproducer at any job count: shrinking runs single-threaded in
+        // the canonical-order fold, so the candidate sequence it explores
+        // is independent of how the wave was scheduled.
+        let mut settings = quiet(2, 16);
+        settings.bug = Some(super::super::BugHook::DropOneRedispatch);
+        settings.shrink_budget = 24;
+        let serial = run_chaos(&settings).unwrap();
+        assert!(!serial.failures.is_empty());
+        for jobs in [3, 8] {
+            settings.jobs = jobs;
+            let par = run_chaos(&settings).unwrap();
+            assert_eq!(par.summary(), serial.summary(), "jobs={jobs}");
+            assert_eq!(par.failures.len(), serial.failures.len(), "jobs={jobs}");
+            for (p, s) in par.failures.iter().zip(&serial.failures) {
+                assert_eq!(p.original, s.original, "jobs={jobs}");
+                assert_eq!(p.shrunk, s.shrunk, "jobs={jobs}");
+            }
+        }
     }
 
     #[test]

@@ -90,9 +90,9 @@ USAGE:
                   [--backend native|pjrt] [--artifacts DIR] [--max-iter I]
                   [--retry-connect S] [--reconnect S]
   rdlb bench      [--scale smoke|quick|full] [--seed K] [--runtimes sim,native,net,hier]
-                  [--out FILE] [--compare BASELINE.json] [--threshold FRAC]
+                  [--jobs N] [--out FILE] [--compare BASELINE.json] [--threshold FRAC]
                   [--wall-threshold FRAC] [--events-threshold FRAC] [--quiet]
-  rdlb chaos      [--seed K] [--budget quick|deep|N] [--out-dir DIR]
+  rdlb chaos      [--seed K] [--budget quick|deep|N] [--jobs N] [--out-dir DIR]
                   [--shrink-budget N] [--hier] [--journal-oracle]
                   [--master-kill] [--stall] [--partition] [--quiet]
   rdlb chaos      --replay FILE
@@ -111,7 +111,13 @@ machine-readable BENCH_<n>.json (wall-time median/p95, task throughput,
 simulator events/s, codec round-trips/s). With --compare it gates against a
 committed baseline and exits non-zero on regressions beyond the thresholds
 (default 0.25 = 25%), normalizing wall times by each report's stored CPU
-calibration. See README §Benchmarking and §Performance.
+calibration. `--jobs N` (default: every core) fans the simulator cases
+across a bounded worker pool; wall-clock cases (native/net/hier — they
+spawn their own worker threads and are gated on real time) are classified
+Exclusive and always run serially after the parallel sim wave, so
+oversubscription cannot skew their gated wall metrics. Outcome metrics and
+report layout are identical at any job count. See README §Benchmarking
+and §Performance, ARCHITECTURE.md §Parallel harness.
 
 `chaos` fuzzes the whole system: a seeded generator draws random workloads
 × DLS techniques × fault schedules (fail-stop up to P-1 workers incl.
@@ -131,8 +137,12 @@ frame blackhole window; both also arm the worker-health layer, so overdue
 detection and speculative re-dispatch race the injected straggler under
 the same digest-parity oracle. Failing schedules are shrunk to a
 minimal JSON reproducer (chaos_failure_<id>.json) that `--replay FILE`
-re-executes deterministically. Output is seed-deterministic; exits non-zero
-on any violation. See TESTING.md.
+re-executes deterministically. `--jobs N` (default: every core) executes
+scenarios on a bounded worker pool; results fold in canonical scenario
+order and shrinking stays single-threaded, so stdout and reproducers are
+byte-identical at any job count (`--jobs 1` is the plain serial loop).
+Output is seed-deterministic; exits non-zero on any violation. See
+TESTING.md and ARCHITECTURE.md §Parallel harness.
 
 `--health` (run/native/serve) arms the proactive worker-health layer: the
 master keeps an online per-worker rate estimate, derives a per-chunk
@@ -1064,6 +1074,17 @@ fn next_bench_path() -> PathBuf {
     PathBuf::from("BENCH_overflow.json")
 }
 
+/// Resolve `--jobs N` for the parallel campaign harnesses: defaults to
+/// every available core, rejects zero (a pool with no workers cannot make
+/// progress).  `--jobs 1` is the plain serial loop.
+fn jobs_from_args(args: &Args) -> Result<usize> {
+    match args.usize_opt("jobs")? {
+        Some(0) => anyhow::bail!("--jobs must be >= 1"),
+        Some(n) => Ok(n),
+        None => Ok(crate::util::pool::default_jobs()),
+    }
+}
+
 /// `rdlb bench`: run the campaign, write the report, optionally gate
 /// against a baseline (non-zero exit on regression).
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -1071,6 +1092,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown scale (smoke|quick|full)"))?;
     let mut settings = BenchSettings::new(scale, args.u64_or("seed", 1)?);
     settings.verbose = !args.bool_or("quiet", false)?;
+    settings.jobs = jobs_from_args(args)?;
     if let Some(list) = args.get("runtimes") {
         let mut runtimes = Vec::new();
         for word in list.split(',') {
@@ -1161,6 +1183,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     let budget = ChaosBudget::parse(&args.str_or("budget", "quick"))
         .ok_or_else(|| anyhow!("unknown budget (quick|deep|<scenario count>)"))?;
     let mut settings = ChaosSettings::new(args.u64_or("seed", 1)?, budget);
+    settings.jobs = jobs_from_args(args)?;
     settings.out_dir = Some(PathBuf::from(args.str_or("out-dir", ".")));
     settings.shrink_budget = args.usize_or("shrink-budget", 64)?;
     settings.verbose = !args.bool_or("quiet", false)?;
@@ -1296,6 +1319,22 @@ mod tests {
 
         // Config validation rejects a slack that would flag every chunk.
         assert!(run_config_from_args(&parse(&["run", "--health-slack", "0.5"])).is_err());
+    }
+
+    #[test]
+    fn jobs_flag_defaults_to_every_core_and_rejects_zero() {
+        // No flag: one worker per available core, never zero.
+        let jobs = jobs_from_args(&parse(&["chaos"])).unwrap();
+        assert_eq!(jobs, crate::util::pool::default_jobs());
+        assert!(jobs >= 1);
+
+        // Explicit counts pass through for both campaign subcommands.
+        assert_eq!(jobs_from_args(&parse(&["chaos", "--jobs", "8"])).unwrap(), 8);
+        assert_eq!(jobs_from_args(&parse(&["bench", "--jobs", "1"])).unwrap(), 1);
+
+        // Zero workers can never drain the queue; garbage is a parse error.
+        assert!(jobs_from_args(&parse(&["chaos", "--jobs", "0"])).is_err());
+        assert!(jobs_from_args(&parse(&["bench", "--jobs", "many"])).is_err());
     }
 
     #[test]

@@ -355,8 +355,8 @@ impl ExperimentConfig {
         };
 
         let mut params = crate::sim::SimParams::new(workload, topo, self.technique, self.rdlb);
-        params.failures = failures;
-        params.perturbations = perturbations;
+        params.failures = std::sync::Arc::new(failures);
+        params.perturbations = std::sync::Arc::new(perturbations);
         params.sched_overhead = self.sched_overhead;
         params.base_latency = self.base_latency;
         params.tech_params = TechniqueParams {

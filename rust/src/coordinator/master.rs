@@ -144,6 +144,16 @@ pub struct Master {
     next_id: AssignmentId,
     /// Slab: `in_flight[id]` for sequential ids (None once completed).
     in_flight: Vec<Option<InFlight>>,
+    /// Number of `Some` slots in the slab.  Derived bookkeeping, never
+    /// serialized — recomputed on snapshot restore so the codec bytes (the
+    /// engine-equality oracle) are unchanged.
+    live_in_flight: usize,
+    /// Completed-prefix watermark: every slot below this index is `None`.
+    /// Slab scans (`health_tick`, `note_progress`, holder activation,
+    /// `mark_all_in_flight_lost`) start here, so a long run pays O(live)
+    /// per scan instead of O(every assignment ever made).  Derived, never
+    /// serialized.
+    in_flight_floor: usize,
     /// Holder tracking active? Flips on the first re-dispatch decision.
     holders_active: bool,
     /// First worker currently holding each task (`NO_HOLDER` = none).
@@ -206,6 +216,8 @@ impl Master {
             chunk_index: 0,
             next_id: 0,
             in_flight: Vec::new(),
+            live_in_flight: 0,
+            in_flight_floor: 0,
             holders_active: false,
             first_holder: Vec::new(),
             extra_holds: HashSet::new(),
@@ -249,7 +261,7 @@ impl Master {
         }
         self.holders_active = true;
         self.first_holder = vec![NO_HOLDER; self.cfg.n];
-        for inflight in self.in_flight.iter().flatten() {
+        for inflight in self.in_flight[self.in_flight_floor..].iter().flatten() {
             for t in inflight.tasks.iter() {
                 record_hold(&mut self.first_holder, &mut self.extra_holds, t, inflight.worker);
             }
@@ -358,6 +370,8 @@ impl Master {
                 return Vec::new();
             }
         };
+        self.live_in_flight -= 1;
+        self.advance_floor();
         let mut newly_positions = Vec::with_capacity(inflight.tasks.len());
         for (pos, t) in inflight.tasks.iter().enumerate() {
             if self.holders_active {
@@ -414,7 +428,7 @@ impl Master {
         }
         let health = self.cfg.health.clone();
         let mut notices = Vec::new();
-        for id in 0..self.in_flight.len() {
+        for id in self.in_flight_floor..self.in_flight.len() {
             let (worker, len, anchor) = match &self.in_flight[id] {
                 Some(inf) if !inf.overdue => (inf.worker, inf.tasks.len(), inf.anchor),
                 _ => continue,
@@ -464,10 +478,22 @@ impl Master {
         if !self.cfg.health.enabled {
             return;
         }
-        for slot in self.in_flight.iter_mut().flatten() {
+        for slot in self.in_flight[self.in_flight_floor..].iter_mut().flatten() {
             if slot.worker == worker as u32 && slot.anchor < now {
                 slot.anchor = now;
             }
+        }
+    }
+
+    /// Advance the completed-prefix watermark over contiguous `None`
+    /// slots.  Amortized O(1): each slot is stepped past exactly once over
+    /// the master's lifetime.
+    #[inline]
+    fn advance_floor(&mut self) {
+        while self.in_flight_floor < self.in_flight.len()
+            && self.in_flight[self.in_flight_floor].is_none()
+        {
+            self.in_flight_floor += 1;
         }
     }
 
@@ -548,6 +574,7 @@ impl Master {
             anchor: now,
             overdue: false,
         }));
+        self.live_in_flight += 1;
         Assignment { id, worker, tasks, rescheduled }
     }
 
@@ -564,7 +591,7 @@ impl Master {
     /// Returns the number of assignments dropped.
     pub fn mark_all_in_flight_lost(&mut self) -> usize {
         let mut lost = 0;
-        for i in 0..self.in_flight.len() {
+        for i in self.in_flight_floor..self.in_flight.len() {
             if let Some(inflight) = self.in_flight[i].take() {
                 lost += 1;
                 if self.holders_active {
@@ -579,6 +606,9 @@ impl Master {
                 }
             }
         }
+        debug_assert_eq!(lost, self.live_in_flight, "live count drifted from the slab");
+        self.live_in_flight = 0;
+        self.in_flight_floor = self.in_flight.len();
         lost
     }
 
@@ -758,12 +788,19 @@ impl Master {
         };
         let mut calc = cfg.technique.calculator(cfg.n, cfg.p, &cfg.params);
         calc.restore_state(r.bytes()?)?;
+        // The live count and completed-prefix watermark are derived, not
+        // serialized: recompute them from the decoded slab so snapshot
+        // bytes stay the engine-equality oracle.
+        let live_in_flight = in_flight.iter().filter(|s| s.is_some()).count();
+        let in_flight_floor = in_flight.iter().position(Option::is_some).unwrap_or(in_flight.len());
         Ok(Master {
             table,
             calc,
             chunk_index,
             next_id,
             in_flight,
+            live_in_flight,
+            in_flight_floor,
             holders_active,
             first_holder,
             extra_holds,
@@ -859,6 +896,63 @@ mod tests {
             Reply::Assign(a) => a,
             other => panic!("expected Assign, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn in_flight_bookkeeping_skips_the_dead_prefix() {
+        // SS issues one task per chunk.  Complete a long prefix, leave a
+        // tail live: the watermark must sit at the first live slot and the
+        // live count must match, so `mark_all_in_flight_lost` (and every
+        // other slab scan) never re-walks the completed prefix.
+        let mut m = master(64, 4, Technique::Ss, true);
+        for i in 0..16usize {
+            let a = assign(&mut m, i % 4, i as f64);
+            if i < 12 {
+                m.on_result(i % 4, a.id, 0.01, i as f64 + 0.01);
+            }
+        }
+        assert_eq!(m.in_flight_floor, 12);
+        assert_eq!(m.live_in_flight, 4);
+        assert_eq!(m.mark_all_in_flight_lost(), 4);
+        assert_eq!(m.live_in_flight, 0);
+        assert_eq!(m.in_flight_floor, m.in_flight.len());
+        assert_eq!(m.mark_all_in_flight_lost(), 0, "second sweep finds nothing");
+    }
+
+    #[test]
+    fn in_flight_floor_survives_out_of_order_completions() {
+        // Completing the newest chunk first leaves the floor pinned at the
+        // oldest live slot; finishing that slot jumps it over the gap.
+        let mut m = master(8, 2, Technique::Ss, true);
+        let a = assign(&mut m, 0, 0.0);
+        let b = assign(&mut m, 1, 0.0);
+        m.on_result(1, b.id, 0.01, 0.02);
+        assert_eq!(m.in_flight_floor, 0, "oldest chunk still live");
+        assert_eq!(m.live_in_flight, 1);
+        m.on_result(0, a.id, 0.01, 0.03);
+        assert_eq!(m.in_flight_floor, 2, "floor jumps the completed gap");
+        assert_eq!(m.live_in_flight, 0);
+    }
+
+    #[test]
+    fn snapshot_restore_recomputes_derived_bookkeeping() {
+        // The snapshot codec carries no watermark/live-count bytes (its
+        // byte-equality stays the engine-equality oracle); a restored
+        // master must re-derive both from the decoded slab.
+        let mut m = master(32, 2, Technique::Ss, true);
+        let a = assign(&mut m, 0, 0.0);
+        let _b = assign(&mut m, 1, 0.0);
+        m.on_result(0, a.id, 0.01, 0.02);
+        let mut bytes = Vec::new();
+        m.snapshot_into(&mut bytes);
+        let back = Master::from_snapshot(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(back.live_in_flight, m.live_in_flight);
+        assert_eq!(back.in_flight_floor, m.in_flight_floor);
+        assert_eq!(back.live_in_flight, 1);
+        assert_eq!(back.in_flight_floor, 1);
+        let mut rebytes = Vec::new();
+        back.snapshot_into(&mut rebytes);
+        assert_eq!(bytes, rebytes, "roundtrip must stay byte-identical");
     }
 
     #[test]

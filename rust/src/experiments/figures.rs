@@ -239,7 +239,7 @@ pub fn theory_validation(reps: usize) -> Result<Vec<(usize, f64, f64, f64)>> {
                 let t_fail = rng.uniform(1e-9, n_per_pe as f64 * t_task);
                 let victim = 1 + (rng.next_u64() as usize) % (q - 1);
                 let mut p = SimParams::new(workload, Topology::flat(q), Technique::Ss, true);
-                p.failures = FailurePlan::explicit(q, &[(victim, t_fail)]);
+                p.failures = std::sync::Arc::new(FailurePlan::explicit(q, &[(victim, t_fail)]));
                 p.sched_overhead = 0.0;
                 p.base_latency = 0.0;
                 SimCluster::new(p).unwrap().run().unwrap().parallel_time
@@ -280,8 +280,8 @@ pub fn conceptual_trace(scenario: ConceptualScenario) -> Result<(crate::sim::Out
         ),
     };
     let mut p = SimParams::new(workload, Topology::new(3, 1), Technique::Ss, rdlb);
-    p.failures = failures;
-    p.perturbations = perturb;
+    p.failures = std::sync::Arc::new(failures);
+    p.perturbations = std::sync::Arc::new(perturb);
     p.sched_overhead = 1e-3;
     p.base_latency = 1e-3;
     let (outcome, trace) = SimCluster::new(p)?.run_traced()?;

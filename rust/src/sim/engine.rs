@@ -33,15 +33,22 @@ use crate::obs::TraceSink;
 use crate::trace::Trace;
 
 /// Full parameterization of one simulated execution.
+///
+/// The immutable scenario inputs — the workload's cost-model prefix sums,
+/// the topology, the failure plan, the perturbation model — are
+/// `Arc`-shared: cloning a `SimParams` (and hence a [`SimCluster`]) is a
+/// handful of refcount bumps, not a deep copy of O(N) cost tables.  That
+/// is what makes forking many seeded sims of the remaining work mid-run
+/// (the SimAS direction) and fanning campaign cells across a pool cheap.
 #[derive(Debug, Clone)]
 pub struct SimParams {
-    pub workload: Workload,
-    pub topology: Topology,
+    pub workload: Arc<Workload>,
+    pub topology: Arc<Topology>,
     pub technique: Technique,
     pub tech_params: TechniqueParams,
     pub rdlb: bool,
-    pub failures: FailurePlan,
-    pub perturbations: PerturbationModel,
+    pub failures: Arc<FailurePlan>,
+    pub perturbations: Arc<PerturbationModel>,
     /// Master scheduling overhead per assignment, seconds (h).
     pub sched_overhead: f64,
     /// Base one-way message latency, seconds (0 for rank 0 = the master).
@@ -60,13 +67,13 @@ impl SimParams {
     /// Reasonable defaults for a paper-scale run; callers override fields.
     pub fn new(workload: Workload, topology: Topology, technique: Technique, rdlb: bool) -> Self {
         SimParams {
-            workload,
-            topology,
+            workload: Arc::new(workload),
+            topology: Arc::new(topology),
             technique,
             tech_params: TechniqueParams::default(),
             rdlb,
-            failures: FailurePlan::none(1),
-            perturbations: PerturbationModel::none(),
+            failures: Arc::new(FailurePlan::none(1)),
+            perturbations: Arc::new(PerturbationModel::none()),
             sched_overhead: 5e-6,
             base_latency: 2e-5,
             sink: None,
@@ -90,7 +97,7 @@ impl SimCluster {
         ensure!(params.sched_overhead >= 0.0 && params.base_latency >= 0.0, "negative overheads");
         if params.failures.p() != p {
             ensure!(params.failures.count() == 0, "failure plan sized for wrong P");
-            params.failures = FailurePlan::none(p);
+            params.failures = Arc::new(FailurePlan::none(p));
         }
         Ok(SimCluster { params })
     }
@@ -153,7 +160,9 @@ impl SimCluster {
             engine.set_sink(0, Box::new(s));
         }
 
-        let mut queue = EventQueue::new();
+        // At most ~2 events per live worker are ever in flight (a request
+        // or reply plus a compute completion), so size the heap once.
+        let mut queue = EventQueue::with_capacity(2 * p + 4);
         let mut reply: Vec<Effect> = Vec::with_capacity(1);
         let mut end_time: Option<f64> = None;
         let mut events: u64 = 0;
@@ -222,7 +231,10 @@ impl SimCluster {
                             // because its result never arrives.
                             continue;
                         }
-                        queue.push(t_reply, Event::ReplyAtWorker { worker, assignment });
+                        queue.push(
+                            t_reply,
+                            Event::ReplyAtWorker { worker, assignment: Box::new(assignment) },
+                        );
                     }
                 }
 
@@ -344,7 +356,7 @@ mod tests {
     #[test]
     fn failure_without_rdlb_hangs() {
         let mut p = base(1000, 4, Technique::Fac, false);
-        p.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+        p.failures = Arc::new(FailurePlan::explicit(4, &[(2, 0.01)]));
         let o = SimCluster::new(p).unwrap().run().unwrap();
         assert!(o.hung, "must hang (paper Fig. 1b)");
         assert!(o.parallel_time.is_infinite());
@@ -354,7 +366,7 @@ mod tests {
     #[test]
     fn failure_with_rdlb_completes() {
         let mut p = base(1000, 4, Technique::Fac, true);
-        p.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+        p.failures = Arc::new(FailurePlan::explicit(4, &[(2, 0.01)]));
         let o = SimCluster::new(p).unwrap().run().unwrap();
         assert!(o.completed(), "rDLB must survive the failure");
         assert_eq!(o.finished, 1000);
@@ -364,7 +376,7 @@ mod tests {
     #[test]
     fn p_minus_1_failures_with_rdlb_completes() {
         let mut p = base(500, 8, Technique::Gss, true);
-        p.failures = FailurePlan::random(8, 7, 0.05, 3);
+        p.failures = Arc::new(FailurePlan::random(8, 7, 0.05, 3));
         let o = SimCluster::new(p).unwrap().run().unwrap();
         assert!(o.completed(), "P-1 failures must be tolerated");
         assert_eq!(o.finished, 500);
@@ -374,7 +386,7 @@ mod tests {
     fn deterministic_runs() {
         let mk = || {
             let mut p = base(800, 4, Technique::Fac, true);
-            p.failures = FailurePlan::random(4, 2, 0.1, 9);
+            p.failures = Arc::new(FailurePlan::random(4, 2, 0.1, 9));
             SimCluster::new(p).unwrap().run().unwrap()
         };
         let a = mk();
@@ -390,7 +402,7 @@ mod tests {
         let topo = Topology::new(2, 2);
         let mk = |perturb: PerturbationModel| {
             let mut p = SimParams::new(workload(2000), topo, Technique::Ss, false);
-            p.perturbations = perturb;
+            p.perturbations = Arc::new(perturb);
             SimCluster::new(p).unwrap().run().unwrap()
         };
         let clean = mk(PerturbationModel::none());
@@ -405,7 +417,7 @@ mod tests {
         let topo = Topology::new(2, 4);
         let mk = |rdlb: bool| {
             let mut p = SimParams::new(workload(4000), topo, Technique::Fac, rdlb);
-            p.perturbations = PerturbationModel::latency(1, 0.5);
+            p.perturbations = Arc::new(PerturbationModel::latency(1, 0.5));
             SimCluster::new(p).unwrap().run().unwrap()
         };
         let without = mk(false);
@@ -432,7 +444,7 @@ mod tests {
     #[test]
     fn trace_records_lost_and_rescheduled() {
         let mut p = base(200, 4, Technique::Fac, true);
-        p.failures = FailurePlan::explicit(4, &[(1, 0.005)]);
+        p.failures = Arc::new(FailurePlan::explicit(4, &[(1, 0.005)]));
         let (o, tr) = SimCluster::new(p).unwrap().run_traced().unwrap();
         assert!(o.completed());
         assert!(tr.lost().count() > 0, "failure must lose at least one chunk");
@@ -452,7 +464,7 @@ mod tests {
     #[test]
     fn health_flags_evaporated_chunk_and_recovers_with_rdlb() {
         let mut p = base(2000, 4, Technique::Fac, true);
-        p.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+        p.failures = Arc::new(FailurePlan::explicit(4, &[(2, 0.01)]));
         p.health = aggressive_health();
         let o = SimCluster::new(p).unwrap().run().unwrap();
         assert!(o.completed(), "health-armed rDLB run must survive the failure");
@@ -468,7 +480,7 @@ mod tests {
         // chunk — the run must still hang (not spin on health ticks) and
         // the overdue counter must record the detection.
         let mut p = base(2000, 4, Technique::Fac, false);
-        p.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+        p.failures = Arc::new(FailurePlan::explicit(4, &[(2, 0.01)]));
         p.health = aggressive_health();
         let o = SimCluster::new(p).unwrap().run().unwrap();
         assert!(o.hung, "no-rDLB failure must still hang");
@@ -477,12 +489,25 @@ mod tests {
     }
 
     #[test]
+    fn cloning_params_shares_scenario_inputs() {
+        // Forking a sim (SimAS-style, or one campaign cell per pool
+        // worker) must not deep-copy the O(N) cost tables: every immutable
+        // input rides the same allocation.
+        let p = base(5000, 8, Technique::Fac, true);
+        let q = p.clone();
+        assert!(Arc::ptr_eq(&p.workload, &q.workload));
+        assert!(Arc::ptr_eq(&p.topology, &q.topology));
+        assert!(Arc::ptr_eq(&p.failures, &q.failures));
+        assert!(Arc::ptr_eq(&p.perturbations, &q.perturbations));
+    }
+
+    #[test]
     fn health_disabled_outcome_matches_plain_run() {
         // The disabled policy must be a true no-op: identical stats and
         // event count to a run that never mentions health.
         let mk = |health: HealthPolicy| {
             let mut p = base(800, 4, Technique::Fac, true);
-            p.failures = FailurePlan::random(4, 2, 0.1, 9);
+            p.failures = Arc::new(FailurePlan::random(4, 2, 0.1, 9));
             p.health = health;
             SimCluster::new(p).unwrap().run().unwrap()
         };

@@ -7,14 +7,20 @@ use std::collections::BinaryHeap;
 use crate::coordinator::Assignment;
 
 /// Simulator events.
+///
+/// The `Assignment` payload is boxed: heap entries are moved repeatedly
+/// during sift-up/down, and an inline assignment would copy its whole
+/// `TaskSet` (a `Vec` for list-shaped rDLB chunks) on every move.  Boxed,
+/// a heap entry is a third of its inline size and moves are pointer swaps
+/// — the dominant cost of `EventQueue` churn on large-P runs.
 #[derive(Debug, Clone)]
 pub enum Event {
     /// A worker's (request ± piggy-backed result) reaches the master.
     RequestAtMaster { worker: usize, result: Option<CompletedChunk> },
     /// The master's chunk assignment reaches the worker.
-    ReplyAtWorker { worker: usize, assignment: Assignment },
+    ReplyAtWorker { worker: usize, assignment: Box<Assignment> },
     /// The worker finishes computing a chunk locally.
-    ComputeDone { worker: usize, assignment: Assignment, compute_time: f64 },
+    ComputeDone { worker: usize, assignment: Box<Assignment>, compute_time: f64 },
     /// Periodic worker-health deadline check at the master (only scheduled
     /// when the health layer is enabled, so seeded runs without it keep a
     /// bit-identical event order).
@@ -67,6 +73,12 @@ pub struct EventQueue {
 impl EventQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-size the heap: a run keeps at most ~2 events per live worker in
+    /// flight, so sizing it once up front removes every mid-run regrow.
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
     }
 
     pub fn push(&mut self, time: f64, event: Event) {
@@ -128,5 +140,27 @@ mod tests {
     #[should_panic(expected = "bad event time")]
     fn rejects_nan_time() {
         EventQueue::new().push(f64::NAN, req(0));
+    }
+
+    #[test]
+    fn events_stay_small() {
+        // The point of boxing the assignment payload: an `Event` must not
+        // re-inline anything bigger than the request variant (worker +
+        // optional completed-chunk record), or heap moves start copying
+        // task lists again.
+        assert!(
+            std::mem::size_of::<Event>() <= 40,
+            "Event grew to {} bytes — did an inline payload sneak back in?",
+            std::mem::size_of::<Event>()
+        );
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut q = EventQueue::with_capacity(16);
+        q.push(2.0, req(2));
+        q.push(1.0, req(1));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().map(|(t, _)| t), Some(1.0));
     }
 }

@@ -6,6 +6,7 @@ pub mod codec;
 pub mod json;
 pub mod par;
 pub mod park;
+pub mod pool;
 pub mod rng;
 pub mod signal;
 pub mod stats;
@@ -13,6 +14,7 @@ pub mod watchdog;
 
 pub use par::{default_threads, par_map};
 pub use park::ParkedSet;
+pub use pool::{default_jobs, for_each_ordered};
 pub use rng::Rng;
 pub use stats::Summary;
 pub use watchdog::Watchdog;

@@ -1,0 +1,200 @@
+//! Deterministic bounded-pool executor for campaign fan-out.
+//!
+//! [`for_each_ordered`] runs seeded, independent work items (chaos
+//! scenarios, bench cells) on up to `jobs` worker threads while delivering
+//! results to a fold callback **strictly in input-index order** — result
+//! `i` is handed over as soon as items `0..=i` have all finished, possibly
+//! while later items are still computing.  Because every item derives its
+//! own seed and the fold observes the exact sequence a serial loop would,
+//! campaign stdout and JSON artifacts are byte-identical at any job count.
+//!
+//! With `jobs == 1` (or a single item) no threads are spawned at all: the
+//! items are computed and folded one at a time in the calling thread,
+//! which is exactly today's serial behavior — including the interleaving
+//! of compute and fold side effects.
+//!
+//! Contrast with [`par_map`](super::par_map), which is a barrier (all
+//! results materialize before any are observed): the streaming fold here
+//! is what lets a chaos campaign print its progress lines and shrink a
+//! mid-campaign failure in canonical order without waiting for the whole
+//! wave, and caps result memory at the out-of-order window.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+
+/// Default worker count for `--jobs`: every core the OS reports.
+///
+/// Campaign items are single-threaded compute (sim runs dominate), so the
+/// pool is bounded by physical parallelism — oversubscribing past it only
+/// adds scheduler noise to per-item wall clocks.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+}
+
+/// Run `f` over every item on up to `jobs` threads, calling `emit(i, r)`
+/// for each result in strict input-index order.
+///
+/// `f` receives ownership of the item; anything the fold needs (including
+/// the item itself) travels back through the result value.  Workers claim
+/// items front-first so early indices tend to finish early, keeping the
+/// in-order fold streaming rather than waiting on a stale head-of-line.
+///
+/// A panic inside `f` is re-raised on the calling thread once the fold
+/// reaches the panicked index; remaining queued items are dropped.
+pub fn for_each_ordered<T, R, F, E>(items: Vec<T>, jobs: usize, f: F, mut emit: E)
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+    E: FnMut(usize, R),
+{
+    let jobs = jobs.max(1);
+    let n = items.len();
+    if jobs == 1 || n <= 1 {
+        for (i, item) in items.into_iter().enumerate() {
+            emit(i, f(item));
+        }
+        return;
+    }
+
+    type Slot<R> = Option<std::thread::Result<R>>;
+    let queue: Mutex<VecDeque<(usize, T)>> = Mutex::new(items.into_iter().enumerate().collect());
+    let done: Mutex<Vec<Slot<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    let ready = Condvar::new();
+
+    std::thread::scope(|s| {
+        for _ in 0..jobs.min(n) {
+            s.spawn(|| loop {
+                let item = { queue.lock().unwrap().pop_front() };
+                let Some((idx, item)) = item else { break };
+                // Catch panics into the result slot: the fold below blocks
+                // on slot `idx`, so letting the thread unwind before
+                // filling it would deadlock the scope instead of failing.
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let mut d = done.lock().unwrap();
+                d[idx] = Some(r);
+                ready.notify_all();
+            });
+        }
+        for next in 0..n {
+            let r = {
+                let mut d = done.lock().unwrap();
+                while d[next].is_none() {
+                    d = ready.wait(d).unwrap();
+                }
+                d[next].take().unwrap()
+            };
+            match r {
+                Ok(r) => emit(next, r),
+                Err(payload) => {
+                    // Starve the workers so the scope can join, then
+                    // propagate the worker's panic as our own.
+                    queue.lock().unwrap().clear();
+                    resume_unwind(payload);
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn emits_in_input_order_at_any_job_count() {
+        for jobs in [1, 2, 4, 8] {
+            let mut seen = Vec::new();
+            for_each_ordered((0..50).collect::<Vec<i32>>(), jobs, |x| x * 3, |i, r| {
+                assert_eq!(r, i as i32 * 3);
+                seen.push(i);
+            });
+            assert_eq!(seen, (0..50).collect::<Vec<usize>>(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn single_job_runs_inline_without_threads() {
+        let tid = std::thread::current().id();
+        for_each_ordered(vec![1, 2, 3], 1, |x| (std::thread::current().id(), x), |_, (t, _)| {
+            assert_eq!(t, tid, "jobs=1 must compute in the calling thread");
+        });
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let ran = AtomicUsize::new(0);
+        let mut emitted = 0usize;
+        for_each_ordered(
+            (0..97).collect::<Vec<usize>>(),
+            5,
+            |x| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                x
+            },
+            |i, r| {
+                assert_eq!(i, r);
+                emitted += 1;
+            },
+        );
+        assert_eq!(ran.load(Ordering::SeqCst), 97);
+        assert_eq!(emitted, 97);
+    }
+
+    #[test]
+    fn empty_input_is_a_no_op() {
+        for_each_ordered(Vec::<u8>::new(), 4, |x| x, |_, _| panic!("nothing to emit"));
+    }
+
+    #[test]
+    fn fold_streams_before_the_wave_finishes() {
+        // Item 0 is instant while a later item blocks on a gate the fold
+        // opens — the fold must observe result 0 before the wave drains.
+        let gate = std::sync::Barrier::new(2);
+        let mut first_seen = false;
+        for_each_ordered(
+            vec![0usize, 1, 2],
+            2,
+            |x| {
+                if x == 2 {
+                    gate.wait();
+                }
+                x
+            },
+            |i, _| {
+                if i == 0 {
+                    first_seen = true;
+                    gate.wait();
+                } else {
+                    assert!(first_seen);
+                }
+            },
+        );
+        assert!(first_seen);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            for_each_ordered(
+                (0..16).collect::<Vec<i32>>(),
+                4,
+                |x| {
+                    if x == 7 {
+                        panic!("boom");
+                    }
+                    x
+                },
+                |_, _| {},
+            );
+        }));
+        assert!(r.is_err(), "panic in a worker must surface on the caller");
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

@@ -3,6 +3,8 @@
 //! PEs that only ever received rescheduled work, and perturbation windows
 //! that open/close mid-run.
 
+use std::sync::Arc;
+
 use rdlb::apps::{AppKind, Workload};
 use rdlb::dls::Technique;
 use rdlb::sim::{FailurePlan, Perturbation, PerturbationModel, PerturbKind, SimCluster, SimParams, Topology};
@@ -24,7 +26,7 @@ fn failure_immediately_after_startup() {
     // survivors re-execute it.
     let mk = |rdlb: bool| {
         let mut prm = base(500, 4, Technique::Fac, rdlb);
-        prm.failures = FailurePlan::explicit(4, &[(3, 1e-9)]);
+        prm.failures = Arc::new(FailurePlan::explicit(4, &[(3, 1e-9)]));
         SimCluster::new(prm).unwrap().run().unwrap()
     };
     assert!(mk(false).hung, "lost startup chunk must hang without rDLB");
@@ -38,7 +40,7 @@ fn failure_during_final_chunk() {
     let mk = |rdlb: bool| {
         let mut prm = base(100, 2, Technique::Gss, rdlb);
         // Worker 1 gets ~half the work; it dies early into its compute.
-        prm.failures = FailurePlan::explicit(2, &[(1, 0.02)]);
+        prm.failures = Arc::new(FailurePlan::explicit(2, &[(1, 0.02)]));
         SimCluster::new(prm).unwrap().run().unwrap()
     };
     assert!(mk(false).hung);
@@ -53,7 +55,7 @@ fn simultaneous_mass_failure() {
     let p = 16;
     let pairs: Vec<(usize, f64)> = (1..p).map(|w| (w, 0.05)).collect();
     let mut prm = base(2000, p, Technique::Fac, true);
-    prm.failures = FailurePlan::explicit(p, &pairs);
+    prm.failures = Arc::new(FailurePlan::explicit(p, &pairs));
     let o = SimCluster::new(prm).unwrap().run().unwrap();
     assert!(o.completed(), "{o:?}");
     assert_eq!(o.failures, p - 1);
@@ -65,7 +67,7 @@ fn staggered_cascading_failures() {
     let p = 8;
     let pairs: Vec<(usize, f64)> = (1..p).map(|w| (w, 0.02 * w as f64)).collect();
     let mut prm = base(1500, p, Technique::AwfC, true);
-    prm.failures = FailurePlan::explicit(p, &pairs);
+    prm.failures = Arc::new(FailurePlan::explicit(p, &pairs));
     let o = SimCluster::new(prm).unwrap().run().unwrap();
     assert!(o.completed(), "{o:?}");
 }
@@ -76,7 +78,7 @@ fn ss_under_p_minus_1_failures_is_lossless_per_chunk() {
     // paper's minimal-lost-work argument.
     let p = 8;
     let mut prm = base(800, p, Technique::Ss, true);
-    prm.failures = FailurePlan::random(p, p - 1, 0.05, 3);
+    prm.failures = Arc::new(FailurePlan::random(p, p - 1, 0.05, 3));
     let o = SimCluster::new(prm).unwrap().run().unwrap();
     assert!(o.completed());
     // Duplicated work bounded by ~1 iteration per failure + tail overlap.
@@ -92,19 +94,19 @@ fn windowed_perturbation_opens_and_closes() {
     // A slowdown window that ends mid-run: finish time must account for the
     // speed change (piecewise integration), and the run completes.
     let mut prm = base(3000, 4, Technique::Fac, true);
-    prm.perturbations = PerturbationModel {
+    prm.perturbations = Arc::new(PerturbationModel {
         perturbations: vec![Perturbation {
             kind: PerturbKind::PeSlowdown { node: 0, factor: 0.2 },
             start: 0.1,
             end: 0.3,
         }],
-    };
+    });
     let o = SimCluster::new(prm.clone()).unwrap().run().unwrap();
     assert!(o.completed());
     // Must be slower than unperturbed but not 5x slower (window closes).
     let clean = {
         let mut c = prm.clone();
-        c.perturbations = PerturbationModel::none();
+        c.perturbations = Arc::new(PerturbationModel::none());
         SimCluster::new(c).unwrap().run().unwrap()
     };
     assert!(o.parallel_time > clean.parallel_time);
@@ -121,8 +123,8 @@ fn failures_and_perturbations_combined() {
         Technique::Fac,
         true,
     );
-    prm.failures = FailurePlan::explicit(8, &[(1, 0.05), (2, 0.08)]);
-    prm.perturbations = PerturbationModel::combined(3, 0.25, 0.05);
+    prm.failures = Arc::new(FailurePlan::explicit(8, &[(1, 0.05), (2, 0.08)]));
+    prm.perturbations = Arc::new(PerturbationModel::combined(3, 0.25, 0.05));
     let o = SimCluster::new(prm).unwrap().run().unwrap();
     assert!(o.completed(), "{o:?}");
     assert_eq!(o.finished, 2000);
@@ -131,7 +133,7 @@ fn failures_and_perturbations_combined() {
 #[test]
 fn hang_detection_reports_partial_progress() {
     let mut prm = base(1000, 4, Technique::Tss, false);
-    prm.failures = FailurePlan::explicit(4, &[(1, 0.01), (2, 0.012), (3, 0.014)]);
+    prm.failures = Arc::new(FailurePlan::explicit(4, &[(1, 0.01), (2, 0.012), (3, 0.014)]));
     let o = SimCluster::new(prm).unwrap().run().unwrap();
     assert!(o.hung);
     assert!(o.finished > 0, "some work must have completed before the hang");
@@ -144,7 +146,7 @@ fn zero_latency_zero_overhead_still_works() {
     let mut prm = base(500, 4, Technique::Gss, true);
     prm.base_latency = 0.0;
     prm.sched_overhead = 0.0;
-    prm.failures = FailurePlan::explicit(4, &[(2, 0.01)]);
+    prm.failures = Arc::new(FailurePlan::explicit(4, &[(2, 0.01)]));
     let o = SimCluster::new(prm).unwrap().run().unwrap();
     assert!(o.completed());
 }
@@ -152,7 +154,7 @@ fn zero_latency_zero_overhead_still_works() {
 #[test]
 fn tiny_workload_more_pes_than_tasks() {
     let mut prm = base(3, 16, Technique::Fac, true);
-    prm.failures = FailurePlan::random(16, 8, 0.001, 5);
+    prm.failures = Arc::new(FailurePlan::random(16, 8, 0.001, 5));
     let o = SimCluster::new(prm).unwrap().run().unwrap();
     assert!(o.completed());
     assert_eq!(o.finished, 3);

@@ -1,0 +1,128 @@
+//! Determinism-under-parallelism: the campaign harnesses must produce
+//! byte-identical results at any `--jobs` count.
+//!
+//! The executor (`util::pool::for_each_ordered`) computes results
+//! concurrently but folds them in canonical index order, and shrinking
+//! stays single-threaded — so every observable artifact (summaries,
+//! counters, shrunk reproducers, report digests) is a pure function of
+//! `(seed, budget)` regardless of worker count.  These tests pin that
+//! contract end-to-end; they are also the executor-heavy suites the TSan
+//! CI job runs to hunt data races under real contention.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use rdlb::bench::{run_campaign, BenchScale, BenchSettings};
+use rdlb::chaos::{run_chaos, scenario_to_json_string, BugHook, ChaosBudget, ChaosSettings};
+use rdlb::config::RuntimeKind;
+use rdlb::util::{for_each_ordered, Watchdog};
+
+fn chaos_settings(seed: u64, scenarios: usize, jobs: usize) -> ChaosSettings {
+    let mut s = ChaosSettings::new(seed, ChaosBudget { scenarios });
+    s.jobs = jobs;
+    s
+}
+
+/// A clean chaos campaign reports identical counters and summary text at
+/// every job count.
+#[test]
+fn chaos_campaign_is_identical_at_any_job_count() {
+    let _wd = Watchdog::arm("parallel chaos determinism", Duration::from_secs(300));
+    let serial = run_chaos(&chaos_settings(5, 24, 1)).unwrap();
+    assert!(serial.passed(), "clean build must pass: {:?}", serial.failures);
+    for jobs in [2, 4, 8] {
+        let parallel = run_chaos(&chaos_settings(5, 24, jobs)).unwrap();
+        assert_eq!(
+            (parallel.scenarios, parallel.runs, parallel.checks),
+            (serial.scenarios, serial.runs, serial.checks),
+            "counters drifted at jobs={jobs}"
+        );
+        assert_eq!(parallel.summary(), serial.summary(), "summary drifted at jobs={jobs}");
+        assert!(parallel.passed());
+    }
+}
+
+/// A buggy campaign shrinks every failure to the same minimal reproducer
+/// in parallel as in serial — shrinking is single-threaded and folds run
+/// in canonical order, so the JSON artifacts match byte-for-byte.
+#[test]
+fn chaos_bug_campaign_shrinks_to_identical_reproducers() {
+    let _wd = Watchdog::arm("parallel chaos shrinking", Duration::from_secs(300));
+    let settings = |jobs| {
+        let mut s = chaos_settings(2, 16, jobs);
+        s.bug = Some(BugHook::DropOneRedispatch);
+        s.shrink_budget = 24;
+        s
+    };
+    let serial = run_chaos(&settings(1)).unwrap();
+    assert!(!serial.passed(), "the armed bug must be detected");
+    for jobs in [4, 8] {
+        let parallel = run_chaos(&settings(jobs)).unwrap();
+        assert_eq!(parallel.failures.len(), serial.failures.len());
+        for (p, s) in parallel.failures.iter().zip(&serial.failures) {
+            assert_eq!(
+                scenario_to_json_string(&p.original),
+                scenario_to_json_string(&s.original),
+                "original schedule drifted at jobs={jobs}"
+            );
+            assert_eq!(
+                scenario_to_json_string(&p.shrunk),
+                scenario_to_json_string(&s.shrunk),
+                "shrunk reproducer drifted at jobs={jobs}"
+            );
+        }
+    }
+}
+
+/// The bench campaign's outcome metrics and case order are identical at
+/// any job count (wall-clock fields vary run to run and are excluded by
+/// the deterministic digest).
+#[test]
+fn bench_campaign_digest_is_identical_at_any_job_count() {
+    let _wd = Watchdog::arm("parallel bench determinism", Duration::from_secs(300));
+    let settings = |jobs| {
+        let mut s = BenchSettings::new(BenchScale::smoke(), 7);
+        s.runtimes = vec![RuntimeKind::Sim];
+        s.jobs = jobs;
+        s
+    };
+    let serial = run_campaign(&settings(1)).unwrap();
+    for jobs in [2, 8] {
+        let parallel = run_campaign(&settings(jobs)).unwrap();
+        assert_eq!(
+            parallel.deterministic_digest(),
+            serial.deterministic_digest(),
+            "outcome digest drifted at jobs={jobs}"
+        );
+        assert_eq!(
+            parallel.cases.iter().map(|c| c.id.clone()).collect::<Vec<_>>(),
+            serial.cases.iter().map(|c| c.id.clone()).collect::<Vec<_>>(),
+            "case order drifted at jobs={jobs}"
+        );
+    }
+}
+
+/// Executor stress under real contention: many tiny items on many
+/// workers, each ran exactly once, emitted strictly in input order.
+/// (This is the suite TSan leans on — small work items maximize
+/// queue/slot churn.)
+#[test]
+fn executor_stress_emits_in_order_under_contention() {
+    let _wd = Watchdog::arm("executor stress", Duration::from_secs(120));
+    let ran = AtomicUsize::new(0);
+    let mut emitted = Vec::new();
+    for_each_ordered(
+        (0..500usize).collect::<Vec<_>>(),
+        8,
+        |i| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            i * 3
+        },
+        |idx, r| emitted.push((idx, r)),
+    );
+    assert_eq!(ran.load(Ordering::Relaxed), 500);
+    assert_eq!(emitted.len(), 500);
+    for (pos, (idx, r)) in emitted.iter().enumerate() {
+        assert_eq!((pos, pos * 3), (*idx, *r));
+    }
+}
